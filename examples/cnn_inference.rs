@@ -1,0 +1,82 @@
+//! Simulate the paper's §IV-C evaluation: the four benchmark CNNs on
+//! SPOGA vs HOLYLIGHT vs DEAPCNN, with a per-layer drill-down.
+//!
+//! Run: `cargo run --release --example cnn_inference [model]`
+//! where `model` ∈ {mobilenet, shufflenet, resnet, googlenet} (default
+//! resnet).
+
+use spoga::arch::accel::Accelerator;
+use spoga::dnn::models::{googlenet, mobilenet_v2, resnet50, shufflenet_v2, CnnModel};
+use spoga::metrics::FIG5_CORES;
+use spoga::optics::link_budget::ArchClass;
+use spoga::report::{fmt_sig, Table};
+use spoga::sim::engine::simulate_frame;
+use spoga::units::DataRate;
+
+fn main() {
+    let which = std::env::args().nth(1).unwrap_or_else(|| "resnet".into());
+    let model: CnnModel = match which.as_str() {
+        "mobilenet" => mobilenet_v2(),
+        "shufflenet" => shufflenet_v2(),
+        "googlenet" => googlenet(),
+        _ => resnet50(),
+    };
+    println!(
+        "{}: {} GEMM layers, {:.2} GMACs/frame\n",
+        model.name,
+        model.layers.len(),
+        model.total_macs() as f64 / 1e9
+    );
+
+    // ---- cross-architecture comparison -------------------------------------
+    let mut t = Table::new(vec![
+        "Accelerator",
+        "FPS",
+        "FPS/W",
+        "FPS/W/mm2 (CMOS)",
+        "avg W",
+        "utilization",
+    ]);
+    for arch in [ArchClass::Mwa, ArchClass::Maw, ArchClass::Amw] {
+        for dr in [DataRate::Gs5, DataRate::Gs10] {
+            let accel = Accelerator::equal_cores(arch, dr, FIG5_CORES).unwrap();
+            let f = simulate_frame(&accel, &model.workload());
+            t.row(vec![
+                f.accelerator.clone(),
+                fmt_sig(f.fps(), 3),
+                fmt_sig(f.fps_per_w(), 3),
+                fmt_sig(f.fps_per_w_per_mm2(accel.electronic_area_mm2()), 3),
+                fmt_sig(f.avg_power_w(), 3),
+                format!("{:.1}%", f.utilization() * 100.0),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+
+    // ---- per-layer drill-down on SPOGA_10 -----------------------------------
+    let accel = Accelerator::equal_cores(ArchClass::Mwa, DataRate::Gs10, FIG5_CORES).unwrap();
+    let f = simulate_frame(&accel, &model.workload());
+    let mut layers = f.layers.clone();
+    layers.sort_by(|a, b| b.latency_s.total_cmp(&a.latency_s));
+    let mut t = Table::new(vec!["Layer (top 10 by latency)", "latency µs", "energy µJ", "util %"]);
+    for l in layers.iter().take(10) {
+        t.row(vec![
+            l.layer.clone(),
+            fmt_sig(l.latency_s * 1e6, 3),
+            fmt_sig(l.energy.total_j() * 1e6, 3),
+            format!("{:.1}", l.utilization * 100.0),
+        ]);
+    }
+    println!("SPOGA_10 hotspots:\n{}", t.render());
+
+    // ---- energy breakdown ----------------------------------------------------
+    let e = &f.energy;
+    println!(
+        "SPOGA_10 energy/frame: laser {:.1}µJ, tuning+bias {:.1}µJ, DAC {:.1}µJ, ADC {:.1}µJ, BPCA {:.1}µJ (DEAS/SRAM: none)",
+        e.laser_j * 1e6,
+        e.standing_j * 1e6,
+        e.dac_j * 1e6,
+        e.adc_j * 1e6,
+        e.bpca_j * 1e6
+    );
+}

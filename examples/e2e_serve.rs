@@ -1,0 +1,123 @@
+//! END-TO-END driver: the full system on a real serving workload.
+//!
+//! Proves all layers compose: a quantized MLP authored in JAX, its GEMMs
+//! running through the SPOGA Pallas kernel (L1), AOT-lowered to HLO text
+//! (L2), loaded and served by the rust coordinator (L3) with dynamic
+//! batching over PJRT — while the transaction-level simulator projects what
+//! the same workload would cost on the photonic accelerator.
+//!
+//! Reports: serving latency percentiles + throughput, batching occupancy,
+//! numerical cross-check vs the direct engine, and the projected
+//! SPOGA-vs-baseline FPS for the same model. Recorded in EXPERIMENTS.md §E2E.
+//!
+//! Run: `make artifacts && cargo run --release --example e2e_serve [requests]`
+
+use std::sync::atomic::Ordering;
+use std::time::Instant;
+
+use spoga::coordinator::{Coordinator, CoordinatorConfig};
+use spoga::runtime::Engine;
+use spoga::testing::SplitMix64;
+
+fn main() {
+    let requests: usize = std::env::args()
+        .nth(1)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(192);
+
+    println!("== SPOGA e2e serving driver ==");
+    let cfg = CoordinatorConfig { workers: 2, max_batch_wait_s: 0.003, ..Default::default() };
+    let t0 = Instant::now();
+    let c = Coordinator::start(cfg).expect("run `make artifacts` first");
+    let h = c.handle();
+    println!("coordinator up (workers warm) in {:.2}s", t0.elapsed().as_secs_f64());
+
+    // ---- generate a synthetic digit-like workload --------------------------
+    let mut rng = SplitMix64::new(2024);
+    let rows: Vec<Vec<i32>> = (0..requests)
+        .map(|_| (0..784).map(|_| rng.below(128) as i32).collect())
+        .collect();
+
+    // Ground truth for a sample of rows via a direct engine.
+    let mut eng = Engine::new("artifacts").unwrap();
+    let sample: Vec<usize> = (0..requests).step_by((requests / 8).max(1)).collect();
+    let expected: Vec<(usize, Vec<i32>)> = sample
+        .iter()
+        .map(|&i| (i, eng.execute_i32_single("mlp_b1", &[&rows[i]]).unwrap()))
+        .collect();
+
+    // ---- fire the open-loop load from 8 client threads ---------------------
+    let clients = 8usize;
+    let t1 = Instant::now();
+    let mut joins = Vec::new();
+    for cid in 0..clients {
+        let h = h.clone();
+        let my_rows: Vec<(usize, Vec<i32>)> = rows
+            .iter()
+            .enumerate()
+            .skip(cid)
+            .step_by(clients)
+            .map(|(i, r)| (i, r.clone()))
+            .collect();
+        joins.push(std::thread::spawn(move || {
+            my_rows
+                .into_iter()
+                .map(|(i, row)| (i, h.infer_mlp(row).expect("infer")))
+                .collect::<Vec<_>>()
+        }));
+    }
+    let mut results: Vec<(usize, Vec<i32>)> =
+        joins.into_iter().flat_map(|j| j.join().unwrap()).collect();
+    let wall = t1.elapsed().as_secs_f64();
+    results.sort_by_key(|(i, _)| *i);
+
+    // ---- verify -------------------------------------------------------------
+    for (i, exp) in &expected {
+        assert_eq!(&results[*i].1, exp, "request {i}: batched != direct");
+    }
+    println!("numerics: {} sampled rows match direct engine ✓", expected.len());
+
+    // ---- serving report -------------------------------------------------------
+    let s = h.stats();
+    println!("\n-- serving metrics --");
+    println!("requests          : {}", requests);
+    println!("wall time         : {wall:.3} s");
+    println!("throughput        : {:.1} req/s", requests as f64 / wall);
+    println!("latency mean      : {:.2} ms", s.latency_mean() * 1e3);
+    println!("latency p50 / p99 : {:.2} / {:.2} ms", s.latency_percentile(0.5) * 1e3, s.latency_percentile(0.99) * 1e3);
+    println!("micro-batches     : {}", s.batches.load(Ordering::Relaxed));
+    println!("batch occupancy   : {:.2} rows/batch", s.mean_batch_occupancy());
+    println!("padding overhead  : {:.1}%", s.padding_fraction() * 100.0);
+
+    // ---- photonic projection: what would this cost on SPOGA? -----------------
+    use spoga::arch::accel::Accelerator;
+    use spoga::dnn::layer::{GemmShape, Layer};
+    use spoga::dnn::models::CnnModel;
+    use spoga::optics::link_budget::ArchClass;
+    use spoga::sim::engine::simulate_frame;
+    use spoga::units::DataRate;
+
+    let mlp = CnnModel {
+        name: "ServeMLP",
+        layers: vec![
+            Layer::fc("fc1", 784, 256),
+            Layer::fc("fc2", 256, 256),
+            Layer::fc("fc3", 256, 10),
+        ],
+    };
+    let _ = GemmShape { t: 1, k: 1, c: 1, groups: 1 };
+    println!("\n-- photonic projection (64-core accelerators, batch 1) --");
+    for arch in [ArchClass::Mwa, ArchClass::Maw, ArchClass::Amw] {
+        let accel = Accelerator::equal_cores(arch, DataRate::Gs10, 64).unwrap();
+        let f = simulate_frame(&accel, &mlp.workload());
+        println!(
+            "  {:13} {:>12.0} inferences/s   {:>9.3} µJ/inference",
+            f.accelerator,
+            f.fps(),
+            f.energy.total_j() * 1e6
+        );
+    }
+
+    c.shutdown();
+    println!("\ne2e driver complete.");
+}

@@ -1,0 +1,60 @@
+//! Quickstart: the three-layer stack in one page.
+//!
+//! 1. The exact integer semantics of SPOGA's nibble-sliced dataflow
+//!    (`spoga::bitslice`) — no hardware needed.
+//! 2. An AOT artifact (Pallas kernel → JAX → HLO text) executed through the
+//!    PJRT runtime and checked against the golden model.
+//! 3. The analytical models: one Table I row and one simulated CNN frame.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use spoga::arch::accel::Accelerator;
+use spoga::bitslice::{gemm_i32, gemm_lanes};
+use spoga::dnn::models::resnet50;
+use spoga::optics::link_budget::{ArchClass, LinkBudget};
+use spoga::sim::engine::simulate_frame;
+use spoga::units::DataRate;
+
+fn main() {
+    // ---- 1. the SPOGA dataflow, exactly -----------------------------------
+    let a: Vec<i8> = vec![-128, 127, 3, -4, 55, -66]; // 2×3
+    let b: Vec<i8> = vec![9, -8, 127]; // 3×1
+    let direct = gemm_i32(&a, &b, 2, 3, 1).unwrap();
+    let lanes = gemm_lanes(&a, &b, 2, 3, 1).unwrap();
+    println!("lanes (unweighted BPCA charges): hi={:?} mid={:?} lo={:?}", lanes.hi, lanes.mid, lanes.lo);
+    println!("PWAB output  : {:?}", lanes.weight_and_add());
+    println!("digital gemm : {direct:?}");
+    assert_eq!(lanes.weight_and_add(), direct);
+
+    // ---- 2. AOT artifact through PJRT --------------------------------------
+    match spoga::runtime::Engine::new("artifacts") {
+        Ok(mut eng) => {
+            let m = 128;
+            let k = 249; // one full DPU vector
+            let n = 16; // one DPU per output column
+            let a: Vec<i32> = (0..m * k).map(|i| (i % 255) as i32 - 127).collect();
+            let b: Vec<i32> = (0..k * n).map(|i| (i % 253) as i32 - 126).collect();
+            let out = eng.execute_i32_single("gemm_128x249x16", &[&a, &b]).unwrap();
+            let a8: Vec<i8> = a.iter().map(|&v| v as i8).collect();
+            let b8: Vec<i8> = b.iter().map(|&v| v as i8).collect();
+            assert_eq!(out, gemm_i32(&a8, &b8, m, k, n).unwrap());
+            println!("\nPJRT artifact gemm_128x249x16 == golden model ✓ (platform {})", eng.platform());
+        }
+        Err(e) => println!("\n(skipping PJRT demo — {e})"),
+    }
+
+    // ---- 3. analytical models ----------------------------------------------
+    let lb = LinkBudget::spoga();
+    let n = lb.max_n_given_m(16, DataRate::Gs10, 10.0);
+    println!("\nSPOGA DPU vector size at 10 GS/s, 10 dBm: N = {n} (paper: 160)");
+
+    let accel = Accelerator::equal_cores(ArchClass::Mwa, DataRate::Gs10, 64).unwrap();
+    let frame = simulate_frame(&accel, &resnet50().workload());
+    println!(
+        "ResNet-50 on {}×64 cores: {:.0} FPS, {:.1} W avg, {:.3} J/frame",
+        accel.name,
+        frame.fps(),
+        frame.avg_power_w(),
+        frame.energy.total_j()
+    );
+}

@@ -1,0 +1,78 @@
+//! Reproduce **Table I** and explore the scalability space beyond it.
+//!
+//! Prints the paper's table (solved vs published), then two sweeps the
+//! paper's text discusses but does not tabulate: required laser power vs
+//! vector size, and the N×M parallelism frontier per architecture.
+//!
+//! Run: `cargo run --release --example scalability_table`
+
+use spoga::optics::link_budget::{ArchClass, LinkBudget};
+use spoga::optics::{paper_table1, solve_table1};
+use spoga::report::{fmt_sig, Table};
+use spoga::units::DataRate;
+
+fn main() {
+    // ---- Table I ------------------------------------------------------------
+    let solved = solve_table1();
+    let paper = paper_table1();
+    let mut t = Table::new(vec!["Architecture", "1 GS/s", "5 GS/s", "10 GS/s", "paper (1/5/10)"]);
+    let mut exact = true;
+    for (s, p) in solved.rows.iter().zip(paper.rows.iter()) {
+        let c = |nm: (usize, usize)| format!("{}x{}", nm.0, nm.1);
+        exact &= s.nm == p.nm;
+        t.row(vec![
+            s.label.clone(),
+            c(s.nm[0]),
+            c(s.nm[1]),
+            c(s.nm[2]),
+            format!("{} / {} / {}", c(p.nm[0]), c(p.nm[1]), c(p.nm[2])),
+        ]);
+    }
+    println!("Table I — scalability (solved from the link-budget model):\n{}", t.render());
+    println!("cell-for-cell match with the paper: {}\n", if exact { "YES" } else { "NO" });
+
+    // ---- Required laser power vs N (MWA, the paper's §IV-A trade-off) ------
+    let lb = LinkBudget::spoga();
+    let mut t = Table::new(vec!["N (OAMEs/DPU)", "P @1GS/s (dBm)", "P @5GS/s", "P @10GS/s"]);
+    for n in [16, 32, 64, 94, 128, 163, 187, 249] {
+        let p = |dr| {
+            lb.required_laser_dbm(n, 16, dr)
+                .map(|v| fmt_sig(v, 3))
+                .unwrap_or_else(|_| "-".into())
+        };
+        t.row(vec![
+            n.to_string(),
+            p(DataRate::Gs1),
+            p(DataRate::Gs5),
+            p(DataRate::Gs10),
+        ]);
+    }
+    println!("Required per-λ laser power to close the SPOGA budget:\n{}", t.render());
+
+    // ---- Parallelism frontier ----------------------------------------------
+    let mut t = Table::new(vec!["Architecture", "BR", "N×M (4-bit ops/step)", "INT8 MACs/step"]);
+    for arch in [ArchClass::Maw, ArchClass::Amw, ArchClass::Mwa] {
+        let lb = LinkBudget::for_arch(arch);
+        for dr in DataRate::ALL {
+            let (n, m) = match arch {
+                ArchClass::Mwa => (lb.max_n_given_m(16, dr, 10.0), 16),
+                _ => {
+                    let s = lb.max_square(dr, 10.0);
+                    (s, s)
+                }
+            };
+            // Baselines do INT4 ops; an INT8 MAC costs a quadruplet of them.
+            let int8 = match arch {
+                ArchClass::Mwa => n * m,
+                _ => n * m / 4,
+            };
+            t.row(vec![
+                lb.arch.name().to_string(),
+                format!("{dr}"),
+                format!("{}", n * m),
+                int8.to_string(),
+            ]);
+        }
+    }
+    println!("Parallelism frontier at 10 dBm lasers:\n{}", t.render());
+}

@@ -1,0 +1,110 @@
+"""AOT compilation: lower L2 graphs to HLO **text** artifacts.
+
+Runs once at build time (``make artifacts``); the rust runtime loads the
+text with ``HloModuleProto::from_text_file`` and compiles it on the PJRT
+CPU client. Text — not ``.serialize()`` — is the interchange format: jax
+≥ 0.5 emits protos with 64-bit instruction ids that xla_extension 0.5.1
+rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Every entry point takes/returns int32 (the rust ``xla`` crate has no int8
+literals); MLP/CNN weights are baked into the module as constants so the
+request path only ships activations.
+
+Artifacts + a line-oriented ``manifest.txt`` land in ``--out-dir``::
+
+    <name> <file> <in0>,<in1>,... <out0>,...      # spec = dtype:dim 'x' dim
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(fn, *example_args):
+    """Lower a jittable function to HLO text (return_tuple=True)."""
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the default printer elides big literals as
+    # "{...}", which would silently drop the baked model weights.
+    return comp.as_hlo_text(True)
+
+
+def _spec(shape_dtype):
+    dt = {"int32": "i32", "float32": "f32"}[str(shape_dtype.dtype)]
+    return f"{dt}:{'x'.join(str(d) for d in shape_dtype.shape)}"
+
+
+def _i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def build_entries():
+    """(name, fn, example_args) for every artifact we ship."""
+    entries = []
+
+    # --- plain INT8 GEMM kernels at serving shapes -------------------------
+    for m, k, n in [(64, 64, 64), (128, 249, 16), (256, 512, 256)]:
+        name = f"gemm_{m}x{k}x{n}"
+        fn = lambda x, w: model.gemm_int8(x, w)
+        entries.append((name, fn, (_i32(m, k), _i32(k, n))))
+
+    # --- MLP with baked weights, several batch sizes ------------------------
+    ws = [w.astype(jnp.int32) for w in model.mlp_params()]
+    for b in (1, 8, 32):
+        entries.append(
+            (f"mlp_b{b}", lambda x, ws=ws: model.mlp_forward(x, *ws), (_i32(b, model.MLP_DIMS[0]),))
+        )
+
+    # --- CNN with baked weights ---------------------------------------------
+    cw = [w.astype(jnp.int32) for w in model.cnn_params()]
+    for b in (1, 8):
+        entries.append(
+            (f"cnn_b{b}", lambda x, cw=cw: model.cnn_forward(x, *cw), (_i32(b, 28, 28, 1),))
+        )
+    return entries
+
+
+def emit(out_dir):
+    """Lower all entries and write artifacts + manifest."""
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_lines = []
+    for name, fn, args in build_entries():
+        text = to_hlo_text(fn, *args)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        out_aval = jax.eval_shape(fn, *args)
+        outs = jax.tree_util.tree_leaves(out_aval)
+        manifest_lines.append(
+            " ".join(
+                [
+                    name,
+                    fname,
+                    ",".join(_spec(a) for a in args),
+                    ",".join(_spec(o) for o in outs),
+                ]
+            )
+        )
+        print(f"  {name}: {len(text)} chars")
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote {len(manifest_lines)} artifacts to {out_dir}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    emit(args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""L1 Pallas kernels: the SPOGA dataflow + pure-jnp oracles."""
+
+from . import ref
+from .spoga_gemm import DPU_VECTOR_SIZE, DPUS_PER_CORE, spoga_gemm, vmem_bytes
+
+__all__ = [
+    "DPU_VECTOR_SIZE",
+    "DPUS_PER_CORE",
+    "ref",
+    "spoga_gemm",
+    "vmem_bytes",
+]

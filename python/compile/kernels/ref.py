@@ -1,0 +1,90 @@
+"""Pure-jnp correctness oracles for the SPOGA kernel.
+
+Everything numeric in the repo cross-checks against these functions (the
+rust side has an equivalent golden model in ``rust/src/bitslice``):
+
+* :func:`gemm_i32` — direct int32 GEMM, the digital ground truth.
+* :func:`slice_nibbles` — the paper's §II-C decomposition
+  ``x = 16·msn + lsn`` with a *signed* MSN and *unsigned* LSN.
+* :func:`gemm_lanes` — the SPOGA dataflow at matrix level: the three radix
+  lanes (Hi = MSN·MSN, Mid = both cross terms, Lo = LSN·LSN) accumulated
+  separately, then positionally weighted (16², 16¹, 16⁰) and summed —
+  exactly what the three BPCAs + PWAB of a DPU do (paper Fig. 2(b/c)).
+* :func:`adc_quantize` — the PWAB output ADC model.
+"""
+
+import jax.numpy as jnp
+
+
+def gemm_i32(x, w):
+    """Direct int32 GEMM reference: ``x (m,k) @ w (k,n) -> int32 (m,n)``."""
+    return jnp.matmul(
+        x.astype(jnp.int32), w.astype(jnp.int32), preferred_element_type=jnp.int32
+    )
+
+
+def slice_nibbles(v):
+    """Split int8 values into (signed MSN, unsigned LSN), both as int32.
+
+    Invariant: ``16 * msn + lsn == v`` with ``lsn in [0, 15]`` and
+    ``msn in [-8, 7]``.
+    """
+    v32 = v.astype(jnp.int32)
+    return v32 >> 4, v32 & 0xF
+
+
+def gemm_lanes(x, w):
+    """SPOGA-dataflow GEMM: returns the three *unweighted* lane matrices.
+
+    ``hi = MSNx·MSNw``, ``mid = MSNx·LSNw + LSNx·MSNw``, ``lo = LSNx·LSNw``.
+    The final result is ``256*hi + 16*mid + lo`` (see :func:`pwab_combine`).
+    """
+    xm, xl = slice_nibbles(x)
+    wm, wl = slice_nibbles(w)
+
+    def dot(a, b):
+        return jnp.matmul(a, b, preferred_element_type=jnp.int32)
+
+    hi = dot(xm, wm)
+    mid = dot(xm, wl) + dot(xl, wm)
+    lo = dot(xl, wl)
+    return hi, mid, lo
+
+
+def pwab_combine(hi, mid, lo):
+    """PWAB epilogue: capacitor positional weighting + analog adder."""
+    return 256 * hi + 16 * mid + lo
+
+
+def gemm_sliced(x, w):
+    """Prior-work dataflow (paper Fig. 2(a)): four INT4 GEMMs + DEAS.
+
+    Returns the same values as :func:`gemm_i32`; exists so tests can assert
+    the *decomposition* (not just the final numbers) is exact.
+    """
+    xm, xl = slice_nibbles(x)
+    wm, wl = slice_nibbles(w)
+
+    def dot(a, b):
+        return jnp.matmul(a, b, preferred_element_type=jnp.int32)
+
+    mm, ml = dot(xm, wm), dot(xm, wl)
+    lm, ll = dot(xl, wm), dot(xl, wl)
+    # DEAS: shift-add recombination of the four intermediate matrices.
+    return 256 * mm + 16 * (ml + lm) + ll
+
+
+def adc_quantize(v, bits, full_scale):
+    """Model the PWAB output ADC: clip to ±full_scale, quantize to 2^bits
+    uniform levels, return the *dequantized* integer value (what the digital
+    side sees after scaling back).
+    """
+    lsb = (2.0 * full_scale) / (2**bits)
+    clipped = jnp.clip(v.astype(jnp.float32), -full_scale, full_scale)
+    return jnp.round(jnp.round(clipped / lsb) * lsb).astype(jnp.int32)
+
+
+def lane_accumulator_bound(k):
+    """Worst-case |lane| magnitude after a K-length reduction (the Mid lane
+    dominates: 2 × 8 × 15 = 240 per element). Sizes ADC full-scale."""
+    return 240 * k

@@ -1,0 +1,153 @@
+"""L1 — the SPOGA dataflow as a Pallas kernel.
+
+The kernel computes an INT8 GEMM the way a SPOGA GEMM core does
+(paper §III-A):
+
+* operands are nibble-sliced in transit (the OAME's four OAMUs),
+* the three radix lanes are accumulated **separately** across the reduction
+  dimension — these are the three BPCA charge accumulators; a K longer than
+  one DPU pass (``block_k`` = the DPU's ≤249-element vector) accumulates
+  across grid steps exactly like the BPCA integrates charge across passes,
+* the positional weights (16², 16¹, 16⁰ — capacitor selection) and the
+  analog-adder sum are applied once, in the epilogue, when the last
+  K-chunk has been integrated (the PWAB),
+* optionally the result is passed through the PWAB's output ADC model.
+
+Hardware adaptation (DESIGN.md §4): the photonic dataflow maps onto the
+TPU abstraction as ``block_k = DPU vector size`` (HBM→VMEM schedule plays
+the role of the OAME fan-in) and ``block_n = 16`` (one output column per
+DPU). ``interpret=True`` is mandatory on CPU: real-TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from . import ref
+
+#: Maximum OAMEs (vector elements) per DPU pass — paper Table I, MWA row at
+#: 10 dBm / 1 GS/s.
+DPU_VECTOR_SIZE = 249
+
+#: DPUs per SPOGA GEMM core (= output columns per grid cell).
+DPUS_PER_CORE = 16
+
+
+def _spoga_kernel(x_ref, w_ref, o_ref, hi_ref, mid_ref, lo_ref, *, adc_bits, full_scale):
+    """Grid cell: one (M-tile, N-tile) pair integrating one K-chunk."""
+    k = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    # New output tile: BPCA capacitors reset (charge cleared).
+    @pl.when(k == 0)
+    def _reset():
+        hi_ref[...] = jnp.zeros_like(hi_ref)
+        mid_ref[...] = jnp.zeros_like(mid_ref)
+        lo_ref[...] = jnp.zeros_like(lo_ref)
+
+    # OAME: nibble-slice both operands (msn signed, lsn unsigned).
+    x = x_ref[...].astype(jnp.int32)
+    w = w_ref[...].astype(jnp.int32)
+    xm, xl = x >> 4, x & 0xF
+    wm, wl = w >> 4, w & 0xF
+
+    def dot(a, b):
+        return jax.lax.dot_general(
+            a, b, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+        )
+
+    # Homodyne superposition on the shared aggregation lanes: each lane's
+    # photocurrents from all OAMEs integrate onto its BPCA capacitor.
+    hi_ref[...] += dot(xm, wm)
+    mid_ref[...] += dot(xm, wl) + dot(xl, wm)
+    lo_ref[...] += dot(xl, wl)
+
+    # PWAB: after the last K-pass, select capacitors (×256/×16/×1), sum in
+    # the analog adder, and digitize once.
+    @pl.when(k == nk - 1)
+    def _pwab():
+        out = 256 * hi_ref[...] + 16 * mid_ref[...] + lo_ref[...]
+        if adc_bits is not None:
+            lsb = (2.0 * full_scale) / (2**adc_bits)
+            clipped = jnp.clip(out.astype(jnp.float32), -full_scale, full_scale)
+            out = jnp.round(jnp.round(clipped / lsb) * lsb).astype(jnp.int32)
+        o_ref[...] = out
+
+
+def _pad_to(a, rows, cols):
+    return jnp.pad(a, ((0, rows - a.shape[0]), (0, cols - a.shape[1])))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_n", "block_k", "adc_bits", "interpret"),
+)
+def spoga_gemm(
+    x,
+    w,
+    *,
+    block_m=128,
+    block_n=DPUS_PER_CORE,
+    block_k=DPU_VECTOR_SIZE,
+    adc_bits=None,
+    interpret=True,
+):
+    """INT8 GEMM ``x (m,k) @ w (k,n) -> int32 (m,n)`` via the SPOGA dataflow.
+
+    Args:
+      x, w: int8 operand matrices.
+      block_m: rows per grid cell (temporal batching of input vectors).
+      block_n: output columns per grid cell — one per DPU (default 16).
+      block_k: reduction elements per pass — the DPU vector size (≤249).
+      adc_bits: if set, model the PWAB output ADC at this resolution
+        (full-scale sized from the worst-case lane magnitude for this K).
+      interpret: run the Pallas interpreter (required on CPU).
+
+    Inputs of arbitrary shape are zero-padded up to block multiples (exact
+    for GEMM) and the result is sliced back.
+    """
+    if x.ndim != 2 or w.ndim != 2 or x.shape[1] != w.shape[0]:
+        raise ValueError(f"bad GEMM shapes {x.shape} @ {w.shape}")
+    m, k = x.shape
+    _, n = w.shape
+
+    bm, bn, bk = min(block_m, max(m, 8)), block_n, block_k
+    mp = -(-m // bm) * bm
+    np_ = -(-n // bn) * bn
+    kp = -(-k // bk) * bk
+    xp = _pad_to(x, mp, kp)
+    wp = _pad_to(w, kp, np_)
+
+    full_scale = float(ref.lane_accumulator_bound(k)) * 256.0
+    kernel = functools.partial(
+        _spoga_kernel, adc_bits=adc_bits, full_scale=full_scale
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(mp // bm, np_ // bn, kp // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32) for _ in range(3)],
+        interpret=interpret,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+def vmem_bytes(block_m=128, block_n=DPUS_PER_CORE, block_k=DPU_VECTOR_SIZE):
+    """Estimated VMEM footprint of one grid cell, bytes (DESIGN.md §8).
+
+    x tile (int8) + w tile (int8) + out tile + 3 lane accumulators (int32).
+    """
+    return (
+        block_m * block_k  # x, int8
+        + block_k * block_n  # w, int8
+        + 4 * block_m * block_n * 4  # out + 3 accumulators, int32
+    )

@@ -1,0 +1,82 @@
+"""AOT pipeline tests: HLO text emission and manifest consistency."""
+
+import os
+import tempfile
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot, model
+
+
+def test_to_hlo_text_produces_parseable_module():
+    text = aot.to_hlo_text(
+        lambda x, w: model.gemm_int8(x, w),
+        aot._i32(8, 16),
+        aot._i32(16, 8),
+    )
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    # int32 wire format everywhere at the boundary.
+    assert "s32[8,16]" in text
+    assert "s32[8,8]" in text
+
+
+def test_entries_cover_expected_artifacts():
+    names = [name for name, _, _ in aot.build_entries()]
+    assert "gemm_128x249x16" in names  # DPU-native shape
+    assert "mlp_b1" in names and "mlp_b32" in names
+    assert "cnn_b1" in names
+    assert len(names) == len(set(names)), "duplicate artifact names"
+
+
+def test_emit_writes_manifest_and_files():
+    with tempfile.TemporaryDirectory() as d:
+        # Restrict to the smallest entry for speed.
+        entries = [e for e in aot.build_entries() if e[0] == "gemm_64x64x64"]
+        orig = aot.build_entries
+        aot.build_entries = lambda: entries
+        try:
+            aot.emit(d)
+        finally:
+            aot.build_entries = orig
+        manifest = open(os.path.join(d, "manifest.txt")).read().strip().splitlines()
+        assert len(manifest) == 1
+        name, fname, ins, outs = manifest[0].split(" ")
+        assert name == "gemm_64x64x64"
+        assert os.path.exists(os.path.join(d, fname))
+        assert ins == "i32:64x64,i32:64x64"
+        assert outs == "i32:64x64"
+
+
+def test_spec_format():
+    assert aot._spec(aot._i32(3, 4)) == "i32:3x4"
+    assert aot._spec(jnp.zeros((2,), jnp.float32)) == "f32:2"
+
+
+def test_mlp_artifact_semantics_match_model():
+    """The lowered-and-reloaded computation must equal the eager model.
+
+    (Full PJRT round-trip happens on the rust side; here we check the
+    lowering stage is semantics-preserving via jax's own executor.)
+    """
+    import jax
+
+    ws = [w.astype(jnp.int32) for w in model.mlp_params()]
+    fn = lambda x: model.mlp_forward(x, *ws)
+    x = model.example_batch(1)
+    eager = np.asarray(fn(x))
+    compiled = jax.jit(fn).lower(x).compile()
+    np.testing.assert_array_equal(np.asarray(compiled(x)), eager)
+
+
+def test_no_elided_constants_in_hlo_text():
+    """Regression: the default HLO printer elides big literals as '{...}',
+    which silently drops baked weights (caught by the rust golden model)."""
+    import jax
+
+    ws = [w.astype(jnp.int32) for w in model.mlp_params()]
+    text = aot.to_hlo_text(lambda x: model.mlp_forward(x, *ws), aot._i32(1, 784))
+    assert "{...}" not in text, "weights were elided from the HLO text"
+    # The 784x256 weight constant must be materialized.
+    assert "s32[784,256]" in text or "s8[784,256]" in text

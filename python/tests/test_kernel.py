@@ -1,0 +1,177 @@
+"""L1 kernel correctness: spoga_gemm vs the pure-jnp oracles.
+
+This is the CORE correctness signal of the build path: the Pallas kernel
+(and hence every AOT artifact, which lowers through it) must agree bit-for-
+bit with the int32 GEMM reference for all INT8 operands and shapes.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import spoga_gemm, ref, vmem_bytes, DPU_VECTOR_SIZE
+
+
+def rand_i8(rng, *shape):
+    return rng.integers(-128, 128, shape, dtype=np.int8)
+
+
+def np_ref(x, w):
+    return x.astype(np.int32) @ w.astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Exactness
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [
+        (1, 1, 1),
+        (8, 8, 8),
+        (16, 249, 16),  # one exact DPU pass
+        (50, 300, 20),  # padding on every axis
+        (128, 498, 32),  # two DPU passes, two column tiles
+        (3, 7, 5),  # tiny odd shapes
+    ],
+)
+def test_spoga_gemm_exact(m, k, n):
+    rng = np.random.default_rng(42 + m + k + n)
+    x, w = rand_i8(rng, m, k), rand_i8(rng, k, n)
+    out = spoga_gemm(jnp.asarray(x), jnp.asarray(w))
+    np.testing.assert_array_equal(np.asarray(out), np_ref(x, w))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 40),
+    k=st.integers(1, 300),
+    n=st.integers(1, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_spoga_gemm_exact_hypothesis(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x, w = rand_i8(rng, m, k), rand_i8(rng, k, n)
+    out = spoga_gemm(jnp.asarray(x), jnp.asarray(w))
+    np.testing.assert_array_equal(np.asarray(out), np_ref(x, w))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    bm=st.sampled_from([8, 32, 128]),
+    bk=st.sampled_from([16, 128, DPU_VECTOR_SIZE]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_block_shape_invariance(bm, bk, seed):
+    """The result must not depend on the HBM→VMEM schedule."""
+    rng = np.random.default_rng(seed)
+    x, w = rand_i8(rng, 33, 130), rand_i8(rng, 130, 17)
+    out = spoga_gemm(jnp.asarray(x), jnp.asarray(w), block_m=bm, block_k=bk)
+    np.testing.assert_array_equal(np.asarray(out), np_ref(x, w))
+
+
+def test_extreme_operands():
+    """INT8 extremes: -128/127 exercise the signed-MSN corner cases."""
+    for xv in (-128, -1, 0, 1, 127):
+        for wv in (-128, -1, 0, 1, 127):
+            x = np.full((4, 300), xv, dtype=np.int8)
+            w = np.full((300, 4), wv, dtype=np.int8)
+            out = spoga_gemm(jnp.asarray(x), jnp.asarray(w))
+            np.testing.assert_array_equal(np.asarray(out), np_ref(x, w))
+
+
+def test_bad_shapes_rejected():
+    x = jnp.zeros((4, 5), jnp.int8)
+    w = jnp.zeros((6, 4), jnp.int8)
+    with pytest.raises(ValueError):
+        spoga_gemm(x, w)
+
+
+# ---------------------------------------------------------------------------
+# Oracle self-consistency (paper Fig. 2 identities)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_lane_decomposition_identity(seed):
+    rng = np.random.default_rng(seed)
+    x, w = rand_i8(rng, 9, 31), rand_i8(rng, 31, 7)
+    hi, mid, lo = ref.gemm_lanes(jnp.asarray(x), jnp.asarray(w))
+    combined = ref.pwab_combine(hi, mid, lo)
+    np.testing.assert_array_equal(np.asarray(combined), np_ref(x, w))
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_prior_work_sliced_identity(seed):
+    rng = np.random.default_rng(seed)
+    x, w = rand_i8(rng, 6, 50), rand_i8(rng, 50, 6)
+    out = ref.gemm_sliced(jnp.asarray(x), jnp.asarray(w))
+    np.testing.assert_array_equal(np.asarray(out), np_ref(x, w))
+
+
+def test_nibble_invariants_exhaustive():
+    v = jnp.arange(-128, 128, dtype=jnp.int8)
+    msn, lsn = ref.slice_nibbles(v)
+    msn, lsn = np.asarray(msn), np.asarray(lsn)
+    assert lsn.min() >= 0 and lsn.max() <= 15
+    assert msn.min() >= -8 and msn.max() <= 7
+    np.testing.assert_array_equal(16 * msn + lsn, np.arange(-128, 128))
+
+
+def test_lane_bound_holds():
+    k = 64
+    x = np.full((1, k), -128, dtype=np.int8)
+    w = np.full((k, 1), 127, dtype=np.int8)
+    hi, mid, lo = ref.gemm_lanes(jnp.asarray(x), jnp.asarray(w))
+    bound = ref.lane_accumulator_bound(k)
+    for lane in (hi, mid, lo):
+        assert abs(int(np.asarray(lane)[0, 0])) <= bound
+
+
+# ---------------------------------------------------------------------------
+# ADC model
+# ---------------------------------------------------------------------------
+
+
+def test_adc_high_resolution_is_lossless_at_small_scale():
+    rng = np.random.default_rng(7)
+    x, w = rand_i8(rng, 8, 16), rand_i8(rng, 16, 8)
+    exact = np_ref(x, w)
+    # 24-bit ADC over the worst-case range: quantization step < 1 LSB of
+    # the integer result → exact after rounding.
+    out = spoga_gemm(jnp.asarray(x), jnp.asarray(w), adc_bits=24)
+    np.testing.assert_array_equal(np.asarray(out), exact)
+
+
+def test_adc_low_resolution_quantizes():
+    rng = np.random.default_rng(8)
+    x, w = rand_i8(rng, 8, 64), rand_i8(rng, 64, 8)
+    exact = np_ref(x, w)
+    out = np.asarray(spoga_gemm(jnp.asarray(x), jnp.asarray(w), adc_bits=8))
+    # Quantized ≠ exact in general, but bounded by the LSB.
+    full_scale = ref.lane_accumulator_bound(64) * 256.0
+    lsb = 2 * full_scale / 2**8
+    assert np.all(np.abs(out - exact) <= lsb / 2 + 1)
+
+
+def test_adc_quantize_is_idempotent():
+    v = jnp.asarray([[1000, -5000, 123456]], jnp.int32)
+    q1 = ref.adc_quantize(v, 8, 2**17)
+    q2 = ref.adc_quantize(q1, 8, 2**17)
+    np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+
+
+# ---------------------------------------------------------------------------
+# Resource model
+# ---------------------------------------------------------------------------
+
+
+def test_vmem_estimate_fits_budget():
+    """Default tile must fit a real TPU core's ~16 MiB VMEM many times over
+    (DESIGN.md §8)."""
+    assert vmem_bytes() < 1 << 20  # < 1 MiB
+    assert vmem_bytes(256, 16, DPU_VECTOR_SIZE) < 1 << 21

@@ -1,0 +1,184 @@
+"""L2 model-graph tests: MLP/CNN forward passes and the im2col lowering."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def test_quantize_roundtrip_small_values():
+    x = jnp.asarray([[0.5, -0.25, 1.0, -1.984375]])
+    q = model.quantize(x, 1.0 / 64.0)
+    back = model.dequantize(q, 1.0 / 64.0)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(x), atol=1 / 128)
+
+
+def test_quantize_clips_to_int8_range():
+    x = jnp.asarray([[100.0, -100.0]])
+    q = np.asarray(model.quantize(x, 0.01))
+    assert q.max() <= 127 and q.min() >= -127
+
+
+# ---------------------------------------------------------------------------
+# im2col
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    kernel=st.sampled_from([1, 3, 5]),
+    stride=st.sampled_from([1, 2]),
+    pad=st.sampled_from([0, 1]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_im2col_matches_lax_conv(kernel, stride, pad, seed):
+    """im2col ∘ GEMM must equal the native convolution (paper Fig. 1)."""
+    rng = np.random.default_rng(seed)
+    b, h, w, cin, cout = 2, 10, 10, 3, 4
+    x = rng.integers(-8, 8, (b, h, w, cin)).astype(np.float32)
+    wt = rng.integers(-8, 8, (kernel, kernel, cin, cout)).astype(np.float32)
+
+    patches, (bb, oh, ow) = model.im2col(jnp.asarray(x), kernel, stride, pad)
+    # weight layout in im2col: (di, dj, cin) flattened in that order.
+    wmat = jnp.asarray(wt).reshape(kernel * kernel * cin, cout)
+    got = np.asarray(patches @ wmat).reshape(bb, oh, ow, cout)
+
+    want = jax.lax.conv_general_dilated(
+        jnp.asarray(x),
+        jnp.asarray(wt),
+        window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    np.testing.assert_allclose(got, np.asarray(want), rtol=0, atol=1e-4)
+
+
+def test_im2col_int8_shapes():
+    x = jnp.zeros((1, 28, 28, 1), jnp.int8)
+    patches, (b, oh, ow) = model.im2col(x, 3, 2, 1)
+    assert (b, oh, ow) == (1, 14, 14)
+    assert patches.shape == (196, 9)
+    assert patches.dtype == jnp.int8
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def _mlp_ref(x_i32, ws):
+    """Reference MLP using the jnp oracle GEMM instead of the kernel."""
+    h = x_i32.astype(jnp.int8)
+    for i, w in enumerate(ws):
+        acc = ref.gemm_i32(h, w)
+        if i == len(ws) - 1:
+            return acc
+        acc = jnp.maximum(acc, 0) >> model.REQUANT_SHIFT
+        h = jnp.clip(acc, 0, 127).astype(jnp.int8)
+    return acc
+
+
+def test_mlp_forward_matches_oracle():
+    ws = model.mlp_params()
+    x = model.example_batch(4)
+    got = model.mlp_forward(x, *[w.astype(jnp.int32) for w in ws])
+    want = _mlp_ref(x, ws)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_mlp_deterministic_params():
+    w1 = model.mlp_params(seed=3)
+    w2 = model.mlp_params(seed=3)
+    for a, b in zip(w1, w2):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_mlp_quantization_error_bounded():
+    """INT8 inference must track the float model (the paper's premise that
+    8-bit operands suffice for DNN workloads)."""
+    ws = model.mlp_params()
+    x = model.example_batch(8)
+    got = np.asarray(model.mlp_forward(x, *[w.astype(jnp.int32) for w in ws]))
+    want = np.asarray(model.mlp_forward_f32(x, ws))
+    # Same top-1 on a clear majority of rows (synthetic weights: loose).
+    agree = (got.argmax(-1) == want.argmax(-1)).mean()
+    assert agree >= 0.5, f"top-1 agreement {agree}"
+
+
+@settings(max_examples=8, deadline=None)
+@given(batch=st.sampled_from([1, 2, 8]), seed=st.integers(0, 1000))
+def test_mlp_batch_consistency(batch, seed):
+    """Row i of a batched forward equals forwarding row i alone."""
+    ws = [w.astype(jnp.int32) for w in model.mlp_params()]
+    x = model.example_batch(batch, seed=seed)
+    full = np.asarray(model.mlp_forward(x, *ws))
+    row0 = np.asarray(model.mlp_forward(x[:1], *ws))
+    np.testing.assert_array_equal(full[:1], row0)
+
+
+# ---------------------------------------------------------------------------
+# CNN
+# ---------------------------------------------------------------------------
+
+
+def test_cnn_forward_shape_and_determinism():
+    ws = [w.astype(jnp.int32) for w in model.cnn_params()]
+    x = jnp.ones((2, 28, 28, 1), jnp.int32)
+    a = np.asarray(model.cnn_forward(x, *ws))
+    b = np.asarray(model.cnn_forward(x, *ws))
+    assert a.shape == (2, 10)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_cnn_zero_input_zero_logits():
+    ws = [w.astype(jnp.int32) for w in model.cnn_params()]
+    x = jnp.zeros((1, 28, 28, 1), jnp.int32)
+    out = np.asarray(model.cnn_forward(x, *ws))
+    np.testing.assert_array_equal(out, np.zeros((1, 10), np.int32))
+
+
+def test_cnn_respects_input_range():
+    # int8 wire values outside [-128,127] would alias; the contract is that
+    # callers pass int8-valued int32. Check an in-range extreme works.
+    ws = [w.astype(jnp.int32) for w in model.cnn_params()]
+    x = jnp.full((1, 28, 28, 1), 127, jnp.int32)
+    out = model.cnn_forward(x, *ws)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+# ---------------------------------------------------------------------------
+# Quantization study (paper §I premise: INT8 suffices, INT4 does not)
+# ---------------------------------------------------------------------------
+
+
+def _quantized_forward(x, ws_f32, bits):
+    """Forward with weights quantized to `bits` (symmetric)."""
+    qmax = 2 ** (bits - 1) - 1
+    h = x.astype(jnp.float32)
+    for i, w in enumerate(ws_f32):
+        scale = float(jnp.max(jnp.abs(w))) / qmax
+        wq = jnp.clip(jnp.round(w / scale), -qmax, qmax) * scale
+        h = h @ wq
+        if i < len(ws_f32) - 1:
+            h = jnp.maximum(h, 0)
+    return h
+
+
+def test_int8_tracks_float_better_than_int4():
+    """The paper's premise: byte-size operands are needed — INT4-quantized
+    weights lose much more fidelity than INT8 on the same model."""
+    rng = np.random.default_rng(0)
+    ws = [jnp.asarray(rng.normal(0, 1 / np.sqrt(d), (d, o)).astype(np.float32))
+          for d, o in [(784, 256), (256, 256), (256, 10)]]
+    x = jnp.asarray(rng.integers(0, 128, (32, 784)).astype(np.float32))
+    ref_out = _quantized_forward(x, ws, 32)  # effectively float
+    err8 = float(jnp.abs(_quantized_forward(x, ws, 8) - ref_out).mean())
+    err4 = float(jnp.abs(_quantized_forward(x, ws, 4) - ref_out).mean())
+    assert err4 > 5 * err8, f"int4 err {err4} vs int8 err {err8}"
+    # And INT8 top-1 agreement with float is near-perfect.
+    agree8 = float((_quantized_forward(x, ws, 8).argmax(-1) == ref_out.argmax(-1)).mean())
+    assert agree8 >= 0.9, f"int8 top-1 agreement {agree8}"

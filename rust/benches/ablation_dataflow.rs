@@ -1,0 +1,144 @@
+//! Ablation: how much of SPOGA's win comes from the **extended
+//! optical-analog dataflow** (paper §III-B) vs its raw parallelism?
+//!
+//! We re-run SPOGA with the prior-work post-processing forced back on —
+//! per-pass digitization (ADC every K-chunk), intermediate SRAM traffic and
+//! DEAS recombination — exactly the overheads the PWAB eliminates, while
+//! keeping N, M and the link budget unchanged. The residual gap to the real
+//! SPOGA isolates the dataflow contribution.
+//!
+//! Run: `cargo bench --bench ablation_dataflow`
+
+use spoga::arch::accel::Accelerator;
+use spoga::arch::core::{Core, GemmPlan};
+use spoga::arch::cost::EnergyBreakdown;
+use spoga::dnn::models::CnnModel;
+use spoga::metrics::gmean;
+use spoga::optics::link_budget::ArchClass;
+use spoga::report::{fmt_ratio, fmt_sig, Table};
+use spoga::units::DataRate;
+
+/// SPOGA plan with the extended analog dataflow DISABLED: every K-pass is
+/// digitized per DPU, intermediates go through SRAM, DEAS recombines.
+fn ablated_plan(core: &Core, shape: &spoga::dnn::layer::GemmShape) -> GemmPlan {
+    let native = core.plan_gemm(shape);
+    let k_chunks = shape.k.div_ceil(core.n) as u64;
+    let outputs = shape.outputs();
+    // 4 nibble-product intermediates per output per pass must be digitized
+    // (no homodyne lane merging, no charge accumulation across passes).
+    let adc = 4 * outputs * k_chunks;
+    GemmPlan {
+        adc_conversions: adc,
+        bpca_cycles: 0,
+        deas_outputs: outputs,
+        sram_bytes: 2 * adc,
+        ..native
+    }
+}
+
+fn frame_energy(core: &Core, model: &CnnModel, ablated: bool) -> (f64, f64) {
+    // Returns (latency_s, energy_j) for a 64-core fleet.
+    let cores = 64u64;
+    let mut latency = 0.0;
+    let mut energy = EnergyBreakdown::default();
+    for layer in &model.layers {
+        let shape = layer.gemm();
+        let plan =
+            if ablated { ablated_plan(core, &shape) } else { core.plan_gemm(&shape) };
+        let steps = plan.timesteps.div_ceil(cores);
+        latency += steps as f64 * core.dr.step_seconds();
+        if plan.deas_outputs > 0 {
+            latency += spoga::devices::Deas::default().fill_latency_s(core.dr);
+        }
+        energy.add(&EnergyBreakdown::of_plan(core, &plan));
+    }
+    (latency, energy.total_j())
+}
+
+fn main() {
+    let models = CnnModel::paper_benchmarks();
+    let mut t = Table::new(vec![
+        "Variant",
+        "gmean FPS",
+        "gmean FPS/W",
+        "FPS/W vs native",
+    ]);
+    for dr in [DataRate::Gs1, DataRate::Gs10] {
+        let core = Core::design(ArchClass::Mwa, dr, 10.0).unwrap();
+        let mut rows = Vec::new();
+        for ablated in [false, true] {
+            let fps: Vec<f64> =
+                models.iter().map(|m| 1.0 / frame_energy(&core, m, ablated).0).collect();
+            let fpw: Vec<f64> =
+                models.iter().map(|m| 1.0 / frame_energy(&core, m, ablated).1).collect();
+            rows.push((ablated, gmean(&fps), gmean(&fpw)));
+        }
+        let native_fpw = rows[0].2;
+        for (ablated, fps, fpw) in rows {
+            t.row(vec![
+                format!(
+                    "SPOGA_{}{}",
+                    dr.suffix(),
+                    if ablated { " (DEAS post-processing forced)" } else { " (native PWAB)" }
+                ),
+                fmt_sig(fps, 3),
+                fmt_sig(fpw, 3),
+                fmt_ratio(fpw / native_fpw),
+            ]);
+        }
+    }
+    println!(
+        "Ablation — value of the extended optical-analog dataflow (§III-B):\n{}",
+        t.render()
+    );
+
+    // Secondary ablation: iso-laser-power vs equal-core normalization.
+    let mut t = Table::new(vec!["Normalization", "S/D FPS ratio @10GS/s"]);
+    for (label, accel_s, accel_d) in [
+        (
+            "equal cores (64)",
+            Accelerator::equal_cores(ArchClass::Mwa, DataRate::Gs10, 64).unwrap(),
+            Accelerator::equal_cores(ArchClass::Amw, DataRate::Gs10, 64).unwrap(),
+        ),
+        (
+            "iso laser power (60 W)",
+            Accelerator::iso_laser_power(ArchClass::Mwa, DataRate::Gs10, 60.0).unwrap(),
+            Accelerator::iso_laser_power(ArchClass::Amw, DataRate::Gs10, 60.0).unwrap(),
+        ),
+    ] {
+        let fps = |a: &Accelerator| {
+            let v: Vec<f64> = models
+                .iter()
+                .map(|m| spoga::sim::engine::simulate_frame(a, &m.workload()).fps())
+                .collect();
+            gmean(&v)
+        };
+        t.row(vec![label.to_string(), fmt_ratio(fps(&accel_s) / fps(&accel_d))]);
+    }
+    println!("Normalization sensitivity (DESIGN.md §5.2 knob):\n{}", t.render());
+
+    // Mapping-strategy ablation (paper §II-B): best tile order per layer
+    // class, with weight-reload overhead accounted.
+    use spoga::dnn::layer::GemmShape;
+    use spoga::sim::mapper::{evaluate, Mapping};
+    let core = Core::design(ArchClass::Mwa, DataRate::Gs10, 10.0).unwrap();
+    let shapes = [
+        ("conv 3x3 (56x56x64->128)", GemmShape { t: 3136, k: 576, c: 128, groups: 1 }),
+        ("pointwise (14x14x512->512)", GemmShape { t: 196, k: 512, c: 512, groups: 1 }),
+        ("depthwise 3x3 (112x112x96)", GemmShape { t: 12544, k: 9, c: 1, groups: 96 }),
+        ("fc 2048->1000 (batch 1)", GemmShape { t: 1, k: 2048, c: 1000, groups: 1 }),
+    ];
+    let mut t = Table::new(vec!["Layer class", "mapping", "compute eff.", "weight writes"]);
+    for (label, sh) in shapes {
+        for m in Mapping::ALL {
+            let c = evaluate(&core, &sh, m);
+            t.row(vec![
+                label.to_string(),
+                c.mapping.name().to_string(),
+                format!("{:.3}", c.compute_efficiency()),
+                format!("{:.2e}", c.weight_writes as f64),
+            ]);
+        }
+    }
+    println!("Mapping strategies on SPOGA_10 (§II-B ablation):\n{}", t.render());
+}

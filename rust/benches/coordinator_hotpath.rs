@@ -1,0 +1,104 @@
+//! Bench: the L3 serving hot path — coordinator overhead vs direct engine
+//! execution, batching-window sweep, and worker scaling.
+//!
+//! This is the §Perf L3 bench (EXPERIMENTS.md): the coordinator should add
+//! bounded overhead over raw PJRT dispatch, and dynamic batching should
+//! beat per-request execution under concurrent load.
+//!
+//! Run: `make artifacts && cargo bench --bench coordinator_hotpath`
+
+use std::time::Instant;
+
+use spoga::benchkit::bench;
+use spoga::coordinator::{Coordinator, CoordinatorConfig};
+use spoga::report::{fmt_sig, Table};
+use spoga::runtime::Engine;
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.txt").exists() {
+        println!("SKIP coordinator_hotpath: run `make artifacts` first");
+        return;
+    }
+
+    // ---- baseline: direct engine, no coordinator ----------------------------
+    let mut eng = Engine::new("artifacts").unwrap();
+    eng.warmup("mlp_b1").unwrap();
+    eng.warmup("mlp_b8").unwrap();
+    eng.warmup("gemm_64x64x64").unwrap();
+    let row = vec![5i32; 784];
+
+    let direct_b1 = bench(2, 10, || eng.execute_i32_single("mlp_b1", &[&row]).unwrap());
+    let batch8 = vec![5i32; 8 * 784];
+    let direct_b8 = bench(2, 10, || eng.execute_i32_single("mlp_b8", &[&batch8]).unwrap());
+    let a = vec![1i32; 64 * 64];
+    let direct_gemm = bench(2, 20, || eng.execute_i32_single("gemm_64x64x64", &[&a, &a]).unwrap());
+
+    let mut t = Table::new(vec!["Direct engine", "per call", "rows/s"]);
+    t.row(vec![
+        "mlp_b1".to_string(),
+        format!("{:.2} ms", direct_b1.mean_s * 1e3),
+        fmt_sig(direct_b1.per_second(), 3),
+    ]);
+    t.row(vec![
+        "mlp_b8 (8 rows)".to_string(),
+        format!("{:.2} ms", direct_b8.mean_s * 1e3),
+        fmt_sig(8.0 * direct_b8.per_second(), 3),
+    ]);
+    t.row(vec![
+        "gemm_64x64x64".to_string(),
+        format!("{:.2} ms", direct_gemm.mean_s * 1e3),
+        fmt_sig(direct_gemm.per_second(), 3),
+    ]);
+    println!("{}", t.render());
+    println!(
+        "batching amortization (direct): b8 gives {:.2}x rows/s over b1\n",
+        8.0 * direct_b8.per_second() / direct_b1.per_second()
+    );
+
+    // ---- coordinator under concurrent load ----------------------------------
+    let mut t = Table::new(vec![
+        "Coordinator config",
+        "req/s",
+        "mean lat ms",
+        "p99 ms",
+        "occupancy",
+    ]);
+    for (workers, window_ms, clients, requests) in
+        [(1usize, 0.0f64, 1usize, 48usize), (1, 3.0, 8, 96), (2, 3.0, 8, 96), (2, 8.0, 16, 128)]
+    {
+        let c = Coordinator::start(CoordinatorConfig {
+            workers,
+            max_batch_wait_s: window_ms * 1e-3,
+            ..Default::default()
+        })
+        .unwrap();
+        let h = c.handle();
+        // Warm the pipeline (workers compile lazily on their own threads).
+        h.infer_mlp(vec![0; 784]).unwrap();
+
+        let t0 = Instant::now();
+        let per = requests / clients;
+        let joins: Vec<_> = (0..clients)
+            .map(|cl| {
+                let h = h.clone();
+                std::thread::spawn(move || {
+                    for i in 0..per {
+                        h.infer_mlp(vec![((cl + i) % 100) as i32; 784]).unwrap();
+                    }
+                })
+            })
+            .collect();
+        joins.into_iter().for_each(|j| j.join().unwrap());
+        let dt = t0.elapsed().as_secs_f64();
+        let s = h.stats();
+        t.row(vec![
+            format!("{workers}w / {window_ms}ms window / {clients} clients"),
+            fmt_sig((per * clients) as f64 / dt, 3),
+            format!("{:.1}", s.latency_mean() * 1e3),
+            format!("{:.1}", s.latency_percentile(0.99) * 1e3),
+            format!("{:.2}", s.mean_batch_occupancy()),
+        ]);
+        c.shutdown();
+    }
+    println!("coordinator hot path:\n{}", t.render());
+}

@@ -1,0 +1,43 @@
+//! Bench: regenerate paper **Fig. 5(a)** — FPS for the four CNNs across
+//! SPOGA / HOLYLIGHT / DEAPCNN at 1, 5 and 10 GS/s, with gmean bars and the
+//! paper's headline ratios.
+//!
+//! Run: `cargo bench --bench fig5a_fps`
+
+use spoga::benchkit::bench;
+use spoga::metrics::{build_figure, Metric, FIG5_CORES};
+use spoga::report::{fmt_ratio, fmt_sig, Table};
+use spoga::units::DataRate;
+
+fn main() {
+    let fig = build_figure(Metric::Fps, &DataRate::ALL, FIG5_CORES).unwrap();
+
+    let mut header = vec!["Variant".to_string()];
+    header.extend(fig.models.iter().cloned());
+    header.push("gmean".into());
+    let mut t = Table::new(header);
+    for v in &fig.variants {
+        let mut row = vec![v.name.clone()];
+        row.extend(v.per_model.iter().map(|x| fmt_sig(*x, 3)));
+        row.push(fmt_sig(v.gmean, 3));
+        t.row(row);
+    }
+    println!(
+        "Fig. 5(a) — FPS (log-scale bars in the paper), {} cores/accelerator:\n{}",
+        FIG5_CORES,
+        t.render()
+    );
+
+    let mut t = Table::new(vec!["gmean ratio", "ours", "paper"]);
+    for (a, b, paper) in [
+        ("SPOGA_10", "DEAPCNN_10", 14.4),
+        ("SPOGA_10", "HOLYLIGHT_10", 11.1),
+    ] {
+        let r = fig.gmean_ratio(a, b).unwrap();
+        t.row(vec![format!("{a} / {b}"), fmt_ratio(r), fmt_ratio(paper)]);
+    }
+    println!("headline factors:\n{}", t.render());
+
+    let stats = bench(1, 10, || build_figure(Metric::Fps, &DataRate::ALL, FIG5_CORES).unwrap());
+    println!("simulator: {stats} (full 9-variant × 4-CNN figure)");
+}

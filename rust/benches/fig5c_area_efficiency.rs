@@ -1,0 +1,49 @@
+//! Bench: regenerate paper **Fig. 5(c)** — FPS/W/mm² (area efficiency over
+//! the electronic/CMOS die, the area the paper's Table II models).
+//!
+//! The paper quotes its headline factors at 1 GS/s (SPOGA_1 vs *_1): that
+//! is where SPOGA's converter advantage peaks — its 16 ADCs/core vs the
+//! baselines' M ADCs + DEAS + intermediate SRAM. At 10 GS/s SPOGA's 2N
+//! input DACs erode the advantage, which this bench also shows.
+//!
+//! Run: `cargo bench --bench fig5c_area_efficiency`
+
+use spoga::benchkit::bench;
+use spoga::metrics::{build_figure, Metric, FIG5_CORES};
+use spoga::report::{fmt_ratio, fmt_sig, Table};
+use spoga::units::DataRate;
+
+fn main() {
+    let fig = build_figure(Metric::FpsPerWPerMm2, &DataRate::ALL, FIG5_CORES).unwrap();
+
+    let mut header = vec!["Variant".to_string()];
+    header.extend(fig.models.iter().cloned());
+    header.push("gmean".into());
+    let mut t = Table::new(header);
+    for v in &fig.variants {
+        let mut row = vec![v.name.clone()];
+        row.extend(v.per_model.iter().map(|x| fmt_sig(*x, 3)));
+        row.push(fmt_sig(v.gmean, 3));
+        t.row(row);
+    }
+    println!(
+        "Fig. 5(c) — FPS/W/mm² (CMOS die), {} cores/accelerator:\n{}",
+        FIG5_CORES,
+        t.render()
+    );
+
+    let mut t = Table::new(vec!["gmean ratio", "ours", "paper"]);
+    for (a, b, paper) in [
+        ("SPOGA_1", "DEAPCNN_1", 28.5),
+        ("SPOGA_1", "HOLYLIGHT_1", 22.2),
+    ] {
+        let r = fig.gmean_ratio(a, b).unwrap();
+        t.row(vec![format!("{a} / {b}"), fmt_ratio(r), fmt_ratio(paper)]);
+    }
+    println!("headline factors (at 1 GS/s, as in the paper):\n{}", t.render());
+
+    let stats = bench(1, 10, || {
+        build_figure(Metric::FpsPerWPerMm2, &DataRate::ALL, FIG5_CORES).unwrap()
+    });
+    println!("simulator: {stats}");
+}

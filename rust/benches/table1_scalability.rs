@@ -1,0 +1,60 @@
+//! Bench: regenerate paper **Table I** (+ Table II constants) and time the
+//! link-budget solver.
+//!
+//! Run: `cargo bench --bench table1_scalability`
+
+use spoga::benchkit::bench;
+use spoga::devices::{Adc, Dac};
+use spoga::optics::{paper_table1, solve_table1};
+use spoga::report::Table;
+use spoga::units::DataRate;
+
+fn main() {
+    // ---- Table II (input constants, printed for provenance) ---------------
+    let mut t2 = Table::new(vec!["Converter", "BR (GS/s)", "Area (mm2)", "Power (mW)"]);
+    for dr in DataRate::ALL {
+        let a = Adc::for_rate(dr);
+        t2.row(vec![
+            "ADC".into(),
+            dr.gs().to_string(),
+            format!("{}", a.area_mm2),
+            format!("{}", a.power_mw),
+        ]);
+    }
+    for dr in DataRate::ALL {
+        let d = Dac::for_rate(dr);
+        t2.row(vec![
+            "DAC".into(),
+            dr.gs().to_string(),
+            format!("{}", d.area_mm2),
+            format!("{}", d.power_mw),
+        ]);
+    }
+    println!("Table II — converter design points (paper values, pinned by tests):\n{}", t2.render());
+
+    // ---- Table I ------------------------------------------------------------
+    let solved = solve_table1();
+    let paper = paper_table1();
+    let mut t = Table::new(vec!["Architecture", "1 GS/s", "5 GS/s", "10 GS/s", "paper", "match"]);
+    let mut all = true;
+    for (s, p) in solved.rows.iter().zip(paper.rows.iter()) {
+        let c = |nm: (usize, usize)| format!("{}x{}", nm.0, nm.1);
+        let ok = s.nm == p.nm;
+        all &= ok;
+        t.row(vec![
+            s.label.clone(),
+            c(s.nm[0]),
+            c(s.nm[1]),
+            c(s.nm[2]),
+            format!("{}/{}/{}", c(p.nm[0]), c(p.nm[1]), c(p.nm[2])),
+            if ok { "yes".into() } else { "NO".into() },
+        ]);
+    }
+    println!("Table I — scalability analysis:\n{}", t.render());
+    assert!(all, "Table I mismatch — see rows above");
+    println!("Table I reproduces the paper cell-for-cell.\n");
+
+    // ---- solver timing --------------------------------------------------------
+    let stats = bench(3, 100, solve_table1);
+    println!("solver: {stats} ({:.0} tables/s)", stats.per_second());
+}

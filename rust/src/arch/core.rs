@@ -1,0 +1,428 @@
+//! Per-core device inventory and GEMM execution planning.
+
+use crate::devices::adc::Adc;
+use crate::devices::bpca::Bpca;
+use crate::devices::dac::Dac;
+use crate::devices::deas::Deas;
+use crate::devices::laser::Laser;
+use crate::devices::mrr::Mrr;
+use crate::devices::photodetector::BalancedPhotodetector;
+use crate::devices::splitter::SplitterTree;
+use crate::devices::sram::SramBuffer;
+use crate::dnn::layer::GemmShape;
+use crate::optics::link_budget::{ArchClass, LinkBudget};
+use crate::units::DataRate;
+use crate::{Error, Result};
+
+/// Device counts of one GEMM core (drives area + standing power).
+#[derive(Debug, Clone)]
+pub struct CoreInventory {
+    /// Laser diodes (wavelength channels generated).
+    pub lasers: usize,
+    /// Input modulator rings (DAC-driven every symbol).
+    pub modulator_rings: usize,
+    /// Weight-bank rings (reprogrammed at weight-update cadence).
+    pub weight_rings: usize,
+    /// Passive filter/mux rings (aggregation).
+    pub filter_rings: usize,
+    /// Balanced photodetectors with TIA receivers.
+    pub tia_receivers: usize,
+    /// BPCAs (time-integrating receivers with capacitor banks).
+    pub bpcas: usize,
+    /// ADCs (one per digitized output channel).
+    pub adcs: usize,
+    /// Input DACs (one per modulator driven per symbol).
+    pub dacs: usize,
+    /// DEAS shifter-adder units (baselines only).
+    pub deas_units: usize,
+    /// Splitter-tree fanout degree (0 = no splitting block).
+    pub splitter_fanout: usize,
+    /// Intermediate-result SRAM (baselines only).
+    pub has_sram: bool,
+}
+
+/// Execution plan for one INT8 GEMM on one *logical* core.
+///
+/// A logical core is the unit that completes an INT8 GEMM by itself: one
+/// SPOGA core, or a *quadruplet* of baseline INT4 cores running the four
+/// slice-GEMMs of Fig. 2(a) in parallel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GemmPlan {
+    /// Timesteps (symbol slots) the logical core is busy.
+    pub timesteps: u64,
+    /// Physical cores occupied while it runs (1 or 4).
+    pub cores_occupied: u64,
+    /// O/E → ADC conversions performed.
+    pub adc_conversions: u64,
+    /// Input-DAC conversions performed.
+    pub dac_conversions: u64,
+    /// BPCA accumulate/reset cycles (SPOGA) — 3 lanes × results.
+    pub bpca_cycles: u64,
+    /// Outputs that pass through DEAS shift-add (baselines).
+    pub deas_outputs: u64,
+    /// Bytes round-tripped through intermediate SRAM (baselines).
+    pub sram_bytes: u64,
+}
+
+/// One photonic GEMM core at a fixed design point.
+#[derive(Debug, Clone)]
+pub struct Core {
+    /// Organisation (MAW/AMW/MWA).
+    pub arch: ArchClass,
+    /// Symbol rate.
+    pub dr: DataRate,
+    /// Vector size (dot-product length) per pass.
+    pub n: usize,
+    /// Dot products per timestep.
+    pub m: usize,
+    /// Per-wavelength laser power, dBm (from the Table I design point).
+    pub laser_dbm: f64,
+    /// Device inventory.
+    pub inventory: CoreInventory,
+}
+
+impl Core {
+    /// Build a core from the architecture's link budget at (dr, laser_dbm).
+    ///
+    /// Baselines solve the largest square N=M; SPOGA fixes M=16 DPUs and
+    /// solves N (OAMEs per DPU).
+    pub fn design(arch: ArchClass, dr: DataRate, laser_dbm: f64) -> Result<Self> {
+        let lb = LinkBudget::for_arch(arch);
+        let (n, m) = match arch {
+            ArchClass::Maw | ArchClass::Amw => {
+                let s = lb.max_square(dr, laser_dbm);
+                (s, s)
+            }
+            ArchClass::Mwa => {
+                let m = lb.m_cap.expect("SPOGA fixes M");
+                (lb.max_n_given_m(m, dr, laser_dbm), m)
+            }
+        };
+        if n == 0 || m == 0 {
+            return Err(Error::Infeasible(format!(
+                "{} at {dr}, {laser_dbm} dBm: no feasible configuration",
+                arch.name()
+            )));
+        }
+        let inventory = Self::build_inventory(arch, n, m);
+        Ok(Core { arch, dr, n, m, laser_dbm, inventory })
+    }
+
+    fn build_inventory(arch: ArchClass, n: usize, m: usize) -> CoreInventory {
+        match arch {
+            // MAW/AMW (paper Fig. 1(b)): N lasers, N modulators, M weight
+            // banks of N rings, M BPD+TIA receivers, M ADCs, N input DACs,
+            // 1:M splitting block, DEAS + SRAM for bit-slice post-processing.
+            ArchClass::Maw | ArchClass::Amw => CoreInventory {
+                lasers: n,
+                modulator_rings: n,
+                weight_rings: n * m,
+                filter_rings: n, // aggregation/mux block
+                tia_receivers: m,
+                bpcas: 0,
+                adcs: m,
+                dacs: n,
+                deas_units: m,
+                splitter_fanout: m,
+                has_sram: true,
+            },
+            // SPOGA (paper Fig. 3): M=16 DPUs per core. In a GEMM all 16
+            // DPUs consume the SAME input vector against 16 different weight
+            // columns (Fig. 1 mapping), so the input side is built ONCE per
+            // core: 4 carrier lasers (λ1..λ4), 4N input modulator rings
+            // (each input nibble imprinted on the two wavelengths that
+            // consume it) driven by 2N nibble DACs, then a 1:16 split to the
+            // DPUs — the ≈12 dB split is exactly the link budget's fixed
+            // loss (see `LinkBudget::spoga`). Each DPU owns 4N weight rings,
+            // 3 aggregation-lane mux sets ending in 3 BPCAs, and 1 analog
+            // adder + 1 ADC.
+            ArchClass::Mwa => CoreInventory {
+                lasers: 4,
+                modulator_rings: 4 * n,
+                weight_rings: 4 * n * m,
+                filter_rings: 6 * m, // 3 lane sets × (+ve/−ve) mux per DPU
+                tia_receivers: 0,
+                bpcas: 3 * m,
+                adcs: m,
+                dacs: 2 * n,
+                deas_units: 0,
+                splitter_fanout: m,
+                has_sram: false,
+            },
+        }
+    }
+
+    /// Paper-style variant name, e.g. "SPOGA_10".
+    pub fn variant_name(&self) -> String {
+        let base = match self.arch {
+            ArchClass::Maw => "HOLYLIGHT",
+            ArchClass::Amw => "DEAPCNN",
+            ArchClass::Mwa => "SPOGA",
+        };
+        format!("{base}_{}", self.dr.suffix())
+    }
+
+    /// INT8 MACs retired per timestep by one *logical* core.
+    pub fn int8_macs_per_step(&self) -> u64 {
+        match self.arch {
+            // A quadruplet of INT4 cores retires n×m INT8 MACs per step
+            // (each core does the n×m INT4 slice products of one slice pair).
+            ArchClass::Maw | ArchClass::Amw => (self.n * self.m) as u64,
+            // One SPOGA core: m DPUs × n INT8 elements.
+            ArchClass::Mwa => (self.n * self.m) as u64,
+        }
+    }
+
+    /// Plan one INT8 GEMM `shape` on one logical core (paper §III-B
+    /// conversion accounting).
+    pub fn plan_gemm(&self, shape: &GemmShape) -> GemmPlan {
+        let t = shape.t as u64;
+        let groups = shape.groups as u64;
+        let k_chunks = shape.k.div_ceil(self.n) as u64;
+        let c_tiles = shape.c.div_ceil(self.m) as u64;
+        let steps = t * k_chunks * c_tiles * groups;
+        let outputs = shape.outputs();
+
+        match self.arch {
+            ArchClass::Maw | ArchClass::Amw => {
+                // Four INT4 slice-GEMMs on four cores in parallel; every
+                // timestep each BPD result is digitized; K-chunk partials are
+                // recombined digitally; DEAS assembles the final outputs.
+                let adc = 4 * steps * self.m as u64;
+                GemmPlan {
+                    timesteps: steps,
+                    cores_occupied: 4,
+                    adc_conversions: adc,
+                    dac_conversions: 4 * steps * self.n as u64,
+                    bpca_cycles: 0,
+                    deas_outputs: outputs,
+                    // Each intermediate conversion is stored + read once
+                    // (2 bytes, 16-bit intermediates).
+                    sram_bytes: 2 * adc,
+                }
+            }
+            ArchClass::Mwa => {
+                // Charge accumulates across K-chunks inside the BPCAs; only
+                // the final result of each output is digitized: exactly one
+                // ADC conversion per output, three BPCA integrate+reset
+                // cycles per output (one per radix lane). No DEAS, no SRAM.
+                // Input DACs run once per step (shared across the 16 DPUs).
+                GemmPlan {
+                    timesteps: steps,
+                    cores_occupied: 1,
+                    adc_conversions: outputs,
+                    dac_conversions: steps * 2 * self.n as u64,
+                    bpca_cycles: 3 * outputs,
+                    deas_outputs: 0,
+                    sram_bytes: 0,
+                }
+            }
+        }
+    }
+
+    /// Electronic (CMOS die) area of one core, mm²: ADCs + DACs + DEAS +
+    /// SRAM — the components the paper's Table II models. This is the area
+    /// that FPS/W/mm² divides by (the paper's own area data covers only the
+    /// electronic converters; the photonic devices live on a separate
+    /// photonic die in the assumed 2.5D integration).
+    pub fn electronic_area_mm2(&self) -> f64 {
+        let inv = &self.inventory;
+        let adc = Adc::for_rate(self.dr);
+        let dac = Dac::for_rate(self.dr);
+        let deas = Deas::default();
+        let mut area = inv.adcs as f64 * adc.area_mm2
+            + inv.dacs as f64 * dac.area_mm2
+            + inv.deas_units as f64 * deas.area_mm2;
+        if inv.has_sram {
+            area += SramBuffer::for_outputs(self.m).area_mm2;
+        }
+        area
+    }
+
+    /// Photonic-die area of one core, mm² (rings, lasers, detectors,
+    /// splitter trees).
+    pub fn photonic_area_mm2(&self) -> f64 {
+        let inv = &self.inventory;
+        let mrr = Mrr::modulator().area_mm2; // same footprint for all roles
+        let laser = Laser::with_power_dbm(self.laser_dbm);
+        let pd = BalancedPhotodetector::tia();
+        let bpca = Bpca::default();
+        let split = SplitterTree::default();
+        let rings = inv.modulator_rings + inv.weight_rings + inv.filter_rings;
+        rings as f64 * mrr
+            + inv.lasers as f64 * laser.area_mm2
+            + inv.tia_receivers as f64 * pd.area_mm2
+            + inv.bpcas as f64 * bpca.area_mm2
+            + split.area_mm2(inv.splitter_fanout) * inv.lasers as f64
+    }
+
+    /// Total (photonic + electronic) area of one physical core, mm².
+    pub fn area_mm2(&self) -> f64 {
+        self.electronic_area_mm2() + self.photonic_area_mm2()
+    }
+
+    /// Standing (workload-independent) power of one physical core, mW:
+    /// lasers (wall-plug), ring tuning, receiver bias, converter standby.
+    pub fn standing_power_mw(&self) -> f64 {
+        let inv = &self.inventory;
+        let laser = Laser::with_power_dbm(self.laser_dbm);
+        let pd = BalancedPhotodetector::tia();
+        let bpca = Bpca::default();
+        let rings = inv.modulator_rings + inv.weight_rings + inv.filter_rings;
+
+        let mut p = inv.lasers as f64 * laser.electrical_power_mw()
+            + rings as f64 * Mrr::modulator().static_power_mw()
+            + inv.tia_receivers as f64 * pd.static_power_mw
+            + inv.bpcas as f64 * bpca.static_power_mw;
+        if inv.has_sram {
+            p += SramBuffer::for_outputs(self.m).leakage_mw;
+        }
+        p
+    }
+
+    /// Peak dynamic power of one physical core running flat out, mW
+    /// (modulator drive + ADC + DAC + DEAS at the symbol rate).
+    pub fn peak_dynamic_power_mw(&self) -> f64 {
+        let inv = &self.inventory;
+        let adc = Adc::for_rate(self.dr);
+        let dac = Dac::for_rate(self.dr);
+        let deas = Deas::default();
+        let mrm = Mrr::modulator();
+
+        let mut p = inv.adcs as f64 * adc.power_mw
+            + inv.dacs as f64 * dac.power_mw
+            + inv.modulator_rings as f64 * mrm.drive_power_mw(self.dr)
+            + inv.deas_units as f64 * deas.power_mw(self.dr);
+        if inv.has_sram {
+            // Streaming M 16-bit intermediates per symbol.
+            p += SramBuffer::for_outputs(self.m)
+                .dynamic_power_mw(self.dr, 2.0 * self.m as f64);
+        }
+        p
+    }
+
+    /// Total peak power (standing + dynamic), mW.
+    pub fn peak_power_mw(&self) -> f64 {
+        self.standing_power_mw() + self.peak_dynamic_power_mw()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shape(t: usize, k: usize, c: usize) -> GemmShape {
+        GemmShape { t, k, c, groups: 1 }
+    }
+
+    #[test]
+    fn design_points_match_table1() {
+        let h = Core::design(ArchClass::Maw, DataRate::Gs1, 10.0).unwrap();
+        assert_eq!((h.n, h.m), (43, 43));
+        let d = Core::design(ArchClass::Amw, DataRate::Gs10, 10.0).unwrap();
+        assert_eq!((d.n, d.m), (12, 12));
+        let s = Core::design(ArchClass::Mwa, DataRate::Gs10, 10.0).unwrap();
+        assert_eq!((s.n, s.m), (160, 16));
+    }
+
+    #[test]
+    fn infeasible_design_rejected() {
+        // −20 dBm lasers cannot close any budget.
+        assert!(Core::design(ArchClass::Maw, DataRate::Gs10, -20.0).is_err());
+    }
+
+    #[test]
+    fn spoga_single_adc_conversion_per_output() {
+        let s = Core::design(ArchClass::Mwa, DataRate::Gs5, 10.0).unwrap();
+        let sh = shape(64, 500, 32); // K > N forces multi-pass accumulation
+        let plan = s.plan_gemm(&sh);
+        assert_eq!(plan.adc_conversions, sh.outputs());
+        assert_eq!(plan.deas_outputs, 0);
+        assert_eq!(plan.sram_bytes, 0);
+        assert_eq!(plan.cores_occupied, 1);
+        assert_eq!(plan.bpca_cycles, 3 * sh.outputs());
+    }
+
+    #[test]
+    fn baseline_pays_conversion_tax() {
+        let h = Core::design(ArchClass::Maw, DataRate::Gs5, 10.0).unwrap();
+        let sh = shape(64, 500, 32);
+        let plan = h.plan_gemm(&sh);
+        // 4 slice-cores, M conversions per step each.
+        assert_eq!(plan.cores_occupied, 4);
+        assert!(plan.adc_conversions > sh.outputs());
+        assert_eq!(plan.deas_outputs, sh.outputs());
+        assert!(plan.sram_bytes > 0);
+    }
+
+    #[test]
+    fn plan_timesteps_scale_with_tiling() {
+        let s = Core::design(ArchClass::Mwa, DataRate::Gs1, 10.0).unwrap(); // n=249,m=16
+        let small = s.plan_gemm(&shape(10, 249, 16));
+        assert_eq!(small.timesteps, 10); // single chunk, single tile
+        let multi = s.plan_gemm(&shape(10, 250, 17));
+        assert_eq!(multi.timesteps, 10 * 2 * 2);
+    }
+
+    #[test]
+    fn grouped_gemm_multiplies_steps() {
+        let s = Core::design(ArchClass::Mwa, DataRate::Gs1, 10.0).unwrap();
+        let g1 = s.plan_gemm(&GemmShape { t: 9, k: 9, c: 1, groups: 1 });
+        let g32 = s.plan_gemm(&GemmShape { t: 9, k: 9, c: 1, groups: 32 });
+        assert_eq!(g32.timesteps, 32 * g1.timesteps);
+    }
+
+    #[test]
+    fn spoga_inventory_counts() {
+        let s = Core::design(ArchClass::Mwa, DataRate::Gs1, 10.0).unwrap(); // n=249
+        let inv = &s.inventory;
+        assert_eq!(inv.lasers, 4); // one carrier group, split 1:16 to DPUs
+        assert_eq!(inv.modulator_rings, 4 * 249); // input block shared by DPUs
+        assert_eq!(inv.weight_rings, 4 * 249 * 16); // per-DPU weight banks
+        assert_eq!(inv.dacs, 2 * 249); // one DAC per input nibble
+        assert_eq!(inv.bpcas, 48); // 3 × 16
+        assert_eq!(inv.adcs, 16);
+        assert_eq!(inv.deas_units, 0);
+        assert!(!inv.has_sram);
+    }
+
+    #[test]
+    fn baseline_inventory_counts() {
+        let h = Core::design(ArchClass::Maw, DataRate::Gs1, 10.0).unwrap(); // 43×43
+        let inv = &h.inventory;
+        assert_eq!(inv.lasers, 43);
+        assert_eq!(inv.weight_rings, 43 * 43);
+        assert_eq!(inv.adcs, 43);
+        assert_eq!(inv.deas_units, 43);
+        assert!(inv.has_sram);
+    }
+
+    #[test]
+    fn area_and_power_positive_for_all_designs() {
+        for arch in [ArchClass::Maw, ArchClass::Amw, ArchClass::Mwa] {
+            for dr in DataRate::ALL {
+                let c = Core::design(arch, dr, 10.0).unwrap();
+                assert!(c.area_mm2() > 0.0);
+                assert!(c.standing_power_mw() > 0.0);
+                assert!(c.peak_dynamic_power_mw() > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn variant_names_match_paper_style() {
+        let s = Core::design(ArchClass::Mwa, DataRate::Gs10, 10.0).unwrap();
+        assert_eq!(s.variant_name(), "SPOGA_10");
+        let h = Core::design(ArchClass::Maw, DataRate::Gs1, 10.0).unwrap();
+        assert_eq!(h.variant_name(), "HOLYLIGHT_1");
+    }
+
+    #[test]
+    fn ring_tuning_dominates_spoga_standing_power() {
+        // With only 4 carrier lasers per core, SPOGA's standing power is
+        // dominated by thermal tuning of its large ring population.
+        let s = Core::design(ArchClass::Mwa, DataRate::Gs10, 10.0).unwrap();
+        let lasers = 4.0 * Laser::with_power_dbm(10.0).electrical_power_mw();
+        assert!(lasers / s.standing_power_mw() < 0.2);
+    }
+}

@@ -1,0 +1,191 @@
+//! Conversion counting and energy breakdown (paper §III-B accounting).
+
+use crate::arch::core::{Core, GemmPlan};
+use crate::devices::adc::Adc;
+use crate::devices::bpca::Bpca;
+use crate::devices::dac::Dac;
+use crate::devices::deas::Deas;
+use crate::devices::sram::SramBuffer;
+
+/// Per-dot-product conversion chain of an architecture (paper §III-B: SPOGA
+/// needs 3 O/E + 1 ADC; prior works need 4 O/E + 4 ADC + SRAM + DEAS).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ConversionCounts {
+    /// Optical-to-electrical transductions per dot product.
+    pub oe_per_output: f64,
+    /// ADC conversions per dot product.
+    pub adc_per_output: f64,
+    /// SRAM bytes round-tripped per dot product.
+    pub sram_bytes_per_output: f64,
+    /// DEAS shift-add operations per dot product.
+    pub deas_per_output: f64,
+}
+
+impl ConversionCounts {
+    /// Derive the per-output conversion chain from a concrete plan.
+    pub fn from_plan(plan: &GemmPlan, outputs: u64) -> Self {
+        let o = outputs.max(1) as f64;
+        let oe = if plan.bpca_cycles > 0 {
+            plan.bpca_cycles as f64 // each BPCA integrate+readout is one O/E
+        } else {
+            plan.adc_conversions as f64 // TIA: every ADC sample is an O/E
+        };
+        ConversionCounts {
+            oe_per_output: oe / o,
+            adc_per_output: plan.adc_conversions as f64 / o,
+            sram_bytes_per_output: plan.sram_bytes as f64 / o,
+            deas_per_output: plan.deas_outputs as f64 / o,
+        }
+    }
+}
+
+/// Energy components of executing some workload on an accelerator, joules.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct EnergyBreakdown {
+    /// Laser wall-plug energy.
+    pub laser_j: f64,
+    /// MRR thermal tuning + receiver bias (standing, non-laser).
+    pub standing_j: f64,
+    /// Modulator drive + input DAC energy.
+    pub dac_j: f64,
+    /// ADC conversion energy.
+    pub adc_j: f64,
+    /// BPCA integrate/reset energy (SPOGA).
+    pub bpca_j: f64,
+    /// DEAS shift-add energy (baselines).
+    pub deas_j: f64,
+    /// Intermediate SRAM traffic energy (baselines).
+    pub sram_j: f64,
+}
+
+impl EnergyBreakdown {
+    /// Total energy, joules.
+    pub fn total_j(&self) -> f64 {
+        self.laser_j
+            + self.standing_j
+            + self.dac_j
+            + self.adc_j
+            + self.bpca_j
+            + self.deas_j
+            + self.sram_j
+    }
+
+    /// Energy of one GEMM plan on `core` (active-time × standing power +
+    /// per-event dynamic energies).
+    pub fn of_plan(core: &Core, plan: &GemmPlan) -> Self {
+        let step_s = core.dr.step_seconds();
+        let busy_s = plan.timesteps as f64 * step_s * plan.cores_occupied as f64;
+        let adc = Adc::for_rate(core.dr);
+        let dac = Dac::for_rate(core.dr);
+        let deas = Deas::default();
+        let bpca = Bpca::default();
+        let sram = SramBuffer::for_outputs(core.m);
+
+        // Standing power split: lasers vs the rest (tuning, bias, leakage).
+        let laser_mw = core.inventory.lasers as f64
+            * crate::devices::laser::Laser::with_power_dbm(core.laser_dbm)
+                .electrical_power_mw();
+        let other_mw = core.standing_power_mw() - laser_mw;
+
+        EnergyBreakdown {
+            laser_j: laser_mw * 1e-3 * busy_s,
+            standing_j: other_mw * 1e-3 * busy_s,
+            dac_j: plan.dac_conversions as f64 * dac.energy_per_conversion_pj() * 1e-12,
+            adc_j: plan.adc_conversions as f64 * adc.energy_per_conversion_pj() * 1e-12,
+            bpca_j: plan.bpca_cycles as f64 * bpca.energy_per_cycle_pj * 1e-12,
+            deas_j: plan.deas_outputs as f64 * deas.energy_per_output_pj * 1e-12,
+            sram_j: sram.roundtrip_energy_pj(plan.sram_bytes as f64) * 1e-12,
+        }
+    }
+
+    /// Component-wise accumulate.
+    pub fn add(&mut self, other: &EnergyBreakdown) {
+        self.laser_j += other.laser_j;
+        self.standing_j += other.standing_j;
+        self.dac_j += other.dac_j;
+        self.adc_j += other.adc_j;
+        self.bpca_j += other.bpca_j;
+        self.deas_j += other.deas_j;
+        self.sram_j += other.sram_j;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::layer::GemmShape;
+    use crate::optics::link_budget::ArchClass;
+    use crate::units::DataRate;
+
+    fn cores() -> (Core, Core) {
+        (
+            Core::design(ArchClass::Mwa, DataRate::Gs5, 10.0).unwrap(),
+            Core::design(ArchClass::Maw, DataRate::Gs5, 10.0).unwrap(),
+        )
+    }
+
+    #[test]
+    fn paper_conversion_claim_single_pass() {
+        // For a single-pass dot product (K ≤ N): SPOGA = 3 O/E + 1 ADC,
+        // baseline = 4 O/E + 4 ADC (paper §III-B).
+        let (spoga, holy) = cores();
+        let sh = GemmShape { t: 1, k: spoga.n, c: spoga.m, groups: 1 };
+        let sp = spoga.plan_gemm(&sh);
+        let sc = ConversionCounts::from_plan(&sp, sh.outputs());
+        assert_eq!(sc.oe_per_output, 3.0);
+        assert_eq!(sc.adc_per_output, 1.0);
+        assert_eq!(sc.deas_per_output, 0.0);
+        assert_eq!(sc.sram_bytes_per_output, 0.0);
+
+        let sh_b = GemmShape { t: 1, k: holy.n, c: holy.m, groups: 1 };
+        let bp = holy.plan_gemm(&sh_b);
+        let bc = ConversionCounts::from_plan(&bp, sh_b.outputs());
+        assert_eq!(bc.oe_per_output, 4.0);
+        assert_eq!(bc.adc_per_output, 4.0);
+        assert_eq!(bc.deas_per_output, 1.0);
+        assert!(bc.sram_bytes_per_output > 0.0);
+    }
+
+    #[test]
+    fn multipass_widens_the_gap() {
+        // K ≫ N: baselines digitize every pass; SPOGA still 1 ADC/output.
+        let (spoga, holy) = cores();
+        let sh = GemmShape { t: 4, k: 4 * spoga.n.max(holy.n), c: 16, groups: 1 };
+        let sc = ConversionCounts::from_plan(&spoga.plan_gemm(&sh), sh.outputs());
+        let bc = ConversionCounts::from_plan(&holy.plan_gemm(&sh), sh.outputs());
+        assert_eq!(sc.adc_per_output, 1.0);
+        assert!(bc.adc_per_output > 4.0);
+    }
+
+    #[test]
+    fn energy_breakdown_totals_components() {
+        let (spoga, _) = cores();
+        let sh = GemmShape { t: 16, k: 100, c: 16, groups: 1 };
+        let e = EnergyBreakdown::of_plan(&spoga, &spoga.plan_gemm(&sh));
+        let manual = e.laser_j + e.standing_j + e.dac_j + e.adc_j + e.bpca_j + e.deas_j + e.sram_j;
+        assert!((e.total_j() - manual).abs() < 1e-18);
+        assert!(e.total_j() > 0.0);
+        assert_eq!(e.deas_j, 0.0);
+        assert_eq!(e.sram_j, 0.0);
+    }
+
+    #[test]
+    fn baseline_pays_deas_and_sram_energy() {
+        let (_, holy) = cores();
+        let sh = GemmShape { t: 16, k: 100, c: 16, groups: 1 };
+        let e = EnergyBreakdown::of_plan(&holy, &holy.plan_gemm(&sh));
+        assert!(e.deas_j > 0.0);
+        assert!(e.sram_j > 0.0);
+    }
+
+    #[test]
+    fn add_accumulates() {
+        let (spoga, _) = cores();
+        let sh = GemmShape { t: 16, k: 100, c: 16, groups: 1 };
+        let e1 = EnergyBreakdown::of_plan(&spoga, &spoga.plan_gemm(&sh));
+        let mut acc = EnergyBreakdown::default();
+        acc.add(&e1);
+        acc.add(&e1);
+        assert!((acc.total_j() - 2.0 * e1.total_j()).abs() < 1e-15);
+    }
+}

@@ -1,0 +1,16 @@
+//! Accelerator architecture models.
+//!
+//! A [`Core`] captures one photonic GEMM core of a given organisation
+//! (SPOGA/MWA, HOLYLIGHT/MAW, DEAPCNN/AMW) at a data rate and laser power:
+//! its device inventory (→ area, standing power), and its execution plan for
+//! an INT8 GEMM (→ timesteps, conversion counts, post-processing work).
+//! An [`Accelerator`] is a fleet of identical cores normalized to a total
+//! laser wall-plug budget (the iso-power comparison of DESIGN.md §5.2).
+
+pub mod accel;
+pub mod core;
+pub mod cost;
+
+pub use accel::Accelerator;
+pub use core::{Core, CoreInventory, GemmPlan};
+pub use cost::{ConversionCounts, EnergyBreakdown};

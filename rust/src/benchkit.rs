@@ -1,0 +1,81 @@
+//! Minimal timing helpers for the `harness = false` benches (criterion is
+//! not in the offline vendored dependency set).
+
+use std::time::Instant;
+
+/// Timing statistics over repeated runs.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchStats {
+    /// Iterations measured.
+    pub iters: usize,
+    /// Mean seconds per iteration.
+    pub mean_s: f64,
+    /// Minimum (best) seconds per iteration.
+    pub min_s: f64,
+    /// Maximum seconds per iteration.
+    pub max_s: f64,
+}
+
+impl BenchStats {
+    /// Iterations per second at the mean.
+    pub fn per_second(&self) -> f64 {
+        if self.mean_s > 0.0 {
+            1.0 / self.mean_s
+        } else {
+            0.0
+        }
+    }
+}
+
+impl std::fmt::Display for BenchStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "mean {:.3} ms  (min {:.3}, max {:.3}, n={})",
+            self.mean_s * 1e3,
+            self.min_s * 1e3,
+            self.max_s * 1e3,
+            self.iters
+        )
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` unmeasured runs.
+pub fn bench<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> BenchStats {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut min_s = f64::INFINITY;
+    let mut max_s: f64 = 0.0;
+    let mut total = 0.0;
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        let dt = t0.elapsed().as_secs_f64();
+        total += dt;
+        min_s = min_s.min(dt);
+        max_s = max_s.max(dt);
+    }
+    BenchStats { iters: iters.max(1), mean_s: total / iters.max(1) as f64, min_s, max_s }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_stats() {
+        let s = bench(1, 10, || {
+            std::hint::black_box((0..1000).sum::<u64>())
+        });
+        assert_eq!(s.iters, 10);
+        assert!(s.min_s <= s.mean_s && s.mean_s <= s.max_s);
+        assert!(s.per_second() > 0.0);
+    }
+
+    #[test]
+    fn zero_iters_clamped() {
+        let s = bench(0, 0, || 1);
+        assert_eq!(s.iters, 1);
+    }
+}

@@ -1,0 +1,35 @@
+//! Exact integer semantics of nibble-sliced (bit-sliced) arithmetic.
+//!
+//! This is the **golden model** for everything numeric in the repo: the
+//! Pallas kernel (L1), the PJRT artifacts (L2) and the architectural cost
+//! models (L3) all decompose INT8 operands into 4-bit slices exactly the way
+//! this module does, and the test suites cross-check against it.
+//!
+//! ## Decomposition (paper §II-C)
+//!
+//! An INT8 value `x` is split into a **M**ost **S**ignificant **N**ibble and
+//! a **L**east **S**ignificant **N**ibble such that
+//!
+//! ```text
+//! x = 16 · msn(x) + lsn(x),     lsn ∈ [0, 15],   msn ∈ [-8, 7]
+//! ```
+//!
+//! The LSN is *unsigned* and the MSN carries the sign (two's complement
+//! arithmetic right shift), so a product expands exactly as
+//!
+//! ```text
+//! x·y = 256·(xₘ·yₘ) + 16·(xₘ·yₗ + xₗ·yₘ) + (xₗ·yₗ)
+//! ```
+//!
+//! which is the paper's Fig. 2 identity with radix-position weights 16², 16¹
+//! and 16⁰. The three bracketed terms are the **Hi/Mid/Lo radix lanes**
+//! ([`crate::devices::bpca::RadixLane`]) that SPOGA accumulates on its three
+//! BPCAs.
+
+pub mod gemm;
+pub mod nibble;
+pub mod wide;
+
+pub use gemm::{gemm_i32, gemm_lanes, gemm_sliced, LaneGemm};
+pub use nibble::{combine, lsn, msn, slice_i8, NibblePair};
+pub use wide::{gemm_i16_direct, gemm_i16_lanes, scheme_cost, slice_i16};

@@ -1,0 +1,101 @@
+//! Signed nibble decomposition of INT8 operands.
+
+/// The two 4-bit slices of an INT8 value.
+///
+/// Invariant: `16 * msn + lsn == original`, with `lsn ∈ [0, 15]` and
+/// `msn ∈ [-8, 7]`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NibblePair {
+    /// Most significant nibble — signed, carries the sign of the operand.
+    pub msn: i8,
+    /// Least significant nibble — unsigned magnitude bits.
+    pub lsn: u8,
+}
+
+/// Most significant nibble: arithmetic shift keeps the sign.
+#[inline]
+pub fn msn(x: i8) -> i8 {
+    x >> 4
+}
+
+/// Least significant nibble: low 4 magnitude bits, always in `[0, 15]`.
+#[inline]
+pub fn lsn(x: i8) -> u8 {
+    (x as u8) & 0x0F
+}
+
+/// Slice an INT8 value into its nibble pair.
+#[inline]
+pub fn slice_i8(x: i8) -> NibblePair {
+    NibblePair { msn: msn(x), lsn: lsn(x) }
+}
+
+/// Recombine a nibble pair into the original INT8 value.
+#[inline]
+pub fn combine(p: NibblePair) -> i8 {
+    (((p.msn as i16) << 4) | p.lsn as i16) as i8
+}
+
+impl NibblePair {
+    /// Expand the product `x · y` into the three radix-lane contributions
+    /// `(hi, mid, lo)` such that
+    /// `x·y = 256·hi + 16·mid + lo`.
+    #[inline]
+    pub fn product_lanes(x: NibblePair, y: NibblePair) -> (i32, i32, i32) {
+        let (xm, xl) = (x.msn as i32, x.lsn as i32);
+        let (ym, yl) = (y.msn as i32, y.lsn as i32);
+        (xm * ym, xm * yl + xl * ym, xl * yl)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slice_combine_roundtrip_exhaustive() {
+        for x in i8::MIN..=i8::MAX {
+            let p = slice_i8(x);
+            assert_eq!(combine(p), x, "roundtrip failed for {x}");
+            assert!(p.lsn <= 15);
+            assert!((-8..=7).contains(&p.msn), "msn {} out of range for {x}", p.msn);
+        }
+    }
+
+    #[test]
+    fn slice_identity_16m_plus_l_exhaustive() {
+        for x in i8::MIN..=i8::MAX {
+            let p = slice_i8(x);
+            assert_eq!(16 * p.msn as i16 + p.lsn as i16, x as i16);
+        }
+    }
+
+    #[test]
+    fn product_lane_identity_exhaustive() {
+        // 65536 cases — the full INT8×INT8 multiplication table.
+        for x in i8::MIN..=i8::MAX {
+            for y in i8::MIN..=i8::MAX {
+                let (hi, mid, lo) = NibblePair::product_lanes(slice_i8(x), slice_i8(y));
+                let recomposed = 256 * hi + 16 * mid + lo;
+                assert_eq!(recomposed, x as i32 * y as i32, "x={x} y={y}");
+            }
+        }
+    }
+
+    #[test]
+    fn known_values() {
+        assert_eq!(slice_i8(0), NibblePair { msn: 0, lsn: 0 });
+        assert_eq!(slice_i8(127), NibblePair { msn: 7, lsn: 15 });
+        assert_eq!(slice_i8(-128), NibblePair { msn: -8, lsn: 0 });
+        assert_eq!(slice_i8(-1), NibblePair { msn: -1, lsn: 15 });
+        assert_eq!(slice_i8(16), NibblePair { msn: 1, lsn: 0 });
+        assert_eq!(slice_i8(-16), NibblePair { msn: -1, lsn: 0 });
+    }
+
+    #[test]
+    fn lsn_is_always_unsigned_magnitude_bits() {
+        assert_eq!(lsn(-1), 15);
+        assert_eq!(lsn(-16), 0);
+        assert_eq!(lsn(0x0F), 15);
+    }
+}

@@ -1,0 +1,173 @@
+//! Extension: INT16 operands via four-nibble slicing.
+//!
+//! The paper's scheme (two INT4 slices per INT8 operand, three radix lanes)
+//! generalizes: an INT16 operand splits into four nibbles
+//! `x = 16³·n3 + 16²·n2 + 16·n1 + n0` (n3 signed, rest unsigned), and an
+//! INT16×INT16 product expands into 16 nibble products that collapse onto
+//! **seven** radix lanes (16⁰ … 16⁶) — a hypothetical 7-BPCA PWAB. This
+//! module provides the exact integer semantics for that extension (listed
+//! as the natural scale-up path in DESIGN.md §6), with i64 accumulators.
+
+use crate::{Error, Result};
+
+/// Nibbles of an INT16 value, least-significant first.
+/// Invariant: `x = 4096·n[3] + 256·n[2] + 16·n[1] + n[0]`, `n[3] ∈ [-8,7]`,
+/// others in `[0,15]`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Nibbles16(pub [i32; 4]);
+
+/// Slice an INT16 value into four nibbles (top nibble signed).
+#[inline]
+pub fn slice_i16(x: i16) -> Nibbles16 {
+    let v = x as i32;
+    Nibbles16([v & 0xF, (v >> 4) & 0xF, (v >> 8) & 0xF, v >> 12])
+}
+
+/// Recombine four nibbles into the INT16 value.
+#[inline]
+pub fn combine_i16(n: Nibbles16) -> i16 {
+    (4096 * n.0[3] + 256 * n.0[2] + 16 * n.0[1] + n.0[0]) as i16
+}
+
+/// The seven radix-lane accumulators of the INT16 extension.
+///
+/// `lanes[d]` collects every nibble product `xi·yj` with `i + j == d`, the
+/// lane's positional weight being `16^d`.
+#[derive(Debug, Clone)]
+pub struct WideLanes {
+    /// Per-output lane sums: `lanes[d][out]`.
+    pub lanes: [Vec<i64>; 7],
+}
+
+impl WideLanes {
+    /// PWAB epilogue: weight each lane by 16^d and sum.
+    pub fn weight_and_add(&self) -> Vec<i64> {
+        let n = self.lanes[0].len();
+        let mut out = vec![0i64; n];
+        for (d, lane) in self.lanes.iter().enumerate() {
+            let w = 16i64.pow(d as u32);
+            for (o, v) in out.iter_mut().zip(lane) {
+                *o += w * v;
+            }
+        }
+        out
+    }
+}
+
+fn check(a: &[i16], b: &[i16], m: usize, k: usize, n: usize) -> Result<()> {
+    if a.len() != m * k || b.len() != k * n {
+        return Err(Error::Shape(format!(
+            "INT16 GEMM {m}x{k}x{n}: got {} and {} elements",
+            a.len(),
+            b.len()
+        )));
+    }
+    Ok(())
+}
+
+/// Direct i64 reference GEMM for INT16 operands.
+pub fn gemm_i16_direct(a: &[i16], b: &[i16], m: usize, k: usize, n: usize) -> Result<Vec<i64>> {
+    check(a, b, m, k, n)?;
+    let mut c = vec![0i64; m * n];
+    for i in 0..m {
+        for kk in 0..k {
+            let av = a[i * k + kk] as i64;
+            for j in 0..n {
+                c[i * n + j] += av * b[kk * n + j] as i64;
+            }
+        }
+    }
+    Ok(c)
+}
+
+/// INT16 GEMM via the 7-lane SPOGA-style dataflow.
+pub fn gemm_i16_lanes(a: &[i16], b: &[i16], m: usize, k: usize, n: usize) -> Result<WideLanes> {
+    check(a, b, m, k, n)?;
+    let mut lanes: [Vec<i64>; 7] = std::array::from_fn(|_| vec![0i64; m * n]);
+    for i in 0..m {
+        for kk in 0..k {
+            let na = slice_i16(a[i * k + kk]);
+            for j in 0..n {
+                let nb = slice_i16(b[kk * n + j]);
+                let idx = i * n + j;
+                for (p, &ap) in na.0.iter().enumerate() {
+                    if ap == 0 {
+                        continue;
+                    }
+                    for (q, &bq) in nb.0.iter().enumerate() {
+                        lanes[p + q][idx] += (ap as i64) * (bq as i64);
+                    }
+                }
+            }
+        }
+    }
+    Ok(WideLanes { lanes })
+}
+
+/// Hardware cost of the scheme for `bits`-wide operands: slices per
+/// operand, nibble products per MAC, and radix lanes (BPCAs) per DPU.
+pub fn scheme_cost(bits: u32) -> (u32, u32, u32) {
+    let slices = bits / 4;
+    (slices, slices * slices, 2 * slices - 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{forall, SplitMix64};
+
+    #[test]
+    fn slice_combine_roundtrip_int16() {
+        for x in [-32768i16, -4097, -1, 0, 1, 255, 4096, 32767] {
+            assert_eq!(combine_i16(slice_i16(x)), x, "{x}");
+        }
+        // Randomized sweep.
+        forall(3, 4000, |rng: &mut SplitMix64| rng.next_u64() as i16, |&x| {
+            combine_i16(slice_i16(x)) == x
+        });
+    }
+
+    #[test]
+    fn nibble_ranges() {
+        for x in [-32768i16, -1, 0, 32767] {
+            let n = slice_i16(x);
+            assert!((0..16).contains(&n.0[0]));
+            assert!((0..16).contains(&n.0[1]));
+            assert!((0..16).contains(&n.0[2]));
+            assert!((-8..8).contains(&n.0[3]));
+        }
+    }
+
+    #[test]
+    fn seven_lane_gemm_matches_direct() {
+        forall(
+            7,
+            40,
+            |rng: &mut SplitMix64| {
+                let (m, k, n) = (rng.range_usize(1, 6), rng.range_usize(1, 8), rng.range_usize(1, 6));
+                let a: Vec<i16> = (0..m * k).map(|_| rng.next_u64() as i16).collect();
+                let b: Vec<i16> = (0..k * n).map(|_| rng.next_u64() as i16).collect();
+                (a, b, m, k, n)
+            },
+            |(a, b, m, k, n)| {
+                let direct = gemm_i16_direct(a, b, *m, *k, *n).unwrap();
+                let lanes = gemm_i16_lanes(a, b, *m, *k, *n).unwrap().weight_and_add();
+                direct == lanes
+            },
+        );
+    }
+
+    #[test]
+    fn scheme_cost_table() {
+        assert_eq!(scheme_cost(8), (2, 4, 3)); // the paper's INT8 design
+        assert_eq!(scheme_cost(16), (4, 16, 7)); // this extension
+        assert_eq!(scheme_cost(4), (1, 1, 1)); // plain INT4 core
+    }
+
+    #[test]
+    fn shape_errors() {
+        assert!(gemm_i16_direct(&[1, 2], &[3, 4], 1, 2, 1).is_ok());
+        assert!(gemm_i16_direct(&[1], &[1, 2], 1, 2, 1).is_err());
+        assert!(gemm_i16_lanes(&[1], &[1], 2, 1, 1).is_err());
+    }
+}

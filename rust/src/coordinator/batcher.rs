@@ -1,0 +1,144 @@
+//! Dynamic batching policy.
+//!
+//! MLP rows are packed into the largest AOT batch variant that the pending
+//! queue fills (or the batching window expires on). Remainders pad with
+//! zero rows — exact for the integer models and invisible to callers.
+
+use crate::coordinator::request::MlpJob;
+
+/// Batch-formation policy over the available AOT batch variants.
+#[derive(Debug, Clone)]
+pub struct BatchPolicy {
+    /// (artifact name, batch size), ascending by batch size.
+    pub variants: Vec<(String, usize)>,
+    /// Maximum time a row may wait for co-batching, seconds.
+    pub max_wait_s: f64,
+}
+
+impl BatchPolicy {
+    /// Policy over `variants` (must be non-empty, ascending batch sizes).
+    pub fn new(variants: Vec<(String, usize)>, max_wait_s: f64) -> Self {
+        debug_assert!(!variants.is_empty());
+        BatchPolicy { variants, max_wait_s }
+    }
+
+    /// Largest variant batch size.
+    pub fn max_batch(&self) -> usize {
+        self.variants.last().map(|(_, b)| *b).unwrap_or(1)
+    }
+
+    /// Choose the variant for `pending` queued rows: the smallest variant
+    /// that fits them all, else the largest (the rest waits for the next
+    /// batch).
+    pub fn pick_variant(&self, pending: usize) -> &(String, usize) {
+        self.variants
+            .iter()
+            .find(|(_, b)| *b >= pending)
+            .unwrap_or_else(|| self.variants.last().expect("non-empty variants"))
+    }
+}
+
+/// A formed micro-batch ready for a worker.
+#[derive(Debug)]
+pub struct MicroBatch {
+    /// Artifact to execute.
+    pub artifact: String,
+    /// Variant batch size (≥ jobs.len()).
+    pub batch: usize,
+    /// The member jobs, order preserved (row i of the output belongs to
+    /// jobs[i]).
+    pub jobs: Vec<MlpJob>,
+}
+
+impl MicroBatch {
+    /// Pack jobs into the flat padded input buffer for the variant.
+    pub fn build_input(&self, row_len: usize) -> Vec<i32> {
+        let mut buf = vec![0i32; self.batch * row_len];
+        for (i, j) in self.jobs.iter().enumerate() {
+            buf[i * row_len..(i + 1) * row_len].copy_from_slice(&j.row);
+        }
+        buf
+    }
+
+    /// Split a flat output into per-job rows (dropping padding rows) and
+    /// deliver them.
+    pub fn deliver(self, output: &[i32]) {
+        let out_len = output.len() / self.batch;
+        for (i, j) in self.jobs.into_iter().enumerate() {
+            let row = output[i * out_len..(i + 1) * out_len].to_vec();
+            // Receiver may have hung up (caller timeout); that's their loss.
+            let _ = j.reply.send(Ok(row));
+        }
+    }
+
+    /// Fail every member (worker error path).
+    pub fn fail(self, msg: &str) {
+        for j in self.jobs {
+            let _ = j.reply.send(Err(crate::Error::Coordinator(msg.to_string())));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::response_slot;
+    use std::time::Instant;
+
+    fn policy() -> BatchPolicy {
+        BatchPolicy::new(
+            vec![("mlp_b1".into(), 1), ("mlp_b8".into(), 8), ("mlp_b32".into(), 32)],
+            0.001,
+        )
+    }
+
+    fn job(v: i32) -> (MlpJob, crate::coordinator::request::Response) {
+        let (tx, rx) = response_slot();
+        (MlpJob { row: vec![v; 4], reply: tx, enqueued: Instant::now() }, rx)
+    }
+
+    #[test]
+    fn picks_smallest_fitting_variant() {
+        let p = policy();
+        assert_eq!(p.pick_variant(1).1, 1);
+        assert_eq!(p.pick_variant(2).1, 8);
+        assert_eq!(p.pick_variant(8).1, 8);
+        assert_eq!(p.pick_variant(9).1, 32);
+        assert_eq!(p.pick_variant(100).1, 32); // clamps to largest
+        assert_eq!(p.max_batch(), 32);
+    }
+
+    #[test]
+    fn input_packing_pads_with_zeros() {
+        let (j1, _r1) = job(7);
+        let (j2, _r2) = job(9);
+        let mb = MicroBatch { artifact: "mlp_b8".into(), batch: 8, jobs: vec![j1, j2] };
+        let buf = mb.build_input(4);
+        assert_eq!(buf.len(), 32);
+        assert_eq!(&buf[0..4], &[7, 7, 7, 7]);
+        assert_eq!(&buf[4..8], &[9, 9, 9, 9]);
+        assert!(buf[8..].iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn delivery_routes_rows_to_owners() {
+        let (j1, r1) = job(1);
+        let (j2, r2) = job(2);
+        let mb = MicroBatch { artifact: "mlp_b8".into(), batch: 8, jobs: vec![j1, j2] };
+        // Fake output: 8 rows of 3.
+        let out: Vec<i32> = (0..24).collect();
+        mb.deliver(&out);
+        assert_eq!(r1.recv().unwrap().unwrap(), vec![0, 1, 2]);
+        assert_eq!(r2.recv().unwrap().unwrap(), vec![3, 4, 5]);
+    }
+
+    #[test]
+    fn failure_propagates_to_all_members() {
+        let (j1, r1) = job(1);
+        let (j2, r2) = job(2);
+        let mb = MicroBatch { artifact: "mlp_b8".into(), batch: 8, jobs: vec![j1, j2] };
+        mb.fail("boom");
+        assert!(r1.recv().unwrap().is_err());
+        assert!(r2.recv().unwrap().is_err());
+    }
+}

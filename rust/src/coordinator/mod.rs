@@ -1,0 +1,24 @@
+//! L3 request coordinator: router + dynamic batcher + worker pool.
+//!
+//! The serving-side contribution layer: GEMM / inference requests enter
+//! through a [`CoordinatorHandle`], a leader thread routes them and packs
+//! same-model requests into the largest AOT batch variant available within
+//! a bounded batching window (dynamic batching, vLLM-router style), and a
+//! pool of worker threads — each owning its *own* PJRT [`Engine`](crate::runtime::Engine)
+//! (PJRT handles are thread-affine) — executes them. Backpressure comes
+//! from bounded queues end to end.
+//!
+//! No tokio in the vendored dependency set: the pool is `std::thread` +
+//! `std::sync::mpsc`, which for a CPU-bound PJRT backend is also the honest
+//! design — there is no I/O to overlap.
+
+pub mod batcher;
+pub mod request;
+pub mod service;
+pub mod stats;
+pub mod worker;
+
+pub use batcher::{BatchPolicy, MicroBatch};
+pub use request::{GemmJob, Job, MlpJob, Response};
+pub use service::{Coordinator, CoordinatorConfig, CoordinatorHandle};
+pub use stats::CoordinatorStats;

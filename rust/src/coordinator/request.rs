@@ -1,0 +1,87 @@
+//! Request/response types flowing through the coordinator.
+
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::time::Instant;
+
+use crate::Result;
+
+/// Response slot: a bounded(1) channel the worker fulfils exactly once.
+pub type Response = Receiver<Result<Vec<i32>>>;
+
+pub(crate) type ResponseTx = SyncSender<Result<Vec<i32>>>;
+
+/// Create a response slot pair.
+pub(crate) fn response_slot() -> (ResponseTx, Response) {
+    sync_channel(1)
+}
+
+/// A raw GEMM request against a named GEMM artifact.
+#[derive(Debug)]
+pub struct GemmJob {
+    /// Artifact name (e.g. "gemm_64x64x64").
+    pub artifact: String,
+    /// Flat row-major A operand (int8 values in i32 wire format).
+    pub a: Vec<i32>,
+    /// Flat row-major B operand.
+    pub b: Vec<i32>,
+    /// Where to deliver the result.
+    pub(crate) reply: ResponseTx,
+    /// Enqueue timestamp (latency accounting).
+    pub(crate) enqueued: Instant,
+}
+
+/// A single-row MLP inference request (the batchable kind).
+#[derive(Debug)]
+pub struct MlpJob {
+    /// One activation row (784 int8 values in i32 wire format).
+    pub row: Vec<i32>,
+    /// Where to deliver the logits (10 × i32).
+    pub(crate) reply: ResponseTx,
+    /// Enqueue timestamp.
+    pub(crate) enqueued: Instant,
+}
+
+/// Anything the leader thread can route.
+#[derive(Debug)]
+pub enum Job {
+    /// Unbatched GEMM execution.
+    Gemm(GemmJob),
+    /// Batchable MLP row.
+    Mlp(MlpJob),
+    /// Drain and stop (sent by [`super::Coordinator::shutdown`]).
+    Shutdown,
+}
+
+impl Job {
+    /// Age of the job since enqueue, seconds (Shutdown has no age).
+    pub fn age_s(&self, now: Instant) -> f64 {
+        match self {
+            Job::Gemm(g) => now.duration_since(g.enqueued).as_secs_f64(),
+            Job::Mlp(m) => now.duration_since(m.enqueued).as_secs_f64(),
+            Job::Shutdown => 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn response_slot_roundtrip() {
+        let (tx, rx) = response_slot();
+        tx.send(Ok(vec![1, 2, 3])).unwrap();
+        assert_eq!(rx.recv().unwrap().unwrap(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn job_age_increases() {
+        let (tx, _rx) = response_slot();
+        let j = Job::Mlp(MlpJob { row: vec![0; 4], reply: tx, enqueued: Instant::now() });
+        let a1 = j.age_s(Instant::now());
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let a2 = j.age_s(Instant::now());
+        assert!(a2 > a1);
+        assert_eq!(Job::Shutdown.age_s(Instant::now()), 0.0);
+    }
+}

@@ -1,0 +1,260 @@
+//! The coordinator service: leader thread, routing, lifecycle.
+
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::batcher::{BatchPolicy, MicroBatch};
+use crate::coordinator::request::{response_slot, GemmJob, Job, MlpJob, Response};
+use crate::coordinator::stats::CoordinatorStats;
+use crate::coordinator::worker::{run_worker, WorkItem};
+use crate::runtime::Manifest;
+use crate::{Error, Result};
+
+/// Coordinator configuration.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    /// Directory with `manifest.txt` + HLO artifacts.
+    pub artifact_dir: String,
+    /// Worker threads (each owns a PJRT engine).
+    pub workers: usize,
+    /// Dynamic-batching window, seconds.
+    pub max_batch_wait_s: f64,
+    /// Ingress queue depth (backpressure bound).
+    pub queue_depth: usize,
+    /// Compile all artifacts at worker start (first-request latency vs
+    /// startup time trade).
+    pub warmup: bool,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            artifact_dir: "artifacts".into(),
+            workers: 2,
+            max_batch_wait_s: 0.002,
+            queue_depth: 1024,
+            warmup: true,
+        }
+    }
+}
+
+/// Cloneable client handle for submitting requests.
+#[derive(Clone)]
+pub struct CoordinatorHandle {
+    tx: SyncSender<Job>,
+    stats: Arc<CoordinatorStats>,
+    mlp_row_len: usize,
+}
+
+impl CoordinatorHandle {
+    /// Submit a GEMM against a named artifact; returns the response slot.
+    pub fn submit_gemm(&self, artifact: &str, a: Vec<i32>, b: Vec<i32>) -> Result<Response> {
+        let (reply, rx) = response_slot();
+        self.stats.requests.fetch_add(1, Ordering::Relaxed);
+        self.tx
+            .send(Job::Gemm(GemmJob {
+                artifact: artifact.to_string(),
+                a,
+                b,
+                reply,
+                enqueued: Instant::now(),
+            }))
+            .map_err(|_| Error::Coordinator("coordinator stopped".into()))?;
+        Ok(rx)
+    }
+
+    /// Submit one MLP row; returns the response slot.
+    pub fn submit_mlp(&self, row: Vec<i32>) -> Result<Response> {
+        if row.len() != self.mlp_row_len {
+            return Err(Error::Shape(format!(
+                "mlp row has {} elements, expected {}",
+                row.len(),
+                self.mlp_row_len
+            )));
+        }
+        let (reply, rx) = response_slot();
+        self.stats.requests.fetch_add(1, Ordering::Relaxed);
+        self.tx
+            .send(Job::Mlp(MlpJob { row, reply, enqueued: Instant::now() }))
+            .map_err(|_| Error::Coordinator("coordinator stopped".into()))?;
+        Ok(rx)
+    }
+
+    /// Blocking MLP inference convenience.
+    pub fn infer_mlp(&self, row: Vec<i32>) -> Result<Vec<i32>> {
+        self.submit_mlp(row)?
+            .recv()
+            .map_err(|_| Error::Coordinator("response dropped".into()))?
+    }
+
+    /// Blocking GEMM convenience.
+    pub fn gemm(&self, artifact: &str, a: Vec<i32>, b: Vec<i32>) -> Result<Vec<i32>> {
+        self.submit_gemm(artifact, a, b)?
+            .recv()
+            .map_err(|_| Error::Coordinator("response dropped".into()))?
+    }
+
+    /// Shared metrics.
+    pub fn stats(&self) -> &CoordinatorStats {
+        &self.stats
+    }
+}
+
+/// The running coordinator (leader + workers). Dropping it shuts down.
+pub struct Coordinator {
+    handle: CoordinatorHandle,
+    leader: Option<JoinHandle<()>>,
+    tx: SyncSender<Job>,
+}
+
+impl Coordinator {
+    /// Start the service: validates the manifest, spawns workers + leader.
+    pub fn start(cfg: CoordinatorConfig) -> Result<Self> {
+        // Validate the manifest up front (fail fast with a good error).
+        let manifest = Manifest::load(&cfg.artifact_dir)?;
+        let variants = manifest.mlp_batch_variants();
+        if variants.is_empty() {
+            return Err(Error::Config("no mlp_b* artifacts in manifest".into()));
+        }
+        let mlp_row_len = manifest.get(&variants[0].0)?.inputs[0].elements() / variants[0].1;
+        let policy = BatchPolicy::new(variants, cfg.max_batch_wait_s);
+
+        let stats = Arc::new(CoordinatorStats::default());
+        let (tx, rx) = sync_channel::<Job>(cfg.queue_depth);
+
+        // Workers.
+        let mut worker_txs = Vec::with_capacity(cfg.workers.max(1));
+        let mut joins = Vec::new();
+        let (ready_tx, ready_rx) = sync_channel::<()>(cfg.workers.max(1));
+        for id in 0..cfg.workers.max(1) {
+            let (wtx, wrx) = sync_channel::<WorkItem>(cfg.queue_depth);
+            let dir = cfg.artifact_dir.clone();
+            let st = stats.clone();
+            let warm = cfg.warmup;
+            let rtx = ready_tx.clone();
+            joins.push(std::thread::Builder::new()
+                .name(format!("spoga-worker-{id}"))
+                .spawn(move || run_worker(id, dir, warm, rtx, wrx, st))
+                .map_err(|e| Error::Coordinator(format!("spawn worker: {e}")))?);
+            worker_txs.push(wtx);
+        }
+        drop(ready_tx);
+        // Block until every worker finished (possibly warm) engine init.
+        for _ in 0..cfg.workers.max(1) {
+            let _ = ready_rx.recv();
+        }
+
+        // Leader.
+        let leader = {
+            std::thread::Builder::new()
+                .name("spoga-leader".into())
+                .spawn(move || run_leader(rx, worker_txs, policy, joins))
+                .map_err(|e| Error::Coordinator(format!("spawn leader: {e}")))?
+        };
+
+        let handle = CoordinatorHandle { tx: tx.clone(), stats, mlp_row_len };
+        Ok(Coordinator { handle, leader: Some(leader), tx })
+    }
+
+    /// A cloneable submission handle.
+    pub fn handle(&self) -> CoordinatorHandle {
+        self.handle.clone()
+    }
+
+    /// Graceful shutdown: drain queues, stop workers, join threads.
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(Job::Shutdown);
+        if let Some(j) = self.leader.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Job::Shutdown);
+        if let Some(j) = self.leader.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Leader loop: route GEMMs round-robin; gather MLP rows into micro-batches
+/// bounded by the batching window and the largest variant.
+fn run_leader(
+    rx: Receiver<Job>,
+    worker_txs: Vec<SyncSender<WorkItem>>,
+    policy: BatchPolicy,
+    worker_joins: Vec<JoinHandle<()>>,
+) {
+    let mut next_worker = 0usize;
+    let dispatch = |item: WorkItem, next: &mut usize| {
+        let n = worker_txs.len();
+        let _ = worker_txs[*next % n].send(item);
+        *next = (*next + 1) % n;
+    };
+
+    let window = Duration::from_secs_f64(policy.max_wait_s);
+    let mut pending: Vec<MlpJob> = Vec::new();
+    let mut shutdown = false;
+
+    while !shutdown {
+        // Phase 1: block for the first job.
+        match rx.recv() {
+            Err(_) => break,
+            Ok(Job::Shutdown) => break,
+            Ok(Job::Gemm(g)) => {
+                dispatch(WorkItem::Gemm(g), &mut next_worker);
+                continue;
+            }
+            Ok(Job::Mlp(m)) => pending.push(m),
+        }
+
+        // Phase 2: batching window — gather more rows until it expires or
+        // the largest variant fills.
+        let deadline = Instant::now() + window;
+        while pending.len() < policy.max_batch() {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(Job::Mlp(m)) => pending.push(m),
+                Ok(Job::Gemm(g)) => dispatch(WorkItem::Gemm(g), &mut next_worker),
+                Ok(Job::Shutdown) => {
+                    shutdown = true;
+                    break;
+                }
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => {
+                    shutdown = true;
+                    break;
+                }
+            }
+        }
+
+        // Phase 3: form + dispatch micro-batches (possibly several if a
+        // burst exceeded the largest variant).
+        while !pending.is_empty() {
+            let take = pending.len().min(policy.max_batch());
+            let (artifact, batch) = policy.pick_variant(take).clone();
+            let jobs: Vec<MlpJob> = pending.drain(..take.min(batch)).collect();
+            dispatch(WorkItem::Batch(MicroBatch { artifact, batch, jobs }), &mut next_worker);
+        }
+    }
+
+    // Drain-and-stop: fail anything still queued, stop workers, join.
+    for j in pending {
+        let _ = j.reply.send(Err(Error::Coordinator("shutdown".into())));
+    }
+    for tx in &worker_txs {
+        let _ = tx.send(WorkItem::Shutdown);
+    }
+    drop(worker_txs);
+    for j in worker_joins {
+        let _ = j.join();
+    }
+}

@@ -1,0 +1,142 @@
+//! Coordinator metrics: counters + log-bucket latency histogram.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Number of logarithmic latency buckets (1 µs × 2^i, i < BUCKETS).
+const BUCKETS: usize = 24;
+
+/// Lock-free metrics shared by leader/workers/handles.
+#[derive(Debug, Default)]
+pub struct CoordinatorStats {
+    /// Requests accepted.
+    pub requests: AtomicU64,
+    /// Requests completed successfully.
+    pub completed: AtomicU64,
+    /// Requests failed.
+    pub failed: AtomicU64,
+    /// Micro-batches executed.
+    pub batches: AtomicU64,
+    /// Sum of micro-batch member counts (for mean occupancy).
+    pub batched_rows: AtomicU64,
+    /// Sum of padded slots (wasted work due to padding).
+    pub padded_rows: AtomicU64,
+    /// Latency histogram (µs, log2 buckets).
+    lat_hist: [AtomicU64; BUCKETS],
+    /// Total latency in µs.
+    lat_sum_us: AtomicU64,
+}
+
+impl CoordinatorStats {
+    /// Record a completed request's end-to-end latency.
+    pub fn record_latency(&self, seconds: f64) {
+        let us = (seconds * 1e6).max(0.0) as u64;
+        self.lat_sum_us.fetch_add(us, Ordering::Relaxed);
+        let bucket = (64 - us.max(1).leading_zeros() as usize - 1).min(BUCKETS - 1);
+        self.lat_hist[bucket].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Approximate latency percentile (bucket upper bound), seconds.
+    pub fn latency_percentile(&self, p: f64) -> f64 {
+        let total: u64 = self.lat_hist.iter().map(|b| b.load(Ordering::Relaxed)).sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (total as f64 * p).ceil() as u64;
+        let mut seen = 0;
+        for (i, b) in self.lat_hist.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return (1u64 << (i + 1)) as f64 * 1e-6;
+            }
+        }
+        (1u64 << BUCKETS) as f64 * 1e-6
+    }
+
+    /// Mean end-to-end latency, seconds.
+    pub fn latency_mean(&self) -> f64 {
+        let n = self.completed.load(Ordering::Relaxed);
+        if n == 0 {
+            return 0.0;
+        }
+        self.lat_sum_us.load(Ordering::Relaxed) as f64 * 1e-6 / n as f64
+    }
+
+    /// Mean rows per micro-batch.
+    pub fn mean_batch_occupancy(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            return 0.0;
+        }
+        self.batched_rows.load(Ordering::Relaxed) as f64 / b as f64
+    }
+
+    /// Fraction of executed rows that were padding.
+    pub fn padding_fraction(&self) -> f64 {
+        let rows = self.batched_rows.load(Ordering::Relaxed);
+        let pad = self.padded_rows.load(Ordering::Relaxed);
+        if rows + pad == 0 {
+            return 0.0;
+        }
+        pad as f64 / (rows + pad) as f64
+    }
+
+    /// One-line human-readable summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "requests={} completed={} failed={} batches={} occupancy={:.2} padding={:.1}% \
+             lat(mean/p50/p99)={:.1}/{:.1}/{:.1} µs",
+            self.requests.load(Ordering::Relaxed),
+            self.completed.load(Ordering::Relaxed),
+            self.failed.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.mean_batch_occupancy(),
+            self.padding_fraction() * 100.0,
+            self.latency_mean() * 1e6,
+            self.latency_percentile(0.5) * 1e6,
+            self.latency_percentile(0.99) * 1e6,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_percentiles_ordered() {
+        let s = CoordinatorStats::default();
+        for us in [10.0, 20.0, 50.0, 100.0, 5000.0] {
+            s.record_latency(us * 1e-6);
+        }
+        let p50 = s.latency_percentile(0.5);
+        let p99 = s.latency_percentile(0.99);
+        assert!(p50 <= p99);
+        assert!(p99 >= 5e-3 / 2.0); // the 5 ms outlier lands in a high bucket
+    }
+
+    #[test]
+    fn empty_stats_are_zero() {
+        let s = CoordinatorStats::default();
+        assert_eq!(s.latency_percentile(0.99), 0.0);
+        assert_eq!(s.latency_mean(), 0.0);
+        assert_eq!(s.mean_batch_occupancy(), 0.0);
+        assert_eq!(s.padding_fraction(), 0.0);
+    }
+
+    #[test]
+    fn occupancy_and_padding() {
+        let s = CoordinatorStats::default();
+        s.batches.fetch_add(2, Ordering::Relaxed);
+        s.batched_rows.fetch_add(6, Ordering::Relaxed);
+        s.padded_rows.fetch_add(2, Ordering::Relaxed);
+        assert!((s.mean_batch_occupancy() - 3.0).abs() < 1e-9);
+        assert!((s.padding_fraction() - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summary_contains_counts() {
+        let s = CoordinatorStats::default();
+        s.requests.fetch_add(5, Ordering::Relaxed);
+        assert!(s.summary().contains("requests=5"));
+    }
+}

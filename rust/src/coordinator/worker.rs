@@ -1,0 +1,111 @@
+//! Worker threads: each owns a PJRT engine and executes dispatched work.
+
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::coordinator::batcher::MicroBatch;
+use crate::coordinator::request::GemmJob;
+use crate::coordinator::stats::CoordinatorStats;
+use crate::runtime::Engine;
+
+/// Work items dispatched by the leader to a worker.
+#[derive(Debug)]
+pub enum WorkItem {
+    /// A packed MLP micro-batch.
+    Batch(MicroBatch),
+    /// An unbatched GEMM.
+    Gemm(GemmJob),
+    /// Stop the worker.
+    Shutdown,
+}
+
+/// Worker main loop: construct the engine *inside* the thread (PJRT handles
+/// are not `Send`), then serve work items until shutdown.
+pub fn run_worker(
+    id: usize,
+    artifact_dir: String,
+    warmup: bool,
+    ready: std::sync::mpsc::SyncSender<()>,
+    rx: Receiver<WorkItem>,
+    stats: Arc<CoordinatorStats>,
+) {
+    let engine_init = Engine::new(&artifact_dir).and_then(|mut e| {
+        if warmup {
+            // Compile every artifact before serving so first requests do not
+            // pay PJRT compilation latency.
+            e.warmup_all()?;
+        }
+        Ok(e)
+    });
+    // Signal readiness (successful or not) so Coordinator::start can block
+    // until the fleet is warm.
+    let _ = ready.send(());
+    let mut engine = match engine_init {
+        Ok(e) => e,
+        Err(e) => {
+            // Fail every item we receive; the handle surfaces the error.
+            eprintln!("worker {id}: engine init failed: {e}");
+            for item in rx {
+                match item {
+                    WorkItem::Batch(b) => b.fail(&format!("worker {id} has no engine: {e}")),
+                    WorkItem::Gemm(g) => {
+                        let _ = g
+                            .reply
+                            .send(Err(crate::Error::Coordinator(format!("no engine: {e}"))));
+                    }
+                    WorkItem::Shutdown => break,
+                }
+            }
+            return;
+        }
+    };
+
+    for item in rx {
+        match item {
+            WorkItem::Shutdown => break,
+            WorkItem::Gemm(job) => {
+                let t0 = job.enqueued;
+                let res = engine
+                    .execute_i32_single(&job.artifact, &[&job.a, &job.b])
+                    .map_err(|e| crate::Error::Coordinator(e.to_string()));
+                match &res {
+                    Ok(_) => {
+                        stats.completed.fetch_add(1, Ordering::Relaxed);
+                        stats.record_latency(t0.elapsed().as_secs_f64());
+                    }
+                    Err(_) => {
+                        stats.failed.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                let _ = job.reply.send(res);
+            }
+            WorkItem::Batch(batch) => {
+                let members = batch.jobs.len() as u64;
+                let padding = (batch.batch - batch.jobs.len()) as u64;
+                let row_len = batch.jobs.first().map(|j| j.row.len()).unwrap_or(0);
+                let input = batch.build_input(row_len);
+                let started = Instant::now();
+                match engine.execute_i32_single(&batch.artifact, &[&input]) {
+                    Ok(out) => {
+                        stats.batches.fetch_add(1, Ordering::Relaxed);
+                        stats.batched_rows.fetch_add(members, Ordering::Relaxed);
+                        stats.padded_rows.fetch_add(padding, Ordering::Relaxed);
+                        stats.completed.fetch_add(members, Ordering::Relaxed);
+                        let now = Instant::now();
+                        for j in &batch.jobs {
+                            stats.record_latency(now.duration_since(j.enqueued).as_secs_f64());
+                        }
+                        let _ = started;
+                        batch.deliver(&out);
+                    }
+                    Err(e) => {
+                        stats.failed.fetch_add(members, Ordering::Relaxed);
+                        batch.fail(&format!("worker {id} execute failed: {e}"));
+                    }
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,76 @@
+//! Analog-to-digital converter model — paper **Table II** (ADC rows).
+//!
+//! Each architecture digitizes dot-product results with one ADC per output
+//! channel at the symbol rate. The paper sources three design points:
+//!
+//! | BR (GS/s) | Area (mm²) | Power (mW) | source |
+//! |---|---|---|---|
+//! | 1  | 0.002 | 2.55 | [13] Oh et al., 8b 1GS/s SAR-flash |
+//! | 5  | 0.021 | 11   | [14] Shu, 6b 3GS/s dynamic flash (scaled) |
+//! | 10 | 0.103 | 29   | [15] Guo et al., 5GS/s TI-SAR (interleaved ×2) |
+
+use crate::units::DataRate;
+
+/// ADC design point (one of the paper's Table II rows).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Adc {
+    /// Sample rate this converter design point supports.
+    pub rate: DataRate,
+    /// Die area, mm².
+    pub area_mm2: f64,
+    /// Power, mW.
+    pub power_mw: f64,
+    /// Nominal output resolution, bits.
+    pub bits: u32,
+}
+
+impl Adc {
+    /// Table II design point for data rate `dr`.
+    pub fn for_rate(dr: DataRate) -> Self {
+        match dr {
+            DataRate::Gs1 => Adc { rate: dr, area_mm2: 0.002, power_mw: 2.55, bits: 8 },
+            DataRate::Gs5 => Adc { rate: dr, area_mm2: 0.021, power_mw: 11.0, bits: 8 },
+            DataRate::Gs10 => Adc { rate: dr, area_mm2: 0.103, power_mw: 29.0, bits: 8 },
+        }
+    }
+
+    /// Energy per conversion, pJ.
+    pub fn energy_per_conversion_pj(&self) -> f64 {
+        // mW / GHz = pJ.
+        self.power_mw / self.rate.gs()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_adc_rows_pinned() {
+        let a1 = Adc::for_rate(DataRate::Gs1);
+        assert_eq!((a1.area_mm2, a1.power_mw), (0.002, 2.55));
+        let a5 = Adc::for_rate(DataRate::Gs5);
+        assert_eq!((a5.area_mm2, a5.power_mw), (0.021, 11.0));
+        let a10 = Adc::for_rate(DataRate::Gs10);
+        assert_eq!((a10.area_mm2, a10.power_mw), (0.103, 29.0));
+    }
+
+    #[test]
+    fn faster_adcs_cost_more_power_and_area() {
+        let (a1, a5, a10) = (
+            Adc::for_rate(DataRate::Gs1),
+            Adc::for_rate(DataRate::Gs5),
+            Adc::for_rate(DataRate::Gs10),
+        );
+        assert!(a1.power_mw < a5.power_mw && a5.power_mw < a10.power_mw);
+        assert!(a1.area_mm2 < a5.area_mm2 && a5.area_mm2 < a10.area_mm2);
+    }
+
+    #[test]
+    fn energy_per_conversion_reasonable() {
+        // 2.55 mW / 1 GS/s = 2.55 pJ.
+        assert!((Adc::for_rate(DataRate::Gs1).energy_per_conversion_pj() - 2.55).abs() < 1e-9);
+        // 29 mW / 10 GS/s = 2.9 pJ.
+        assert!((Adc::for_rate(DataRate::Gs10).energy_per_conversion_pj() - 2.9).abs() < 1e-9);
+    }
+}

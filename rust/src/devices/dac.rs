@@ -1,0 +1,70 @@
+//! Digital-to-analog converter model — paper **Table II** (DAC rows).
+//!
+//! DACs drive the MRR modulators (one per modulated value per symbol) and
+//! reprogram weight banks. Table II design points:
+//!
+//! | BR (GS/s) | Area (mm²) | Power (mW) | source |
+//! |---|---|---|---|
+//! | 1  | 0.00007 | 0.12 | [16] Eslahi et al., 4b 22nm FDSOI |
+//! | 5  | 0.06    | 26   | [17] Sedighi et al., 8b 5GS/s |
+//! | 10 | 0.06    | 30   | [18] Juanda et al., 4b 10GS/s single-core |
+
+use crate::units::DataRate;
+
+/// DAC design point (one of the paper's Table II rows).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Dac {
+    /// Sample rate this converter design point supports.
+    pub rate: DataRate,
+    /// Die area, mm².
+    pub area_mm2: f64,
+    /// Power, mW.
+    pub power_mw: f64,
+    /// Nominal resolution, bits (4-bit analog operands).
+    pub bits: u32,
+}
+
+impl Dac {
+    /// Table II design point for data rate `dr`.
+    pub fn for_rate(dr: DataRate) -> Self {
+        match dr {
+            DataRate::Gs1 => Dac { rate: dr, area_mm2: 0.00007, power_mw: 0.12, bits: 4 },
+            DataRate::Gs5 => Dac { rate: dr, area_mm2: 0.06, power_mw: 26.0, bits: 8 },
+            DataRate::Gs10 => Dac { rate: dr, area_mm2: 0.06, power_mw: 30.0, bits: 4 },
+        }
+    }
+
+    /// Energy per conversion, pJ.
+    pub fn energy_per_conversion_pj(&self) -> f64 {
+        self.power_mw / self.rate.gs()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_dac_rows_pinned() {
+        let d1 = Dac::for_rate(DataRate::Gs1);
+        assert_eq!((d1.area_mm2, d1.power_mw), (0.00007, 0.12));
+        let d5 = Dac::for_rate(DataRate::Gs5);
+        assert_eq!((d5.area_mm2, d5.power_mw), (0.06, 26.0));
+        let d10 = Dac::for_rate(DataRate::Gs10);
+        assert_eq!((d10.area_mm2, d10.power_mw), (0.06, 30.0));
+    }
+
+    #[test]
+    fn one_gs_dac_is_tiny() {
+        let d = Dac::for_rate(DataRate::Gs1);
+        assert!(d.area_mm2 < 1e-4);
+        assert!(d.power_mw < 1.0);
+    }
+
+    #[test]
+    fn energy_per_conversion_monotonic_sane() {
+        // 0.12 pJ at 1 GS/s; 3 pJ at 10 GS/s.
+        assert!((Dac::for_rate(DataRate::Gs1).energy_per_conversion_pj() - 0.12).abs() < 1e-9);
+        assert!((Dac::for_rate(DataRate::Gs10).energy_per_conversion_pj() - 3.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,68 @@
+//! DEAS — Digital Electronic Shifter-and-Adder block (baseline architectures).
+//!
+//! Prior bit-sliced designs (paper §II-C/D, Fig. 2(a)) post-process the four
+//! INT4 intermediate matrices digitally: each of the four values is shifted
+//! by its radix weight (<<8, <<4, <<4, <<0) and the four are summed. SPOGA
+//! eliminates this block entirely; it exists here so the baselines pay its
+//! latency/energy/area, and for the `ablation_dataflow` bench which forces it
+//! back onto SPOGA.
+
+use crate::units::DataRate;
+
+/// Parametric shifter+adder post-processing unit (per output channel).
+#[derive(Debug, Clone, Copy)]
+pub struct Deas {
+    /// Energy per final output assembled (4 shifts + 3 adds at 16-bit), pJ.
+    /// ~45 nm-class digital logic: ≈0.05 pJ per 16-bit add/shift pair.
+    pub energy_per_output_pj: f64,
+    /// Area per DEAS unit, mm².
+    pub area_mm2: f64,
+    /// Pipeline latency through the unit, cycles of the symbol clock.
+    pub latency_cycles: u64,
+}
+
+impl Default for Deas {
+    fn default() -> Self {
+        Deas { energy_per_output_pj: 0.35, area_mm2: 4.0e-4, latency_cycles: 2 }
+    }
+}
+
+impl Deas {
+    /// Power when assembling one output per symbol at rate `dr`, mW.
+    pub fn power_mw(&self, dr: DataRate) -> f64 {
+        // pJ × GHz = mW.
+        self.energy_per_output_pj * dr.gs()
+    }
+
+    /// Latency contribution in seconds for a pipeline of `outputs` results
+    /// (pipelined: fill latency + one output per cycle is already counted by
+    /// the core schedule; only the fill is extra).
+    pub fn fill_latency_s(&self, dr: DataRate) -> f64 {
+        self.latency_cycles as f64 * dr.step_seconds()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn power_scales_with_rate() {
+        let d = Deas::default();
+        assert!((d.power_mw(DataRate::Gs10) / d.power_mw(DataRate::Gs1) - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fill_latency_is_cycles_over_rate() {
+        let d = Deas::default();
+        assert!((d.fill_latency_s(DataRate::Gs1) - 2e-9).abs() < 1e-15);
+        assert!((d.fill_latency_s(DataRate::Gs10) - 0.2e-9).abs() < 1e-15);
+    }
+
+    #[test]
+    fn default_magnitudes_sane() {
+        let d = Deas::default();
+        assert!(d.energy_per_output_pj > 0.0 && d.energy_per_output_pj < 10.0);
+        assert!(d.area_mm2 > 0.0 && d.area_mm2 < 0.01);
+    }
+}

@@ -1,0 +1,67 @@
+//! Laser-diode model.
+//!
+//! Each GEMM core employs N (baselines) or 4 (SPOGA OAME carrier set) laser
+//! diodes generating distinct wavelength channels (paper §II-A). Wall-plug
+//! efficiency converts the *optical* power demanded by the link budget into
+//! the *electrical* power the FPS/W metric charges.
+
+use crate::units::{dbm_to_mw, mw_to_dbm};
+
+/// Parametric laser-diode model.
+#[derive(Debug, Clone, Copy)]
+pub struct Laser {
+    /// Optical output power per wavelength channel, dBm.
+    pub power_dbm: f64,
+    /// Wall-plug efficiency (optical out / electrical in). Refs [1][12]
+    /// assume 0.2 for integrated DFB combs.
+    pub wall_plug_efficiency: f64,
+    /// Footprint per diode, mm² (hybrid-integrated III-V on Si).
+    pub area_mm2: f64,
+}
+
+impl Laser {
+    /// Laser with literature-default efficiency/footprint at `power_dbm`.
+    pub fn with_power_dbm(power_dbm: f64) -> Self {
+        Laser { power_dbm, wall_plug_efficiency: 0.2, area_mm2: 2.5e-2 }
+    }
+
+    /// Optical output power, mW.
+    pub fn optical_power_mw(&self) -> f64 {
+        dbm_to_mw(self.power_dbm)
+    }
+
+    /// Electrical power drawn, mW.
+    pub fn electrical_power_mw(&self) -> f64 {
+        self.optical_power_mw() / self.wall_plug_efficiency
+    }
+
+    /// Build the laser that *just closes* a link budget requiring
+    /// `required_optical_mw` at the chip input.
+    pub fn for_required_optical_mw(required_optical_mw: f64) -> Self {
+        Self::with_power_dbm(mw_to_dbm(required_optical_mw))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn electrical_exceeds_optical_by_efficiency() {
+        let l = Laser::with_power_dbm(10.0);
+        assert!((l.optical_power_mw() - 10.0).abs() < 1e-9);
+        assert!((l.electrical_power_mw() - 50.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn for_required_optical_roundtrips() {
+        let l = Laser::for_required_optical_mw(3.2);
+        assert!((l.optical_power_mw() - 3.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_dbm_is_one_mw() {
+        let l = Laser::with_power_dbm(0.0);
+        assert!((l.optical_power_mw() - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,30 @@
+//! Parametric models of the photonic and electronic components that compose
+//! the accelerators compared in the paper.
+//!
+//! Every model here is *behavioural + parametric*: it exposes the area, power
+//! and (where relevant) latency/energy figures that the transaction-level
+//! simulator ([`crate::sim`]) aggregates, plus the loss/sensitivity figures
+//! the link-budget solver ([`crate::optics`]) consumes. Default parameter
+//! values come from the paper (Table II for converters) and from the device
+//! assumptions of its modelling references ([1] SCONNA, [2] TCAD'22,
+//! [12] Al-Qadasi et al.); each constant documents its provenance.
+
+pub mod adc;
+pub mod bpca;
+pub mod dac;
+pub mod deas;
+pub mod laser;
+pub mod mrr;
+pub mod photodetector;
+pub mod splitter;
+pub mod sram;
+
+pub use adc::Adc;
+pub use bpca::Bpca;
+pub use dac::Dac;
+pub use deas::Deas;
+pub use laser::Laser;
+pub use mrr::{Mrr, MrrRole};
+pub use photodetector::BalancedPhotodetector;
+pub use splitter::SplitterTree;
+pub use sram::SramBuffer;

@@ -1,0 +1,129 @@
+//! Microring resonator (MRR) model.
+//!
+//! MRRs appear in two roles in incoherent photonic GEMM cores (paper §II-A):
+//! as **modulators** (MRMs) imprinting input values onto wavelength channels,
+//! and as **weight-bank** elements applying the weight factor. Both roles
+//! share the same physical footprint/tuning model; they differ in drive
+//! electronics (an MRM needs a DAC at the symbol rate, a weight MRR is
+//! reprogrammed only when weights change).
+
+use crate::units::DataRate;
+
+/// Role an MRR plays in a GEMM core; affects drive power accounting.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MrrRole {
+    /// Input modulator (MRM) — driven by a DAC every symbol.
+    Modulator,
+    /// Weight-bank ring — reprogrammed at weight-update cadence only.
+    Weight,
+    /// Passive filter/mux ring (aggregation blocks).
+    Filter,
+}
+
+/// Parametric microring model.
+///
+/// Loss figures feed [`crate::optics::link_budget`]; power/area figures feed
+/// the per-core inventories in [`crate::arch`].
+#[derive(Debug, Clone, Copy)]
+pub struct Mrr {
+    /// Footprint including heater + drive pads, in mm².
+    /// ~20 µm pitch ring with thermal tuner ≈ 1.5e-4 mm² (ref [12] assumes
+    /// 10 µm radius rings; we include pad overhead).
+    pub area_mm2: f64,
+    /// Average thermal-tuning power per ring, mW. Refs [1][2] budget
+    /// 0.06–0.3 mW/ring for stabilization; we use the mid value.
+    pub tuning_power_mw: f64,
+    /// Insertion loss when the signal is *dropped/modulated* by this ring, dB.
+    pub insertion_loss_db: f64,
+    /// Through (pass-by) loss for non-resonant wavelengths, dB.
+    /// This is the term that multiplies with vector size N in the budget.
+    pub through_loss_db: f64,
+    /// Role (affects drive-energy accounting, not optics).
+    pub role: MrrRole,
+}
+
+impl Mrr {
+    /// Modulator-role MRR with literature-default parameters.
+    pub fn modulator() -> Self {
+        Mrr {
+            area_mm2: 1.5e-4,
+            tuning_power_mw: 0.12,
+            insertion_loss_db: 1.0, // OOK/PAM MRM IL, ref [2]
+            through_loss_db: 0.02,
+            role: MrrRole::Modulator,
+        }
+    }
+
+    /// Weight-bank MRR with literature-default parameters.
+    pub fn weight() -> Self {
+        Mrr {
+            area_mm2: 1.5e-4,
+            tuning_power_mw: 0.12,
+            insertion_loss_db: 1.0,
+            through_loss_db: 0.02,
+            role: MrrRole::Weight,
+        }
+    }
+
+    /// Passive filter ring (mux/demux) with lower drop loss.
+    pub fn filter() -> Self {
+        Mrr {
+            area_mm2: 1.5e-4,
+            tuning_power_mw: 0.06,
+            insertion_loss_db: 0.5,
+            through_loss_db: 0.02,
+            role: MrrRole::Filter,
+        }
+    }
+
+    /// Dynamic drive power in mW for this ring at symbol rate `dr`.
+    ///
+    /// Modulators pay CV²f drive power scaling linearly with the symbol rate
+    /// (≈0.05 mW per GS/s for a depletion-mode MRM, ref [2]); weight/filter
+    /// rings only pay tuning power, which is already accounted separately.
+    pub fn drive_power_mw(&self, dr: DataRate) -> f64 {
+        match self.role {
+            MrrRole::Modulator => 0.05 * dr.gs(),
+            MrrRole::Weight | MrrRole::Filter => 0.0,
+        }
+    }
+
+    /// Total standing power (tuning + static bias), mW.
+    pub fn static_power_mw(&self) -> f64 {
+        self.tuning_power_mw
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_losses_are_positive_and_small() {
+        for m in [Mrr::modulator(), Mrr::weight(), Mrr::filter()] {
+            assert!(m.insertion_loss_db > 0.0 && m.insertion_loss_db < 3.0);
+            assert!(m.through_loss_db > 0.0 && m.through_loss_db < 0.1);
+            assert!(m.area_mm2 > 0.0);
+        }
+    }
+
+    #[test]
+    fn modulator_drive_power_scales_with_rate() {
+        let m = Mrr::modulator();
+        let p1 = m.drive_power_mw(DataRate::Gs1);
+        let p10 = m.drive_power_mw(DataRate::Gs10);
+        assert!(p10 > p1);
+        assert!((p10 / p1 - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn weight_ring_has_no_symbol_rate_drive_power() {
+        assert_eq!(Mrr::weight().drive_power_mw(DataRate::Gs10), 0.0);
+        assert_eq!(Mrr::filter().drive_power_mw(DataRate::Gs10), 0.0);
+    }
+
+    #[test]
+    fn filter_drop_loss_below_modulator_loss() {
+        assert!(Mrr::filter().insertion_loss_db < Mrr::modulator().insertion_loss_db);
+    }
+}

@@ -1,0 +1,119 @@
+//! Balanced photodetector (BPD) model.
+//!
+//! The summation block of every incoherent GEMM core couples a BPD with
+//! either a trans-impedance (TIA) or a time-integrating receiver
+//! (paper §II-A, block 5). The BPD subtracts the +ve and −ve rail
+//! photocurrents, which is how signed values are represented optically.
+//!
+//! The *sensitivity* (minimum received optical power for the target analog
+//! resolution) anchors the link budget. Two receiver families matter here:
+//!
+//! * **TIA receiver** (HOLYLIGHT, DEAPCNN): noise bandwidth tracks the symbol
+//!   rate, so sensitivity degrades as `10·log10(BR)` — doubling the rate
+//!   costs 3 dB.
+//! * **Time-integrating receiver / BPCA** (SPOGA): charge integration over
+//!   the symbol slot narrows the effective noise bandwidth; the sensitivity
+//!   penalty empirically follows `≈5·log10(BR)` (see DESIGN.md §5.1 — this is
+//!   the slope the paper's own Table I implies for the MWA rows).
+
+use crate::units::DataRate;
+
+/// Receiver family attached to a balanced photodetector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReceiverKind {
+    /// Trans-impedance amplifier front end (baseline architectures).
+    Tia,
+    /// Time-integrating front end (SPOGA's BPCA).
+    TimeIntegrating,
+}
+
+/// Balanced photodetector + receiver front-end model.
+#[derive(Debug, Clone, Copy)]
+pub struct BalancedPhotodetector {
+    /// Receiver family (sets the sensitivity-vs-rate law).
+    pub kind: ReceiverKind,
+    /// Sensitivity at 1 GS/s for 4-bit analog resolution, dBm.
+    /// Ref [2] assumes −28 dBm-class APD/TIA receivers at 1 GS/s.
+    pub sensitivity_1gs_dbm: f64,
+    /// Responsivity, A/W (for charge-domain energy accounting).
+    pub responsivity_a_per_w: f64,
+    /// Footprint (photodiode pair + analog front end), mm².
+    pub area_mm2: f64,
+    /// Static analog power of the front end, mW.
+    pub static_power_mw: f64,
+}
+
+impl BalancedPhotodetector {
+    /// TIA-receiver BPD with literature-default parameters.
+    pub fn tia() -> Self {
+        BalancedPhotodetector {
+            kind: ReceiverKind::Tia,
+            sensitivity_1gs_dbm: -28.0,
+            responsivity_a_per_w: 1.2,
+            area_mm2: 6.0e-3,
+            static_power_mw: 1.1, // TIA bias, ref [2]
+        }
+    }
+
+    /// Time-integrating BPD (the front half of a BPCA).
+    pub fn time_integrating() -> Self {
+        BalancedPhotodetector {
+            kind: ReceiverKind::TimeIntegrating,
+            sensitivity_1gs_dbm: -28.0,
+            responsivity_a_per_w: 1.2,
+            area_mm2: 6.0e-3,
+            static_power_mw: 0.4, // no TIA; integrator bias only
+        }
+    }
+
+    /// Sensitivity at data rate `dr`, dBm.
+    ///
+    /// `Tia`: `S(BR) = S(1) + 10·log10(BR)` (thermal-noise bandwidth ∝ BR).
+    /// `TimeIntegrating`: `S(BR) = S(1) + 5·log10(BR)` (integration gain).
+    pub fn sensitivity_dbm(&self, dr: DataRate) -> f64 {
+        let br = dr.gs();
+        match self.kind {
+            ReceiverKind::Tia => self.sensitivity_1gs_dbm + 10.0 * br.log10(),
+            ReceiverKind::TimeIntegrating => self.sensitivity_1gs_dbm + 5.0 * br.log10(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tia_sensitivity_degrades_10log10() {
+        let pd = BalancedPhotodetector::tia();
+        let s1 = pd.sensitivity_dbm(DataRate::Gs1);
+        let s5 = pd.sensitivity_dbm(DataRate::Gs5);
+        let s10 = pd.sensitivity_dbm(DataRate::Gs10);
+        assert!((s5 - s1 - 10.0 * 5f64.log10()).abs() < 1e-9);
+        assert!((s10 - s1 - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn integrating_sensitivity_degrades_half_as_fast() {
+        let tia = BalancedPhotodetector::tia();
+        let bpca = BalancedPhotodetector::time_integrating();
+        let d_tia = tia.sensitivity_dbm(DataRate::Gs10) - tia.sensitivity_dbm(DataRate::Gs1);
+        let d_int = bpca.sensitivity_dbm(DataRate::Gs10) - bpca.sensitivity_dbm(DataRate::Gs1);
+        assert!((d_tia - 2.0 * d_int).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sensitivity_at_1gs_is_base_value() {
+        for pd in [BalancedPhotodetector::tia(), BalancedPhotodetector::time_integrating()] {
+            assert!((pd.sensitivity_dbm(DataRate::Gs1) - pd.sensitivity_1gs_dbm).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn integrating_front_end_draws_less_static_power() {
+        assert!(
+            BalancedPhotodetector::time_integrating().static_power_mw
+                < BalancedPhotodetector::tia().static_power_mw
+        );
+    }
+}

@@ -1,0 +1,82 @@
+//! Splitter/combiner tree model (fan-out and aggregation blocks).
+//!
+//! The splitting block copies the N wavelength signals into M waveguides
+//! (fan-out M), paying the fundamental `10·log10(M)` power division plus an
+//! excess loss per 1×2 stage; the aggregation block multiplexes N signals
+//! per waveguide (paper §II-A, blocks 1–2).
+
+use crate::units::ratio_to_db;
+
+/// Binary-tree optical splitter with per-stage excess loss.
+#[derive(Debug, Clone, Copy)]
+pub struct SplitterTree {
+    /// Excess (non-fundamental) loss per 1×2 stage, dB. ~0.1–0.2 dB for
+    /// MMI/Y-branch splitters; refs [2][12] use 0.18 dB.
+    pub excess_loss_per_stage_db: f64,
+    /// Area per 1×2 element, mm².
+    pub element_area_mm2: f64,
+}
+
+impl Default for SplitterTree {
+    fn default() -> Self {
+        SplitterTree { excess_loss_per_stage_db: 0.18, element_area_mm2: 1.0e-4 }
+    }
+}
+
+impl SplitterTree {
+    /// Total insertion loss for a 1×`fanout` split, dB
+    /// (fundamental `10·log10(fanout)` + excess per stage).
+    pub fn loss_db(&self, fanout: usize) -> f64 {
+        if fanout <= 1 {
+            return 0.0;
+        }
+        let stages = (fanout as f64).log2().ceil();
+        ratio_to_db(fanout as f64) + self.excess_loss_per_stage_db * stages
+    }
+
+    /// Number of 1×2 elements in a 1×`fanout` tree.
+    pub fn element_count(&self, fanout: usize) -> usize {
+        fanout.saturating_sub(1)
+    }
+
+    /// Total tree area, mm².
+    pub fn area_mm2(&self, fanout: usize) -> f64 {
+        self.element_count(fanout) as f64 * self.element_area_mm2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unity_fanout_is_lossless() {
+        assert_eq!(SplitterTree::default().loss_db(1), 0.0);
+        assert_eq!(SplitterTree::default().loss_db(0), 0.0);
+    }
+
+    #[test]
+    fn fanout_two_is_3db_plus_excess() {
+        let t = SplitterTree::default();
+        assert!((t.loss_db(2) - (3.0103 + 0.18)).abs() < 1e-3);
+    }
+
+    #[test]
+    fn loss_monotonic_in_fanout() {
+        let t = SplitterTree::default();
+        let mut prev = 0.0;
+        for m in [2usize, 4, 8, 16, 32, 64] {
+            let l = t.loss_db(m);
+            assert!(l > prev);
+            prev = l;
+        }
+    }
+
+    #[test]
+    fn element_count_is_fanout_minus_one() {
+        let t = SplitterTree::default();
+        assert_eq!(t.element_count(16), 15);
+        assert_eq!(t.element_count(1), 0);
+        assert!((t.area_mm2(16) - 15.0 * 1.0e-4).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,87 @@
+//! SRAM buffer model for intermediate bit-slice matrices (baselines only).
+//!
+//! In the prior-work dataflow (paper Fig. 2(a)) the four INT4 intermediate
+//! result matrices are digitized and **stored** before DEAS post-processing.
+//! SPOGA's extended optical-analog dataflow removes this storage entirely
+//! (paper §III-B). The model charges read+write energy per byte and a
+//! banked-array area.
+
+use crate::units::DataRate;
+
+/// Small on-chip SRAM scratch buffer.
+#[derive(Debug, Clone, Copy)]
+pub struct SramBuffer {
+    /// Capacity in KiB (per core, sized to hold intermediate tiles).
+    pub capacity_kib: f64,
+    /// Access energy, pJ/byte (read or write). ~0.08 pJ/B for small arrays
+    /// in 28–45 nm nodes (CACTI-class figure used by refs [1][2]).
+    pub energy_per_byte_pj: f64,
+    /// Leakage power, mW.
+    pub leakage_mw: f64,
+    /// Area, mm² (≈0.06 mm² per 8 KiB bank in 28 nm).
+    pub area_mm2: f64,
+}
+
+impl SramBuffer {
+    /// Rows of intermediate results buffered before DEAS recombination —
+    /// one output feature-map row at the largest post-stem resolution
+    /// (112×112) of the benchmark CNNs.
+    pub const TILE_ROWS: usize = 112;
+
+    /// Buffer sized for a DEAS working tile: `m` output channels × 16-bit
+    /// intermediates × 4 slices × [`Self::TILE_ROWS`] rows.
+    pub fn for_outputs(m: usize) -> Self {
+        let bytes = (m * 2 * 4 * Self::TILE_ROWS) as f64;
+        let capacity_kib = (bytes / 1024.0).max(1.0);
+        SramBuffer {
+            capacity_kib,
+            energy_per_byte_pj: 0.08,
+            leakage_mw: 0.05 * capacity_kib,
+            area_mm2: 0.0075 * capacity_kib,
+        }
+    }
+
+    /// Dynamic power when writing+reading `bytes_per_symbol` every symbol, mW.
+    pub fn dynamic_power_mw(&self, dr: DataRate, bytes_per_symbol: f64) -> f64 {
+        // write + read = 2 accesses; pJ × GHz = mW.
+        2.0 * self.energy_per_byte_pj * bytes_per_symbol * dr.gs()
+    }
+
+    /// Energy to store + load one intermediate matrix of `bytes` bytes, pJ.
+    pub fn roundtrip_energy_pj(&self, bytes: f64) -> f64 {
+        2.0 * self.energy_per_byte_pj * bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sized_for_outputs_minimum_1kib() {
+        let s = SramBuffer::for_outputs(16);
+        assert!(s.capacity_kib >= 1.0);
+    }
+
+    #[test]
+    fn dynamic_power_scales_linearly() {
+        let s = SramBuffer::for_outputs(64);
+        let p = s.dynamic_power_mw(DataRate::Gs1, 10.0);
+        let p2 = s.dynamic_power_mw(DataRate::Gs1, 20.0);
+        assert!((p2 / p - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn roundtrip_energy_counts_two_accesses() {
+        let s = SramBuffer::for_outputs(16);
+        assert!((s.roundtrip_energy_pj(100.0) - 2.0 * 0.08 * 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bigger_buffer_bigger_area_and_leakage() {
+        let a = SramBuffer::for_outputs(16);
+        let b = SramBuffer::for_outputs(1024);
+        assert!(b.area_mm2 > a.area_mm2);
+        assert!(b.leakage_mw > a.leakage_mw);
+    }
+}

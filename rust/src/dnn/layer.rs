@@ -1,0 +1,217 @@
+//! Layer descriptions and their lowering to GEMM shapes.
+
+/// Spatial output size of a convolution along one axis.
+#[inline]
+pub fn conv_out_dim(in_dim: usize, kernel: usize, stride: usize, pad: usize) -> usize {
+    (in_dim + 2 * pad - kernel) / stride + 1
+}
+
+/// A single GEMM invocation: `C[t×c] = A[t×k] · B[k×c]`, possibly repeated
+/// `groups` times (grouped/depthwise convolutions run one GEMM per group).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GemmShape {
+    /// Rows of the input matrix (im2col: output pixels; FC: batch).
+    pub t: usize,
+    /// Reduction dimension (im2col: in_ch/groups × kh × kw).
+    pub k: usize,
+    /// Columns of the weight matrix (output channels per group).
+    pub c: usize,
+    /// Number of independent GEMMs of this shape (conv groups).
+    pub groups: usize,
+}
+
+impl GemmShape {
+    /// Multiply-accumulate operations for all groups.
+    pub fn macs(&self) -> u64 {
+        self.t as u64 * self.k as u64 * self.c as u64 * self.groups as u64
+    }
+
+    /// Output elements produced (dot products computed).
+    pub fn outputs(&self) -> u64 {
+        self.t as u64 * self.c as u64 * self.groups as u64
+    }
+}
+
+/// One network layer, as described in the architecture papers.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Layer {
+    /// 2-D convolution on an `in_h×in_w×in_ch` input.
+    Conv {
+        /// Layer name for traces/reports (e.g. "conv1", "res2a_branch2b").
+        name: String,
+        /// Input feature-map height.
+        in_h: usize,
+        /// Input feature-map width.
+        in_w: usize,
+        /// Input channels.
+        in_ch: usize,
+        /// Output channels.
+        out_ch: usize,
+        /// Kernel height = width.
+        kernel: usize,
+        /// Stride.
+        stride: usize,
+        /// Zero padding.
+        pad: usize,
+        /// Conv groups (`in_ch` for depthwise).
+        groups: usize,
+    },
+    /// Fully connected layer (GEMV for batch 1).
+    Fc {
+        /// Layer name.
+        name: String,
+        /// Input features.
+        in_features: usize,
+        /// Output features.
+        out_features: usize,
+    },
+}
+
+impl Layer {
+    /// Convenience constructor for a dense convolution.
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv(
+        name: &str,
+        in_h: usize,
+        in_w: usize,
+        in_ch: usize,
+        out_ch: usize,
+        kernel: usize,
+        stride: usize,
+        pad: usize,
+    ) -> Self {
+        Layer::Conv {
+            name: name.to_string(),
+            in_h,
+            in_w,
+            in_ch,
+            out_ch,
+            kernel,
+            stride,
+            pad,
+            groups: 1,
+        }
+    }
+
+    /// Depthwise convolution (groups = channels).
+    pub fn dwconv(
+        name: &str,
+        in_h: usize,
+        in_w: usize,
+        channels: usize,
+        kernel: usize,
+        stride: usize,
+        pad: usize,
+    ) -> Self {
+        Layer::Conv {
+            name: name.to_string(),
+            in_h,
+            in_w,
+            in_ch: channels,
+            out_ch: channels,
+            kernel,
+            stride,
+            pad,
+            groups: channels,
+        }
+    }
+
+    /// Fully connected layer.
+    pub fn fc(name: &str, in_features: usize, out_features: usize) -> Self {
+        Layer::Fc { name: name.to_string(), in_features, out_features }
+    }
+
+    /// Layer name.
+    pub fn name(&self) -> &str {
+        match self {
+            Layer::Conv { name, .. } => name,
+            Layer::Fc { name, .. } => name,
+        }
+    }
+
+    /// Output spatial size `(h, w)`; FC layers are 1×1.
+    pub fn out_hw(&self) -> (usize, usize) {
+        match self {
+            Layer::Conv { in_h, in_w, kernel, stride, pad, .. } => (
+                conv_out_dim(*in_h, *kernel, *stride, *pad),
+                conv_out_dim(*in_w, *kernel, *stride, *pad),
+            ),
+            Layer::Fc { .. } => (1, 1),
+        }
+    }
+
+    /// Lower this layer to its GEMM shape (im2col for convs, paper Fig. 1).
+    pub fn gemm(&self) -> GemmShape {
+        match self {
+            Layer::Conv { in_ch, out_ch, kernel, groups, .. } => {
+                let (oh, ow) = self.out_hw();
+                GemmShape {
+                    t: oh * ow,
+                    k: (in_ch / groups) * kernel * kernel,
+                    c: out_ch / groups,
+                    groups: *groups,
+                }
+            }
+            Layer::Fc { in_features, out_features, .. } => {
+                GemmShape { t: 1, k: *in_features, c: *out_features, groups: 1 }
+            }
+        }
+    }
+
+    /// MACs this layer costs per frame.
+    pub fn macs(&self) -> u64 {
+        self.gemm().macs()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_out_dim_standard_cases() {
+        // 224, k7, s2, p3 → 112 (ResNet/GoogLeNet conv1).
+        assert_eq!(conv_out_dim(224, 7, 2, 3), 112);
+        // 56, k3, s1, p1 → 56 (same-size conv).
+        assert_eq!(conv_out_dim(56, 3, 1, 1), 56);
+        // 56, k1, s1, p0 → 56 (pointwise).
+        assert_eq!(conv_out_dim(56, 1, 1, 0), 56);
+        // 112, k3, s2, p1 → 56.
+        assert_eq!(conv_out_dim(112, 3, 2, 1), 56);
+    }
+
+    #[test]
+    fn conv1_resnet_gemm_shape() {
+        let l = Layer::conv("conv1", 224, 224, 3, 64, 7, 2, 3);
+        let g = l.gemm();
+        assert_eq!(g.t, 112 * 112);
+        assert_eq!(g.k, 3 * 7 * 7);
+        assert_eq!(g.c, 64);
+        assert_eq!(g.groups, 1);
+        assert_eq!(g.macs(), 112 * 112 * 147 * 64);
+    }
+
+    #[test]
+    fn depthwise_conv_is_grouped_per_channel() {
+        let l = Layer::dwconv("dw", 112, 112, 32, 3, 1, 1);
+        let g = l.gemm();
+        assert_eq!(g.groups, 32);
+        assert_eq!(g.k, 9); // 1 channel × 3×3
+        assert_eq!(g.c, 1);
+        assert_eq!(g.macs(), (112 * 112 * 9 * 32) as u64);
+    }
+
+    #[test]
+    fn fc_layer_is_gemv() {
+        let l = Layer::fc("fc1000", 2048, 1000);
+        let g = l.gemm();
+        assert_eq!((g.t, g.k, g.c, g.groups), (1, 2048, 1000, 1));
+        assert_eq!(l.macs(), 2_048_000);
+    }
+
+    #[test]
+    fn outputs_counts_dot_products() {
+        let g = GemmShape { t: 10, k: 100, c: 5, groups: 2 };
+        assert_eq!(g.outputs(), 100);
+    }
+}

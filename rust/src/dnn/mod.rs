@@ -1,0 +1,18 @@
+//! CNN workload library — the four networks the paper evaluates
+//! (MobileNet V2, ShuffleNet V2, ResNet-50, GoogLeNet), described layer by
+//! layer and lowered to GEMM shapes via im2col (paper §I: convolutions are
+//! converted to GEMMs between input and Toeplitz matrices).
+//!
+//! Layer tables follow the original architecture papers exactly (224×224×3
+//! ImageNet inference, batch 1). Each network exposes its [`Workload`]: the
+//! ordered list of GEMM invocations one frame requires.
+
+pub mod layer;
+pub mod models;
+pub mod trace;
+pub mod workload;
+
+pub use layer::{conv_out_dim, GemmShape, Layer};
+pub use models::{googlenet, mobilenet_v2, resnet50, shufflenet_v2, CnnModel};
+pub use trace::{load_trace, parse_trace, to_trace};
+pub use workload::Workload;

@@ -1,0 +1,283 @@
+//! Layer-exact tables for the paper's four benchmark CNNs
+//! (224×224×3 ImageNet inference, batch 1).
+//!
+//! Only GEMM-bearing layers (convolutions, fully-connected) are listed —
+//! the paper accelerates GEMM kernels; pooling/activation/shuffle run on the
+//! host and are outside the photonic cores' critical resource (and are also
+//! excluded by the paper, §II-A last paragraph).
+
+use crate::dnn::layer::Layer;
+use crate::dnn::workload::Workload;
+
+/// A named CNN model: ordered GEMM-bearing layers.
+#[derive(Debug, Clone)]
+pub struct CnnModel {
+    /// Model name as used in the paper's Fig. 5 ("MobileNetV2", ...).
+    pub name: &'static str,
+    /// Ordered layers.
+    pub layers: Vec<Layer>,
+}
+
+impl CnnModel {
+    /// Total multiply-accumulates per frame.
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs()).sum()
+    }
+
+    /// Lower to the per-frame GEMM workload.
+    pub fn workload(&self) -> Workload {
+        Workload::from_model(self)
+    }
+
+    /// All four paper benchmarks, in the paper's Fig. 5 order.
+    pub fn paper_benchmarks() -> Vec<CnnModel> {
+        vec![mobilenet_v2(), shufflenet_v2(), resnet50(), googlenet()]
+    }
+}
+
+/// ResNet-50 (He et al. 2016): conv1 + 4 bottleneck stages [3,4,6,3] + fc.
+pub fn resnet50() -> CnnModel {
+    let mut layers = vec![Layer::conv("conv1", 224, 224, 3, 64, 7, 2, 3)];
+    // After conv1 (112×112) and 3×3/2 max-pool → 56×56×64.
+    let stage_specs: [(usize, usize, usize, usize, usize); 4] = [
+        // (blocks, mid_ch, out_ch, spatial_in, stride_of_first_block)
+        (3, 64, 256, 56, 1),
+        (4, 128, 512, 56, 2),
+        (6, 256, 1024, 28, 2),
+        (3, 512, 2048, 14, 2),
+    ];
+    let mut in_ch = 64;
+    for (si, (blocks, mid, out, sp_in, first_stride)) in stage_specs.into_iter().enumerate() {
+        let stage = si + 2; // paper naming: res2..res5
+        let mut h = sp_in;
+        for b in 0..blocks {
+            let stride = if b == 0 { first_stride } else { 1 };
+            let h_out = h / stride;
+            let pre = format!("res{stage}{}", (b'a' + b as u8) as char);
+            // 1×1 reduce (stride lives on the 3×3 per torchvision/v1.5).
+            layers.push(Layer::conv(&format!("{pre}_branch2a"), h, h, in_ch, mid, 1, 1, 0));
+            layers.push(Layer::conv(&format!("{pre}_branch2b"), h, h, mid, mid, 3, stride, 1));
+            layers.push(Layer::conv(&format!("{pre}_branch2c"), h_out, h_out, mid, out, 1, 1, 0));
+            if b == 0 {
+                // Projection shortcut.
+                layers.push(Layer::conv(&format!("{pre}_branch1"), h, h, in_ch, out, 1, stride, 0));
+            }
+            in_ch = out;
+            h = h_out;
+        }
+    }
+    layers.push(Layer::fc("fc1000", 2048, 1000));
+    CnnModel { name: "ResNet50", layers }
+}
+
+/// MobileNet V2 (Sandler et al. 2018): conv1 + 17 inverted-residual blocks +
+/// conv 1×1×1280 + fc.
+pub fn mobilenet_v2() -> CnnModel {
+    let mut layers = vec![Layer::conv("conv1", 224, 224, 3, 32, 3, 2, 1)];
+    // (expansion t, out channels c, repeats n, first stride s) — Table 2 of
+    // the MobileNetV2 paper.
+    let specs: [(usize, usize, usize, usize); 7] = [
+        (1, 16, 1, 1),
+        (6, 24, 2, 2),
+        (6, 32, 3, 2),
+        (6, 64, 4, 2),
+        (6, 96, 3, 1),
+        (6, 160, 3, 2),
+        (6, 320, 1, 1),
+    ];
+    let mut in_ch = 32;
+    let mut h = 112;
+    let mut blk = 0;
+    for (t, c, n, s) in specs {
+        for r in 0..n {
+            blk += 1;
+            let stride = if r == 0 { s } else { 1 };
+            let hidden = in_ch * t;
+            let pre = format!("block{blk}");
+            if t != 1 {
+                layers.push(Layer::conv(&format!("{pre}_expand"), h, h, in_ch, hidden, 1, 1, 0));
+            }
+            let h_out = h / stride;
+            layers.push(Layer::dwconv(&format!("{pre}_dw"), h, h, hidden, 3, stride, 1));
+            layers.push(Layer::conv(&format!("{pre}_project"), h_out, h_out, hidden, c, 1, 1, 0));
+            in_ch = c;
+            h = h_out;
+        }
+    }
+    layers.push(Layer::conv("conv_last", 7, 7, 320, 1280, 1, 1, 0));
+    layers.push(Layer::fc("fc", 1280, 1000));
+    CnnModel { name: "MobileNetV2", layers }
+}
+
+/// ShuffleNet V2 ×1.0 (Ma et al. 2018): conv1 + stages {4, 8, 4} with
+/// 116/232/464 channels + conv5 + fc.
+pub fn shufflenet_v2() -> CnnModel {
+    let mut layers = vec![Layer::conv("conv1", 224, 224, 3, 24, 3, 2, 1)];
+    // After conv1 (112×112) and max-pool → 56×56×24.
+    let mut in_ch = 24;
+    let mut h = 56;
+    for (stage, (out_ch, repeats)) in [(116usize, 4usize), (232, 8), (464, 4)].iter().enumerate() {
+        let stage = stage + 2;
+        let half = out_ch / 2;
+        for u in 0..*repeats {
+            let pre = format!("stage{stage}_u{}", u + 1);
+            if u == 0 {
+                // Spatial-down unit (stride 2): both branches are convolved.
+                let h_out = h / 2;
+                // Branch 1: 3×3 dw /2 on the full input + 1×1 → half.
+                layers.push(Layer::dwconv(&format!("{pre}_b1_dw"), h, h, in_ch, 3, 2, 1));
+                layers.push(Layer::conv(&format!("{pre}_b1_pw"), h_out, h_out, in_ch, half, 1, 1, 0));
+                // Branch 2: 1×1 → half, 3×3 dw /2, 1×1 → half.
+                layers.push(Layer::conv(&format!("{pre}_b2_pw1"), h, h, in_ch, half, 1, 1, 0));
+                layers.push(Layer::dwconv(&format!("{pre}_b2_dw"), h, h, half, 3, 2, 1));
+                layers.push(Layer::conv(&format!("{pre}_b2_pw2"), h_out, h_out, half, half, 1, 1, 0));
+                h = h_out;
+            } else {
+                // Basic unit: channel split — only half the channels convolve.
+                layers.push(Layer::conv(&format!("{pre}_pw1"), h, h, half, half, 1, 1, 0));
+                layers.push(Layer::dwconv(&format!("{pre}_dw"), h, h, half, 3, 1, 1));
+                layers.push(Layer::conv(&format!("{pre}_pw2"), h, h, half, half, 1, 1, 0));
+            }
+            in_ch = *out_ch;
+        }
+    }
+    layers.push(Layer::conv("conv5", 7, 7, 464, 1024, 1, 1, 0));
+    layers.push(Layer::fc("fc", 1024, 1000));
+    CnnModel { name: "ShuffleNetV2", layers }
+}
+
+/// GoogLeNet / Inception v1 (Szegedy et al. 2015): stem + 9 inception
+/// modules + fc. Auxiliary classifiers (training-only) are excluded.
+pub fn googlenet() -> CnnModel {
+    let mut layers = vec![
+        Layer::conv("conv1", 224, 224, 3, 64, 7, 2, 3), // → 112
+        // max-pool → 56
+        Layer::conv("conv2_reduce", 56, 56, 64, 64, 1, 1, 0),
+        Layer::conv("conv2", 56, 56, 64, 192, 3, 1, 1),
+        // max-pool → 28
+    ];
+    // (name, spatial, in, 1x1, 3x3red, 3x3, 5x5red, 5x5, pool_proj)
+    let modules: [(&str, usize, usize, [usize; 6]); 9] = [
+        ("3a", 28, 192, [64, 96, 128, 16, 32, 32]),
+        ("3b", 28, 256, [128, 128, 192, 32, 96, 64]),
+        // max-pool → 14
+        ("4a", 14, 480, [192, 96, 208, 16, 48, 64]),
+        ("4b", 14, 512, [160, 112, 224, 24, 64, 64]),
+        ("4c", 14, 512, [128, 128, 256, 24, 64, 64]),
+        ("4d", 14, 512, [112, 144, 288, 32, 64, 64]),
+        ("4e", 14, 528, [256, 160, 320, 32, 128, 128]),
+        // max-pool → 7
+        ("5a", 7, 832, [256, 160, 320, 32, 128, 128]),
+        ("5b", 7, 832, [384, 192, 384, 48, 128, 128]),
+    ];
+    for (name, sp, in_ch, [b1, b3r, b3, b5r, b5, pp]) in modules {
+        layers.push(Layer::conv(&format!("inc{name}_1x1"), sp, sp, in_ch, b1, 1, 1, 0));
+        layers.push(Layer::conv(&format!("inc{name}_3x3r"), sp, sp, in_ch, b3r, 1, 1, 0));
+        layers.push(Layer::conv(&format!("inc{name}_3x3"), sp, sp, b3r, b3, 3, 1, 1));
+        layers.push(Layer::conv(&format!("inc{name}_5x5r"), sp, sp, in_ch, b5r, 1, 1, 0));
+        layers.push(Layer::conv(&format!("inc{name}_5x5"), sp, sp, b5r, b5, 5, 1, 2));
+        layers.push(Layer::conv(&format!("inc{name}_pool"), sp, sp, in_ch, pp, 1, 1, 0));
+    }
+    layers.push(Layer::fc("fc", 1024, 1000));
+    CnnModel { name: "GoogleNet", layers }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Published MAC counts (±15% tolerance — counting conventions differ
+    /// slightly on shortcut/stem layers): ResNet-50 ≈ 4.1 G, MobileNetV2 ≈
+    /// 0.30 G, ShuffleNetV2×1.0 ≈ 0.146 G, GoogLeNet ≈ 1.5 G.
+    fn assert_macs_near(model: &CnnModel, expected: f64) {
+        let macs = model.total_macs() as f64;
+        let lo = expected * 0.85;
+        let hi = expected * 1.15;
+        assert!(
+            macs >= lo && macs <= hi,
+            "{}: {macs:.3e} MACs outside [{lo:.3e}, {hi:.3e}]",
+            model.name
+        );
+    }
+
+    #[test]
+    fn resnet50_macs_match_literature() {
+        assert_macs_near(&resnet50(), 4.1e9);
+    }
+
+    #[test]
+    fn mobilenet_v2_macs_match_literature() {
+        assert_macs_near(&mobilenet_v2(), 0.30e9);
+    }
+
+    #[test]
+    fn shufflenet_v2_macs_match_literature() {
+        assert_macs_near(&shufflenet_v2(), 0.146e9);
+    }
+
+    #[test]
+    fn googlenet_macs_match_literature() {
+        assert_macs_near(&googlenet(), 1.5e9);
+    }
+
+    #[test]
+    fn resnet50_has_53_convs_plus_fc() {
+        let m = resnet50();
+        let convs = m.layers.iter().filter(|l| matches!(l, Layer::Conv { .. })).count();
+        assert_eq!(convs, 53);
+        assert_eq!(m.layers.len(), 54);
+    }
+
+    #[test]
+    fn mobilenet_blocks_expand() {
+        let m = mobilenet_v2();
+        // 1 stem + block1 (2 convs, t=1) + 16 blocks × 3 convs + conv_last + fc.
+        assert_eq!(m.layers.len(), 1 + 2 + 16 * 3 + 1 + 1);
+    }
+
+    #[test]
+    fn googlenet_module_count() {
+        let m = googlenet();
+        // stem 3 + 9 modules × 6 convs + fc.
+        assert_eq!(m.layers.len(), 3 + 54 + 1);
+    }
+
+    #[test]
+    fn shufflenet_channel_bookkeeping() {
+        let m = shufflenet_v2();
+        // conv5 must consume 464 channels.
+        let conv5 = m.layers.iter().find(|l| l.name() == "conv5").unwrap();
+        if let Layer::Conv { in_ch, out_ch, .. } = conv5 {
+            assert_eq!((*in_ch, *out_ch), (464, 1024));
+        }
+    }
+
+    #[test]
+    fn all_models_have_unique_layer_names() {
+        for m in CnnModel::paper_benchmarks() {
+            let mut names: Vec<&str> = m.layers.iter().map(|l| l.name()).collect();
+            let before = names.len();
+            names.sort();
+            names.dedup();
+            assert_eq!(before, names.len(), "{} has duplicate layer names", m.name);
+        }
+    }
+
+    #[test]
+    fn all_spatial_dims_divide_cleanly() {
+        // Every layer's GEMM must have nonzero dims.
+        for m in CnnModel::paper_benchmarks() {
+            for l in &m.layers {
+                let g = l.gemm();
+                assert!(g.t > 0 && g.k > 0 && g.c > 0 && g.groups > 0, "{}", l.name());
+            }
+        }
+    }
+
+    #[test]
+    fn paper_benchmark_order_matches_fig5() {
+        let names: Vec<&str> =
+            CnnModel::paper_benchmarks().iter().map(|m| m.name).collect();
+        assert_eq!(names, vec!["MobileNetV2", "ShuffleNetV2", "ResNet50", "GoogleNet"]);
+    }
+}

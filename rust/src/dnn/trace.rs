@@ -1,0 +1,181 @@
+//! Workload traces: run *custom* DNNs through the simulator.
+//!
+//! A trace is a plain-text layer list (one layer per line), so downstream
+//! users can evaluate their own models on the photonic architectures
+//! without touching code:
+//!
+//! ```text
+//! # comment            (blank lines ignored)
+//! model my_net
+//! conv conv1 224 224 3 64 7 2 3 1    # in_h in_w in_ch out_ch k stride pad groups
+//! dwconv dw1 112 112 64 3 1 1       # in_h in_w channels k stride pad
+//! fc classifier 1024 1000           # in_features out_features
+//! ```
+
+use crate::dnn::layer::Layer;
+use crate::dnn::models::CnnModel;
+use crate::{Error, Result};
+
+/// Parse a workload trace into a [`CnnModel`].
+pub fn parse_trace(text: &str) -> Result<CnnModel> {
+    let mut name: Option<String> = None;
+    let mut layers = Vec::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut f = line.split_whitespace();
+        let kind = f.next().unwrap();
+        let rest: Vec<&str> = f.collect();
+        let bad = |msg: &str| {
+            Error::Config(format!("trace line {}: {msg}: {raw:?}", lineno + 1))
+        };
+        let nums = |from: usize| -> Result<Vec<usize>> {
+            rest[from..]
+                .iter()
+                .map(|s| s.parse::<usize>().map_err(|_| bad("bad integer")))
+                .collect()
+        };
+        match kind {
+            "model" => {
+                name = Some(rest.join(" "));
+            }
+            "conv" => {
+                if rest.len() != 9 {
+                    return Err(bad("conv needs name + 8 integers"));
+                }
+                let v = nums(1)?;
+                let (in_h, in_w, in_ch, out_ch, k, s, p, g) =
+                    (v[0], v[1], v[2], v[3], v[4], v[5], v[6], v[7]);
+                if g == 0 || in_ch % g != 0 || out_ch % g != 0 {
+                    return Err(bad("groups must divide channels"));
+                }
+                layers.push(Layer::Conv {
+                    name: rest[0].to_string(),
+                    in_h,
+                    in_w,
+                    in_ch,
+                    out_ch,
+                    kernel: k,
+                    stride: s,
+                    pad: p,
+                    groups: g,
+                });
+            }
+            "dwconv" => {
+                if rest.len() != 7 {
+                    return Err(bad("dwconv needs name + 6 integers"));
+                }
+                let v = nums(1)?;
+                layers.push(Layer::dwconv(rest[0], v[0], v[1], v[2], v[3], v[4], v[5]));
+            }
+            "fc" => {
+                if rest.len() != 3 {
+                    return Err(bad("fc needs name + 2 integers"));
+                }
+                let v = nums(1)?;
+                layers.push(Layer::fc(rest[0], v[0], v[1]));
+            }
+            other => return Err(bad(&format!("unknown layer kind {other:?}"))),
+        }
+    }
+    if layers.is_empty() {
+        return Err(Error::Config("trace has no layers".into()));
+    }
+    // Leak the name: CnnModel carries &'static str (the built-in tables are
+    // static); traces are loaded once per process.
+    let name: &'static str =
+        Box::leak(name.unwrap_or_else(|| "trace".into()).into_boxed_str());
+    Ok(CnnModel { name, layers })
+}
+
+/// Load a trace file.
+pub fn load_trace(path: impl AsRef<std::path::Path>) -> Result<CnnModel> {
+    parse_trace(&std::fs::read_to_string(path)?)
+}
+
+/// Serialize a model back to trace text (round-trip support).
+pub fn to_trace(model: &CnnModel) -> String {
+    let mut out = format!("model {}\n", model.name);
+    for l in &model.layers {
+        match l {
+            Layer::Conv { name, in_h, in_w, in_ch, out_ch, kernel, stride, pad, groups } => {
+                if *groups == *in_ch && in_ch == out_ch {
+                    out.push_str(&format!(
+                        "dwconv {name} {in_h} {in_w} {in_ch} {kernel} {stride} {pad}\n"
+                    ));
+                } else {
+                    out.push_str(&format!(
+                        "conv {name} {in_h} {in_w} {in_ch} {out_ch} {kernel} {stride} {pad} {groups}\n"
+                    ));
+                }
+            }
+            Layer::Fc { name, in_features, out_features } => {
+                out.push_str(&format!("fc {name} {in_features} {out_features}\n"));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::models::{resnet50, shufflenet_v2};
+
+    const SAMPLE: &str = "\
+# tiny example net
+model tiny
+conv stem 32 32 3 16 3 1 1 1
+dwconv dw 32 32 16 3 2 1
+fc head 4096 10
+";
+
+    #[test]
+    fn parses_sample_trace() {
+        let m = parse_trace(SAMPLE).unwrap();
+        assert_eq!(m.name, "tiny");
+        assert_eq!(m.layers.len(), 3);
+        assert_eq!(m.layers[0].gemm().k, 27);
+        assert_eq!(m.layers[1].gemm().groups, 16);
+        assert!(m.total_macs() > 0);
+    }
+
+    #[test]
+    fn roundtrip_builtin_models() {
+        for m in [resnet50(), shufflenet_v2()] {
+            let text = to_trace(&m);
+            let back = parse_trace(&text).unwrap();
+            assert_eq!(back.layers, m.layers, "{} trace roundtrip", m.name);
+            assert_eq!(back.total_macs(), m.total_macs());
+        }
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(parse_trace("conv missing_fields 1 2").is_err());
+        assert!(parse_trace("warp w 1 2 3").is_err());
+        assert!(parse_trace("fc head ten 10").is_err());
+        assert!(parse_trace("").is_err());
+        assert!(parse_trace("conv c 8 8 6 6 3 1 1 4").is_err()); // groups∤ch
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let m = parse_trace("# a\n\nfc f 4 2  # trailing\n").unwrap();
+        assert_eq!(m.layers.len(), 1);
+    }
+
+    #[test]
+    fn trace_runs_through_simulator() {
+        use crate::arch::accel::Accelerator;
+        use crate::optics::link_budget::ArchClass;
+        use crate::sim::engine::simulate_frame;
+        use crate::units::DataRate;
+        let m = parse_trace(SAMPLE).unwrap();
+        let a = Accelerator::equal_cores(ArchClass::Mwa, DataRate::Gs5, 8).unwrap();
+        let f = simulate_frame(&a, &m.workload());
+        assert!(f.fps() > 0.0);
+    }
+}

@@ -1,0 +1,81 @@
+//! Per-frame GEMM workload extracted from a CNN model.
+
+use crate::dnn::layer::GemmShape;
+use crate::dnn::models::CnnModel;
+
+/// One GEMM invocation in a frame's execution trace.
+#[derive(Debug, Clone)]
+pub struct GemmOp {
+    /// Originating layer name.
+    pub layer: String,
+    /// GEMM dimensions.
+    pub shape: GemmShape,
+}
+
+/// Ordered list of GEMM operations one inference frame requires.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    /// Model name.
+    pub model: String,
+    /// Ops in execution order.
+    pub ops: Vec<GemmOp>,
+}
+
+impl Workload {
+    /// Build a workload from a model's layer list.
+    pub fn from_model(model: &CnnModel) -> Self {
+        Workload {
+            model: model.name.to_string(),
+            ops: model
+                .layers
+                .iter()
+                .map(|l| GemmOp { layer: l.name().to_string(), shape: l.gemm() })
+                .collect(),
+        }
+    }
+
+    /// Total MACs per frame.
+    pub fn total_macs(&self) -> u64 {
+        self.ops.iter().map(|o| o.shape.macs()).sum()
+    }
+
+    /// Total dot products (outputs) per frame — each one costs the
+    /// architecture its O/E + ADC conversion chain.
+    pub fn total_outputs(&self) -> u64 {
+        self.ops.iter().map(|o| o.shape.outputs()).sum()
+    }
+
+    /// Largest reduction dimension across ops (sizes the DPU vector length).
+    pub fn max_k(&self) -> usize {
+        self.ops.iter().map(|o| o.shape.k).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::dnn::models::{resnet50, CnnModel};
+
+    #[test]
+    fn workload_preserves_layer_order_and_macs() {
+        let m = resnet50();
+        let w = m.workload();
+        assert_eq!(w.ops.len(), m.layers.len());
+        assert_eq!(w.total_macs(), m.total_macs());
+        assert_eq!(w.ops[0].layer, "conv1");
+    }
+
+    #[test]
+    fn outputs_are_positive_for_all_models() {
+        for m in CnnModel::paper_benchmarks() {
+            let w = m.workload();
+            assert!(w.total_outputs() > 0);
+            assert!(w.total_outputs() < w.total_macs());
+        }
+    }
+
+    #[test]
+    fn max_k_reasonable_for_resnet() {
+        // ResNet-50's biggest reduction: 512×3×3 = 4608 (res5 3×3 convs).
+        assert_eq!(resnet50().workload().max_k(), 4608);
+    }
+}

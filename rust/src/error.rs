@@ -1,0 +1,42 @@
+//! Crate-wide error type.
+
+/// Unified error for the SPOGA library.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// Optical link budget cannot be closed for the requested configuration.
+    #[error("link budget infeasible: {0}")]
+    Infeasible(String),
+
+    /// A configuration value is out of its valid domain.
+    #[error("invalid configuration: {0}")]
+    Config(String),
+
+    /// A GEMM/tensor shape is inconsistent.
+    #[error("shape mismatch: {0}")]
+    Shape(String),
+
+    /// Artifact store problems (missing manifest, unknown artifact, ...).
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// Errors bubbling out of the PJRT runtime (`xla` crate).
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Coordinator request-path failures (queue closed, worker died, ...).
+    #[error("coordinator error: {0}")]
+    Coordinator(String),
+
+    /// Underlying I/O failure.
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Runtime(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

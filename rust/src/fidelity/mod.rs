@@ -1,0 +1,21 @@
+//! Analog fidelity substrate: noise Monte-Carlo for the photonic datapath.
+//!
+//! The paper's premise (§I) is that analog photonic cores cannot resolve
+//! more than 4-bit operands at useful parallelism because the optical power
+//! budget must cover the analog dynamic range. This module provides the
+//! behavioural noise model that underlies that claim and lets us *measure*
+//! it: each analog dot product is perturbed by receiver noise scaled to the
+//! link budget's SNR, then digitized by the PWAB ADC; Monte-Carlo sweeps
+//! report the bit-error behaviour vs laser power, vector size and ADC
+//! resolution.
+//!
+//! The model is deliberately simple (additive Gaussian at the accumulator,
+//! variance from the noise-equivalent power implied by the receiver
+//! sensitivity) — the same abstraction level the paper's own modelling
+//! references use.
+
+pub mod noise;
+pub mod study;
+
+pub use noise::{AnalogChannel, NoiseParams};
+pub use study::{fidelity_study, FidelityPoint};

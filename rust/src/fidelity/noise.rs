@@ -1,0 +1,161 @@
+//! Analog channel noise model.
+
+use crate::testing::SplitMix64;
+use crate::units::db_to_ratio;
+
+/// Noise configuration of one analog lane (BPCA accumulator).
+#[derive(Debug, Clone, Copy)]
+pub struct NoiseParams {
+    /// Signal-to-noise ratio at the accumulator for a *full-scale* single
+    /// product, dB. Derived from the margin between received power and
+    /// receiver sensitivity.
+    pub snr_db: f64,
+    /// ADC resolution applied at the PWAB output (None = ideal).
+    pub adc_bits: Option<u32>,
+}
+
+impl NoiseParams {
+    /// SNR implied by a link with `margin_db` of power above the receiver's
+    /// 4-bit sensitivity floor. At 0 dB margin the lane just resolves 2⁴
+    /// levels: SNR ≈ 20·log10(2⁴) ≈ 24 dB; margin adds linearly (optical dB
+    /// = electrical-current dB on a square-law detector biased linear).
+    pub fn from_link_margin(margin_db: f64) -> Self {
+        NoiseParams { snr_db: 24.1 + margin_db, adc_bits: None }
+    }
+
+    /// Attach a PWAB ADC model.
+    pub fn with_adc(mut self, bits: u32) -> Self {
+        self.adc_bits = Some(bits);
+        self
+    }
+
+    /// Noise standard deviation relative to a unit full-scale signal.
+    pub fn sigma(&self) -> f64 {
+        // SNR(dB) = 20·log10(fullscale/σ)  →  σ = fs / 10^(SNR/20).
+        1.0 / db_to_ratio(self.snr_db / 2.0)
+    }
+}
+
+/// A noisy analog accumulation channel (one radix lane ending in a BPCA).
+#[derive(Debug)]
+pub struct AnalogChannel {
+    params: NoiseParams,
+    rng: SplitMix64,
+}
+
+impl AnalogChannel {
+    /// New channel with deterministic noise stream `seed`.
+    pub fn new(params: NoiseParams, seed: u64) -> Self {
+        AnalogChannel { params, rng: SplitMix64::new(seed) }
+    }
+
+    /// Approximate standard Gaussian via the Irwin–Hall sum of 12 uniforms
+    /// (adequate for Monte-Carlo fidelity sweeps; no external crates).
+    fn gauss(&mut self) -> f64 {
+        let mut s = 0.0;
+        for _ in 0..12 {
+            s += self.rng.f64();
+        }
+        s - 6.0
+    }
+
+    /// Transduce an exact lane accumulation `value` whose worst-case
+    /// magnitude is `full_scale`: add receiver noise, clip, optionally
+    /// quantize with the PWAB ADC. Returns the analog-observed value.
+    pub fn transduce(&mut self, value: f64, full_scale: f64) -> f64 {
+        let noisy = value + self.gauss() * self.params.sigma() * full_scale;
+        let clipped = noisy.clamp(-full_scale, full_scale);
+        match self.params.adc_bits {
+            None => clipped,
+            Some(bits) => {
+                let lsb = 2.0 * full_scale / (1u64 << bits) as f64;
+                (clipped / lsb).round() * lsb
+            }
+        }
+    }
+
+    /// Noisy SPOGA dot product of INT8 vectors: three lanes accumulated in
+    /// charge, weighted (16²/16¹/16⁰), summed, transduced once per lane.
+    pub fn dot_i8(&mut self, a: &[i8], b: &[i8]) -> f64 {
+        use crate::bitslice::nibble::{slice_i8, NibblePair};
+        assert_eq!(a.len(), b.len());
+        let (mut hi, mut mid, mut lo) = (0i64, 0i64, 0i64);
+        for (&x, &y) in a.iter().zip(b) {
+            let (h, m, l) = NibblePair::product_lanes(slice_i8(x), slice_i8(y));
+            hi += h as i64;
+            mid += m as i64;
+            lo += l as i64;
+        }
+        let k = a.len() as f64;
+        // Per-lane worst case magnitudes (see bitslice::lane_accumulator_bound).
+        let out = 256.0 * self.transduce(hi as f64, 64.0 * k)
+            + 16.0 * self.transduce(mid as f64, 240.0 * k)
+            + self.transduce(lo as f64, 225.0 * k);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitslice::gemm_i32;
+
+    #[test]
+    fn sigma_decreases_with_snr() {
+        let lo = NoiseParams { snr_db: 20.0, adc_bits: None };
+        let hi = NoiseParams { snr_db: 40.0, adc_bits: None };
+        assert!(hi.sigma() < lo.sigma());
+        assert!((NoiseParams { snr_db: 20.0, adc_bits: None }.sigma() - 0.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn infinite_snr_recovers_exact_dot() {
+        let mut ch = AnalogChannel::new(NoiseParams { snr_db: 400.0, adc_bits: None }, 1);
+        let a: Vec<i8> = vec![-128, 55, 7, -3];
+        let b: Vec<i8> = vec![127, -1, 9, 22];
+        let exact = gemm_i32(&a, &b, 1, 4, 1).unwrap()[0] as f64;
+        let got = ch.dot_i8(&a, &b);
+        assert!((got - exact).abs() < 1e-6, "{got} vs {exact}");
+    }
+
+    #[test]
+    fn noise_is_deterministic_per_seed() {
+        let p = NoiseParams { snr_db: 30.0, adc_bits: None };
+        let a: Vec<i8> = (0..16).map(|i| (i * 7 - 50) as i8).collect();
+        let b: Vec<i8> = (0..16).map(|i| (i * 11 - 80) as i8).collect();
+        let x = AnalogChannel::new(p, 9).dot_i8(&a, &b);
+        let y = AnalogChannel::new(p, 9).dot_i8(&a, &b);
+        assert_eq!(x, y);
+        let z = AnalogChannel::new(p, 10).dot_i8(&a, &b);
+        assert!((x - z).abs() > 0.0);
+    }
+
+    #[test]
+    fn transduce_clips_to_full_scale() {
+        let mut ch = AnalogChannel::new(NoiseParams { snr_db: 300.0, adc_bits: None }, 3);
+        assert_eq!(ch.transduce(1e12, 100.0), 100.0);
+        assert_eq!(ch.transduce(-1e12, 100.0), -100.0);
+    }
+
+    #[test]
+    fn adc_quantizes_to_lsb_grid() {
+        let mut ch = AnalogChannel::new(
+            NoiseParams { snr_db: 300.0, adc_bits: None }.with_adc(4),
+            3,
+        );
+        let v = ch.transduce(13.0, 64.0);
+        let lsb = 128.0 / 16.0;
+        assert!((v / lsb - (v / lsb).round()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gauss_moments_sane() {
+        let mut ch = AnalogChannel::new(NoiseParams { snr_db: 0.0, adc_bits: None }, 5);
+        let n = 20_000;
+        let samples: Vec<f64> = (0..n).map(|_| ch.gauss()).collect();
+        let mean: f64 = samples.iter().sum::<f64>() / n as f64;
+        let var: f64 = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.1, "var {var}");
+    }
+}

@@ -1,0 +1,112 @@
+//! Monte-Carlo fidelity study: dot-product accuracy vs link margin,
+//! vector size and ADC resolution.
+
+use crate::bitslice::gemm_i32;
+use crate::fidelity::noise::{AnalogChannel, NoiseParams};
+use crate::testing::SplitMix64;
+
+/// One point of the fidelity sweep.
+#[derive(Debug, Clone, Copy)]
+pub struct FidelityPoint {
+    /// Link margin above the 4-bit sensitivity floor, dB.
+    pub margin_db: f64,
+    /// Dot-product length.
+    pub k: usize,
+    /// PWAB ADC bits (None = ideal).
+    pub adc_bits: Option<u32>,
+    /// Root-mean-square error relative to the exact INT8 dot product,
+    /// normalized by the RMS of the exact values.
+    pub relative_rmse: f64,
+    /// Fraction of trials whose rounded result equals the exact integer.
+    pub exact_rate: f64,
+}
+
+/// Run a Monte-Carlo sweep: `trials` random INT8 dot products per point.
+pub fn fidelity_study(
+    margins_db: &[f64],
+    ks: &[usize],
+    adc_bits: Option<u32>,
+    trials: usize,
+    seed: u64,
+) -> Vec<FidelityPoint> {
+    let mut out = Vec::new();
+    let mut rng = SplitMix64::new(seed);
+    for &margin in margins_db {
+        for &k in ks {
+            let mut params = NoiseParams::from_link_margin(margin);
+            if let Some(b) = adc_bits {
+                params = params.with_adc(b);
+            }
+            let mut ch = AnalogChannel::new(params, seed ^ (k as u64) << 20);
+            let mut se = 0.0f64;
+            let mut ref_sq = 0.0f64;
+            let mut exact_hits = 0usize;
+            for _ in 0..trials {
+                let a = rng.i8_vec(k);
+                let b = rng.i8_vec(k);
+                let exact = gemm_i32(&a, &b, 1, k, 1).unwrap()[0] as f64;
+                let got = ch.dot_i8(&a, &b);
+                se += (got - exact) * (got - exact);
+                ref_sq += exact * exact;
+                if (got.round() - exact).abs() < 0.5 {
+                    exact_hits += 1;
+                }
+            }
+            let relative_rmse = if ref_sq > 0.0 { (se / ref_sq).sqrt() } else { 0.0 };
+            out.push(FidelityPoint {
+                margin_db: margin,
+                k,
+                adc_bits,
+                relative_rmse,
+                exact_rate: exact_hits as f64 / trials as f64,
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_shrinks_with_link_margin() {
+        let pts = fidelity_study(&[0.0, 10.0, 30.0], &[16], None, 200, 7);
+        assert!(pts[0].relative_rmse > pts[1].relative_rmse);
+        assert!(pts[1].relative_rmse > pts[2].relative_rmse);
+    }
+
+    #[test]
+    fn high_margin_recovers_exact_integers() {
+        // Note the 16² capacitor weighting amplifies Hi-lane noise ×256, so
+        // exact integer recovery needs a very quiet link (≈100 dB margin) —
+        // which is itself evidence for the paper's 4-bit analog ceiling.
+        let pts = fidelity_study(&[100.0], &[8], None, 200, 11);
+        assert!(pts[0].exact_rate > 0.95, "exact rate {}", pts[0].exact_rate);
+    }
+
+    #[test]
+    fn longer_vectors_are_harder() {
+        // Same margin, larger K → absolute lane noise scales with K while
+        // the signal grows only ~√K for random operands: fidelity drops.
+        let pts = fidelity_study(&[20.0], &[4, 64], None, 300, 13);
+        assert!(pts[1].relative_rmse >= pts[0].relative_rmse);
+    }
+
+    #[test]
+    fn coarse_adc_dominates_at_high_margin() {
+        let ideal = fidelity_study(&[50.0], &[16], None, 200, 17);
+        let coarse = fidelity_study(&[50.0], &[16], Some(6), 200, 17);
+        assert!(coarse[0].relative_rmse > ideal[0].relative_rmse);
+    }
+
+    #[test]
+    fn study_covers_grid() {
+        let pts = fidelity_study(&[0.0, 5.0], &[4, 8, 16], Some(8), 20, 19);
+        assert_eq!(pts.len(), 6);
+        for p in pts {
+            assert!(p.relative_rmse.is_finite());
+            assert!((0.0..=1.0).contains(&p.exact_rate));
+        }
+    }
+}

@@ -1,0 +1,51 @@
+//! # SPOGA — Scalable Photonic GEMM Accelerator (full-stack reproduction)
+//!
+//! Reproduction of *"Scaling Analog Photonic Accelerators for Byte-Size,
+//! Integer General Matrix Multiply (GEMM) Kernels"* (Alo, Vatsavai, Thakkar —
+//! ISVLSI 2024), built as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L1** — a Pallas kernel (`python/compile/kernels/spoga_gemm.py`) that
+//!   computes INT8 GEMM with the SPOGA dataflow (nibble slicing, three radix
+//!   lanes, in-transduction positional weighting), AOT-lowered to HLO text.
+//! * **L2** — JAX model graphs (quantized MLP / CNN forward) calling the
+//!   kernel, exported once at build time by `make artifacts`.
+//! * **L3** — this crate: the photonic-accelerator analytical models, the
+//!   transaction-level simulator, the PJRT runtime that executes the AOT
+//!   artifacts, and the request coordinator. Python never runs at runtime.
+//!
+//! ## Module map
+//!
+//! | module | role |
+//! |---|---|
+//! | [`units`] | dB/dBm/watt/time conversions used by all photonic models |
+//! | [`devices`] | parametric component models (MRR, laser, BPCA, ADC/DAC, …) |
+//! | [`optics`] | optical link budget + scalability solver (paper Table I) |
+//! | [`bitslice`] | exact integer semantics of nibble-sliced arithmetic (+ INT16 extension) |
+//! | [`fidelity`] | analog-noise Monte-Carlo (the 4-bit-analog premise, quantified) |
+//! | [`arch`] | accelerator architectures: SPOGA (MWA), HOLYLIGHT (MAW), DEAPCNN (AMW) |
+//! | [`dnn`] | CNN workload library (4 networks) + im2col GEMM conversion |
+//! | [`sim`] | transaction-level simulator (mapper, scheduler, accounting) |
+//! | [`metrics`] | FPS / FPS/W / FPS/W/mm² aggregation, gmean, report tables |
+//! | [`runtime`] | PJRT CPU client: load + execute `artifacts/*.hlo.txt` |
+//! | [`coordinator`] | request router, dynamic batcher, worker pool |
+//! | [`testing`] | deterministic mini property-testing harness |
+//! | [`benchkit`] | timing helpers for the harness-free benches |
+//! | [`report`] | plain-text table rendering shared by benches/examples |
+
+pub mod arch;
+pub mod benchkit;
+pub mod bitslice;
+pub mod coordinator;
+pub mod devices;
+pub mod dnn;
+pub mod error;
+pub mod fidelity;
+pub mod metrics;
+pub mod optics;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod testing;
+pub mod units;
+
+pub use error::{Error, Result};

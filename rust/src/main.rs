@@ -1,0 +1,262 @@
+//! `spoga` — CLI for the SPOGA reproduction.
+//!
+//! Subcommands (hand-rolled parsing; no clap in the offline dep set):
+//!
+//! ```text
+//! spoga scalability                       reproduce paper Table I
+//! spoga table2                            print paper Table II constants
+//! spoga fig5 [--cores N] [--metric M]     reproduce Fig 5(a/b/c) rows
+//! spoga gemm [--artifact NAME]            run an AOT GEMM vs golden model
+//! spoga serve [--requests N] [--workers W] self-driven serving demo
+//! spoga info                              artifact + platform diagnostics
+//! ```
+
+use std::collections::HashMap;
+
+use spoga::metrics::{build_figure, Metric, FIG5_CORES};
+use spoga::optics::{paper_table1, solve_table1};
+use spoga::report::{fmt_sig, Table};
+use spoga::units::DataRate;
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut m = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            let val = args.get(i + 1).cloned().unwrap_or_default();
+            m.insert(key.to_string(), val);
+            i += 2;
+        } else {
+            i += 1;
+        }
+    }
+    m
+}
+
+fn cmd_scalability() {
+    let solved = solve_table1();
+    let paper = paper_table1();
+    let mut t = Table::new(vec![
+        "Architecture",
+        "1 GS/s (N,M)",
+        "5 GS/s (N,M)",
+        "10 GS/s (N,M)",
+        "paper",
+    ]);
+    for (s, p) in solved.rows.iter().zip(paper.rows.iter()) {
+        let cell = |nm: (usize, usize)| format!("{}/{}", nm.0, nm.1);
+        t.row(vec![
+            s.label.clone(),
+            cell(s.nm[0]),
+            cell(s.nm[1]),
+            cell(s.nm[2]),
+            format!("{} {} {}", cell(p.nm[0]), cell(p.nm[1]), cell(p.nm[2])),
+        ]);
+    }
+    println!("Table I — scalability analysis (solved vs paper):\n{}", t.render());
+}
+
+fn cmd_table2() {
+    use spoga::devices::{Adc, Dac};
+    let mut t = Table::new(vec!["Converter", "BR (GS/s)", "Area (mm2)", "Power (mW)"]);
+    for dr in DataRate::ALL {
+        let a = Adc::for_rate(dr);
+        t.row(vec![
+            "ADC".to_string(),
+            dr.gs().to_string(),
+            a.area_mm2.to_string(),
+            a.power_mw.to_string(),
+        ]);
+    }
+    for dr in DataRate::ALL {
+        let d = Dac::for_rate(dr);
+        t.row(vec![
+            "DAC".to_string(),
+            dr.gs().to_string(),
+            d.area_mm2.to_string(),
+            d.power_mw.to_string(),
+        ]);
+    }
+    println!("Table II — ADC/DAC design points:\n{}", t.render());
+}
+
+fn cmd_fig5(flags: &HashMap<String, String>) {
+    let cores: usize =
+        flags.get("cores").and_then(|v| v.parse().ok()).unwrap_or(FIG5_CORES);
+    let metric = match flags.get("metric").map(String::as_str) {
+        Some("fpsw") => Metric::FpsPerW,
+        Some("fpswmm2") => Metric::FpsPerWPerMm2,
+        _ => Metric::Fps,
+    };
+    let fig = build_figure(metric, &DataRate::ALL, cores).expect("figure");
+    let mut header = vec!["Variant".to_string()];
+    header.extend(fig.models.iter().cloned());
+    header.push("gmean".to_string());
+    let mut t = Table::new(header);
+    for v in &fig.variants {
+        let mut row = vec![v.name.clone()];
+        row.extend(v.per_model.iter().map(|x| fmt_sig(*x, 3)));
+        row.push(fmt_sig(v.gmean, 3));
+        t.row(row);
+    }
+    println!("{} ({cores} cores/accelerator):\n{}", metric.figure(), t.render());
+}
+
+fn cmd_gemm(flags: &HashMap<String, String>) {
+    let name = flags
+        .get("artifact")
+        .cloned()
+        .unwrap_or_else(|| "gemm_64x64x64".to_string());
+    let mut eng = spoga::runtime::Engine::new(
+        flags.get("artifacts").map(String::as_str).unwrap_or("artifacts"),
+    )
+    .expect("engine (run `make artifacts` first)");
+    let meta = eng.manifest().get(&name).expect("artifact").clone();
+    let (m, k) = (meta.inputs[0].dims[0], meta.inputs[0].dims[1]);
+    let n = meta.inputs[1].dims[1];
+    let a: Vec<i32> = (0..m * k).map(|i| ((i * 37 + 11) % 255) as i32 - 127).collect();
+    let b: Vec<i32> = (0..k * n).map(|i| ((i * 53 + 7) % 255) as i32 - 127).collect();
+    let t0 = std::time::Instant::now();
+    let out = eng.execute_i32_single(&name, &[&a, &b]).expect("execute");
+    let dt = t0.elapsed();
+    let a8: Vec<i8> = a.iter().map(|&v| v as i8).collect();
+    let b8: Vec<i8> = b.iter().map(|&v| v as i8).collect();
+    let golden = spoga::bitslice::gemm_i32(&a8, &b8, m, k, n).expect("golden");
+    assert_eq!(out, golden, "artifact disagrees with golden model!");
+    println!("{name}: {m}x{k}x{n} in {dt:?} — matches bitslice golden model");
+}
+
+fn cmd_serve(flags: &HashMap<String, String>) {
+    use spoga::coordinator::{Coordinator, CoordinatorConfig};
+    let requests: usize = flags.get("requests").and_then(|v| v.parse().ok()).unwrap_or(256);
+    let workers: usize = flags.get("workers").and_then(|v| v.parse().ok()).unwrap_or(2);
+    let cfg = CoordinatorConfig {
+        artifact_dir: flags
+            .get("artifacts")
+            .cloned()
+            .unwrap_or_else(|| "artifacts".to_string()),
+        workers,
+        ..Default::default()
+    };
+    let c = Coordinator::start(cfg).expect("coordinator");
+    let h = c.handle();
+    let t0 = std::time::Instant::now();
+    let clients = 4usize;
+    let per = requests / clients;
+    let joins: Vec<_> = (0..clients)
+        .map(|t| {
+            let h = h.clone();
+            std::thread::spawn(move || {
+                for i in 0..per {
+                    let row = vec![((t * per + i) % 100) as i32; 784];
+                    h.infer_mlp(row).expect("infer");
+                }
+            })
+        })
+        .collect();
+    for j in joins {
+        j.join().unwrap();
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "{} requests in {dt:.3}s = {:.0} req/s",
+        per * clients,
+        per as f64 * clients as f64 / dt
+    );
+    println!("{}", h.stats().summary());
+    c.shutdown();
+}
+
+fn cmd_trace(flags: &HashMap<String, String>) {
+    use spoga::arch::accel::Accelerator;
+    use spoga::optics::link_budget::ArchClass;
+    use spoga::sim::engine::simulate_frame;
+    let path = flags.get("file").cloned().unwrap_or_else(|| {
+        "examples/traces/edge_net.trace".to_string()
+    });
+    let model = spoga::dnn::load_trace(&path).expect("parse trace");
+    println!(
+        "{}: {} layers, {:.3} GMACs/frame",
+        model.name,
+        model.layers.len(),
+        model.total_macs() as f64 / 1e9
+    );
+    let cores: usize = flags.get("cores").and_then(|v| v.parse().ok()).unwrap_or(FIG5_CORES);
+    let mut t = Table::new(vec!["Accelerator", "FPS", "FPS/W", "avg W"]);
+    for arch in [ArchClass::Mwa, ArchClass::Maw, ArchClass::Amw] {
+        for dr in DataRate::ALL {
+            let accel = Accelerator::equal_cores(arch, dr, cores).unwrap();
+            let f = simulate_frame(&accel, &model.workload());
+            t.row(vec![
+                f.accelerator.clone(),
+                fmt_sig(f.fps(), 3),
+                fmt_sig(f.fps_per_w(), 3),
+                fmt_sig(f.avg_power_w(), 3),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+}
+
+fn cmd_fidelity() {
+    // Monte-Carlo sweep of dot-product fidelity vs link margin (the paper's
+    // 4-bit-analog premise, quantified). See rust/src/fidelity/.
+    let margins = [0.0, 10.0, 20.0, 30.0, 40.0, 60.0];
+    let ks = [16usize, 64, 249];
+    let pts = spoga::fidelity::fidelity_study(&margins, &ks, Some(8), 400, 99);
+    let mut t = Table::new(vec!["margin dB", "K", "rel. RMSE", "exact-rate"]);
+    for p in pts {
+        t.row(vec![
+            format!("{}", p.margin_db),
+            p.k.to_string(),
+            format!("{:.2e}", p.relative_rmse),
+            format!("{:.2}", p.exact_rate),
+        ]);
+    }
+    println!(
+        "Analog fidelity (8-bit PWAB ADC, 400 Monte-Carlo dots/point):
+{}",
+        t.render()
+    );
+}
+
+fn cmd_info() {
+    let eng = spoga::runtime::Engine::new("artifacts");
+    match eng {
+        Ok(eng) => {
+            println!("platform: {}", eng.platform());
+            for a in &eng.manifest().artifacts {
+                println!(
+                    "  {} <- {:?} -> {:?}",
+                    a.name,
+                    a.inputs.iter().map(|t| t.dims.clone()).collect::<Vec<_>>(),
+                    a.outputs.iter().map(|t| t.dims.clone()).collect::<Vec<_>>()
+                );
+            }
+        }
+        Err(e) => println!("no artifacts loaded ({e}); run `make artifacts`"),
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let flags = parse_flags(&args[args.len().min(1)..]);
+    match cmd {
+        "scalability" => cmd_scalability(),
+        "table2" => cmd_table2(),
+        "fig5" => cmd_fig5(&flags),
+        "gemm" => cmd_gemm(&flags),
+        "serve" => cmd_serve(&flags),
+        "trace" => cmd_trace(&flags),
+        "fidelity" => cmd_fidelity(),
+        "info" => cmd_info(),
+        _ => {
+            println!(
+                "spoga — Scalable Photonic GEMM Accelerator reproduction\n\
+                 usage: spoga <scalability|table2|fig5|gemm|serve|trace|fidelity|info> [flags]\n\
+                 see README.md"
+            );
+        }
+    }
+}

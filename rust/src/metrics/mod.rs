@@ -1,0 +1,171 @@
+//! Evaluation metrics and Fig. 5 data assembly.
+//!
+//! Builds the paper's three figures — FPS, FPS/W, FPS/W/mm² — over the
+//! 4 CNNs × {SPOGA, HOLYLIGHT, DEAPCNN} × data-rate grid, with geometric
+//! means matching the paper's gmean bars.
+
+use crate::arch::accel::Accelerator;
+use crate::dnn::models::CnnModel;
+use crate::optics::link_budget::ArchClass;
+use crate::sim::engine::simulate_frame;
+use crate::units::DataRate;
+use crate::Result;
+
+/// Geometric mean of a nonempty slice.
+pub fn gmean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+/// Which of the paper's three metrics a figure reports.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Metric {
+    /// Fig. 5(a): frames per second.
+    Fps,
+    /// Fig. 5(b): FPS per watt.
+    FpsPerW,
+    /// Fig. 5(c): FPS per watt per mm².
+    FpsPerWPerMm2,
+}
+
+impl Metric {
+    /// Figure label in the paper.
+    pub fn figure(self) -> &'static str {
+        match self {
+            Metric::Fps => "Fig. 5(a) FPS",
+            Metric::FpsPerW => "Fig. 5(b) FPS/W",
+            Metric::FpsPerWPerMm2 => "Fig. 5(c) FPS/W/mm2",
+        }
+    }
+}
+
+/// One accelerator variant's results across the benchmark CNNs.
+#[derive(Debug, Clone)]
+pub struct VariantResults {
+    /// Variant name ("SPOGA_10", ...).
+    pub name: String,
+    /// Per-model metric values, in [`CnnModel::paper_benchmarks`] order.
+    pub per_model: Vec<f64>,
+    /// Geometric mean across models (the paper's gmean bar).
+    pub gmean: f64,
+}
+
+/// A full figure: all variants at the requested data rates.
+#[derive(Debug, Clone)]
+pub struct Figure {
+    /// Which metric this figure reports.
+    pub metric: Metric,
+    /// Model names, column order.
+    pub models: Vec<String>,
+    /// One row per accelerator variant.
+    pub variants: Vec<VariantResults>,
+}
+
+impl Figure {
+    /// Look up a variant row by name.
+    pub fn variant(&self, name: &str) -> Option<&VariantResults> {
+        self.variants.iter().find(|v| v.name == name)
+    }
+
+    /// gmean ratio `a / b` between two variants.
+    pub fn gmean_ratio(&self, a: &str, b: &str) -> Option<f64> {
+        Some(self.variant(a)?.gmean / self.variant(b)?.gmean)
+    }
+}
+
+/// Physical cores per accelerator in the Fig. 5 reproduction (equal-core
+/// normalization; baselines group theirs into 16 slice quadruplets).
+pub const FIG5_CORES: usize = 64;
+
+/// Evaluate `metric` for all three architectures at the given `rates` under
+/// the equal-core-count normalization (DESIGN.md §5.2).
+pub fn build_figure(metric: Metric, rates: &[DataRate], cores: usize) -> Result<Figure> {
+    let models = CnnModel::paper_benchmarks();
+    let mut variants = Vec::new();
+    for arch in [ArchClass::Mwa, ArchClass::Maw, ArchClass::Amw] {
+        for &dr in rates {
+            let accel = Accelerator::equal_cores(arch, dr, cores)?;
+            variants.push(evaluate_variant(&accel, metric, &models));
+        }
+    }
+    Ok(Figure {
+        metric,
+        models: models.iter().map(|m| m.name.to_string()).collect(),
+        variants,
+    })
+}
+
+/// Evaluate one accelerator variant across the benchmark models.
+pub fn evaluate_variant(
+    accel: &Accelerator,
+    metric: Metric,
+    models: &[CnnModel],
+) -> VariantResults {
+    // Fig. 5(c) divides by the electronic (CMOS) die area — the area the
+    // paper's Table II models (see Core::electronic_area_mm2).
+    let area = accel.electronic_area_mm2();
+    let per_model: Vec<f64> = models
+        .iter()
+        .map(|m| {
+            let f = simulate_frame(accel, &m.workload());
+            match metric {
+                Metric::Fps => f.fps(),
+                Metric::FpsPerW => f.fps_per_w(),
+                Metric::FpsPerWPerMm2 => f.fps_per_w_per_mm2(area),
+            }
+        })
+        .collect();
+    VariantResults { name: accel.name.clone(), gmean: gmean(&per_model), per_model }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gmean_basics() {
+        assert!((gmean(&[1.0, 100.0]) - 10.0).abs() < 1e-9);
+        assert!((gmean(&[7.0]) - 7.0).abs() < 1e-12);
+        assert_eq!(gmean(&[]), 0.0);
+    }
+
+    #[test]
+    fn figure_contains_all_variants() {
+        let fig = build_figure(Metric::Fps, &[DataRate::Gs10], FIG5_CORES).unwrap();
+        assert_eq!(fig.variants.len(), 3);
+        assert!(fig.variant("SPOGA_10").is_some());
+        assert!(fig.variant("HOLYLIGHT_10").is_some());
+        assert!(fig.variant("DEAPCNN_10").is_some());
+        assert_eq!(fig.models.len(), 4);
+    }
+
+    #[test]
+    fn spoga_wins_fps_gmean_at_10gs() {
+        let fig = build_figure(Metric::Fps, &[DataRate::Gs10], FIG5_CORES).unwrap();
+        let r_deap = fig.gmean_ratio("SPOGA_10", "DEAPCNN_10").unwrap();
+        let r_holy = fig.gmean_ratio("SPOGA_10", "HOLYLIGHT_10").unwrap();
+        assert!(r_deap > 1.0, "SPOGA/DEAPCNN = {r_deap}");
+        assert!(r_holy > 1.0, "SPOGA/HOLYLIGHT = {r_holy}");
+        // Paper: 14.4× and 11.1× — require the same ordering.
+        assert!(r_deap > r_holy, "DEAPCNN should lose by more than HOLYLIGHT");
+    }
+
+    #[test]
+    fn per_model_values_positive() {
+        let fig = build_figure(Metric::FpsPerW, &[DataRate::Gs5], FIG5_CORES).unwrap();
+        for v in &fig.variants {
+            for (i, x) in v.per_model.iter().enumerate() {
+                assert!(*x > 0.0, "{} model {i}", v.name);
+            }
+            assert!(v.gmean > 0.0);
+        }
+    }
+
+    #[test]
+    fn gmean_ratio_missing_variant_is_none() {
+        let fig = build_figure(Metric::Fps, &[DataRate::Gs10], FIG5_CORES).unwrap();
+        assert!(fig.gmean_ratio("SPOGA_10", "nonexistent").is_none());
+    }
+}

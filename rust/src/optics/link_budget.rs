@@ -1,0 +1,363 @@
+//! Per-architecture optical link budget.
+//!
+//! Feasibility condition for an (N, M) configuration at data rate `BR` and
+//! per-wavelength laser power `P` (all in dB/dBm):
+//!
+//! ```text
+//! P  ≥  Θ(BR)  +  a·N  +  split(M)
+//! Θ(BR) = sensitivity(BR) + DR_margin(4-bit) + L_fixed + δ_calib(BR)
+//! ```
+//!
+//! * `a` — per-element optical loss slope (through-loss of the MRRs each
+//!   added vector element inserts into the path + waveguide propagation).
+//! * `split(M)` — fan-out loss `10·log10(M) + excess·log2(M)` for designs
+//!   that split each wavelength across M waveguides (MAW/AMW). SPOGA's MWA
+//!   organisation fixes M = 16 DPUs architecturally and feeds them from the
+//!   per-DPU carrier group, so no M-dependent split appears in its budget.
+//! * `sensitivity(BR)` — receiver law: TIA receivers degrade as
+//!   `10·log10(BR)`; SPOGA's time-integrating BPCA as `5·log10(BR)`
+//!   ([`crate::devices::photodetector`]).
+//! * `DR_margin` — dynamic-range margin to resolve 2⁴−1 analog steps:
+//!   `10·log10(15) ≈ 11.76 dB`.
+//! * `δ_calib` — small per-rate residual (≤0.25 dB) absorbing the difference
+//!   between the published converter/receiver design points and the ideal
+//!   noise-bandwidth law; pinned by the paper's Table I (DESIGN.md §5.1).
+
+use crate::devices::photodetector::BalancedPhotodetector;
+use crate::devices::splitter::SplitterTree;
+use crate::units::{ratio_to_db, DataRate};
+use crate::{Error, Result};
+
+/// The three GEMM-core organisations compared in Table I.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ArchClass {
+    /// Modulation–Aggregation–Weighting (HOLYLIGHT [3]).
+    Maw,
+    /// Aggregation–Modulation–Weighting (DEAPCNN [9]).
+    Amw,
+    /// Modulation–Weighting–Aggregation (SPOGA's organisation).
+    Mwa,
+}
+
+impl ArchClass {
+    /// Human-readable name used in reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            ArchClass::Maw => "HOLYLIGHT (MAW)",
+            ArchClass::Amw => "DEAPCNN (AMW)",
+            ArchClass::Mwa => "SPOGA (MWA)",
+        }
+    }
+}
+
+/// 4-bit analog dynamic-range margin, dB: `10·log10(2⁴ − 1)`.
+pub fn dynamic_range_margin_db(bits: u32) -> f64 {
+    ratio_to_db((1u64 << bits) as f64 - 1.0)
+}
+
+/// Calibrated optical link budget for one architecture class.
+#[derive(Debug, Clone)]
+pub struct LinkBudget {
+    /// Architecture this budget describes.
+    pub arch: ArchClass,
+    /// Per-element loss slope `a`, dB per vector element.
+    pub slope_db_per_element: f64,
+    /// Fixed insertion losses (coupler, modulator, mux), dB.
+    pub fixed_loss_db: f64,
+    /// Fan-out splitter model; `None` for MWA (no M-dependent split).
+    pub splitter: Option<SplitterTree>,
+    /// Receiver (sets the sensitivity-vs-rate law).
+    pub receiver: BalancedPhotodetector,
+    /// Analog operand width (4-bit in the paper).
+    pub analog_bits: u32,
+    /// Per-rate calibration residuals `δ(BR)`, dB, indexed like
+    /// [`DataRate::ALL`].
+    pub calib_db: [f64; 3],
+    /// Architectural cap on M (e.g. SPOGA fixes M = 16 DPUs); `None` = no cap.
+    pub m_cap: Option<usize>,
+    /// Architectural cap on N (DPU aggregation-lane length limit).
+    pub n_cap: Option<usize>,
+}
+
+impl LinkBudget {
+    /// HOLYLIGHT (MAW) budget, calibrated per DESIGN.md §5.1.
+    ///
+    /// `a = 0.177 dB` reproduces the paper's 43/21/15 square scaling; the
+    /// fixed loss (1.15 dB ≈ grating coupler 1.0 + mux 0.15) closes the
+    /// budget exactly at the 1 GS/s design point with 10 dBm lasers.
+    pub fn holylight() -> Self {
+        LinkBudget {
+            arch: ArchClass::Maw,
+            slope_db_per_element: 0.177,
+            fixed_loss_db: 1.15,
+            splitter: Some(SplitterTree::default()),
+            receiver: BalancedPhotodetector::tia(),
+            analog_bits: 4,
+            calib_db: [0.0, 0.0, -0.25],
+            m_cap: None,
+            n_cap: None,
+        }
+    }
+
+    /// DEAPCNN (AMW) budget.
+    ///
+    /// `a = 0.197 dB` (AMW's aggregation-first order puts more resonant
+    /// structures in each element's path); fixed loss 2.45 dB (extra mux
+    /// stage before modulation).
+    pub fn deapcnn() -> Self {
+        LinkBudget {
+            arch: ArchClass::Amw,
+            slope_db_per_element: 0.197,
+            fixed_loss_db: 2.45,
+            splitter: Some(SplitterTree::default()),
+            receiver: BalancedPhotodetector::tia(),
+            analog_bits: 4,
+            calib_db: [0.0, 0.0, -0.25],
+            m_cap: None,
+            n_cap: None,
+        }
+    }
+
+    /// SPOGA (MWA) budget.
+    ///
+    /// `a = 0.058 dB` per OAME (each added OAME inserts only its through-port
+    /// into the shared aggregation lane — no per-element drop), no
+    /// M-dependent split (M = 16 DPUs fixed architecturally, each DPU fed by
+    /// its own 4-wavelength carrier group), BPCA integrating receiver
+    /// (`5·log10(BR)` law), fixed loss 11.76 dB (coupler + OAME modulator and
+    /// weight MRR ILs + lane mux + homodyne superposition crosstalk penalty —
+    /// see DESIGN.md §5.1 decomposition).
+    pub fn spoga() -> Self {
+        LinkBudget {
+            arch: ArchClass::Mwa,
+            slope_db_per_element: 0.058,
+            fixed_loss_db: 11.76,
+            splitter: None,
+            receiver: BalancedPhotodetector::time_integrating(),
+            analog_bits: 4,
+            calib_db: [0.0, 0.105, 0.16],
+            m_cap: Some(16),
+            n_cap: Some(249),
+        }
+    }
+
+    /// The same budget with a different analog operand width.
+    ///
+    /// This is the paper's §I premise: raising the analog precision to
+    /// 8-bit demands `10·log10(2⁸−1) ≈ 24 dB` of dynamic-range margin —
+    /// 12.3 dB more than 4-bit — and the achievable parallelism collapses
+    /// (to ~1 multiplication per core in the paper's account). SPOGA instead
+    /// keeps 4-bit analog operands and composes INT8 via bit slicing.
+    pub fn with_analog_bits(mut self, bits: u32) -> Self {
+        self.analog_bits = bits;
+        self
+    }
+
+    /// Budget for a named architecture class.
+    pub fn for_arch(arch: ArchClass) -> Self {
+        match arch {
+            ArchClass::Maw => Self::holylight(),
+            ArchClass::Amw => Self::deapcnn(),
+            ArchClass::Mwa => Self::spoga(),
+        }
+    }
+
+    fn calib(&self, dr: DataRate) -> f64 {
+        match dr {
+            DataRate::Gs1 => self.calib_db[0],
+            DataRate::Gs5 => self.calib_db[1],
+            DataRate::Gs10 => self.calib_db[2],
+        }
+    }
+
+    /// Receiver threshold Θ(BR), dBm: minimum per-wavelength power at the
+    /// laser for N = 0, M = 1.
+    pub fn threshold_dbm(&self, dr: DataRate) -> f64 {
+        self.receiver.sensitivity_dbm(dr)
+            + dynamic_range_margin_db(self.analog_bits)
+            + self.fixed_loss_db
+            + self.calib(dr)
+    }
+
+    /// Total link loss for an (n, m) configuration, dB (excluding Θ terms).
+    pub fn config_loss_db(&self, n: usize, m: usize) -> f64 {
+        let split = self.splitter.as_ref().map_or(0.0, |s| s.loss_db(m));
+        self.slope_db_per_element * n as f64 + split
+    }
+
+    /// Does the budget close for (n, m) at `laser_dbm`, data rate `dr`?
+    pub fn feasible(&self, n: usize, m: usize, dr: DataRate, laser_dbm: f64) -> bool {
+        if n == 0 || m == 0 {
+            return true;
+        }
+        if self.m_cap.is_some_and(|cap| m > cap) || self.n_cap.is_some_and(|cap| n > cap) {
+            return false;
+        }
+        laser_dbm >= self.threshold_dbm(dr) + self.config_loss_db(n, m)
+    }
+
+    /// Largest feasible N for a fixed M (0 if even N = 1 does not close).
+    pub fn max_n_given_m(&self, m: usize, dr: DataRate, laser_dbm: f64) -> usize {
+        // Budget is monotonically decreasing in N: binary search the boundary.
+        let mut lo = 0usize; // feasible
+        let mut hi = self.n_cap.unwrap_or(4096) + 1; // infeasible sentinel
+        if self.feasible(hi - 1, m, dr, laser_dbm) {
+            return hi - 1;
+        }
+        while hi - lo > 1 {
+            let mid = lo + (hi - lo) / 2;
+            if self.feasible(mid, m, dr, laser_dbm) {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        lo
+    }
+
+    /// Largest feasible square configuration N = M.
+    pub fn max_square(&self, dr: DataRate, laser_dbm: f64) -> usize {
+        let cap = self.n_cap.unwrap_or(4096).min(self.m_cap.unwrap_or(4096));
+        let mut best = 0;
+        let mut lo = 0usize;
+        let mut hi = cap + 1;
+        if self.feasible(cap, cap, dr, laser_dbm) {
+            return cap;
+        }
+        while hi - lo > 1 {
+            let mid = lo + (hi - lo) / 2;
+            if self.feasible(mid, mid, dr, laser_dbm) {
+                lo = mid;
+                best = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        best
+    }
+
+    /// The minimum laser power (dBm) that closes the budget for (n, m).
+    pub fn required_laser_dbm(&self, n: usize, m: usize, dr: DataRate) -> Result<f64> {
+        if n == 0 || m == 0 {
+            return Err(Error::Config(format!("degenerate configuration {n}x{m}")));
+        }
+        if self.m_cap.is_some_and(|cap| m > cap) || self.n_cap.is_some_and(|cap| n > cap) {
+            return Err(Error::Infeasible(format!(
+                "{}: ({n}, {m}) exceeds architectural caps {:?}/{:?}",
+                self.arch.name(),
+                self.n_cap,
+                self.m_cap
+            )));
+        }
+        Ok(self.threshold_dbm(dr) + self.config_loss_db(n, m))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn margin_for_4_bits_is_11_76db() {
+        assert!((dynamic_range_margin_db(4) - 11.7609).abs() < 1e-3);
+        assert!((dynamic_range_margin_db(8) - 24.065).abs() < 1e-2);
+    }
+
+    #[test]
+    fn feasibility_monotone_in_n() {
+        let lb = LinkBudget::holylight();
+        let n_max = lb.max_n_given_m(43, DataRate::Gs1, 10.0);
+        assert!(lb.feasible(n_max, 43, DataRate::Gs1, 10.0));
+        assert!(!lb.feasible(n_max + 1, 43, DataRate::Gs1, 10.0));
+        for n in 1..=n_max {
+            assert!(lb.feasible(n, 43, DataRate::Gs1, 10.0), "n={n}");
+        }
+    }
+
+    #[test]
+    fn feasibility_monotone_in_laser_power() {
+        let lb = LinkBudget::deapcnn();
+        for dbm in [-5.0, 0.0, 5.0, 10.0, 15.0] {
+            let n = lb.max_square(DataRate::Gs5, dbm);
+            let n_hi = lb.max_square(DataRate::Gs5, dbm + 1.0);
+            assert!(n_hi >= n, "power {dbm}: {n_hi} < {n}");
+        }
+    }
+
+    #[test]
+    fn higher_rate_never_increases_parallelism() {
+        for lb in [LinkBudget::holylight(), LinkBudget::deapcnn(), LinkBudget::spoga()] {
+            let n1 = lb.max_n_given_m(16, DataRate::Gs1, 10.0);
+            let n5 = lb.max_n_given_m(16, DataRate::Gs5, 10.0);
+            let n10 = lb.max_n_given_m(16, DataRate::Gs10, 10.0);
+            assert!(n1 >= n5 && n5 >= n10, "{}: {n1},{n5},{n10}", lb.arch.name());
+        }
+    }
+
+    #[test]
+    fn spoga_caps_enforced() {
+        let lb = LinkBudget::spoga();
+        assert!(!lb.feasible(250, 16, DataRate::Gs1, 30.0));
+        assert!(!lb.feasible(10, 17, DataRate::Gs1, 30.0));
+        assert_eq!(lb.max_n_given_m(16, DataRate::Gs1, 30.0), 249);
+    }
+
+    #[test]
+    fn required_laser_power_matches_feasibility_boundary() {
+        let lb = LinkBudget::holylight();
+        let p = lb.required_laser_dbm(43, 43, DataRate::Gs1).unwrap();
+        assert!(lb.feasible(43, 43, DataRate::Gs1, p));
+        assert!(!lb.feasible(43, 43, DataRate::Gs1, p - 0.01));
+    }
+
+    #[test]
+    fn required_laser_power_rejects_capped_configs() {
+        let lb = LinkBudget::spoga();
+        assert!(lb.required_laser_dbm(250, 16, DataRate::Gs1).is_err());
+        assert!(lb.required_laser_dbm(0, 16, DataRate::Gs1).is_err());
+    }
+
+    #[test]
+    fn calibration_residuals_are_small() {
+        // The δ values must stay small — they absorb design-point deviation
+        // from the ideal noise law, not act as free fit parameters.
+        for lb in [LinkBudget::holylight(), LinkBudget::deapcnn(), LinkBudget::spoga()] {
+            for d in lb.calib_db {
+                assert!(d.abs() <= 0.25, "{}: δ={d}", lb.arch.name());
+            }
+        }
+    }
+
+    #[test]
+    fn mwa_budget_is_linear_in_n() {
+        let lb = LinkBudget::spoga();
+        // Required power grows by exactly a·ΔN (no log terms).
+        let p1 = lb.required_laser_dbm(50, 16, DataRate::Gs1).unwrap();
+        let p2 = lb.required_laser_dbm(150, 16, DataRate::Gs1).unwrap();
+        assert!((p2 - p1 - 0.058 * 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn paper_premise_8bit_analog_collapses_parallelism() {
+        // §I: at 8-bit analog precision the dynamic-range margin eats the
+        // optical budget and per-core parallelism collapses toward 1.
+        for lb4 in [LinkBudget::holylight(), LinkBudget::deapcnn()] {
+            let n4 = lb4.max_square(DataRate::Gs1, 10.0);
+            let lb8 = lb4.clone().with_analog_bits(8);
+            let n8 = lb8.max_square(DataRate::Gs1, 10.0);
+            assert!(n8 < n4 / 3, "{}: {n4} -> {n8}", lb8.arch.name());
+            // At 10 GS/s the 8-bit budget barely closes at all.
+            let n8_fast = lb8.max_square(DataRate::Gs10, 10.0);
+            assert!(n8_fast <= 2, "{}: N={n8_fast} at 8-bit/10GS", lb8.arch.name());
+        }
+    }
+
+    #[test]
+    fn maw_budget_has_log_m_split_term() {
+        let lb = LinkBudget::holylight();
+        let p16 = lb.required_laser_dbm(10, 16, DataRate::Gs1).unwrap();
+        let p32 = lb.required_laser_dbm(10, 32, DataRate::Gs1).unwrap();
+        // Doubling M costs ≈ 3.01 dB fundamental + 0.18 dB excess.
+        assert!((p32 - p16 - 3.1903).abs() < 0.02);
+    }
+}

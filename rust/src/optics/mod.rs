@@ -1,0 +1,17 @@
+//! Optical link-budget analysis and the scalability study (paper Table I).
+//!
+//! The achievable parallelism of an incoherent photonic GEMM core — vector
+//! size **N** (elements per dot product) and **M** (dot products per core) —
+//! is bounded by the optical power budget: the laser must deliver enough
+//! power *per wavelength at the photodetector* to resolve 2⁴ analog levels
+//! after all splitting/propagation/device losses. This module implements the
+//! parametric budget of the paper's modelling references ([1], [2], [12]),
+//! calibrated against the paper's own published Table I (see DESIGN.md §5.1
+//! for the over-determination argument that fixes each architecture's loss
+//! slope and receiver law).
+
+pub mod link_budget;
+pub mod scalability;
+
+pub use link_budget::{ArchClass, LinkBudget};
+pub use scalability::{paper_table1, solve_table1, Table1, Table1Row};

@@ -1,0 +1,174 @@
+//! Scalability study — regenerates paper **Table I**.
+//!
+//! For each architecture and data rate the study reports the achievable
+//! (N, M): baselines solve the largest square N = M at 10 dBm lasers; the
+//! MWA rows fix M = 16 and solve N at 1, 5 and 10 dBm input optical power.
+
+use crate::optics::link_budget::{ArchClass, LinkBudget};
+use crate::units::DataRate;
+
+/// One row of Table I: (N, M) per data rate.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Table1Row {
+    /// Row label as printed in the paper.
+    pub label: String,
+    /// Architecture class the row describes.
+    pub arch: ArchClass,
+    /// Laser power used for this row, dBm.
+    pub laser_dbm: f64,
+    /// (N, M) per data rate, indexed like [`DataRate::ALL`].
+    pub nm: [(usize, usize); 3],
+}
+
+impl Table1Row {
+    /// Achievable N×M product at `dr` (the paper's parallelism figure).
+    pub fn parallelism(&self, dr: DataRate) -> usize {
+        let (n, m) = self.cell(dr);
+        n * m
+    }
+
+    /// (N, M) cell at data rate `dr`.
+    pub fn cell(&self, dr: DataRate) -> (usize, usize) {
+        match dr {
+            DataRate::Gs1 => self.nm[0],
+            DataRate::Gs5 => self.nm[1],
+            DataRate::Gs10 => self.nm[2],
+        }
+    }
+}
+
+/// The full Table I (5 rows × 3 data-rate columns).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Table1 {
+    /// Rows in paper order: HOLYLIGHT, DEAPCNN, MWA@1dBm, MWA@5dBm, MWA@10dBm.
+    pub rows: Vec<Table1Row>,
+}
+
+impl Table1 {
+    /// Look up a row by label prefix (e.g. "MWA (5dBm)").
+    pub fn row(&self, label: &str) -> Option<&Table1Row> {
+        self.rows.iter().find(|r| r.label == label)
+    }
+}
+
+/// Laser power assumed for the baseline (square-solve) rows, dBm.
+pub const BASELINE_LASER_DBM: f64 = 10.0;
+
+/// Solve the scalability study from the link-budget models.
+pub fn solve_table1() -> Table1 {
+    let mut rows = Vec::with_capacity(5);
+
+    for (label, lb) in [
+        ("HOLYLIGHT [3]", LinkBudget::holylight()),
+        ("DEAPCNN [9]", LinkBudget::deapcnn()),
+    ] {
+        let mut nm = [(0, 0); 3];
+        for (i, dr) in DataRate::ALL.iter().enumerate() {
+            let n = lb.max_square(*dr, BASELINE_LASER_DBM);
+            nm[i] = (n, n);
+        }
+        rows.push(Table1Row {
+            label: label.to_string(),
+            arch: lb.arch,
+            laser_dbm: BASELINE_LASER_DBM,
+            nm,
+        });
+    }
+
+    let lb = LinkBudget::spoga();
+    let m = lb.m_cap.expect("SPOGA fixes M");
+    for dbm in [1.0, 5.0, 10.0] {
+        let mut nm = [(0, 0); 3];
+        for (i, dr) in DataRate::ALL.iter().enumerate() {
+            nm[i] = (lb.max_n_given_m(m, *dr, dbm), m);
+        }
+        rows.push(Table1Row {
+            label: format!("MWA ({}dBm)", dbm as i64),
+            arch: ArchClass::Mwa,
+            laser_dbm: dbm,
+            nm,
+        });
+    }
+
+    Table1 { rows }
+}
+
+/// The paper's published Table I values (ground truth for validation).
+pub fn paper_table1() -> Table1 {
+    let row = |label: &str, arch, dbm, nm: [(usize, usize); 3]| Table1Row {
+        label: label.to_string(),
+        arch,
+        laser_dbm: dbm,
+        nm,
+    };
+    Table1 {
+        rows: vec![
+            row("HOLYLIGHT [3]", ArchClass::Maw, 10.0, [(43, 43), (21, 21), (15, 15)]),
+            row("DEAPCNN [9]", ArchClass::Amw, 10.0, [(36, 36), (17, 17), (12, 12)]),
+            row("MWA (1dBm)", ArchClass::Mwa, 1.0, [(94, 16), (32, 16), (5, 16)]),
+            row("MWA (5dBm)", ArchClass::Mwa, 5.0, [(163, 16), (101, 16), (74, 16)]),
+            row("MWA (10dBm)", ArchClass::Mwa, 10.0, [(249, 16), (187, 16), (160, 16)]),
+        ],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The headline validation: the solved table reproduces the paper's
+    /// Table I **cell for cell**.
+    #[test]
+    fn solved_table_matches_paper_exactly() {
+        let solved = solve_table1();
+        let paper = paper_table1();
+        assert_eq!(solved.rows.len(), paper.rows.len());
+        for (s, p) in solved.rows.iter().zip(paper.rows.iter()) {
+            assert_eq!(s.label, p.label);
+            assert_eq!(s.nm, p.nm, "row {}", s.label);
+        }
+    }
+
+    #[test]
+    fn spoga_has_highest_parallelism_everywhere() {
+        let t = solve_table1();
+        let spoga10 = t.row("MWA (10dBm)").unwrap();
+        for dr in DataRate::ALL {
+            for label in ["HOLYLIGHT [3]", "DEAPCNN [9]"] {
+                let base = t.row(label).unwrap();
+                assert!(
+                    spoga10.parallelism(dr) > base.parallelism(dr),
+                    "{label} at {dr}: {} vs {}",
+                    base.parallelism(dr),
+                    spoga10.parallelism(dr)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn parallelism_shrinks_with_rate() {
+        for row in solve_table1().rows {
+            assert!(row.parallelism(DataRate::Gs1) >= row.parallelism(DataRate::Gs5));
+            assert!(row.parallelism(DataRate::Gs5) >= row.parallelism(DataRate::Gs10));
+        }
+    }
+
+    #[test]
+    fn mwa_n_grows_with_laser_power() {
+        let t = solve_table1();
+        for dr in DataRate::ALL {
+            let n1 = t.row("MWA (1dBm)").unwrap().cell(dr).0;
+            let n5 = t.row("MWA (5dBm)").unwrap().cell(dr).0;
+            let n10 = t.row("MWA (10dBm)").unwrap().cell(dr).0;
+            assert!(n1 < n5 && n5 < n10);
+        }
+    }
+
+    #[test]
+    fn row_lookup_by_label() {
+        let t = solve_table1();
+        assert!(t.row("HOLYLIGHT [3]").is_some());
+        assert!(t.row("nope").is_none());
+    }
+}

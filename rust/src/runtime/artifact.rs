@@ -1,0 +1,216 @@
+//! Artifact manifest parsing.
+//!
+//! `artifacts/manifest.txt` is line-oriented (no serde in the vendored dep
+//! set): `name file in0,in1,... out0,...` where a tensor spec is
+//! `dtype:dim x dim x ...`, e.g. `i32:64x64`.
+
+use std::path::{Path, PathBuf};
+
+use crate::{Error, Result};
+
+/// Element type of a tensor at the artifact boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    /// 32-bit signed integer (the wire format for all SPOGA artifacts).
+    I32,
+    /// 32-bit float (reserved; not currently emitted).
+    F32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "i32" => Ok(DType::I32),
+            "f32" => Ok(DType::F32),
+            other => Err(Error::Artifact(format!("unknown dtype {other:?}"))),
+        }
+    }
+}
+
+/// Shape + dtype of one artifact input/output.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    /// Element type.
+    pub dtype: DType,
+    /// Dimensions (row-major).
+    pub dims: Vec<usize>,
+}
+
+impl TensorSpec {
+    fn parse(s: &str) -> Result<Self> {
+        let (dt, dims) = s
+            .split_once(':')
+            .ok_or_else(|| Error::Artifact(format!("bad tensor spec {s:?}")))?;
+        let dims = dims
+            .split('x')
+            .map(|d| {
+                d.parse::<usize>()
+                    .map_err(|_| Error::Artifact(format!("bad dim in {s:?}")))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TensorSpec { dtype: DType::parse(dt)?, dims })
+    }
+
+    /// Total element count.
+    pub fn elements(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    /// Leading (batch) dimension, if any.
+    pub fn batch(&self) -> usize {
+        self.dims.first().copied().unwrap_or(1)
+    }
+}
+
+/// One AOT-compiled computation.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    /// Artifact name (e.g. "gemm_64x64x64", "mlp_b8").
+    pub name: String,
+    /// HLO text file, relative to the artifact dir.
+    pub file: String,
+    /// Input tensor specs, positional.
+    pub inputs: Vec<TensorSpec>,
+    /// Output tensor specs (all current artifacts have exactly one).
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Parsed `manifest.txt`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// Directory the artifacts live in.
+    pub dir: PathBuf,
+    /// All artifacts, manifest order.
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    /// Load `dir/manifest.txt`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Artifact(format!(
+                "cannot read {} (did you run `make artifacts`?): {e}",
+                path.display()
+            ))
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text (exposed for tests).
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Self> {
+        let mut artifacts = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let fields: Vec<&str> = line.split_whitespace().collect();
+            if fields.len() != 4 {
+                return Err(Error::Artifact(format!(
+                    "manifest line {}: expected 4 fields, got {}",
+                    lineno + 1,
+                    fields.len()
+                )));
+            }
+            let parse_specs = |s: &str| -> Result<Vec<TensorSpec>> {
+                s.split(',').map(TensorSpec::parse).collect()
+            };
+            artifacts.push(ArtifactMeta {
+                name: fields[0].to_string(),
+                file: fields[1].to_string(),
+                inputs: parse_specs(fields[2])?,
+                outputs: parse_specs(fields[3])?,
+            });
+        }
+        if artifacts.is_empty() {
+            return Err(Error::Artifact("manifest has no artifacts".into()));
+        }
+        Ok(Manifest { dir, artifacts })
+    }
+
+    /// Find an artifact by name.
+    pub fn get(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| Error::Artifact(format!("unknown artifact {name:?}")))
+    }
+
+    /// Absolute path to an artifact's HLO file.
+    pub fn path_of(&self, meta: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&meta.file)
+    }
+
+    /// All MLP batch variants (name, batch), ascending by batch — used by
+    /// the coordinator's dynamic batcher.
+    pub fn mlp_batch_variants(&self) -> Vec<(String, usize)> {
+        let mut v: Vec<(String, usize)> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.name.starts_with("mlp_b"))
+            .map(|a| (a.name.clone(), a.inputs[0].batch()))
+            .collect();
+        v.sort_by_key(|(_, b)| *b);
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+gemm_64x64x64 gemm_64x64x64.hlo.txt i32:64x64,i32:64x64 i32:64x64
+mlp_b1 mlp_b1.hlo.txt i32:1x784 i32:1x10
+mlp_b8 mlp_b8.hlo.txt i32:8x784 i32:8x10
+";
+
+    #[test]
+    fn parses_sample_manifest() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        assert_eq!(m.artifacts.len(), 3);
+        let g = m.get("gemm_64x64x64").unwrap();
+        assert_eq!(g.inputs.len(), 2);
+        assert_eq!(g.inputs[0].dims, vec![64, 64]);
+        assert_eq!(g.outputs[0].elements(), 64 * 64);
+    }
+
+    #[test]
+    fn unknown_artifact_is_error() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        assert!(m.get("nope").is_err());
+    }
+
+    #[test]
+    fn bad_lines_rejected() {
+        assert!(Manifest::parse("just two fields", PathBuf::new()).is_err());
+        assert!(Manifest::parse("a b c:notadim d", PathBuf::new()).is_err());
+        assert!(Manifest::parse("a b q99:1 i32:1", PathBuf::new()).is_err());
+        assert!(Manifest::parse("", PathBuf::new()).is_err());
+    }
+
+    #[test]
+    fn comments_and_blanks_skipped() {
+        let text = format!("# header\n\n{SAMPLE}");
+        let m = Manifest::parse(&text, PathBuf::new()).unwrap();
+        assert_eq!(m.artifacts.len(), 3);
+    }
+
+    #[test]
+    fn mlp_variants_sorted_by_batch() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        let v = m.mlp_batch_variants();
+        assert_eq!(v, vec![("mlp_b1".into(), 1), ("mlp_b8".into(), 8)]);
+    }
+
+    #[test]
+    fn tensor_spec_parsing() {
+        let t = TensorSpec::parse("i32:2x3x4").unwrap();
+        assert_eq!(t.dims, vec![2, 3, 4]);
+        assert_eq!(t.elements(), 24);
+        assert_eq!(t.batch(), 2);
+        assert!(TensorSpec::parse("i32").is_err());
+    }
+}

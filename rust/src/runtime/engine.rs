@@ -1,0 +1,132 @@
+//! PJRT execution engine: compile once, execute many.
+
+use std::collections::HashMap;
+
+use crate::runtime::artifact::{ArtifactMeta, DType, Manifest};
+use crate::{Error, Result};
+
+/// A compiled artifact ready to run.
+struct Compiled {
+    exe: xla::PjRtLoadedExecutable,
+    meta: ArtifactMeta,
+}
+
+/// PJRT CPU engine owning a client and the compiled executables.
+///
+/// Not `Sync` (PJRT handles are thread-affine in the `xla` crate); the
+/// coordinator gives each worker thread its own `Engine`.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    compiled: HashMap<String, Compiled>,
+}
+
+impl Engine {
+    /// Create an engine over an artifact directory (lazy compilation).
+    pub fn new(artifact_dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Engine { client, manifest, compiled: HashMap::new() })
+    }
+
+    /// The manifest this engine serves.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Ensure `name` is compiled; returns compile time in seconds.
+    pub fn warmup(&mut self, name: &str) -> Result<f64> {
+        let t0 = std::time::Instant::now();
+        self.ensure_compiled(name)?;
+        Ok(t0.elapsed().as_secs_f64())
+    }
+
+    /// Compile every artifact in the manifest.
+    pub fn warmup_all(&mut self) -> Result<()> {
+        let names: Vec<String> =
+            self.manifest.artifacts.iter().map(|a| a.name.clone()).collect();
+        for n in names {
+            self.ensure_compiled(&n)?;
+        }
+        Ok(())
+    }
+
+    fn ensure_compiled(&mut self, name: &str) -> Result<()> {
+        if self.compiled.contains_key(name) {
+            return Ok(());
+        }
+        let meta = self.manifest.get(name)?.clone();
+        let path = self.manifest.path_of(&meta);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| Error::Artifact(format!("non-utf8 path {path:?}")))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.compiled.insert(name.to_string(), Compiled { exe, meta });
+        Ok(())
+    }
+
+    /// Execute artifact `name` with positional int32 inputs.
+    ///
+    /// Each input must match the manifest spec's element count; outputs are
+    /// returned as flat row-major int32 vectors (one per output spec).
+    pub fn execute_i32(&mut self, name: &str, inputs: &[&[i32]]) -> Result<Vec<Vec<i32>>> {
+        self.ensure_compiled(name)?;
+        let c = &self.compiled[name];
+        if inputs.len() != c.meta.inputs.len() {
+            return Err(Error::Shape(format!(
+                "{name}: {} inputs supplied, {} expected",
+                inputs.len(),
+                c.meta.inputs.len()
+            )));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (buf, spec)) in inputs.iter().zip(&c.meta.inputs).enumerate() {
+            if spec.dtype != DType::I32 {
+                return Err(Error::Shape(format!("{name}: input {i} is not i32")));
+            }
+            if buf.len() != spec.elements() {
+                return Err(Error::Shape(format!(
+                    "{name}: input {i} has {} elements, expected {} ({:?})",
+                    buf.len(),
+                    spec.elements(),
+                    spec.dims
+                )));
+            }
+            let dims: Vec<i64> = spec.dims.iter().map(|&d| d as i64).collect();
+            literals.push(xla::Literal::vec1(buf).reshape(&dims)?);
+        }
+        let result = c.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1()?;
+        Ok(vec![out.to_vec::<i32>()?])
+    }
+
+    /// Convenience: single-output execution.
+    pub fn execute_i32_single(&mut self, name: &str, inputs: &[&[i32]]) -> Result<Vec<i32>> {
+        Ok(self.execute_i32(name, inputs)?.remove(0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Engine tests live in `rust/tests/runtime_roundtrip.rs` (they need the
+    //! artifacts built by `make artifacts`); here we only cover pure logic.
+
+    use super::*;
+
+    #[test]
+    fn missing_artifact_dir_is_artifact_error() {
+        match Engine::new("/nonexistent/path") {
+            Err(Error::Artifact(msg)) => assert!(msg.contains("make artifacts")),
+            Err(other) => panic!("wrong error kind: {other}"),
+            Ok(_) => panic!("engine should not load from a missing dir"),
+        }
+    }
+}

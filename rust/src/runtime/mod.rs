@@ -1,0 +1,12 @@
+//! PJRT runtime: load and execute the AOT artifacts from `make artifacts`.
+//!
+//! Python never runs here — the artifacts are HLO **text** modules lowered
+//! once at build time; this module parses the manifest, compiles each module
+//! on the PJRT CPU client (`xla` crate) and executes them with concrete
+//! int32 buffers on the request path.
+
+pub mod artifact;
+pub mod engine;
+
+pub use artifact::{ArtifactMeta, Manifest, TensorSpec};
+pub use engine::Engine;

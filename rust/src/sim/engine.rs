@@ -1,0 +1,137 @@
+//! The transaction-level simulation engine.
+
+use crate::arch::accel::Accelerator;
+use crate::arch::cost::EnergyBreakdown;
+use crate::dnn::workload::Workload;
+use crate::sim::stats::{FrameStats, LayerStats};
+
+/// Simulation engine over one accelerator.
+///
+/// Layers execute sequentially (each consumes the previous one's output);
+/// within a layer the GEMM's tiles spread across all logical cores — the
+/// standard "perfectly divisible work" transaction-level approximation, with
+/// the fill/drain captured by the ceil() and the DEAS pipeline-fill latency
+/// for the baselines.
+#[derive(Debug, Clone)]
+pub struct SimEngine {
+    /// The accelerator being simulated.
+    pub accel: Accelerator,
+}
+
+impl SimEngine {
+    /// New engine for an accelerator.
+    pub fn new(accel: Accelerator) -> Self {
+        SimEngine { accel }
+    }
+
+    /// Simulate one inference frame of `workload`.
+    pub fn frame(&self, workload: &Workload) -> FrameStats {
+        let core = &self.accel.core;
+        let logical = self.accel.logical_cores().max(1) as u64;
+        let step_s = core.dr.step_seconds();
+        let mut layers = Vec::with_capacity(workload.ops.len());
+        let mut total_latency = 0.0f64;
+        let mut total_energy = EnergyBreakdown::default();
+
+        for op in &workload.ops {
+            let plan = core.plan_gemm(&op.shape);
+            // Tiles of this layer spread over every logical core.
+            let steps_across_fleet = plan.timesteps.div_ceil(logical);
+            let mut latency = steps_across_fleet as f64 * step_s;
+            if plan.deas_outputs > 0 {
+                latency += crate::devices::deas::Deas::default().fill_latency_s(core.dr);
+            }
+            let energy = EnergyBreakdown::of_plan(core, &plan);
+            let utilization = plan.timesteps as f64 / (steps_across_fleet * logical) as f64;
+            total_latency += latency;
+            total_energy.add(&energy);
+            layers.push(LayerStats {
+                layer: op.layer.clone(),
+                latency_s: latency,
+                energy,
+                core_timesteps: plan.timesteps * plan.cores_occupied,
+                utilization,
+            });
+        }
+
+        FrameStats {
+            accelerator: self.accel.name.clone(),
+            model: workload.model.clone(),
+            latency_s: total_latency,
+            energy: total_energy,
+            layers,
+        }
+    }
+}
+
+/// One-shot convenience: simulate `workload` on `accel`.
+pub fn simulate_frame(accel: &Accelerator, workload: &Workload) -> FrameStats {
+    SimEngine::new(accel.clone()).frame(workload)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::accel::Accelerator;
+    use crate::dnn::models::{mobilenet_v2, resnet50};
+    use crate::optics::link_budget::ArchClass;
+    use crate::units::DataRate;
+
+    fn accel(arch: ArchClass, dr: DataRate) -> Accelerator {
+        Accelerator::iso_laser_power(arch, dr, 60.0).unwrap()
+    }
+
+    #[test]
+    fn frame_stats_cover_all_layers() {
+        let a = accel(ArchClass::Mwa, DataRate::Gs10);
+        let w = resnet50().workload();
+        let f = simulate_frame(&a, &w);
+        assert_eq!(f.layers.len(), w.ops.len());
+        assert!(f.latency_s > 0.0);
+        assert!(f.energy.total_j() > 0.0);
+    }
+
+    #[test]
+    fn spoga_faster_than_baselines_iso_power() {
+        let w = resnet50().workload();
+        let s = simulate_frame(&accel(ArchClass::Mwa, DataRate::Gs10), &w);
+        let h = simulate_frame(&accel(ArchClass::Maw, DataRate::Gs10), &w);
+        let d = simulate_frame(&accel(ArchClass::Amw, DataRate::Gs10), &w);
+        assert!(s.fps() > h.fps(), "SPOGA {} vs HOLYLIGHT {}", s.fps(), h.fps());
+        assert!(s.fps() > d.fps(), "SPOGA {} vs DEAPCNN {}", s.fps(), d.fps());
+    }
+
+    #[test]
+    fn higher_rate_means_higher_fps_same_arch() {
+        let w = mobilenet_v2().workload();
+        let f5 = simulate_frame(&accel(ArchClass::Mwa, DataRate::Gs5), &w);
+        let f10 = simulate_frame(&accel(ArchClass::Mwa, DataRate::Gs10), &w);
+        assert!(f10.fps() > f5.fps());
+    }
+
+    #[test]
+    fn latency_is_sum_of_layers() {
+        let a = accel(ArchClass::Amw, DataRate::Gs5);
+        let f = simulate_frame(&a, &mobilenet_v2().workload());
+        let sum: f64 = f.layers.iter().map(|l| l.latency_s).sum();
+        assert!((f.latency_s - sum).abs() < 1e-12);
+    }
+
+    #[test]
+    fn utilization_bounded() {
+        let a = accel(ArchClass::Mwa, DataRate::Gs5);
+        let f = simulate_frame(&a, &resnet50().workload());
+        let u = f.utilization();
+        assert!(u > 0.0 && u <= 1.0, "utilization {u}");
+    }
+
+    #[test]
+    fn baseline_energy_includes_deas_and_sram() {
+        let f = simulate_frame(&accel(ArchClass::Maw, DataRate::Gs5), &mobilenet_v2().workload());
+        assert!(f.energy.deas_j > 0.0);
+        assert!(f.energy.sram_j > 0.0);
+        let s = simulate_frame(&accel(ArchClass::Mwa, DataRate::Gs5), &mobilenet_v2().workload());
+        assert_eq!(s.energy.deas_j, 0.0);
+        assert_eq!(s.energy.sram_j, 0.0);
+    }
+}

@@ -1,0 +1,223 @@
+//! GEMM→core mapping strategies (paper §II-B).
+//!
+//! Photonic GEMM cores admit *temporal*, *spatial* and *mixed
+//! spatio-temporal* mappings, with the extra spatial freedom of mapping by
+//! wavelength or by waveguide. At the transaction level the choice shows up
+//! as the **tile iteration order**, which determines how often the MRR
+//! weight banks must be reprogrammed (a DAC write per ring) versus how long
+//! input rows stream unchanged:
+//!
+//! * **Weight-stationary** (the paper's Fig. 1 mapping): a (K-chunk,
+//!   C-tile) weight block is loaded once and all T input rows stream
+//!   through it. Weight loads: `ceil(K/N)·ceil(C/M)` per GEMM.
+//! * **Output-stationary**: for each output tile, iterate K-chunks back to
+//!   back so the BPCA accumulates without intermediate digitization —
+//!   same weight-load count, but *baselines* avoid one SRAM round-trip per
+//!   pass at the cost of re-streaming inputs per C-tile.
+//! * **Input-stationary**: an input row block is held (modulators static)
+//!   while weight tiles cycle; weight loads scale with T — only sensible
+//!   when T ≪ K·C (e.g. FC layers at batch 1).
+//!
+//! The mapper reports, per strategy, the weight-reprogramming work and the
+//! resulting schedule overhead so the ablation can rank them per layer.
+
+use crate::arch::core::Core;
+use crate::dnn::layer::GemmShape;
+use crate::optics::link_budget::ArchClass;
+
+/// Tile iteration order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Mapping {
+    /// Weight block held; inputs stream over T (paper Fig. 1 default).
+    WeightStationary,
+    /// Output tile held; K-chunks iterate innermost (BPCA-friendly).
+    OutputStationary,
+    /// Input rows held; weight tiles cycle (FC/batch-1 special case).
+    InputStationary,
+}
+
+impl Mapping {
+    /// All strategies.
+    pub const ALL: [Mapping; 3] =
+        [Mapping::WeightStationary, Mapping::OutputStationary, Mapping::InputStationary];
+
+    /// Short label for reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            Mapping::WeightStationary => "weight-stationary",
+            Mapping::OutputStationary => "output-stationary",
+            Mapping::InputStationary => "input-stationary",
+        }
+    }
+}
+
+/// Cost report for mapping one GEMM on one core design.
+#[derive(Debug, Clone, Copy)]
+pub struct MappingCost {
+    /// Strategy evaluated.
+    pub mapping: Mapping,
+    /// Weight values written to MRR banks over the GEMM.
+    pub weight_writes: u64,
+    /// Cycles stalled for weight reprogramming (banks reload serially
+    /// through the shared weight-update DACs).
+    pub reload_cycles: u64,
+    /// Compute timesteps (same as the execution plan).
+    pub compute_steps: u64,
+    /// Intermediate SRAM round-trips *avoided* vs the naive order
+    /// (output-stationary lets baseline TIA cores accumulate digitally
+    /// without spilling per pass).
+    pub sram_passes_avoided: u64,
+}
+
+impl MappingCost {
+    /// Total schedule length including reload stalls.
+    pub fn total_cycles(&self) -> u64 {
+        self.compute_steps + self.reload_cycles
+    }
+
+    /// Fraction of cycles doing useful compute.
+    pub fn compute_efficiency(&self) -> f64 {
+        self.compute_steps as f64 / self.total_cycles().max(1) as f64
+    }
+}
+
+/// Weight-update DACs available per core for bank reprogramming (shared,
+/// slow path — not the per-symbol input DACs).
+pub const WEIGHT_UPDATE_DACS: u64 = 32;
+
+/// Evaluate a mapping strategy for `shape` on `core`.
+pub fn evaluate(core: &Core, shape: &GemmShape, mapping: Mapping) -> MappingCost {
+    let plan = core.plan_gemm(shape);
+    let n = core.n as u64;
+    let m = core.m as u64;
+    let t = shape.t as u64;
+    let g = shape.groups as u64;
+    let k_chunks = shape.k.div_ceil(core.n) as u64;
+    let c_tiles = shape.c.div_ceil(core.m) as u64;
+    // Weight values per (K-chunk, C-tile) block. SPOGA banks hold nibble
+    // pairs (2 rings per value per DPU); baselines hold INT4 slices
+    // (4 slice cores × their banks) — both reduce to 2·N·M ring writes per
+    // INT8 weight block.
+    let block_values = 2 * n * m;
+
+    let (blocks_loaded, sram_avoided) = match mapping {
+        // Each weight block loaded exactly once; all T rows stream.
+        Mapping::WeightStationary => (k_chunks * c_tiles * g, 0),
+        // Same load count (K innermost per output tile); baselines skip the
+        // per-pass intermediate spill for all but the final pass.
+        Mapping::OutputStationary => {
+            let avoided = if core.arch == ArchClass::Mwa {
+                0 // SPOGA never spills anyway (BPCA accumulation)
+            } else {
+                t * c_tiles * g * k_chunks.saturating_sub(1) * m
+            };
+            (k_chunks * c_tiles * g, avoided)
+        }
+        // Weight blocks reload for every input-row block of M rows.
+        Mapping::InputStationary => {
+            let row_blocks = t.div_ceil(m).max(1);
+            (k_chunks * c_tiles * g * row_blocks, 0)
+        }
+    };
+    let weight_writes = blocks_loaded * block_values;
+    let reload_cycles = weight_writes.div_ceil(WEIGHT_UPDATE_DACS);
+
+    MappingCost {
+        mapping,
+        weight_writes,
+        reload_cycles,
+        compute_steps: plan.timesteps,
+        sram_passes_avoided: sram_avoided,
+    }
+}
+
+/// Pick the best strategy (max compute efficiency, SRAM savings as
+/// tie-break) for `shape` on `core`.
+pub fn best_mapping(core: &Core, shape: &GemmShape) -> MappingCost {
+    Mapping::ALL
+        .iter()
+        .map(|&m| evaluate(core, shape, m))
+        .max_by(|a, b| {
+            a.compute_efficiency()
+                .total_cmp(&b.compute_efficiency())
+                .then(a.sram_passes_avoided.cmp(&b.sram_passes_avoided))
+        })
+        .expect("non-empty strategies")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::units::DataRate;
+
+    fn spoga() -> Core {
+        Core::design(ArchClass::Mwa, DataRate::Gs5, 10.0).unwrap()
+    }
+
+    fn holy() -> Core {
+        Core::design(ArchClass::Maw, DataRate::Gs5, 10.0).unwrap()
+    }
+
+    fn conv_shape() -> GemmShape {
+        // A convolution-like GEMM: large T, moderate K/C.
+        GemmShape { t: 3136, k: 576, c: 128, groups: 1 }
+    }
+
+    fn fc_shape() -> GemmShape {
+        GemmShape { t: 1, k: 2048, c: 1000, groups: 1 }
+    }
+
+    #[test]
+    fn weight_stationary_wins_conv_layers() {
+        let best = best_mapping(&spoga(), &conv_shape());
+        assert_ne!(best.mapping, Mapping::InputStationary);
+        // Streaming 3136 rows amortizes the weight loads almost fully.
+        assert!(best.compute_efficiency() > 0.9, "{}", best.compute_efficiency());
+    }
+
+    #[test]
+    fn input_stationary_matches_weight_stationary_for_batch1_fc() {
+        // T=1: reloading per row block = loading once; both degenerate.
+        let ws = evaluate(&spoga(), &fc_shape(), Mapping::WeightStationary);
+        let is = evaluate(&spoga(), &fc_shape(), Mapping::InputStationary);
+        assert_eq!(ws.weight_writes, is.weight_writes);
+    }
+
+    #[test]
+    fn input_stationary_explodes_for_large_t() {
+        let ws = evaluate(&spoga(), &conv_shape(), Mapping::WeightStationary);
+        let is = evaluate(&spoga(), &conv_shape(), Mapping::InputStationary);
+        assert!(is.weight_writes > 50 * ws.weight_writes);
+        assert!(is.compute_efficiency() < ws.compute_efficiency());
+    }
+
+    #[test]
+    fn output_stationary_saves_baseline_sram_only() {
+        let sh = GemmShape { t: 64, k: 4 * holy().n, c: 32, groups: 1 };
+        let base = evaluate(&holy(), &sh, Mapping::OutputStationary);
+        assert!(base.sram_passes_avoided > 0);
+        let sp = evaluate(&spoga(), &sh, Mapping::OutputStationary);
+        assert_eq!(sp.sram_passes_avoided, 0); // nothing to save — no spills
+    }
+
+    #[test]
+    fn reload_cycles_scale_with_writes() {
+        let a = evaluate(&spoga(), &conv_shape(), Mapping::WeightStationary);
+        assert_eq!(a.reload_cycles, a.weight_writes.div_ceil(WEIGHT_UPDATE_DACS));
+        assert!(a.total_cycles() >= a.compute_steps);
+    }
+
+    #[test]
+    fn grouped_layers_multiply_weight_loads() {
+        let g1 = evaluate(&spoga(), &GemmShape { t: 100, k: 9, c: 1, groups: 1 }, Mapping::WeightStationary);
+        let g16 = evaluate(&spoga(), &GemmShape { t: 100, k: 9, c: 1, groups: 16 }, Mapping::WeightStationary);
+        assert_eq!(g16.weight_writes, 16 * g1.weight_writes);
+    }
+
+    #[test]
+    fn best_mapping_is_deterministic() {
+        let a = best_mapping(&holy(), &conv_shape());
+        let b = best_mapping(&holy(), &conv_shape());
+        assert_eq!(a.mapping, b.mapping);
+    }
+}

@@ -1,0 +1,15 @@
+//! Transaction-level simulator.
+//!
+//! Mirrors the paper's custom Python simulator (§IV-B): each CNN layer's
+//! GEMM is planned on the accelerator's cores ([`crate::arch`]), layer
+//! latencies accumulate sequentially (inference is layer-dependent), and
+//! energy components accumulate from the per-plan breakdowns. The output is
+//! the paper's metric triple: FPS, FPS/W, FPS/W/mm².
+
+pub mod engine;
+pub mod mapper;
+pub mod stats;
+
+pub use engine::{simulate_frame, SimEngine};
+pub use mapper::{best_mapping, evaluate as evaluate_mapping, Mapping, MappingCost};
+pub use stats::{FrameStats, LayerStats};

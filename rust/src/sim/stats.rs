@@ -1,0 +1,103 @@
+//! Simulation result records.
+
+use crate::arch::cost::EnergyBreakdown;
+
+/// Per-layer simulation record.
+#[derive(Debug, Clone)]
+pub struct LayerStats {
+    /// Layer name.
+    pub layer: String,
+    /// Latency contribution, seconds.
+    pub latency_s: f64,
+    /// Energy, joules.
+    pub energy: EnergyBreakdown,
+    /// Core-timesteps of photonic work.
+    pub core_timesteps: u64,
+    /// Fraction of the fleet busy during this layer (0..1).
+    pub utilization: f64,
+}
+
+/// Whole-frame simulation result.
+#[derive(Debug, Clone)]
+pub struct FrameStats {
+    /// Accelerator variant name ("SPOGA_10", ...).
+    pub accelerator: String,
+    /// Model name ("ResNet50", ...).
+    pub model: String,
+    /// End-to-end frame latency, seconds.
+    pub latency_s: f64,
+    /// Total frame energy, joules.
+    pub energy: EnergyBreakdown,
+    /// Per-layer records.
+    pub layers: Vec<LayerStats>,
+}
+
+impl FrameStats {
+    /// Frames per second (single-frame latency reciprocal).
+    pub fn fps(&self) -> f64 {
+        1.0 / self.latency_s
+    }
+
+    /// Average power over the frame, watts.
+    pub fn avg_power_w(&self) -> f64 {
+        self.energy.total_j() / self.latency_s
+    }
+
+    /// FPS per watt = 1 / energy-per-frame.
+    pub fn fps_per_w(&self) -> f64 {
+        1.0 / self.energy.total_j()
+    }
+
+    /// FPS per watt per mm² given the accelerator area.
+    pub fn fps_per_w_per_mm2(&self, area_mm2: f64) -> f64 {
+        self.fps_per_w() / area_mm2
+    }
+
+    /// Mean fleet utilization across layers (time-weighted).
+    pub fn utilization(&self) -> f64 {
+        let total: f64 = self.layers.iter().map(|l| l.latency_s).sum();
+        if total == 0.0 {
+            return 0.0;
+        }
+        self.layers.iter().map(|l| l.utilization * l.latency_s).sum::<f64>() / total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn frame(latency: f64, laser_j: f64) -> FrameStats {
+        FrameStats {
+            accelerator: "X".into(),
+            model: "Y".into(),
+            latency_s: latency,
+            energy: EnergyBreakdown { laser_j, ..Default::default() },
+            layers: vec![],
+        }
+    }
+
+    #[test]
+    fn fps_is_latency_reciprocal() {
+        assert!((frame(0.01, 1.0).fps() - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fps_per_w_is_inverse_energy() {
+        let f = frame(0.01, 0.5);
+        assert!((f.fps_per_w() - 2.0).abs() < 1e-9);
+        // Identity: FPS/W == FPS / avg_power.
+        assert!((f.fps_per_w() - f.fps() / f.avg_power_w()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn area_efficiency_divides_area() {
+        let f = frame(0.01, 0.5);
+        assert!((f.fps_per_w_per_mm2(10.0) - 0.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_frame_utilization_zero() {
+        assert_eq!(frame(1.0, 1.0).utilization(), 0.0);
+    }
+}

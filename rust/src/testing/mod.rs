@@ -1,0 +1,13 @@
+//! Deterministic mini property-testing harness.
+//!
+//! The offline vendored dependency set has no `proptest`/`quickcheck`, so
+//! this module provides the small subset we need: a fast deterministic PRNG
+//! (SplitMix64), generators for the value domains used across the crate, and
+//! a `forall` driver with first-failure reporting and linear input shrinking
+//! for integer-vector cases.
+
+pub mod prng;
+pub mod prop;
+
+pub use prng::SplitMix64;
+pub use prop::{forall, Gen};

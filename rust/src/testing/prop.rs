@@ -1,0 +1,157 @@
+//! `forall` property driver with first-failure reporting and shrinking-lite.
+
+use crate::testing::prng::SplitMix64;
+
+/// A value generator: draws a case from the PRNG.
+pub trait Gen {
+    /// The generated case type.
+    type Output;
+    /// Draw one case.
+    fn gen(&self, rng: &mut SplitMix64) -> Self::Output;
+    /// Try to produce *smaller* variants of a failing case (for shrinking).
+    /// Default: no shrinking.
+    fn shrink(&self, _case: &Self::Output) -> Vec<Self::Output> {
+        Vec::new()
+    }
+}
+
+impl<T, F: Fn(&mut SplitMix64) -> T> Gen for F {
+    type Output = T;
+    fn gen(&self, rng: &mut SplitMix64) -> T {
+        self(rng)
+    }
+}
+
+/// Run `prop` over `cases` generated cases; panic with the (possibly shrunk)
+/// counterexample on first failure.
+///
+/// `seed` makes failures reproducible; tests fix it per property.
+pub fn forall<G, P>(seed: u64, cases: usize, generator: G, prop: P)
+where
+    G: Gen,
+    G::Output: std::fmt::Debug,
+    P: Fn(&G::Output) -> bool,
+{
+    let mut rng = SplitMix64::new(seed);
+    for i in 0..cases {
+        let case = generator.gen(&mut rng);
+        if !prop(&case) {
+            // Greedy shrink: repeatedly take the first shrunk variant that
+            // still fails, up to a bounded number of rounds.
+            let mut smallest = case;
+            'outer: for _ in 0..64 {
+                for cand in generator.shrink(&smallest) {
+                    if !prop(&cand) {
+                        smallest = cand;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed at case {i}/{cases} (seed {seed}).\n\
+                 counterexample: {smallest:?}"
+            );
+        }
+    }
+}
+
+/// Generator for random GEMM problem instances `(a, b, m, k, n)` with
+/// dimensions in `[1, max_dim]`.
+pub struct GemmCase {
+    /// Maximum value for each of m, k, n.
+    pub max_dim: usize,
+}
+
+impl Gen for GemmCase {
+    type Output = (Vec<i8>, Vec<i8>, usize, usize, usize);
+
+    fn gen(&self, rng: &mut SplitMix64) -> Self::Output {
+        let m = rng.range_usize(1, self.max_dim);
+        let k = rng.range_usize(1, self.max_dim);
+        let n = rng.range_usize(1, self.max_dim);
+        (rng.i8_vec(m * k), rng.i8_vec(k * n), m, k, n)
+    }
+
+    fn shrink(&self, case: &Self::Output) -> Vec<Self::Output> {
+        let (a, b, m, k, n) = case;
+        let mut out = Vec::new();
+        // Halve each dimension (keeping the top-left submatrix).
+        for (nm, nk, nn) in [(m / 2, *k, *n), (*m, k / 2, *n), (*m, *k, n / 2)] {
+            if nm == 0 || nk == 0 || nn == 0 || (nm, nk, nn) == (*m, *k, *n) {
+                continue;
+            }
+            let sub_a: Vec<i8> =
+                (0..nm).flat_map(|i| a[i * k..i * k + nk].to_vec()).collect();
+            let sub_b: Vec<i8> =
+                (0..nk).flat_map(|i| b[i * n..i * n + nn].to_vec()).collect();
+            out.push((sub_a, sub_b, nm, nk, nn));
+        }
+        // Zero out operand values (simplest counterexample data).
+        if a.iter().any(|&v| v != 0) {
+            out.push((vec![0; a.len()], b.clone(), *m, *k, *n));
+        }
+        if b.iter().any(|&v| v != 0) {
+            out.push((a.clone(), vec![0; b.len()], *m, *k, *n));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitslice::{gemm_i32, gemm_lanes, gemm_sliced};
+
+    #[test]
+    fn trivially_true_property_passes() {
+        forall(1, 100, |rng: &mut SplitMix64| rng.i8(), |_| true);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_counterexample() {
+        forall(2, 100, |rng: &mut SplitMix64| rng.i8(), |&x| x >= -100);
+    }
+
+    #[test]
+    fn prop_sliced_dataflow_equals_direct_gemm() {
+        forall(1234, 60, GemmCase { max_dim: 12 }, |(a, b, m, k, n)| {
+            let direct = gemm_i32(a, b, *m, *k, *n).unwrap();
+            let sliced = gemm_sliced(a, b, *m, *k, *n).unwrap().recombine();
+            direct == sliced
+        });
+    }
+
+    #[test]
+    fn prop_spoga_lanes_equal_direct_gemm() {
+        forall(5678, 60, GemmCase { max_dim: 12 }, |(a, b, m, k, n)| {
+            let direct = gemm_i32(a, b, *m, *k, *n).unwrap();
+            let lanes = gemm_lanes(a, b, *m, *k, *n).unwrap().weight_and_add();
+            direct == lanes
+        });
+    }
+
+    #[test]
+    fn gemm_case_generator_respects_dims() {
+        let mut rng = SplitMix64::new(9);
+        let g = GemmCase { max_dim: 8 };
+        for _ in 0..100 {
+            let (a, b, m, k, n) = g.gen(&mut rng);
+            assert!(m >= 1 && m <= 8 && k >= 1 && k <= 8 && n >= 1 && n <= 8);
+            assert_eq!(a.len(), m * k);
+            assert_eq!(b.len(), k * n);
+        }
+    }
+
+    #[test]
+    fn shrink_produces_smaller_cases() {
+        let g = GemmCase { max_dim: 8 };
+        let case = (vec![1i8; 4 * 6], vec![2i8; 6 * 8], 4usize, 6usize, 8usize);
+        for (a, b, m, k, n) in g.shrink(&case) {
+            assert_eq!(a.len(), m * k);
+            assert_eq!(b.len(), k * n);
+            assert!(m * k * n <= 4 * 6 * 8);
+        }
+    }
+}

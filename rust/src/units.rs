@@ -1,0 +1,200 @@
+//! Physical unit helpers shared by every photonic model in the crate.
+//!
+//! All optical powers are carried as `f64` in either **dBm** (log scale,
+//! referenced to 1 mW) or **mW** (linear). Conversions live here so that the
+//! link-budget math in [`crate::optics`] reads like the equations in the
+//! paper's references ([1], [2], [12]).
+
+/// Convert a power in dBm to milliwatts.
+#[inline]
+pub fn dbm_to_mw(dbm: f64) -> f64 {
+    10f64.powf(dbm / 10.0)
+}
+
+/// Convert a power in milliwatts to dBm.
+///
+/// Returns `-inf` for `mw <= 0`, matching the physical meaning (no power).
+#[inline]
+pub fn mw_to_dbm(mw: f64) -> f64 {
+    if mw <= 0.0 {
+        f64::NEG_INFINITY
+    } else {
+        10.0 * mw.log10()
+    }
+}
+
+/// Convert a linear power *ratio* to decibels.
+#[inline]
+pub fn ratio_to_db(ratio: f64) -> f64 {
+    if ratio <= 0.0 {
+        f64::NEG_INFINITY
+    } else {
+        10.0 * ratio.log10()
+    }
+}
+
+/// Convert decibels to a linear power ratio.
+#[inline]
+pub fn db_to_ratio(db: f64) -> f64 {
+    10f64.powf(db / 10.0)
+}
+
+/// Data rate (= symbol rate of the analog photonic core), in gigasamples/s.
+///
+/// The paper evaluates every architecture at 1, 5 and 10 GS/s; the variants
+/// are suffixed `_1`, `_5`, `_10` (e.g. `SPOGA_10`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum DataRate {
+    /// 1 GS/s — one analog symbol per nanosecond.
+    Gs1,
+    /// 5 GS/s.
+    Gs5,
+    /// 10 GS/s.
+    Gs10,
+}
+
+impl DataRate {
+    /// All data rates evaluated in the paper, ascending.
+    pub const ALL: [DataRate; 3] = [DataRate::Gs1, DataRate::Gs5, DataRate::Gs10];
+
+    /// Numeric rate in gigasamples per second.
+    #[inline]
+    pub fn gs(self) -> f64 {
+        match self {
+            DataRate::Gs1 => 1.0,
+            DataRate::Gs5 => 5.0,
+            DataRate::Gs10 => 10.0,
+        }
+    }
+
+    /// Samples per second (Hz).
+    #[inline]
+    pub fn hz(self) -> f64 {
+        self.gs() * 1e9
+    }
+
+    /// Duration of one analog symbol/time-step, in seconds.
+    #[inline]
+    pub fn step_seconds(self) -> f64 {
+        1.0 / self.hz()
+    }
+
+    /// Paper-style suffix ("1", "5", "10") used in variant names.
+    pub fn suffix(self) -> &'static str {
+        match self {
+            DataRate::Gs1 => "1",
+            DataRate::Gs5 => "5",
+            DataRate::Gs10 => "10",
+        }
+    }
+}
+
+impl std::fmt::Display for DataRate {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} GS/s", self.gs())
+    }
+}
+
+/// Seconds → nanoseconds.
+#[inline]
+pub fn s_to_ns(s: f64) -> f64 {
+    s * 1e9
+}
+
+/// Milliwatts → watts.
+#[inline]
+pub fn mw_to_w(mw: f64) -> f64 {
+    mw * 1e-3
+}
+
+/// Joules per op at a given power (W) and rate (ops/s).
+#[inline]
+pub fn energy_per_op_j(power_w: f64, ops_per_s: f64) -> f64 {
+    if ops_per_s <= 0.0 {
+        0.0
+    } else {
+        power_w / ops_per_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: f64, b: f64, tol: f64) -> bool {
+        (a - b).abs() <= tol
+    }
+
+    #[test]
+    fn dbm_mw_roundtrip_at_reference_points() {
+        assert!(close(dbm_to_mw(0.0), 1.0, 1e-12));
+        assert!(close(dbm_to_mw(10.0), 10.0, 1e-9));
+        assert!(close(dbm_to_mw(-30.0), 0.001, 1e-12));
+        assert!(close(mw_to_dbm(1.0), 0.0, 1e-12));
+        assert!(close(mw_to_dbm(100.0), 20.0, 1e-9));
+    }
+
+    #[test]
+    fn dbm_mw_roundtrip_random_grid() {
+        for i in -60..=30 {
+            let dbm = i as f64 * 0.5;
+            let back = mw_to_dbm(dbm_to_mw(dbm));
+            assert!(close(back, dbm, 1e-9), "{dbm} -> {back}");
+        }
+    }
+
+    #[test]
+    fn mw_to_dbm_nonpositive_is_neg_inf() {
+        assert_eq!(mw_to_dbm(0.0), f64::NEG_INFINITY);
+        assert_eq!(mw_to_dbm(-1.0), f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn db_ratio_roundtrip() {
+        for i in 0..50 {
+            let db = i as f64 * 0.7 - 15.0;
+            assert!(close(ratio_to_db(db_to_ratio(db)), db, 1e-9));
+        }
+    }
+
+    #[test]
+    fn three_db_is_factor_two() {
+        assert!(close(db_to_ratio(3.0103), 2.0, 1e-3));
+        assert!(close(ratio_to_db(0.5), -3.0103, 1e-3));
+    }
+
+    #[test]
+    fn datarate_numeric_values() {
+        assert_eq!(DataRate::Gs1.gs(), 1.0);
+        assert_eq!(DataRate::Gs5.gs(), 5.0);
+        assert_eq!(DataRate::Gs10.gs(), 10.0);
+        assert_eq!(DataRate::Gs1.hz(), 1e9);
+    }
+
+    #[test]
+    fn datarate_step_seconds_is_inverse_rate() {
+        for dr in DataRate::ALL {
+            assert!(close(dr.step_seconds() * dr.hz(), 1.0, 1e-12));
+        }
+    }
+
+    #[test]
+    fn datarate_ordering_matches_speed() {
+        assert!(DataRate::Gs1 < DataRate::Gs5);
+        assert!(DataRate::Gs5 < DataRate::Gs10);
+    }
+
+    #[test]
+    fn datarate_suffixes_match_paper_naming() {
+        assert_eq!(DataRate::Gs1.suffix(), "1");
+        assert_eq!(DataRate::Gs5.suffix(), "5");
+        assert_eq!(DataRate::Gs10.suffix(), "10");
+    }
+
+    #[test]
+    fn energy_per_op_basic() {
+        // 1 W at 1e9 ops/s = 1 nJ/op.
+        assert!(close(energy_per_op_j(1.0, 1e9), 1e-9, 1e-18));
+        assert_eq!(energy_per_op_j(1.0, 0.0), 0.0);
+    }
+}

@@ -1,0 +1,143 @@
+//! Integration: the coordinator under concurrent load.
+
+use std::sync::atomic::Ordering;
+
+use spoga::coordinator::{Coordinator, CoordinatorConfig};
+use spoga::runtime::Engine;
+
+fn cfg() -> CoordinatorConfig {
+    CoordinatorConfig { workers: 2, max_batch_wait_s: 0.005, ..Default::default() }
+}
+
+fn available() -> bool {
+    if std::path::Path::new("artifacts/manifest.txt").exists() {
+        true
+    } else {
+        eprintln!("SKIP (run `make artifacts` first)");
+        false
+    }
+}
+
+#[test]
+fn concurrent_mlp_requests_all_complete_and_match_direct_engine() {
+    if !available() {
+        return;
+    }
+    let c = Coordinator::start(cfg()).unwrap();
+    let h = c.handle();
+
+    // Ground truth from a direct engine (no coordinator).
+    let mut eng = Engine::new("artifacts").unwrap();
+    let rows: Vec<Vec<i32>> =
+        (0..12).map(|t| vec![(t * 9 % 100) as i32; 784]).collect();
+    let expected: Vec<Vec<i32>> =
+        rows.iter().map(|r| eng.execute_i32_single("mlp_b1", &[r]).unwrap()).collect();
+
+    let joins: Vec<_> = rows
+        .iter()
+        .cloned()
+        .map(|row| {
+            let h = h.clone();
+            std::thread::spawn(move || h.infer_mlp(row).unwrap())
+        })
+        .collect();
+    let got: Vec<Vec<i32>> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+
+    for (g, e) in got.iter().zip(&expected) {
+        assert_eq!(g, e, "batched answer differs from direct execution");
+    }
+    assert_eq!(h.stats().completed.load(Ordering::Relaxed), 12);
+    assert_eq!(h.stats().failed.load(Ordering::Relaxed), 0);
+    c.shutdown();
+}
+
+#[test]
+fn burst_load_forms_multi_row_batches() {
+    if !available() {
+        return;
+    }
+    let c = Coordinator::start(CoordinatorConfig {
+        workers: 1,
+        max_batch_wait_s: 0.05, // generous window to observe batching
+        ..Default::default()
+    })
+    .unwrap();
+    let h = c.handle();
+    let joins: Vec<_> = (0..16)
+        .map(|i| {
+            let h = h.clone();
+            std::thread::spawn(move || h.infer_mlp(vec![i as i32; 784]).unwrap())
+        })
+        .collect();
+    for j in joins {
+        assert_eq!(j.join().unwrap().len(), 10);
+    }
+    let occupancy = h.stats().mean_batch_occupancy();
+    assert!(occupancy > 1.0, "burst produced no batching (occupancy {occupancy})");
+    c.shutdown();
+}
+
+#[test]
+fn gemm_requests_route_unbatched() {
+    if !available() {
+        return;
+    }
+    let c = Coordinator::start(cfg()).unwrap();
+    let h = c.handle();
+    let a = vec![1i32; 64 * 64];
+    let b = vec![2i32; 64 * 64];
+    let out = h.gemm("gemm_64x64x64", a, b).unwrap();
+    assert_eq!(out, vec![2 * 64; 64 * 64]);
+    c.shutdown();
+}
+
+#[test]
+fn unknown_artifact_fails_cleanly() {
+    if !available() {
+        return;
+    }
+    let c = Coordinator::start(cfg()).unwrap();
+    let h = c.handle();
+    let res = h.gemm("gemm_wrong", vec![0; 4], vec![0; 4]);
+    assert!(res.is_err());
+    // Coordinator still serves afterwards.
+    assert_eq!(h.infer_mlp(vec![0; 784]).unwrap(), vec![0; 10]);
+    c.shutdown();
+}
+
+#[test]
+fn wrong_row_length_rejected_at_submit() {
+    if !available() {
+        return;
+    }
+    let c = Coordinator::start(cfg()).unwrap();
+    let h = c.handle();
+    assert!(h.submit_mlp(vec![0; 42]).is_err());
+    c.shutdown();
+}
+
+#[test]
+fn shutdown_then_submit_errors() {
+    if !available() {
+        return;
+    }
+    let c = Coordinator::start(cfg()).unwrap();
+    let h = c.handle();
+    c.shutdown();
+    // The leader is gone; submissions must fail, not hang.
+    let r = h.infer_mlp(vec![0; 784]);
+    assert!(r.is_err());
+}
+
+#[test]
+fn stats_latency_recorded() {
+    if !available() {
+        return;
+    }
+    let c = Coordinator::start(cfg()).unwrap();
+    let h = c.handle();
+    h.infer_mlp(vec![1; 784]).unwrap();
+    assert!(h.stats().latency_mean() > 0.0);
+    assert!(h.stats().latency_percentile(0.5) > 0.0);
+    c.shutdown();
+}

@@ -1,0 +1,269 @@
+//! Property-based test suite over the crate's invariants, driven by the
+//! in-tree mini property harness (`spoga::testing`).
+
+use spoga::bitslice::{combine, gemm_i32, gemm_lanes, gemm_sliced, slice_i8};
+use spoga::dnn::layer::GemmShape;
+use spoga::optics::link_budget::{ArchClass, LinkBudget};
+use spoga::testing::prop::GemmCase;
+use spoga::testing::{forall, SplitMix64};
+use spoga::units::{db_to_ratio, dbm_to_mw, mw_to_dbm, ratio_to_db, DataRate};
+
+// ---------------------------------------------------------------------------
+// bitslice
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_nibble_roundtrip() {
+    forall(11, 2000, |rng: &mut SplitMix64| rng.i8(), |&x| combine(slice_i8(x)) == x);
+}
+
+#[test]
+fn prop_three_dataflows_agree() {
+    forall(17, 80, GemmCase { max_dim: 14 }, |(a, b, m, k, n)| {
+        let direct = gemm_i32(a, b, *m, *k, *n).unwrap();
+        let sliced = gemm_sliced(a, b, *m, *k, *n).unwrap().recombine();
+        let lanes = gemm_lanes(a, b, *m, *k, *n).unwrap().weight_and_add();
+        direct == sliced && direct == lanes
+    });
+}
+
+#[test]
+fn prop_gemm_linearity_in_scalar() {
+    // (2a)·b == 2·(a·b) when 2a stays in int8 range.
+    forall(23, 60, GemmCase { max_dim: 8 }, |(a, b, m, k, n)| {
+        let a_half: Vec<i8> = a.iter().map(|&v| v / 2).collect();
+        let doubled: Vec<i8> = a_half.iter().map(|&v| v * 2).collect();
+        let lhs = gemm_i32(&doubled, b, *m, *k, *n).unwrap();
+        let rhs: Vec<i32> =
+            gemm_i32(&a_half, b, *m, *k, *n).unwrap().iter().map(|v| 2 * v).collect();
+        lhs == rhs
+    });
+}
+
+#[test]
+fn prop_gemm_distributes_over_split_k() {
+    // A·B over K splits into A1·B1 + A2·B2 (charge accumulation across
+    // passes — the BPCA multi-pass invariant).
+    forall(31, 50, GemmCase { max_dim: 10 }, |(a, b, m, k, n)| {
+        if *k < 2 {
+            return true;
+        }
+        let k1 = k / 2;
+        let a1: Vec<i8> = (0..*m).flat_map(|i| a[i * k..i * k + k1].to_vec()).collect();
+        let a2: Vec<i8> = (0..*m).flat_map(|i| a[i * k + k1..(i + 1) * k].to_vec()).collect();
+        let b1 = b[..k1 * n].to_vec();
+        let b2 = b[k1 * n..].to_vec();
+        let full = gemm_i32(a, b, *m, *k, *n).unwrap();
+        let p1 = gemm_i32(&a1, &b1, *m, k1, *n).unwrap();
+        let p2 = gemm_i32(&a2, &b2, *m, k - k1, *n).unwrap();
+        let sum: Vec<i32> = p1.iter().zip(&p2).map(|(x, y)| x + y).collect();
+        full == sum
+    });
+}
+
+// ---------------------------------------------------------------------------
+// optics
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_units_roundtrip() {
+    forall(
+        41,
+        2000,
+        |rng: &mut SplitMix64| rng.f64_range(-60.0, 30.0),
+        |&dbm| (mw_to_dbm(dbm_to_mw(dbm)) - dbm).abs() < 1e-9,
+    );
+    forall(
+        43,
+        2000,
+        |rng: &mut SplitMix64| rng.f64_range(-30.0, 30.0),
+        |&db| (ratio_to_db(db_to_ratio(db)) - db).abs() < 1e-9,
+    );
+}
+
+#[test]
+fn prop_max_n_is_tight() {
+    // The solver's N is feasible and N+1 is not, for random laser powers.
+    forall(
+        53,
+        200,
+        |rng: &mut SplitMix64| {
+            let arch = *rng.choose(&[ArchClass::Maw, ArchClass::Amw, ArchClass::Mwa]);
+            let dr = *rng.choose(&DataRate::ALL);
+            let dbm = rng.f64_range(-5.0, 20.0);
+            (arch, dr, dbm)
+        },
+        |&(arch, dr, dbm)| {
+            let lb = LinkBudget::for_arch(arch);
+            let m = lb.m_cap.unwrap_or(16);
+            let n = lb.max_n_given_m(m, dr, dbm);
+            let ok_n = n == 0 || lb.feasible(n, m, dr, dbm);
+            let cap = lb.n_cap.unwrap_or(usize::MAX);
+            let tight = n >= cap || !lb.feasible(n + 1, m, dr, dbm);
+            ok_n && tight
+        },
+    );
+}
+
+#[test]
+fn prop_budget_monotone_in_power_and_rate() {
+    forall(
+        59,
+        200,
+        |rng: &mut SplitMix64| {
+            let arch = *rng.choose(&[ArchClass::Maw, ArchClass::Amw, ArchClass::Mwa]);
+            let dbm = rng.f64_range(-5.0, 18.0);
+            (arch, dbm)
+        },
+        |&(arch, dbm)| {
+            let lb = LinkBudget::for_arch(arch);
+            let m = lb.m_cap.unwrap_or(8);
+            let n_lo = lb.max_n_given_m(m, DataRate::Gs10, dbm);
+            let n_mid = lb.max_n_given_m(m, DataRate::Gs5, dbm);
+            let n_hi = lb.max_n_given_m(m, DataRate::Gs1, dbm);
+            let n_more_power = lb.max_n_given_m(m, DataRate::Gs5, dbm + 1.0);
+            n_lo <= n_mid && n_mid <= n_hi && n_more_power >= n_mid
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// arch / sim
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_plan_timesteps_monotone_in_shape() {
+    use spoga::arch::core::Core;
+    let spoga = Core::design(ArchClass::Mwa, DataRate::Gs5, 10.0).unwrap();
+    let holy = Core::design(ArchClass::Maw, DataRate::Gs5, 10.0).unwrap();
+    forall(
+        61,
+        300,
+        |rng: &mut SplitMix64| GemmShape {
+            t: rng.range_usize(1, 512),
+            k: rng.range_usize(1, 2048),
+            c: rng.range_usize(1, 512),
+            groups: rng.range_usize(1, 4),
+        },
+        |s| {
+            for core in [&spoga, &holy] {
+                let p = core.plan_gemm(s);
+                let bigger = GemmShape { t: s.t + 7, k: s.k + 50, c: s.c + 9, groups: s.groups };
+                let pb = core.plan_gemm(&bigger);
+                if pb.timesteps < p.timesteps || p.timesteps == 0 {
+                    return false;
+                }
+                // SPOGA never converts more than once per output.
+                if core.arch == ArchClass::Mwa && p.adc_conversions != s.outputs() {
+                    return false;
+                }
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn prop_energy_positive_and_additive() {
+    use spoga::arch::core::Core;
+    use spoga::arch::cost::EnergyBreakdown;
+    let core = Core::design(ArchClass::Amw, DataRate::Gs10, 10.0).unwrap();
+    forall(
+        67,
+        200,
+        |rng: &mut SplitMix64| GemmShape {
+            t: rng.range_usize(1, 256),
+            k: rng.range_usize(1, 1024),
+            c: rng.range_usize(1, 256),
+            groups: 1,
+        },
+        |s| {
+            let plan = core.plan_gemm(s);
+            let e = EnergyBreakdown::of_plan(&core, &plan);
+            let mut acc = EnergyBreakdown::default();
+            acc.add(&e);
+            acc.add(&e);
+            e.total_j() > 0.0 && (acc.total_j() - 2.0 * e.total_j()).abs() < 1e-12
+        },
+    );
+}
+
+#[test]
+fn prop_fleet_scaling_never_hurts_fps() {
+    use spoga::arch::accel::Accelerator;
+    use spoga::arch::core::Core;
+    use spoga::dnn::models::shufflenet_v2;
+    use spoga::sim::engine::simulate_frame;
+    let w = shufflenet_v2().workload();
+    forall(
+        71,
+        20,
+        |rng: &mut SplitMix64| rng.range_usize(1, 64),
+        |&cores| {
+            let core = Core::design(ArchClass::Mwa, DataRate::Gs5, 10.0).unwrap();
+            let f1 = simulate_frame(&Accelerator::with_cores(core.clone(), cores), &w);
+            let f2 = simulate_frame(&Accelerator::with_cores(core, cores * 2), &w);
+            f2.fps() >= f1.fps()
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// runtime manifest
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_manifest_roundtrip() {
+    use spoga::runtime::Manifest;
+    forall(
+        73,
+        100,
+        |rng: &mut SplitMix64| {
+            let n = rng.range_usize(1, 6);
+            (0..n)
+                .map(|i| {
+                    let d1 = rng.range_usize(1, 512);
+                    let d2 = rng.range_usize(1, 512);
+                    format!("art{i} art{i}.hlo.txt i32:{d1}x{d2} i32:{d1}x{d2}")
+                })
+                .collect::<Vec<_>>()
+                .join("\n")
+        },
+        |text| {
+            let m = Manifest::parse(text, std::path::PathBuf::from("/tmp")).unwrap();
+            m.artifacts.len() == text.lines().count()
+                && m.artifacts.iter().all(|a| {
+                    a.inputs[0].elements() == a.outputs[0].elements()
+                        && m.get(&a.name).is_ok()
+                })
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// coordinator stats
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_latency_percentiles_monotone() {
+    use spoga::coordinator::CoordinatorStats;
+    forall(
+        79,
+        50,
+        |rng: &mut SplitMix64| {
+            (0..rng.range_usize(1, 200))
+                .map(|_| rng.f64_range(1e-6, 2.0))
+                .collect::<Vec<f64>>()
+        },
+        |lats| {
+            let s = CoordinatorStats::default();
+            for &l in lats {
+                s.record_latency(l);
+            }
+            let p10 = s.latency_percentile(0.1);
+            let p50 = s.latency_percentile(0.5);
+            let p99 = s.latency_percentile(0.99);
+            p10 <= p50 && p50 <= p99 && p99 > 0.0
+        },
+    );
+}

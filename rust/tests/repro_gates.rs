@@ -1,0 +1,90 @@
+//! Reproduction gates: the paper's quantitative claims, as tests.
+//!
+//! These encode the "shape" criterion from DESIGN.md §5 — who wins, by
+//! roughly what factor — with generous bands (the substrate is a simulator,
+//! not the authors' testbed). EXPERIMENTS.md records the exact values.
+
+use spoga::arch::core::Core;
+use spoga::arch::cost::ConversionCounts;
+use spoga::dnn::layer::GemmShape;
+use spoga::metrics::{build_figure, Metric, FIG5_CORES};
+use spoga::optics::link_budget::ArchClass;
+use spoga::optics::{paper_table1, solve_table1};
+use spoga::units::DataRate;
+
+/// Table I reproduces cell-for-cell (exact — it is an analytical model).
+#[test]
+fn gate_table1_exact() {
+    let solved = solve_table1();
+    let paper = paper_table1();
+    for (s, p) in solved.rows.iter().zip(paper.rows.iter()) {
+        assert_eq!(s.nm, p.nm, "row {}", s.label);
+    }
+}
+
+/// Fig. 5(a): paper gmean factors 14.4× (vs DEAPCNN_10) and 11.1×
+/// (vs HOLYLIGHT_10). Band: within 2× of the paper's factor.
+#[test]
+fn gate_fig5a_fps_factors() {
+    let fig = build_figure(Metric::Fps, &[DataRate::Gs10], FIG5_CORES).unwrap();
+    let rd = fig.gmean_ratio("SPOGA_10", "DEAPCNN_10").unwrap();
+    let rh = fig.gmean_ratio("SPOGA_10", "HOLYLIGHT_10").unwrap();
+    assert!(rd > 14.4 / 2.0 && rd < 14.4 * 2.0, "S/D FPS ratio {rd}");
+    assert!(rh > 11.1 / 2.0 && rh < 11.1 * 2.0, "S/H FPS ratio {rh}");
+    assert!(rd > rh, "paper ordering: DEAPCNN loses by more");
+}
+
+/// Fig. 5(b): paper gmean factors 2× and 1.3× at 10 GS/s.
+#[test]
+fn gate_fig5b_fps_per_watt_factors() {
+    let fig = build_figure(Metric::FpsPerW, &[DataRate::Gs10], FIG5_CORES).unwrap();
+    let rd = fig.gmean_ratio("SPOGA_10", "DEAPCNN_10").unwrap();
+    let rh = fig.gmean_ratio("SPOGA_10", "HOLYLIGHT_10").unwrap();
+    assert!(rd > 1.0 && rd < 2.0 * 2.0, "S/D FPS/W ratio {rd}");
+    assert!(rh > 1.0 && rh < 1.3 * 2.5, "S/H FPS/W ratio {rh}");
+}
+
+/// Fig. 5(c): paper factors 28.5× (vs DEAPCNN_1) and 22.2× (vs
+/// HOLYLIGHT_1) at 1 GS/s. Band: within 2×.
+#[test]
+fn gate_fig5c_area_efficiency_factors() {
+    let fig = build_figure(Metric::FpsPerWPerMm2, &[DataRate::Gs1], FIG5_CORES).unwrap();
+    let rd = fig.gmean_ratio("SPOGA_1", "DEAPCNN_1").unwrap();
+    let rh = fig.gmean_ratio("SPOGA_1", "HOLYLIGHT_1").unwrap();
+    assert!(rd > 28.5 / 2.0 && rd < 28.5 * 2.0, "S/D area-eff ratio {rd}");
+    assert!(rh > 22.2 / 2.0 && rh < 22.2 * 2.0, "S/H area-eff ratio {rh}");
+}
+
+/// §III-B: per dot product, SPOGA needs 3 O/E + 1 ADC, no SRAM, no DEAS;
+/// prior works need 4 O/E + 4 ADC + SRAM + DEAS.
+#[test]
+fn gate_conversion_accounting() {
+    let spoga = Core::design(ArchClass::Mwa, DataRate::Gs5, 10.0).unwrap();
+    let holy = Core::design(ArchClass::Maw, DataRate::Gs5, 10.0).unwrap();
+    let sh = GemmShape { t: 1, k: spoga.n.min(holy.n), c: 16, groups: 1 };
+
+    let sc = ConversionCounts::from_plan(&spoga.plan_gemm(&sh), sh.outputs());
+    assert_eq!(sc.oe_per_output, 3.0);
+    assert_eq!(sc.adc_per_output, 1.0);
+    assert_eq!(sc.sram_bytes_per_output, 0.0);
+    assert_eq!(sc.deas_per_output, 0.0);
+
+    let hc = ConversionCounts::from_plan(&holy.plan_gemm(&sh), sh.outputs());
+    assert!(hc.oe_per_output >= 4.0);
+    assert!(hc.adc_per_output >= 4.0);
+    assert!(hc.sram_bytes_per_output > 0.0);
+    assert_eq!(hc.deas_per_output, 1.0);
+}
+
+/// SPOGA supports byte-size GEMM with the largest N×M (paper's Table I
+/// takeaway) at every data rate.
+#[test]
+fn gate_spoga_highest_parallelism() {
+    let t = solve_table1();
+    let spoga = t.row("MWA (10dBm)").unwrap();
+    for dr in DataRate::ALL {
+        for base in ["HOLYLIGHT [3]", "DEAPCNN [9]"] {
+            assert!(spoga.parallelism(dr) > t.row(base).unwrap().parallelism(dr));
+        }
+    }
+}

@@ -1,0 +1,127 @@
+//! Integration: AOT artifacts executed through PJRT must match the rust
+//! bitslice golden model bit-for-bit (three-layer composition proof).
+//!
+//! Requires `make artifacts`; tests skip (with a loud message) if the
+//! artifact directory is missing so `cargo test` still works standalone.
+
+use spoga::bitslice;
+use spoga::runtime::Engine;
+use spoga::testing::SplitMix64;
+
+fn engine() -> Option<Engine> {
+    match Engine::new("artifacts") {
+        Ok(e) => Some(e),
+        Err(e) => {
+            eprintln!("SKIP (run `make artifacts` first): {e}");
+            None
+        }
+    }
+}
+
+fn rand_wire_i8(rng: &mut SplitMix64, len: usize) -> Vec<i32> {
+    (0..len).map(|_| rng.i8() as i32).collect()
+}
+
+#[test]
+fn every_gemm_artifact_matches_golden_model() {
+    let Some(mut eng) = engine() else { return };
+    let names: Vec<String> = eng
+        .manifest()
+        .artifacts
+        .iter()
+        .filter(|a| a.name.starts_with("gemm_"))
+        .map(|a| a.name.clone())
+        .collect();
+    assert!(!names.is_empty(), "no gemm artifacts in manifest");
+    let mut rng = SplitMix64::new(0xC0FFEE);
+    for name in names {
+        let meta = eng.manifest().get(&name).unwrap().clone();
+        let (m, k) = (meta.inputs[0].dims[0], meta.inputs[0].dims[1]);
+        let n = meta.inputs[1].dims[1];
+        let a = rand_wire_i8(&mut rng, m * k);
+        let b = rand_wire_i8(&mut rng, k * n);
+        let out = eng.execute_i32_single(&name, &[&a, &b]).unwrap();
+        let a8: Vec<i8> = a.iter().map(|&v| v as i8).collect();
+        let b8: Vec<i8> = b.iter().map(|&v| v as i8).collect();
+        let golden = bitslice::gemm_i32(&a8, &b8, m, k, n).unwrap();
+        assert_eq!(out, golden, "{name} disagrees with golden model");
+    }
+}
+
+#[test]
+fn mlp_batch_variants_agree_row_for_row() {
+    let Some(mut eng) = engine() else { return };
+    let mut rng = SplitMix64::new(42);
+    let row: Vec<i32> = (0..784).map(|_| (rng.below(128)) as i32).collect();
+
+    let b1 = eng.execute_i32_single("mlp_b1", &[&row]).unwrap();
+
+    // Same row in slot 0 (rest zero-padded) of the b8 and b32 variants.
+    for (name, b) in [("mlp_b8", 8usize), ("mlp_b32", 32usize)] {
+        let mut padded = vec![0i32; b * 784];
+        padded[..784].copy_from_slice(&row);
+        let out = eng.execute_i32_single(name, &[&padded]).unwrap();
+        assert_eq!(out.len(), b * 10);
+        assert_eq!(&out[..10], &b1[..], "{name} row 0 != mlp_b1");
+    }
+}
+
+#[test]
+fn mlp_is_deterministic_across_engines() {
+    let Some(mut e1) = engine() else { return };
+    let mut e2 = Engine::new("artifacts").unwrap();
+    let row = vec![7i32; 784];
+    let a = e1.execute_i32_single("mlp_b1", &[&row]).unwrap();
+    let b = e2.execute_i32_single("mlp_b1", &[&row]).unwrap();
+    assert_eq!(a, b);
+}
+
+#[test]
+fn cnn_zero_input_gives_zero_logits() {
+    let Some(mut eng) = engine() else { return };
+    let x = vec![0i32; 28 * 28];
+    let out = eng.execute_i32_single("cnn_b1", &[&x]).unwrap();
+    assert_eq!(out, vec![0i32; 10]);
+}
+
+#[test]
+fn cnn_batch_variant_consistent() {
+    let Some(mut eng) = engine() else { return };
+    let mut rng = SplitMix64::new(7);
+    let img: Vec<i32> = (0..28 * 28).map(|_| rng.below(128) as i32).collect();
+    let b1 = eng.execute_i32_single("cnn_b1", &[&img]).unwrap();
+    let mut batch = vec![0i32; 8 * 28 * 28];
+    batch[..784].copy_from_slice(&img);
+    let b8 = eng.execute_i32_single("cnn_b8", &[&batch]).unwrap();
+    assert_eq!(&b8[..10], &b1[..]);
+}
+
+#[test]
+fn shape_validation_rejects_bad_inputs() {
+    let Some(mut eng) = engine() else { return };
+    let short = vec![0i32; 10];
+    assert!(eng.execute_i32_single("mlp_b1", &[&short]).is_err());
+    let row = vec![0i32; 784];
+    assert!(eng.execute_i32_single("mlp_b1", &[&row, &row]).is_err());
+    assert!(eng.execute_i32_single("no_such_artifact", &[&row]).is_err());
+}
+
+#[test]
+fn manifest_covers_expected_artifact_families() {
+    let Some(eng) = engine() else { return };
+    let names: Vec<&str> =
+        eng.manifest().artifacts.iter().map(|a| a.name.as_str()).collect();
+    assert!(names.contains(&"gemm_128x249x16"), "DPU-native GEMM missing");
+    assert!(names.iter().filter(|n| n.starts_with("mlp_b")).count() >= 3);
+    assert!(names.iter().filter(|n| n.starts_with("cnn_b")).count() >= 2);
+}
+
+#[test]
+fn warmup_reports_compile_time() {
+    let Some(mut eng) = engine() else { return };
+    let t1 = eng.warmup("gemm_64x64x64").unwrap();
+    assert!(t1 >= 0.0);
+    // Second warmup is a cache hit: effectively instant.
+    let t2 = eng.warmup("gemm_64x64x64").unwrap();
+    assert!(t2 < t1.max(0.01));
+}
