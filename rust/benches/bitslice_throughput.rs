@@ -1,0 +1,137 @@
+//! Bench: bit-sliced GEMM engine throughput — naive oracle vs packed
+//! single-thread vs packed+threads, across {64, 256, 1024}³ shapes.
+//!
+//! This is the recorded artifact for the packed-plane engine PR: effective
+//! GOPS (2·m·k·n ops per GEMM) for the SPOGA three-lane dataflow, plus the
+//! packed-over-naive speedup. Results are printed as a table and written as
+//! JSON (default `BENCH_bitslice.json`, override with the
+//! `BITSLICE_BENCH_OUT` env var) so future perf PRs have a trajectory
+//! baseline.
+//!
+//! Run: `cargo bench --bench bitslice_throughput [max_dim]`
+//! (`max_dim` defaults to 1024; pass 256 for a quick pass.)
+
+use spoga::benchkit::bench;
+use spoga::bitslice::{gemm_lanes_naive, gemm_lanes_tiled, TileConfig};
+use spoga::bitslice::kernel::default_threads;
+use spoga::report::{fmt_ratio, fmt_sig, Table};
+use spoga::testing::SplitMix64;
+
+struct ShapeResult {
+    dim: usize,
+    naive_gops: f64,
+    packed_gops: f64,
+    packed_mt_gops: f64,
+}
+
+fn gops(dim: usize, seconds: f64) -> f64 {
+    2.0 * (dim as f64).powi(3) / seconds / 1e9
+}
+
+fn main() {
+    let max_dim: usize = std::env::args()
+        .nth(1)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1024);
+    let threads = default_threads();
+    println!("bitslice GEMM throughput (SPOGA three-lane dataflow), {threads} threads available\n");
+
+    // Smoke check before timing anything: the kernels must agree bit-exactly.
+    {
+        let mut rng = SplitMix64::new(4242);
+        let a = rng.i8_vec(64 * 64);
+        let b = rng.i8_vec(64 * 64);
+        let oracle = gemm_lanes_naive(&a, &b, 64, 64, 64).unwrap();
+        let fast = gemm_lanes_tiled(&a, &b, 64, 64, 64, &TileConfig::auto()).unwrap();
+        assert_eq!(oracle.hi, fast.hi);
+        assert_eq!(oracle.mid, fast.mid);
+        assert_eq!(oracle.lo, fast.lo);
+    }
+
+    let mut results = Vec::new();
+    let mut t = Table::new(vec![
+        "shape",
+        "naive (GOPS)",
+        "packed 1T (GOPS)",
+        "packed MT (GOPS)",
+        "MT vs naive",
+    ]);
+
+    for dim in [64usize, 256, 1024] {
+        if dim > max_dim {
+            println!("(skipping {dim}^3: max_dim {max_dim})");
+            continue;
+        }
+        let mut rng = SplitMix64::new(dim as u64);
+        let a = rng.i8_vec(dim * dim);
+        let b = rng.i8_vec(dim * dim);
+
+        // Iteration budget ~2e8 MACs per timed kernel, at least one run.
+        let iters = (200_000_000 / (dim * dim * dim)).clamp(1, 50);
+        let warmup = usize::from(dim < 1024);
+
+        let naive = bench(warmup, iters, || {
+            gemm_lanes_naive(&a, &b, dim, dim, dim).unwrap()
+        });
+        let single = TileConfig::single_thread();
+        let packed = bench(warmup, iters, || {
+            gemm_lanes_tiled(&a, &b, dim, dim, dim, &single).unwrap()
+        });
+        let multi = TileConfig::auto();
+        let packed_mt = bench(warmup, iters, || {
+            gemm_lanes_tiled(&a, &b, dim, dim, dim, &multi).unwrap()
+        });
+
+        let r = ShapeResult {
+            dim,
+            naive_gops: gops(dim, naive.min_s),
+            packed_gops: gops(dim, packed.min_s),
+            packed_mt_gops: gops(dim, packed_mt.min_s),
+        };
+        t.row(vec![
+            format!("{dim}x{dim}x{dim}"),
+            fmt_sig(r.naive_gops, 3),
+            fmt_sig(r.packed_gops, 3),
+            fmt_sig(r.packed_mt_gops, 3),
+            fmt_ratio(r.packed_mt_gops / r.naive_gops),
+        ]);
+        results.push(r);
+    }
+
+    println!("{}", t.render());
+    if let Some(r) = results.iter().find(|r| r.dim == 256) {
+        println!(
+            "acceptance gate (256^3, packed+threads vs naive): {:.2}x",
+            r.packed_mt_gops / r.naive_gops
+        );
+    }
+
+    // JSON snapshot for the perf trajectory.
+    let out_path = std::env::var("BITSLICE_BENCH_OUT")
+        .unwrap_or_else(|_| "BENCH_bitslice.json".to_string());
+    let shapes: Vec<String> = results
+        .iter()
+        .map(|r| {
+            format!(
+                "    {{\"dim\": {}, \"naive_gops\": {:.4}, \"packed_gops\": {:.4}, \
+                 \"packed_mt_gops\": {:.4}, \"speedup_mt_vs_naive\": {:.3}}}",
+                r.dim,
+                r.naive_gops,
+                r.packed_gops,
+                r.packed_mt_gops,
+                r.packed_mt_gops / r.naive_gops
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"bitslice_throughput\",\n  \"dataflow\": \"spoga_three_lane\",\n  \
+         \"ops_definition\": \"2*m*k*n per GEMM, best-of-n timing\",\n  \
+         \"threads_available\": {},\n  \"results\": [\n{}\n  ]\n}}\n",
+        threads,
+        shapes.join(",\n")
+    );
+    match std::fs::write(&out_path, &json) {
+        Ok(()) => println!("wrote {out_path}"),
+        Err(e) => eprintln!("could not write {out_path}: {e}"),
+    }
+}

@@ -10,12 +10,24 @@
 //!   (the cross terms share the 16¹ lane) weighted at "transduction" time.
 //!
 //! All three must agree exactly; tests and the property harness enforce it.
+//!
+//! ## Naive-vs-fast dispatch contract
+//!
+//! Each public entry point dispatches on problem size: small problems run
+//! the transparent `*_naive` loop nests below (the **oracles** — the code a
+//! reviewer checks against the paper), large ones run the packed-plane
+//! tiled/threaded kernels in [`crate::bitslice::kernel`], which are bit-exact
+//! against the oracles by property test. Call the `*_naive` functions
+//! directly when you need the oracle regardless of size, or
+//! `kernel::gemm_*_tiled` with an explicit [`kernel::TileConfig`]
+//! (re-exported from [`crate::bitslice`]) to control blocking and threads.
 
+use crate::bitslice::kernel;
 use crate::bitslice::nibble::slice_i8;
 use crate::{Error, Result};
 
 /// Row-major matrix dims helper: `C[m][n] = Σ_k A[m][k]·B[k][n]`.
-fn check_dims(a: &[i8], b: &[i8], m: usize, k: usize, n: usize) -> Result<()> {
+pub(crate) fn check_dims(a: &[i8], b: &[i8], m: usize, k: usize, n: usize) -> Result<()> {
     if a.len() != m * k {
         return Err(Error::Shape(format!("A has {} elems, expected {}x{}", a.len(), m, k)));
     }
@@ -26,7 +38,18 @@ fn check_dims(a: &[i8], b: &[i8], m: usize, k: usize, n: usize) -> Result<()> {
 }
 
 /// Direct int32 reference GEMM (row-major `A: m×k`, `B: k×n` → `C: m×n`).
+///
+/// Dispatches to the tiled/threaded kernel for large problems; bit-exact
+/// with [`gemm_i32_naive`] always.
 pub fn gemm_i32(a: &[i8], b: &[i8], m: usize, k: usize, n: usize) -> Result<Vec<i32>> {
+    match kernel::dispatch_config(m, k, n) {
+        Some(cfg) => kernel::gemm_i32_tiled(a, b, m, k, n, &cfg),
+        None => gemm_i32_naive(a, b, m, k, n),
+    }
+}
+
+/// Naive oracle for [`gemm_i32`]: the transparent three-loop reference.
+pub fn gemm_i32_naive(a: &[i8], b: &[i8], m: usize, k: usize, n: usize) -> Result<Vec<i32>> {
     check_dims(a, b, m, k, n)?;
     let mut c = vec![0i32; m * n];
     for i in 0..m {
@@ -77,7 +100,18 @@ impl SlicedGemm {
 ///
 /// Each intermediate is exactly what one of the four dedicated photonic
 /// cores in Fig. 2(a) would produce (before ADC/DEAS post-processing).
+/// Dispatches to the packed kernel for large problems; bit-exact with
+/// [`gemm_sliced_naive`] always.
 pub fn gemm_sliced(a: &[i8], b: &[i8], m: usize, k: usize, n: usize) -> Result<SlicedGemm> {
+    match kernel::dispatch_config(m, k, n) {
+        Some(cfg) => kernel::gemm_sliced_tiled(a, b, m, k, n, &cfg),
+        None => gemm_sliced_naive(a, b, m, k, n),
+    }
+}
+
+/// Naive oracle for [`gemm_sliced`]: slices every operand element in the
+/// innermost loop, exactly as the hardware description reads.
+pub fn gemm_sliced_naive(a: &[i8], b: &[i8], m: usize, k: usize, n: usize) -> Result<SlicedGemm> {
     check_dims(a, b, m, k, n)?;
     let mut out = SlicedGemm {
         mm: vec![0; m * n],
@@ -133,8 +167,17 @@ impl LaneGemm {
 ///
 /// Note the Mid lane merges the two cross terms *optically* (λ2 and λ3 are
 /// multiplexed into the same aggregation lane set), so only three — not
-/// four — accumulators exist per dot product.
+/// four — accumulators exist per dot product. Dispatches to the packed
+/// kernel for large problems; bit-exact with [`gemm_lanes_naive`] always.
 pub fn gemm_lanes(a: &[i8], b: &[i8], m: usize, k: usize, n: usize) -> Result<LaneGemm> {
+    match kernel::dispatch_config(m, k, n) {
+        Some(cfg) => kernel::gemm_lanes_tiled(a, b, m, k, n, &cfg),
+        None => gemm_lanes_naive(a, b, m, k, n),
+    }
+}
+
+/// Naive oracle for [`gemm_lanes`].
+pub fn gemm_lanes_naive(a: &[i8], b: &[i8], m: usize, k: usize, n: usize) -> Result<LaneGemm> {
     check_dims(a, b, m, k, n)?;
     let mut out = LaneGemm { hi: vec![0; m * n], mid: vec![0; m * n], lo: vec![0; m * n] };
     for i in 0..m {
@@ -215,6 +258,9 @@ mod tests {
         assert!(gemm_i32(&[1, 2, 3], &[1, 2], 2, 2, 1).is_err());
         assert!(gemm_sliced(&[1, 2], &[1, 2, 3], 1, 2, 1).is_err());
         assert!(gemm_lanes(&[1], &[1, 2], 1, 1, 1).is_err());
+        assert!(gemm_i32_naive(&[1, 2, 3], &[1, 2], 2, 2, 1).is_err());
+        assert!(gemm_sliced_naive(&[1, 2], &[1, 2, 3], 1, 2, 1).is_err());
+        assert!(gemm_lanes_naive(&[1], &[1, 2], 1, 1, 1).is_err());
     }
 
     #[test]
@@ -222,6 +268,25 @@ mod tests {
         let ident = mat(&[1, 0, 0, 1]);
         let b = mat(&[42, -17, 99, -128]);
         assert_eq!(gemm_i32(&ident, &b, 2, 2, 2).unwrap(), vec![42, -17, 99, -128]);
+    }
+
+    #[test]
+    fn dispatcher_crosses_threshold_bit_exact() {
+        // 64×16×64 = 65536 MACs ≥ PACKED_MIN_MACS: the public entry points
+        // take the packed path here; the naive oracles must agree exactly.
+        let (m, k, n) = (64usize, 16usize, 64usize);
+        let a: Vec<i8> = (0..m * k).map(|i| (i * 37 + 11) as i8).collect();
+        let b: Vec<i8> = (0..k * n).map(|i| (i * 53 + 7) as i8).collect();
+        assert!(crate::bitslice::kernel::dispatch_config(m, k, n).is_some());
+        assert_eq!(gemm_i32(&a, &b, m, k, n).unwrap(), gemm_i32_naive(&a, &b, m, k, n).unwrap());
+        let fast = gemm_lanes(&a, &b, m, k, n).unwrap();
+        let slow = gemm_lanes_naive(&a, &b, m, k, n).unwrap();
+        assert_eq!(fast.hi, slow.hi);
+        assert_eq!(fast.mid, slow.mid);
+        assert_eq!(fast.lo, slow.lo);
+        let fs = gemm_sliced(&a, &b, m, k, n).unwrap();
+        let ss = gemm_sliced_naive(&a, &b, m, k, n).unwrap();
+        assert_eq!(fs.recombine(), ss.recombine());
     }
 
     #[test]

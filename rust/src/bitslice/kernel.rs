@@ -1,0 +1,609 @@
+//! Cache-blocked, multithreaded micro-kernels over packed nibble planes.
+//!
+//! This is the fast half of the naive-vs-fast dispatch contract (see
+//! [`crate::bitslice`] module docs): every kernel here is **bit-exact**
+//! against its `*_naive` oracle in [`crate::bitslice::gemm`] /
+//! [`crate::bitslice::wide`] — the property suite enforces it for random
+//! shapes, non-tile-multiple dimensions and extreme operands.
+//!
+//! Structure of every kernel:
+//!
+//! 1. **Pack once** — operands are sliced into flat nibble planes
+//!    ([`NibblePlanes`] / [`WidePlanes`]), O(m·k + k·n) instead of the naive
+//!    O(m·k·n) re-slicing.
+//! 2. **Cache blocking** — i–k–j loop order with `kc × jc` panel blocking:
+//!    a `kc`-deep stripe of the B planes stays hot in cache while every row
+//!    of the band streams over it; `jc` bounds the C/B row segments so the
+//!    accumulator rows live in L1.
+//! 3. **Row-band threading** — the M dimension splits into near-equal bands,
+//!    one `std::thread::scope` thread per band. Bands own disjoint slabs of
+//!    the output (`split_at_mut`), so there is no synchronization on the hot
+//!    path and no unsafe code.
+//!
+//! [`TileConfig`] carries the knobs; [`dispatch_config`] is the policy the
+//! public `gemm_*` entry points use to decide naive vs packed and how many
+//! threads the problem deserves.
+
+use std::sync::OnceLock;
+
+use crate::bitslice::gemm::{check_dims, LaneGemm, SlicedGemm};
+use crate::bitslice::packed::{NibblePlanes, WidePlanes};
+use crate::bitslice::wide::{check_dims_i16, WideLanes};
+use crate::Result;
+
+/// MAC-count threshold below which the naive kernels win (packing and
+/// thread setup dominate for tiny problems).
+pub const PACKED_MIN_MACS: usize = 1 << 15;
+
+/// MACs of per-thread work a band should amortize before another thread is
+/// worth spawning (~0.1 ms of scalar work).
+const PAR_GRAIN_MACS: usize = 1 << 17;
+
+/// Tiling/threading knobs for the packed kernels.
+#[derive(Debug, Clone, Copy)]
+pub struct TileConfig {
+    /// K-dimension block depth (rows of the B panel kept hot per pass).
+    pub kc: usize,
+    /// J-dimension block width (C/B row segment length, bounds L1 footprint).
+    pub jc: usize,
+    /// Row bands to run in parallel (clamped to the row count; `1` = no
+    /// threads spawned).
+    pub threads: usize,
+}
+
+impl TileConfig {
+    /// Default blocking with a single band (no threads).
+    pub fn single_thread() -> Self {
+        TileConfig { kc: 256, jc: 1024, threads: 1 }
+    }
+
+    /// Default blocking using every available core.
+    pub fn auto() -> Self {
+        TileConfig { kc: 256, jc: 1024, threads: default_threads() }
+    }
+
+    /// Blocking for a concrete problem: thread count scales with the MAC
+    /// count so small problems do not pay spawn overhead.
+    pub fn auto_for(m: usize, k: usize, n: usize) -> Self {
+        let work = m.saturating_mul(k).saturating_mul(n);
+        let threads = (work / PAR_GRAIN_MACS).clamp(1, default_threads());
+        TileConfig { kc: 256, jc: 1024, threads }
+    }
+}
+
+impl Default for TileConfig {
+    fn default() -> Self {
+        TileConfig::auto()
+    }
+}
+
+/// Cached `std::thread::available_parallelism`.
+pub fn default_threads() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+}
+
+/// Dispatch policy for the public `gemm_*` entry points: `None` means the
+/// naive oracle is the right kernel.
+///
+/// Two gates must pass:
+/// * the MAC count is large enough to amortize packing and setup, and
+/// * packing actually removes redundancy — the naive loops re-slice A `n`
+///   times and B `m` times, so each packed element must be reused a few
+///   times (`m·k·n ≥ 4·(m·k + k·n)`). Vector-shaped problems (e.g. a
+///   1×K×1 dot product) fail this: packing them is pure overhead.
+pub fn dispatch_config(m: usize, k: usize, n: usize) -> Option<TileConfig> {
+    let work = m.saturating_mul(k).saturating_mul(n);
+    let pack_cost = m.saturating_mul(k).saturating_add(k.saturating_mul(n));
+    if work < PACKED_MIN_MACS || work < pack_cost.saturating_mul(4) {
+        None
+    } else {
+        Some(TileConfig::auto_for(m, k, n))
+    }
+}
+
+/// Split `m` rows into at most `want` near-equal `(start, end)` bands.
+fn bands(m: usize, want: usize) -> Vec<(usize, usize)> {
+    let t = want.clamp(1, m.max(1));
+    let base = m / t;
+    let rem = m % t;
+    let mut out = Vec::with_capacity(t);
+    let mut r0 = 0;
+    for i in 0..t {
+        let r1 = r0 + base + usize::from(i < rem);
+        out.push((r0, r1));
+        r0 = r1;
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// direct i32 GEMM
+// ---------------------------------------------------------------------------
+
+/// Tiled + threaded direct INT8→i32 GEMM (bit-exact vs `gemm_i32_naive`).
+pub fn gemm_i32_tiled(
+    a: &[i8],
+    b: &[i8],
+    m: usize,
+    k: usize,
+    n: usize,
+    cfg: &TileConfig,
+) -> Result<Vec<i32>> {
+    check_dims(a, b, m, k, n)?;
+    let mut c = vec![0i32; m * n];
+    let band_list = bands(m, cfg.threads);
+    if band_list.len() <= 1 {
+        i32_band(a, b, k, n, 0, m, &mut c, cfg);
+    } else {
+        std::thread::scope(|s| {
+            let mut rest = c.as_mut_slice();
+            for &(r0, r1) in &band_list {
+                let (slab, tail) = std::mem::take(&mut rest).split_at_mut((r1 - r0) * n);
+                rest = tail;
+                s.spawn(move || i32_band(a, b, k, n, r0, r1, slab, cfg));
+            }
+        });
+    }
+    Ok(c)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn i32_band(
+    a: &[i8],
+    b: &[i8],
+    k: usize,
+    n: usize,
+    r0: usize,
+    r1: usize,
+    c: &mut [i32],
+    cfg: &TileConfig,
+) {
+    let kc = cfg.kc.max(1);
+    let jc = cfg.jc.max(1);
+    for k0 in (0..k).step_by(kc) {
+        let k1 = (k0 + kc).min(k);
+        for j0 in (0..n).step_by(jc) {
+            let j1 = (j0 + jc).min(n);
+            for i in r0..r1 {
+                let row = (i - r0) * n;
+                let crow = &mut c[row + j0..row + j1];
+                let arow = &a[i * k..(i + 1) * k];
+                for kk in k0..k1 {
+                    let av = arow[kk] as i32;
+                    if av == 0 {
+                        continue;
+                    }
+                    let brow = &b[kk * n + j0..kk * n + j1];
+                    for (cv, &bv) in crow.iter_mut().zip(brow) {
+                        *cv += av * bv as i32;
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SPOGA three-lane GEMM
+// ---------------------------------------------------------------------------
+
+/// Tiled + threaded SPOGA radix-lane GEMM over packed planes (bit-exact vs
+/// `gemm_lanes_naive`).
+pub fn gemm_lanes_tiled(
+    a: &[i8],
+    b: &[i8],
+    m: usize,
+    k: usize,
+    n: usize,
+    cfg: &TileConfig,
+) -> Result<LaneGemm> {
+    check_dims(a, b, m, k, n)?;
+    let pa = NibblePlanes::pack(a, m, k)?;
+    let pb = NibblePlanes::pack(b, k, n)?;
+    let mut out = LaneGemm { hi: vec![0; m * n], mid: vec![0; m * n], lo: vec![0; m * n] };
+    let band_list = bands(m, cfg.threads);
+    if band_list.len() <= 1 {
+        lanes_band(&pa, &pb, 0, m, &mut out.hi, &mut out.mid, &mut out.lo, cfg);
+    } else {
+        std::thread::scope(|s| {
+            let mut hi = out.hi.as_mut_slice();
+            let mut mid = out.mid.as_mut_slice();
+            let mut lo = out.lo.as_mut_slice();
+            for &(r0, r1) in &band_list {
+                let take = (r1 - r0) * n;
+                let (h, ht) = std::mem::take(&mut hi).split_at_mut(take);
+                hi = ht;
+                let (mi, mt) = std::mem::take(&mut mid).split_at_mut(take);
+                mid = mt;
+                let (l, lt) = std::mem::take(&mut lo).split_at_mut(take);
+                lo = lt;
+                let (pa, pb) = (&pa, &pb);
+                s.spawn(move || lanes_band(pa, pb, r0, r1, h, mi, l, cfg));
+            }
+        });
+    }
+    Ok(out)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn lanes_band(
+    pa: &NibblePlanes,
+    pb: &NibblePlanes,
+    r0: usize,
+    r1: usize,
+    hi: &mut [i32],
+    mid: &mut [i32],
+    lo: &mut [i32],
+    cfg: &TileConfig,
+) {
+    let k = pa.cols;
+    let n = pb.cols;
+    let kc = cfg.kc.max(1);
+    let jc = cfg.jc.max(1);
+    for k0 in (0..k).step_by(kc) {
+        let k1 = (k0 + kc).min(k);
+        for j0 in (0..n).step_by(jc) {
+            let j1 = (j0 + jc).min(n);
+            for i in r0..r1 {
+                let row = (i - r0) * n;
+                let am_row = pa.msn_row(i);
+                let al_row = pa.lsn_row(i);
+                for kk in k0..k1 {
+                    let am = am_row[kk] as i32;
+                    let al = al_row[kk] as i32;
+                    if am == 0 && al == 0 {
+                        continue;
+                    }
+                    let bm = &pb.msn_row(kk)[j0..j1];
+                    let bl = &pb.lsn_row(kk)[j0..j1];
+                    let hrow = &mut hi[row + j0..row + j1];
+                    let mrow = &mut mid[row + j0..row + j1];
+                    let lrow = &mut lo[row + j0..row + j1];
+                    for jj in 0..j1 - j0 {
+                        let bmv = bm[jj] as i32;
+                        let blv = bl[jj] as i32;
+                        hrow[jj] += am * bmv;
+                        mrow[jj] += am * blv + al * bmv;
+                        lrow[jj] += al * blv;
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// prior-work four-slice GEMM
+// ---------------------------------------------------------------------------
+
+/// Tiled + threaded prior-work four-slice GEMM over packed planes (bit-exact
+/// vs `gemm_sliced_naive`).
+pub fn gemm_sliced_tiled(
+    a: &[i8],
+    b: &[i8],
+    m: usize,
+    k: usize,
+    n: usize,
+    cfg: &TileConfig,
+) -> Result<SlicedGemm> {
+    check_dims(a, b, m, k, n)?;
+    let pa = NibblePlanes::pack(a, m, k)?;
+    let pb = NibblePlanes::pack(b, k, n)?;
+    let mut out = SlicedGemm {
+        mm: vec![0; m * n],
+        ml: vec![0; m * n],
+        lm: vec![0; m * n],
+        ll: vec![0; m * n],
+    };
+    let band_list = bands(m, cfg.threads);
+    if band_list.len() <= 1 {
+        sliced_band(&pa, &pb, 0, m, &mut out.mm, &mut out.ml, &mut out.lm, &mut out.ll, cfg);
+    } else {
+        std::thread::scope(|s| {
+            let mut mm = out.mm.as_mut_slice();
+            let mut ml = out.ml.as_mut_slice();
+            let mut lm = out.lm.as_mut_slice();
+            let mut ll = out.ll.as_mut_slice();
+            for &(r0, r1) in &band_list {
+                let take = (r1 - r0) * n;
+                let (s_mm, t_mm) = std::mem::take(&mut mm).split_at_mut(take);
+                mm = t_mm;
+                let (s_ml, t_ml) = std::mem::take(&mut ml).split_at_mut(take);
+                ml = t_ml;
+                let (s_lm, t_lm) = std::mem::take(&mut lm).split_at_mut(take);
+                lm = t_lm;
+                let (s_ll, t_ll) = std::mem::take(&mut ll).split_at_mut(take);
+                ll = t_ll;
+                let (pa, pb) = (&pa, &pb);
+                s.spawn(move || sliced_band(pa, pb, r0, r1, s_mm, s_ml, s_lm, s_ll, cfg));
+            }
+        });
+    }
+    Ok(out)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn sliced_band(
+    pa: &NibblePlanes,
+    pb: &NibblePlanes,
+    r0: usize,
+    r1: usize,
+    mm: &mut [i32],
+    ml: &mut [i32],
+    lm: &mut [i32],
+    ll: &mut [i32],
+    cfg: &TileConfig,
+) {
+    let k = pa.cols;
+    let n = pb.cols;
+    let kc = cfg.kc.max(1);
+    let jc = cfg.jc.max(1);
+    for k0 in (0..k).step_by(kc) {
+        let k1 = (k0 + kc).min(k);
+        for j0 in (0..n).step_by(jc) {
+            let j1 = (j0 + jc).min(n);
+            for i in r0..r1 {
+                let row = (i - r0) * n;
+                let am_row = pa.msn_row(i);
+                let al_row = pa.lsn_row(i);
+                for kk in k0..k1 {
+                    let am = am_row[kk] as i32;
+                    let al = al_row[kk] as i32;
+                    if am == 0 && al == 0 {
+                        continue;
+                    }
+                    let bm = &pb.msn_row(kk)[j0..j1];
+                    let bl = &pb.lsn_row(kk)[j0..j1];
+                    let mm_row = &mut mm[row + j0..row + j1];
+                    let ml_row = &mut ml[row + j0..row + j1];
+                    let lm_row = &mut lm[row + j0..row + j1];
+                    let ll_row = &mut ll[row + j0..row + j1];
+                    for jj in 0..j1 - j0 {
+                        let bmv = bm[jj] as i32;
+                        let blv = bl[jj] as i32;
+                        mm_row[jj] += am * bmv;
+                        ml_row[jj] += am * blv;
+                        lm_row[jj] += al * bmv;
+                        ll_row[jj] += al * blv;
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// INT16 seven-lane GEMM
+// ---------------------------------------------------------------------------
+
+/// Tiled + threaded INT16 seven-lane GEMM over packed four-nibble planes
+/// (bit-exact vs `gemm_i16_lanes_naive`).
+pub fn gemm_i16_lanes_tiled(
+    a: &[i16],
+    b: &[i16],
+    m: usize,
+    k: usize,
+    n: usize,
+    cfg: &TileConfig,
+) -> Result<WideLanes> {
+    check_dims_i16(a, b, m, k, n)?;
+    let pa = WidePlanes::pack(a, m, k)?;
+    let pb = WidePlanes::pack(b, k, n)?;
+    let mut out = WideLanes { lanes: std::array::from_fn(|_| vec![0i64; m * n]) };
+    let band_list = bands(m, cfg.threads);
+    if band_list.len() <= 1 {
+        let mut slabs: Vec<&mut [i64]> = out.lanes.iter_mut().map(|v| v.as_mut_slice()).collect();
+        wide_band(&pa, &pb, 0, m, &mut slabs, cfg);
+    } else {
+        std::thread::scope(|s| {
+            let mut tails: Vec<&mut [i64]> =
+                out.lanes.iter_mut().map(|v| v.as_mut_slice()).collect();
+            for &(r0, r1) in &band_list {
+                let take = (r1 - r0) * n;
+                let mut slabs: Vec<&mut [i64]> = Vec::with_capacity(tails.len());
+                for tail in tails.iter_mut() {
+                    let (head, rest) = std::mem::take(tail).split_at_mut(take);
+                    *tail = rest;
+                    slabs.push(head);
+                }
+                let (pa, pb) = (&pa, &pb);
+                s.spawn(move || wide_band(pa, pb, r0, r1, &mut slabs, cfg));
+            }
+        });
+    }
+    Ok(out)
+}
+
+fn wide_band(
+    pa: &WidePlanes,
+    pb: &WidePlanes,
+    r0: usize,
+    r1: usize,
+    slabs: &mut [&mut [i64]],
+    cfg: &TileConfig,
+) {
+    let k = pa.cols;
+    let n = pb.cols;
+    let kc = cfg.kc.max(1);
+    let jc = cfg.jc.max(1);
+    for k0 in (0..k).step_by(kc) {
+        let k1 = (k0 + kc).min(k);
+        for j0 in (0..n).step_by(jc) {
+            let j1 = (j0 + jc).min(n);
+            for i in r0..r1 {
+                let row = (i - r0) * n;
+                for kk in k0..k1 {
+                    let na = [
+                        pa.planes[0][i * k + kk] as i32,
+                        pa.planes[1][i * k + kk] as i32,
+                        pa.planes[2][i * k + kk] as i32,
+                        pa.planes[3][i * k + kk] as i32,
+                    ];
+                    if na == [0, 0, 0, 0] {
+                        continue;
+                    }
+                    for (p, &ap) in na.iter().enumerate() {
+                        if ap == 0 {
+                            continue;
+                        }
+                        for q in 0..4 {
+                            let brow = &pb.plane_row(q, kk)[j0..j1];
+                            let lane = &mut slabs[p + q][row + j0..row + j1];
+                            for (acc, &bv) in lane.iter_mut().zip(brow) {
+                                *acc += (ap * bv as i32) as i64;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitslice::gemm::{gemm_i32_naive, gemm_lanes_naive, gemm_sliced_naive};
+    use crate::bitslice::wide::gemm_i16_lanes_naive;
+    use crate::testing::prop::GemmCase;
+    use crate::testing::{forall, Gen, SplitMix64};
+
+    /// Exotic tile configs that force partial blocks and multiple bands on
+    /// tiny shapes.
+    fn stress_cfgs() -> Vec<TileConfig> {
+        vec![
+            TileConfig { kc: 1, jc: 1, threads: 1 },
+            TileConfig { kc: 3, jc: 2, threads: 2 },
+            TileConfig { kc: 2, jc: 5, threads: 3 },
+            TileConfig { kc: 7, jc: 3, threads: 8 },
+            TileConfig { kc: 1024, jc: 1024, threads: 4 },
+        ]
+    }
+
+    #[test]
+    fn bands_cover_rows_exactly() {
+        for (m, want) in [(1usize, 1usize), (1, 8), (10, 3), (7, 7), (64, 5), (3, 100)] {
+            let bs = bands(m, want);
+            assert!(bs.len() <= want.max(1) && bs.len() <= m);
+            assert_eq!(bs.first().unwrap().0, 0);
+            assert_eq!(bs.last().unwrap().1, m);
+            for w in bs.windows(2) {
+                assert_eq!(w[0].1, w[1].0);
+                assert!(w[0].1 > w[0].0);
+            }
+        }
+    }
+
+    #[test]
+    fn tiled_lanes_match_naive_under_stress_configs() {
+        forall(101, 40, GemmCase { max_dim: 13 }, |(a, b, m, k, n)| {
+            let expect = gemm_lanes_naive(a, b, *m, *k, *n).unwrap();
+            stress_cfgs().iter().all(|cfg| {
+                let got = gemm_lanes_tiled(a, b, *m, *k, *n, cfg).unwrap();
+                got.hi == expect.hi && got.mid == expect.mid && got.lo == expect.lo
+            })
+        });
+    }
+
+    #[test]
+    fn tiled_sliced_match_naive_under_stress_configs() {
+        forall(103, 30, GemmCase { max_dim: 11 }, |(a, b, m, k, n)| {
+            let expect = gemm_sliced_naive(a, b, *m, *k, *n).unwrap();
+            stress_cfgs().iter().all(|cfg| {
+                let got = gemm_sliced_tiled(a, b, *m, *k, *n, cfg).unwrap();
+                got.mm == expect.mm
+                    && got.ml == expect.ml
+                    && got.lm == expect.lm
+                    && got.ll == expect.ll
+            })
+        });
+    }
+
+    #[test]
+    fn tiled_i32_matches_naive_under_stress_configs() {
+        forall(107, 40, GemmCase { max_dim: 13 }, |(a, b, m, k, n)| {
+            let expect = gemm_i32_naive(a, b, *m, *k, *n).unwrap();
+            stress_cfgs()
+                .iter()
+                .all(|cfg| gemm_i32_tiled(a, b, *m, *k, *n, cfg).unwrap() == expect)
+        });
+    }
+
+    #[test]
+    fn tiled_wide_matches_naive_under_stress_configs() {
+        forall(
+            109,
+            15,
+            |rng: &mut SplitMix64| {
+                let (m, k, n) =
+                    (rng.range_usize(1, 7), rng.range_usize(1, 9), rng.range_usize(1, 7));
+                let a: Vec<i16> = (0..m * k).map(|_| rng.next_u64() as i16).collect();
+                let b: Vec<i16> = (0..k * n).map(|_| rng.next_u64() as i16).collect();
+                (a, b, m, k, n)
+            },
+            |(a, b, m, k, n)| {
+                let expect = gemm_i16_lanes_naive(a, b, *m, *k, *n).unwrap();
+                stress_cfgs().iter().all(|cfg| {
+                    let got = gemm_i16_lanes_tiled(a, b, *m, *k, *n, cfg).unwrap();
+                    got.lanes == expect.lanes
+                })
+            },
+        );
+    }
+
+    #[test]
+    fn extreme_operands_bit_exact() {
+        // All-(-128) by all-127 exercises the signed-MSN corner everywhere.
+        let (m, k, n) = (5usize, 33usize, 9usize);
+        let a = vec![-128i8; m * k];
+        let b = vec![127i8; k * n];
+        let cfg = TileConfig { kc: 4, jc: 4, threads: 3 };
+        let naive = gemm_lanes_naive(&a, &b, m, k, n).unwrap();
+        let fast = gemm_lanes_tiled(&a, &b, m, k, n, &cfg).unwrap();
+        assert_eq!(naive.weight_and_add(), fast.weight_and_add());
+        assert_eq!(naive.hi, fast.hi);
+        let wa = vec![i16::MIN; m * k];
+        let wb = vec![i16::MAX; k * n];
+        let wn = gemm_i16_lanes_naive(&wa, &wb, m, k, n).unwrap();
+        let wf = gemm_i16_lanes_tiled(&wa, &wb, m, k, n, &cfg).unwrap();
+        assert_eq!(wn.weight_and_add(), wf.weight_and_add());
+    }
+
+    #[test]
+    fn shape_errors_propagate() {
+        let cfg = TileConfig::single_thread();
+        assert!(gemm_i32_tiled(&[1, 2, 3], &[1, 2], 2, 2, 1, &cfg).is_err());
+        assert!(gemm_lanes_tiled(&[1, 2], &[1, 2, 3], 1, 2, 1, &cfg).is_err());
+        assert!(gemm_i16_lanes_tiled(&[1i16], &[1, 2], 1, 2, 1, &cfg).is_err());
+    }
+
+    #[test]
+    fn dispatch_policy_thresholds() {
+        assert!(dispatch_config(4, 4, 4).is_none());
+        assert!(dispatch_config(16, 16, 16).is_none()); // 4096 < 32768
+        let cfg = dispatch_config(64, 64, 64).expect("64^3 uses the packed path");
+        assert!(cfg.threads >= 1);
+        assert!(dispatch_config(1024, 1024, 1024).unwrap().threads >= cfg.threads);
+        // Vector shapes have no re-slicing redundancy: packing never pays,
+        // however long the reduction.
+        assert!(dispatch_config(1, 1 << 20, 1).is_none());
+        assert!(dispatch_config(1 << 20, 4, 1).is_none());
+        assert!(dispatch_config(1, 4, 1 << 20).is_none());
+    }
+
+    #[test]
+    fn gemm_case_shrinker_stays_valid_for_tiled() {
+        // Shrunk counterexamples must still be valid inputs for the tiled
+        // kernels (regression guard for the shrinking path).
+        let g = GemmCase { max_dim: 9 };
+        let mut rng = SplitMix64::new(5);
+        let case = g.gen(&mut rng);
+        for (a, b, m, k, n) in g.shrink(&case) {
+            let cfg = TileConfig { kc: 2, jc: 3, threads: 2 };
+            let naive = gemm_lanes_naive(&a, &b, m, k, n).unwrap();
+            let fast = gemm_lanes_tiled(&a, &b, m, k, n, &cfg).unwrap();
+            assert_eq!(naive.mid, fast.mid);
+        }
+    }
+}

@@ -25,11 +25,46 @@
 //! and 16⁰. The three bracketed terms are the **Hi/Mid/Lo radix lanes**
 //! ([`crate::devices::bpca::RadixLane`]) that SPOGA accumulates on its three
 //! BPCAs.
+//!
+//! ## Packed-plane layout and the naive-vs-fast dispatch contract
+//!
+//! Two implementations of every GEMM dataflow coexist:
+//!
+//! * **Naive oracles** (`gemm_i32_naive`, `gemm_sliced_naive`,
+//!   `gemm_lanes_naive`, `gemm_i16_lanes_naive` in [`gemm`] / [`wide`]) —
+//!   transparent loop nests that slice operands element-by-element inside
+//!   the innermost loop, written to be checked against the paper by eye.
+//! * **Packed kernels** ([`kernel`]) — each operand matrix is sliced *once*
+//!   into flat nibble planes ([`packed::NibblePlanes`]: an `i8` MSN plane
+//!   and an `i8` LSN plane, both row-major and unit-stride in the column
+//!   index; [`packed::WidePlanes`] is the four-plane INT16 analogue). The
+//!   micro-kernels then run a cache-blocked i–k–j loop over the planes and
+//!   split the output into row bands executed by scoped threads.
+//!
+//! The **contract**: the public entry points (`gemm_i32`, `gemm_sliced`,
+//! `gemm_lanes`, `gemm_i16_lanes`) dispatch by problem size
+//! ([`kernel::dispatch_config`]) and are *always* bit-exact with the naive
+//! oracles — the unit and property suites enforce equality for random
+//! shapes, non-tile-multiple m/k/n and extreme operands. Code that needs a
+//! specific implementation (benches, oracle cross-checks) calls the
+//! `*_naive` functions or `kernel::gemm_*_tiled` with an explicit
+//! [`kernel::TileConfig`] directly.
 
 pub mod gemm;
+pub mod kernel;
 pub mod nibble;
+pub mod packed;
 pub mod wide;
 
-pub use gemm::{gemm_i32, gemm_lanes, gemm_sliced, LaneGemm};
+pub use gemm::{
+    gemm_i32, gemm_i32_naive, gemm_lanes, gemm_lanes_naive, gemm_sliced, gemm_sliced_naive,
+    LaneGemm, SlicedGemm,
+};
+pub use kernel::{
+    gemm_i16_lanes_tiled, gemm_i32_tiled, gemm_lanes_tiled, gemm_sliced_tiled, TileConfig,
+};
 pub use nibble::{combine, lsn, msn, slice_i8, NibblePair};
-pub use wide::{gemm_i16_direct, gemm_i16_lanes, scheme_cost, slice_i16};
+pub use packed::{NibblePlanes, WidePlanes};
+pub use wide::{
+    gemm_i16_direct, gemm_i16_lanes, gemm_i16_lanes_naive, scheme_cost, slice_i16, WideLanes,
+};

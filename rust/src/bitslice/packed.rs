@@ -1,0 +1,179 @@
+//! Packed nibble-plane operand layout for the fast bit-sliced GEMM engine.
+//!
+//! The naive reference kernels ([`crate::bitslice::gemm::gemm_sliced_naive`],
+//! [`crate::bitslice::gemm::gemm_lanes_naive`]) call `slice_i8` on *every*
+//! operand element inside the innermost loop — the B operand is re-sliced
+//! once per output row, an O(m·k·n) redundancy. This module decomposes each
+//! operand **once** into flat, contiguous *nibble planes*:
+//!
+//! ```text
+//! A (m×k, i8)  →  msn plane (m×k, i8 in [-8,7]) + lsn plane (m×k, i8 in [0,15])
+//! B (k×n, i8)  →  msn plane (k×n)               + lsn plane (k×n)
+//! ```
+//!
+//! so slicing costs O(m·k + k·n) and the micro-kernels in
+//! [`crate::bitslice::kernel`] stream the planes row-contiguously (B plane
+//! rows are unit-stride in `j`, exactly what the i–k–j loop order wants).
+//! Planes are stored as `i8` (not a wider type) deliberately: nibble values
+//! fit, the memory traffic halves versus i16, and the micro-kernel widens to
+//! i32 registers only at multiply time.
+//!
+//! [`WidePlanes`] is the four-plane INT16 analogue used by the 7-lane
+//! `wide` dataflow.
+
+use crate::bitslice::nibble::{lsn, msn};
+use crate::bitslice::wide::slice_i16;
+use crate::{Error, Result};
+
+/// The two nibble planes of a row-major INT8 matrix.
+#[derive(Debug, Clone)]
+pub struct NibblePlanes {
+    /// Matrix rows.
+    pub rows: usize,
+    /// Matrix columns (unit stride within a plane row).
+    pub cols: usize,
+    /// Most-significant-nibble plane, values in `[-8, 7]`.
+    pub msn: Vec<i8>,
+    /// Least-significant-nibble plane, values in `[0, 15]`.
+    pub lsn: Vec<i8>,
+}
+
+impl NibblePlanes {
+    /// Slice a row-major `rows × cols` INT8 matrix into its two planes.
+    pub fn pack(data: &[i8], rows: usize, cols: usize) -> Result<Self> {
+        if data.len() != rows * cols {
+            return Err(Error::Shape(format!(
+                "pack: {} elements for a {rows}x{cols} matrix",
+                data.len()
+            )));
+        }
+        let mut m_plane = Vec::with_capacity(data.len());
+        let mut l_plane = Vec::with_capacity(data.len());
+        for &v in data {
+            m_plane.push(msn(v));
+            l_plane.push(lsn(v) as i8);
+        }
+        Ok(NibblePlanes { rows, cols, msn: m_plane, lsn: l_plane })
+    }
+
+    /// MSN plane row `r` (length `cols`).
+    #[inline]
+    pub fn msn_row(&self, r: usize) -> &[i8] {
+        &self.msn[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// LSN plane row `r` (length `cols`).
+    #[inline]
+    pub fn lsn_row(&self, r: usize) -> &[i8] {
+        &self.lsn[r * self.cols..(r + 1) * self.cols]
+    }
+}
+
+/// The four nibble planes of a row-major INT16 matrix, least significant
+/// plane first. Plane 3 is signed (`[-8, 7]`), planes 0–2 unsigned
+/// (`[0, 15]`); all stored as `i8`.
+#[derive(Debug, Clone)]
+pub struct WidePlanes {
+    /// Matrix rows.
+    pub rows: usize,
+    /// Matrix columns.
+    pub cols: usize,
+    /// `planes[p][r*cols + c]` is nibble `p` of element `(r, c)`.
+    pub planes: [Vec<i8>; 4],
+}
+
+impl WidePlanes {
+    /// Slice a row-major `rows × cols` INT16 matrix into its four planes.
+    pub fn pack(data: &[i16], rows: usize, cols: usize) -> Result<Self> {
+        if data.len() != rows * cols {
+            return Err(Error::Shape(format!(
+                "pack: {} elements for a {rows}x{cols} matrix",
+                data.len()
+            )));
+        }
+        let mut planes: [Vec<i8>; 4] = std::array::from_fn(|_| Vec::with_capacity(data.len()));
+        for &v in data {
+            let nb = slice_i16(v);
+            for (p, plane) in planes.iter_mut().enumerate() {
+                plane.push(nb.0[p] as i8);
+            }
+        }
+        Ok(WidePlanes { rows, cols, planes })
+    }
+
+    /// Row `r` of plane `p` (length `cols`).
+    #[inline]
+    pub fn plane_row(&self, p: usize, r: usize) -> &[i8] {
+        &self.planes[p][r * self.cols..(r + 1) * self.cols]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitslice::nibble::combine;
+    use crate::bitslice::nibble::NibblePair;
+    use crate::bitslice::wide::combine_i16;
+    use crate::testing::SplitMix64;
+
+    #[test]
+    fn planes_reconstruct_every_i8() {
+        let all: Vec<i8> = (i8::MIN..=i8::MAX).collect();
+        let p = NibblePlanes::pack(&all, 16, 16).unwrap();
+        for (i, &v) in all.iter().enumerate() {
+            let pair = NibblePair { msn: p.msn[i], lsn: p.lsn[i] as u8 };
+            assert_eq!(combine(pair), v);
+        }
+    }
+
+    #[test]
+    fn plane_rows_are_contiguous_slices() {
+        let data: Vec<i8> = (0..12).map(|v| v as i8).collect();
+        let p = NibblePlanes::pack(&data, 3, 4).unwrap();
+        assert_eq!(p.msn_row(1).len(), 4);
+        let expect: Vec<i8> = data[8..12].iter().map(|&v| lsn(v) as i8).collect();
+        assert_eq!(p.lsn_row(2), &expect[..]);
+    }
+
+    #[test]
+    fn plane_value_ranges() {
+        let mut rng = SplitMix64::new(3);
+        let data = rng.i8_vec(64);
+        let p = NibblePlanes::pack(&data, 8, 8).unwrap();
+        assert!(p.msn.iter().all(|&v| (-8..=7).contains(&v)));
+        assert!(p.lsn.iter().all(|&v| (0..=15).contains(&v)));
+    }
+
+    #[test]
+    fn bad_shape_rejected() {
+        assert!(NibblePlanes::pack(&[1, 2, 3], 2, 2).is_err());
+        assert!(WidePlanes::pack(&[1i16, 2], 3, 1).is_err());
+    }
+
+    #[test]
+    fn wide_planes_reconstruct_i16() {
+        let vals: Vec<i16> = vec![-32768, -4097, -1, 0, 1, 255, 4096, 32767];
+        let p = WidePlanes::pack(&vals, 2, 4).unwrap();
+        for (i, &v) in vals.iter().enumerate() {
+            let nb = crate::bitslice::wide::Nibbles16([
+                p.planes[0][i] as i32,
+                p.planes[1][i] as i32,
+                p.planes[2][i] as i32,
+                p.planes[3][i] as i32,
+            ]);
+            assert_eq!(combine_i16(nb), v);
+        }
+    }
+
+    #[test]
+    fn wide_plane_ranges() {
+        let mut rng = SplitMix64::new(11);
+        let data: Vec<i16> = (0..64).map(|_| rng.next_u64() as i16).collect();
+        let p = WidePlanes::pack(&data, 8, 8).unwrap();
+        for plane in &p.planes[..3] {
+            assert!(plane.iter().all(|&v| (0..=15).contains(&v)));
+        }
+        assert!(p.planes[3].iter().all(|&v| (-8..=7).contains(&v)));
+        assert_eq!(p.plane_row(2, 3).len(), 8);
+    }
+}

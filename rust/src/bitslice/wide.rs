@@ -54,7 +54,7 @@ impl WideLanes {
     }
 }
 
-fn check(a: &[i16], b: &[i16], m: usize, k: usize, n: usize) -> Result<()> {
+pub(crate) fn check_dims_i16(a: &[i16], b: &[i16], m: usize, k: usize, n: usize) -> Result<()> {
     if a.len() != m * k || b.len() != k * n {
         return Err(Error::Shape(format!(
             "INT16 GEMM {m}x{k}x{n}: got {} and {} elements",
@@ -67,7 +67,7 @@ fn check(a: &[i16], b: &[i16], m: usize, k: usize, n: usize) -> Result<()> {
 
 /// Direct i64 reference GEMM for INT16 operands.
 pub fn gemm_i16_direct(a: &[i16], b: &[i16], m: usize, k: usize, n: usize) -> Result<Vec<i64>> {
-    check(a, b, m, k, n)?;
+    check_dims_i16(a, b, m, k, n)?;
     let mut c = vec![0i64; m * n];
     for i in 0..m {
         for kk in 0..k {
@@ -81,8 +81,27 @@ pub fn gemm_i16_direct(a: &[i16], b: &[i16], m: usize, k: usize, n: usize) -> Re
 }
 
 /// INT16 GEMM via the 7-lane SPOGA-style dataflow.
+///
+/// Dispatches to the packed four-plane kernel
+/// ([`crate::bitslice::kernel::gemm_i16_lanes_tiled`]) for large problems;
+/// bit-exact with [`gemm_i16_lanes_naive`] always.
 pub fn gemm_i16_lanes(a: &[i16], b: &[i16], m: usize, k: usize, n: usize) -> Result<WideLanes> {
-    check(a, b, m, k, n)?;
+    match crate::bitslice::kernel::dispatch_config(m, k, n) {
+        Some(cfg) => crate::bitslice::kernel::gemm_i16_lanes_tiled(a, b, m, k, n, &cfg),
+        None => gemm_i16_lanes_naive(a, b, m, k, n),
+    }
+}
+
+/// Naive oracle for [`gemm_i16_lanes`]: four-nibble slicing of every operand
+/// element inside the loop nest, as the scheme description reads.
+pub fn gemm_i16_lanes_naive(
+    a: &[i16],
+    b: &[i16],
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Result<WideLanes> {
+    check_dims_i16(a, b, m, k, n)?;
     let mut lanes: [Vec<i64>; 7] = std::array::from_fn(|_| vec![0i64; m * n]);
     for i in 0..m {
         for kk in 0..k {
@@ -169,5 +188,20 @@ mod tests {
         assert!(gemm_i16_direct(&[1, 2], &[3, 4], 1, 2, 1).is_ok());
         assert!(gemm_i16_direct(&[1], &[1, 2], 1, 2, 1).is_err());
         assert!(gemm_i16_lanes(&[1], &[1], 2, 1, 1).is_err());
+        assert!(gemm_i16_lanes_naive(&[1], &[1], 2, 1, 1).is_err());
+    }
+
+    #[test]
+    fn dispatcher_crosses_threshold_bit_exact() {
+        // 32×32×32 = 32768 MACs hits the packed path exactly at threshold.
+        let (m, k, n) = (32usize, 32usize, 32usize);
+        let mut rng = SplitMix64::new(77);
+        let a: Vec<i16> = (0..m * k).map(|_| rng.next_u64() as i16).collect();
+        let b: Vec<i16> = (0..k * n).map(|_| rng.next_u64() as i16).collect();
+        assert!(crate::bitslice::kernel::dispatch_config(m, k, n).is_some());
+        let fast = gemm_i16_lanes(&a, &b, m, k, n).unwrap();
+        let slow = gemm_i16_lanes_naive(&a, &b, m, k, n).unwrap();
+        assert_eq!(fast.lanes, slow.lanes);
+        assert_eq!(fast.weight_and_add(), gemm_i16_direct(&a, &b, m, k, n).unwrap());
     }
 }

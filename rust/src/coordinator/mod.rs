@@ -4,12 +4,14 @@
 //! through a [`CoordinatorHandle`], a leader thread routes them and packs
 //! same-model requests into the largest AOT batch variant available within
 //! a bounded batching window (dynamic batching, vLLM-router style), and a
-//! pool of worker threads — each owning its *own* PJRT [`Engine`](crate::runtime::Engine)
-//! (PJRT handles are thread-affine) — executes them. Backpressure comes
-//! from bounded queues end to end.
+//! pool of worker threads — each owning its *own* [`Engine`](crate::runtime::Engine)
+//! (per-thread engines, as a thread-affine PJRT backend would force; the
+//! software backend routes every GEMM through the packed bit-sliced fast
+//! path) — executes them. Backpressure comes from bounded queues end to
+//! end.
 //!
 //! No tokio in the vendored dependency set: the pool is `std::thread` +
-//! `std::sync::mpsc`, which for a CPU-bound PJRT backend is also the honest
+//! `std::sync::mpsc`, which for a CPU-bound backend is also the honest
 //! design — there is no I/O to overlap.
 
 pub mod batcher;

@@ -1,4 +1,6 @@
-//! Worker threads: each owns a PJRT engine and executes dispatched work.
+//! Worker threads: each owns an execution engine and executes dispatched
+//! work. With the software backend every GEMM a worker runs routes through
+//! the packed bit-sliced fast path (see [`crate::runtime::software`]).
 
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::Receiver;
@@ -21,8 +23,10 @@ pub enum WorkItem {
     Shutdown,
 }
 
-/// Worker main loop: construct the engine *inside* the thread (PJRT handles
-/// are not `Send`), then serve work items until shutdown.
+/// Worker main loop: construct the engine *inside* the thread (the software
+/// engine is `Send`, but a PJRT backend's handles would not be — the
+/// per-thread construction keeps both correct), then serve work items until
+/// shutdown.
 pub fn run_worker(
     id: usize,
     artifact_dir: String,

@@ -1,42 +1,83 @@
 //! Crate-wide error type.
+//!
+//! Hand-rolled `Display`/`Error` impls (no `thiserror`): the crate builds
+//! with zero external dependencies so the offline toolchain needs no
+//! registry access.
 
 /// Unified error for the SPOGA library.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum Error {
     /// Optical link budget cannot be closed for the requested configuration.
-    #[error("link budget infeasible: {0}")]
     Infeasible(String),
 
     /// A configuration value is out of its valid domain.
-    #[error("invalid configuration: {0}")]
     Config(String),
 
     /// A GEMM/tensor shape is inconsistent.
-    #[error("shape mismatch: {0}")]
     Shape(String),
 
     /// Artifact store problems (missing manifest, unknown artifact, ...).
-    #[error("artifact error: {0}")]
     Artifact(String),
 
-    /// Errors bubbling out of the PJRT runtime (`xla` crate).
-    #[error("runtime error: {0}")]
+    /// Errors bubbling out of the execution runtime.
     Runtime(String),
 
     /// Coordinator request-path failures (queue closed, worker died, ...).
-    #[error("coordinator error: {0}")]
     Coordinator(String),
 
     /// Underlying I/O failure.
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 }
 
-impl From<xla::Error> for Error {
-    fn from(e: xla::Error) -> Self {
-        Error::Runtime(e.to_string())
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Infeasible(msg) => write!(f, "link budget infeasible: {msg}"),
+            Error::Config(msg) => write!(f, "invalid configuration: {msg}"),
+            Error::Shape(msg) => write!(f, "shape mismatch: {msg}"),
+            Error::Artifact(msg) => write!(f, "artifact error: {msg}"),
+            Error::Runtime(msg) => write!(f, "runtime error: {msg}"),
+            Error::Coordinator(msg) => write!(f, "coordinator error: {msg}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
     }
 }
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_matches_variant_prefixes() {
+        assert_eq!(Error::Shape("bad".into()).to_string(), "shape mismatch: bad");
+        assert_eq!(Error::Artifact("x".into()).to_string(), "artifact error: x");
+        assert_eq!(Error::Coordinator("y".into()).to_string(), "coordinator error: y");
+    }
+
+    #[test]
+    fn io_errors_convert_and_chain() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = io.into();
+        assert!(e.to_string().contains("gone"));
+        assert!(std::error::Error::source(&e).is_some());
+        assert!(std::error::Error::source(&Error::Config("c".into())).is_none());
+    }
+}

@@ -74,24 +74,48 @@ impl AnalogChannel {
         }
     }
 
+    /// Transduce the three exact lane accumulations of a K-length dot
+    /// product — one transduction per BPCA — and apply the PWAB weighting.
+    ///
+    /// Taking pre-computed lanes lets callers that already ran the bitslice
+    /// engine (e.g. [`crate::fidelity::fidelity_study`]) reuse them for both
+    /// the exact reference and the noisy observation, instead of slicing the
+    /// operands twice.
+    pub fn transduce_lanes(&mut self, hi: i64, mid: i64, lo: i64, k: usize) -> f64 {
+        let kf = k as f64;
+        // Per-lane worst case magnitudes (see bitslice::lane_accumulator_bound).
+        256.0 * self.transduce(hi as f64, 64.0 * kf)
+            + 16.0 * self.transduce(mid as f64, 240.0 * kf)
+            + self.transduce(lo as f64, 225.0 * kf)
+    }
+
     /// Noisy SPOGA dot product of INT8 vectors: three lanes accumulated in
     /// charge, weighted (16²/16¹/16⁰), summed, transduced once per lane.
+    ///
+    /// The exact lane accumulation runs through the dispatching bitslice
+    /// engine (`gemm_lanes` as a 1×K×1 problem). The engine accumulates in
+    /// i32, which is exact while `240·k ≤ i32::MAX`; beyond that (k ≈ 8.9M)
+    /// this falls back to a local i64 accumulation so the exact charges
+    /// never wrap.
     pub fn dot_i8(&mut self, a: &[i8], b: &[i8]) -> f64 {
-        use crate::bitslice::nibble::{slice_i8, NibblePair};
         assert_eq!(a.len(), b.len());
-        let (mut hi, mut mid, mut lo) = (0i64, 0i64, 0i64);
-        for (&x, &y) in a.iter().zip(b) {
-            let (h, m, l) = NibblePair::product_lanes(slice_i8(x), slice_i8(y));
-            hi += h as i64;
-            mid += m as i64;
-            lo += l as i64;
+        let k = a.len();
+        // Largest K whose worst-case lane magnitude (mid bound 240·k) still
+        // fits the engine's i32 accumulators.
+        const I32_SAFE_K: usize = (i32::MAX / 240) as usize;
+        if k > I32_SAFE_K {
+            use crate::bitslice::nibble::{slice_i8, NibblePair};
+            let (mut hi, mut mid, mut lo) = (0i64, 0i64, 0i64);
+            for (&x, &y) in a.iter().zip(b) {
+                let (h, m, l) = NibblePair::product_lanes(slice_i8(x), slice_i8(y));
+                hi += h as i64;
+                mid += m as i64;
+                lo += l as i64;
+            }
+            return self.transduce_lanes(hi, mid, lo, k);
         }
-        let k = a.len() as f64;
-        // Per-lane worst case magnitudes (see bitslice::lane_accumulator_bound).
-        let out = 256.0 * self.transduce(hi as f64, 64.0 * k)
-            + 16.0 * self.transduce(mid as f64, 240.0 * k)
-            + self.transduce(lo as f64, 225.0 * k);
-        out
+        let lanes = crate::bitslice::gemm_lanes(a, b, 1, k, 1).expect("1xKx1 dot");
+        self.transduce_lanes(lanes.hi[0] as i64, lanes.mid[0] as i64, lanes.lo[0] as i64, k)
     }
 }
 

@@ -1,7 +1,7 @@
 //! Monte-Carlo fidelity study: dot-product accuracy vs link margin,
 //! vector size and ADC resolution.
 
-use crate::bitslice::gemm_i32;
+use crate::bitslice::gemm_lanes;
 use crate::fidelity::noise::{AnalogChannel, NoiseParams};
 use crate::testing::SplitMix64;
 
@@ -44,8 +44,15 @@ pub fn fidelity_study(
             for _ in 0..trials {
                 let a = rng.i8_vec(k);
                 let b = rng.i8_vec(k);
-                let exact = gemm_i32(&a, &b, 1, k, 1).unwrap()[0] as f64;
-                let got = ch.dot_i8(&a, &b);
+                // One pass through the dispatching bitslice engine yields the
+                // three exact lane charges; both the exact reference and the
+                // noisy observation derive from them (the naive path sliced
+                // the same operands twice per trial).
+                let lanes = gemm_lanes(&a, &b, 1, k, 1).unwrap();
+                let (hi, mid, lo) =
+                    (lanes.hi[0] as i64, lanes.mid[0] as i64, lanes.lo[0] as i64);
+                let exact = (256 * hi + 16 * mid + lo) as f64;
+                let got = ch.transduce_lanes(hi, mid, lo, k);
                 se += (got - exact) * (got - exact);
                 ref_sq += exact * exact;
                 if (got.round() - exact).abs() < 0.5 {

@@ -20,7 +20,7 @@
 //! | [`units`] | dB/dBm/watt/time conversions used by all photonic models |
 //! | [`devices`] | parametric component models (MRR, laser, BPCA, ADC/DAC, …) |
 //! | [`optics`] | optical link budget + scalability solver (paper Table I) |
-//! | [`bitslice`] | exact integer semantics of nibble-sliced arithmetic (+ INT16 extension) |
+//! | [`bitslice`] | exact integer semantics of nibble-sliced arithmetic (+ INT16 extension); naive oracles + packed-plane tiled/threaded fast kernels |
 //! | [`fidelity`] | analog-noise Monte-Carlo (the 4-bit-analog premise, quantified) |
 //! | [`arch`] | accelerator architectures: SPOGA (MWA), HOLYLIGHT (MAW), DEAPCNN (AMW) |
 //! | [`dnn`] | CNN workload library (4 networks) + im2col GEMM conversion |

