@@ -1,0 +1,181 @@
+//! Bench: software vs photonic-sim execution backends under serving load.
+//!
+//! Measures, per backend: coordinator throughput (req/s, wall clock), mean
+//! worker service time, and — for the photonic backends — the projected
+//! sim-FPS / sim-FPS-per-watt the served traffic reports through its
+//! per-request `ExecReport` telemetry. The question this answers: how much
+//! serving throughput does photonic-in-the-loop telemetry cost, and what do
+//! the design points project for identical traffic?
+//!
+//! Self-contained (synthetic manifest in a temp dir; no `make artifacts`).
+//! Results print as a table and are written as JSON (default
+//! `BENCH_backends.json`, override with the `BACKEND_BENCH_OUT` env var).
+//!
+//! Run: `cargo bench --bench coordinator_backend_matrix [requests]`
+
+use std::sync::atomic::Ordering;
+use std::time::Instant;
+
+use spoga::coordinator::{Coordinator, CoordinatorConfig};
+use spoga::dnn::models::CnnModel;
+use spoga::dnn::Layer;
+use spoga::metrics::LiveTelemetry;
+use spoga::report::{fmt_sig, Table};
+use spoga::runtime::{BackendKind, PhotonicConfig};
+use spoga::testing::SplitMix64;
+
+struct BackendResult {
+    label: String,
+    req_per_s: f64,
+    service_mean_us: f64,
+    sim_fps: f64,
+    sim_fps_per_w: f64,
+}
+
+fn synthetic_artifacts() -> std::path::PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("spoga-backend-bench-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("temp artifact dir");
+    std::fs::write(
+        dir.join("manifest.txt"),
+        "gemm_64x64x64 gemm.hlo.txt i32:64x64,i32:64x64 i32:64x64\n\
+         mlp_b1 mlp_b1.hlo.txt i32:1x784 i32:1x10\n\
+         mlp_b8 mlp_b8.hlo.txt i32:8x784 i32:8x10\n\
+         mlp_b32 mlp_b32.hlo.txt i32:32x784 i32:32x10\n",
+    )
+    .expect("write manifest");
+    dir
+}
+
+fn bench_backend(
+    label: &str,
+    kind: BackendKind,
+    artifact_dir: &str,
+    requests: usize,
+    model: &CnnModel,
+) -> BackendResult {
+    let c = Coordinator::start(CoordinatorConfig {
+        artifact_dir: artifact_dir.to_string(),
+        workers: 2,
+        backend: kind,
+        max_batch_wait_s: 0.003,
+        ..Default::default()
+    })
+    .expect("coordinator");
+    let h = c.handle();
+    // Warm the pipeline before timing.
+    h.infer_mlp(vec![0; 784]).expect("warm");
+
+    let clients = 8usize;
+    let per = requests / clients;
+    let t0 = Instant::now();
+    let joins: Vec<_> = (0..clients)
+        .map(|cl| {
+            let h = h.clone();
+            std::thread::spawn(move || {
+                let mut rng = SplitMix64::new(cl as u64 + 1);
+                for _ in 0..per {
+                    let row: Vec<i32> = (0..784).map(|_| rng.below(128) as i32).collect();
+                    h.infer_mlp(row).expect("mlp");
+                }
+            })
+        })
+        .collect();
+    joins.into_iter().for_each(|j| j.join().unwrap());
+
+    // CNN frames on top: the telemetry-bearing traffic.
+    let mut live = LiveTelemetry::default();
+    let input: Vec<i32> = (0..16 * 16 * 3).map(|v| (v % 251) - 125).collect();
+    for _ in 0..(requests / 16).max(2) {
+        let reply = h.infer_cnn(model.clone(), input.clone()).expect("cnn");
+        if let Some(r) = &reply.report {
+            live.add(r);
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let served = per * clients + (requests / 16).max(2);
+
+    let s = h.stats();
+    let res = BackendResult {
+        label: label.to_string(),
+        req_per_s: served as f64 / wall,
+        service_mean_us: s.service_mean() * 1e6,
+        sim_fps: live.fps(),
+        sim_fps_per_w: live.fps_per_w(),
+    };
+    assert_eq!(s.failed.load(Ordering::Relaxed), 0, "{label}: failures under load");
+    c.shutdown();
+    res
+}
+
+fn main() {
+    let requests: usize =
+        std::env::args().nth(1).and_then(|v| v.parse().ok()).unwrap_or(256);
+    let dir = synthetic_artifacts();
+    let artifact_dir = dir.to_string_lossy().into_owned();
+    let model = CnnModel {
+        name: "edge_net",
+        layers: vec![
+            Layer::conv("stem", 16, 16, 3, 16, 3, 2, 1),
+            Layer::dwconv("dw1", 8, 8, 16, 3, 1, 1),
+            Layer::conv("pw1", 8, 8, 16, 32, 1, 1, 0),
+            Layer::fc("head", 8 * 8 * 32, 10),
+        ],
+    };
+    println!("coordinator backend matrix: {requests} MLP rows (8 clients) + CNN frames\n");
+
+    let results: Vec<BackendResult> = [
+        ("software", BackendKind::Software),
+        ("photonic_spoga_10", BackendKind::Photonic(PhotonicConfig::spoga())),
+        ("photonic_holylight_10", BackendKind::Photonic(PhotonicConfig::holylight())),
+        ("photonic_deapcnn_10", BackendKind::Photonic(PhotonicConfig::deapcnn())),
+    ]
+    .into_iter()
+    .map(|(label, kind)| bench_backend(label, kind, &artifact_dir, requests, &model))
+    .collect();
+
+    let mut t = Table::new(vec![
+        "Backend",
+        "req/s",
+        "service µs",
+        "sim FPS (CNN)",
+        "sim FPS/W (CNN)",
+    ]);
+    for r in &results {
+        t.row(vec![
+            r.label.clone(),
+            fmt_sig(r.req_per_s, 3),
+            format!("{:.1}", r.service_mean_us),
+            if r.sim_fps > 0.0 { fmt_sig(r.sim_fps, 3) } else { "-".into() },
+            if r.sim_fps_per_w > 0.0 { fmt_sig(r.sim_fps_per_w, 3) } else { "-".into() },
+        ]);
+    }
+    println!("{}", t.render());
+    let overhead = results[0].req_per_s / results[1].req_per_s.max(1e-9);
+    println!("telemetry overhead: software serves {overhead:.2}x the photonic-sim rate\n");
+
+    // ---- JSON trajectory record ---------------------------------------------
+    let out_path = std::env::var("BACKEND_BENCH_OUT")
+        .unwrap_or_else(|_| "BENCH_backends.json".to_string());
+    let rows: Vec<String> = results
+        .iter()
+        .map(|r| {
+            format!(
+                "    {{\"backend\": \"{}\", \"req_per_s\": {:.1}, \"service_mean_us\": {:.2}, \
+                 \"sim_fps\": {:.1}, \"sim_fps_per_w\": {:.1}}}",
+                r.label, r.req_per_s, r.service_mean_us, r.sim_fps, r.sim_fps_per_w
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"coordinator_backend_matrix\",\n  \"requests\": {requests},\n  \
+         \"workload\": \"784-feature MLP rows (8 clients, dynamic batching) + edge_net CNN frames\",\n  \
+         \"status\": \"measured\",\n  \"results\": [\n{}\n  ]\n}}\n",
+        rows.join(",\n")
+    );
+    match std::fs::write(&out_path, &json) {
+        Ok(()) => println!("wrote {out_path}"),
+        Err(e) => eprintln!("could not write {out_path}: {e}"),
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -61,13 +61,18 @@ impl MicroBatch {
     }
 
     /// Split a flat output into per-job rows (dropping padding rows) and
-    /// deliver them.
-    pub fn deliver(self, output: &[i32]) {
+    /// deliver them. Every member shares the micro-batch's photonic report
+    /// (the batch executed as one artifact invocation).
+    pub fn deliver(self, output: &[i32], report: Option<crate::runtime::backend::ExecReport>) {
         let out_len = output.len() / self.batch;
         for (i, j) in self.jobs.into_iter().enumerate() {
             let row = output[i * out_len..(i + 1) * out_len].to_vec();
             // Receiver may have hung up (caller timeout); that's their loss.
-            let _ = j.reply.send(Ok(row));
+            let _ = j.reply.send(Ok(crate::coordinator::request::Reply {
+                outputs: row,
+                report,
+                layers: Vec::new(),
+            }));
         }
     }
 
@@ -127,9 +132,11 @@ mod tests {
         let mb = MicroBatch { artifact: "mlp_b8".into(), batch: 8, jobs: vec![j1, j2] };
         // Fake output: 8 rows of 3.
         let out: Vec<i32> = (0..24).collect();
-        mb.deliver(&out);
-        assert_eq!(r1.recv().unwrap().unwrap(), vec![0, 1, 2]);
-        assert_eq!(r2.recv().unwrap().unwrap(), vec![3, 4, 5]);
+        mb.deliver(&out, None);
+        assert_eq!(r1.recv().unwrap().unwrap().outputs, vec![0, 1, 2]);
+        let reply2 = r2.recv().unwrap().unwrap();
+        assert_eq!(reply2.outputs, vec![3, 4, 5]);
+        assert!(reply2.report.is_none());
     }
 
     #[test]

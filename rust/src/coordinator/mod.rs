@@ -1,14 +1,22 @@
 //! L3 request coordinator: router + dynamic batcher + worker pool.
 //!
-//! The serving-side contribution layer: GEMM / inference requests enter
-//! through a [`CoordinatorHandle`], a leader thread routes them and packs
-//! same-model requests into the largest AOT batch variant available within
-//! a bounded batching window (dynamic batching, vLLM-router style), and a
-//! pool of worker threads — each owning its *own* [`Engine`](crate::runtime::Engine)
-//! (per-thread engines, as a thread-affine PJRT backend would force; the
-//! software backend routes every GEMM through the packed bit-sliced fast
-//! path) — executes them. Backpressure comes from bounded queues end to
-//! end.
+//! The serving-side contribution layer: GEMM / MLP / whole-CNN requests
+//! enter through a [`CoordinatorHandle`], a leader thread routes them
+//! (round-robin with dead-worker failover) and packs same-model MLP
+//! requests into the largest AOT batch variant available within a bounded
+//! batching window (dynamic batching, vLLM-router style), and a pool of
+//! worker threads — each owning its *own* [`Engine`](crate::runtime::Engine)
+//! over the configured [`BackendKind`](crate::runtime::BackendKind) —
+//! executes them. Backpressure comes from bounded queues end to end.
+//!
+//! Backends are per-coordinator: [`CoordinatorConfig::backend`] selects the
+//! software interpreter (default) or the photonic-in-the-loop simulator;
+//! with the latter, every [`Reply`] carries an
+//! [`ExecReport`](crate::runtime::ExecReport) (projected latency/energy on
+//! the simulated accelerator) and [`CoordinatorStats`] aggregates live
+//! sim-FPS / FPS-per-watt for the traffic actually served — run two
+//! coordinators over the same artifacts to A/B SPOGA vs HOLYLIGHT on
+//! identical load.
 //!
 //! No tokio in the vendored dependency set: the pool is `std::thread` +
 //! `std::sync::mpsc`, which for a CPU-bound backend is also the honest
@@ -21,6 +29,6 @@ pub mod stats;
 pub mod worker;
 
 pub use batcher::{BatchPolicy, MicroBatch};
-pub use request::{GemmJob, Job, MlpJob, Response};
+pub use request::{CnnJob, GemmJob, Job, MlpJob, Reply, Response};
 pub use service::{Coordinator, CoordinatorConfig, CoordinatorHandle};
 pub use stats::CoordinatorStats;

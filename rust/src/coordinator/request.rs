@@ -3,12 +3,37 @@
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::time::Instant;
 
+use crate::dnn::models::CnnModel;
+use crate::runtime::backend::ExecReport;
+use crate::runtime::cnnrun::LayerReport;
 use crate::Result;
 
-/// Response slot: a bounded(1) channel the worker fulfils exactly once.
-pub type Response = Receiver<Result<Vec<i32>>>;
+/// A fulfilled request: the outputs plus any photonic telemetry the
+/// executing backend attached.
+#[derive(Debug, Clone)]
+pub struct Reply {
+    /// Flat row-major int32 outputs (logits for MLP/CNN jobs).
+    pub outputs: Vec<i32>,
+    /// Aggregate photonic projection for this request (`None` when served
+    /// by a digital backend). Batched MLP rows share their micro-batch's
+    /// report.
+    pub report: Option<ExecReport>,
+    /// Per-layer telemetry — populated for [`Job::Cnn`] on reporting
+    /// backends, empty otherwise.
+    pub layers: Vec<LayerReport>,
+}
 
-pub(crate) type ResponseTx = SyncSender<Result<Vec<i32>>>;
+impl Reply {
+    /// A reply with outputs only (digital backends).
+    pub fn bare(outputs: Vec<i32>) -> Self {
+        Reply { outputs, report: None, layers: Vec::new() }
+    }
+}
+
+/// Response slot: a bounded(1) channel the worker fulfils exactly once.
+pub type Response = Receiver<Result<Reply>>;
+
+pub(crate) type ResponseTx = SyncSender<Result<Reply>>;
 
 /// Create a response slot pair.
 pub(crate) fn response_slot() -> (ResponseTx, Response) {
@@ -41,6 +66,20 @@ pub struct MlpJob {
     pub(crate) enqueued: Instant,
 }
 
+/// A whole-CNN inference request: the model runs im2col layer-by-layer
+/// through the worker's backend ([`crate::runtime::cnnrun::run_cnn`]).
+#[derive(Debug)]
+pub struct CnnJob {
+    /// The network to run (built-in model or parsed trace).
+    pub model: CnnModel,
+    /// First-layer activation tensor, HWC wire format.
+    pub input: Vec<i32>,
+    /// Where to deliver the logits + per-layer telemetry.
+    pub(crate) reply: ResponseTx,
+    /// Enqueue timestamp.
+    pub(crate) enqueued: Instant,
+}
+
 /// Anything the leader thread can route.
 #[derive(Debug)]
 pub enum Job {
@@ -48,6 +87,8 @@ pub enum Job {
     Gemm(GemmJob),
     /// Batchable MLP row.
     Mlp(MlpJob),
+    /// Whole-CNN inference (unbatched; layer GEMMs dominate).
+    Cnn(CnnJob),
     /// Drain and stop (sent by [`super::Coordinator::shutdown`]).
     Shutdown,
 }
@@ -58,6 +99,7 @@ impl Job {
         match self {
             Job::Gemm(g) => now.duration_since(g.enqueued).as_secs_f64(),
             Job::Mlp(m) => now.duration_since(m.enqueued).as_secs_f64(),
+            Job::Cnn(c) => now.duration_since(c.enqueued).as_secs_f64(),
             Job::Shutdown => 0.0,
         }
     }
@@ -70,8 +112,10 @@ mod tests {
     #[test]
     fn response_slot_roundtrip() {
         let (tx, rx) = response_slot();
-        tx.send(Ok(vec![1, 2, 3])).unwrap();
-        assert_eq!(rx.recv().unwrap().unwrap(), vec![1, 2, 3]);
+        tx.send(Ok(Reply::bare(vec![1, 2, 3]))).unwrap();
+        let reply = rx.recv().unwrap().unwrap();
+        assert_eq!(reply.outputs, vec![1, 2, 3]);
+        assert!(reply.report.is_none() && reply.layers.is_empty());
     }
 
     #[test]
@@ -83,5 +127,17 @@ mod tests {
         let a2 = j.age_s(Instant::now());
         assert!(a2 > a1);
         assert_eq!(Job::Shutdown.age_s(Instant::now()), 0.0);
+    }
+
+    #[test]
+    fn cnn_job_age_tracked() {
+        let (tx, _rx) = response_slot();
+        let j = Job::Cnn(CnnJob {
+            model: crate::dnn::models::CnnModel { name: "t", layers: vec![] },
+            input: vec![],
+            reply: tx,
+            enqueued: Instant::now(),
+        });
+        assert!(j.age_s(Instant::now()) >= 0.0);
     }
 }

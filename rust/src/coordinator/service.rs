@@ -1,15 +1,17 @@
 //! The coordinator service: leader thread, routing, lifecycle.
 
 use std::sync::atomic::Ordering;
-use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SendError, SyncSender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::batcher::{BatchPolicy, MicroBatch};
-use crate::coordinator::request::{response_slot, GemmJob, Job, MlpJob, Response};
+use crate::coordinator::request::{response_slot, CnnJob, GemmJob, Job, MlpJob, Reply, Response};
 use crate::coordinator::stats::CoordinatorStats;
 use crate::coordinator::worker::{run_worker, WorkItem};
+use crate::dnn::models::CnnModel;
+use crate::runtime::backend::BackendKind;
 use crate::runtime::Manifest;
 use crate::{Error, Result};
 
@@ -18,8 +20,12 @@ use crate::{Error, Result};
 pub struct CoordinatorConfig {
     /// Directory with `manifest.txt` + HLO artifacts.
     pub artifact_dir: String,
-    /// Worker threads (each owns a PJRT engine).
+    /// Worker threads (each owns its own engine + backend).
     pub workers: usize,
+    /// Execution backend every worker builds its engine with — swap
+    /// [`BackendKind::Software`] for [`BackendKind::Photonic`] to serve the
+    /// same traffic with photonic-in-the-loop telemetry.
+    pub backend: BackendKind,
     /// Dynamic-batching window, seconds.
     pub max_batch_wait_s: f64,
     /// Ingress queue depth (backpressure bound).
@@ -34,6 +40,7 @@ impl Default for CoordinatorConfig {
         CoordinatorConfig {
             artifact_dir: "artifacts".into(),
             workers: 2,
+            backend: BackendKind::Software,
             max_batch_wait_s: 0.002,
             queue_depth: 1024,
             warmup: true,
@@ -83,16 +90,52 @@ impl CoordinatorHandle {
         Ok(rx)
     }
 
+    /// Submit a whole-CNN inference; validates the layer chain against the
+    /// input length up front. Returns the response slot.
+    pub fn submit_cnn(&self, model: CnnModel, input: Vec<i32>) -> Result<Response> {
+        crate::runtime::cnnrun::validate_cnn_input(&model, input.len())?;
+        let (reply, rx) = response_slot();
+        self.stats.requests.fetch_add(1, Ordering::Relaxed);
+        self.tx
+            .send(Job::Cnn(CnnJob { model, input, reply, enqueued: Instant::now() }))
+            .map_err(|_| Error::Coordinator("coordinator stopped".into()))?;
+        Ok(rx)
+    }
+
+    /// Submit a CNN described as trace text (see [`crate::dnn::trace`]).
+    ///
+    /// Prefer parsing once with [`crate::dnn::parse_trace`] and reusing the
+    /// [`CnnModel`] across submissions: trace parsing leaks the model name
+    /// (the name is `&'static`).
+    pub fn submit_cnn_trace(&self, trace: &str, input: Vec<i32>) -> Result<Response> {
+        self.submit_cnn(crate::dnn::parse_trace(trace)?, input)
+    }
+
     /// Blocking MLP inference convenience.
     pub fn infer_mlp(&self, row: Vec<i32>) -> Result<Vec<i32>> {
-        self.submit_mlp(row)?
+        Ok(self
+            .submit_mlp(row)?
             .recv()
-            .map_err(|_| Error::Coordinator("response dropped".into()))?
+            .map_err(|_| Error::Coordinator("response dropped".into()))??
+            .outputs)
     }
 
     /// Blocking GEMM convenience.
     pub fn gemm(&self, artifact: &str, a: Vec<i32>, b: Vec<i32>) -> Result<Vec<i32>> {
+        Ok(self.gemm_reply(artifact, a, b)?.outputs)
+    }
+
+    /// Blocking GEMM returning the full [`Reply`] (outputs + telemetry).
+    pub fn gemm_reply(&self, artifact: &str, a: Vec<i32>, b: Vec<i32>) -> Result<Reply> {
         self.submit_gemm(artifact, a, b)?
+            .recv()
+            .map_err(|_| Error::Coordinator("response dropped".into()))?
+    }
+
+    /// Blocking CNN inference returning the full [`Reply`] (logits +
+    /// per-layer telemetry).
+    pub fn infer_cnn(&self, model: CnnModel, input: Vec<i32>) -> Result<Reply> {
+        self.submit_cnn(model, input)?
             .recv()
             .map_err(|_| Error::Coordinator("response dropped".into()))?
     }
@@ -132,12 +175,13 @@ impl Coordinator {
         for id in 0..cfg.workers.max(1) {
             let (wtx, wrx) = sync_channel::<WorkItem>(cfg.queue_depth);
             let dir = cfg.artifact_dir.clone();
+            let backend = cfg.backend.clone();
             let st = stats.clone();
             let warm = cfg.warmup;
             let rtx = ready_tx.clone();
             joins.push(std::thread::Builder::new()
                 .name(format!("spoga-worker-{id}"))
-                .spawn(move || run_worker(id, dir, warm, rtx, wrx, st))
+                .spawn(move || run_worker(id, dir, backend, warm, rtx, wrx, st))
                 .map_err(|e| Error::Coordinator(format!("spawn worker: {e}")))?);
             worker_txs.push(wtx);
         }
@@ -182,21 +226,43 @@ impl Drop for Coordinator {
     }
 }
 
-/// Leader loop: route GEMMs round-robin; gather MLP rows into micro-batches
-/// bounded by the batching window and the largest variant.
+/// Round-robin dispatch with dead-worker failover: a `send` only fails when
+/// the worker's receiver is gone (thread died), in which case the worker is
+/// retired from the rotation and the item retries on the next one. Only
+/// when no workers remain does the job fail — with a real error on its
+/// reply slot, never silently.
+fn dispatch(mut item: WorkItem, worker_txs: &mut Vec<SyncSender<WorkItem>>, next: &mut usize) {
+    loop {
+        if worker_txs.is_empty() {
+            item.fail("no live workers (all worker threads exited)");
+            return;
+        }
+        let idx = *next % worker_txs.len();
+        match worker_txs[idx].send(item) {
+            Ok(()) => {
+                *next = (idx + 1) % worker_txs.len();
+                return;
+            }
+            Err(SendError(returned)) => {
+                // Dead worker: retire it and retry the item elsewhere.
+                worker_txs.remove(idx);
+                *next = idx; // same slot now holds the next worker
+                item = returned;
+            }
+        }
+    }
+}
+
+/// Leader loop: route GEMMs/CNNs round-robin (with dead-worker failover);
+/// gather MLP rows into micro-batches bounded by the batching window and
+/// the largest variant.
 fn run_leader(
     rx: Receiver<Job>,
-    worker_txs: Vec<SyncSender<WorkItem>>,
+    mut worker_txs: Vec<SyncSender<WorkItem>>,
     policy: BatchPolicy,
     worker_joins: Vec<JoinHandle<()>>,
 ) {
     let mut next_worker = 0usize;
-    let dispatch = |item: WorkItem, next: &mut usize| {
-        let n = worker_txs.len();
-        let _ = worker_txs[*next % n].send(item);
-        *next = (*next + 1) % n;
-    };
-
     let window = Duration::from_secs_f64(policy.max_wait_s);
     let mut pending: Vec<MlpJob> = Vec::new();
     let mut shutdown = false;
@@ -207,7 +273,11 @@ fn run_leader(
             Err(_) => break,
             Ok(Job::Shutdown) => break,
             Ok(Job::Gemm(g)) => {
-                dispatch(WorkItem::Gemm(g), &mut next_worker);
+                dispatch(WorkItem::Gemm(g), &mut worker_txs, &mut next_worker);
+                continue;
+            }
+            Ok(Job::Cnn(c)) => {
+                dispatch(WorkItem::Cnn(c), &mut worker_txs, &mut next_worker);
                 continue;
             }
             Ok(Job::Mlp(m)) => pending.push(m),
@@ -223,7 +293,12 @@ fn run_leader(
             }
             match rx.recv_timeout(deadline - now) {
                 Ok(Job::Mlp(m)) => pending.push(m),
-                Ok(Job::Gemm(g)) => dispatch(WorkItem::Gemm(g), &mut next_worker),
+                Ok(Job::Gemm(g)) => {
+                    dispatch(WorkItem::Gemm(g), &mut worker_txs, &mut next_worker)
+                }
+                Ok(Job::Cnn(c)) => {
+                    dispatch(WorkItem::Cnn(c), &mut worker_txs, &mut next_worker)
+                }
                 Ok(Job::Shutdown) => {
                     shutdown = true;
                     break;
@@ -242,13 +317,33 @@ fn run_leader(
             let take = pending.len().min(policy.max_batch());
             let (artifact, batch) = policy.pick_variant(take).clone();
             let jobs: Vec<MlpJob> = pending.drain(..take.min(batch)).collect();
-            dispatch(WorkItem::Batch(MicroBatch { artifact, batch, jobs }), &mut next_worker);
+            dispatch(
+                WorkItem::Batch(MicroBatch { artifact, batch, jobs }),
+                &mut worker_txs,
+                &mut next_worker,
+            );
         }
     }
 
-    // Drain-and-stop: fail anything still queued, stop workers, join.
+    // Drain-and-stop: explicitly fail everything still queued (batched rows
+    // gathered this cycle AND jobs still buffered in the ingress channel) so
+    // every reply slot resolves, then stop workers and join.
     for j in pending {
         let _ = j.reply.send(Err(Error::Coordinator("shutdown".into())));
+    }
+    while let Ok(job) = rx.try_recv() {
+        match job {
+            Job::Gemm(g) => {
+                let _ = g.reply.send(Err(Error::Coordinator("shutdown".into())));
+            }
+            Job::Mlp(m) => {
+                let _ = m.reply.send(Err(Error::Coordinator("shutdown".into())));
+            }
+            Job::Cnn(c) => {
+                let _ = c.reply.send(Err(Error::Coordinator("shutdown".into())));
+            }
+            Job::Shutdown => {}
+        }
     }
     for tx in &worker_txs {
         let _ = tx.send(WorkItem::Shutdown);
@@ -256,5 +351,69 @@ fn run_leader(
     drop(worker_txs);
     for j in worker_joins {
         let _ = j.join();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::response_slot;
+
+    fn gemm_item(tag: i32) -> (WorkItem, Response) {
+        let (reply, rx) = response_slot();
+        let job = GemmJob {
+            artifact: format!("g{tag}"),
+            a: vec![tag],
+            b: vec![tag],
+            reply,
+            enqueued: Instant::now(),
+        };
+        (WorkItem::Gemm(job), rx)
+    }
+
+    #[test]
+    fn dispatch_skips_dead_workers() {
+        let (live_tx, live_rx) = sync_channel::<WorkItem>(4);
+        let (dead_tx, dead_rx) = sync_channel::<WorkItem>(4);
+        drop(dead_rx); // worker 0 died
+        let mut txs = vec![dead_tx, live_tx];
+        let mut next = 0usize;
+
+        let (item, _rx) = gemm_item(1);
+        dispatch(item, &mut txs, &mut next);
+        assert_eq!(txs.len(), 1, "dead worker retired from rotation");
+        match live_rx.try_recv().unwrap() {
+            WorkItem::Gemm(g) => assert_eq!(g.artifact, "g1"),
+            other => panic!("wrong item routed: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn dispatch_fails_job_when_no_workers_remain() {
+        let (dead_tx, dead_rx) = sync_channel::<WorkItem>(4);
+        drop(dead_rx);
+        let mut txs = vec![dead_tx];
+        let mut next = 0usize;
+        let (item, rx) = gemm_item(2);
+        dispatch(item, &mut txs, &mut next);
+        assert!(txs.is_empty());
+        let err = rx.recv().unwrap().unwrap_err();
+        assert!(err.to_string().contains("no live workers"), "{err}");
+    }
+
+    #[test]
+    fn dispatch_round_robins_over_live_workers() {
+        let (tx_a, rx_a) = sync_channel::<WorkItem>(8);
+        let (tx_b, rx_b) = sync_channel::<WorkItem>(8);
+        let mut txs = vec![tx_a, tx_b];
+        let mut next = 0usize;
+        let mut slots = Vec::new();
+        for i in 0..4 {
+            let (item, rx) = gemm_item(i);
+            dispatch(item, &mut txs, &mut next);
+            slots.push(rx);
+        }
+        assert_eq!(rx_a.try_iter().count(), 2);
+        assert_eq!(rx_b.try_iter().count(), 2);
     }
 }

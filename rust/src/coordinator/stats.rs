@@ -1,6 +1,9 @@
-//! Coordinator metrics: counters + log-bucket latency histogram.
+//! Coordinator metrics: counters, log-bucket latency histogram, worker
+//! service-time accounting, and photonic telemetry aggregation.
 
 use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::runtime::backend::ExecReport;
 
 /// Number of logarithmic latency buckets (1 µs × 2^i, i < BUCKETS).
 const BUCKETS: usize = 24;
@@ -20,10 +23,43 @@ pub struct CoordinatorStats {
     pub batched_rows: AtomicU64,
     /// Sum of padded slots (wasted work due to padding).
     pub padded_rows: AtomicU64,
+    /// Whole-CNN inferences served.
+    pub cnn_frames: AtomicU64,
     /// Latency histogram (µs, log2 buckets).
     lat_hist: [AtomicU64; BUCKETS],
     /// Total latency in µs.
     lat_sum_us: AtomicU64,
+    /// Worker execute (service) invocations timed.
+    exec_calls: AtomicU64,
+    /// Total worker execute time, µs — service time only, excluding queue
+    /// and batching-window wait (which end-to-end latency includes).
+    exec_sum_us: AtomicU64,
+    /// Slowest single execute, µs.
+    exec_max_us: AtomicU64,
+    /// Executions that carried a photonic [`ExecReport`].
+    pub sim_reports: AtomicU64,
+    /// Total projected photonic latency, f64 seconds stored as bits (a
+    /// single request can be sub-nanosecond on a 64-core fleet, so integer
+    /// nanosecond accumulation would truncate to zero).
+    sim_latency_bits: AtomicU64,
+    /// Total projected photonic energy, f64 joules stored as bits.
+    sim_energy_bits: AtomicU64,
+    /// Outputs perturbed by analog noise injection.
+    pub noise_events: AtomicU64,
+}
+
+/// Lock-free f64 accumulate over an `AtomicU64` holding f64 bits
+/// (`AtomicU64::default()` is bit-pattern 0 == 0.0f64, so `Default` on the
+/// stats struct stays correct).
+fn atomic_add_f64(cell: &AtomicU64, add: f64) {
+    let mut cur = cell.load(Ordering::Relaxed);
+    loop {
+        let new = (f64::from_bits(cur) + add).to_bits();
+        match cell.compare_exchange_weak(cur, new, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(actual) => cur = actual,
+        }
+    }
 }
 
 impl CoordinatorStats {
@@ -33,6 +69,22 @@ impl CoordinatorStats {
         self.lat_sum_us.fetch_add(us, Ordering::Relaxed);
         let bucket = (64 - us.max(1).leading_zeros() as usize - 1).min(BUCKETS - 1);
         self.lat_hist[bucket].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one worker execute's service time (per batch or per job).
+    pub fn record_service(&self, seconds: f64) {
+        let us = (seconds * 1e6).max(0.0) as u64;
+        self.exec_calls.fetch_add(1, Ordering::Relaxed);
+        self.exec_sum_us.fetch_add(us, Ordering::Relaxed);
+        self.exec_max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    /// Fold one execution's photonic telemetry into the totals.
+    pub fn record_report(&self, r: &ExecReport) {
+        self.sim_reports.fetch_add(1, Ordering::Relaxed);
+        atomic_add_f64(&self.sim_latency_bits, r.sim_latency_s);
+        atomic_add_f64(&self.sim_energy_bits, r.energy_j);
+        self.noise_events.fetch_add(r.noise_events, Ordering::Relaxed);
     }
 
     /// Approximate latency percentile (bucket upper bound), seconds.
@@ -61,6 +113,49 @@ impl CoordinatorStats {
         self.lat_sum_us.load(Ordering::Relaxed) as f64 * 1e-6 / n as f64
     }
 
+    /// Mean worker execute (service) time, seconds.
+    pub fn service_mean(&self) -> f64 {
+        let n = self.exec_calls.load(Ordering::Relaxed);
+        if n == 0 {
+            return 0.0;
+        }
+        self.exec_sum_us.load(Ordering::Relaxed) as f64 * 1e-6 / n as f64
+    }
+
+    /// Slowest single worker execute, seconds.
+    pub fn service_max(&self) -> f64 {
+        self.exec_max_us.load(Ordering::Relaxed) as f64 * 1e-6
+    }
+
+    /// Total projected photonic latency across reported executions, seconds.
+    pub fn sim_latency_total_s(&self) -> f64 {
+        f64::from_bits(self.sim_latency_bits.load(Ordering::Relaxed))
+    }
+
+    /// Total projected photonic energy, joules.
+    pub fn sim_energy_total_j(&self) -> f64 {
+        f64::from_bits(self.sim_energy_bits.load(Ordering::Relaxed))
+    }
+
+    /// Projected frames/executions per second on the simulated photonic
+    /// accelerator (reported executions ÷ total projected latency).
+    pub fn sim_fps(&self) -> f64 {
+        let lat = self.sim_latency_total_s();
+        if lat <= 0.0 {
+            return 0.0;
+        }
+        self.sim_reports.load(Ordering::Relaxed) as f64 / lat
+    }
+
+    /// Projected FPS per watt (reported executions ÷ total projected energy).
+    pub fn sim_fps_per_w(&self) -> f64 {
+        let e = self.sim_energy_total_j();
+        if e <= 0.0 {
+            return 0.0;
+        }
+        self.sim_reports.load(Ordering::Relaxed) as f64 / e
+    }
+
     /// Mean rows per micro-batch.
     pub fn mean_batch_occupancy(&self) -> f64 {
         let b = self.batches.load(Ordering::Relaxed);
@@ -82,9 +177,9 @@ impl CoordinatorStats {
 
     /// One-line human-readable summary.
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "requests={} completed={} failed={} batches={} occupancy={:.2} padding={:.1}% \
-             lat(mean/p50/p99)={:.1}/{:.1}/{:.1} µs",
+             lat(mean/p50/p99)={:.1}/{:.1}/{:.1} µs service(mean/max)={:.1}/{:.1} µs",
             self.requests.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.failed.load(Ordering::Relaxed),
@@ -94,7 +189,18 @@ impl CoordinatorStats {
             self.latency_mean() * 1e6,
             self.latency_percentile(0.5) * 1e6,
             self.latency_percentile(0.99) * 1e6,
-        )
+            self.service_mean() * 1e6,
+            self.service_max() * 1e6,
+        );
+        if self.sim_reports.load(Ordering::Relaxed) > 0 {
+            s.push_str(&format!(
+                " sim(fps={:.0} fps/W={:.0} noise_events={})",
+                self.sim_fps(),
+                self.sim_fps_per_w(),
+                self.noise_events.load(Ordering::Relaxed),
+            ));
+        }
+        s
     }
 }
 
@@ -121,6 +227,10 @@ mod tests {
         assert_eq!(s.latency_mean(), 0.0);
         assert_eq!(s.mean_batch_occupancy(), 0.0);
         assert_eq!(s.padding_fraction(), 0.0);
+        assert_eq!(s.service_mean(), 0.0);
+        assert_eq!(s.service_max(), 0.0);
+        assert_eq!(s.sim_fps(), 0.0);
+        assert_eq!(s.sim_fps_per_w(), 0.0);
     }
 
     #[test]
@@ -131,6 +241,55 @@ mod tests {
         s.padded_rows.fetch_add(2, Ordering::Relaxed);
         assert!((s.mean_batch_occupancy() - 3.0).abs() < 1e-9);
         assert!((s.padding_fraction() - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn service_time_mean_and_max() {
+        let s = CoordinatorStats::default();
+        s.record_service(100e-6);
+        s.record_service(300e-6);
+        assert!((s.service_mean() - 200e-6).abs() < 1e-9);
+        assert!((s.service_max() - 300e-6).abs() < 1e-9);
+        assert!(s.summary().contains("service"));
+    }
+
+    #[test]
+    fn photonic_reports_aggregate() {
+        let s = CoordinatorStats::default();
+        let r = ExecReport {
+            sim_latency_s: 2e-3,
+            energy_j: 5e-4,
+            lanes: 100,
+            noise_events: 3,
+        };
+        s.record_report(&r);
+        s.record_report(&r);
+        assert_eq!(s.sim_reports.load(Ordering::Relaxed), 2);
+        assert!((s.sim_latency_total_s() - 4e-3).abs() < 1e-9);
+        assert!((s.sim_energy_total_j() - 1e-3).abs() < 1e-9);
+        assert!((s.sim_fps() - 500.0).abs() < 1e-6);
+        assert!((s.sim_fps_per_w() - 2000.0).abs() < 1e-3);
+        assert_eq!(s.noise_events.load(Ordering::Relaxed), 6);
+        assert!(s.summary().contains("sim("));
+    }
+
+    #[test]
+    fn sub_nanosecond_reports_do_not_truncate_to_zero() {
+        // A single GEMM on a 64-core 10 GS/s fleet projects ~1e-10 s; the
+        // accumulator must not floor it away.
+        let s = CoordinatorStats::default();
+        for _ in 0..10 {
+            s.record_report(&ExecReport {
+                sim_latency_s: 1e-10,
+                energy_j: 1e-13,
+                lanes: 1,
+                noise_events: 0,
+            });
+        }
+        assert!((s.sim_latency_total_s() - 1e-9).abs() < 1e-18);
+        assert!((s.sim_energy_total_j() - 1e-12).abs() < 1e-21);
+        assert!(s.sim_fps() > 0.0);
+        assert!(s.sim_fps_per_w() > 0.0);
     }
 
     #[test]

@@ -1,6 +1,9 @@
-//! Worker threads: each owns an execution engine and executes dispatched
-//! work. With the software backend every GEMM a worker runs routes through
-//! the packed bit-sliced fast path (see [`crate::runtime::software`]).
+//! Worker threads: each owns an execution engine (over the configured
+//! [`BackendKind`]) and executes dispatched work. With the software backend
+//! every GEMM a worker runs routes through the packed bit-sliced fast path;
+//! with the photonic backend every execution additionally carries a
+//! simulated-accelerator [`crate::runtime::ExecReport`] that is folded into
+//! [`CoordinatorStats`] and returned on the [`Reply`].
 
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::Receiver;
@@ -8,8 +11,10 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::coordinator::batcher::MicroBatch;
-use crate::coordinator::request::GemmJob;
+use crate::coordinator::request::{CnnJob, GemmJob, Reply};
 use crate::coordinator::stats::CoordinatorStats;
+use crate::runtime::backend::BackendKind;
+use crate::runtime::cnnrun::run_cnn;
 use crate::runtime::Engine;
 
 /// Work items dispatched by the leader to a worker.
@@ -19,26 +24,46 @@ pub enum WorkItem {
     Batch(MicroBatch),
     /// An unbatched GEMM.
     Gemm(GemmJob),
+    /// A whole-CNN inference.
+    Cnn(CnnJob),
     /// Stop the worker.
     Shutdown,
 }
 
-/// Worker main loop: construct the engine *inside* the thread (the software
-/// engine is `Send`, but a PJRT backend's handles would not be — the
+impl WorkItem {
+    /// Fail every reply slot this item owns (dead-worker / no-worker path).
+    pub(crate) fn fail(self, msg: &str) {
+        let err = || crate::Error::Coordinator(msg.to_string());
+        match self {
+            WorkItem::Batch(b) => b.fail(msg),
+            WorkItem::Gemm(g) => {
+                let _ = g.reply.send(Err(err()));
+            }
+            WorkItem::Cnn(c) => {
+                let _ = c.reply.send(Err(err()));
+            }
+            WorkItem::Shutdown => {}
+        }
+    }
+}
+
+/// Worker main loop: construct the engine *inside* the thread (the in-tree
+/// backends are `Send`, but a PJRT backend's handles would not be — the
 /// per-thread construction keeps both correct), then serve work items until
 /// shutdown.
 pub fn run_worker(
     id: usize,
     artifact_dir: String,
+    backend: BackendKind,
     warmup: bool,
     ready: std::sync::mpsc::SyncSender<()>,
     rx: Receiver<WorkItem>,
     stats: Arc<CoordinatorStats>,
 ) {
-    let engine_init = Engine::new(&artifact_dir).and_then(|mut e| {
+    let engine_init = Engine::with_backend(&artifact_dir, backend).and_then(|mut e| {
         if warmup {
             // Compile every artifact before serving so first requests do not
-            // pay PJRT compilation latency.
+            // pay plan/compilation latency.
             e.warmup_all()?;
         }
         Ok(e)
@@ -52,15 +77,10 @@ pub fn run_worker(
             // Fail every item we receive; the handle surfaces the error.
             eprintln!("worker {id}: engine init failed: {e}");
             for item in rx {
-                match item {
-                    WorkItem::Batch(b) => b.fail(&format!("worker {id} has no engine: {e}")),
-                    WorkItem::Gemm(g) => {
-                        let _ = g
-                            .reply
-                            .send(Err(crate::Error::Coordinator(format!("no engine: {e}"))));
-                    }
-                    WorkItem::Shutdown => break,
+                if matches!(item, WorkItem::Shutdown) {
+                    break;
                 }
+                item.fail(&format!("worker {id} has no engine: {e}"));
             }
             return;
         }
@@ -70,39 +90,75 @@ pub fn run_worker(
         match item {
             WorkItem::Shutdown => break,
             WorkItem::Gemm(job) => {
-                let t0 = job.enqueued;
+                let started = Instant::now();
                 let res = engine
-                    .execute_i32_single(&job.artifact, &[&job.a, &job.b])
+                    .execute_reported(&job.artifact, &[&job.a, &job.b])
                     .map_err(|e| crate::Error::Coordinator(e.to_string()));
-                match &res {
-                    Ok(_) => {
+                stats.record_service(started.elapsed().as_secs_f64());
+                match res {
+                    Ok((outputs, report)) => {
                         stats.completed.fetch_add(1, Ordering::Relaxed);
-                        stats.record_latency(t0.elapsed().as_secs_f64());
+                        stats.record_latency(job.enqueued.elapsed().as_secs_f64());
+                        if let Some(r) = &report {
+                            stats.record_report(r);
+                        }
+                        let _ = job.reply.send(Ok(Reply { outputs, report, layers: Vec::new() }));
                     }
-                    Err(_) => {
+                    Err(e) => {
                         stats.failed.fetch_add(1, Ordering::Relaxed);
+                        let _ = job.reply.send(Err(e));
                     }
                 }
-                let _ = job.reply.send(res);
+            }
+            WorkItem::Cnn(job) => {
+                let started = Instant::now();
+                let res = run_cnn(&mut engine, &job.model, &job.input)
+                    .map_err(|e| crate::Error::Coordinator(e.to_string()));
+                stats.record_service(started.elapsed().as_secs_f64());
+                match res {
+                    Ok(run) => {
+                        stats.completed.fetch_add(1, Ordering::Relaxed);
+                        stats.cnn_frames.fetch_add(1, Ordering::Relaxed);
+                        stats.record_latency(job.enqueued.elapsed().as_secs_f64());
+                        if let Some(r) = &run.report {
+                            stats.record_report(r);
+                        }
+                        let _ = job.reply.send(Ok(Reply {
+                            outputs: run.logits,
+                            report: run.report,
+                            layers: run.layers,
+                        }));
+                    }
+                    Err(e) => {
+                        stats.failed.fetch_add(1, Ordering::Relaxed);
+                        let _ = job.reply.send(Err(e));
+                    }
+                }
             }
             WorkItem::Batch(batch) => {
                 let members = batch.jobs.len() as u64;
                 let padding = (batch.batch - batch.jobs.len()) as u64;
                 let row_len = batch.jobs.first().map(|j| j.row.len()).unwrap_or(0);
                 let input = batch.build_input(row_len);
+                // Per-batch service time: the execute duration alone, as
+                // opposed to the members' enqueue-to-done latencies below.
                 let started = Instant::now();
-                match engine.execute_i32_single(&batch.artifact, &[&input]) {
-                    Ok(out) => {
+                let res = engine.execute_reported(&batch.artifact, &[&input]);
+                stats.record_service(started.elapsed().as_secs_f64());
+                match res {
+                    Ok((out, report)) => {
                         stats.batches.fetch_add(1, Ordering::Relaxed);
                         stats.batched_rows.fetch_add(members, Ordering::Relaxed);
                         stats.padded_rows.fetch_add(padding, Ordering::Relaxed);
                         stats.completed.fetch_add(members, Ordering::Relaxed);
+                        if let Some(r) = &report {
+                            stats.record_report(r);
+                        }
                         let now = Instant::now();
                         for j in &batch.jobs {
                             stats.record_latency(now.duration_since(j.enqueued).as_secs_f64());
                         }
-                        let _ = started;
-                        batch.deliver(&out);
+                        batch.deliver(&out, report);
                     }
                     Err(e) => {
                         stats.failed.fetch_add(members, Ordering::Relaxed);

@@ -1,0 +1,185 @@
+//! Numeric im2col lowering: turn convolution inputs into the Toeplitz
+//! matrices the photonic cores multiply (paper §I).
+//!
+//! [`crate::dnn::layer`] lowers layers to GEMM *shapes* for the analytical
+//! models; this module does the same lowering on concrete int8 activation
+//! tensors so whole CNN inferences can be *served* — layer by layer, one
+//! GEMM per conv group — through any [`crate::runtime::ExecBackend`].
+//!
+//! Activation layout is HWC row-major: element `(y, x, c)` of an
+//! `h×w×ch` tensor lives at `(y*w + x)*ch + c`. The im2col matrix row for
+//! output pixel `(oy, ox)` concatenates the receptive field in
+//! `(ky, kx, c_in_group)` order; surrogate weight matrices are generated in
+//! the same `k`-ordering, so the pairing is self-consistent (the real
+//! model's baked weights would adopt whatever ordering its exporter used).
+
+use crate::dnn::layer::conv_out_dim;
+
+/// Build the im2col matrix (`t×k`, `t = oh·ow`, `k = (in_ch/groups)·kernel²`)
+/// for one conv group over an HWC int8 activation tensor. Out-of-bounds
+/// taps (zero padding) contribute 0.
+///
+/// Caller guarantees `input.len() == in_h*in_w*in_ch`, `groups` divides
+/// `in_ch`, `group < groups`, `stride >= 1`, and the conv is geometrically
+/// valid (`in + 2·pad >= kernel`) — the serving path validates all of this
+/// up front via [`crate::runtime::cnnrun::validate_cnn_input`].
+#[allow(clippy::too_many_arguments)]
+pub fn im2col_group(
+    input: &[i8],
+    in_h: usize,
+    in_w: usize,
+    in_ch: usize,
+    kernel: usize,
+    stride: usize,
+    pad: usize,
+    groups: usize,
+    group: usize,
+) -> Vec<i8> {
+    let cpg = in_ch / groups;
+    let oh = conv_out_dim(in_h, kernel, stride, pad);
+    let ow = conv_out_dim(in_w, kernel, stride, pad);
+    let k = cpg * kernel * kernel;
+    let mut out = vec![0i8; oh * ow * k];
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let base = (oy * ow + ox) * k;
+            for ky in 0..kernel {
+                let y = (oy * stride + ky) as isize - pad as isize;
+                if y < 0 || y as usize >= in_h {
+                    continue; // padding row: stays 0
+                }
+                for kx in 0..kernel {
+                    let x = (ox * stride + kx) as isize - pad as isize;
+                    if x < 0 || x as usize >= in_w {
+                        continue; // padding column: stays 0
+                    }
+                    let src = (y as usize * in_w + x as usize) * in_ch + group * cpg;
+                    let dst = base + (ky * kernel + kx) * cpg;
+                    for c in 0..cpg {
+                        out[dst + c] = input[src + c];
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Requantize an int32 GEMM accumulator back to an int8 activation for the
+/// next layer: arithmetic shift sized to the reduction length (worst case
+/// `|acc| <= 127·127·k`), then clamp. Deterministic and backend-independent,
+/// so software and photonic backends chain identically.
+pub fn requantize(acc: i32, k: usize) -> i8 {
+    // floor(log2 k) + 1 bits for the reduction, 7 for the second operand.
+    let kbits = usize::BITS - k.max(1).leading_zeros();
+    let shift = (7 + kbits).min(24);
+    (acc >> shift).clamp(-128, 127) as i8
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitslice::gemm_i32;
+    use crate::testing::SplitMix64;
+
+    /// Naive direct convolution (HWC, zero pad) — the oracle im2col+GEMM
+    /// must reproduce.
+    #[allow(clippy::too_many_arguments)]
+    fn conv_direct(
+        input: &[i8],
+        w: &[i8], // k×out_c per group ordering: ((ky*kernel+kx)*cpg + c_in) row, out_c col
+        in_h: usize,
+        in_w: usize,
+        in_ch: usize,
+        out_ch: usize,
+        kernel: usize,
+        stride: usize,
+        pad: usize,
+    ) -> Vec<i32> {
+        let oh = conv_out_dim(in_h, kernel, stride, pad);
+        let ow = conv_out_dim(in_w, kernel, stride, pad);
+        let k = in_ch * kernel * kernel;
+        let mut out = vec![0i32; oh * ow * out_ch];
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for oc in 0..out_ch {
+                    let mut acc = 0i32;
+                    for ky in 0..kernel {
+                        for kx in 0..kernel {
+                            let y = (oy * stride + ky) as isize - pad as isize;
+                            let x = (ox * stride + kx) as isize - pad as isize;
+                            if y < 0 || x < 0 || y as usize >= in_h || x as usize >= in_w {
+                                continue;
+                            }
+                            for c in 0..in_ch {
+                                let a = input[(y as usize * in_w + x as usize) * in_ch + c];
+                                let b = w[((ky * kernel + kx) * in_ch + c) * out_ch + oc];
+                                acc += a as i32 * b as i32;
+                            }
+                        }
+                    }
+                    out[(oy * ow + ox) * out_ch + oc] = acc;
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn pointwise_conv_im2col_is_identity() {
+        // 1×1 kernel, stride 1, no pad: the im2col matrix IS the input.
+        let mut rng = SplitMix64::new(3);
+        let input = rng.i8_vec(4 * 5 * 6);
+        let m = im2col_group(&input, 4, 5, 6, 1, 1, 0, 1, 0);
+        assert_eq!(m, input);
+    }
+
+    #[test]
+    fn im2col_gemm_matches_direct_convolution() {
+        let (in_h, in_w, in_ch, out_ch, kernel, stride, pad) = (7, 6, 3, 4, 3, 2, 1);
+        let mut rng = SplitMix64::new(11);
+        let input = rng.i8_vec(in_h * in_w * in_ch);
+        let k = in_ch * kernel * kernel;
+        let w = rng.i8_vec(k * out_ch);
+        let oh = conv_out_dim(in_h, kernel, stride, pad);
+        let ow = conv_out_dim(in_w, kernel, stride, pad);
+
+        let a = im2col_group(&input, in_h, in_w, in_ch, kernel, stride, pad, 1, 0);
+        let got = gemm_i32(&a, &w, oh * ow, k, out_ch).unwrap();
+        let want =
+            conv_direct(&input, &w, in_h, in_w, in_ch, out_ch, kernel, stride, pad);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn grouped_im2col_selects_group_channels() {
+        // 2 groups over 4 channels: group 1's 1×1 im2col picks channels 2..4.
+        let mut rng = SplitMix64::new(21);
+        let input = rng.i8_vec(2 * 2 * 4);
+        let m = im2col_group(&input, 2, 2, 4, 1, 1, 0, 2, 1);
+        let want: Vec<i8> = (0..4).flat_map(|px| input[px * 4 + 2..px * 4 + 4].to_vec()).collect();
+        assert_eq!(m, want);
+    }
+
+    #[test]
+    fn padding_taps_are_zero() {
+        // All-ones input, 3×3 kernel, pad 1: the corner output row has 4
+        // in-bounds taps, so exactly 5 zeros.
+        let input = vec![1i8; 3 * 3];
+        let m = im2col_group(&input, 3, 3, 1, 3, 1, 1, 1, 0);
+        let corner = &m[0..9];
+        assert_eq!(corner.iter().filter(|&&v| v == 0).count(), 5);
+        assert_eq!(corner.iter().filter(|&&v| v == 1).count(), 4);
+    }
+
+    #[test]
+    fn requantize_bounds_and_monotonicity() {
+        for k in [1usize, 9, 147, 4608] {
+            let hi = requantize(127 * 127 * k as i32, k);
+            let lo = requantize(-127 * 127 * (k as i32), k);
+            assert!(hi >= 0 && lo <= 0);
+            assert!(requantize(1000, k) >= requantize(-1000, k));
+        }
+        assert_eq!(requantize(0, 9), 0);
+    }
+}

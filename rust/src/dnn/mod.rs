@@ -7,11 +7,13 @@
 //! ImageNet inference, batch 1). Each network exposes its [`Workload`]: the
 //! ordered list of GEMM invocations one frame requires.
 
+pub mod im2col;
 pub mod layer;
 pub mod models;
 pub mod trace;
 pub mod workload;
 
+pub use im2col::{im2col_group, requantize};
 pub use layer::{conv_out_dim, GemmShape, Layer};
 pub use models::{googlenet, mobilenet_v2, resnet50, shufflenet_v2, CnnModel};
 pub use trace::{load_trace, parse_trace, to_trace};

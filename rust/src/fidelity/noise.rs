@@ -4,7 +4,11 @@ use crate::testing::SplitMix64;
 use crate::units::db_to_ratio;
 
 /// Noise configuration of one analog lane (BPCA accumulator).
-#[derive(Debug, Clone, Copy)]
+///
+/// `PartialEq` so backend configurations embedding noise settings (e.g.
+/// [`crate::runtime::PhotonicConfig`]) can be compared in tests/config
+/// plumbing.
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct NoiseParams {
     /// Signal-to-noise ratio at the accumulator for a *full-scale* single
     /// product, dB. Derived from the margin between received power and

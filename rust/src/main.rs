@@ -7,7 +7,11 @@
 //! spoga table2                            print paper Table II constants
 //! spoga fig5 [--cores N] [--metric M]     reproduce Fig 5(a/b/c) rows
 //! spoga gemm [--artifact NAME]            run an AOT GEMM vs golden model
-//! spoga serve [--requests N] [--workers W] self-driven serving demo
+//! spoga serve [--requests N] [--workers W] [--backend B]
+//!                                         self-driven serving demo; B in
+//!                                         {software, photonic, holylight,
+//!                                         deapcnn} (photonic backends add
+//!                                         live sim-FPS/W telemetry)
 //! spoga info                              artifact + platform diagnostics
 //! ```
 
@@ -128,14 +132,24 @@ fn cmd_gemm(flags: &HashMap<String, String>) {
 
 fn cmd_serve(flags: &HashMap<String, String>) {
     use spoga::coordinator::{Coordinator, CoordinatorConfig};
+    use spoga::runtime::{BackendKind, PhotonicConfig};
     let requests: usize = flags.get("requests").and_then(|v| v.parse().ok()).unwrap_or(256);
     let workers: usize = flags.get("workers").and_then(|v| v.parse().ok()).unwrap_or(2);
+    // --backend software (default) | photonic | holylight | deapcnn
+    let backend = match flags.get("backend").map(String::as_str) {
+        Some("photonic") | Some("spoga") => BackendKind::Photonic(PhotonicConfig::spoga()),
+        Some("holylight") => BackendKind::Photonic(PhotonicConfig::holylight()),
+        Some("deapcnn") => BackendKind::Photonic(PhotonicConfig::deapcnn()),
+        _ => BackendKind::Software,
+    };
+    println!("backend: {}", backend.label());
     let cfg = CoordinatorConfig {
         artifact_dir: flags
             .get("artifacts")
             .cloned()
             .unwrap_or_else(|| "artifacts".to_string()),
         workers,
+        backend,
         ..Default::default()
     };
     let c = Coordinator::start(cfg).expect("coordinator");

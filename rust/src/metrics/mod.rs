@@ -120,6 +120,53 @@ pub fn evaluate_variant(
     VariantResults { name: accel.name.clone(), gmean: gmean(&per_model), per_model }
 }
 
+/// Live serving telemetry aggregated from per-request
+/// [`ExecReport`](crate::runtime::ExecReport)s — the bridge between the
+/// coordinator's photonic-in-the-loop responses and the paper's headline
+/// metrics: feed it the reports a traffic run produced and read off the
+/// FPS / FPS-per-watt *that exact traffic* would see on the simulated
+/// accelerator (vs. [`build_figure`]'s fixed benchmark suite).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LiveTelemetry {
+    /// Reported executions folded in.
+    pub frames: u64,
+    /// Total projected latency, seconds.
+    pub sim_latency_s: f64,
+    /// Total projected energy, joules.
+    pub energy_j: f64,
+    /// Total analog lanes transduced.
+    pub lanes: u64,
+    /// Total noise-perturbed outputs.
+    pub noise_events: u64,
+}
+
+impl LiveTelemetry {
+    /// Fold in one execution's report.
+    pub fn add(&mut self, r: &crate::runtime::ExecReport) {
+        self.frames += 1;
+        self.sim_latency_s += r.sim_latency_s;
+        self.energy_j += r.energy_j;
+        self.lanes += r.lanes;
+        self.noise_events += r.noise_events;
+    }
+
+    /// Projected executions per second (frames ÷ projected latency).
+    pub fn fps(&self) -> f64 {
+        if self.sim_latency_s <= 0.0 {
+            return 0.0;
+        }
+        self.frames as f64 / self.sim_latency_s
+    }
+
+    /// Projected executions per joule — the paper's FPS/W identity.
+    pub fn fps_per_w(&self) -> f64 {
+        if self.energy_j <= 0.0 {
+            return 0.0;
+        }
+        self.frames as f64 / self.energy_j
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -167,5 +214,23 @@ mod tests {
     fn gmean_ratio_missing_variant_is_none() {
         let fig = build_figure(Metric::Fps, &[DataRate::Gs10], FIG5_CORES).unwrap();
         assert!(fig.gmean_ratio("SPOGA_10", "nonexistent").is_none());
+    }
+
+    #[test]
+    fn live_telemetry_matches_frame_stats_identities() {
+        let mut t = LiveTelemetry::default();
+        assert_eq!(t.fps(), 0.0);
+        assert_eq!(t.fps_per_w(), 0.0);
+        let r = crate::runtime::ExecReport {
+            sim_latency_s: 0.01,
+            energy_j: 0.5,
+            lanes: 42,
+            noise_events: 1,
+        };
+        t.add(&r);
+        t.add(&r);
+        assert!((t.fps() - 100.0).abs() < 1e-9); // 2 frames / 0.02 s
+        assert!((t.fps_per_w() - 2.0).abs() < 1e-9); // 2 frames / 1 J
+        assert_eq!((t.frames, t.lanes, t.noise_events), (2, 84, 2));
     }
 }

@@ -1,0 +1,161 @@
+//! Pluggable execution backends: the `ExecBackend` trait and its registry.
+//!
+//! The engine/coordinator stack is backend-agnostic: an [`crate::runtime::Engine`]
+//! owns a `Box<dyn ExecBackend>` chosen by [`BackendKind`], and everything
+//! above it (workers, leader, handles) only sees the trait. Two backends
+//! ship in-tree:
+//!
+//! * [`crate::runtime::software::SoftwareBackend`] — the packed bit-sliced
+//!   GEMM interpreter (bit-exact golden-model arithmetic, no telemetry).
+//! * [`crate::runtime::photonic::PhotonicBackend`] — same bit-exact
+//!   arithmetic, but every execute also runs the artifact's GEMM shape
+//!   through the transaction-level photonic simulator
+//!   ([`crate::sim::SimEngine`] + [`crate::arch::cost`]) and reports an
+//!   [`ExecReport`] (projected latency, energy, lane count), with optional
+//!   [`crate::fidelity`] noise injection for photonic-in-the-loop serving.
+//!
+//! The trait is deliberately narrow (`plan` / `execute_i32` / `platform` +
+//! the optional `report_for` telemetry hook) so a future PJRT backend (the
+//! `xla` crate compiling HLO text) can slot in behind a cargo feature
+//! without touching the serving stack.
+
+use crate::dnn::layer::GemmShape;
+use crate::runtime::artifact::ArtifactMeta;
+use crate::Result;
+
+/// Per-request photonic telemetry attached to an execution.
+///
+/// Produced by backends that model the photonic datapath; the software
+/// interpreter reports `None`. All fields are per-execute (one artifact
+/// invocation); aggregate with [`ExecReport::merge`].
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ExecReport {
+    /// Projected latency of this execution on the simulated accelerator,
+    /// seconds (transaction-level model, not wall clock).
+    pub sim_latency_s: f64,
+    /// Projected energy of this execution, joules.
+    pub energy_j: f64,
+    /// Analog dot-product lanes transduced (outputs computed optically) —
+    /// each one costs the architecture its O/E + ADC conversion chain.
+    pub lanes: u64,
+    /// Outputs whose analog-observed value differed from the exact integer
+    /// result (0 unless noise injection is enabled).
+    pub noise_events: u64,
+}
+
+impl ExecReport {
+    /// Component-wise accumulate (latencies add: layers execute serially).
+    pub fn merge(&mut self, other: &ExecReport) {
+        self.sim_latency_s += other.sim_latency_s;
+        self.energy_j += other.energy_j;
+        self.lanes += other.lanes;
+        self.noise_events += other.noise_events;
+    }
+}
+
+/// Result of one backend execution: the output buffer plus telemetry (if
+/// the backend models the photonic datapath).
+#[derive(Debug, Clone)]
+pub struct BackendExec {
+    /// Flat row-major int32 output (single-output artifacts).
+    pub output: Vec<i32>,
+    /// Photonic telemetry, `None` for purely digital backends.
+    pub report: Option<ExecReport>,
+}
+
+/// An execution backend: plans artifacts once, executes them many times.
+///
+/// Implementations own their plan cache (keyed by artifact name); `Send`
+/// because each coordinator worker constructs its engine — and therefore
+/// its backend — inside the worker thread, and hands work across threads.
+pub trait ExecBackend: Send {
+    /// Backend name for diagnostics (`Engine::platform`).
+    fn platform(&self) -> String;
+
+    /// Compile `meta` into an execution plan (idempotent; cached by name).
+    fn plan(&mut self, meta: &ArtifactMeta) -> Result<()>;
+
+    /// Execute a previously planned artifact with positional int32 inputs.
+    /// Element counts are validated by the engine against the manifest
+    /// before this is called.
+    fn execute_i32(&mut self, name: &str, inputs: &[&[i32]]) -> Result<BackendExec>;
+
+    /// Telemetry for a GEMM shape *without* executing it — used by the CNN
+    /// serving path to report per-layer projections that include conv
+    /// groups. Digital backends return `None`.
+    fn report_for(&mut self, shape: &GemmShape) -> Option<ExecReport> {
+        let _ = shape;
+        None
+    }
+}
+
+/// Which backend an [`crate::runtime::Engine`] (and therefore a whole
+/// coordinator worker pool) executes through. Carried by
+/// [`crate::coordinator::CoordinatorConfig`].
+#[derive(Debug, Clone, Default)]
+pub enum BackendKind {
+    /// Packed bit-sliced GEMM interpreter (digital, no telemetry).
+    #[default]
+    Software,
+    /// Bit-exact execution plus photonic-in-the-loop simulation telemetry.
+    Photonic(crate::runtime::photonic::PhotonicConfig),
+}
+
+impl BackendKind {
+    /// Construct the backend this kind names.
+    pub fn build(&self) -> Result<Box<dyn ExecBackend>> {
+        match self {
+            BackendKind::Software => {
+                Ok(Box::new(crate::runtime::software::SoftwareBackend::new()))
+            }
+            BackendKind::Photonic(cfg) => Ok(Box::new(
+                crate::runtime::photonic::PhotonicBackend::new(cfg.clone())?,
+            )),
+        }
+    }
+
+    /// Short label for tables and stats lines.
+    pub fn label(&self) -> String {
+        match self {
+            BackendKind::Software => "software".to_string(),
+            BackendKind::Photonic(cfg) => format!("photonic:{}", cfg.variant_label()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exec_report_merges_componentwise() {
+        let mut a = ExecReport { sim_latency_s: 1.0, energy_j: 2.0, lanes: 3, noise_events: 1 };
+        let b = ExecReport { sim_latency_s: 0.5, energy_j: 0.25, lanes: 7, noise_events: 0 };
+        a.merge(&b);
+        assert_eq!(
+            a,
+            ExecReport { sim_latency_s: 1.5, energy_j: 2.25, lanes: 10, noise_events: 1 }
+        );
+    }
+
+    #[test]
+    fn default_kind_is_software() {
+        assert!(matches!(BackendKind::default(), BackendKind::Software));
+        assert_eq!(BackendKind::default().label(), "software");
+    }
+
+    #[test]
+    fn kinds_build_working_backends() {
+        let mut sw = BackendKind::Software.build().unwrap();
+        assert!(sw.platform().contains("software"));
+        let cfg = crate::runtime::photonic::PhotonicConfig::spoga();
+        let mut ph = BackendKind::Photonic(cfg).build().unwrap();
+        assert!(ph.platform().contains("photonic"));
+        // Neither backend reports telemetry... except the photonic one.
+        let shape = GemmShape { t: 4, k: 16, c: 4, groups: 1 };
+        assert!(sw.report_for(&shape).is_none());
+        let r = ph.report_for(&shape).expect("photonic telemetry");
+        assert!(r.sim_latency_s > 0.0 && r.energy_j > 0.0);
+        assert_eq!(r.lanes, shape.outputs());
+    }
+}

@@ -1,0 +1,258 @@
+//! Whole-CNN serving: drive a [`CnnModel`] layer by layer through a backend.
+//!
+//! Each conv layer is lowered numerically with [`crate::dnn::im2col`] (one
+//! GEMM per conv group) and executed through the engine's backend via
+//! synthetic ad-hoc GEMM plans; fully-connected layers run as `1×k·k×c`
+//! GEMMs. Between layers the int32 accumulators requantize to int8
+//! deterministically, so any two backends produce bit-identical logits.
+//!
+//! Telemetry: backends that model the photonic datapath contribute a
+//! per-layer [`ExecReport`] priced on the layer's *full grouped* GEMM shape
+//! — the exact quantity [`crate::sim::engine::simulate_frame`] reports for
+//! the same accelerator — plus the noise-event counts observed by the
+//! per-group executions when noise injection is on.
+//!
+//! Weights are deterministic surrogates (seeded by layer index, group and
+//! shape, like the MLP artifacts' surrogate weights): the repo has no baked
+//! CNN weights at the Rust layer, and every cross-backend consistency
+//! property only needs determinism.
+
+use crate::dnn::im2col::{im2col_group, requantize};
+use crate::dnn::layer::Layer;
+use crate::dnn::models::CnnModel;
+use crate::runtime::backend::ExecReport;
+use crate::runtime::engine::Engine;
+use crate::testing::SplitMix64;
+use crate::{Error, Result};
+
+/// Telemetry for one served CNN layer.
+#[derive(Debug, Clone)]
+pub struct LayerReport {
+    /// Layer name (trace/model naming).
+    pub layer: String,
+    /// Photonic projection for this layer's grouped GEMM.
+    pub report: ExecReport,
+}
+
+/// Result of one whole-CNN inference through a backend.
+#[derive(Debug, Clone)]
+pub struct CnnRun {
+    /// Raw int32 outputs of the final layer (logits).
+    pub logits: Vec<i32>,
+    /// Aggregate photonic telemetry (sum over layers), `None` on digital
+    /// backends.
+    pub report: Option<ExecReport>,
+    /// Per-layer telemetry, empty on digital backends.
+    pub layers: Vec<LayerReport>,
+}
+
+/// Validate that `model` forms a servable chain from an `input_len`-element
+/// activation: geometry is well-formed (stride ≥ 1, kernel fits the padded
+/// input, groups divide channels) and every layer's input element count
+/// matches the previous layer's output.
+pub fn validate_cnn_input(model: &CnnModel, input_len: usize) -> Result<()> {
+    if model.layers.is_empty() {
+        return Err(Error::Config(format!("{}: model has no layers", model.name)));
+    }
+    let mut cur = input_len;
+    for layer in &model.layers {
+        match layer {
+            Layer::Conv { name, in_h, in_w, in_ch, out_ch, kernel, stride, pad, groups } => {
+                let bad = |msg: String| Error::Shape(format!("layer {name}: {msg}"));
+                if *stride == 0 || *kernel == 0 {
+                    return Err(bad("kernel and stride must be >= 1".into()));
+                }
+                if *groups == 0 || in_ch % groups != 0 || out_ch % groups != 0 {
+                    return Err(bad(format!("groups {groups} must divide {in_ch}/{out_ch}")));
+                }
+                if in_h + 2 * pad < *kernel || in_w + 2 * pad < *kernel {
+                    return Err(bad(format!(
+                        "kernel {kernel} exceeds padded input {in_h}x{in_w}+2*{pad}"
+                    )));
+                }
+                if cur != in_h * in_w * in_ch {
+                    return Err(bad(format!(
+                        "expects {} activations ({in_h}x{in_w}x{in_ch}), chain carries {cur}",
+                        in_h * in_w * in_ch
+                    )));
+                }
+                let (oh, ow) = layer.out_hw();
+                cur = oh * ow * out_ch;
+            }
+            Layer::Fc { name, in_features, out_features } => {
+                if cur != *in_features {
+                    return Err(Error::Shape(format!(
+                        "layer {name}: expects {in_features} features, chain carries {cur}"
+                    )));
+                }
+                cur = *out_features;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Deterministic surrogate weight matrix for layer `li`, group `g`
+/// (`k×c`, row-major). Seeded by position and shape only, so every backend
+/// — and every worker — agrees.
+pub(crate) fn surrogate_layer_weights(li: usize, g: usize, k: usize, c: usize) -> Vec<i8> {
+    let seed = 0xC44F_00D5_u64
+        ^ ((li as u64) << 48)
+        ^ ((g as u64) << 32)
+        ^ ((k as u64) << 16)
+        ^ c as u64;
+    SplitMix64::new(seed).i8_vec(k * c)
+}
+
+/// Serve one CNN inference through `engine`'s backend.
+///
+/// `input` is the first layer's activation tensor in wire format (int8
+/// values in i32 lanes; HWC layout for convs). Returns the final layer's
+/// raw int32 outputs plus per-layer photonic telemetry (if the backend
+/// reports any).
+pub fn run_cnn(engine: &mut Engine, model: &CnnModel, input: &[i32]) -> Result<CnnRun> {
+    validate_cnn_input(model, input.len())?;
+    let mut act: Vec<i8> = input.iter().map(|&v| v as i8).collect();
+    let mut raw: Vec<i32> = Vec::new();
+    let mut layers: Vec<LayerReport> = Vec::new();
+    let mut agg: Option<ExecReport> = None;
+
+    for (li, layer) in model.layers.iter().enumerate() {
+        let shape = layer.gemm();
+        let mut noise_events = 0u64;
+        match layer {
+            Layer::Conv { in_h, in_w, in_ch, out_ch, kernel, stride, pad, groups, .. } => {
+                let (oh, ow) = layer.out_hw();
+                let (t, k, c) = (oh * ow, shape.k, shape.c);
+                raw = vec![0i32; t * out_ch];
+                for g in 0..*groups {
+                    let a8 =
+                        im2col_group(&act, *in_h, *in_w, *in_ch, *kernel, *stride, *pad, *groups, g);
+                    let a_wire: Vec<i32> = a8.iter().map(|&v| v as i32).collect();
+                    let w_wire: Vec<i32> = surrogate_layer_weights(li, g, k, c)
+                        .iter()
+                        .map(|&v| v as i32)
+                        .collect();
+                    let (out, rep) = engine.execute_gemm_shape(t, k, c, &a_wire, &w_wire)?;
+                    if let Some(r) = rep {
+                        noise_events += r.noise_events;
+                    }
+                    // Scatter the group's t×c block into the HWC output.
+                    for row in 0..t {
+                        raw[row * out_ch + g * c..row * out_ch + g * c + c]
+                            .copy_from_slice(&out[row * c..(row + 1) * c]);
+                    }
+                }
+                act = raw.iter().map(|&v| requantize(v, k)).collect();
+            }
+            Layer::Fc { in_features, out_features, .. } => {
+                let a_wire: Vec<i32> = act.iter().map(|&v| v as i32).collect();
+                let w_wire: Vec<i32> =
+                    surrogate_layer_weights(li, 0, *in_features, *out_features)
+                        .iter()
+                        .map(|&v| v as i32)
+                        .collect();
+                let (out, rep) =
+                    engine.execute_gemm_shape(1, *in_features, *out_features, &a_wire, &w_wire)?;
+                if let Some(r) = rep {
+                    noise_events += r.noise_events;
+                }
+                act = out.iter().map(|&v| requantize(v, *in_features)).collect();
+                raw = out;
+            }
+        }
+        // Per-layer projection on the full grouped shape — identical to the
+        // layer's record in `simulate_frame` for the same accelerator.
+        if let Some(mut r) = engine.report_for(&shape) {
+            r.noise_events = noise_events;
+            match &mut agg {
+                Some(a) => a.merge(&r),
+                None => agg = Some(r),
+            }
+            layers.push(LayerReport { layer: layer.name().to_string(), report: r });
+        }
+    }
+
+    Ok(CnnRun { logits: raw, report: agg, layers })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::layer::Layer;
+    use crate::runtime::backend::BackendKind;
+    use crate::runtime::photonic::PhotonicConfig;
+
+    fn tiny_model() -> CnnModel {
+        CnnModel {
+            name: "tiny",
+            layers: vec![
+                Layer::conv("stem", 6, 6, 3, 4, 3, 1, 1),
+                Layer::dwconv("dw", 6, 6, 4, 3, 2, 1),
+                Layer::fc("head", 3 * 3 * 4, 5),
+            ],
+        }
+    }
+
+    fn synthetic_dir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("spoga-cnnrun-test-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), "mlp_b1 m i32:1x16 i32:1x4\n").unwrap();
+        dir
+    }
+
+    #[test]
+    fn chain_validation_catches_mismatches() {
+        let m = tiny_model();
+        assert!(validate_cnn_input(&m, 6 * 6 * 3).is_ok());
+        assert!(validate_cnn_input(&m, 17).is_err());
+        let broken = CnnModel {
+            name: "broken",
+            layers: vec![Layer::conv("c", 6, 6, 3, 4, 3, 1, 1), Layer::fc("f", 999, 5)],
+        };
+        assert!(validate_cnn_input(&broken, 6 * 6 * 3).is_err());
+        let degenerate = CnnModel {
+            name: "deg",
+            layers: vec![Layer::conv("c", 2, 2, 1, 1, 5, 1, 0)],
+        };
+        assert!(validate_cnn_input(&degenerate, 4).is_err());
+        assert!(validate_cnn_input(&CnnModel { name: "e", layers: vec![] }, 0).is_err());
+    }
+
+    #[test]
+    fn backends_serve_bit_identical_cnn_logits() {
+        let dir = synthetic_dir("identical");
+        let mut sw = Engine::new(&dir).unwrap();
+        let mut ph =
+            Engine::with_backend(&dir, BackendKind::Photonic(PhotonicConfig::spoga())).unwrap();
+        let model = tiny_model();
+        let input: Vec<i32> = (0..6 * 6 * 3).map(|v| (v * 29 % 251) - 125).collect();
+
+        let r_sw = run_cnn(&mut sw, &model, &input).unwrap();
+        let r_ph = run_cnn(&mut ph, &model, &input).unwrap();
+        assert_eq!(r_sw.logits.len(), 5);
+        assert_eq!(r_sw.logits, r_ph.logits);
+        assert!(r_sw.report.is_none() && r_sw.layers.is_empty());
+
+        // Photonic telemetry covers every layer and sums into the aggregate.
+        assert_eq!(r_ph.layers.len(), 3);
+        let agg = r_ph.report.unwrap();
+        assert!(agg.sim_latency_s > 0.0 && agg.energy_j > 0.0);
+        let lat_sum: f64 = r_ph.layers.iter().map(|l| l.report.sim_latency_s).sum();
+        assert!((agg.sim_latency_s - lat_sum).abs() < 1e-15);
+        assert_eq!(agg.lanes, model.workload().total_outputs());
+
+        // Determinism across repeat runs.
+        let again = run_cnn(&mut sw, &model, &input).unwrap();
+        assert_eq!(again.logits, r_sw.logits);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn surrogate_weights_keyed_by_layer_and_group() {
+        assert_eq!(surrogate_layer_weights(0, 0, 9, 4), surrogate_layer_weights(0, 0, 9, 4));
+        assert_ne!(surrogate_layer_weights(0, 0, 9, 4), surrogate_layer_weights(1, 0, 9, 4));
+        assert_ne!(surrogate_layer_weights(0, 0, 9, 4), surrogate_layer_weights(0, 1, 9, 4));
+    }
+}

@@ -1,40 +1,48 @@
 //! Execution engine: compile (plan) once, execute many.
 //!
-//! The engine owns the artifact manifest and a cache of compiled execution
-//! plans. The default backend is the in-process software interpreter
-//! ([`crate::runtime::software`]), which routes every artifact through the
-//! packed bit-sliced GEMM fast path — see the module docs of
+//! The engine owns the artifact manifest, request validation, and a
+//! [`crate::runtime::ExecBackend`] chosen by [`BackendKind`] — the backend
+//! owns the compiled plans. [`Engine::new`] keeps the historical default
+//! (the software interpreter); [`Engine::with_backend`] selects any in-tree
+//! backend, e.g. the photonic-in-the-loop simulator. See the module docs of
 //! [`crate::runtime`] for the backend story.
 
 use std::collections::HashMap;
 
-use crate::runtime::artifact::{DType, Manifest, TensorSpec};
-use crate::runtime::software::Plan;
+use crate::dnn::layer::GemmShape;
+use crate::runtime::artifact::{ArtifactMeta, DType, Manifest, TensorSpec};
+use crate::runtime::backend::{BackendKind, ExecBackend, ExecReport};
 use crate::{Error, Result};
 
-/// A planned artifact plus the input specs needed for request validation,
-/// kept together so the warm execute path is a single map lookup (no linear
-/// manifest scan per request).
-struct Compiled {
-    plan: Plan,
-    inputs: Vec<TensorSpec>,
-}
-
-/// Engine owning the manifest and the per-artifact compiled plans.
+/// Engine owning the manifest, validation specs, and the backend.
 ///
-/// Workers each construct their own `Engine` (cheap for the software
-/// backend, and it keeps the one-engine-per-worker architecture that a
+/// Workers each construct their own `Engine` (cheap for the in-tree
+/// backends, and it keeps the one-engine-per-worker architecture that a
 /// thread-affine PJRT backend would require).
 pub struct Engine {
     manifest: Manifest,
-    compiled: HashMap<String, Compiled>,
+    kind: BackendKind,
+    backend: Box<dyn ExecBackend>,
+    /// Input specs of planned artifacts (manifest or synthetic), kept here
+    /// so the warm execute path validates with one map lookup.
+    planned: HashMap<String, Vec<TensorSpec>>,
 }
 
 impl Engine {
-    /// Create an engine over an artifact directory (lazy compilation).
+    /// Create an engine over an artifact directory with the default
+    /// (software) backend; compilation is lazy.
     pub fn new(artifact_dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        Self::with_backend(artifact_dir, BackendKind::Software)
+    }
+
+    /// Create an engine over an artifact directory with an explicit backend.
+    pub fn with_backend(
+        artifact_dir: impl AsRef<std::path::Path>,
+        kind: BackendKind,
+    ) -> Result<Self> {
         let manifest = Manifest::load(artifact_dir)?;
-        Ok(Engine { manifest, compiled: HashMap::new() })
+        let backend = kind.build()?;
+        Ok(Engine { manifest, kind, backend, planned: HashMap::new() })
     }
 
     /// The manifest this engine serves.
@@ -42,9 +50,14 @@ impl Engine {
         &self.manifest
     }
 
+    /// Which backend this engine executes through.
+    pub fn backend_kind(&self) -> &BackendKind {
+        &self.kind
+    }
+
     /// Backend name (diagnostics).
     pub fn platform(&self) -> String {
-        "software-bitslice (packed-plane GEMM interpreter)".to_string()
+        self.backend.platform()
     }
 
     /// Ensure `name` is compiled; returns compile time in seconds.
@@ -65,31 +78,25 @@ impl Engine {
     }
 
     fn ensure_compiled(&mut self, name: &str) -> Result<()> {
-        if self.compiled.contains_key(name) {
+        if self.planned.contains_key(name) {
             return Ok(());
         }
-        let meta = self.manifest.get(name)?;
-        let plan = Plan::compile(meta)?;
-        let inputs = meta.inputs.clone();
-        self.compiled.insert(name.to_string(), Compiled { plan, inputs });
+        let meta = self.manifest.get(name)?.clone();
+        self.backend.plan(&meta)?;
+        self.planned.insert(name.to_string(), meta.inputs);
         Ok(())
     }
 
-    /// Execute artifact `name` with positional int32 inputs.
-    ///
-    /// Each input must match the manifest spec's element count; outputs are
-    /// returned as flat row-major int32 vectors (one per output spec).
-    pub fn execute_i32(&mut self, name: &str, inputs: &[&[i32]]) -> Result<Vec<Vec<i32>>> {
-        self.ensure_compiled(name)?;
-        let c = &self.compiled[name];
-        if inputs.len() != c.inputs.len() {
+    fn validate(&self, name: &str, inputs: &[&[i32]]) -> Result<()> {
+        let specs = &self.planned[name];
+        if inputs.len() != specs.len() {
             return Err(Error::Shape(format!(
                 "{name}: {} inputs supplied, {} expected",
                 inputs.len(),
-                c.inputs.len()
+                specs.len()
             )));
         }
-        for (i, (buf, spec)) in inputs.iter().zip(&c.inputs).enumerate() {
+        for (i, (buf, spec)) in inputs.iter().zip(specs).enumerate() {
             if spec.dtype != DType::I32 {
                 return Err(Error::Shape(format!("{name}: input {i} is not i32")));
             }
@@ -102,13 +109,73 @@ impl Engine {
                 )));
             }
         }
-        let out = c.plan.execute(inputs)?;
+        Ok(())
+    }
+
+    /// Execute artifact `name` with positional int32 inputs, returning the
+    /// single flat output plus the backend's telemetry (if any).
+    ///
+    /// Each input must match the manifest spec's element count; the output
+    /// is a flat row-major int32 vector.
+    pub fn execute_reported(
+        &mut self,
+        name: &str,
+        inputs: &[&[i32]],
+    ) -> Result<(Vec<i32>, Option<ExecReport>)> {
+        self.ensure_compiled(name)?;
+        self.validate(name, inputs)?;
+        let ex = self.backend.execute_i32(name, inputs)?;
+        Ok((ex.output, ex.report))
+    }
+
+    /// Execute artifact `name` with positional int32 inputs; outputs are
+    /// returned as flat row-major int32 vectors (one per output spec).
+    pub fn execute_i32(&mut self, name: &str, inputs: &[&[i32]]) -> Result<Vec<Vec<i32>>> {
+        let (out, _report) = self.execute_reported(name, inputs)?;
         Ok(vec![out])
     }
 
     /// Convenience: single-output execution.
     pub fn execute_i32_single(&mut self, name: &str, inputs: &[&[i32]]) -> Result<Vec<i32>> {
         Ok(self.execute_i32(name, inputs)?.remove(0))
+    }
+
+    /// Execute an ad-hoc `m×k · k×n` GEMM through the backend (outside the
+    /// manifest) — the CNN serving path plans one synthetic artifact per
+    /// distinct layer shape and reuses it across requests.
+    pub fn execute_gemm_shape(
+        &mut self,
+        m: usize,
+        k: usize,
+        n: usize,
+        a: &[i32],
+        b: &[i32],
+    ) -> Result<(Vec<i32>, Option<ExecReport>)> {
+        if m == 0 || k == 0 || n == 0 {
+            return Err(Error::Shape(format!("degenerate GEMM {m}x{k}x{n}")));
+        }
+        let name = format!("__gemm/{m}x{k}x{n}");
+        if !self.planned.contains_key(&name) {
+            let spec = |r: usize, c: usize| TensorSpec { dtype: DType::I32, dims: vec![r, c] };
+            let meta = ArtifactMeta {
+                name: name.clone(),
+                file: "<synthetic>".to_string(),
+                inputs: vec![spec(m, k), spec(k, n)],
+                outputs: vec![spec(m, n)],
+            };
+            self.backend.plan(&meta)?;
+            self.planned.insert(name.clone(), meta.inputs);
+        }
+        self.validate(&name, &[a, b])?;
+        let ex = self.backend.execute_i32(&name, &[a, b])?;
+        Ok((ex.output, ex.report))
+    }
+
+    /// Backend telemetry for a GEMM shape without executing it (`None` for
+    /// digital backends). The CNN path uses this to price whole grouped
+    /// layers exactly as [`crate::sim::engine::simulate_frame`] would.
+    pub fn report_for(&mut self, shape: &GemmShape) -> Option<ExecReport> {
+        self.backend.report_for(shape)
     }
 }
 
@@ -118,6 +185,7 @@ mod tests {
     //! here we cover engine logic against a synthetic manifest directory.
 
     use super::*;
+    use crate::runtime::photonic::PhotonicConfig;
 
     #[test]
     fn missing_artifact_dir_is_artifact_error() {
@@ -147,6 +215,7 @@ mod tests {
         let dir = synthetic_dir("serve");
         let mut eng = Engine::new(&dir).unwrap();
         assert!(eng.platform().contains("software"));
+        assert_eq!(eng.backend_kind().label(), "software");
 
         // GEMM path: bit-exact vs the golden model.
         let a: Vec<i32> = (0..64).map(|v| (v * 7 % 255) - 127).collect();
@@ -184,6 +253,42 @@ mod tests {
         assert!(t2 < t1.max(0.01));
         eng.warmup_all().unwrap();
 
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn backend_choice_preserves_results_and_adds_telemetry() {
+        let dir = synthetic_dir("backend");
+        let mut sw = Engine::new(&dir).unwrap();
+        let mut ph =
+            Engine::with_backend(&dir, BackendKind::Photonic(PhotonicConfig::spoga())).unwrap();
+        assert!(ph.platform().contains("photonic"));
+
+        let a: Vec<i32> = (0..64).map(|v| (v * 13 % 251) - 125).collect();
+        let b: Vec<i32> = (0..64).map(|v| (v * 17 % 249) - 124).collect();
+        let (o_sw, r_sw) = sw.execute_reported("gemm_8x8x8", &[&a, &b]).unwrap();
+        let (o_ph, r_ph) = ph.execute_reported("gemm_8x8x8", &[&a, &b]).unwrap();
+        assert_eq!(o_sw, o_ph);
+        assert!(r_sw.is_none());
+        let r = r_ph.unwrap();
+        assert!(r.sim_latency_s > 0.0 && r.energy_j > 0.0);
+
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn adhoc_gemm_plans_once_and_validates() {
+        let dir = synthetic_dir("adhoc");
+        let mut eng = Engine::new(&dir).unwrap();
+        let a = vec![1i32, 2, 3, 4];
+        let b = vec![5i32, 6, 7, 8];
+        let (out, rep) = eng.execute_gemm_shape(2, 2, 2, &a, &b).unwrap();
+        assert_eq!(out, vec![19, 22, 43, 50]);
+        assert!(rep.is_none());
+        // Re-execute reuses the synthetic plan; wrong sizes are rejected.
+        assert!(eng.execute_gemm_shape(2, 2, 2, &a, &b).is_ok());
+        assert!(eng.execute_gemm_shape(2, 2, 2, &a[..3], &b).is_err());
+        assert!(eng.execute_gemm_shape(0, 2, 2, &a, &b).is_err());
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

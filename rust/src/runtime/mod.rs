@@ -1,4 +1,5 @@
-//! Execution runtime: load the AOT artifact manifest and execute artifacts.
+//! Execution runtime: load the AOT artifact manifest and execute artifacts
+//! through pluggable backends.
 //!
 //! Python never runs here — the artifacts are HLO **text** modules lowered
 //! once at build time by `make artifacts`; this module parses the manifest
@@ -7,23 +8,45 @@
 //!
 //! ## Backends
 //!
-//! The default (and currently only in-tree) backend is the **software
-//! interpreter** ([`software`]): artifacts are planned once from their
-//! manifest signature and executed through the packed bit-sliced GEMM fast
-//! path ([`crate::bitslice::kernel`]). That keeps the whole L3 serving stack
-//! — engine, coordinator, worker pool — runnable and numerically faithful
-//! to the golden model with **zero external dependencies**.
+//! Execution is backend-pluggable behind the [`ExecBackend`] trait
+//! ([`backend`]): an [`Engine`] owns a `Box<dyn ExecBackend>` selected by
+//! [`BackendKind`], and the whole L3 serving stack (coordinator, workers,
+//! handles) is backend-agnostic — [`crate::coordinator::CoordinatorConfig`]
+//! carries the `BackendKind` every worker builds its engine with. Two
+//! backends ship in-tree:
+//!
+//! * **Software** ([`software::SoftwareBackend`], the default): artifacts
+//!   are planned once from their manifest signature and executed through
+//!   the packed bit-sliced GEMM fast path ([`crate::bitslice::kernel`]).
+//!   Bit-exact to the golden model, zero external dependencies.
+//! * **Photonic** ([`photonic::PhotonicBackend`]): the *same* bit-exact
+//!   plans, but every execute also prices the artifact's GEMM shape on a
+//!   simulated accelerator ([`crate::sim`] + [`crate::arch::cost`]) and
+//!   attaches an [`ExecReport`] (projected latency, energy, lanes) to the
+//!   response — photonic-in-the-loop serving. Optional [`crate::fidelity`]
+//!   noise injection replaces exact integers with analog-observed ones.
+//!
+//! Whole CNN inferences are served by [`cnnrun::run_cnn`], which drives a
+//! [`crate::dnn::CnnModel`] through im2col layer by layer over any backend.
 //!
 //! A PJRT backend (the `xla` crate compiling the HLO text on a CPU client)
-//! previously occupied this slot and can return behind a cargo feature once
-//! the dependency is vendored; the [`Engine`] API (compile-once
-//! `warmup`/`execute_i32` with manifest-driven validation) is shaped so the
-//! swap is invisible to callers, and each coordinator worker still owns its
-//! own engine exactly as a thread-affine PJRT client would require.
+//! previously occupied the software slot and can return as a third
+//! `ExecBackend` behind a cargo feature once the dependency is vendored;
+//! the trait surface (compile-once `plan`, validated `execute_i32`) is
+//! shaped so the swap is invisible to callers, and each coordinator worker
+//! still owns its own engine exactly as a thread-affine PJRT client would
+//! require.
 
 pub mod artifact;
+pub mod backend;
+pub mod cnnrun;
 pub mod engine;
+pub mod photonic;
 pub mod software;
 
 pub use artifact::{ArtifactMeta, Manifest, TensorSpec};
+pub use backend::{BackendExec, BackendKind, ExecBackend, ExecReport};
+pub use cnnrun::{run_cnn, validate_cnn_input, CnnRun, LayerReport};
 pub use engine::Engine;
+pub use photonic::{PhotonicBackend, PhotonicConfig};
+pub use software::SoftwareBackend;

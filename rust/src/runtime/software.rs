@@ -28,8 +28,11 @@
 //! agreement, determinism, zero-input → zero-logits) is preserved, which is
 //! what the integration suites assert.
 
+use std::collections::HashMap;
+
 use crate::bitslice;
 use crate::runtime::artifact::ArtifactMeta;
+use crate::runtime::backend::{BackendExec, ExecBackend};
 use crate::testing::SplitMix64;
 use crate::{Error, Result};
 
@@ -121,9 +124,48 @@ impl Plan {
     }
 }
 
+/// The software execution backend: a plan cache over [`Plan`], bit-exact to
+/// the bitslice golden model, with no photonic telemetry.
+///
+/// This is [`crate::runtime::BackendKind::Software`] — the default backend
+/// for engines and coordinator workers.
+#[derive(Debug, Default)]
+pub struct SoftwareBackend {
+    plans: HashMap<String, Plan>,
+}
+
+impl SoftwareBackend {
+    /// New backend with an empty plan cache.
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl ExecBackend for SoftwareBackend {
+    fn platform(&self) -> String {
+        "software-bitslice (packed-plane GEMM interpreter)".to_string()
+    }
+
+    fn plan(&mut self, meta: &ArtifactMeta) -> Result<()> {
+        if self.plans.contains_key(&meta.name) {
+            return Ok(());
+        }
+        self.plans.insert(meta.name.clone(), Plan::compile(meta)?);
+        Ok(())
+    }
+
+    fn execute_i32(&mut self, name: &str, inputs: &[&[i32]]) -> Result<BackendExec> {
+        let plan = self
+            .plans
+            .get(name)
+            .ok_or_else(|| Error::Runtime(format!("{name}: artifact not planned")))?;
+        Ok(BackendExec { output: plan.execute(inputs)?, report: None })
+    }
+}
+
 /// Wire format carries int8 values in i32 lanes; recover them (wrapping, as
 /// the AOT kernels' `convert` does).
-fn wire_to_i8(wire: &[i32]) -> Vec<i8> {
+pub(crate) fn wire_to_i8(wire: &[i32]) -> Vec<i8> {
     wire.iter().map(|&v| v as i8).collect()
 }
 
@@ -199,5 +241,19 @@ mod tests {
     fn surrogate_weights_deterministic_and_signature_keyed() {
         assert_eq!(surrogate_weights(8, 3), surrogate_weights(8, 3));
         assert_ne!(surrogate_weights(8, 3), surrogate_weights(3, 8));
+    }
+
+    #[test]
+    fn backend_plans_and_executes_by_name() {
+        let mut be = SoftwareBackend::new();
+        let m = meta("gemm_2x2x2 g.hlo.txt i32:2x2,i32:2x2 i32:2x2");
+        assert!(be.execute_i32("gemm_2x2x2", &[&[], &[]]).is_err());
+        be.plan(&m).unwrap();
+        be.plan(&m).unwrap(); // idempotent
+        let a = vec![1i32, 2, 3, 4];
+        let ex = be.execute_i32("gemm_2x2x2", &[&a, &a]).unwrap();
+        assert_eq!(ex.output, vec![7, 10, 15, 22]);
+        assert!(ex.report.is_none());
+        assert!(be.platform().contains("software"));
     }
 }

@@ -2,7 +2,8 @@
 
 use crate::arch::accel::Accelerator;
 use crate::arch::cost::EnergyBreakdown;
-use crate::dnn::workload::Workload;
+use crate::dnn::layer::GemmShape;
+use crate::dnn::workload::{GemmOp, Workload};
 use crate::sim::stats::{FrameStats, LayerStats};
 
 /// Simulation engine over one accelerator.
@@ -64,6 +65,18 @@ impl SimEngine {
             energy: total_energy,
             layers,
         }
+    }
+
+    /// Price a single GEMM shape: a one-op frame, so the result is exactly
+    /// the layer record [`Self::frame`] would produce for the same shape.
+    /// The photonic serving backend derives its per-request telemetry here,
+    /// which is what keeps live `ExecReport`s and offline `simulate_frame`
+    /// studies bit-consistent.
+    pub fn gemm_frame(&self, shape: &GemmShape) -> FrameStats {
+        self.frame(&Workload {
+            model: "gemm".to_string(),
+            ops: vec![GemmOp { layer: "gemm".to_string(), shape: *shape }],
+        })
     }
 }
 

@@ -1,0 +1,230 @@
+//! Integration: the pluggable-backend matrix.
+//!
+//! Runs entirely against a synthetic artifact manifest (the software and
+//! photonic backends plan from manifest signatures alone), so these tests
+//! never skip — unlike the `make artifacts` suites.
+//!
+//! Pins the PR's contract:
+//! * software and photonic backends return **bit-identical** GEMM / MLP /
+//!   CNN results, per-coordinator-configurable via `CoordinatorConfig`;
+//! * photonic responses carry nonzero `sim_latency_s` / `energy_j`;
+//! * `Job::Cnn` serves whole im2col inferences and its per-layer telemetry
+//!   is consistent with `sim::simulate_frame` for the same accelerator.
+
+use std::path::PathBuf;
+
+use spoga::arch::accel::Accelerator;
+use spoga::coordinator::{Coordinator, CoordinatorConfig};
+use spoga::dnn::models::CnnModel;
+use spoga::dnn::Layer;
+use spoga::fidelity::NoiseParams;
+use spoga::optics::link_budget::ArchClass;
+use spoga::runtime::{BackendKind, PhotonicConfig};
+use spoga::sim::engine::simulate_frame;
+use spoga::testing::SplitMix64;
+use spoga::units::DataRate;
+
+const MANIFEST: &str = "\
+gemm_8x8x8 g.hlo.txt i32:8x8,i32:8x8 i32:8x8
+mlp_b1 m1.hlo.txt i32:1x16 i32:1x4
+mlp_b4 m4.hlo.txt i32:4x16 i32:4x4
+";
+
+fn synthetic_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("spoga-backend-matrix-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.txt"), MANIFEST).unwrap();
+    dir
+}
+
+fn cfg(dir: &PathBuf, backend: BackendKind) -> CoordinatorConfig {
+    CoordinatorConfig {
+        artifact_dir: dir.to_string_lossy().into_owned(),
+        workers: 2,
+        backend,
+        max_batch_wait_s: 0.002,
+        ..Default::default()
+    }
+}
+
+fn wire(rng: &mut SplitMix64, len: usize) -> Vec<i32> {
+    (0..len).map(|_| rng.i8() as i32).collect()
+}
+
+fn tiny_cnn() -> CnnModel {
+    CnnModel {
+        name: "tiny_serve",
+        layers: vec![
+            Layer::conv("stem", 8, 8, 3, 8, 3, 1, 1),
+            Layer::dwconv("dw", 8, 8, 8, 3, 2, 1),
+            Layer::fc("head", 4 * 4 * 8, 10),
+        ],
+    }
+}
+
+#[test]
+fn software_and_photonic_coordinators_agree_bit_for_bit() {
+    let dir = synthetic_dir("agree");
+    let sw = Coordinator::start(cfg(&dir, BackendKind::Software)).unwrap();
+    let ph =
+        Coordinator::start(cfg(&dir, BackendKind::Photonic(PhotonicConfig::spoga()))).unwrap();
+    let (hs, hp) = (sw.handle(), ph.handle());
+
+    let mut rng = SplitMix64::new(0xBEEF);
+    // GEMM requests: identical outputs, photonic telemetry nonzero.
+    for _ in 0..4 {
+        let (a, b) = (wire(&mut rng, 64), wire(&mut rng, 64));
+        let rs = hs.gemm_reply("gemm_8x8x8", a.clone(), b.clone()).unwrap();
+        let rp = hp.gemm_reply("gemm_8x8x8", a, b).unwrap();
+        assert_eq!(rs.outputs, rp.outputs, "backends disagree on GEMM");
+        assert!(rs.report.is_none(), "software backend must not report telemetry");
+        let r = rp.report.expect("photonic backend must report telemetry");
+        assert!(r.sim_latency_s > 0.0, "sim_latency_s = {}", r.sim_latency_s);
+        assert!(r.energy_j > 0.0, "energy_j = {}", r.energy_j);
+        assert_eq!(r.lanes, 64);
+        assert_eq!(r.noise_events, 0, "noise off by default");
+    }
+
+    // MLP rows: identical logits through the dynamic batcher.
+    for t in 0..8 {
+        let row: Vec<i32> = (0..16).map(|v| (v * 7 + t) % 100).collect();
+        let ls = hs.infer_mlp(row.clone()).unwrap();
+        let lp = hp.infer_mlp(row).unwrap();
+        assert_eq!(ls, lp, "backends disagree on MLP row {t}");
+    }
+
+    // Photonic stats aggregated live telemetry; software did not.
+    assert!(hp.stats().sim_fps() > 0.0);
+    assert!(hp.stats().sim_fps_per_w() > 0.0);
+    assert_eq!(
+        hs.stats().sim_reports.load(std::sync::atomic::Ordering::Relaxed),
+        0
+    );
+
+    sw.shutdown();
+    ph.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn cnn_job_end_to_end_with_simulator_consistent_telemetry() {
+    let dir = synthetic_dir("cnn");
+    let model = tiny_cnn();
+    let input: Vec<i32> = {
+        let mut rng = SplitMix64::new(2024);
+        wire(&mut rng, 8 * 8 * 3)
+    };
+
+    let sw = Coordinator::start(cfg(&dir, BackendKind::Software)).unwrap();
+    let ph =
+        Coordinator::start(cfg(&dir, BackendKind::Photonic(PhotonicConfig::spoga()))).unwrap();
+
+    let reply_sw = sw.handle().infer_cnn(model.clone(), input.clone()).unwrap();
+    let reply_ph = ph.handle().infer_cnn(model.clone(), input.clone()).unwrap();
+
+    // Full inference served; bit-identical logits across backends.
+    assert_eq!(reply_sw.outputs.len(), 10);
+    assert_eq!(reply_sw.outputs, reply_ph.outputs);
+    assert!(reply_sw.report.is_none() && reply_sw.layers.is_empty());
+
+    // Per-layer telemetry must match the offline simulator exactly: the
+    // photonic backend prices each layer's grouped GEMM through the same
+    // SimEngine that simulate_frame uses.
+    let pc = PhotonicConfig::spoga();
+    let accel = Accelerator::equal_cores(pc.arch, pc.rate, pc.cores).unwrap();
+    let frame = simulate_frame(&accel, &model.workload());
+    assert_eq!(reply_ph.layers.len(), frame.layers.len());
+    for (served, simmed) in reply_ph.layers.iter().zip(&frame.layers) {
+        assert_eq!(served.layer, simmed.layer);
+        let rel = |a: f64, b: f64| (a - b).abs() / b.abs().max(1e-300);
+        assert!(
+            rel(served.report.sim_latency_s, simmed.latency_s) < 1e-12,
+            "{}: served latency {} vs simulated {}",
+            served.layer,
+            served.report.sim_latency_s,
+            simmed.latency_s
+        );
+        assert!(
+            rel(served.report.energy_j, simmed.energy.total_j()) < 1e-12,
+            "{}: served energy {} vs simulated {}",
+            served.layer,
+            served.report.energy_j,
+            simmed.energy.total_j()
+        );
+    }
+    // ... and the aggregate matches the whole frame.
+    let agg = reply_ph.report.unwrap();
+    assert!((agg.sim_latency_s - frame.latency_s).abs() / frame.latency_s < 1e-12);
+    assert!((agg.energy_j - frame.energy.total_j()).abs() / frame.energy.total_j() < 1e-12);
+    assert_eq!(agg.lanes, model.workload().total_outputs());
+
+    // Stats counted the CNN frame.
+    let stats = ph.handle();
+    assert_eq!(stats.stats().cnn_frames.load(std::sync::atomic::Ordering::Relaxed), 1);
+
+    // Chain validation rejects bad inputs at submit time.
+    assert!(sw.handle().submit_cnn(model.clone(), vec![0; 7]).is_err());
+
+    sw.shutdown();
+    ph.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn cnn_trace_submission_and_baseline_comparison() {
+    let dir = synthetic_dir("trace");
+    const TRACE: &str = "\
+model edge_tiny
+conv stem 8 8 3 8 3 1 1 1
+fc head 512 10
+";
+    let input = vec![3i32; 8 * 8 * 3];
+
+    // Same traffic, three accelerator design points — the live A/B the
+    // tentpole exists for.
+    let mut energies = Vec::new();
+    for pc in [PhotonicConfig::spoga(), PhotonicConfig::holylight(), PhotonicConfig::deapcnn()] {
+        let c = Coordinator::start(cfg(&dir, BackendKind::Photonic(pc))).unwrap();
+        let reply = c
+            .handle()
+            .submit_cnn_trace(TRACE, input.clone())
+            .unwrap()
+            .recv()
+            .unwrap()
+            .unwrap();
+        energies.push(reply.report.unwrap().energy_j);
+        c.shutdown();
+    }
+    // SPOGA's conversion chain (3 O/E + 1 ADC, no DEAS/SRAM) must beat the
+    // baselines on energy for identical traffic.
+    assert!(energies[0] < energies[1], "SPOGA {} vs HOLYLIGHT {}", energies[0], energies[1]);
+    assert!(energies[0] < energies[2], "SPOGA {} vs DEAPCNN {}", energies[0], energies[2]);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn noise_injected_backend_reports_noise_events() {
+    let dir = synthetic_dir("noise");
+    let noisy = PhotonicConfig::spoga().with_noise(NoiseParams::from_link_margin(0.0), 7);
+    let c = Coordinator::start(cfg(&dir, BackendKind::Photonic(noisy))).unwrap();
+    let h = c.handle();
+    let mut rng = SplitMix64::new(1);
+    let (a, b) = (wire(&mut rng, 64), wire(&mut rng, 64));
+    let reply = h.gemm_reply("gemm_8x8x8", a, b).unwrap();
+    let r = reply.report.unwrap();
+    assert!(r.noise_events > 0, "0 dB margin on K=8 must perturb outputs");
+    assert!(h.stats().noise_events.load(std::sync::atomic::Ordering::Relaxed) > 0);
+    c.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn photonic_backend_matches_equivalent_simulated_accelerator_classes() {
+    // Sanity on the config plumbing: the three presets really map to the
+    // three ArchClass design points.
+    assert!(matches!(PhotonicConfig::spoga().arch, ArchClass::Mwa));
+    assert!(matches!(PhotonicConfig::holylight().arch, ArchClass::Maw));
+    assert!(matches!(PhotonicConfig::deapcnn().arch, ArchClass::Amw));
+    assert_eq!(PhotonicConfig::spoga().rate, DataRate::Gs10);
+}

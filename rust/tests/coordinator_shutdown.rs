@@ -1,0 +1,155 @@
+//! Integration: coordinator shutdown under in-flight load.
+//!
+//! Submits a burst from concurrent clients, calls `shutdown()` mid-stream,
+//! and asserts that **every** reply slot resolves — either with a result or
+//! with a shutdown error — and that the coordinator's threads are joined
+//! (no leaks, no panics). Runs against a synthetic manifest so it never
+//! skips.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use spoga::coordinator::{Coordinator, CoordinatorConfig, Response};
+
+fn synthetic_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("spoga-shutdown-test-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(
+        dir.join("manifest.txt"),
+        "gemm_8x8x8 g.hlo.txt i32:8x8,i32:8x8 i32:8x8\n\
+         mlp_b1 m1.hlo.txt i32:1x16 i32:1x4\n\
+         mlp_b8 m8.hlo.txt i32:8x16 i32:8x4\n",
+    )
+    .unwrap();
+    dir
+}
+
+/// A resolved slot: the receive returned (value or error) without timing
+/// out. A `Disconnected` slot only happens in the narrow race where a job
+/// entered the queue as the leader exited; it still resolves the caller's
+/// wait immediately (the convenience wrappers map it to a coordinator
+/// error), so it counts as an error resolution, never a hang.
+fn resolve(rx: Response) -> &'static str {
+    match rx.recv_timeout(Duration::from_secs(30)) {
+        Ok(Ok(_)) => "ok",
+        Ok(Err(_)) => "err",
+        Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => "err",
+        Err(std::sync::mpsc::RecvTimeoutError::Timeout) => panic!("reply slot never resolved"),
+    }
+}
+
+#[test]
+fn shutdown_mid_burst_resolves_every_reply_slot() {
+    let dir = synthetic_dir("burst");
+    let c = Coordinator::start(CoordinatorConfig {
+        artifact_dir: dir.to_string_lossy().into_owned(),
+        workers: 2,
+        max_batch_wait_s: 0.004, // a real window so rows are in flight
+        ..Default::default()
+    })
+    .unwrap();
+    let h = c.handle();
+
+    // Clients hammer the queue from multiple threads while the main thread
+    // shuts the coordinator down mid-stream.
+    let clients = 4usize;
+    let per_client = 64usize;
+    let submitted = Arc::new(AtomicUsize::new(0));
+    let rejected = Arc::new(AtomicUsize::new(0));
+    let mut joins = Vec::new();
+    for cl in 0..clients {
+        let h = h.clone();
+        let submitted = submitted.clone();
+        let rejected = rejected.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut slots: Vec<Response> = Vec::new();
+            for i in 0..per_client {
+                let row: Vec<i32> = (0..16).map(|v| ((cl + i + v) % 100) as i32).collect();
+                match h.submit_mlp(row) {
+                    Ok(rx) => {
+                        submitted.fetch_add(1, Ordering::Relaxed);
+                        slots.push(rx);
+                    }
+                    // Submissions racing past shutdown fail fast — also a
+                    // resolution, not a hang.
+                    Err(_) => {
+                        rejected.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+            slots
+        }));
+    }
+
+    // Let part of the burst land, then pull the plug.
+    std::thread::sleep(Duration::from_millis(2));
+    c.shutdown(); // joins leader, which drains + joins workers
+
+    let mut ok = 0usize;
+    let mut err = 0usize;
+    for j in joins {
+        for rx in j.join().expect("client thread must not panic") {
+            match resolve(rx) {
+                "ok" => ok += 1,
+                _ => err += 1,
+            }
+        }
+    }
+    let sub = submitted.load(Ordering::Relaxed);
+    let rej = rejected.load(Ordering::Relaxed);
+    assert_eq!(ok + err, sub, "every accepted request resolves exactly once");
+    assert_eq!(sub + rej, clients * per_client, "every submission accounted for");
+
+    // After shutdown the handle reports a closed coordinator immediately.
+    assert!(h.submit_mlp(vec![0; 16]).is_err());
+    assert!(h.infer_mlp(vec![0; 16]).is_err());
+
+    // Sanity: the run really was mid-stream (some work completed or failed,
+    // and nothing hung to get here).
+    let s = h.stats();
+    let completed = s.completed.load(Ordering::Relaxed) as usize;
+    assert!(completed <= sub);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn repeated_start_shutdown_cycles_are_clean() {
+    let dir = synthetic_dir("cycles");
+    for cycle in 0..3 {
+        let c = Coordinator::start(CoordinatorConfig {
+            artifact_dir: dir.to_string_lossy().into_owned(),
+            workers: 1,
+            max_batch_wait_s: 0.0,
+            ..Default::default()
+        })
+        .unwrap();
+        let h = c.handle();
+        let out = h.infer_mlp(vec![cycle as i32; 16]).unwrap();
+        assert_eq!(out.len(), 4);
+        c.shutdown();
+        assert!(h.submit_mlp(vec![0; 16]).is_err(), "cycle {cycle} left a live leader");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn drop_without_explicit_shutdown_joins_threads() {
+    let dir = synthetic_dir("drop");
+    let h = {
+        let c = Coordinator::start(CoordinatorConfig {
+            artifact_dir: dir.to_string_lossy().into_owned(),
+            workers: 2,
+            ..Default::default()
+        })
+        .unwrap();
+        let h = c.handle();
+        h.infer_mlp(vec![1; 16]).unwrap();
+        h
+        // `c` drops here: Drop sends Shutdown and joins the leader.
+    };
+    assert!(h.submit_mlp(vec![0; 16]).is_err());
+    let _ = std::fs::remove_dir_all(&dir);
+}
