@@ -1,0 +1,205 @@
+//! Bench: fleet throughput scaling over shard count and routing policy.
+//!
+//! Measures the same mixed MLP + GEMM + CNN client load against fleets of
+//! 1, 2 and 4 software shards (round-robin), plus a 2-shard
+//! software|photonic weighted split — the question: how much serving
+//! throughput does each added coordinator shard buy on this host, and what
+//! does heterogeneous A/B routing cost?
+//!
+//! Self-contained (synthetic manifest in a temp dir; no `make artifacts`).
+//! Results print as a table and are written as JSON (default
+//! `BENCH_fleet.json`, override with the `FLEET_BENCH_OUT` env var).
+//!
+//! Run: `cargo bench --bench fleet_scaling [requests]`
+
+use std::sync::atomic::Ordering;
+use std::time::Instant;
+
+use spoga::coordinator::{
+    CoordinatorConfig, Fleet, FleetConfig, FleetHandle, RoutePolicy,
+};
+use spoga::dnn::models::CnnModel;
+use spoga::dnn::Layer;
+use spoga::report::{fmt_sig, Table};
+use spoga::runtime::{BackendKind, PhotonicConfig};
+use spoga::testing::SplitMix64;
+
+struct FleetResult {
+    label: String,
+    shards: usize,
+    req_per_s: f64,
+    p99_us: f64,
+    cnn_batches: u64,
+}
+
+fn synthetic_artifacts() -> std::path::PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("spoga-fleet-bench-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("temp artifact dir");
+    std::fs::write(
+        dir.join("manifest.txt"),
+        "gemm_64x64x64 gemm.hlo.txt i32:64x64,i32:64x64 i32:64x64\n\
+         mlp_b1 mlp_b1.hlo.txt i32:1x784 i32:1x10\n\
+         mlp_b8 mlp_b8.hlo.txt i32:8x784 i32:8x10\n\
+         mlp_b32 mlp_b32.hlo.txt i32:32x784 i32:32x10\n",
+    )
+    .expect("write manifest");
+    dir
+}
+
+fn edge_cnn() -> CnnModel {
+    CnnModel {
+        name: "edge_net",
+        layers: vec![
+            Layer::conv("stem", 16, 16, 3, 16, 3, 2, 1),
+            Layer::dwconv("dw1", 8, 8, 16, 3, 1, 1),
+            Layer::conv("pw1", 8, 8, 16, 32, 1, 1, 0),
+            Layer::fc("head", 8 * 8 * 32, 10),
+        ],
+    }
+}
+
+fn drive(h: &FleetHandle, requests: usize, model: &CnnModel) -> f64 {
+    let clients = 8usize;
+    let per = (requests / clients).max(1);
+    let t0 = Instant::now();
+    let joins: Vec<_> = (0..clients)
+        .map(|cl| {
+            let h = h.clone();
+            let model = model.clone();
+            std::thread::spawn(move || {
+                let mut rng = SplitMix64::new(cl as u64 + 1);
+                let cnn_input: Vec<i32> = (0..16 * 16 * 3).map(|v| (v % 251) - 125).collect();
+                for i in 0..per {
+                    let row: Vec<i32> = (0..784).map(|_| rng.below(128) as i32).collect();
+                    h.infer_mlp(row).expect("mlp");
+                    if i % 4 == 0 {
+                        let a: Vec<i32> = (0..64 * 64).map(|_| rng.i8() as i32).collect();
+                        let b: Vec<i32> = (0..64 * 64).map(|_| rng.i8() as i32).collect();
+                        h.gemm("gemm_64x64x64", a, b).expect("gemm");
+                    }
+                    if i % 8 == 0 {
+                        h.infer_cnn(model.clone(), cnn_input.clone()).expect("cnn");
+                    }
+                }
+            })
+        })
+        .collect();
+    joins.into_iter().for_each(|j| j.join().unwrap());
+    t0.elapsed().as_secs_f64()
+}
+
+fn bench_fleet(
+    label: &str,
+    cfg: FleetConfig,
+    requests: usize,
+    model: &CnnModel,
+) -> FleetResult {
+    let shards = cfg.shards.len();
+    let fleet = Fleet::start(cfg).expect("fleet");
+    let h = fleet.handle();
+    // Warm the pipeline before timing.
+    h.infer_mlp(vec![0; 784]).expect("warm");
+
+    let wall = drive(&h, requests, model);
+    let t = h.telemetry();
+    let served = t.completed();
+    let p99 = (0..h.shard_count())
+        .map(|i| h.shard_stats(i).latency_percentile(0.99))
+        .fold(0.0f64, f64::max);
+    let cnn_batches = (0..h.shard_count())
+        .map(|i| h.shard_stats(i).cnn_batches.load(Ordering::Relaxed))
+        .sum();
+    assert_eq!(t.failed(), 0, "{label}: failures under load");
+    let res = FleetResult {
+        label: label.to_string(),
+        shards,
+        req_per_s: served as f64 / wall,
+        p99_us: p99 * 1e6,
+        cnn_batches,
+    };
+    fleet.shutdown();
+    res
+}
+
+fn main() {
+    let requests: usize =
+        std::env::args().nth(1).and_then(|v| v.parse().ok()).unwrap_or(512);
+    let dir = synthetic_artifacts();
+    let artifact_dir = dir.to_string_lossy().into_owned();
+    let model = edge_cnn();
+    let shard = |backend: BackendKind| CoordinatorConfig {
+        artifact_dir: artifact_dir.clone(),
+        workers: 2,
+        backend,
+        max_batch_wait_s: 0.002,
+        ..Default::default()
+    };
+    println!("fleet scaling: mixed MLP/GEMM/CNN load, 8 clients, {requests} rows base\n");
+
+    let mut results = Vec::new();
+    for n in [1usize, 2, 4] {
+        results.push(bench_fleet(
+            &format!("software_x{n}"),
+            FleetConfig::replicated(shard(BackendKind::Software), n),
+            requests,
+            &model,
+        ));
+    }
+    results.push(bench_fleet(
+        "software|spoga_1to1",
+        FleetConfig::ab_split(
+            shard(BackendKind::Software),
+            shard(BackendKind::Photonic(PhotonicConfig::spoga())),
+            1,
+            1,
+        ),
+        requests,
+        &model,
+    ));
+
+    let mut t = Table::new(vec![
+        "Fleet",
+        "shards",
+        "req/s",
+        "p99 µs",
+        "stacked CNN batches",
+    ]);
+    for r in &results {
+        t.row(vec![
+            r.label.clone(),
+            r.shards.to_string(),
+            fmt_sig(r.req_per_s, 3),
+            format!("{:.0}", r.p99_us),
+            r.cnn_batches.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    let speedup = results[2].req_per_s / results[0].req_per_s.max(1e-9);
+    println!("scaling: 4 shards serve {speedup:.2}x the 1-shard rate\n");
+
+    // ---- JSON trajectory record ---------------------------------------------
+    let out_path = std::env::var("FLEET_BENCH_OUT")
+        .unwrap_or_else(|_| "BENCH_fleet.json".to_string());
+    let rows: Vec<String> = results
+        .iter()
+        .map(|r| {
+            format!(
+                "    {{\"fleet\": \"{}\", \"shards\": {}, \"req_per_s\": {:.1}, \
+                 \"p99_us\": {:.1}, \"cnn_batches\": {}}}",
+                r.label, r.shards, r.req_per_s, r.p99_us, r.cnn_batches
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"fleet_scaling\",\n  \"requests\": {requests},\n  \
+         \"workload\": \"784-feature MLP rows + 64^3 GEMMs + edge_net CNN frames (8 clients)\",\n  \
+         \"status\": \"measured\",\n  \"results\": [\n{}\n  ]\n}}\n",
+        rows.join(",\n")
+    );
+    match std::fs::write(&out_path, &json) {
+        Ok(()) => println!("wrote {out_path}"),
+        Err(e) => eprintln!("could not write {out_path}: {e}"),
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -3,8 +3,18 @@
 //! MLP rows are packed into the largest AOT batch variant that the pending
 //! queue fills (or the batching window expires on). Remainders pad with
 //! zero rows — exact for the integer models and invisible to callers.
+//!
+//! CNN frames batch too: same-model frames gathered in the window stack
+//! along the t-dimension into a [`CnnMicroBatch`] and execute their im2col
+//! GEMMs once per layer group via
+//! [`run_cnn_batch`](crate::runtime::cnnrun::run_cnn_batch). No padding is
+//! needed — the stacked GEMM's row count is exactly the member frames'
+//! combined im2col rows, and row independence keeps every member bit-exact.
 
-use crate::coordinator::request::MlpJob;
+use crate::coordinator::request::{CnnJob, MlpJob};
+use crate::dnn::models::CnnModel;
+use crate::runtime::cnnrun::CnnRun;
+use crate::{Error, Result};
 
 /// Batch-formation policy over the available AOT batch variants.
 #[derive(Debug, Clone)]
@@ -16,10 +26,18 @@ pub struct BatchPolicy {
 }
 
 impl BatchPolicy {
-    /// Policy over `variants` (must be non-empty, ascending batch sizes).
-    pub fn new(variants: Vec<(String, usize)>, max_wait_s: f64) -> Self {
-        debug_assert!(!variants.is_empty());
-        BatchPolicy { variants, max_wait_s }
+    /// Policy over `variants` (ascending batch sizes). An empty variant set
+    /// is a configuration error in release builds too — not just a
+    /// `debug_assert` — so a coordinator misconfigured against a manifest
+    /// with no `mlp_b*` artifacts fails at construction, not on the first
+    /// batch.
+    pub fn new(variants: Vec<(String, usize)>, max_wait_s: f64) -> Result<Self> {
+        if variants.is_empty() {
+            return Err(Error::Coordinator(
+                "batch policy needs at least one mlp batch variant".into(),
+            ));
+        }
+        Ok(BatchPolicy { variants, max_wait_s })
     }
 
     /// Largest variant batch size.
@@ -76,10 +94,58 @@ impl MicroBatch {
         }
     }
 
-    /// Fail every member (worker error path).
+    /// Fail every member with a request-level error (worker error path).
     pub fn fail(self, msg: &str) {
+        self.fail_with(|| crate::Error::Coordinator(msg.to_string()));
+    }
+
+    /// Fail every member with a caller-chosen error (the dead-worker path
+    /// uses [`crate::Error::ShardDown`] so the fleet router can tell shard
+    /// death from request failures).
+    pub fn fail_with(self, mk: impl Fn() -> crate::Error) {
         for j in self.jobs {
-            let _ = j.reply.send(Err(crate::Error::Coordinator(msg.to_string())));
+            let _ = j.reply.send(Err(mk()));
+        }
+    }
+}
+
+/// A formed same-model CNN micro-batch: the member frames stack along the
+/// t-dimension and execute their layer GEMMs together, one plan lookup and
+/// one kernel launch per layer group for the whole batch.
+#[derive(Debug)]
+pub struct CnnMicroBatch {
+    /// The shared network (member jobs all submitted an equal model).
+    pub model: CnnModel,
+    /// Member jobs, order preserved (frame i of the batch belongs to
+    /// jobs[i]).
+    pub jobs: Vec<CnnJob>,
+}
+
+impl CnnMicroBatch {
+    /// Deliver per-frame runs to their owners. `runs` comes from
+    /// [`run_cnn_batch`](crate::runtime::cnnrun::run_cnn_batch) over the
+    /// members' inputs in job order, so `runs[i]` belongs to `jobs[i]`.
+    pub fn deliver(self, runs: Vec<CnnRun>) {
+        debug_assert_eq!(runs.len(), self.jobs.len());
+        for (j, run) in self.jobs.into_iter().zip(runs) {
+            let _ = j.reply.send(Ok(crate::coordinator::request::Reply {
+                outputs: run.logits,
+                report: run.report,
+                layers: run.layers,
+            }));
+        }
+    }
+
+    /// Fail every member with a request-level error (worker error path).
+    pub fn fail(self, msg: &str) {
+        self.fail_with(|| crate::Error::Coordinator(msg.to_string()));
+    }
+
+    /// Fail every member with a caller-chosen error (see
+    /// [`MicroBatch::fail_with`]).
+    pub fn fail_with(self, mk: impl Fn() -> crate::Error) {
+        for j in self.jobs {
+            let _ = j.reply.send(Err(mk()));
         }
     }
 }
@@ -95,11 +161,21 @@ mod tests {
             vec![("mlp_b1".into(), 1), ("mlp_b8".into(), 8), ("mlp_b32".into(), 32)],
             0.001,
         )
+        .unwrap()
     }
 
     fn job(v: i32) -> (MlpJob, crate::coordinator::request::Response) {
         let (tx, rx) = response_slot();
         (MlpJob { row: vec![v; 4], reply: tx, enqueued: Instant::now() }, rx)
+    }
+
+    #[test]
+    fn empty_variant_set_is_a_coordinator_error() {
+        let err = BatchPolicy::new(Vec::new(), 0.001).unwrap_err();
+        match err {
+            Error::Coordinator(msg) => assert!(msg.contains("variant"), "{msg}"),
+            other => panic!("wrong error kind: {other}"),
+        }
     }
 
     #[test]
@@ -109,8 +185,22 @@ mod tests {
         assert_eq!(p.pick_variant(2).1, 8);
         assert_eq!(p.pick_variant(8).1, 8);
         assert_eq!(p.pick_variant(9).1, 32);
-        assert_eq!(p.pick_variant(100).1, 32); // clamps to largest
         assert_eq!(p.max_batch(), 32);
+    }
+
+    #[test]
+    fn pick_variant_with_pending_beyond_max_clamps_to_largest() {
+        let p = policy();
+        // pending > every variant: the largest variant serves the first 32
+        // rows and the leader loops for the remainder.
+        for pending in [33, 64, 1000, usize::MAX] {
+            let (name, batch) = p.pick_variant(pending);
+            assert_eq!((name.as_str(), *batch), ("mlp_b32", 32));
+        }
+        // A single-variant policy clamps everything to that variant.
+        let single = BatchPolicy::new(vec![("mlp_b4".into(), 4)], 0.0).unwrap();
+        assert_eq!(single.pick_variant(100).1, 4);
+        assert_eq!(single.max_batch(), 4);
     }
 
     #[test]
@@ -145,6 +235,52 @@ mod tests {
         let (j2, r2) = job(2);
         let mb = MicroBatch { artifact: "mlp_b8".into(), batch: 8, jobs: vec![j1, j2] };
         mb.fail("boom");
+        assert!(r1.recv().unwrap().is_err());
+        assert!(r2.recv().unwrap().is_err());
+    }
+
+    fn cnn_job(model: &CnnModel, fill: i32) -> (CnnJob, crate::coordinator::request::Response) {
+        let (tx, rx) = response_slot();
+        (
+            CnnJob {
+                model: model.clone(),
+                input: vec![fill; 6 * 6 * 3],
+                reply: tx,
+                enqueued: Instant::now(),
+            },
+            rx,
+        )
+    }
+
+    fn tiny_model() -> CnnModel {
+        CnnModel {
+            name: "tiny",
+            layers: vec![crate::dnn::layer::Layer::fc("head", 6 * 6 * 3, 5)],
+        }
+    }
+
+    #[test]
+    fn cnn_batch_delivery_routes_runs_to_owners() {
+        let model = tiny_model();
+        let (j1, r1) = cnn_job(&model, 1);
+        let (j2, r2) = cnn_job(&model, 2);
+        let batch = CnnMicroBatch { model, jobs: vec![j1, j2] };
+        let runs = vec![
+            CnnRun { logits: vec![10, 11], report: None, layers: Vec::new() },
+            CnnRun { logits: vec![20, 21], report: None, layers: Vec::new() },
+        ];
+        batch.deliver(runs);
+        assert_eq!(r1.recv().unwrap().unwrap().outputs, vec![10, 11]);
+        assert_eq!(r2.recv().unwrap().unwrap().outputs, vec![20, 21]);
+    }
+
+    #[test]
+    fn cnn_batch_failure_propagates_to_all_members() {
+        let model = tiny_model();
+        let (j1, r1) = cnn_job(&model, 1);
+        let (j2, r2) = cnn_job(&model, 2);
+        let batch = CnnMicroBatch { model, jobs: vec![j1, j2] };
+        batch.fail("stacked execute failed");
         assert!(r1.recv().unwrap().is_err());
         assert!(r2.recv().unwrap().is_err());
     }

@@ -1,22 +1,38 @@
-//! L3 request coordinator: router + dynamic batcher + worker pool.
+//! L3 request coordinator: fleet router + dynamic batcher + worker pools.
 //!
-//! The serving-side contribution layer: GEMM / MLP / whole-CNN requests
-//! enter through a [`CoordinatorHandle`], a leader thread routes them
-//! (round-robin with dead-worker failover) and packs same-model MLP
-//! requests into the largest AOT batch variant available within a bounded
-//! batching window (dynamic batching, vLLM-router style), and a pool of
-//! worker threads — each owning its *own* [`Engine`](crate::runtime::Engine)
-//! over the configured [`BackendKind`](crate::runtime::BackendKind) —
-//! executes them. Backpressure comes from bounded queues end to end.
+//! The serving-side contribution layer, now two tiers deep:
 //!
-//! Backends are per-coordinator: [`CoordinatorConfig::backend`] selects the
+//! * **Shard tier** — a [`Coordinator`] is one serving shard: GEMM / MLP /
+//!   whole-CNN requests enter through a [`CoordinatorHandle`], a leader
+//!   thread routes them (round-robin with dead-worker failover), packs
+//!   same-model MLP rows into the largest AOT batch variant available
+//!   within a bounded batching window (dynamic batching, vLLM-router
+//!   style), stacks same-model CNN frames along the t-dimension
+//!   ([`batcher::CnnMicroBatch`] →
+//!   [`run_cnn_batch`](crate::runtime::cnnrun::run_cnn_batch)) so conv
+//!   im2col GEMMs amortize across requests, and a pool of worker threads —
+//!   each owning its *own* [`Engine`](crate::runtime::Engine) over the
+//!   configured [`BackendKind`](crate::runtime::BackendKind) — executes
+//!   them. Backpressure comes from bounded queues end to end.
+//! * **Fleet tier** ([`router`]) — a [`Fleet`] fronts N coordinators
+//!   (possibly heterogeneous backends / photonic design points) behind one
+//!   cloneable [`FleetHandle`] with pluggable [`RoutePolicy`]s
+//!   (round-robin, least-queue-depth, weighted A/B split) and automatic
+//!   failover when a shard's workers die. The historical single-coordinator
+//!   path is the 1-shard fleet ([`Fleet::single`]), so there is one serving
+//!   path.
+//!
+//! Backends are per-shard: [`CoordinatorConfig::backend`] selects the
 //! software interpreter (default) or the photonic-in-the-loop simulator;
 //! with the latter, every [`Reply`] carries an
 //! [`ExecReport`](crate::runtime::ExecReport) (projected latency/energy on
-//! the simulated accelerator) and [`CoordinatorStats`] aggregates live
-//! sim-FPS / FPS-per-watt for the traffic actually served — run two
-//! coordinators over the same artifacts to A/B SPOGA vs HOLYLIGHT on
-//! identical load.
+//! the simulated accelerator), [`CoordinatorStats`] aggregates live
+//! sim-FPS / FPS-per-watt per shard, and
+//! [`FleetTelemetry`](crate::metrics::FleetTelemetry) rolls the shards up
+//! fleet-wide — run a software|SPOGA|HOLYLIGHT fleet over the same
+//! artifacts to A/B design points on identical live traffic, or a
+//! [`FleetConfig::noise_sweep`] to trade served accuracy against sim-FPS/W
+//! across link margins.
 //!
 //! No tokio in the vendored dependency set: the pool is `std::thread` +
 //! `std::sync::mpsc`, which for a CPU-bound backend is also the honest
@@ -24,11 +40,13 @@
 
 pub mod batcher;
 pub mod request;
+pub mod router;
 pub mod service;
 pub mod stats;
 pub mod worker;
 
-pub use batcher::{BatchPolicy, MicroBatch};
+pub use batcher::{BatchPolicy, CnnMicroBatch, MicroBatch};
 pub use request::{CnnJob, GemmJob, Job, MlpJob, Reply, Response};
+pub use router::{Fleet, FleetConfig, FleetHandle, RoutePolicy};
 pub use service::{Coordinator, CoordinatorConfig, CoordinatorHandle};
 pub use stats::CoordinatorStats;

@@ -87,8 +87,13 @@ pub enum Job {
     Gemm(GemmJob),
     /// Batchable MLP row.
     Mlp(MlpJob),
-    /// Whole-CNN inference (unbatched; layer GEMMs dominate).
+    /// Whole-CNN inference (same-model frames co-batch along the
+    /// t-dimension when the backend serves exact integers).
     Cnn(CnnJob),
+    /// Retire every worker from the rotation (maintenance drain / fault
+    /// injection): workers finish their queued items and exit; later jobs
+    /// fail with a "no live workers" error so a fleet router fails over.
+    RetireWorkers,
     /// Drain and stop (sent by [`super::Coordinator::shutdown`]).
     Shutdown,
 }
@@ -100,7 +105,7 @@ impl Job {
             Job::Gemm(g) => now.duration_since(g.enqueued).as_secs_f64(),
             Job::Mlp(m) => now.duration_since(m.enqueued).as_secs_f64(),
             Job::Cnn(c) => now.duration_since(c.enqueued).as_secs_f64(),
-            Job::Shutdown => 0.0,
+            Job::RetireWorkers | Job::Shutdown => 0.0,
         }
     }
 }

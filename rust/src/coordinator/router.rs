@@ -1,0 +1,571 @@
+//! Fleet layer: a shard router over N coordinators.
+//!
+//! One process, many [`Coordinator`]s — each shard owns its own worker
+//! pool, batcher and [`BackendKind`](crate::runtime::BackendKind), so a
+//! fleet can mix photonic design points (SPOGA vs HOLYLIGHT vs DEAPCNN vs
+//! the software interpreter) behind a single cloneable [`FleetHandle`] and
+//! A/B them under identical live traffic — the fleet-level apparatus behind
+//! the paper's headline numbers (many tiles serving inference concurrently,
+//! not one engine).
+//!
+//! ## Routing
+//!
+//! [`RoutePolicy`] picks the shard per request:
+//!
+//! * [`RoutePolicy::RoundRobin`] — uniform rotation over live shards.
+//! * [`RoutePolicy::LeastQueueDepth`] — the live shard with the fewest
+//!   unresolved requests ([`CoordinatorStats::queue_depth`]).
+//! * [`RoutePolicy::Weighted`] — deterministic proportional split (e.g.
+//!   `software:photonic = 1:3` for a photonic-design experiment); over any
+//!   `sum(weights)` consecutive picks the split is exact.
+//!
+//! ## Failover
+//!
+//! A shard whose worker pool died answers every job with a "no live
+//! workers" error (and a stopped shard rejects submission). The handle
+//! recognizes those as *shard-down* signals, marks the shard dead, and
+//! retries the request on the next live shard — requests only fail once no
+//! shards remain. Reply slots always resolve either way: the shard's
+//! leader fails its queued jobs explicitly, never silently.
+//!
+//! ## Telemetry
+//!
+//! [`FleetHandle::telemetry`] snapshots every shard's
+//! [`CoordinatorStats`] into a [`FleetTelemetry`] rollup — fleet-wide
+//! sim-FPS / FPS-per-watt / noise events, each request counted exactly once
+//! on the shard that served it.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use crate::coordinator::request::{Reply, Response};
+use crate::coordinator::service::{Coordinator, CoordinatorConfig, CoordinatorHandle};
+use crate::coordinator::stats::CoordinatorStats;
+use crate::dnn::models::CnnModel;
+use crate::fidelity::NoiseParams;
+use crate::metrics::{FleetTelemetry, ShardTelemetry};
+use crate::runtime::backend::BackendKind;
+use crate::runtime::photonic::PhotonicConfig;
+use crate::{Error, Result};
+
+/// How the fleet picks the shard that serves the next request.
+#[derive(Debug, Clone, Default)]
+pub enum RoutePolicy {
+    /// Uniform rotation over live shards.
+    #[default]
+    RoundRobin,
+    /// The live shard with the fewest unresolved requests.
+    LeastQueueDepth,
+    /// Deterministic proportional split: shard `i` receives
+    /// `weights[i] / sum(weights)` of the traffic (dead shards drop out and
+    /// the remainder re-normalizes). One weight per shard.
+    Weighted(Vec<u32>),
+}
+
+/// Fleet configuration: one [`CoordinatorConfig`] per shard plus the
+/// routing policy.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// Per-shard coordinator configurations (possibly heterogeneous
+    /// backends — that is the point).
+    pub shards: Vec<CoordinatorConfig>,
+    /// Shard selection policy.
+    pub policy: RoutePolicy,
+    /// Optional display labels, one per shard; missing entries fall back to
+    /// `shard<i>:<backend label>`.
+    pub labels: Vec<String>,
+}
+
+impl FleetConfig {
+    /// A single-shard fleet — the compatibility spelling of the historical
+    /// one-coordinator serving path.
+    pub fn single(shard: CoordinatorConfig) -> Self {
+        FleetConfig { shards: vec![shard], policy: RoutePolicy::RoundRobin, labels: Vec::new() }
+    }
+
+    /// `n` identical shards behind round-robin (horizontal scaling).
+    pub fn replicated(shard: CoordinatorConfig, n: usize) -> Self {
+        FleetConfig {
+            shards: vec![shard; n.max(1)],
+            policy: RoutePolicy::RoundRobin,
+            labels: Vec::new(),
+        }
+    }
+
+    /// Weighted two-shard A/B split — the photonic-design-experiment
+    /// shape: identical artifacts, different backends, traffic split
+    /// `wa:wb`.
+    pub fn ab_split(a: CoordinatorConfig, b: CoordinatorConfig, wa: u32, wb: u32) -> Self {
+        FleetConfig {
+            shards: vec![a, b],
+            policy: RoutePolicy::Weighted(vec![wa, wb]),
+            labels: Vec::new(),
+        }
+    }
+
+    /// Noise-aware serving sweep: one photonic shard per link margin, each
+    /// injecting analog noise at that margin with its own deterministic
+    /// stream. `base`'s backend supplies the design point (non-photonic
+    /// bases sweep SPOGA_10). Drive identical traffic at every shard via
+    /// [`FleetHandle::shard`] and read served-accuracy vs sim-FPS/W off
+    /// [`FleetHandle::telemetry`] — the serving-path slice of the offline
+    /// fidelity study.
+    pub fn noise_sweep(base: CoordinatorConfig, margins_db: &[f64]) -> Self {
+        let pc = match &base.backend {
+            BackendKind::Photonic(p) => p.clone(),
+            _ => PhotonicConfig::spoga(),
+        };
+        let mut shards = Vec::with_capacity(margins_db.len());
+        let mut labels = Vec::with_capacity(margins_db.len());
+        for (i, &margin) in margins_db.iter().enumerate() {
+            let mut cfg = base.clone();
+            cfg.backend = BackendKind::Photonic(pc.clone().with_noise(
+                NoiseParams::from_link_margin(margin),
+                0x5EED_F1EE + ((i as u64) << 16),
+            ));
+            shards.push(cfg);
+            labels.push(format!("margin+{margin:.0}dB"));
+        }
+        FleetConfig { shards, policy: RoutePolicy::RoundRobin, labels }
+    }
+}
+
+struct ShardSlot {
+    label: String,
+    handle: CoordinatorHandle,
+    dead: AtomicBool,
+}
+
+struct FleetInner {
+    slots: Vec<ShardSlot>,
+    policy: RoutePolicy,
+    /// Routing cursor: round-robin rotation / weighted tick counter.
+    cursor: AtomicUsize,
+}
+
+/// Cloneable client handle over the whole fleet: routes each request to a
+/// shard per the policy, fails over when shards die, and rolls per-shard
+/// stats up into fleet telemetry.
+#[derive(Clone)]
+pub struct FleetHandle {
+    inner: Arc<FleetInner>,
+}
+
+/// Does this error mean the shard (not the request) is broken? Only the
+/// typed [`Error::ShardDown`] variant counts — worker-pool death, a stopped
+/// coordinator and shutdown drains construct it. Request-level errors
+/// (shape, artifact, execute failures — and a dropped reply slot, which
+/// means a worker crashed *on this request* and must not send a possibly
+/// poisonous payload marching across every shard) carry other variants and
+/// never burn a failover.
+fn is_shard_down(e: &Error) -> bool {
+    matches!(e, Error::ShardDown(_))
+}
+
+impl FleetHandle {
+    /// Shards still worth routing to: not marked dead AND with a live
+    /// worker pool. The second check matters for slot-based traffic — a
+    /// shard whose leader fast-fails every job keeps a near-zero queue
+    /// depth and would otherwise *attract* least-queue-depth routing
+    /// without ever tripping the dead flag.
+    fn live(&self) -> Vec<usize> {
+        self.inner
+            .slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| {
+                !s.dead.load(Ordering::Relaxed)
+                    && s.handle.stats().live_workers.load(Ordering::Relaxed) > 0
+            })
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Pick one of the `live` shard indices (non-empty) per the policy.
+    fn pick(&self, live: &[usize]) -> usize {
+        match &self.inner.policy {
+            RoutePolicy::RoundRobin => {
+                live[self.inner.cursor.fetch_add(1, Ordering::Relaxed) % live.len()]
+            }
+            RoutePolicy::LeastQueueDepth => {
+                // Snapshot depths once (they move under us), then rotate
+                // among the minima so an all-idle fleet still balances
+                // instead of pinning shard 0.
+                let depths: Vec<(usize, u64)> = live
+                    .iter()
+                    .map(|&i| (i, self.inner.slots[i].handle.stats().queue_depth()))
+                    .collect();
+                let min = depths.iter().map(|&(_, d)| d).min().expect("non-empty live set");
+                let ties: Vec<usize> =
+                    depths.iter().filter(|&&(_, d)| d == min).map(|&(i, _)| i).collect();
+                ties[self.inner.cursor.fetch_add(1, Ordering::Relaxed) % ties.len()]
+            }
+            RoutePolicy::Weighted(weights) => {
+                let total: u64 =
+                    live.iter().map(|&i| u64::from(*weights.get(i).unwrap_or(&0))).sum();
+                if total == 0 {
+                    // All live weights zero: degrade to round-robin rather
+                    // than starve the fleet.
+                    return live[self.inner.cursor.fetch_add(1, Ordering::Relaxed) % live.len()];
+                }
+                let mut tick =
+                    (self.inner.cursor.fetch_add(1, Ordering::Relaxed) as u64) % total;
+                for &i in live {
+                    let w = u64::from(*weights.get(i).unwrap_or(&0));
+                    if tick < w {
+                        return i;
+                    }
+                    tick -= w;
+                }
+                live[live.len() - 1]
+            }
+        }
+    }
+
+    /// Run `op` against policy-picked shards, failing over (and marking the
+    /// shard dead) on shard-down errors until a live shard answers or none
+    /// remain. Request-level errors (bad shape, unknown artifact, execute
+    /// failure) return immediately.
+    ///
+    /// The payload moves into the attempt once no other shard could take a
+    /// retry and is cloned otherwise — a clone per attempt is the price of
+    /// reply-time failover, because a payload consumed by a shard that then
+    /// dies is unrecoverable (its leader fails the reply slot; nothing
+    /// hands the buffers back).
+    fn with_failover<T, P: Clone>(
+        &self,
+        payload: P,
+        mut op: impl FnMut(&CoordinatorHandle, P) -> Result<T>,
+    ) -> Result<T> {
+        let mut payload = Some(payload);
+        let mut last_err: Option<Error> = None;
+        for _ in 0..self.inner.slots.len() {
+            let live = self.live();
+            if live.is_empty() {
+                break;
+            }
+            let idx = self.pick(&live);
+            let p = (if live.len() == 1 { payload.take() } else { payload.clone() })
+                .expect("payload present while attempts remain");
+            match op(&self.inner.slots[idx].handle, p) {
+                Ok(v) => return Ok(v),
+                Err(e) if is_shard_down(&e) => {
+                    self.inner.slots[idx].dead.store(true, Ordering::Relaxed);
+                    last_err = Some(e);
+                    if payload.is_none() {
+                        break;
+                    }
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        Err(last_err.unwrap_or_else(|| Error::ShardDown("fleet has no live shards".into())))
+    }
+
+    /// Submit a GEMM to a policy-picked shard; returns the response slot.
+    /// Failover covers submission; a shard dying *after* accepting resolves
+    /// the slot with an error instead (use [`FleetHandle::gemm_reply`] for
+    /// full retry semantics).
+    pub fn submit_gemm(&self, artifact: &str, a: Vec<i32>, b: Vec<i32>) -> Result<Response> {
+        self.with_failover((a, b), |h, (a, b)| h.submit_gemm(artifact, a, b))
+    }
+
+    /// Submit one MLP row to a policy-picked shard; returns the response
+    /// slot.
+    pub fn submit_mlp(&self, row: Vec<i32>) -> Result<Response> {
+        self.with_failover(row, |h, row| h.submit_mlp(row))
+    }
+
+    /// Submit a whole-CNN inference to a policy-picked shard; returns the
+    /// response slot. Same-model frames co-pending on that shard stack into
+    /// one t-dimension batch.
+    pub fn submit_cnn(&self, model: CnnModel, input: Vec<i32>) -> Result<Response> {
+        self.with_failover((model, input), |h, (model, input)| h.submit_cnn(model, input))
+    }
+
+    /// Blocking GEMM returning the full [`Reply`]; retries on another shard
+    /// if the serving shard turns out to be dead.
+    pub fn gemm_reply(&self, artifact: &str, a: Vec<i32>, b: Vec<i32>) -> Result<Reply> {
+        self.with_failover((a, b), |h, (a, b)| h.gemm_reply(artifact, a, b))
+    }
+
+    /// Blocking GEMM convenience.
+    pub fn gemm(&self, artifact: &str, a: Vec<i32>, b: Vec<i32>) -> Result<Vec<i32>> {
+        Ok(self.gemm_reply(artifact, a, b)?.outputs)
+    }
+
+    /// Blocking MLP inference with shard failover.
+    pub fn infer_mlp(&self, row: Vec<i32>) -> Result<Vec<i32>> {
+        self.with_failover(row, |h, row| h.infer_mlp(row))
+    }
+
+    /// Blocking CNN inference (full [`Reply`]) with shard failover.
+    pub fn infer_cnn(&self, model: CnnModel, input: Vec<i32>) -> Result<Reply> {
+        self.with_failover((model, input), |h, (model, input)| h.infer_cnn(model, input))
+    }
+
+    /// Number of shards (live and dead).
+    pub fn shard_count(&self) -> usize {
+        self.inner.slots.len()
+    }
+
+    /// Number of shards still in the rotation.
+    pub fn live_shard_count(&self) -> usize {
+        self.live().len()
+    }
+
+    /// Per-shard display labels, shard order.
+    pub fn shard_labels(&self) -> Vec<String> {
+        self.inner.slots.iter().map(|s| s.label.clone()).collect()
+    }
+
+    /// Direct handle to shard `i` — for per-shard drains
+    /// ([`CoordinatorHandle::retire_workers`]) and sweep harnesses that
+    /// must drive identical traffic at every shard, bypassing routing.
+    pub fn shard(&self, i: usize) -> &CoordinatorHandle {
+        &self.inner.slots[i].handle
+    }
+
+    /// Shard `i`'s live stats.
+    pub fn shard_stats(&self, i: usize) -> &CoordinatorStats {
+        self.inner.slots[i].handle.stats()
+    }
+
+    /// Take shard `i` out of the rotation (ops drain; also flipped
+    /// automatically when a request observes the shard down).
+    pub fn mark_dead(&self, i: usize) {
+        self.inner.slots[i].dead.store(true, Ordering::Relaxed);
+    }
+
+    /// Snapshot every shard's stats into the fleet rollup. Each shard's
+    /// counters are read once per snapshot, so totals equal the sum of the
+    /// per-shard stats with nothing double-counted.
+    pub fn telemetry(&self) -> FleetTelemetry {
+        FleetTelemetry::new(
+            self.inner
+                .slots
+                .iter()
+                .map(|s| ShardTelemetry::capture(&s.label, s.handle.stats()))
+                .collect(),
+        )
+    }
+}
+
+/// The running fleet: N coordinators behind one [`FleetHandle`]. Dropping
+/// it shuts every shard down.
+pub struct Fleet {
+    shards: Vec<Coordinator>,
+    handle: FleetHandle,
+}
+
+impl Fleet {
+    /// Start every shard (workers warm per [`CoordinatorConfig::warmup`])
+    /// and wire the router. Fails fast if any shard fails to start —
+    /// already-started shards shut down via drop.
+    pub fn start(cfg: FleetConfig) -> Result<Self> {
+        if cfg.shards.is_empty() {
+            return Err(Error::Config("fleet needs at least one shard".into()));
+        }
+        if let RoutePolicy::Weighted(w) = &cfg.policy {
+            if w.len() != cfg.shards.len() {
+                return Err(Error::Config(format!(
+                    "weighted policy has {} weights for {} shards",
+                    w.len(),
+                    cfg.shards.len()
+                )));
+            }
+            if w.iter().all(|&x| x == 0) {
+                return Err(Error::Config("weighted policy needs a nonzero weight".into()));
+            }
+        }
+        let mut shards = Vec::with_capacity(cfg.shards.len());
+        let mut slots = Vec::with_capacity(cfg.shards.len());
+        for (i, shard_cfg) in cfg.shards.iter().enumerate() {
+            let label = cfg
+                .labels
+                .get(i)
+                .cloned()
+                .unwrap_or_else(|| format!("shard{}:{}", i, shard_cfg.backend.label()));
+            let c = Coordinator::start(shard_cfg.clone())?;
+            slots.push(ShardSlot { label, handle: c.handle(), dead: AtomicBool::new(false) });
+            shards.push(c);
+        }
+        let handle = FleetHandle {
+            inner: Arc::new(FleetInner {
+                slots,
+                policy: cfg.policy,
+                cursor: AtomicUsize::new(0),
+            }),
+        };
+        Ok(Fleet { shards, handle })
+    }
+
+    /// Convenience: the historical single-coordinator serving path as a
+    /// 1-shard fleet.
+    pub fn single(shard: CoordinatorConfig) -> Result<Self> {
+        Self::start(FleetConfig::single(shard))
+    }
+
+    /// A cloneable fleet handle.
+    pub fn handle(&self) -> FleetHandle {
+        self.handle.clone()
+    }
+
+    /// Number of shards.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Graceful shutdown: drain and join every shard.
+    pub fn shutdown(self) {
+        for c in self.shards {
+            c.shutdown();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn slot(label: &str, handle: CoordinatorHandle) -> ShardSlot {
+        ShardSlot { label: label.into(), handle, dead: AtomicBool::new(false) }
+    }
+
+    fn synthetic_dir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("spoga-router-test-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), "mlp_b1 m i32:1x16 i32:1x4\n").unwrap();
+        dir
+    }
+
+    fn two_shard_handle(tag: &str, policy: RoutePolicy) -> (FleetHandle, Vec<Coordinator>) {
+        let dir = synthetic_dir(tag);
+        let cfg = CoordinatorConfig {
+            artifact_dir: dir.to_string_lossy().into_owned(),
+            workers: 1,
+            max_batch_wait_s: 0.0,
+            ..Default::default()
+        };
+        let a = Coordinator::start(cfg.clone()).unwrap();
+        let b = Coordinator::start(cfg).unwrap();
+        let handle = FleetHandle {
+            inner: Arc::new(FleetInner {
+                slots: vec![slot("a", a.handle()), slot("b", b.handle())],
+                policy,
+                cursor: AtomicUsize::new(0),
+            }),
+        };
+        (handle, vec![a, b])
+    }
+
+    #[test]
+    fn weighted_policy_splits_exactly_over_a_period() {
+        let (h, shards) = two_shard_handle("weighted", RoutePolicy::Weighted(vec![1, 3]));
+        let live = h.live();
+        let mut counts = [0usize; 2];
+        for _ in 0..8 {
+            counts[h.pick(&live)] += 1;
+        }
+        assert_eq!(counts, [2, 6], "1:3 split over two periods");
+        for c in shards {
+            c.shutdown();
+        }
+    }
+
+    #[test]
+    fn least_queue_depth_prefers_the_idle_shard() {
+        let (h, shards) = two_shard_handle("lqd", RoutePolicy::LeastQueueDepth);
+        // Fake a backlog on shard 0 (requests accepted, never resolved).
+        h.shard_stats(0).requests.fetch_add(50, Ordering::Relaxed);
+        let live = h.live();
+        for _ in 0..4 {
+            assert_eq!(h.pick(&live), 1);
+        }
+        for c in shards {
+            c.shutdown();
+        }
+    }
+
+    #[test]
+    fn dead_shards_leave_the_rotation() {
+        let (h, shards) = two_shard_handle("dead", RoutePolicy::RoundRobin);
+        assert_eq!(h.live_shard_count(), 2);
+        h.mark_dead(0);
+        assert_eq!(h.live_shard_count(), 1);
+        let live = h.live();
+        for _ in 0..4 {
+            assert_eq!(h.pick(&live), 1);
+        }
+        for c in shards {
+            c.shutdown();
+        }
+    }
+
+    #[test]
+    fn shard_down_classifier_spares_request_errors() {
+        assert!(is_shard_down(&Error::ShardDown("no live workers (all dead)".into())));
+        assert!(is_shard_down(&Error::ShardDown("coordinator stopped".into())));
+        assert!(is_shard_down(&Error::ShardDown("shutdown".into())));
+        // Request-level errors never retire a shard — even when their
+        // caller-controlled text mentions shutdown-ish words.
+        assert!(!is_shard_down(&Error::Coordinator("worker 0 execute failed: boom".into())));
+        assert!(!is_shard_down(&Error::Coordinator(
+            "artifact error: unknown artifact \"gemm_shutdown_probe\"".into()
+        )));
+        assert!(!is_shard_down(&Error::Shape("mlp row has 3 elements".into())));
+        assert!(!is_shard_down(&Error::Artifact("unknown artifact".into())));
+    }
+
+    #[test]
+    fn fleet_config_validation() {
+        assert!(Fleet::start(FleetConfig {
+            shards: Vec::new(),
+            policy: RoutePolicy::RoundRobin,
+            labels: Vec::new(),
+        })
+        .is_err());
+        let shard = CoordinatorConfig::default();
+        assert!(Fleet::start(FleetConfig {
+            shards: vec![shard.clone(), shard.clone()],
+            policy: RoutePolicy::Weighted(vec![1]),
+            labels: Vec::new(),
+        })
+        .is_err());
+        assert!(Fleet::start(FleetConfig {
+            shards: vec![shard.clone(), shard],
+            policy: RoutePolicy::Weighted(vec![0, 0]),
+            labels: Vec::new(),
+        })
+        .is_err());
+    }
+
+    #[test]
+    fn noise_sweep_builds_one_photonic_shard_per_margin() {
+        let cfg = FleetConfig::noise_sweep(CoordinatorConfig::default(), &[0.0, 20.0, 40.0]);
+        assert_eq!(cfg.shards.len(), 3);
+        assert_eq!(cfg.labels, vec!["margin+0dB", "margin+20dB", "margin+40dB"]);
+        for (i, s) in cfg.shards.iter().enumerate() {
+            match &s.backend {
+                BackendKind::Photonic(p) => {
+                    let noise = p.noise.expect("sweep shard injects noise");
+                    let margin = [0.0, 20.0, 40.0][i];
+                    assert!((noise.snr_db - (24.1 + margin)).abs() < 1e-9);
+                }
+                other => panic!("sweep shard {i} is not photonic: {other:?}"),
+            }
+        }
+        // Distinct deterministic noise streams per shard.
+        let seeds: Vec<u64> = cfg
+            .shards
+            .iter()
+            .map(|s| match &s.backend {
+                BackendKind::Photonic(p) => p.noise_seed,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_ne!(seeds[0], seeds[1]);
+        assert_ne!(seeds[1], seeds[2]);
+    }
+}

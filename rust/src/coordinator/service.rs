@@ -6,7 +6,7 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::coordinator::batcher::{BatchPolicy, MicroBatch};
+use crate::coordinator::batcher::{BatchPolicy, CnnMicroBatch, MicroBatch};
 use crate::coordinator::request::{response_slot, CnnJob, GemmJob, Job, MlpJob, Reply, Response};
 use crate::coordinator::stats::CoordinatorStats;
 use crate::coordinator::worker::{run_worker, WorkItem};
@@ -28,6 +28,15 @@ pub struct CoordinatorConfig {
     pub backend: BackendKind,
     /// Dynamic-batching window, seconds.
     pub max_batch_wait_s: f64,
+    /// Largest number of same-model CNN frames stacked into one
+    /// t-dimension batch (1 disables CNN batching). Like MLP dynamic
+    /// batching, stacking trades latency for throughput: a sparse CNN
+    /// stream pays up to [`CoordinatorConfig::max_batch_wait_s`] per frame
+    /// waiting for co-batchable traffic — set this to 1 for
+    /// latency-critical single-stream serving. Ignored — forced to 1 —
+    /// when the backend injects analog noise, so per-frame noise events
+    /// stay attributable to their requests.
+    pub max_cnn_batch: usize,
     /// Ingress queue depth (backpressure bound).
     pub queue_depth: usize,
     /// Compile all artifacts at worker start (first-request latency vs
@@ -42,6 +51,7 @@ impl Default for CoordinatorConfig {
             workers: 2,
             backend: BackendKind::Software,
             max_batch_wait_s: 0.002,
+            max_cnn_batch: 8,
             queue_depth: 1024,
             warmup: true,
         }
@@ -69,7 +79,7 @@ impl CoordinatorHandle {
                 reply,
                 enqueued: Instant::now(),
             }))
-            .map_err(|_| Error::Coordinator("coordinator stopped".into()))?;
+            .map_err(|_| Error::ShardDown("coordinator stopped".into()))?;
         Ok(rx)
     }
 
@@ -86,7 +96,7 @@ impl CoordinatorHandle {
         self.stats.requests.fetch_add(1, Ordering::Relaxed);
         self.tx
             .send(Job::Mlp(MlpJob { row, reply, enqueued: Instant::now() }))
-            .map_err(|_| Error::Coordinator("coordinator stopped".into()))?;
+            .map_err(|_| Error::ShardDown("coordinator stopped".into()))?;
         Ok(rx)
     }
 
@@ -98,7 +108,7 @@ impl CoordinatorHandle {
         self.stats.requests.fetch_add(1, Ordering::Relaxed);
         self.tx
             .send(Job::Cnn(CnnJob { model, input, reply, enqueued: Instant::now() }))
-            .map_err(|_| Error::Coordinator("coordinator stopped".into()))?;
+            .map_err(|_| Error::ShardDown("coordinator stopped".into()))?;
         Ok(rx)
     }
 
@@ -116,7 +126,7 @@ impl CoordinatorHandle {
         Ok(self
             .submit_mlp(row)?
             .recv()
-            .map_err(|_| Error::Coordinator("response dropped".into()))??
+            .map_err(|_| Error::Coordinator("response dropped (worker crashed mid-request?)".into()))??
             .outputs)
     }
 
@@ -129,7 +139,7 @@ impl CoordinatorHandle {
     pub fn gemm_reply(&self, artifact: &str, a: Vec<i32>, b: Vec<i32>) -> Result<Reply> {
         self.submit_gemm(artifact, a, b)?
             .recv()
-            .map_err(|_| Error::Coordinator("response dropped".into()))?
+            .map_err(|_| Error::Coordinator("response dropped (worker crashed mid-request?)".into()))?
     }
 
     /// Blocking CNN inference returning the full [`Reply`] (logits +
@@ -137,7 +147,19 @@ impl CoordinatorHandle {
     pub fn infer_cnn(&self, model: CnnModel, input: Vec<i32>) -> Result<Reply> {
         self.submit_cnn(model, input)?
             .recv()
-            .map_err(|_| Error::Coordinator("response dropped".into()))?
+            .map_err(|_| Error::Coordinator("response dropped (worker crashed mid-request?)".into()))?
+    }
+
+    /// Retire every worker from the rotation (maintenance drain / fault
+    /// injection): workers finish their queued items and exit, after which
+    /// jobs on this coordinator fail with a "no live workers" error — the
+    /// signal a [`FleetHandle`](crate::coordinator::FleetHandle) uses to
+    /// fail the shard over. The leader stays alive so every reply slot
+    /// still resolves.
+    pub fn retire_workers(&self) -> Result<()> {
+        self.tx
+            .send(Job::RetireWorkers)
+            .map_err(|_| Error::ShardDown("coordinator stopped".into()))
     }
 
     /// Shared metrics.
@@ -163,9 +185,22 @@ impl Coordinator {
             return Err(Error::Config("no mlp_b* artifacts in manifest".into()));
         }
         let mlp_row_len = manifest.get(&variants[0].0)?.inputs[0].elements() / variants[0].1;
-        let policy = BatchPolicy::new(variants, cfg.max_batch_wait_s);
+        let mut policy = BatchPolicy::new(variants, cfg.max_batch_wait_s)?;
+        // Batching shrinks when the backend injects noise: a noisy execute
+        // is one noise stream over the whole batch, so batch members would
+        // share one batch-level `noise_events`/`lanes` report and lose
+        // per-request attribution. CNN frames therefore serve unbatched,
+        // and MLP rows use only the smallest batch variant (the finest
+        // attribution granularity the artifact set offers — exactly
+        // per-request when an `mlp_b1` variant exists).
+        let noisy = matches!(&cfg.backend, BackendKind::Photonic(p) if p.noise.is_some());
+        if noisy {
+            policy.variants.truncate(1);
+        }
+        let cnn_batch_cap = if noisy { 1 } else { cfg.max_cnn_batch.max(1) };
 
         let stats = Arc::new(CoordinatorStats::default());
+        stats.live_workers.store(cfg.workers.max(1) as u64, Ordering::Relaxed);
         let (tx, rx) = sync_channel::<Job>(cfg.queue_depth);
 
         // Workers.
@@ -193,9 +228,12 @@ impl Coordinator {
 
         // Leader.
         let leader = {
+            let leader_stats = stats.clone();
             std::thread::Builder::new()
                 .name("spoga-leader".into())
-                .spawn(move || run_leader(rx, worker_txs, policy, joins))
+                .spawn(move || {
+                    run_leader(rx, worker_txs, policy, cnn_batch_cap, leader_stats, joins)
+                })
                 .map_err(|e| Error::Coordinator(format!("spawn leader: {e}")))?
         };
 
@@ -230,10 +268,17 @@ impl Drop for Coordinator {
 /// the worker's receiver is gone (thread died), in which case the worker is
 /// retired from the rotation and the item retries on the next one. Only
 /// when no workers remain does the job fail — with a real error on its
-/// reply slot, never silently.
-fn dispatch(mut item: WorkItem, worker_txs: &mut Vec<SyncSender<WorkItem>>, next: &mut usize) {
+/// reply slot (counted in `stats.failed`, so `queue_depth()` stays
+/// truthful), never silently.
+fn dispatch(
+    mut item: WorkItem,
+    worker_txs: &mut Vec<SyncSender<WorkItem>>,
+    next: &mut usize,
+    stats: &CoordinatorStats,
+) {
     loop {
         if worker_txs.is_empty() {
+            stats.failed.fetch_add(item.reply_slots(), Ordering::Relaxed);
             item.fail("no live workers (all worker threads exited)");
             return;
         }
@@ -246,6 +291,7 @@ fn dispatch(mut item: WorkItem, worker_txs: &mut Vec<SyncSender<WorkItem>>, next
             Err(SendError(returned)) => {
                 // Dead worker: retire it and retry the item elsewhere.
                 worker_txs.remove(idx);
+                stats.live_workers.store(worker_txs.len() as u64, Ordering::Relaxed);
                 *next = idx; // same slot now holds the next worker
                 item = returned;
             }
@@ -253,40 +299,124 @@ fn dispatch(mut item: WorkItem, worker_txs: &mut Vec<SyncSender<WorkItem>>, next
     }
 }
 
-/// Leader loop: route GEMMs/CNNs round-robin (with dead-worker failover);
-/// gather MLP rows into micro-batches bounded by the batching window and
-/// the largest variant.
+/// Retire every worker from the rotation: each one drains its queued items
+/// and exits when it reaches the Shutdown marker. Threads join at leader
+/// exit (the leader keeps their `JoinHandle`s).
+fn retire_all_workers(worker_txs: &mut Vec<SyncSender<WorkItem>>, stats: &CoordinatorStats) {
+    for tx in worker_txs.drain(..) {
+        let _ = tx.send(WorkItem::Shutdown);
+    }
+    stats.live_workers.store(0, Ordering::Relaxed);
+}
+
+/// Extract up to `cap` pending frames of `model`, in arrival order.
+fn extract_cnn_group(pending: &mut Vec<CnnJob>, model: &CnnModel, cap: usize) -> Vec<CnnJob> {
+    let mut jobs = Vec::new();
+    let mut i = 0;
+    while i < pending.len() && jobs.len() < cap {
+        if pending[i].model == *model {
+            jobs.push(pending.remove(i));
+        } else {
+            i += 1;
+        }
+    }
+    jobs
+}
+
+/// Flush every pending CNN frame as t-stacked micro-batches, in arrival
+/// order (head model first), at most `cap` frames per batch. Used when the
+/// batching window closes — partial groups go out as-is.
+fn flush_cnn_batches(
+    pending: &mut Vec<CnnJob>,
+    cap: usize,
+    worker_txs: &mut Vec<SyncSender<WorkItem>>,
+    next_worker: &mut usize,
+    stats: &CoordinatorStats,
+) {
+    while !pending.is_empty() {
+        let model = pending[0].model.clone();
+        let jobs = extract_cnn_group(pending, &model, cap);
+        dispatch(WorkItem::CnnBatch(CnnMicroBatch { model, jobs }), worker_txs, next_worker, stats);
+    }
+}
+
+/// Mid-window flush of exactly one *full* same-model stack, if the model of
+/// the most recently gathered frame just reached `cap` members. Partial
+/// groups — including minority models in mixed traffic — keep gathering
+/// until the window deadline; a full stack gains nothing by waiting.
+fn flush_full_cnn_group(
+    pending: &mut Vec<CnnJob>,
+    cap: usize,
+    worker_txs: &mut Vec<SyncSender<WorkItem>>,
+    next_worker: &mut usize,
+    stats: &CoordinatorStats,
+) {
+    let model = match pending.last() {
+        Some(j) => j.model.clone(),
+        None => return,
+    };
+    if pending.iter().filter(|j| j.model == model).count() >= cap {
+        let jobs = extract_cnn_group(pending, &model, cap);
+        dispatch(WorkItem::CnnBatch(CnnMicroBatch { model, jobs }), worker_txs, next_worker, stats);
+    }
+}
+
+/// Leader loop: route GEMMs round-robin (with dead-worker failover); gather
+/// MLP rows and same-model CNN frames into micro-batches bounded by the
+/// batching window, the largest MLP variant, and the CNN stacking cap.
 fn run_leader(
     rx: Receiver<Job>,
     mut worker_txs: Vec<SyncSender<WorkItem>>,
     policy: BatchPolicy,
+    cnn_batch_cap: usize,
+    stats: Arc<CoordinatorStats>,
     worker_joins: Vec<JoinHandle<()>>,
 ) {
     let mut next_worker = 0usize;
     let window = Duration::from_secs_f64(policy.max_wait_s);
     let mut pending: Vec<MlpJob> = Vec::new();
+    let mut pending_cnn: Vec<CnnJob> = Vec::new();
     let mut shutdown = false;
 
     while !shutdown {
-        // Phase 1: block for the first job.
+        // Phase 1: block for the first batchable job.
         match rx.recv() {
             Err(_) => break,
             Ok(Job::Shutdown) => break,
+            Ok(Job::RetireWorkers) => {
+                retire_all_workers(&mut worker_txs, &stats);
+                continue;
+            }
             Ok(Job::Gemm(g)) => {
-                dispatch(WorkItem::Gemm(g), &mut worker_txs, &mut next_worker);
+                dispatch(WorkItem::Gemm(g), &mut worker_txs, &mut next_worker, &stats);
                 continue;
             }
-            Ok(Job::Cnn(c)) => {
-                dispatch(WorkItem::Cnn(c), &mut worker_txs, &mut next_worker);
+            Ok(Job::Cnn(c)) if cnn_batch_cap <= 1 => {
+                dispatch(WorkItem::Cnn(c), &mut worker_txs, &mut next_worker, &stats);
                 continue;
             }
+            Ok(Job::Cnn(c)) => pending_cnn.push(c),
             Ok(Job::Mlp(m)) => pending.push(m),
         }
 
-        // Phase 2: batching window — gather more rows until it expires or
-        // the largest variant fills.
+        // Phase 2: batching window — gather more batchable jobs until the
+        // deadline. *Full* batches flush inline (they gain nothing by
+        // waiting) while the window stays open, so heavy traffic in one
+        // class never truncates the other's gathering; partial batches —
+        // including minority models in mixed CNN traffic — wait for the
+        // deadline.
         let deadline = Instant::now() + window;
-        while pending.len() < policy.max_batch() {
+        loop {
+            while pending.len() >= policy.max_batch() {
+                let (artifact, batch) = policy.pick_variant(policy.max_batch()).clone();
+                let jobs: Vec<MlpJob> = pending.drain(..batch).collect();
+                dispatch(
+                    WorkItem::Batch(MicroBatch { artifact, batch, jobs }),
+                    &mut worker_txs,
+                    &mut next_worker,
+                    &stats,
+                );
+            }
             let now = Instant::now();
             if now >= deadline {
                 break;
@@ -294,11 +424,22 @@ fn run_leader(
             match rx.recv_timeout(deadline - now) {
                 Ok(Job::Mlp(m)) => pending.push(m),
                 Ok(Job::Gemm(g)) => {
-                    dispatch(WorkItem::Gemm(g), &mut worker_txs, &mut next_worker)
+                    dispatch(WorkItem::Gemm(g), &mut worker_txs, &mut next_worker, &stats)
+                }
+                Ok(Job::Cnn(c)) if cnn_batch_cap <= 1 => {
+                    dispatch(WorkItem::Cnn(c), &mut worker_txs, &mut next_worker, &stats)
                 }
                 Ok(Job::Cnn(c)) => {
-                    dispatch(WorkItem::Cnn(c), &mut worker_txs, &mut next_worker)
+                    pending_cnn.push(c);
+                    flush_full_cnn_group(
+                        &mut pending_cnn,
+                        cnn_batch_cap,
+                        &mut worker_txs,
+                        &mut next_worker,
+                        &stats,
+                    );
                 }
+                Ok(Job::RetireWorkers) => retire_all_workers(&mut worker_txs, &stats),
                 Ok(Job::Shutdown) => {
                     shutdown = true;
                     break;
@@ -311,8 +452,8 @@ fn run_leader(
             }
         }
 
-        // Phase 3: form + dispatch micro-batches (possibly several if a
-        // burst exceeded the largest variant).
+        // Phase 3: the window closed — flush what gathered (possibly
+        // several batches if a burst exceeded the caps).
         while !pending.is_empty() {
             let take = pending.len().min(policy.max_batch());
             let (artifact, batch) = policy.pick_variant(take).clone();
@@ -321,28 +462,38 @@ fn run_leader(
                 WorkItem::Batch(MicroBatch { artifact, batch, jobs }),
                 &mut worker_txs,
                 &mut next_worker,
+                &stats,
             );
         }
+        flush_cnn_batches(
+            &mut pending_cnn,
+            cnn_batch_cap,
+            &mut worker_txs,
+            &mut next_worker,
+            &stats,
+        );
     }
 
     // Drain-and-stop: explicitly fail everything still queued (batched rows
     // gathered this cycle AND jobs still buffered in the ingress channel) so
-    // every reply slot resolves, then stop workers and join.
+    // every reply slot resolves — each counted in `failed` so the stats
+    // invariant (requests = completed + failed + unresolved) closes out.
+    let fail_one = |stats: &CoordinatorStats, reply: &crate::coordinator::request::ResponseTx| {
+        stats.failed.fetch_add(1, Ordering::Relaxed);
+        let _ = reply.send(Err(Error::ShardDown("shutdown".into())));
+    };
     for j in pending {
-        let _ = j.reply.send(Err(Error::Coordinator("shutdown".into())));
+        fail_one(&stats, &j.reply);
+    }
+    for j in pending_cnn {
+        fail_one(&stats, &j.reply);
     }
     while let Ok(job) = rx.try_recv() {
         match job {
-            Job::Gemm(g) => {
-                let _ = g.reply.send(Err(Error::Coordinator("shutdown".into())));
-            }
-            Job::Mlp(m) => {
-                let _ = m.reply.send(Err(Error::Coordinator("shutdown".into())));
-            }
-            Job::Cnn(c) => {
-                let _ = c.reply.send(Err(Error::Coordinator("shutdown".into())));
-            }
-            Job::Shutdown => {}
+            Job::Gemm(g) => fail_one(&stats, &g.reply),
+            Job::Mlp(m) => fail_one(&stats, &m.reply),
+            Job::Cnn(c) => fail_one(&stats, &c.reply),
+            Job::RetireWorkers | Job::Shutdown => {}
         }
     }
     for tx in &worker_txs {
@@ -373,6 +524,7 @@ mod tests {
 
     #[test]
     fn dispatch_skips_dead_workers() {
+        let stats = CoordinatorStats::default();
         let (live_tx, live_rx) = sync_channel::<WorkItem>(4);
         let (dead_tx, dead_rx) = sync_channel::<WorkItem>(4);
         drop(dead_rx); // worker 0 died
@@ -380,29 +532,35 @@ mod tests {
         let mut next = 0usize;
 
         let (item, _rx) = gemm_item(1);
-        dispatch(item, &mut txs, &mut next);
+        dispatch(item, &mut txs, &mut next, &stats);
         assert_eq!(txs.len(), 1, "dead worker retired from rotation");
         match live_rx.try_recv().unwrap() {
             WorkItem::Gemm(g) => assert_eq!(g.artifact, "g1"),
             other => panic!("wrong item routed: {other:?}"),
         }
+        assert_eq!(stats.failed.load(Ordering::Relaxed), 0, "rerouted, not failed");
     }
 
     #[test]
     fn dispatch_fails_job_when_no_workers_remain() {
+        let stats = CoordinatorStats::default();
         let (dead_tx, dead_rx) = sync_channel::<WorkItem>(4);
         drop(dead_rx);
         let mut txs = vec![dead_tx];
         let mut next = 0usize;
         let (item, rx) = gemm_item(2);
-        dispatch(item, &mut txs, &mut next);
+        dispatch(item, &mut txs, &mut next, &stats);
         assert!(txs.is_empty());
         let err = rx.recv().unwrap().unwrap_err();
         assert!(err.to_string().contains("no live workers"), "{err}");
+        assert!(matches!(err, Error::ShardDown(_)), "fleet failover signal");
+        // The failure is counted, so queue_depth() does not leak.
+        assert_eq!(stats.failed.load(Ordering::Relaxed), 1);
     }
 
     #[test]
     fn dispatch_round_robins_over_live_workers() {
+        let stats = CoordinatorStats::default();
         let (tx_a, rx_a) = sync_channel::<WorkItem>(8);
         let (tx_b, rx_b) = sync_channel::<WorkItem>(8);
         let mut txs = vec![tx_a, tx_b];
@@ -410,7 +568,7 @@ mod tests {
         let mut slots = Vec::new();
         for i in 0..4 {
             let (item, rx) = gemm_item(i);
-            dispatch(item, &mut txs, &mut next);
+            dispatch(item, &mut txs, &mut next, &stats);
             slots.push(rx);
         }
         assert_eq!(rx_a.try_iter().count(), 2);

@@ -25,6 +25,14 @@ pub struct CoordinatorStats {
     pub padded_rows: AtomicU64,
     /// Whole-CNN inferences served.
     pub cnn_frames: AtomicU64,
+    /// Stacked same-model CNN micro-batches executed (t-dimension batching).
+    pub cnn_batches: AtomicU64,
+    /// Workers still in the leader's rotation (gauge, maintained by the
+    /// leader: set at start, dropped as workers die or retire). A fleet
+    /// router treats `0` as shard-down even when the shard's leader is
+    /// still alive fast-failing jobs — otherwise a dead pool's near-zero
+    /// queue depth would *attract* least-queue-depth traffic.
+    pub live_workers: AtomicU64,
     /// Latency histogram (µs, log2 buckets).
     lat_hist: [AtomicU64; BUCKETS],
     /// Total latency in µs.
@@ -44,6 +52,9 @@ pub struct CoordinatorStats {
     sim_latency_bits: AtomicU64,
     /// Total projected photonic energy, f64 joules stored as bits.
     sim_energy_bits: AtomicU64,
+    /// Analog dot-product lanes transduced across reported executions —
+    /// the denominator of the served-exact fraction (`1 − noise/lanes`).
+    pub lanes: AtomicU64,
     /// Outputs perturbed by analog noise injection.
     pub noise_events: AtomicU64,
 }
@@ -84,7 +95,27 @@ impl CoordinatorStats {
         self.sim_reports.fetch_add(1, Ordering::Relaxed);
         atomic_add_f64(&self.sim_latency_bits, r.sim_latency_s);
         atomic_add_f64(&self.sim_energy_bits, r.energy_j);
+        self.lanes.fetch_add(r.lanes, Ordering::Relaxed);
         self.noise_events.fetch_add(r.noise_events, Ordering::Relaxed);
+    }
+
+    /// Requests accepted but not yet resolved (completed or failed) — the
+    /// router's least-queue-depth signal. A momentary over-count is possible
+    /// while a worker is between incrementing `completed` and delivering,
+    /// which only makes the shard look marginally busier; safe for routing.
+    pub fn queue_depth(&self) -> u64 {
+        let done = self.completed.load(Ordering::Relaxed)
+            + self.failed.load(Ordering::Relaxed);
+        self.requests.load(Ordering::Relaxed).saturating_sub(done)
+    }
+
+    /// Fraction of transduced lanes whose served integer matched the exact
+    /// result (`1.0` when nothing reported lanes — an exact digital shard).
+    pub fn served_exact_fraction(&self) -> f64 {
+        crate::metrics::exact_fraction(
+            self.noise_events.load(Ordering::Relaxed),
+            self.lanes.load(Ordering::Relaxed),
+        )
     }
 
     /// Approximate latency percentile (bucket upper bound), seconds.
@@ -140,20 +171,18 @@ impl CoordinatorStats {
     /// Projected frames/executions per second on the simulated photonic
     /// accelerator (reported executions ÷ total projected latency).
     pub fn sim_fps(&self) -> f64 {
-        let lat = self.sim_latency_total_s();
-        if lat <= 0.0 {
-            return 0.0;
-        }
-        self.sim_reports.load(Ordering::Relaxed) as f64 / lat
+        crate::metrics::per_unit(
+            self.sim_reports.load(Ordering::Relaxed),
+            self.sim_latency_total_s(),
+        )
     }
 
     /// Projected FPS per watt (reported executions ÷ total projected energy).
     pub fn sim_fps_per_w(&self) -> f64 {
-        let e = self.sim_energy_total_j();
-        if e <= 0.0 {
-            return 0.0;
-        }
-        self.sim_reports.load(Ordering::Relaxed) as f64 / e
+        crate::metrics::per_unit(
+            self.sim_reports.load(Ordering::Relaxed),
+            self.sim_energy_total_j(),
+        )
     }
 
     /// Mean rows per micro-batch.
@@ -265,6 +294,8 @@ mod tests {
         s.record_report(&r);
         s.record_report(&r);
         assert_eq!(s.sim_reports.load(Ordering::Relaxed), 2);
+        assert_eq!(s.lanes.load(Ordering::Relaxed), 200);
+        assert!((s.served_exact_fraction() - (1.0 - 6.0 / 200.0)).abs() < 1e-12);
         assert!((s.sim_latency_total_s() - 4e-3).abs() < 1e-9);
         assert!((s.sim_energy_total_j() - 1e-3).abs() < 1e-9);
         assert!((s.sim_fps() - 500.0).abs() < 1e-6);
@@ -290,6 +321,25 @@ mod tests {
         assert!((s.sim_energy_total_j() - 1e-12).abs() < 1e-21);
         assert!(s.sim_fps() > 0.0);
         assert!(s.sim_fps_per_w() > 0.0);
+    }
+
+    #[test]
+    fn queue_depth_tracks_unresolved_requests() {
+        let s = CoordinatorStats::default();
+        assert_eq!(s.queue_depth(), 0);
+        s.requests.fetch_add(10, Ordering::Relaxed);
+        s.completed.fetch_add(6, Ordering::Relaxed);
+        s.failed.fetch_add(1, Ordering::Relaxed);
+        assert_eq!(s.queue_depth(), 3);
+        // Transient over-resolution must not underflow.
+        s.completed.fetch_add(10, Ordering::Relaxed);
+        assert_eq!(s.queue_depth(), 0);
+    }
+
+    #[test]
+    fn exact_shard_reports_full_served_accuracy() {
+        let s = CoordinatorStats::default();
+        assert_eq!(s.served_exact_fraction(), 1.0);
     }
 
     #[test]

@@ -10,11 +10,11 @@ use std::sync::mpsc::Receiver;
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::coordinator::batcher::MicroBatch;
+use crate::coordinator::batcher::{CnnMicroBatch, MicroBatch};
 use crate::coordinator::request::{CnnJob, GemmJob, Reply};
 use crate::coordinator::stats::CoordinatorStats;
 use crate::runtime::backend::BackendKind;
-use crate::runtime::cnnrun::run_cnn;
+use crate::runtime::cnnrun::{run_cnn, run_cnn_batch};
 use crate::runtime::Engine;
 
 /// Work items dispatched by the leader to a worker.
@@ -26,23 +26,42 @@ pub enum WorkItem {
     Gemm(GemmJob),
     /// A whole-CNN inference.
     Cnn(CnnJob),
+    /// A stack of same-model CNN frames (t-dimension batching).
+    CnnBatch(CnnMicroBatch),
     /// Stop the worker.
     Shutdown,
 }
 
 impl WorkItem {
     /// Fail every reply slot this item owns (dead-worker / no-worker path).
+    /// Uses [`crate::Error::ShardDown`]: these failures mean the shard's
+    /// worker pool is gone, which is exactly the fleet router's failover
+    /// signal — unlike per-request execute errors, which stay
+    /// [`crate::Error::Coordinator`].
     pub(crate) fn fail(self, msg: &str) {
-        let err = || crate::Error::Coordinator(msg.to_string());
+        let err = || crate::Error::ShardDown(msg.to_string());
         match self {
-            WorkItem::Batch(b) => b.fail(msg),
+            WorkItem::Batch(b) => b.fail_with(&err),
             WorkItem::Gemm(g) => {
                 let _ = g.reply.send(Err(err()));
             }
             WorkItem::Cnn(c) => {
                 let _ = c.reply.send(Err(err()));
             }
+            WorkItem::CnnBatch(b) => b.fail_with(&err),
             WorkItem::Shutdown => {}
+        }
+    }
+
+    /// Reply slots this item owns — what `fail` will resolve, and what the
+    /// failure paths outside a worker must add to `stats.failed` so
+    /// `queue_depth()` (requests − completed − failed) stays truthful.
+    pub(crate) fn reply_slots(&self) -> u64 {
+        match self {
+            WorkItem::Batch(b) => b.jobs.len() as u64,
+            WorkItem::Gemm(_) | WorkItem::Cnn(_) => 1,
+            WorkItem::CnnBatch(b) => b.jobs.len() as u64,
+            WorkItem::Shutdown => 0,
         }
     }
 }
@@ -74,14 +93,14 @@ pub fn run_worker(
     let mut engine = match engine_init {
         Ok(e) => e,
         Err(e) => {
-            // Fail every item we receive; the handle surfaces the error.
-            eprintln!("worker {id}: engine init failed: {e}");
-            for item in rx {
-                if matches!(item, WorkItem::Shutdown) {
-                    break;
-                }
-                item.fail(&format!("worker {id} has no engine: {e}"));
-            }
+            // Exit immediately: dropping `rx` makes the leader's next
+            // dispatch to this worker fail with `SendError`, which retires
+            // it from the rotation and reroutes the item to a healthy
+            // worker. One bad init must cost the shard a worker, not fail
+            // 1/N of its traffic (or, behind a fleet, retire the whole
+            // shard).
+            eprintln!("worker {id}: engine init failed, exiting: {e}");
+            drop(rx);
             return;
         }
     };
@@ -132,6 +151,39 @@ pub fn run_worker(
                     Err(e) => {
                         stats.failed.fetch_add(1, Ordering::Relaxed);
                         let _ = job.reply.send(Err(e));
+                    }
+                }
+            }
+            WorkItem::CnnBatch(batch) => {
+                let frames = batch.jobs.len() as u64;
+                let inputs: Vec<&[i32]> =
+                    batch.jobs.iter().map(|j| j.input.as_slice()).collect();
+                let started = Instant::now();
+                let res = run_cnn_batch(&mut engine, &batch.model, &inputs)
+                    .map_err(|e| crate::Error::Coordinator(e.to_string()));
+                stats.record_service(started.elapsed().as_secs_f64());
+                match res {
+                    Ok(runs) => {
+                        stats.cnn_batches.fetch_add(1, Ordering::Relaxed);
+                        stats.cnn_frames.fetch_add(frames, Ordering::Relaxed);
+                        stats.completed.fetch_add(frames, Ordering::Relaxed);
+                        let now = Instant::now();
+                        for j in &batch.jobs {
+                            stats.record_latency(now.duration_since(j.enqueued).as_secs_f64());
+                        }
+                        // Each frame's aggregate report prices that frame's
+                        // own layer shapes, so folding every one into the
+                        // stats matches unbatched accounting exactly.
+                        for run in &runs {
+                            if let Some(r) = &run.report {
+                                stats.record_report(r);
+                            }
+                        }
+                        batch.deliver(runs);
+                    }
+                    Err(e) => {
+                        stats.failed.fetch_add(frames, Ordering::Relaxed);
+                        batch.fail(&format!("worker {id} cnn batch failed: {e}"));
                     }
                 }
             }

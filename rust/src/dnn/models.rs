@@ -10,7 +10,11 @@ use crate::dnn::layer::Layer;
 use crate::dnn::workload::Workload;
 
 /// A named CNN model: ordered GEMM-bearing layers.
-#[derive(Debug, Clone)]
+///
+/// `PartialEq`/`Eq` so the coordinator's batcher can co-batch requests that
+/// submitted equal models (same-model CNN frames stack along the
+/// t-dimension).
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct CnnModel {
     /// Model name as used in the paper's Fig. 5 ("MobileNetV2", ...).
     pub name: &'static str,

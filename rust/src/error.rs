@@ -22,8 +22,14 @@ pub enum Error {
     /// Errors bubbling out of the execution runtime.
     Runtime(String),
 
-    /// Coordinator request-path failures (queue closed, worker died, ...).
+    /// Coordinator request-path failures (bad request, execute failed, ...).
     Coordinator(String),
+
+    /// A serving shard is down: its worker pool died, the coordinator
+    /// stopped, or it is shutting down. Kept distinct from [`Error::Coordinator`]
+    /// because the fleet router uses this — and only this — as its failover
+    /// signal; request-level errors must never retire a shard.
+    ShardDown(String),
 
     /// Underlying I/O failure.
     Io(std::io::Error),
@@ -38,6 +44,7 @@ impl std::fmt::Display for Error {
             Error::Artifact(msg) => write!(f, "artifact error: {msg}"),
             Error::Runtime(msg) => write!(f, "runtime error: {msg}"),
             Error::Coordinator(msg) => write!(f, "coordinator error: {msg}"),
+            Error::ShardDown(msg) => write!(f, "shard down: {msg}"),
             Error::Io(e) => write!(f, "io error: {e}"),
         }
     }
@@ -70,6 +77,7 @@ mod tests {
         assert_eq!(Error::Shape("bad".into()).to_string(), "shape mismatch: bad");
         assert_eq!(Error::Artifact("x".into()).to_string(), "artifact error: x");
         assert_eq!(Error::Coordinator("y".into()).to_string(), "coordinator error: y");
+        assert_eq!(Error::ShardDown("z".into()).to_string(), "shard down: z");
     }
 
     #[test]

@@ -8,10 +8,16 @@
 //! spoga fig5 [--cores N] [--metric M]     reproduce Fig 5(a/b/c) rows
 //! spoga gemm [--artifact NAME]            run an AOT GEMM vs golden model
 //! spoga serve [--requests N] [--workers W] [--backend B]
-//!                                         self-driven serving demo; B in
-//!                                         {software, photonic, holylight,
-//!                                         deapcnn} (photonic backends add
-//!                                         live sim-FPS/W telemetry)
+//!             [--shards N] [--split a:b=w1:w2] [--policy P]
+//!                                         self-driven serving demo over a
+//!                                         shard fleet; B in {software,
+//!                                         photonic, holylight, deapcnn}
+//!                                         (photonic backends add live
+//!                                         sim-FPS/W telemetry). --shards
+//!                                         replicates; --split builds a
+//!                                         heterogeneous weighted fleet,
+//!                                         e.g. software:photonic=1:1;
+//!                                         --policy in {rr, least}
 //! spoga info                              artifact + platform diagnostics
 //! ```
 
@@ -130,30 +136,120 @@ fn cmd_gemm(flags: &HashMap<String, String>) {
     println!("{name}: {m}x{k}x{n} in {dt:?} — matches bitslice golden model");
 }
 
-fn cmd_serve(flags: &HashMap<String, String>) {
-    use spoga::coordinator::{Coordinator, CoordinatorConfig};
+/// `--backend` / `--split` backend names → `BackendKind`. Unknown names
+/// abort: a typo in a fleet split would otherwise silently serve the wrong
+/// A/B experiment (all-software, zero telemetry).
+fn parse_backend(name: &str) -> spoga::runtime::BackendKind {
     use spoga::runtime::{BackendKind, PhotonicConfig};
+    match name {
+        "software" => BackendKind::Software,
+        "photonic" | "spoga" => BackendKind::Photonic(PhotonicConfig::spoga()),
+        "holylight" => BackendKind::Photonic(PhotonicConfig::holylight()),
+        "deapcnn" => BackendKind::Photonic(PhotonicConfig::deapcnn()),
+        other => {
+            eprintln!(
+                "unknown backend {other:?}: expected software|photonic|spoga|holylight|deapcnn"
+            );
+            std::process::exit(2);
+        }
+    }
+}
+
+/// Parse `--split software:photonic=1:3` into backends + optional weights.
+/// Malformed weight tokens abort like unknown backend names do — a dropped
+/// token would silently reshape the A/B split.
+fn parse_split(spec: &str) -> (Vec<spoga::runtime::BackendKind>, Option<Vec<u32>>) {
+    let (names, weights) = match spec.split_once('=') {
+        Some((lhs, rhs)) => {
+            let w: Vec<u32> = rhs
+                .split(':')
+                .map(|v| {
+                    v.parse().unwrap_or_else(|_| {
+                        eprintln!("bad weight {v:?} in --split {spec:?}: expected integers");
+                        std::process::exit(2);
+                    })
+                })
+                .collect();
+            (lhs, Some(w))
+        }
+        None => (spec, None),
+    };
+    (names.split(':').map(parse_backend).collect(), weights)
+}
+
+fn cmd_serve(flags: &HashMap<String, String>) {
+    use spoga::coordinator::{CoordinatorConfig, Fleet, FleetConfig, RoutePolicy};
     let requests: usize = flags.get("requests").and_then(|v| v.parse().ok()).unwrap_or(256);
     let workers: usize = flags.get("workers").and_then(|v| v.parse().ok()).unwrap_or(2);
-    // --backend software (default) | photonic | holylight | deapcnn
-    let backend = match flags.get("backend").map(String::as_str) {
-        Some("photonic") | Some("spoga") => BackendKind::Photonic(PhotonicConfig::spoga()),
-        Some("holylight") => BackendKind::Photonic(PhotonicConfig::holylight()),
-        Some("deapcnn") => BackendKind::Photonic(PhotonicConfig::deapcnn()),
-        _ => BackendKind::Software,
+
+    // Fleet shape: --split names heterogeneous backends (with optional
+    // weights); --shards sets the shard count (default: one per split
+    // backend, or 1). The single-coordinator path is just the 1-shard
+    // fleet — there is one serving path.
+    let (kinds, weights) = match flags.get("split") {
+        Some(spec) => parse_split(spec),
+        None => (
+            vec![parse_backend(flags.get("backend").map(String::as_str).unwrap_or("software"))],
+            None,
+        ),
     };
-    println!("backend: {}", backend.label());
-    let cfg = CoordinatorConfig {
+    let shards: usize = flags
+        .get("shards")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(kinds.len())
+        .max(1);
+    // Count mismatches would silently reshape the experiment (dropped
+    // backends or recycled weights), so reject them like backend typos.
+    if let Some(w) = &weights {
+        if w.len() != kinds.len() {
+            eprintln!(
+                "--split has {} backends but {} weights; counts must match",
+                kinds.len(),
+                w.len()
+            );
+            std::process::exit(2);
+        }
+    }
+    if shards % kinds.len() != 0 {
+        eprintln!(
+            "--shards {shards} is not a multiple of the {} backend(s) in --split; \
+             every backend must get the same shard count",
+            kinds.len()
+        );
+        std::process::exit(2);
+    }
+    let base = CoordinatorConfig {
         artifact_dir: flags
             .get("artifacts")
             .cloned()
             .unwrap_or_else(|| "artifacts".to_string()),
         workers,
-        backend,
         ..Default::default()
     };
-    let c = Coordinator::start(cfg).expect("coordinator");
-    let h = c.handle();
+    let shard_cfgs: Vec<CoordinatorConfig> = (0..shards)
+        .map(|i| CoordinatorConfig { backend: kinds[i % kinds.len()].clone(), ..base.clone() })
+        .collect();
+    let policy = match (flags.get("policy").map(String::as_str), weights) {
+        (None, Some(w)) => {
+            RoutePolicy::Weighted((0..shards).map(|i| w[i % w.len()]).collect())
+        }
+        (None, None) | (Some("rr"), None) => RoutePolicy::RoundRobin,
+        (Some("least"), None) => RoutePolicy::LeastQueueDepth,
+        (Some("rr"), Some(_)) | (Some("least"), Some(_)) => {
+            eprintln!("--policy conflicts with --split weights; use one or the other");
+            std::process::exit(2);
+        }
+        (Some(other), _) => {
+            eprintln!("unknown policy {other:?}: expected rr|least");
+            std::process::exit(2);
+        }
+    };
+    for (i, c) in shard_cfgs.iter().enumerate() {
+        println!("shard {i}: backend {}", c.backend.label());
+    }
+    let fleet = Fleet::start(FleetConfig { shards: shard_cfgs, policy, labels: Vec::new() })
+        .expect("fleet");
+    let h = fleet.handle();
     let t0 = std::time::Instant::now();
     let clients = 4usize;
     let per = requests / clients;
@@ -173,12 +269,16 @@ fn cmd_serve(flags: &HashMap<String, String>) {
     }
     let dt = t0.elapsed().as_secs_f64();
     println!(
-        "{} requests in {dt:.3}s = {:.0} req/s",
+        "{} requests in {dt:.3}s = {:.0} req/s over {} shard(s)",
         per * clients,
-        per as f64 * clients as f64 / dt
+        per as f64 * clients as f64 / dt,
+        h.shard_count(),
     );
-    println!("{}", h.stats().summary());
-    c.shutdown();
+    for (i, label) in h.shard_labels().iter().enumerate() {
+        println!("{label}: {}", h.shard_stats(i).summary());
+    }
+    println!("fleet rollup:\n{}", h.telemetry().summary());
+    fleet.shutdown();
 }
 
 fn cmd_trace(flags: &HashMap<String, String>) {

@@ -11,6 +11,27 @@ use crate::sim::engine::simulate_frame;
 use crate::units::DataRate;
 use crate::Result;
 
+/// `count ÷ denom`, 0.0 when the denominator is not positive — the shared
+/// shape of every sim-FPS / FPS-per-watt identity (reported executions over
+/// projected latency or energy). One definition, used by
+/// [`CoordinatorStats`](crate::coordinator::CoordinatorStats),
+/// [`LiveTelemetry`], [`ShardTelemetry`] and [`FleetTelemetry`] alike.
+pub fn per_unit(count: u64, denom: f64) -> f64 {
+    if denom <= 0.0 {
+        return 0.0;
+    }
+    count as f64 / denom
+}
+
+/// Fraction of transduced lanes whose served integer matched the exact
+/// result (1.0 when nothing reported lanes — an exact digital path).
+pub fn exact_fraction(noise_events: u64, lanes: u64) -> f64 {
+    if lanes == 0 {
+        return 1.0;
+    }
+    1.0 - noise_events as f64 / lanes as f64
+}
+
 /// Geometric mean of a nonempty slice.
 pub fn gmean(xs: &[f64]) -> f64 {
     if xs.is_empty() {
@@ -152,18 +173,207 @@ impl LiveTelemetry {
 
     /// Projected executions per second (frames ÷ projected latency).
     pub fn fps(&self) -> f64 {
-        if self.sim_latency_s <= 0.0 {
-            return 0.0;
-        }
-        self.frames as f64 / self.sim_latency_s
+        per_unit(self.frames, self.sim_latency_s)
     }
 
     /// Projected executions per joule — the paper's FPS/W identity.
     pub fn fps_per_w(&self) -> f64 {
+        per_unit(self.frames, self.energy_j)
+    }
+}
+
+/// One shard's stats, snapshotted for the fleet rollup. All counters are
+/// read once per capture, so a [`FleetTelemetry`] built from distinct
+/// shards sums each served request exactly once.
+#[derive(Debug, Clone)]
+pub struct ShardTelemetry {
+    /// Shard display label (e.g. `shard0:software`, `shard1:photonic:SPOGA_10x64`).
+    pub label: String,
+    /// Requests accepted.
+    pub requests: u64,
+    /// Requests completed successfully.
+    pub completed: u64,
+    /// Requests failed.
+    pub failed: u64,
+    /// MLP micro-batches executed.
+    pub batches: u64,
+    /// Whole-CNN inferences served.
+    pub cnn_frames: u64,
+    /// Stacked same-model CNN micro-batches executed.
+    pub cnn_batches: u64,
+    /// Executions that carried photonic telemetry.
+    pub sim_reports: u64,
+    /// Total projected photonic latency, seconds.
+    pub sim_latency_s: f64,
+    /// Total projected photonic energy, joules.
+    pub energy_j: f64,
+    /// Analog lanes transduced.
+    pub lanes: u64,
+    /// Noise-perturbed outputs.
+    pub noise_events: u64,
+}
+
+impl ShardTelemetry {
+    /// Snapshot one shard's live stats.
+    pub fn capture(
+        label: impl Into<String>,
+        stats: &crate::coordinator::CoordinatorStats,
+    ) -> Self {
+        use std::sync::atomic::Ordering::Relaxed;
+        ShardTelemetry {
+            label: label.into(),
+            requests: stats.requests.load(Relaxed),
+            completed: stats.completed.load(Relaxed),
+            failed: stats.failed.load(Relaxed),
+            batches: stats.batches.load(Relaxed),
+            cnn_frames: stats.cnn_frames.load(Relaxed),
+            cnn_batches: stats.cnn_batches.load(Relaxed),
+            sim_reports: stats.sim_reports.load(Relaxed),
+            sim_latency_s: stats.sim_latency_total_s(),
+            energy_j: stats.sim_energy_total_j(),
+            lanes: stats.lanes.load(Relaxed),
+            noise_events: stats.noise_events.load(Relaxed),
+        }
+    }
+
+    /// This shard's projected sim-FPS for the traffic it served.
+    pub fn sim_fps(&self) -> f64 {
+        if self.sim_latency_s <= 0.0 {
+            return 0.0;
+        }
+        self.sim_reports as f64 / self.sim_latency_s
+    }
+
+    /// This shard's projected FPS per watt.
+    pub fn sim_fps_per_w(&self) -> f64 {
         if self.energy_j <= 0.0 {
             return 0.0;
         }
-        self.frames as f64 / self.energy_j
+        self.sim_reports as f64 / self.energy_j
+    }
+
+    /// Fraction of transduced lanes served exactly (1.0 for digital shards).
+    pub fn served_exact_fraction(&self) -> f64 {
+        if self.lanes == 0 {
+            return 1.0;
+        }
+        1.0 - self.noise_events as f64 / self.lanes as f64
+    }
+}
+
+/// Fleet-wide serving telemetry: per-shard
+/// [`CoordinatorStats`](crate::coordinator::CoordinatorStats) snapshots
+/// summed into one rollup. Because every request is served by exactly one
+/// shard and each shard's counters are snapshotted once, the totals equal
+/// the sum of the per-shard stats with nothing double-counted.
+#[derive(Debug, Clone, Default)]
+pub struct FleetTelemetry {
+    /// Per-shard snapshots, shard order.
+    pub shards: Vec<ShardTelemetry>,
+}
+
+impl FleetTelemetry {
+    /// Rollup over per-shard snapshots.
+    pub fn new(shards: Vec<ShardTelemetry>) -> Self {
+        FleetTelemetry { shards }
+    }
+
+    /// Total requests accepted across the fleet.
+    pub fn requests(&self) -> u64 {
+        self.shards.iter().map(|s| s.requests).sum()
+    }
+
+    /// Total requests completed.
+    pub fn completed(&self) -> u64 {
+        self.shards.iter().map(|s| s.completed).sum()
+    }
+
+    /// Total requests failed.
+    pub fn failed(&self) -> u64 {
+        self.shards.iter().map(|s| s.failed).sum()
+    }
+
+    /// Total whole-CNN frames served.
+    pub fn cnn_frames(&self) -> u64 {
+        self.shards.iter().map(|s| s.cnn_frames).sum()
+    }
+
+    /// Total reported (photonic) executions.
+    pub fn sim_reports(&self) -> u64 {
+        self.shards.iter().map(|s| s.sim_reports).sum()
+    }
+
+    /// Total projected photonic latency, seconds.
+    pub fn sim_latency_total_s(&self) -> f64 {
+        self.shards.iter().map(|s| s.sim_latency_s).sum()
+    }
+
+    /// Total projected photonic energy, joules.
+    pub fn sim_energy_total_j(&self) -> f64 {
+        self.shards.iter().map(|s| s.energy_j).sum()
+    }
+
+    /// Total analog lanes transduced.
+    pub fn lanes(&self) -> u64 {
+        self.shards.iter().map(|s| s.lanes).sum()
+    }
+
+    /// Total noise-perturbed outputs.
+    pub fn noise_events(&self) -> u64 {
+        self.shards.iter().map(|s| s.noise_events).sum()
+    }
+
+    /// Fleet-wide projected sim-FPS (reported executions ÷ total projected
+    /// latency) — the live-traffic analogue of the paper's FPS figures.
+    pub fn sim_fps(&self) -> f64 {
+        per_unit(self.sim_reports(), self.sim_latency_total_s())
+    }
+
+    /// Fleet-wide projected FPS per watt.
+    pub fn sim_fps_per_w(&self) -> f64 {
+        per_unit(self.sim_reports(), self.sim_energy_total_j())
+    }
+
+    /// Fleet-wide fraction of transduced lanes served exactly.
+    pub fn served_exact_fraction(&self) -> f64 {
+        exact_fraction(self.noise_events(), self.lanes())
+    }
+
+    /// Multi-line human-readable rollup (one line per shard + totals).
+    pub fn summary(&self) -> String {
+        let mut s = String::new();
+        for sh in &self.shards {
+            s.push_str(&format!(
+                "  {:28} requests={} completed={} failed={} cnn_frames={}",
+                sh.label, sh.requests, sh.completed, sh.failed, sh.cnn_frames
+            ));
+            if sh.sim_reports > 0 {
+                s.push_str(&format!(
+                    " sim(fps={:.0} fps/W={:.0} exact={:.4})",
+                    sh.sim_fps(),
+                    sh.sim_fps_per_w(),
+                    sh.served_exact_fraction()
+                ));
+            }
+            s.push('\n');
+        }
+        s.push_str(&format!(
+            "  fleet: requests={} completed={} failed={} cnn_frames={}",
+            self.requests(),
+            self.completed(),
+            self.failed(),
+            self.cnn_frames()
+        ));
+        if self.sim_reports() > 0 {
+            s.push_str(&format!(
+                " sim(fps={:.0} fps/W={:.0} noise_events={} exact={:.4})",
+                self.sim_fps(),
+                self.sim_fps_per_w(),
+                self.noise_events(),
+                self.served_exact_fraction()
+            ));
+        }
+        s
     }
 }
 
@@ -214,6 +424,61 @@ mod tests {
     fn gmean_ratio_missing_variant_is_none() {
         let fig = build_figure(Metric::Fps, &[DataRate::Gs10], FIG5_CORES).unwrap();
         assert!(fig.gmean_ratio("SPOGA_10", "nonexistent").is_none());
+    }
+
+    #[test]
+    fn fleet_rollup_totals_equal_sum_of_shards() {
+        use crate::coordinator::CoordinatorStats;
+        use std::sync::atomic::Ordering::Relaxed;
+        let a = CoordinatorStats::default();
+        let b = CoordinatorStats::default();
+        a.requests.fetch_add(10, Relaxed);
+        a.completed.fetch_add(9, Relaxed);
+        a.failed.fetch_add(1, Relaxed);
+        b.requests.fetch_add(4, Relaxed);
+        b.completed.fetch_add(4, Relaxed);
+        b.cnn_frames.fetch_add(2, Relaxed);
+        let r = crate::runtime::ExecReport {
+            sim_latency_s: 1e-3,
+            energy_j: 2e-4,
+            lanes: 50,
+            noise_events: 5,
+        };
+        b.record_report(&r);
+        b.record_report(&r);
+
+        let fleet = FleetTelemetry::new(vec![
+            ShardTelemetry::capture("a", &a),
+            ShardTelemetry::capture("b", &b),
+        ]);
+        assert_eq!(fleet.requests(), 14);
+        assert_eq!(fleet.completed(), 13);
+        assert_eq!(fleet.failed(), 1);
+        assert_eq!(fleet.cnn_frames(), 2);
+        assert_eq!(fleet.sim_reports(), 2);
+        assert_eq!(fleet.lanes(), 100);
+        assert_eq!(fleet.noise_events(), 10);
+        assert!((fleet.sim_latency_total_s() - 2e-3).abs() < 1e-15);
+        assert!((fleet.sim_energy_total_j() - 4e-4).abs() < 1e-15);
+        assert!((fleet.sim_fps() - 1000.0).abs() < 1e-9);
+        assert!((fleet.sim_fps_per_w() - 5000.0).abs() < 1e-6);
+        assert!((fleet.served_exact_fraction() - 0.9).abs() < 1e-12);
+        // Per-shard views survive in the rollup (A/B readout).
+        assert_eq!(fleet.shards[0].label, "a");
+        assert_eq!(fleet.shards[1].sim_reports, 2);
+        assert_eq!(fleet.shards[0].served_exact_fraction(), 1.0);
+        let s = fleet.summary();
+        assert!(s.contains("fleet: requests=14"), "{s}");
+        assert!(s.contains("exact=0.9000"), "{s}");
+    }
+
+    #[test]
+    fn empty_fleet_rollup_is_zero() {
+        let fleet = FleetTelemetry::default();
+        assert_eq!(fleet.requests(), 0);
+        assert_eq!(fleet.sim_fps(), 0.0);
+        assert_eq!(fleet.sim_fps_per_w(), 0.0);
+        assert_eq!(fleet.served_exact_fraction(), 1.0);
     }
 
     #[test]

@@ -109,71 +109,136 @@ pub(crate) fn surrogate_layer_weights(li: usize, g: usize, k: usize, c: usize) -
 /// `input` is the first layer's activation tensor in wire format (int8
 /// values in i32 lanes; HWC layout for convs). Returns the final layer's
 /// raw int32 outputs plus per-layer photonic telemetry (if the backend
-/// reports any).
+/// reports any). This is the batch-of-one case of [`run_cnn_batch`], so
+/// single-frame and batched serving share one code path by construction.
 pub fn run_cnn(engine: &mut Engine, model: &CnnModel, input: &[i32]) -> Result<CnnRun> {
-    validate_cnn_input(model, input.len())?;
-    let mut act: Vec<i8> = input.iter().map(|&v| v as i8).collect();
-    let mut raw: Vec<i32> = Vec::new();
-    let mut layers: Vec<LayerReport> = Vec::new();
-    let mut agg: Option<ExecReport> = None;
+    let mut runs = run_cnn_batch(engine, model, &[input])?;
+    Ok(runs.pop().expect("batch of one yields one run"))
+}
+
+/// Serve `inputs.len()` same-model CNN inferences in one pass, stacking the
+/// member frames along the t-dimension: each conv layer's im2col blocks
+/// concatenate into one `(B·t)×k` matrix and each FC layer's rows into a
+/// `B×k` matrix, so every layer group costs one plan lookup and one kernel
+/// launch for the whole batch instead of one per frame.
+///
+/// Row independence of GEMM makes stacking exact: every member's logits are
+/// bit-identical to its own [`run_cnn`] on an exact backend. Per-frame
+/// [`LayerReport`]s price each frame's *own* grouped layer shape (the same
+/// quantity [`crate::sim::engine::simulate_frame`] reports), so batching
+/// changes wall-clock amortization, never telemetry.
+///
+/// Noise injection caveat: a noisy backend perturbs the stacked execute as
+/// one noise stream, so per-frame noise events are only attributable for
+/// `B == 1`; for larger batches the per-frame reports carry
+/// `noise_events = 0` and callers that need event attribution must serve
+/// unbatched (the coordinator disables CNN batching when its backend
+/// injects noise).
+pub fn run_cnn_batch(
+    engine: &mut Engine,
+    model: &CnnModel,
+    inputs: &[&[i32]],
+) -> Result<Vec<CnnRun>> {
+    if inputs.is_empty() {
+        return Ok(Vec::new());
+    }
+    for input in inputs {
+        validate_cnn_input(model, input.len())?;
+    }
+    let b = inputs.len();
+    let mut acts: Vec<Vec<i8>> =
+        inputs.iter().map(|inp| inp.iter().map(|&v| v as i8).collect()).collect();
+    let mut raws: Vec<Vec<i32>> = vec![Vec::new(); b];
+    let mut layer_reports: Vec<Vec<LayerReport>> = vec![Vec::new(); b];
+    let mut aggs: Vec<Option<ExecReport>> = vec![None; b];
 
     for (li, layer) in model.layers.iter().enumerate() {
         let shape = layer.gemm();
-        let mut noise_events = 0u64;
+        let mut stacked_noise = 0u64;
         match layer {
             Layer::Conv { in_h, in_w, in_ch, out_ch, kernel, stride, pad, groups, .. } => {
                 let (oh, ow) = layer.out_hw();
                 let (t, k, c) = (oh * ow, shape.k, shape.c);
-                raw = vec![0i32; t * out_ch];
+                for raw in raws.iter_mut() {
+                    *raw = vec![0i32; t * out_ch];
+                }
                 for g in 0..*groups {
-                    let a8 =
-                        im2col_group(&act, *in_h, *in_w, *in_ch, *kernel, *stride, *pad, *groups, g);
-                    let a_wire: Vec<i32> = a8.iter().map(|&v| v as i32).collect();
+                    // Stack every frame's im2col block for this group.
+                    let mut a_wire: Vec<i32> = Vec::with_capacity(b * t * k);
+                    for act in &acts {
+                        let a8 = im2col_group(
+                            act, *in_h, *in_w, *in_ch, *kernel, *stride, *pad, *groups, g,
+                        );
+                        a_wire.extend(a8.iter().map(|&v| v as i32));
+                    }
                     let w_wire: Vec<i32> = surrogate_layer_weights(li, g, k, c)
                         .iter()
                         .map(|&v| v as i32)
                         .collect();
-                    let (out, rep) = engine.execute_gemm_shape(t, k, c, &a_wire, &w_wire)?;
+                    let (out, rep) = engine.execute_gemm_shape(b * t, k, c, &a_wire, &w_wire)?;
                     if let Some(r) = rep {
-                        noise_events += r.noise_events;
+                        stacked_noise += r.noise_events;
                     }
-                    // Scatter the group's t×c block into the HWC output.
-                    for row in 0..t {
-                        raw[row * out_ch + g * c..row * out_ch + g * c + c]
-                            .copy_from_slice(&out[row * c..(row + 1) * c]);
+                    // Scatter each frame's t×c block into its HWC output.
+                    for (f, raw) in raws.iter_mut().enumerate() {
+                        for row in 0..t {
+                            raw[row * out_ch + g * c..row * out_ch + g * c + c]
+                                .copy_from_slice(&out[(f * t + row) * c..(f * t + row + 1) * c]);
+                        }
                     }
                 }
-                act = raw.iter().map(|&v| requantize(v, k)).collect();
+                for (act, raw) in acts.iter_mut().zip(&raws) {
+                    *act = raw.iter().map(|&v| requantize(v, k)).collect();
+                }
             }
             Layer::Fc { in_features, out_features, .. } => {
-                let a_wire: Vec<i32> = act.iter().map(|&v| v as i32).collect();
+                // Stack every frame's activation row: B×k · k×c.
+                let mut a_wire: Vec<i32> = Vec::with_capacity(b * in_features);
+                for act in &acts {
+                    a_wire.extend(act.iter().map(|&v| v as i32));
+                }
                 let w_wire: Vec<i32> =
                     surrogate_layer_weights(li, 0, *in_features, *out_features)
                         .iter()
                         .map(|&v| v as i32)
                         .collect();
                 let (out, rep) =
-                    engine.execute_gemm_shape(1, *in_features, *out_features, &a_wire, &w_wire)?;
+                    engine.execute_gemm_shape(b, *in_features, *out_features, &a_wire, &w_wire)?;
                 if let Some(r) = rep {
-                    noise_events += r.noise_events;
+                    stacked_noise += r.noise_events;
                 }
-                act = out.iter().map(|&v| requantize(v, *in_features)).collect();
-                raw = out;
+                for f in 0..b {
+                    let row = &out[f * out_features..(f + 1) * out_features];
+                    acts[f] = row.iter().map(|&v| requantize(v, *in_features)).collect();
+                    raws[f] = row.to_vec();
+                }
             }
         }
-        // Per-layer projection on the full grouped shape — identical to the
-        // layer's record in `simulate_frame` for the same accelerator.
-        if let Some(mut r) = engine.report_for(&shape) {
-            r.noise_events = noise_events;
-            match &mut agg {
-                Some(a) => a.merge(&r),
-                None => agg = Some(r),
+        // Per-frame projection on the frame's full grouped shape — identical
+        // to the layer's record in `simulate_frame` for the same accelerator,
+        // whatever the batch size.
+        if let Some(r) = engine.report_for(&shape) {
+            for f in 0..b {
+                let mut rf = r;
+                rf.noise_events = if b == 1 { stacked_noise } else { 0 };
+                aggs[f] = Some(match aggs[f] {
+                    Some(mut a) => {
+                        a.merge(&rf);
+                        a
+                    }
+                    None => rf,
+                });
+                layer_reports[f].push(LayerReport { layer: layer.name().to_string(), report: rf });
             }
-            layers.push(LayerReport { layer: layer.name().to_string(), report: r });
         }
     }
 
-    Ok(CnnRun { logits: raw, report: agg, layers })
+    Ok(raws
+        .into_iter()
+        .zip(aggs)
+        .zip(layer_reports)
+        .map(|((logits, report), layers)| CnnRun { logits, report, layers })
+        .collect())
 }
 
 #[cfg(test)]
@@ -246,6 +311,70 @@ mod tests {
         // Determinism across repeat runs.
         let again = run_cnn(&mut sw, &model, &input).unwrap();
         assert_eq!(again.logits, r_sw.logits);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn batched_frames_match_unbatched_runs_bit_for_bit() {
+        let dir = synthetic_dir("batch");
+        let model = tiny_model();
+        let frames: Vec<Vec<i32>> = (0..3)
+            .map(|f| (0..6 * 6 * 3).map(|v| ((v * 31 + f * 97) % 251) - 125).collect())
+            .collect();
+        let refs: Vec<&[i32]> = frames.iter().map(|f| f.as_slice()).collect();
+
+        for backend in [
+            BackendKind::Software,
+            BackendKind::Photonic(PhotonicConfig::spoga()),
+        ] {
+            let mut eng = Engine::with_backend(&dir, backend.clone()).unwrap();
+            let batched = run_cnn_batch(&mut eng, &model, &refs).unwrap();
+            assert_eq!(batched.len(), frames.len());
+            for (f, frame) in frames.iter().enumerate() {
+                let single = run_cnn(&mut eng, &model, frame).unwrap();
+                assert_eq!(
+                    batched[f].logits, single.logits,
+                    "{}: frame {f} diverged under t-stacking",
+                    backend.label()
+                );
+                // Per-frame telemetry is identical to the unbatched run's:
+                // each frame prices its own grouped layer shapes.
+                assert_eq!(batched[f].layers.len(), single.layers.len());
+                for (bl, sl) in batched[f].layers.iter().zip(&single.layers) {
+                    assert_eq!(bl.layer, sl.layer);
+                    assert_eq!(bl.report, sl.report, "{}: layer {}", backend.label(), bl.layer);
+                }
+                assert_eq!(batched[f].report, single.report);
+            }
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn zero_frame_in_stack_leaves_other_members_exact() {
+        // The padding-exactness property the MLP batcher relies on, pinned
+        // for CNN stacking: an all-zero frame in the stack must not perturb
+        // its co-batched members (GEMM rows are independent).
+        let dir = synthetic_dir("zeropad");
+        let model = tiny_model();
+        let mut eng = Engine::new(&dir).unwrap();
+        let live: Vec<i32> = (0..6 * 6 * 3).map(|v| ((v * 29) % 251) - 125).collect();
+        let zero = vec![0i32; 6 * 6 * 3];
+
+        let alone = run_cnn(&mut eng, &model, &live).unwrap();
+        let padded =
+            run_cnn_batch(&mut eng, &model, &[&zero, &live, &zero]).unwrap();
+        assert_eq!(padded[1].logits, alone.logits, "zero co-frames perturbed a member");
+        // The zero frames themselves serve deterministically too.
+        assert_eq!(padded[0].logits, padded[2].logits);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn empty_batch_is_a_no_op() {
+        let dir = synthetic_dir("empty");
+        let mut eng = Engine::new(&dir).unwrap();
+        assert!(run_cnn_batch(&mut eng, &tiny_model(), &[]).unwrap().is_empty());
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -27,7 +27,10 @@
 //!   noise injection replaces exact integers with analog-observed ones.
 //!
 //! Whole CNN inferences are served by [`cnnrun::run_cnn`], which drives a
-//! [`crate::dnn::CnnModel`] through im2col layer by layer over any backend.
+//! [`crate::dnn::CnnModel`] through im2col layer by layer over any backend;
+//! [`cnnrun::run_cnn_batch`] stacks same-model frames along the t-dimension
+//! so a batch costs one GEMM per layer group (the coordinator's CNN
+//! batching path).
 //!
 //! A PJRT backend (the `xla` crate compiling the HLO text on a CPU client)
 //! previously occupied the software slot and can return as a third
@@ -46,7 +49,7 @@ pub mod software;
 
 pub use artifact::{ArtifactMeta, Manifest, TensorSpec};
 pub use backend::{BackendExec, BackendKind, ExecBackend, ExecReport};
-pub use cnnrun::{run_cnn, validate_cnn_input, CnnRun, LayerReport};
+pub use cnnrun::{run_cnn, run_cnn_batch, validate_cnn_input, CnnRun, LayerReport};
 pub use engine::Engine;
 pub use photonic::{PhotonicBackend, PhotonicConfig};
 pub use software::SoftwareBackend;

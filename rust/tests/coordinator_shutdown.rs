@@ -1,17 +1,22 @@
-//! Integration: coordinator shutdown under in-flight load.
+//! Integration: coordinator shutdown and fleet failover under in-flight
+//! load.
 //!
 //! Submits a burst from concurrent clients, calls `shutdown()` mid-stream,
 //! and asserts that **every** reply slot resolves — either with a result or
 //! with a shutdown error — and that the coordinator's threads are joined
-//! (no leaks, no panics). Runs against a synthetic manifest so it never
-//! skips.
+//! (no leaks, no panics). The fleet test retires one shard's worker pool
+//! mid-burst and asserts that blocking clients fail over to the surviving
+//! shard while every reply slot still resolves. Runs against a synthetic
+//! manifest so it never skips.
 
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
-use spoga::coordinator::{Coordinator, CoordinatorConfig, Response};
+use spoga::coordinator::{
+    Coordinator, CoordinatorConfig, Fleet, FleetConfig, Response, RoutePolicy,
+};
 
 fn synthetic_dir(tag: &str) -> PathBuf {
     let dir = std::env::temp_dir()
@@ -132,6 +137,74 @@ fn repeated_start_shutdown_cycles_are_clean() {
         c.shutdown();
         assert!(h.submit_mlp(vec![0; 16]).is_err(), "cycle {cycle} left a live leader");
     }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn fleet_fails_over_when_one_shards_workers_die_mid_burst() {
+    let dir = synthetic_dir("failover");
+    let cfg = CoordinatorConfig {
+        artifact_dir: dir.to_string_lossy().into_owned(),
+        workers: 2,
+        max_batch_wait_s: 0.002,
+        ..Default::default()
+    };
+    let fleet = Fleet::start(FleetConfig {
+        shards: vec![cfg.clone(), cfg],
+        policy: RoutePolicy::RoundRobin,
+        labels: Vec::new(),
+    })
+    .unwrap();
+    let h = fleet.handle();
+
+    // Blocking clients hammer the fleet; they must ALL succeed even though
+    // shard 0's worker pool dies mid-burst (the handle retries shard-down
+    // errors on the surviving shard).
+    let clients = 4usize;
+    let per_client = 48usize;
+    let mut joins = Vec::new();
+    for cl in 0..clients {
+        let h = h.clone();
+        joins.push(std::thread::spawn(move || {
+            for i in 0..per_client {
+                let row: Vec<i32> = (0..16).map(|v| ((cl + i + v) % 100) as i32).collect();
+                h.infer_mlp(row).expect("fleet must fail over, not fail the request");
+            }
+        }));
+    }
+
+    // Let part of the burst land, then kill shard 0's workers. Its leader
+    // stays alive, so queued jobs resolve (with errors once the pool is
+    // gone) instead of hanging.
+    std::thread::sleep(Duration::from_millis(2));
+    h.shard(0).retire_workers().unwrap();
+
+    for j in joins {
+        j.join().expect("client thread must not panic");
+    }
+
+    // Slot-based submissions aimed straight at the dead shard still
+    // resolve — with an error naming the dead pool, never a hang.
+    let rx = h.shard(0).submit_mlp(vec![0; 16]).unwrap();
+    match rx.recv_timeout(Duration::from_secs(30)) {
+        Ok(Err(e)) => assert!(e.to_string().contains("no live workers"), "{e}"),
+        Ok(Ok(_)) => panic!("dead shard served a request"),
+        Err(e) => panic!("reply slot never resolved: {e}"),
+    }
+
+    // The fleet noticed the death (a blocking retry marked it dead, or the
+    // probe above would) and still serves through the survivor.
+    let out = h.infer_mlp(vec![1; 16]).unwrap();
+    assert_eq!(out.len(), 4);
+    assert!(h.live_shard_count() >= 1);
+    let t = h.telemetry();
+    assert_eq!(
+        t.completed(),
+        t.shards.iter().map(|s| s.completed).sum::<u64>(),
+        "rollup stays consistent across failover"
+    );
+
+    fleet.shutdown();
     let _ = std::fs::remove_dir_all(&dir);
 }
 

@@ -1,0 +1,291 @@
+//! Integration: the sharded multi-coordinator fleet.
+//!
+//! Pins the PR's acceptance contract, all against synthetic manifests so
+//! nothing ever skips:
+//!
+//! * a 2-shard software|photonic fleet serves a mixed GEMM/MLP/CNN burst
+//!   **bit-identically** to a 1-shard fleet (routing and t-stacked CNN
+//!   batching never change served integers);
+//! * batched CNN per-layer reports still match `sim::simulate_frame`
+//!   exactly for the same accelerator;
+//! * `FleetTelemetry` totals equal the sum of the per-shard stats;
+//! * weighted routing splits deterministically, least-queue-depth prefers
+//!   idle shards.
+
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+
+use spoga::arch::accel::Accelerator;
+use spoga::coordinator::{
+    CoordinatorConfig, Fleet, FleetConfig, Response, RoutePolicy,
+};
+use spoga::dnn::models::CnnModel;
+use spoga::dnn::Layer;
+use spoga::runtime::{BackendKind, PhotonicConfig};
+use spoga::sim::engine::simulate_frame;
+use spoga::testing::SplitMix64;
+
+const MANIFEST: &str = "\
+gemm_8x8x8 g.hlo.txt i32:8x8,i32:8x8 i32:8x8
+mlp_b1 m1.hlo.txt i32:1x16 i32:1x4
+mlp_b4 m4.hlo.txt i32:4x16 i32:4x4
+";
+
+fn synthetic_dir(tag: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("spoga-fleet-test-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.txt"), MANIFEST).unwrap();
+    dir
+}
+
+fn shard_cfg(dir: &PathBuf, backend: BackendKind) -> CoordinatorConfig {
+    CoordinatorConfig {
+        artifact_dir: dir.to_string_lossy().into_owned(),
+        workers: 1,
+        backend,
+        max_batch_wait_s: 0.01,
+        ..Default::default()
+    }
+}
+
+fn tiny_cnn() -> CnnModel {
+    CnnModel {
+        name: "tiny_fleet",
+        layers: vec![
+            Layer::conv("stem", 8, 8, 3, 8, 3, 1, 1),
+            Layer::dwconv("dw", 8, 8, 8, 3, 2, 1),
+            Layer::fc("head", 4 * 4 * 8, 10),
+        ],
+    }
+}
+
+fn wire(rng: &mut SplitMix64, len: usize) -> Vec<i32> {
+    (0..len).map(|_| rng.i8() as i32).collect()
+}
+
+/// Fire a deterministic mixed burst through a fleet handle (slot-based, so
+/// co-pending CNN frames can batch) and return every reply's outputs in
+/// submission order.
+fn mixed_burst(h: &spoga::coordinator::FleetHandle) -> Vec<Vec<i32>> {
+    let mut rng = SplitMix64::new(0xF1EE7);
+    let model = tiny_cnn();
+    let mut slots: Vec<Response> = Vec::new();
+    for _ in 0..6 {
+        let (a, b) = (wire(&mut rng, 64), wire(&mut rng, 64));
+        slots.push(h.submit_gemm("gemm_8x8x8", a, b).unwrap());
+    }
+    for t in 0..8 {
+        let row: Vec<i32> = (0..16).map(|v| (v * 7 + t) % 100).collect();
+        slots.push(h.submit_mlp(row).unwrap());
+    }
+    for f in 0..4 {
+        let input: Vec<i32> = (0..8 * 8 * 3).map(|v| ((v * 13 + f * 71) % 251) - 125).collect();
+        slots.push(h.submit_cnn(model.clone(), input).unwrap());
+    }
+    slots
+        .into_iter()
+        .map(|rx| rx.recv().expect("slot resolves").expect("request succeeds").outputs)
+        .collect()
+}
+
+#[test]
+fn two_shard_mixed_fleet_is_bit_identical_to_single_shard() {
+    let dir = synthetic_dir("identical");
+
+    let single = Fleet::single(shard_cfg(&dir, BackendKind::Software)).unwrap();
+    let reference = mixed_burst(&single.handle());
+    single.shutdown();
+
+    let dual = Fleet::start(FleetConfig {
+        shards: vec![
+            shard_cfg(&dir, BackendKind::Software),
+            shard_cfg(&dir, BackendKind::Photonic(PhotonicConfig::spoga())),
+        ],
+        policy: RoutePolicy::RoundRobin,
+        labels: Vec::new(),
+    })
+    .unwrap();
+    let h = dual.handle();
+    assert_eq!(h.shard_count(), 2);
+    let served = mixed_burst(&h);
+    assert_eq!(served, reference, "sharded serving changed served integers");
+
+    // Both shards actually took traffic (round-robin over 18 requests).
+    let fleet = h.telemetry();
+    assert!(fleet.shards[0].requests > 0 && fleet.shards[1].requests > 0);
+    assert_eq!(fleet.requests(), 18);
+    assert_eq!(fleet.completed(), 18);
+    assert_eq!(fleet.failed(), 0);
+    // The photonic shard reported telemetry; the software shard did not.
+    assert_eq!(fleet.shards[0].sim_reports, 0);
+    assert!(fleet.shards[1].sim_reports > 0);
+    assert!(fleet.sim_fps() > 0.0 && fleet.sim_fps_per_w() > 0.0);
+
+    dual.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn fleet_telemetry_totals_equal_sum_of_per_shard_stats() {
+    let dir = synthetic_dir("rollup");
+    let fleet = Fleet::start(FleetConfig {
+        shards: vec![
+            shard_cfg(&dir, BackendKind::Software),
+            shard_cfg(&dir, BackendKind::Photonic(PhotonicConfig::spoga())),
+        ],
+        policy: RoutePolicy::RoundRobin,
+        labels: Vec::new(),
+    })
+    .unwrap();
+    let h = fleet.handle();
+    let _ = mixed_burst(&h);
+
+    let t = h.telemetry();
+    let mut requests = 0;
+    let mut completed = 0;
+    let mut failed = 0;
+    let mut sim_reports = 0;
+    let mut lanes = 0;
+    let mut sim_latency = 0.0;
+    let mut energy = 0.0;
+    for i in 0..h.shard_count() {
+        let s = h.shard_stats(i);
+        requests += s.requests.load(Ordering::Relaxed);
+        completed += s.completed.load(Ordering::Relaxed);
+        failed += s.failed.load(Ordering::Relaxed);
+        sim_reports += s.sim_reports.load(Ordering::Relaxed);
+        lanes += s.lanes.load(Ordering::Relaxed);
+        sim_latency += s.sim_latency_total_s();
+        energy += s.sim_energy_total_j();
+    }
+    assert_eq!(t.requests(), requests);
+    assert_eq!(t.completed(), completed);
+    assert_eq!(t.failed(), failed);
+    assert_eq!(t.sim_reports(), sim_reports);
+    assert_eq!(t.lanes(), lanes);
+    assert!((t.sim_latency_total_s() - sim_latency).abs() <= 1e-15 * sim_latency.abs());
+    assert!((t.sim_energy_total_j() - energy).abs() <= 1e-15 * energy.abs());
+
+    fleet.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn batched_cnn_replies_match_simulate_frame_per_layer() {
+    let dir = synthetic_dir("cnnbatch");
+    let model = tiny_cnn();
+    let pc = PhotonicConfig::spoga();
+    let fleet =
+        Fleet::single(shard_cfg(&dir, BackendKind::Photonic(pc.clone()))).unwrap();
+    let h = fleet.handle();
+
+    // Submit same-model frames back to back so the leader's batching
+    // window stacks them along the t-dimension.
+    let inputs: Vec<Vec<i32>> = (0..4)
+        .map(|f| (0..8 * 8 * 3).map(|v| ((v * 17 + f * 101) % 251) - 125).collect())
+        .collect();
+    let slots: Vec<Response> = inputs
+        .iter()
+        .map(|input| h.submit_cnn(model.clone(), input.clone()).unwrap())
+        .collect();
+    let replies: Vec<_> = slots
+        .into_iter()
+        .map(|rx| rx.recv().unwrap().expect("cnn frame served"))
+        .collect();
+
+    // Every frame went through the CnnBatch path (the coordinator stacks
+    // all CNN traffic when batching is enabled).
+    let stats = h.shard_stats(0);
+    let batches = stats.cnn_batches.load(Ordering::Relaxed);
+    assert!(batches >= 1, "no stacked CNN batch executed");
+    assert_eq!(stats.cnn_frames.load(Ordering::Relaxed), 4);
+
+    // Per-layer telemetry must match the offline simulator exactly for
+    // every frame, batched or not.
+    let accel = Accelerator::equal_cores(pc.arch, pc.rate, pc.cores).unwrap();
+    let frame = simulate_frame(&accel, &model.workload());
+    for reply in &replies {
+        assert_eq!(reply.layers.len(), frame.layers.len());
+        for (served, simmed) in reply.layers.iter().zip(&frame.layers) {
+            assert_eq!(served.layer, simmed.layer);
+            let rel = |a: f64, b: f64| (a - b).abs() / b.abs().max(1e-300);
+            assert!(
+                rel(served.report.sim_latency_s, simmed.latency_s) < 1e-12,
+                "{}: batched served latency {} vs simulated {}",
+                served.layer,
+                served.report.sim_latency_s,
+                simmed.latency_s
+            );
+            assert!(
+                rel(served.report.energy_j, simmed.energy.total_j()) < 1e-12,
+                "{}: batched served energy {} vs simulated {}",
+                served.layer,
+                served.report.energy_j,
+                simmed.energy.total_j()
+            );
+        }
+        let agg = reply.report.expect("photonic aggregate");
+        assert!((agg.sim_latency_s - frame.latency_s).abs() / frame.latency_s < 1e-12);
+    }
+
+    fleet.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn weighted_split_routes_deterministic_proportions() {
+    let dir = synthetic_dir("weighted");
+    let fleet = Fleet::start(FleetConfig {
+        shards: vec![
+            shard_cfg(&dir, BackendKind::Software),
+            shard_cfg(&dir, BackendKind::Software),
+        ],
+        policy: RoutePolicy::Weighted(vec![1, 3]),
+        labels: vec!["w1".into(), "w3".into()],
+    })
+    .unwrap();
+    let h = fleet.handle();
+    assert_eq!(h.shard_labels(), vec!["w1", "w3"]);
+
+    let mut rng = SplitMix64::new(3);
+    for _ in 0..8 {
+        let (a, b) = (wire(&mut rng, 64), wire(&mut rng, 64));
+        h.gemm("gemm_8x8x8", a, b).unwrap();
+    }
+    // 1:3 over 8 sequential picks is exact: 2 and 6.
+    assert_eq!(h.shard_stats(0).requests.load(Ordering::Relaxed), 2);
+    assert_eq!(h.shard_stats(1).requests.load(Ordering::Relaxed), 6);
+
+    fleet.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn least_queue_depth_routes_to_idle_shard_under_serving() {
+    let dir = synthetic_dir("least");
+    let fleet = Fleet::start(FleetConfig {
+        shards: vec![
+            shard_cfg(&dir, BackendKind::Software),
+            shard_cfg(&dir, BackendKind::Software),
+        ],
+        policy: RoutePolicy::LeastQueueDepth,
+        labels: Vec::new(),
+    })
+    .unwrap();
+    let h = fleet.handle();
+    // Fake a backlog on shard 0: accepted-but-unresolved requests.
+    h.shard_stats(0).requests.fetch_add(100, Ordering::Relaxed);
+    let before = h.shard_stats(1).requests.load(Ordering::Relaxed);
+    for t in 0..4 {
+        let row: Vec<i32> = (0..16).map(|v| (v + t) % 50).collect();
+        h.infer_mlp(row).unwrap();
+    }
+    assert_eq!(
+        h.shard_stats(1).requests.load(Ordering::Relaxed),
+        before + 4,
+        "least-queue-depth must route everything to the idle shard"
+    );
+    fleet.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
