@@ -1,0 +1,155 @@
+//! Bench: the noise-aware serving frontier — served accuracy vs projected
+//! sim-FPS/W over the K × ADC-bits grid (`NoiseSweepGrid::paper_range`),
+//! with wall-clock serving throughput per cell.
+//!
+//! One noise-injecting photonic shard per grid cell serves t-stacked CNN
+//! probe frames of its own K-length dot products (batching stays ON under
+//! noise — per-row attribution keeps every frame's events exact), so the
+//! numbers answer: what does each point of the paper's spatial-parallelism
+//! × ADC-resolution plane cost in served accuracy, projected efficiency,
+//! and host-side serving rate?
+//!
+//! Self-contained (synthetic manifest in a temp dir; no `make artifacts`).
+//! Results print as a table and are written as JSON (default
+//! `BENCH_noise.json`, override with the `NOISE_BENCH_OUT` env var).
+//!
+//! Run: `cargo bench --bench noise_frontier [frames_per_cell]`
+
+use std::sync::atomic::Ordering;
+use std::time::Instant;
+
+use spoga::coordinator::{CoordinatorConfig, Fleet, FleetConfig, NoiseSweepGrid};
+use spoga::report::{fmt_sig, Table};
+use spoga::runtime::{BackendKind, PhotonicConfig};
+
+struct CellResult {
+    k: usize,
+    adc_bits: u32,
+    req_per_s: f64,
+    served_exact: f64,
+    noise_events: u64,
+    lanes: u64,
+    sim_fps: f64,
+    sim_fps_per_w: f64,
+    cnn_batches: u64,
+}
+
+fn synthetic_artifacts() -> std::path::PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("spoga-noise-bench-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("temp artifact dir");
+    std::fs::write(dir.join("manifest.txt"), "mlp_b1 m.hlo.txt i32:1x16 i32:1x4\n")
+        .expect("write manifest");
+    dir
+}
+
+fn main() {
+    let frames: usize =
+        std::env::args().nth(1).and_then(|v| v.parse().ok()).unwrap_or(64);
+    let grid = NoiseSweepGrid::paper_range();
+    let dir = synthetic_artifacts();
+    let base = CoordinatorConfig {
+        artifact_dir: dir.to_string_lossy().into_owned(),
+        workers: 2,
+        backend: BackendKind::Photonic(PhotonicConfig::spoga()),
+        max_batch_wait_s: 0.002,
+        ..Default::default()
+    };
+    println!(
+        "noise frontier: K ∈ {:?} × adc bits ∈ {:?}, margin +{:.0} dB, \
+         {frames} t-stacked CNN probe frames per cell\n",
+        grid.ks, grid.adc_bits, grid.margin_db
+    );
+
+    let fleet = Fleet::start(FleetConfig::noise_grid(base, &grid)).expect("noise-grid fleet");
+    let h = fleet.handle();
+    // Warm every cell before timing (plans compile on first frame).
+    grid.drive(&h, 1).expect("warmup frame");
+
+    let cells = grid.cells();
+    let mut results = Vec::with_capacity(cells.len());
+    for (i, &(k, adc_bits)) in cells.iter().enumerate() {
+        let before = spoga::metrics::ShardTelemetry::capture("pre", h.shard_stats(i));
+        let batches_before = h.shard_stats(i).cnn_batches.load(Ordering::Relaxed);
+        let t0 = Instant::now();
+        let served = grid.drive_cell(&h, i, frames).expect("cell traffic");
+        let wall = t0.elapsed().as_secs_f64();
+        let after = spoga::metrics::ShardTelemetry::capture("post", h.shard_stats(i));
+        let (lanes, noise) =
+            (after.lanes - before.lanes, after.noise_events - before.noise_events);
+        results.push(CellResult {
+            k,
+            adc_bits,
+            req_per_s: served as f64 / wall.max(1e-12),
+            served_exact: spoga::metrics::exact_fraction(noise, lanes),
+            noise_events: noise,
+            lanes,
+            sim_fps: spoga::metrics::per_unit(
+                after.sim_reports - before.sim_reports,
+                after.sim_latency_s - before.sim_latency_s,
+            ),
+            sim_fps_per_w: spoga::metrics::per_unit(
+                after.sim_reports - before.sim_reports,
+                after.energy_j - before.energy_j,
+            ),
+            cnn_batches: h.shard_stats(i).cnn_batches.load(Ordering::Relaxed) - batches_before,
+        });
+    }
+    let total_batches: u64 = results.iter().map(|r| r.cnn_batches).sum();
+    assert!(total_batches > 0, "stacked CNN batching must stay on under noise");
+    fleet.shutdown();
+
+    let mut t = Table::new(vec![
+        "K",
+        "adc bits",
+        "req/s",
+        "served-exact",
+        "noise events",
+        "lanes",
+        "sim FPS",
+        "sim FPS/W",
+    ]);
+    for r in &results {
+        t.row(vec![
+            r.k.to_string(),
+            r.adc_bits.to_string(),
+            fmt_sig(r.req_per_s, 3),
+            format!("{:.6}", r.served_exact),
+            r.noise_events.to_string(),
+            r.lanes.to_string(),
+            fmt_sig(r.sim_fps, 3),
+            fmt_sig(r.sim_fps_per_w, 3),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // ---- JSON trajectory record ---------------------------------------------
+    let out_path = std::env::var("NOISE_BENCH_OUT")
+        .unwrap_or_else(|_| "BENCH_noise.json".to_string());
+    let rows: Vec<String> = results
+        .iter()
+        .map(|r| {
+            format!(
+                "    {{\"k\": {}, \"adc_bits\": {}, \"req_per_s\": {:.1}, \
+                 \"served_exact\": {:.6}, \"noise_events\": {}, \"lanes\": {}, \
+                 \"sim_fps\": {:.3e}, \"sim_fps_per_w\": {:.3e}}}",
+                r.k, r.adc_bits, r.req_per_s, r.served_exact, r.noise_events, r.lanes,
+                r.sim_fps, r.sim_fps_per_w
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"noise_frontier\",\n  \"frames_per_cell\": {frames},\n  \
+         \"margin_db\": {:.1},\n  \
+         \"workload\": \"t-stacked CNN probe frames, 1xKx{} GEMM per frame, \
+         noisy SPOGA_10 shards\",\n  \"status\": \"measured\",\n  \"results\": [\n{}\n  ]\n}}\n",
+        grid.margin_db,
+        NoiseSweepGrid::PROBE_OUTPUTS,
+        rows.join(",\n")
+    );
+    match std::fs::write(&out_path, &json) {
+        Ok(()) => println!("wrote {out_path}"),
+        Err(e) => eprintln!("could not write {out_path}: {e}"),
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -79,16 +79,21 @@ impl MicroBatch {
     }
 
     /// Split a flat output into per-job rows (dropping padding rows) and
-    /// deliver them. Every member shares the micro-batch's photonic report
-    /// (the batch executed as one artifact invocation).
+    /// deliver them. Members share the micro-batch's projected cost (the
+    /// batch executed as one artifact invocation), but when the backend
+    /// attributed noise per row, member `i` receives *its own* row's noise
+    /// events and lane count
+    /// ([`crate::runtime::backend::ExecReport::for_row`]) — exact
+    /// per-request attribution even under stacked noisy execution.
     pub fn deliver(self, output: &[i32], report: Option<crate::runtime::backend::ExecReport>) {
         let out_len = output.len() / self.batch;
         for (i, j) in self.jobs.into_iter().enumerate() {
             let row = output[i * out_len..(i + 1) * out_len].to_vec();
+            let member = report.as_ref().map(|r| r.for_row(i, out_len as u64));
             // Receiver may have hung up (caller timeout); that's their loss.
             let _ = j.reply.send(Ok(crate::coordinator::request::Reply {
                 outputs: row,
-                report,
+                report: member,
                 layers: Vec::new(),
             }));
         }
@@ -227,6 +232,30 @@ mod tests {
         let reply2 = r2.recv().unwrap().unwrap();
         assert_eq!(reply2.outputs, vec![3, 4, 5]);
         assert!(reply2.report.is_none());
+    }
+
+    #[test]
+    fn delivery_slices_row_noise_attribution_per_member() {
+        use crate::runtime::backend::ExecReport;
+        let (j1, r1) = job(1);
+        let (j2, r2) = job(2);
+        let mb = MicroBatch { artifact: "mlp_b8".into(), batch: 8, jobs: vec![j1, j2] };
+        let out: Vec<i32> = (0..24).collect(); // 8 rows of 3
+        let batch_report = ExecReport {
+            sim_latency_s: 1e-6,
+            energy_j: 2e-9,
+            lanes: 24,
+            noise_events: 7,
+            row_noise: vec![4, 3, 0, 0, 0, 0, 0, 0],
+        };
+        mb.deliver(&out, Some(batch_report));
+        let rep1 = r1.recv().unwrap().unwrap().report.unwrap();
+        assert_eq!((rep1.lanes, rep1.noise_events), (3, 4));
+        assert_eq!(rep1.row_noise, vec![4]);
+        let rep2 = r2.recv().unwrap().unwrap().report.unwrap();
+        assert_eq!((rep2.lanes, rep2.noise_events), (3, 3));
+        // Projected cost stays the batch's — one artifact invocation.
+        assert_eq!(rep2.sim_latency_s, 1e-6);
     }
 
     #[test]

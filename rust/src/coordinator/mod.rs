@@ -30,9 +30,12 @@
 //! sim-FPS / FPS-per-watt per shard, and
 //! [`FleetTelemetry`](crate::metrics::FleetTelemetry) rolls the shards up
 //! fleet-wide — run a software|SPOGA|HOLYLIGHT fleet over the same
-//! artifacts to A/B design points on identical live traffic, or a
+//! artifacts to A/B design points on identical live traffic, a
 //! [`FleetConfig::noise_sweep`] to trade served accuracy against sim-FPS/W
-//! across link margins.
+//! across link margins, or a [`FleetConfig::noise_grid`] over a
+//! [`NoiseSweepGrid`] (K × ADC bits) for the full accuracy-vs-efficiency
+//! frontier — all with batching *on*, since noise attributes per output
+//! row (see [`crate::runtime::backend`]'s per-row contract).
 //!
 //! No tokio in the vendored dependency set: the pool is `std::thread` +
 //! `std::sync::mpsc`, which for a CPU-bound backend is also the honest
@@ -47,6 +50,6 @@ pub mod worker;
 
 pub use batcher::{BatchPolicy, CnnMicroBatch, MicroBatch};
 pub use request::{CnnJob, GemmJob, Job, MlpJob, Reply, Response};
-pub use router::{Fleet, FleetConfig, FleetHandle, RoutePolicy};
+pub use router::{Fleet, FleetConfig, FleetHandle, NoiseSweepGrid, RoutePolicy};
 pub use service::{Coordinator, CoordinatorConfig, CoordinatorHandle};
 pub use stats::CoordinatorStats;

@@ -16,7 +16,9 @@ pub struct Reply {
     pub outputs: Vec<i32>,
     /// Aggregate photonic projection for this request (`None` when served
     /// by a digital backend). Batched MLP rows share their micro-batch's
-    /// report.
+    /// projected cost, but under noise injection each member carries *its
+    /// own* row's `noise_events`/`lanes`/`row_noise` (see
+    /// [`crate::runtime::backend::ExecReport::for_row`]).
     pub report: Option<ExecReport>,
     /// Per-layer telemetry — populated for [`Job::Cnn`] on reporting
     /// backends, empty otherwise.

@@ -128,6 +128,253 @@ impl FleetConfig {
         }
         FleetConfig { shards, policy: RoutePolicy::RoundRobin, labels }
     }
+
+    /// Noise-aware serving *grid*: one noise-injecting photonic shard per
+    /// [`NoiseSweepGrid`] cell (K × ADC bits, shared link margin), labelled
+    /// `K{k}/adc{bits}`. `base`'s backend supplies the design point
+    /// (non-photonic bases study SPOGA_10). Shards share the same base
+    /// noise seed per K — the Gaussian stage of two cells that differ only
+    /// in ADC resolution then draws identically on identical traffic, so
+    /// the ADC axis of the trade table isolates quantization.
+    ///
+    /// Drive each cell's K-shaped traffic with [`NoiseSweepGrid::drive`]
+    /// (or [`NoiseSweepGrid::drive_cell`]) and read the served-accuracy vs
+    /// sim-FPS/W frontier off [`FleetHandle::telemetry`] — the full trade
+    /// *curves* the ROADMAP's noise-aware study calls for, where
+    /// [`FleetConfig::noise_sweep`] covers only the link-margin axis.
+    pub fn noise_grid(base: CoordinatorConfig, grid: &NoiseSweepGrid) -> Self {
+        let pc = match &base.backend {
+            BackendKind::Photonic(p) => p.clone(),
+            _ => PhotonicConfig::spoga(),
+        };
+        let cells = grid.cells();
+        let mut shards = Vec::with_capacity(cells.len());
+        let mut labels = Vec::with_capacity(cells.len());
+        for (k, bits) in cells {
+            let mut cfg = base.clone();
+            cfg.backend = BackendKind::Photonic(pc.clone().with_noise(
+                NoiseParams::from_link_margin(grid.margin_db).with_adc(bits),
+                0xADC0_5EED ^ ((k as u64) << 16),
+            ));
+            shards.push(cfg);
+            labels.push(format!("K{k}/adc{bits}"));
+        }
+        FleetConfig { shards, policy: RoutePolicy::RoundRobin, labels }
+    }
+}
+
+/// The K × ADC-bits noise-study grid (PAPER §IV–V: link margin vs spatial
+/// parallelism K and ADC resolution, here on the *serving* path).
+///
+/// Each cell `(k, adc_bits)` names one noise-injecting photonic shard of a
+/// [`FleetConfig::noise_grid`] fleet; the cell's probe traffic is K-length
+/// dot products (a single-FC CNN layer, so frames exercise the t-stacked
+/// batching path that per-row noise attribution keeps exact under noise).
+/// Reading served-exact fraction against projected sim-FPS/W across the
+/// cells yields the accuracy-vs-efficiency frontier that HOLYLIGHT and
+/// DEAP-CNN report only at fixed design points.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NoiseSweepGrid {
+    /// GEMM reduction lengths — the paper's spatial-parallelism axis K.
+    pub ks: Vec<usize>,
+    /// PWAB ADC resolutions, bits.
+    pub adc_bits: Vec<u32>,
+    /// Link margin above the 4-bit receiver sensitivity floor shared by
+    /// every cell, dB.
+    pub margin_db: f64,
+}
+
+impl NoiseSweepGrid {
+    /// Link margin the grid defaults to: high enough that receiver noise
+    /// does not drown the ADC axis, low enough that it still moves the K
+    /// axis.
+    pub const DEFAULT_MARGIN_DB: f64 = 40.0;
+
+    /// Outputs per probe dot-product row (the `c` of the `1×K×c` probe
+    /// GEMM each frame executes).
+    pub const PROBE_OUTPUTS: usize = 8;
+
+    /// The paper's spatial-parallelism range crossed with ADC resolutions
+    /// around the design point: Table I solves the MWA rows to N = 74
+    /// (5 dBm @ 10 GS/s), 160 (10 dBm @ 10 GS/s) and 249 (10 dBm @ 1 GS/s)
+    /// — the K range over which the paper argues byte-size integer GEMM
+    /// survives — × {4, 6, 8}-bit PWAB ADCs.
+    pub fn paper_range() -> Self {
+        NoiseSweepGrid {
+            ks: vec![74, 160, 249],
+            adc_bits: vec![4, 6, 8],
+            margin_db: Self::DEFAULT_MARGIN_DB,
+        }
+    }
+
+    /// Parse a grid spec such as `K=74,160,adc=6,8` (optionally with a
+    /// trailing `margin=40`): comma-separated tokens where `K=` / `adc=` /
+    /// `margin=` prefixes switch which list subsequent bare numbers extend.
+    pub fn parse(spec: &str) -> Result<Self> {
+        #[derive(Clone, Copy, PartialEq)]
+        enum Axis {
+            K,
+            Adc,
+            Margin,
+        }
+        let bad = |msg: String| Error::Config(format!("noise grid {spec:?}: {msg}"));
+        let mut grid = NoiseSweepGrid {
+            ks: Vec::new(),
+            adc_bits: Vec::new(),
+            margin_db: Self::DEFAULT_MARGIN_DB,
+        };
+        let mut axis: Option<Axis> = None;
+        let mut margin_set = false;
+        for raw in spec.split(',') {
+            let tok = raw.trim();
+            if tok.is_empty() {
+                continue;
+            }
+            let value = if let Some(v) = tok.strip_prefix("K=").or_else(|| tok.strip_prefix("k=")) {
+                axis = Some(Axis::K);
+                v
+            } else if let Some(v) = tok.strip_prefix("adc=") {
+                axis = Some(Axis::Adc);
+                v
+            } else if let Some(v) = tok.strip_prefix("margin=") {
+                axis = Some(Axis::Margin);
+                v
+            } else {
+                tok
+            };
+            match axis {
+                None => return Err(bad(format!("token {tok:?} before any K=/adc= prefix"))),
+                Some(Axis::K) => {
+                    let k = value
+                        .parse::<usize>()
+                        .ok()
+                        .filter(|&k| k >= 1)
+                        .ok_or_else(|| bad(format!("bad K value {value:?}")))?;
+                    if grid.ks.contains(&k) {
+                        return Err(bad(format!("duplicate K value {k}")));
+                    }
+                    grid.ks.push(k);
+                }
+                Some(Axis::Adc) => {
+                    let bits = value
+                        .parse::<u32>()
+                        .ok()
+                        .filter(|&b| (1..=16).contains(&b))
+                        .ok_or_else(|| bad(format!("bad adc bits {value:?} (want 1..=16)")))?;
+                    if grid.adc_bits.contains(&bits) {
+                        return Err(bad(format!("duplicate adc value {bits}")));
+                    }
+                    grid.adc_bits.push(bits);
+                }
+                Some(Axis::Margin) => {
+                    if margin_set {
+                        return Err(bad(format!(
+                            "margin given more than once (second value {value:?})"
+                        )));
+                    }
+                    margin_set = true;
+                    grid.margin_db = value
+                        .parse::<f64>()
+                        .ok()
+                        .filter(|m| m.is_finite() && *m >= 0.0)
+                        .ok_or_else(|| bad(format!("bad margin {value:?}")))?;
+                }
+            }
+        }
+        if grid.ks.is_empty() || grid.adc_bits.is_empty() {
+            return Err(bad("need at least one K and one adc value".into()));
+        }
+        Ok(grid)
+    }
+
+    /// Grid cells `(k, adc_bits)` in fleet-shard order (K-major), matching
+    /// [`FleetConfig::noise_grid`]'s shard layout.
+    pub fn cells(&self) -> Vec<(usize, u32)> {
+        let mut cells = Vec::with_capacity(self.ks.len() * self.adc_bits.len());
+        for &k in &self.ks {
+            for &bits in &self.adc_bits {
+                cells.push((k, bits));
+            }
+        }
+        cells
+    }
+
+    /// Drive `frames` probe CNN frames (each a `1×K×PROBE_OUTPUTS` GEMM
+    /// through a single-FC model, deterministic per-K inputs) at cell
+    /// `cell`'s shard, slot-based so same-model frames stack in the
+    /// batching window — exercising t-stacked CNN serving under noise.
+    /// Returns the number of replies served.
+    pub fn drive_cell(&self, handle: &FleetHandle, cell: usize, frames: usize) -> Result<usize> {
+        let cells = self.cells();
+        if handle.shard_count() != cells.len() {
+            return Err(Error::Config(format!(
+                "fleet has {} shards but the grid has {} cells — build it with \
+                 FleetConfig::noise_grid over this grid",
+                handle.shard_count(),
+                cells.len()
+            )));
+        }
+        let (k, _bits) = cells[cell];
+        let model = CnnModel {
+            name: "noise_grid_probe",
+            layers: vec![crate::dnn::Layer::fc("dot", k, Self::PROBE_OUTPUTS)],
+        };
+        let shard = handle.shard(cell);
+        let mut rng = crate::testing::SplitMix64::new(0x6_B1D ^ ((k as u64) << 20));
+        let slots: Vec<Response> = (0..frames)
+            .map(|_| {
+                let input: Vec<i32> = (0..k).map(|_| rng.i8() as i32).collect();
+                shard.submit_cnn(model.clone(), input)
+            })
+            .collect::<Result<_>>()?;
+        let mut served = 0usize;
+        for rx in slots {
+            rx.recv()
+                .map_err(|_| Error::Coordinator("noise-grid reply slot dropped".into()))??;
+            served += 1;
+        }
+        Ok(served)
+    }
+
+    /// Drive every cell's probe traffic ([`NoiseSweepGrid::drive_cell`]) in
+    /// shard order; returns total replies served (`frames × cells`).
+    pub fn drive(&self, handle: &FleetHandle, frames: usize) -> Result<usize> {
+        let mut served = 0;
+        for cell in 0..self.cells().len() {
+            served += self.drive_cell(handle, cell, frames)?;
+        }
+        Ok(served)
+    }
+
+    /// Render the frontier readout for a fleet built over this grid: one
+    /// row per cell — stacked-batch count, lanes, noise events,
+    /// served-exact fraction, projected sim-FPS and sim-FPS/W. Shared by
+    /// `spoga serve --noise-grid` and `examples/fleet_serve.rs` so the
+    /// study's table cannot drift between surfaces.
+    pub fn frontier_table(&self, handle: &FleetHandle) -> crate::report::Table {
+        let telemetry = handle.telemetry();
+        let mut table = crate::report::Table::new(vec![
+            "cell",
+            "cnn stacks",
+            "lanes",
+            "noise events",
+            "served-exact",
+            "sim FPS",
+            "sim FPS/W",
+        ]);
+        for (i, shard) in telemetry.shards.iter().enumerate() {
+            table.row(vec![
+                shard.label.clone(),
+                handle.shard_stats(i).cnn_batches.load(Ordering::Relaxed).to_string(),
+                shard.lanes.to_string(),
+                shard.noise_events.to_string(),
+                format!("{:.6}", shard.served_exact_fraction()),
+                crate::report::fmt_sig(shard.sim_fps(), 3),
+                crate::report::fmt_sig(shard.sim_fps_per_w(), 3),
+            ]);
+        }
+        table
+    }
 }
 
 struct ShardSlot {
@@ -539,6 +786,63 @@ mod tests {
             labels: Vec::new(),
         })
         .is_err());
+    }
+
+    #[test]
+    fn noise_grid_parse_accepts_axis_prefixed_lists() {
+        let g = NoiseSweepGrid::parse("K=74,160,adc=6,8").unwrap();
+        assert_eq!(g.ks, vec![74, 160]);
+        assert_eq!(g.adc_bits, vec![6, 8]);
+        assert_eq!(g.margin_db, NoiseSweepGrid::DEFAULT_MARGIN_DB);
+        assert_eq!(g.cells(), vec![(74, 6), (74, 8), (160, 6), (160, 8)]);
+
+        let m = NoiseSweepGrid::parse("k=16,adc=4,margin=55.5").unwrap();
+        assert_eq!((m.ks.clone(), m.adc_bits.clone()), (vec![16], vec![4]));
+        assert!((m.margin_db - 55.5).abs() < 1e-12);
+
+        // Malformed specs fail loudly instead of silently reshaping the
+        // study — including duplicate axis values and repeated margins.
+        for bad in [
+            "", "64,128", "K=,adc=4", "K=0,adc=4", "K=64", "adc=8",
+            "K=64,adc=0", "K=64,adc=17", "K=64,adc=8,margin=-3", "K=x,adc=4",
+            "K=74,74,adc=4", "K=74,adc=4,4", "K=74,adc=4,margin=30,60",
+            "K=74,adc=4,margin=30,margin=60",
+        ] {
+            assert!(NoiseSweepGrid::parse(bad).is_err(), "{bad:?} should be rejected");
+        }
+    }
+
+    #[test]
+    fn noise_grid_builds_one_noisy_shard_per_cell() {
+        let grid = NoiseSweepGrid::parse("K=74,249,adc=6,12").unwrap();
+        let cfg = FleetConfig::noise_grid(CoordinatorConfig::default(), &grid);
+        assert_eq!(cfg.shards.len(), 4);
+        assert_eq!(cfg.labels, vec!["K74/adc6", "K74/adc12", "K249/adc6", "K249/adc12"]);
+        for (i, ((k, bits), s)) in grid.cells().into_iter().zip(&cfg.shards).enumerate() {
+            match &s.backend {
+                BackendKind::Photonic(p) => {
+                    let noise = p.noise.expect("grid shard injects noise");
+                    assert_eq!(noise.adc_bits, Some(bits), "cell {i}");
+                    assert!(
+                        (noise.snr_db - (24.1 + NoiseSweepGrid::DEFAULT_MARGIN_DB)).abs() < 1e-9
+                    );
+                    // Seeds keyed by K only: the Gaussian stage of cells
+                    // that differ only in ADC bits draws identically.
+                    assert_eq!(p.noise_seed, 0xADC0_5EED ^ ((k as u64) << 16));
+                }
+                other => panic!("grid shard {i} is not photonic: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn noise_grid_drive_rejects_mismatched_fleets() {
+        let (h, shards) = two_shard_handle("gridmismatch", RoutePolicy::RoundRobin);
+        let grid = NoiseSweepGrid::paper_range(); // 9 cells vs 2 shards
+        assert!(grid.drive(&h, 1).is_err());
+        for c in shards {
+            c.shutdown();
+        }
     }
 
     #[test]

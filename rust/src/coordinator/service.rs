@@ -33,9 +33,11 @@ pub struct CoordinatorConfig {
     /// batching, stacking trades latency for throughput: a sparse CNN
     /// stream pays up to [`CoordinatorConfig::max_batch_wait_s`] per frame
     /// waiting for co-batchable traffic — set this to 1 for
-    /// latency-critical single-stream serving. Ignored — forced to 1 —
-    /// when the backend injects analog noise, so per-frame noise events
-    /// stay attributable to their requests.
+    /// latency-critical single-stream serving. Batching stays enabled
+    /// under analog noise injection: the backend attributes noise per
+    /// output row (the per-row contract in [`crate::runtime::backend`]),
+    /// so every stacked frame's reply carries exactly the noise events an
+    /// unbatched run would have observed.
     pub max_cnn_batch: usize,
     /// Ingress queue depth (backpressure bound).
     pub queue_depth: usize,
@@ -185,19 +187,13 @@ impl Coordinator {
             return Err(Error::Config("no mlp_b* artifacts in manifest".into()));
         }
         let mlp_row_len = manifest.get(&variants[0].0)?.inputs[0].elements() / variants[0].1;
-        let mut policy = BatchPolicy::new(variants, cfg.max_batch_wait_s)?;
-        // Batching shrinks when the backend injects noise: a noisy execute
-        // is one noise stream over the whole batch, so batch members would
-        // share one batch-level `noise_events`/`lanes` report and lose
-        // per-request attribution. CNN frames therefore serve unbatched,
-        // and MLP rows use only the smallest batch variant (the finest
-        // attribution granularity the artifact set offers — exactly
-        // per-request when an `mlp_b1` variant exists).
-        let noisy = matches!(&cfg.backend, BackendKind::Photonic(p) if p.noise.is_some());
-        if noisy {
-            policy.variants.truncate(1);
-        }
-        let cnn_batch_cap = if noisy { 1 } else { cfg.max_cnn_batch.max(1) };
+        let policy = BatchPolicy::new(variants, cfg.max_batch_wait_s)?;
+        // Batching stays at full strength under noise injection: backends
+        // attribute noise per output row (content-keyed sub-streams — see
+        // the per-row contract in `runtime::backend`), so the batcher hands
+        // every MLP member its own row's events and the CNN runtime slices
+        // stacked frames exactly. No noise→batch=1 clamp is needed.
+        let cnn_batch_cap = cfg.max_cnn_batch.max(1);
 
         let stats = Arc::new(CoordinatorStats::default());
         stats.live_workers.store(cfg.workers.max(1) as u64, Ordering::Relaxed);

@@ -290,6 +290,7 @@ mod tests {
             energy_j: 5e-4,
             lanes: 100,
             noise_events: 3,
+            row_noise: Vec::new(),
         };
         s.record_report(&r);
         s.record_report(&r);
@@ -315,6 +316,7 @@ mod tests {
                 energy_j: 1e-13,
                 lanes: 1,
                 noise_events: 0,
+                row_noise: Vec::new(),
             });
         }
         assert!((s.sim_latency_total_s() - 1e-9).abs() < 1e-18);

@@ -204,7 +204,14 @@ pub fn run_worker(
                         stats.padded_rows.fetch_add(padding, Ordering::Relaxed);
                         stats.completed.fetch_add(members, Ordering::Relaxed);
                         if let Some(r) = &report {
-                            stats.record_report(r);
+                            // Under noise, fold only the member rows'
+                            // attribution into the stats: padding rows were
+                            // never served to a request, and their noise
+                            // would skew served_exact_fraction below what
+                            // any reply carried (`deliver` below slices the
+                            // same per-member views into the replies).
+                            let out_len = (out.len() / batch.batch) as u64;
+                            stats.record_report(&r.served_rows(members as usize, out_len));
                         }
                         let now = Instant::now();
                         for j in &batch.jobs {

@@ -41,16 +41,32 @@ impl NoiseParams {
 }
 
 /// A noisy analog accumulation channel (one radix lane ending in a BPCA).
+///
+/// Two transduction disciplines coexist:
+///
+/// * the **sequential stream** ([`AnalogChannel::transduce`],
+///   [`AnalogChannel::transduce_lanes`], [`AnalogChannel::dot_i8`]) mutates
+///   the channel's RNG — each call consumes the next draws, the Monte-Carlo
+///   shape the offline [`crate::fidelity::fidelity_study`] wants;
+/// * the **content-keyed row path** ([`AnalogChannel::transduce_row`])
+///   derives a fresh sub-stream per output row from the channel's
+///   construction seed and the row's exact lane charges, leaving the
+///   sequential stream untouched. A row's noise then depends only on
+///   `(seed, row content)` — never on serving order, batch position or
+///   co-batched traffic — which is what gives the serving path exact,
+///   order-independent per-row noise attribution.
 #[derive(Debug)]
 pub struct AnalogChannel {
     params: NoiseParams,
+    /// Construction seed, kept for deriving content-keyed row sub-streams.
+    seed: u64,
     rng: SplitMix64,
 }
 
 impl AnalogChannel {
     /// New channel with deterministic noise stream `seed`.
     pub fn new(params: NoiseParams, seed: u64) -> Self {
-        AnalogChannel { params, rng: SplitMix64::new(seed) }
+        AnalogChannel { params, seed, rng: SplitMix64::new(seed) }
     }
 
     /// Approximate standard Gaussian via the Irwin–Hall sum of 12 uniforms
@@ -91,6 +107,39 @@ impl AnalogChannel {
         256.0 * self.transduce(hi as f64, 64.0 * kf)
             + 16.0 * self.transduce(mid as f64, 240.0 * kf)
             + self.transduce(lo as f64, 225.0 * kf)
+    }
+
+    /// Transduce one output row's exact lane accumulations — `hi[i]`,
+    /// `mid[i]`, `lo[i]` are the three BPCA charges of the row's `i`-th
+    /// K-length dot product — through a *content-keyed* sub-stream, and
+    /// return the analog-observed (PWAB-weighted) values.
+    ///
+    /// The sub-stream seed hashes `(k, row width, lane charges)` into the
+    /// channel's construction seed, so two calls with equal row content
+    /// draw identical noise wherever and whenever they happen: inside a
+    /// stacked batch, alone, or on a different channel instance built with
+    /// the same seed. `&self` — the sequential stream is not advanced.
+    /// (The flip side: byte-identical rows co-served in one batch correlate
+    /// perfectly; that determinism is the price of order-independent
+    /// attribution, and distinct traffic decorrelates.)
+    pub fn transduce_row(&self, hi: &[i32], mid: &[i32], lo: &[i32], k: usize) -> Vec<f64> {
+        debug_assert!(hi.len() == mid.len() && mid.len() == lo.len());
+        // FNV-1a over the row signature; collisions merely correlate two
+        // rows' noise, which the Monte-Carlo statistics shrug off.
+        const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const FNV_PRIME: u64 = 0x0000_0100_0000_01B3;
+        let fold = |h: u64, v: u64| (h ^ v).wrapping_mul(FNV_PRIME);
+        let mut h = fold(FNV_OFFSET, k as u64);
+        h = fold(h, hi.len() as u64);
+        for lane in [hi, mid, lo] {
+            for &v in lane {
+                h = fold(h, v as u32 as u64);
+            }
+        }
+        let mut sub = AnalogChannel::new(self.params, self.seed ^ h);
+        (0..hi.len())
+            .map(|i| sub.transduce_lanes(hi[i] as i64, mid[i] as i64, lo[i] as i64, k))
+            .collect()
     }
 
     /// Noisy SPOGA dot product of INT8 vectors: three lanes accumulated in
@@ -174,6 +223,42 @@ mod tests {
         let v = ch.transduce(13.0, 64.0);
         let lsb = 128.0 / 16.0;
         assert!((v / lsb - (v / lsb).round()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn transduce_row_is_content_keyed_not_order_keyed() {
+        let p = NoiseParams { snr_db: 24.1, adc_bits: None };
+        let (hi, mid, lo) = (vec![40i32, -12, 7], vec![3i32, 0, -9], vec![11i32, 2, 5]);
+
+        // Same content, same seed → same observations, regardless of how
+        // much of the channel's sequential stream was consumed first.
+        let fresh = AnalogChannel::new(p, 42).transduce_row(&hi, &mid, &lo, 8);
+        let mut advanced = AnalogChannel::new(p, 42);
+        for _ in 0..17 {
+            let _ = advanced.transduce(1.0, 64.0); // burn sequential draws
+        }
+        assert_eq!(advanced.transduce_row(&hi, &mid, &lo, 8), fresh);
+
+        // Different seeds or different content → different observations.
+        let other_seed = AnalogChannel::new(p, 43).transduce_row(&hi, &mid, &lo, 8);
+        assert_ne!(other_seed, fresh);
+        let mut hi2 = hi.clone();
+        hi2[1] += 1;
+        let other_row = AnalogChannel::new(p, 42).transduce_row(&hi2, &mid, &lo, 8);
+        assert_ne!(other_row, fresh);
+    }
+
+    #[test]
+    fn transduce_row_recovers_exact_weighted_sums_at_infinite_snr() {
+        let ch = AnalogChannel::new(NoiseParams { snr_db: 400.0, adc_bits: None }, 5);
+        let (hi, mid, lo) = (vec![9i32, -4], vec![1i32, 6], vec![-2i32, 3]);
+        let obs = ch.transduce_row(&hi, &mid, &lo, 4);
+        for i in 0..2 {
+            let exact = 256.0 * hi[i] as f64 + 16.0 * mid[i] as f64 + lo[i] as f64;
+            assert!((obs[i] - exact).abs() < 1e-6, "{} vs {exact}", obs[i]);
+        }
+        // Empty rows are a no-op.
+        assert!(ch.transduce_row(&[], &[], &[], 4).is_empty());
     }
 
     #[test]

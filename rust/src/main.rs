@@ -9,6 +9,7 @@
 //! spoga gemm [--artifact NAME]            run an AOT GEMM vs golden model
 //! spoga serve [--requests N] [--workers W] [--backend B]
 //!             [--shards N] [--split a:b=w1:w2] [--policy P]
+//!             [--noise-grid K=..,adc=..]
 //!                                         self-driven serving demo over a
 //!                                         shard fleet; B in {software,
 //!                                         photonic, holylight, deapcnn}
@@ -17,7 +18,16 @@
 //!                                         replicates; --split builds a
 //!                                         heterogeneous weighted fleet,
 //!                                         e.g. software:photonic=1:1;
-//!                                         --policy in {rr, least}
+//!                                         --policy in {rr, least}.
+//!                                         --noise-grid runs the noise-
+//!                                         aware serving study instead:
+//!                                         one noisy photonic shard per
+//!                                         K × ADC-bits cell (self-
+//!                                         contained synthetic manifest),
+//!                                         emitting the served-accuracy vs
+//!                                         sim-FPS/W frontier table; spec
+//!                                         e.g. K=74,160,adc=6,8 (empty =
+//!                                         the paper-range default grid)
 //! spoga info                              artifact + platform diagnostics
 //! ```
 
@@ -177,8 +187,72 @@ fn parse_split(spec: &str) -> (Vec<spoga::runtime::BackendKind>, Option<Vec<u32>
     (names.split(':').map(parse_backend).collect(), weights)
 }
 
+/// `serve --noise-grid`: the noise-aware serving study. Builds a
+/// self-contained fleet with one noise-injecting photonic shard per
+/// K × ADC-bits cell (synthetic manifest in a temp dir — the study needs no
+/// external artifacts), drives each cell's K-length probe traffic through
+/// the t-stacked CNN path, and prints the served-accuracy vs sim-FPS/W
+/// frontier table.
+fn cmd_noise_grid(spec: &str, flags: &HashMap<String, String>) {
+    use spoga::coordinator::{CoordinatorConfig, Fleet, FleetConfig, NoiseSweepGrid};
+    use spoga::runtime::{BackendKind, PhotonicConfig};
+
+    let grid = if spec.is_empty() {
+        NoiseSweepGrid::paper_range()
+    } else {
+        NoiseSweepGrid::parse(spec).unwrap_or_else(|e| {
+            eprintln!("{e}");
+            std::process::exit(2);
+        })
+    };
+    let frames: usize = flags.get("requests").and_then(|v| v.parse().ok()).unwrap_or(16);
+    let workers: usize = flags.get("workers").and_then(|v| v.parse().ok()).unwrap_or(2);
+
+    let dir = std::env::temp_dir().join(format!("spoga-noise-grid-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("temp artifact dir");
+    std::fs::write(dir.join("manifest.txt"), "mlp_b1 m.hlo.txt i32:1x16 i32:1x4\n")
+        .expect("write manifest");
+    let base = CoordinatorConfig {
+        artifact_dir: dir.to_string_lossy().into_owned(),
+        workers,
+        backend: BackendKind::Photonic(PhotonicConfig::spoga()),
+        ..Default::default()
+    };
+    let fleet = Fleet::start(FleetConfig::noise_grid(base, &grid)).expect("noise-grid fleet");
+    let h = fleet.handle();
+    let served = grid.drive(&h, frames).expect("grid probe traffic");
+    println!(
+        "noise frontier: {} cells × {frames} t-stacked CNN probe frames ({served} replies)\n",
+        grid.cells().len()
+    );
+
+    println!("{}", grid.frontier_table(&h).render());
+    println!(
+        "served-exact = 1 − noise_events/lanes for the traffic each cell actually\n\
+         served, with per-request attribution intact through stacked batches."
+    );
+    fleet.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 fn cmd_serve(flags: &HashMap<String, String>) {
     use spoga::coordinator::{CoordinatorConfig, Fleet, FleetConfig, RoutePolicy};
+    if let Some(spec) = flags.get("noise-grid") {
+        // The grid study builds its own self-contained fleet; fleet-shape
+        // flags would be silently discarded, so reject them like every
+        // other conflicting/unknown flag combination in this command.
+        for conflicting in ["backend", "split", "policy", "shards"] {
+            if flags.contains_key(conflicting) {
+                eprintln!(
+                    "--noise-grid conflicts with --{conflicting}: the grid study builds \
+                     one noisy photonic shard per cell itself"
+                );
+                std::process::exit(2);
+            }
+        }
+        cmd_noise_grid(spec, flags);
+        return;
+    }
     let requests: usize = flags.get("requests").and_then(|v| v.parse().ok()).unwrap_or(256);
     let workers: usize = flags.get("workers").and_then(|v| v.parse().ok()).unwrap_or(2);
 

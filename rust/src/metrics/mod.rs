@@ -443,6 +443,7 @@ mod tests {
             energy_j: 2e-4,
             lanes: 50,
             noise_events: 5,
+            row_noise: Vec::new(),
         };
         b.record_report(&r);
         b.record_report(&r);
@@ -491,6 +492,7 @@ mod tests {
             energy_j: 0.5,
             lanes: 42,
             noise_events: 1,
+            row_noise: Vec::new(),
         };
         t.add(&r);
         t.add(&r);

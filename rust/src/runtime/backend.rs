@@ -18,6 +18,31 @@
 //! the optional `report_for` telemetry hook) so a future PJRT backend (the
 //! `xla` crate compiling HLO text) can slot in behind a cargo feature
 //! without touching the serving stack.
+//!
+//! ## Per-row noise attribution contract
+//!
+//! When a backend injects analog noise, its [`ExecReport`] carries
+//! `row_noise`: one entry per *output row* of the executed GEMM (`m` for a
+//! two-operand GEMM plan, `batch` for a row-wise linear plan), counting the
+//! outputs in that row whose analog-observed integer diverged from the
+//! exact result. Three invariants define the contract:
+//!
+//! 1. `row_noise.iter().sum::<u64>() == noise_events` — the scalar total is
+//!    always the sum of the per-row attribution (both are zero, and
+//!    `row_noise` empty, when noise injection is off).
+//! 2. **Order independence**: a row's noise is a deterministic function of
+//!    the channel seed and the row's exact lane charges
+//!    ([`crate::fidelity::AnalogChannel::transduce_row`] draws a
+//!    content-keyed sub-stream per row), never of its position in a batch
+//!    or of co-batched traffic. Serving a row inside a stacked batch and
+//!    serving it alone produce bit-identical outputs and events.
+//! 3. **Sliceability**: consumers may therefore cut `row_noise` along any
+//!    row boundary and re-attribute exactly — the MLP batcher hands member
+//!    `i` row `i`'s events ([`ExecReport::for_row`]), and the CNN runtime
+//!    slices a stacked `(B·t)×k` execute back into per-frame
+//!    [`crate::runtime::cnnrun::LayerReport`]s. This is what lets the
+//!    coordinator keep dynamic batching enabled under noise injection with
+//!    exact per-request attribution.
 
 use crate::dnn::layer::GemmShape;
 use crate::runtime::artifact::ArtifactMeta;
@@ -28,7 +53,7 @@ use crate::Result;
 /// Produced by backends that model the photonic datapath; the software
 /// interpreter reports `None`. All fields are per-execute (one artifact
 /// invocation); aggregate with [`ExecReport::merge`].
-#[derive(Debug, Clone, Copy, Default, PartialEq)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct ExecReport {
     /// Projected latency of this execution on the simulated accelerator,
     /// seconds (transaction-level model, not wall clock).
@@ -41,15 +66,76 @@ pub struct ExecReport {
     /// Outputs whose analog-observed value differed from the exact integer
     /// result (0 unless noise injection is enabled).
     pub noise_events: u64,
+    /// Per-output-row noise attribution: `row_noise[r]` counts the noise
+    /// events in output row `r` of the executed GEMM. Empty when noise
+    /// injection is off; otherwise `sum == noise_events` and entries are
+    /// order-independent (see the module docs' per-row contract), so
+    /// consumers can slice along row boundaries for exact per-request /
+    /// per-frame attribution.
+    pub row_noise: Vec<u64>,
 }
 
 impl ExecReport {
     /// Component-wise accumulate (latencies add: layers execute serially).
+    ///
+    /// `row_noise` vectors of unequal length reconcile by zero-padding the
+    /// shorter side — merging reports of different row counts is legal
+    /// (a CNN aggregate folds conv layers of different output heights;
+    /// row `r` of the merged vector accumulates row `r` of every merged
+    /// execute, and executes with fewer rows contribute zero there).
     pub fn merge(&mut self, other: &ExecReport) {
         self.sim_latency_s += other.sim_latency_s;
         self.energy_j += other.energy_j;
         self.lanes += other.lanes;
         self.noise_events += other.noise_events;
+        if self.row_noise.len() < other.row_noise.len() {
+            self.row_noise.resize(other.row_noise.len(), 0);
+        }
+        for (dst, src) in self.row_noise.iter_mut().zip(&other.row_noise) {
+            *dst += src;
+        }
+    }
+
+    /// The *stats* view of a padded batch execute: when per-row attribution
+    /// is present, keep only the first `rows` (member) rows' noise and
+    /// price `lanes` as `rows × lanes_per_row` — padding rows beyond the
+    /// members were never served to any request, so folding their events
+    /// into serving stats would report noise no caller observed and skew
+    /// `served_exact_fraction` below what any reply carried. Reports
+    /// without attribution return unchanged.
+    pub fn served_rows(&self, rows: usize, lanes_per_row: u64) -> ExecReport {
+        if self.row_noise.is_empty() {
+            return self.clone();
+        }
+        let kept: Vec<u64> = self.row_noise.iter().take(rows).copied().collect();
+        ExecReport {
+            sim_latency_s: self.sim_latency_s,
+            energy_j: self.energy_j,
+            lanes: lanes_per_row * rows as u64,
+            noise_events: kept.iter().sum(),
+            row_noise: kept,
+        }
+    }
+
+    /// The member view of output row `row` of a batched execute: when
+    /// per-row attribution is present, the member carries its own row's
+    /// noise events and its own `lanes_per_row` lane count (the projected
+    /// latency/energy stay the whole batch's — the batch executed as one
+    /// artifact invocation and its cost is not row-separable). Without
+    /// per-row attribution (noise off) the batch report is shared
+    /// unchanged, preserving the historical reply shape.
+    pub fn for_row(&self, row: usize, lanes_per_row: u64) -> ExecReport {
+        if self.row_noise.is_empty() {
+            return self.clone();
+        }
+        let events = self.row_noise.get(row).copied().unwrap_or(0);
+        ExecReport {
+            sim_latency_s: self.sim_latency_s,
+            energy_j: self.energy_j,
+            lanes: lanes_per_row,
+            noise_events: events,
+            row_noise: vec![events],
+        }
     }
 }
 
@@ -129,13 +215,118 @@ mod tests {
 
     #[test]
     fn exec_report_merges_componentwise() {
-        let mut a = ExecReport { sim_latency_s: 1.0, energy_j: 2.0, lanes: 3, noise_events: 1 };
-        let b = ExecReport { sim_latency_s: 0.5, energy_j: 0.25, lanes: 7, noise_events: 0 };
+        let mut a = ExecReport {
+            sim_latency_s: 1.0,
+            energy_j: 2.0,
+            lanes: 3,
+            noise_events: 1,
+            row_noise: vec![1, 0],
+        };
+        let b = ExecReport {
+            sim_latency_s: 0.5,
+            energy_j: 0.25,
+            lanes: 7,
+            noise_events: 2,
+            row_noise: vec![0, 2],
+        };
         a.merge(&b);
         assert_eq!(
             a,
-            ExecReport { sim_latency_s: 1.5, energy_j: 2.25, lanes: 10, noise_events: 1 }
+            ExecReport {
+                sim_latency_s: 1.5,
+                energy_j: 2.25,
+                lanes: 10,
+                noise_events: 3,
+                row_noise: vec![1, 2],
+            }
         );
+    }
+
+    #[test]
+    fn merge_reconciles_unequal_row_noise_lengths_by_padding() {
+        // Short += long: the short side grows with zeros, never panics.
+        let mut short = ExecReport { row_noise: vec![5], noise_events: 5, ..Default::default() };
+        let long = ExecReport {
+            row_noise: vec![1, 2, 3],
+            noise_events: 6,
+            ..Default::default()
+        };
+        short.merge(&long);
+        assert_eq!(short.row_noise, vec![6, 2, 3]);
+        assert_eq!(short.noise_events, 11);
+        assert_eq!(
+            short.row_noise.iter().sum::<u64>(),
+            short.noise_events,
+            "sum(row_noise) == noise_events must survive merging"
+        );
+
+        // Long += short: the extra rows are untouched.
+        let mut long2 = ExecReport {
+            row_noise: vec![1, 2, 3],
+            noise_events: 6,
+            ..Default::default()
+        };
+        long2.merge(&ExecReport { row_noise: vec![4], noise_events: 4, ..Default::default() });
+        assert_eq!(long2.row_noise, vec![5, 2, 3]);
+        assert_eq!(long2.noise_events, 10);
+
+        // Either side empty (noise off) is a no-op on the vector.
+        let mut empty = ExecReport::default();
+        empty.merge(&ExecReport { row_noise: vec![7, 7], noise_events: 14, ..Default::default() });
+        assert_eq!(empty.row_noise, vec![7, 7]);
+        let mut kept = ExecReport { row_noise: vec![9], noise_events: 9, ..Default::default() };
+        kept.merge(&ExecReport::default());
+        assert_eq!(kept.row_noise, vec![9]);
+    }
+
+    #[test]
+    fn for_row_slices_attribution_or_shares_the_batch_report() {
+        let batch = ExecReport {
+            sim_latency_s: 2.0,
+            energy_j: 4.0,
+            lanes: 12,
+            noise_events: 5,
+            row_noise: vec![3, 0, 2],
+        };
+        let m1 = batch.for_row(0, 4);
+        assert_eq!((m1.lanes, m1.noise_events), (4, 3));
+        assert_eq!(m1.row_noise, vec![3]);
+        // Projected cost is the whole batch's (not row-separable).
+        assert_eq!((m1.sim_latency_s, m1.energy_j), (2.0, 4.0));
+        let m2 = batch.for_row(2, 4);
+        assert_eq!((m2.noise_events, m2.row_noise.clone()), (2, vec![2]));
+        // Out-of-range rows (padding beyond attribution) carry zero events.
+        assert_eq!(batch.for_row(9, 4).noise_events, 0);
+
+        // Noise off: members share the batch report unchanged.
+        let exact = ExecReport { sim_latency_s: 1.0, lanes: 12, ..Default::default() };
+        assert_eq!(exact.for_row(1, 4), exact);
+    }
+
+    #[test]
+    fn served_rows_trims_padding_attribution_from_stats() {
+        // 2 member rows + 2 noisy padding rows in a 4-row batch.
+        let batch = ExecReport {
+            sim_latency_s: 2.0,
+            energy_j: 4.0,
+            lanes: 16,
+            noise_events: 9,
+            row_noise: vec![3, 1, 4, 1],
+        };
+        let served = batch.served_rows(2, 4);
+        assert_eq!((served.lanes, served.noise_events), (8, 4));
+        assert_eq!(served.row_noise, vec![3, 1]);
+        // The trimmed view keeps the sum identity and equals the sum of the
+        // member `for_row` views — what the replies actually carried.
+        assert_eq!(served.row_noise.iter().sum::<u64>(), served.noise_events);
+        let member_sum: u64 =
+            (0..2).map(|i| batch.for_row(i, 4).noise_events).sum();
+        assert_eq!(served.noise_events, member_sum);
+        // `rows` beyond the attribution length just keeps everything.
+        assert_eq!(batch.served_rows(9, 4).noise_events, 9);
+        // Noise off: unchanged (padding cannot diverge).
+        let exact = ExecReport { lanes: 16, ..Default::default() };
+        assert_eq!(exact.served_rows(2, 4), exact);
     }
 
     #[test]

@@ -9,8 +9,11 @@
 //! Telemetry: backends that model the photonic datapath contribute a
 //! per-layer [`ExecReport`] priced on the layer's *full grouped* GEMM shape
 //! — the exact quantity [`crate::sim::engine::simulate_frame`] reports for
-//! the same accelerator — plus the noise-event counts observed by the
-//! per-group executions when noise injection is on.
+//! the same accelerator — plus, when noise injection is on, the frame's own
+//! slice of the stacked executes' per-row noise attribution (see the
+//! per-row contract in [`crate::runtime::backend`]): each frame's
+//! `noise_events`/`row_noise` are exactly what its unbatched run would
+//! report at the same channel seed.
 //!
 //! Weights are deterministic surrogates (seeded by layer index, group and
 //! shape, like the MLP artifacts' surrogate weights): the repo has no baked
@@ -128,12 +131,14 @@ pub fn run_cnn(engine: &mut Engine, model: &CnnModel, input: &[i32]) -> Result<C
 /// quantity [`crate::sim::engine::simulate_frame`] reports), so batching
 /// changes wall-clock amortization, never telemetry.
 ///
-/// Noise injection caveat: a noisy backend perturbs the stacked execute as
-/// one noise stream, so per-frame noise events are only attributable for
-/// `B == 1`; for larger batches the per-frame reports carry
-/// `noise_events = 0` and callers that need event attribution must serve
-/// unbatched (the coordinator disables CNN batching when its backend
-/// injects noise).
+/// Noise injection attributes exactly too: frame `f` owns rows
+/// `[f·t, (f+1)·t)` of each conv group's stacked GEMM and row `f` of an FC
+/// stack, so the backend's per-row `row_noise` (order-independent by the
+/// contract in [`crate::runtime::backend`]) slices back into per-frame
+/// `noise_events` and per-output-row `row_noise` on every [`LayerReport`].
+/// A frame's noise — and therefore its logits — is bit-identical whether it
+/// serves stacked or unbatched at the same channel seed, which is why the
+/// coordinator keeps CNN stacking enabled under noise.
 pub fn run_cnn_batch(
     engine: &mut Engine,
     model: &CnnModel,
@@ -154,7 +159,13 @@ pub fn run_cnn_batch(
 
     for (li, layer) in model.layers.iter().enumerate() {
         let shape = layer.gemm();
-        let mut stacked_noise = 0u64;
+        // Per-frame noise attribution, sliced out of the stacked executes'
+        // per-row `row_noise`: frame f owns rows [f·t, (f+1)·t) of every
+        // conv group's stacked GEMM and row f of the FC stack.
+        // `frame_rows[f][row]` accumulates row-level events across groups;
+        // it stays empty (per frame) until a report carries attribution.
+        let mut frame_noise = vec![0u64; b];
+        let mut frame_rows: Vec<Vec<u64>> = Vec::new();
         match layer {
             Layer::Conv { in_h, in_w, in_ch, out_ch, kernel, stride, pad, groups, .. } => {
                 let (oh, ow) = layer.out_hw();
@@ -176,8 +187,19 @@ pub fn run_cnn_batch(
                         .map(|&v| v as i32)
                         .collect();
                     let (out, rep) = engine.execute_gemm_shape(b * t, k, c, &a_wire, &w_wire)?;
-                    if let Some(r) = rep {
-                        stacked_noise += r.noise_events;
+                    if let Some(r) = &rep {
+                        if !r.row_noise.is_empty() {
+                            if frame_rows.is_empty() {
+                                frame_rows = vec![vec![0u64; t]; b];
+                            }
+                            for f in 0..b {
+                                for row in 0..t {
+                                    let e = r.row_noise[f * t + row];
+                                    frame_rows[f][row] += e;
+                                    frame_noise[f] += e;
+                                }
+                            }
+                        }
                     }
                     // Scatter each frame's t×c block into its HWC output.
                     for (f, raw) in raws.iter_mut().enumerate() {
@@ -204,8 +226,14 @@ pub fn run_cnn_batch(
                         .collect();
                 let (out, rep) =
                     engine.execute_gemm_shape(b, *in_features, *out_features, &a_wire, &w_wire)?;
-                if let Some(r) = rep {
-                    stacked_noise += r.noise_events;
+                if let Some(r) = &rep {
+                    if !r.row_noise.is_empty() {
+                        frame_rows = vec![vec![0u64; 1]; b];
+                        for f in 0..b {
+                            frame_rows[f][0] += r.row_noise[f];
+                            frame_noise[f] += r.row_noise[f];
+                        }
+                    }
                 }
                 for f in 0..b {
                     let row = &out[f * out_features..(f + 1) * out_features];
@@ -216,18 +244,21 @@ pub fn run_cnn_batch(
         }
         // Per-frame projection on the frame's full grouped shape — identical
         // to the layer's record in `simulate_frame` for the same accelerator,
-        // whatever the batch size.
+        // whatever the batch size — plus the frame's own slice of the
+        // stacked noise attribution.
         if let Some(r) = engine.report_for(&shape) {
             for f in 0..b {
-                let mut rf = r;
-                rf.noise_events = if b == 1 { stacked_noise } else { 0 };
-                aggs[f] = Some(match aggs[f] {
+                let mut rf = r.clone();
+                rf.noise_events = frame_noise[f];
+                rf.row_noise = frame_rows.get(f).cloned().unwrap_or_default();
+                let merged = match aggs[f].take() {
                     Some(mut a) => {
                         a.merge(&rf);
                         a
                     }
-                    None => rf,
-                });
+                    None => rf.clone(),
+                };
+                aggs[f] = Some(merged);
                 layer_reports[f].push(LayerReport { layer: layer.name().to_string(), report: rf });
             }
         }

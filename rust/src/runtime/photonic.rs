@@ -14,9 +14,12 @@
 //! through the [`crate::fidelity`] analog channel (per-lane Gaussian noise
 //! scaled to the link SNR, three BPCA lanes per dot product, PWAB
 //! weighting) — the served integers then carry the analog error the paper's
-//! fidelity study quantifies, and `noise_events` counts the outputs that
-//! diverged from the exact result. Leave it `None` (the default) for
-//! bit-exact serving.
+//! fidelity study quantifies, `noise_events` counts the outputs that
+//! diverged from the exact result, and `row_noise` attributes those events
+//! to individual output rows through content-keyed noise sub-streams (the
+//! per-row contract in [`crate::runtime::backend`], which is what keeps
+//! dynamic batching exact-attributable under noise). Leave it `None` (the
+//! default) for bit-exact serving.
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -145,7 +148,7 @@ impl PhotonicBackend {
     fn simulate_shape(&mut self, shape: &GemmShape) -> ExecReport {
         let key = (shape.t, shape.k, shape.c, shape.groups);
         if let Some(r) = self.report_cache.get(&key) {
-            return *r;
+            return r.clone();
         }
         let f = self.sim.gemm_frame(shape);
         let r = ExecReport {
@@ -153,44 +156,63 @@ impl PhotonicBackend {
             energy_j: f.energy.total_j(),
             lanes: shape.outputs(),
             noise_events: 0,
+            row_noise: Vec::new(),
         };
-        self.report_cache.insert(key, r);
+        self.report_cache.insert(key, r.clone());
         r
     }
 
     /// Execute through the analog channel: exact three-lane accumulations
-    /// from the bitslice engine, one transduction per BPCA lane, PWAB
+    /// from the bitslice engine, transduced output row by output row through
+    /// content-keyed sub-streams ([`AnalogChannel::transduce_row`]), PWAB
     /// weighting, rounded to the observed integer.
-    fn execute_noisy(&mut self, plan: &Plan, inputs: &[&[i32]]) -> Result<(Vec<i32>, u64)> {
-        let (lanes, k) = match plan {
+    ///
+    /// Returns the outputs plus per-row noise attribution: `row_noise[r]`
+    /// counts the outputs in row `r` whose observed integer diverged from
+    /// the exact result (`sum == noise_events`). Because each row's noise
+    /// is keyed by the channel seed and the row's exact lane charges —
+    /// never by batch position or the sequential stream — a row served
+    /// inside a stacked batch and the same row served alone observe
+    /// bit-identical noise, which is the backend half of the per-row
+    /// attribution contract in [`crate::runtime::backend`].
+    fn execute_noisy(&mut self, plan: &Plan, inputs: &[&[i32]]) -> Result<(Vec<i32>, Vec<u64>)> {
+        let (lanes, k, rows) = match plan {
             Plan::Gemm { m, k, n } => {
                 let a8 = wire_to_i8(inputs[0]);
                 let b8 = wire_to_i8(inputs[1]);
-                (crate::bitslice::gemm_lanes(&a8, &b8, *m, *k, *n)?, *k)
+                (crate::bitslice::gemm_lanes(&a8, &b8, *m, *k, *n)?, *k, *m)
             }
             Plan::Linear { batch, features, outputs, weights } => {
                 let a8 = wire_to_i8(inputs[0]);
-                (crate::bitslice::gemm_lanes(&a8, weights, *batch, *features, *outputs)?, *features)
+                (
+                    crate::bitslice::gemm_lanes(&a8, weights, *batch, *features, *outputs)?,
+                    *features,
+                    *batch,
+                )
             }
         };
         let exact = lanes.weight_and_add();
-        let ch = self.channel.as_mut().expect("noise channel present");
+        let cols = if rows == 0 { 0 } else { exact.len() / rows };
+        let ch = self.channel.as_ref().expect("noise channel present");
         let mut out = Vec::with_capacity(exact.len());
-        let mut events = 0u64;
-        for i in 0..exact.len() {
-            let observed = ch.transduce_lanes(
-                lanes.hi[i] as i64,
-                lanes.mid[i] as i64,
-                lanes.lo[i] as i64,
+        let mut row_noise = vec![0u64; rows];
+        for r in 0..rows {
+            let span = r * cols..(r + 1) * cols;
+            let observed = ch.transduce_row(
+                &lanes.hi[span.clone()],
+                &lanes.mid[span.clone()],
+                &lanes.lo[span],
                 k,
             );
-            let v = observed.round() as i32;
-            if v != exact[i] {
-                events += 1;
+            for (j, o) in observed.into_iter().enumerate() {
+                let v = o.round() as i32;
+                if v != exact[r * cols + j] {
+                    row_noise[r] += 1;
+                }
+                out.push(v);
             }
-            out.push(v);
         }
-        Ok((out, events))
+        Ok((out, row_noise))
     }
 }
 
@@ -235,8 +257,9 @@ impl ExecBackend for PhotonicBackend {
         };
         let mut report = self.simulate_shape(&shape);
         let output = if self.channel.is_some() {
-            let (out, events) = self.execute_noisy(&plan, inputs)?;
-            report.noise_events = events;
+            let (out, row_noise) = self.execute_noisy(&plan, inputs)?;
+            report.noise_events = row_noise.iter().sum();
+            report.row_noise = row_noise;
             out
         } else {
             plan.execute(inputs)?
@@ -340,10 +363,42 @@ mod tests {
         let rn2 = noisy2.execute_i32("gemm_8x8x8", &[&a, &b]).unwrap();
         let re = exact.execute_i32("gemm_8x8x8", &[&a, &b]).unwrap();
         // 24 dB SNR on a K=8 dot product is loud: divergence is certain.
-        assert!(rn.report.unwrap().noise_events > 0);
+        let rep = rn.report.unwrap();
+        assert!(rep.noise_events > 0);
         assert_ne!(rn.output, re.output);
-        // Same seed, same stream, same observations.
+        // Per-row attribution: one entry per output row, summing to the
+        // scalar total, matching the observed per-row divergences.
+        assert_eq!(rep.row_noise.len(), 8);
+        assert_eq!(rep.row_noise.iter().sum::<u64>(), rep.noise_events);
+        for r in 0..8 {
+            let mism = (0..8)
+                .filter(|&j| rn.output[r * 8 + j] != re.output[r * 8 + j])
+                .count() as u64;
+            assert_eq!(rep.row_noise[r], mism, "row {r} attribution");
+        }
+        // Same seed, same content-keyed streams, same observations.
         assert_eq!(rn.output, rn2.output);
-        assert_eq!(re.report.unwrap().noise_events, 0);
+        let re_rep = re.report.unwrap();
+        assert_eq!(re_rep.noise_events, 0);
+        assert!(re_rep.row_noise.is_empty(), "noise off reports no row attribution");
+    }
+
+    #[test]
+    fn noisy_executes_are_order_independent_and_repeatable() {
+        // Content-keyed sub-streams: re-executing the same request on the
+        // same backend observes the same noise (no sequential stream is
+        // consumed), and interleaving other traffic does not perturb it.
+        let gemm = meta("gemm_8x8x8 g i32:8x8,i32:8x8 i32:8x8");
+        let cfg = PhotonicConfig::spoga().with_noise(NoiseParams::from_link_margin(0.0), 21);
+        let mut noisy = PhotonicBackend::new(cfg).unwrap();
+        noisy.plan(&gemm).unwrap();
+        let mut rng = SplitMix64::new(4);
+        let (a, b) = (wire(&mut rng, 64), wire(&mut rng, 64));
+        let first = noisy.execute_i32("gemm_8x8x8", &[&a, &b]).unwrap();
+        let (oa, ob) = (wire(&mut rng, 64), wire(&mut rng, 64));
+        let _ = noisy.execute_i32("gemm_8x8x8", &[&oa, &ob]).unwrap();
+        let again = noisy.execute_i32("gemm_8x8x8", &[&a, &b]).unwrap();
+        assert_eq!(first.output, again.output);
+        assert_eq!(first.report.unwrap().row_noise, again.report.unwrap().row_noise);
     }
 }

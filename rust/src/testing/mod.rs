@@ -2,12 +2,15 @@
 //!
 //! The offline vendored dependency set has no `proptest`/`quickcheck`, so
 //! this module provides the small subset we need: a fast deterministic PRNG
-//! (SplitMix64), generators for the value domains used across the crate, and
+//! (SplitMix64), generators for the value domains used across the crate,
 //! a `forall` driver with first-failure reporting and linear input shrinking
-//! for integer-vector cases.
+//! for integer-vector cases, and a minimal JSON parser ([`json`]) for the
+//! committed `BENCH_*.json` snapshot schema guards (no `serde` offline).
 
+pub mod json;
 pub mod prng;
 pub mod prop;
 
+pub use json::Json;
 pub use prng::SplitMix64;
 pub use prop::{forall, Gen};

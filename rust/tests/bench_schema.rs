@@ -1,0 +1,160 @@
+//! Schema guard over the committed `BENCH_*.json` trajectory snapshots.
+//!
+//! The bench binaries hand-format their JSON records (no serde in the
+//! offline dependency set) and the numbers are filled in on a toolchain
+//! host, so a drifting emitter or a hand-edit slip would otherwise be
+//! discovered only there. Parsing the committed snapshots in tier-1 — with
+//! the in-tree [`spoga::testing::Json`] parser — turns schema drift into a
+//! test failure instead.
+
+use spoga::testing::Json;
+
+/// Load and parse a snapshot committed at the repository root.
+fn load(name: &str) -> Json {
+    let path = format!("{}/../{name}", env!("CARGO_MANIFEST_DIR"));
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("{path}: snapshot must exist and be readable: {e}"));
+    Json::parse(&text).unwrap_or_else(|e| panic!("{name}: invalid JSON: {e}"))
+}
+
+/// Assert the snapshot's shared shape: a `bench` name, a known `status`,
+/// and a non-empty `results` array whose rows all carry `row_keys`, each
+/// either `null` (pending) or the expected scalar kind. Returns the rows
+/// parsed as objects for file-specific checks.
+fn check_schema(name: &str, bench: &str, row_keys: &[(&str, Kind)]) -> Vec<Json> {
+    let doc = load(name);
+    assert_eq!(
+        doc.get("bench").and_then(Json::as_str),
+        Some(bench),
+        "{name}: bench field must name its emitter"
+    );
+    let status = doc.get("status").and_then(Json::as_str).unwrap_or_default().to_string();
+    assert!(
+        status == "pending-first-run" || status == "measured",
+        "{name}: unknown status {status:?}"
+    );
+    let rows = doc
+        .get("results")
+        .and_then(Json::as_arr)
+        .unwrap_or_else(|| panic!("{name}: results must be an array"));
+    assert!(!rows.is_empty(), "{name}: results must be non-empty");
+    for (i, row) in rows.iter().enumerate() {
+        for (key, kind) in row_keys {
+            let v = row
+                .get(key)
+                .unwrap_or_else(|| panic!("{name}: results[{i}] missing key {key:?}"));
+            let ok = match kind {
+                Kind::Label => v.as_str().is_some(),
+                // Metric cells are null until a toolchain host fills them.
+                Kind::Metric => v.is_null() || v.as_num().is_some(),
+                Kind::Number => v.as_num().is_some(),
+            };
+            assert!(ok, "{name}: results[{i}].{key} has wrong kind: {v:?}");
+            if status == "measured" && matches!(kind, Kind::Metric) {
+                assert!(
+                    v.as_num().is_some(),
+                    "{name}: measured snapshot still has null {key:?} in results[{i}]"
+                );
+            }
+        }
+    }
+    rows.to_vec()
+}
+
+/// Expected kind of a result cell.
+enum Kind {
+    /// Always a string (row label).
+    Label,
+    /// Always a number (grid coordinates committed with the schema).
+    Number,
+    /// Number once measured, `null` while `status: pending-first-run`.
+    Metric,
+}
+
+#[test]
+fn bitslice_snapshot_keeps_schema() {
+    use Kind::*;
+    let rows = check_schema(
+        "BENCH_bitslice.json",
+        "bitslice_throughput",
+        &[
+            ("dim", Number),
+            ("naive_gops", Metric),
+            ("packed_gops", Metric),
+            ("packed_mt_gops", Metric),
+            ("speedup_mt_vs_naive", Metric),
+        ],
+    );
+    let dims: Vec<f64> = rows.iter().map(|r| r.get("dim").unwrap().as_num().unwrap()).collect();
+    assert_eq!(dims, vec![64.0, 256.0, 1024.0]);
+}
+
+#[test]
+fn backends_snapshot_keeps_schema() {
+    use Kind::*;
+    let rows = check_schema(
+        "BENCH_backends.json",
+        "coordinator_backend_matrix",
+        &[
+            ("backend", Label),
+            ("req_per_s", Metric),
+            ("service_mean_us", Metric),
+            ("sim_fps", Metric),
+            ("sim_fps_per_w", Metric),
+        ],
+    );
+    assert!(rows
+        .iter()
+        .any(|r| r.get("backend").unwrap().as_str() == Some("software")));
+}
+
+#[test]
+fn fleet_snapshot_keeps_schema() {
+    use Kind::*;
+    let rows = check_schema(
+        "BENCH_fleet.json",
+        "fleet_scaling",
+        &[
+            ("fleet", Label),
+            ("shards", Number),
+            ("req_per_s", Metric),
+            ("p99_us", Metric),
+            ("cnn_batches", Metric),
+        ],
+    );
+    assert!(rows.len() >= 4, "fleet snapshot must cover the 1/2/4-shard + A/B rows");
+}
+
+#[test]
+fn noise_snapshot_keeps_schema_and_grid() {
+    use Kind::*;
+    let rows = check_schema(
+        "BENCH_noise.json",
+        "noise_frontier",
+        &[
+            ("k", Number),
+            ("adc_bits", Number),
+            ("req_per_s", Metric),
+            ("served_exact", Metric),
+            ("noise_events", Metric),
+            ("lanes", Metric),
+            ("sim_fps", Metric),
+            ("sim_fps_per_w", Metric),
+        ],
+    );
+    // The committed grid must stay in step with the bench's default
+    // (`NoiseSweepGrid::paper_range()`), cells in K-major shard order.
+    let grid = spoga::coordinator::NoiseSweepGrid::paper_range();
+    let expect: Vec<(f64, f64)> =
+        grid.cells().into_iter().map(|(k, b)| (k as f64, b as f64)).collect();
+    let got: Vec<(f64, f64)> = rows
+        .iter()
+        .map(|r| {
+            (
+                r.get("k").unwrap().as_num().unwrap(),
+                r.get("adc_bits").unwrap().as_num().unwrap(),
+            )
+        })
+        .collect();
+    assert_eq!(got, expect, "BENCH_noise.json rows drifted from the paper-range grid");
+}

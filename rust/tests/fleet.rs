@@ -9,6 +9,9 @@
 //! * batched CNN per-layer reports still match `sim::simulate_frame`
 //!   exactly for the same accelerator;
 //! * `FleetTelemetry` totals equal the sum of the per-shard stats;
+//! * a noisy mixed software|photonic burst keeps the rollup-sum identity
+//!   and `served_exact_fraction` consistency with CNN stacking still
+//!   enabled (per-row noise attribution — no noise→batch=1 clamp);
 //! * weighted routing splits deterministically, least-queue-depth prefers
 //!   idle shards.
 
@@ -225,9 +228,80 @@ fn batched_cnn_replies_match_simulate_frame_per_layer() {
                 simmed.energy.total_j()
             );
         }
-        let agg = reply.report.expect("photonic aggregate");
+        let agg = reply.report.as_ref().expect("photonic aggregate");
         assert!((agg.sim_latency_s - frame.latency_s).abs() / frame.latency_s < 1e-12);
     }
+
+    fleet.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn noisy_mixed_fleet_keeps_rollup_identity_with_batching_on() {
+    use spoga::fidelity::NoiseParams;
+    let dir = synthetic_dir("noisy");
+    let noisy = PhotonicConfig::spoga().with_noise(NoiseParams::from_link_margin(0.0), 0xBAD5EED);
+    let fleet = Fleet::start(FleetConfig {
+        shards: vec![
+            shard_cfg(&dir, BackendKind::Software),
+            shard_cfg(&dir, BackendKind::Photonic(noisy.clone())),
+        ],
+        policy: RoutePolicy::RoundRobin,
+        labels: vec!["exact".into(), "noisy".into()],
+    })
+    .unwrap();
+    let h = fleet.handle();
+    // The noisy shard perturbs outputs, so no reference comparison — the
+    // contract here is that everything serves, batching stays enabled, and
+    // the telemetry identities hold.
+    let served = mixed_burst(&h);
+    assert_eq!(served.len(), 18);
+
+    let t = h.telemetry();
+    // Rollup-sum identity across every counter, including the noise pair.
+    let mut sums = (0u64, 0u64, 0u64, 0u64, 0u64, 0u64);
+    for i in 0..h.shard_count() {
+        let s = h.shard_stats(i);
+        sums.0 += s.requests.load(Ordering::Relaxed);
+        sums.1 += s.completed.load(Ordering::Relaxed);
+        sums.2 += s.failed.load(Ordering::Relaxed);
+        sums.3 += s.lanes.load(Ordering::Relaxed);
+        sums.4 += s.noise_events.load(Ordering::Relaxed);
+        sums.5 += s.cnn_batches.load(Ordering::Relaxed);
+    }
+    assert_eq!(t.requests(), sums.0);
+    assert_eq!(t.completed(), sums.1);
+    assert_eq!((t.completed(), t.failed()), (18, 0));
+    assert_eq!(t.failed(), sums.2);
+    assert_eq!(t.lanes(), sums.3);
+    assert_eq!(t.noise_events(), sums.4);
+    // served_exact_fraction is consistent at every level: the fleet figure
+    // is exactly 1 − Σ noise / Σ lanes of the shard stats.
+    assert!((t.served_exact_fraction() - (1.0 - sums.4 as f64 / sums.3 as f64)).abs() < 1e-12);
+    assert_eq!(t.shards[0].served_exact_fraction(), 1.0, "digital shard serves exactly");
+    assert!(t.shards[1].served_exact_fraction() < 1.0, "0 dB shard must perturb");
+    assert!(sums.4 > 0, "0 dB margin produced no noise events");
+
+    // Round-robin over the burst hands the noisy shard CNN frames too —
+    // and they stack: before per-row attribution the coordinator forced
+    // noisy CNN serving unbatched (cnn_batches would be 0 there).
+    let noisy_stats = h.shard_stats(1);
+    assert!(noisy_stats.cnn_frames.load(Ordering::Relaxed) > 0);
+    assert!(
+        noisy_stats.cnn_batches.load(Ordering::Relaxed) > 0,
+        "CNN stacking must stay enabled under noise injection"
+    );
+
+    // Per-request determinism through the noisy shard: identical GEMMs
+    // observe identical content-keyed noise.
+    let mut rng = SplitMix64::new(0xD0_77);
+    let (a, b) = (wire(&mut rng, 64), wire(&mut rng, 64));
+    let r1 = h.shard(1).gemm_reply("gemm_8x8x8", a.clone(), b.clone()).unwrap();
+    let r2 = h.shard(1).gemm_reply("gemm_8x8x8", a, b).unwrap();
+    assert_eq!(r1.outputs, r2.outputs);
+    assert_eq!(r1.report, r2.report);
+    let rep = r1.report.as_ref().unwrap();
+    assert_eq!(rep.row_noise.iter().sum::<u64>(), rep.noise_events);
 
     fleet.shutdown();
     let _ = std::fs::remove_dir_all(&dir);

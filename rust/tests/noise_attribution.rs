@@ -1,0 +1,282 @@
+//! Seeded-determinism suite for per-row noise attribution.
+//!
+//! Pins the PR's acceptance contract (see `runtime/backend.rs`'s per-row
+//! contract docs), all against synthetic manifests so nothing ever skips:
+//!
+//! * a stacked CNN batch's per-frame noise events, per-row attribution and
+//!   logits are **bit-identical** to the same frames served unbatched at
+//!   the same noise seed — batching never changes what a request observes;
+//! * `sum(row_noise) == noise_events` across random GEMM shapes, including
+//!   zero-row and non-tile-multiple cases, with `row_noise[r]` equal to the
+//!   actual per-row divergence count against the exact backend;
+//! * the coordinator keeps CNN stacking and full MLP batching enabled
+//!   under noise, and every reply carries its own row/frame attribution.
+
+use std::cell::RefCell;
+use std::path::PathBuf;
+
+use spoga::coordinator::{Coordinator, CoordinatorConfig, Response};
+use spoga::dnn::models::CnnModel;
+use spoga::dnn::Layer;
+use spoga::fidelity::NoiseParams;
+use spoga::runtime::cnnrun::{run_cnn, run_cnn_batch};
+use spoga::runtime::{BackendKind, Engine, PhotonicConfig};
+use spoga::testing::{forall, SplitMix64};
+
+const MANIFEST: &str = "\
+gemm_8x8x8 g.hlo.txt i32:8x8,i32:8x8 i32:8x8
+gemm_0x8x4 g0.hlo.txt i32:0x8,i32:8x4 i32:0x4
+mlp_b1 m1.hlo.txt i32:1x16 i32:1x4
+mlp_b4 m4.hlo.txt i32:4x16 i32:4x4
+";
+
+fn synthetic_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("spoga-noise-attr-test-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.txt"), MANIFEST).unwrap();
+    dir
+}
+
+/// A loud noisy SPOGA backend (0 dB margin unless overridden) with a fixed
+/// deterministic stream seed.
+fn noisy_kind(margin_db: f64, seed: u64) -> BackendKind {
+    BackendKind::Photonic(
+        PhotonicConfig::spoga().with_noise(NoiseParams::from_link_margin(margin_db), seed),
+    )
+}
+
+fn tiny_cnn() -> CnnModel {
+    CnnModel {
+        name: "tiny_attr",
+        layers: vec![
+            Layer::conv("stem", 6, 6, 3, 4, 3, 1, 1),
+            Layer::dwconv("dw", 6, 6, 4, 3, 2, 1),
+            Layer::fc("head", 3 * 3 * 4, 5),
+        ],
+    }
+}
+
+fn frames(n: usize) -> Vec<Vec<i32>> {
+    (0..n)
+        .map(|f| (0..6 * 6 * 3).map(|v| ((v * 31 + f * 97) % 251) - 125).collect())
+        .collect()
+}
+
+#[test]
+fn stacked_cnn_frames_attribute_noise_identically_to_unbatched() {
+    let dir = synthetic_dir("stacked");
+    let kind = noisy_kind(0.0, 0xA77B_17);
+    let frames = frames(3);
+    let refs: Vec<&[i32]> = frames.iter().map(|f| f.as_slice()).collect();
+
+    let mut stacked_eng = Engine::with_backend(&dir, kind.clone()).unwrap();
+    let batched = run_cnn_batch(&mut stacked_eng, &tiny_cnn(), &refs).unwrap();
+    assert_eq!(batched.len(), frames.len());
+
+    let mut total_noise = 0u64;
+    for (f, frame) in frames.iter().enumerate() {
+        // Fresh engine per unbatched run: nothing carries over but the seed.
+        let mut single_eng = Engine::with_backend(&dir, kind.clone()).unwrap();
+        let single = run_cnn(&mut single_eng, &tiny_cnn(), frame).unwrap();
+
+        assert_eq!(
+            batched[f].logits, single.logits,
+            "frame {f}: stacked logits diverged from unbatched at the same seed"
+        );
+        assert_eq!(batched[f].layers.len(), single.layers.len());
+        for (bl, sl) in batched[f].layers.iter().zip(&single.layers) {
+            assert_eq!(bl.layer, sl.layer);
+            // PartialEq covers latency/energy/lanes AND noise_events AND
+            // the per-row attribution vector.
+            assert_eq!(
+                bl.report, sl.report,
+                "frame {f} layer {}: stacked attribution diverged",
+                bl.layer
+            );
+            assert_eq!(
+                bl.report.row_noise.iter().sum::<u64>(),
+                bl.report.noise_events,
+                "frame {f} layer {}: row attribution must sum to the scalar",
+                bl.layer
+            );
+        }
+        let (ba, sa) = (batched[f].report.as_ref(), single.report.as_ref());
+        assert_eq!(ba, sa, "frame {f}: aggregate reports diverged");
+        total_noise += ba.unwrap().noise_events;
+    }
+    // Sanity that the property bites: 0 dB margin must actually perturb.
+    assert!(total_noise > 0, "loud channel produced no noise events");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn same_engine_serves_stacked_then_unbatched_identically() {
+    // Content-keyed sub-streams leave no serving-order state behind: one
+    // engine can serve the stack and then each frame alone and still agree.
+    let dir = synthetic_dir("stateless");
+    let frames = frames(2);
+    let refs: Vec<&[i32]> = frames.iter().map(|f| f.as_slice()).collect();
+    let mut eng = Engine::with_backend(&dir, noisy_kind(0.0, 7)).unwrap();
+    let batched = run_cnn_batch(&mut eng, &tiny_cnn(), &refs).unwrap();
+    for (f, frame) in frames.iter().enumerate() {
+        let single = run_cnn(&mut eng, &tiny_cnn(), frame).unwrap();
+        assert_eq!(batched[f].logits, single.logits, "frame {f}");
+        assert_eq!(batched[f].report, single.report, "frame {f}");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn row_noise_sums_to_noise_events_across_random_shapes() {
+    let dir = synthetic_dir("prop");
+    // One engine pair reused across cases (plan caches grow per shape);
+    // RefCell because the property closure is Fn.
+    let noisy = RefCell::new(Engine::with_backend(&dir, noisy_kind(0.0, 99)).unwrap());
+    let exact = RefCell::new(
+        Engine::with_backend(&dir, BackendKind::Photonic(PhotonicConfig::spoga())).unwrap(),
+    );
+
+    // Shapes straddle the packed-kernel dispatch threshold and include
+    // non-tile-multiple dims (the tiled kernels block by kc/jc).
+    let gen = |rng: &mut SplitMix64| {
+        let m = rng.range_usize(1, 33);
+        let k = rng.range_usize(1, 70);
+        let n = rng.range_usize(1, 18);
+        let a: Vec<i32> = (0..m * k).map(|_| rng.i8() as i32).collect();
+        let b: Vec<i32> = (0..k * n).map(|_| rng.i8() as i32).collect();
+        (m, k, n, a, b)
+    };
+    forall(0x5EED_0401, 25, gen, |(m, k, n, a, b)| {
+        let (out, rep) =
+            noisy.borrow_mut().execute_gemm_shape(*m, *k, *n, a, b).expect("noisy gemm");
+        let rep = rep.expect("photonic telemetry");
+        let (gold, _) =
+            exact.borrow_mut().execute_gemm_shape(*m, *k, *n, a, b).expect("exact gemm");
+        if rep.row_noise.len() != *m
+            || rep.row_noise.iter().sum::<u64>() != rep.noise_events
+            || rep.lanes != (*m * *n) as u64
+        {
+            return false;
+        }
+        // row_noise[r] is exactly the number of divergent outputs in row r.
+        (0..*m).all(|r| {
+            let mism =
+                (0..*n).filter(|&j| out[r * n + j] != gold[r * n + j]).count() as u64;
+            rep.row_noise[r] == mism
+        })
+    });
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn zero_row_and_zero_content_rows_attribute_cleanly() {
+    let dir = synthetic_dir("zero");
+    let mut eng = Engine::with_backend(&dir, noisy_kind(0.0, 3)).unwrap();
+
+    // Zero-row GEMM (manifest artifact — ad-hoc shapes reject m == 0):
+    // empty outputs, empty attribution, zero events, no panic.
+    let b: Vec<i32> = (0..8 * 4).map(|v| (v % 200) - 100).collect();
+    let (out, rep) = eng.execute_reported("gemm_0x8x4", &[&[], &b]).unwrap();
+    let rep = rep.expect("photonic telemetry");
+    assert!(out.is_empty());
+    assert!(rep.row_noise.is_empty());
+    assert_eq!((rep.noise_events, rep.lanes), (0, 0));
+
+    // All-zero content rows still get one attribution slot each and keep
+    // the sum identity (noise can perturb a zero row into nonzero output).
+    let zeros = vec![0i32; 3 * 16];
+    let w: Vec<i32> = (0..16 * 4).map(|v| (v % 251) - 125).collect();
+    let (zout, zrep) = eng.execute_gemm_shape(3, 16, 4, &zeros, &w).unwrap();
+    let zrep = zrep.unwrap();
+    assert_eq!(zout.len(), 12);
+    assert_eq!(zrep.row_noise.len(), 3);
+    assert_eq!(zrep.row_noise.iter().sum::<u64>(), zrep.noise_events);
+    // Identical zero rows draw identical content-keyed noise.
+    assert_eq!(zout[0..4], zout[4..8]);
+    assert_eq!(zrep.row_noise[0], zrep.row_noise[1]);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn coordinator_keeps_batching_on_under_noise_with_exact_replies() {
+    let dir = synthetic_dir("coord");
+    let kind = noisy_kind(0.0, 0xC00D_1E55);
+    let c = Coordinator::start(CoordinatorConfig {
+        artifact_dir: dir.to_string_lossy().into_owned(),
+        workers: 1,
+        backend: kind.clone(),
+        max_batch_wait_s: 0.01,
+        ..Default::default()
+    })
+    .unwrap();
+    let h = c.handle();
+
+    // CNN frames submitted back to back stack in the window — under noise.
+    let model = tiny_cnn();
+    let inputs = frames(3);
+    let slots: Vec<Response> = inputs
+        .iter()
+        .map(|input| h.submit_cnn(model.clone(), input.clone()).unwrap())
+        .collect();
+    let replies: Vec<_> = slots
+        .into_iter()
+        .map(|rx| rx.recv().unwrap().expect("noisy cnn frame served"))
+        .collect();
+    assert!(
+        h.stats().cnn_batches.load(std::sync::atomic::Ordering::Relaxed) >= 1,
+        "CNN stacking must stay enabled under noise injection"
+    );
+
+    // Every reply is bit-identical to an engine-level unbatched run at the
+    // same seed — whatever stacking the leader's window happened to form.
+    for (f, input) in inputs.iter().enumerate() {
+        let mut eng = Engine::with_backend(&dir, kind.clone()).unwrap();
+        let single = run_cnn(&mut eng, &model, input).unwrap();
+        assert_eq!(replies[f].outputs, single.logits, "frame {f} logits");
+        assert_eq!(replies[f].report, single.report, "frame {f} report");
+        assert_eq!(replies[f].layers.len(), single.layers.len());
+        for (served, expect) in replies[f].layers.iter().zip(&single.layers) {
+            assert_eq!(served.report, expect.report, "frame {f} layer {}", served.layer);
+        }
+    }
+
+    // MLP rows batch at full variants under noise, each reply carrying its
+    // own row's attribution — and identical rows observe identical noise
+    // regardless of batch membership.
+    let noise_before = h.stats().noise_events.load(std::sync::atomic::Ordering::Relaxed);
+    let lanes_before = h.stats().lanes.load(std::sync::atomic::Ordering::Relaxed);
+    let row: Vec<i32> = (0..16).map(|v| (v * 7) % 100).collect();
+    let mlp_slots: Vec<Response> =
+        (0..4).map(|_| h.submit_mlp(row.clone()).unwrap()).collect();
+    let mlp_replies: Vec<_> = mlp_slots
+        .into_iter()
+        .map(|rx| rx.recv().unwrap().expect("noisy mlp row served"))
+        .collect();
+    // Stats count exactly what the replies carried: zero-padding rows'
+    // noise never leaks into the shard's served-exact accounting, however
+    // the batching window happened to split the four rows.
+    let noise_delta =
+        h.stats().noise_events.load(std::sync::atomic::Ordering::Relaxed) - noise_before;
+    let lanes_delta = h.stats().lanes.load(std::sync::atomic::Ordering::Relaxed) - lanes_before;
+    let reply_noise: u64 = mlp_replies
+        .iter()
+        .map(|r| r.report.as_ref().unwrap().noise_events)
+        .sum();
+    assert_eq!(noise_delta, reply_noise, "padding noise leaked into stats");
+    assert_eq!(lanes_delta, 4 * 4, "stats lanes must cover exactly the served rows");
+    for reply in &mlp_replies {
+        let rep = reply.report.as_ref().expect("photonic telemetry");
+        assert_eq!(rep.lanes, 4, "member lanes are its own row's outputs");
+        assert_eq!(rep.row_noise.len(), 1, "member attribution is one row");
+        assert_eq!(rep.row_noise[0], rep.noise_events);
+        assert_eq!(reply.outputs, mlp_replies[0].outputs, "identical rows, identical noise");
+        assert_eq!(
+            rep.noise_events,
+            mlp_replies[0].report.as_ref().unwrap().noise_events
+        );
+    }
+
+    c.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
