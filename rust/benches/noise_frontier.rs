@@ -69,12 +69,12 @@ fn main() {
     let cells = grid.cells();
     let mut results = Vec::with_capacity(cells.len());
     for (i, &(k, adc_bits)) in cells.iter().enumerate() {
-        let before = spoga::metrics::ShardTelemetry::capture("pre", h.shard_stats(i));
+        let before = spoga::metrics::ShardTelemetry::capture("pre", &h.shard_stats(i));
         let batches_before = h.shard_stats(i).cnn_batches.load(Ordering::Relaxed);
         let t0 = Instant::now();
         let served = grid.drive_cell(&h, i, frames).expect("cell traffic");
         let wall = t0.elapsed().as_secs_f64();
-        let after = spoga::metrics::ShardTelemetry::capture("post", h.shard_stats(i));
+        let after = spoga::metrics::ShardTelemetry::capture("post", &h.shard_stats(i));
         let (lanes, noise) =
             (after.lanes - before.lanes, after.noise_events - before.noise_events);
         results.push(CellResult {

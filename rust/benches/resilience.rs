@@ -1,0 +1,207 @@
+//! Bench: resilience-layer costs — mid-flight failover throughput and
+//! shard recovery time.
+//!
+//! Scenario `baseline`: a mixed retrying-slot burst against a healthy
+//! 2-shard software fleet. Scenario `mid_flight_failover`: the same burst,
+//! but shard 0's worker pool is killed while its batching window still
+//! holds accepted jobs — every slot must resolve on the survivor, and the
+//! gap between the two `req_per_s` figures is the failover tax. Scenario
+//! `revival` measures wall-clock from `revive_shard` to a serving pool
+//! (worker respawn + engine warmup + health probe).
+//!
+//! Self-contained (synthetic manifest in a temp dir). Results print as a
+//! table and are written as JSON (default `BENCH_resilience.json`,
+//! override with the `RESILIENCE_BENCH_OUT` env var).
+//!
+//! Run: `cargo bench --bench resilience [requests]`
+
+use std::sync::atomic::Ordering;
+use std::time::{Duration, Instant};
+
+use spoga::coordinator::{
+    CoordinatorConfig, Fleet, FleetConfig, FleetHandle, RetryingSlot, RoutePolicy,
+};
+use spoga::dnn::models::CnnModel;
+use spoga::dnn::Layer;
+use spoga::report::{fmt_sig, Table};
+use spoga::runtime::BackendKind;
+use spoga::testing::SplitMix64;
+
+struct Row {
+    scenario: &'static str,
+    requests: usize,
+    req_per_s: f64,
+    resubmits: u64,
+    recovery_ms: f64,
+}
+
+fn synthetic_artifacts() -> std::path::PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("spoga-resilience-bench-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("temp artifact dir");
+    std::fs::write(
+        dir.join("manifest.txt"),
+        "gemm_8x8x8 g.hlo.txt i32:8x8,i32:8x8 i32:8x8\n\
+         mlp_b1 m1.hlo.txt i32:1x16 i32:1x4\n\
+         mlp_b8 m8.hlo.txt i32:8x16 i32:8x4\n",
+    )
+    .expect("write manifest");
+    dir
+}
+
+fn tiny_cnn() -> CnnModel {
+    CnnModel {
+        name: "edge_probe",
+        layers: vec![
+            Layer::conv("stem", 6, 6, 3, 4, 3, 1, 1),
+            Layer::fc("head", 6 * 6 * 4, 5),
+        ],
+    }
+}
+
+fn two_shards(dir: &str, window_s: f64) -> FleetConfig {
+    let cfg = CoordinatorConfig {
+        artifact_dir: dir.to_string(),
+        workers: 2,
+        max_batch_wait_s: window_s,
+        ..Default::default()
+    };
+    FleetConfig {
+        shards: vec![cfg.clone(), cfg],
+        policy: RoutePolicy::RoundRobin,
+        labels: Vec::new(),
+        autoscale: None,
+    }
+}
+
+fn submit_burst(h: &FleetHandle, requests: usize) -> Vec<RetryingSlot> {
+    let mut rng = SplitMix64::new(5);
+    let model = tiny_cnn();
+    let mut slots = Vec::new();
+    for i in 0..requests {
+        match i % 3 {
+            0 => {
+                let a: Vec<i32> = (0..64).map(|_| rng.i8() as i32).collect();
+                let b: Vec<i32> = (0..64).map(|_| rng.i8() as i32).collect();
+                slots.push(h.submit_gemm_retrying("gemm_8x8x8", a, b).expect("gemm"));
+            }
+            1 => {
+                let row: Vec<i32> = (0..16).map(|v| ((v + i) % 100) as i32).collect();
+                slots.push(h.submit_mlp_retrying(row).expect("mlp"));
+            }
+            _ => {
+                let seed = i as i32;
+                let input: Vec<i32> =
+                    (0..6 * 6 * 3).map(|v| ((v * 17 + seed * 7) % 251) - 125).collect();
+                slots.push(h.submit_cnn_retrying(model.clone(), input).expect("cnn"));
+            }
+        }
+    }
+    slots
+}
+
+fn run_burst(dir: &str, requests: usize, kill_shard_0: bool) -> Row {
+    // Same batching window for both scenarios, so the baseline-vs-failover
+    // req/s gap measures the retry layer, not a window-length difference
+    // (the kill path only needs the window long enough to hold accepted
+    // jobs when the retire lands, which 50 ms satisfies).
+    let fleet = Fleet::start(two_shards(dir, 0.05)).expect("fleet");
+    let h = fleet.handle();
+    h.infer_mlp(vec![0; 16]).expect("warm");
+    let t0 = Instant::now();
+    let slots = submit_burst(&h, requests);
+    if kill_shard_0 {
+        h.shard(0).retire_workers().expect("retire");
+    }
+    for s in slots {
+        s.recv_timeout(Duration::from_secs(60)).expect("slot resolves");
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let t = h.telemetry();
+    let row = Row {
+        scenario: if kill_shard_0 { "mid_flight_failover" } else { "baseline" },
+        requests,
+        req_per_s: requests as f64 / wall.max(1e-12),
+        resubmits: t.resubmits,
+        recovery_ms: 0.0,
+    };
+    if kill_shard_0 {
+        assert!(t.resubmits > 0, "failover bench never exercised a resubmission");
+    }
+    fleet.shutdown();
+    row
+}
+
+fn run_revival(dir: &str) -> Row {
+    let fleet = Fleet::start(two_shards(dir, 0.002)).expect("fleet");
+    let h = fleet.handle();
+    h.infer_mlp(vec![0; 16]).expect("warm");
+    h.shard(0).retire_workers().expect("retire");
+    // Wait until the retirement lands (gauge drops) before timing revival.
+    while h.shard_stats(0).live_workers.load(Ordering::Relaxed) > 0 {
+        std::thread::sleep(Duration::from_micros(50));
+    }
+    let t0 = Instant::now();
+    assert!(h.revive_shard(0), "revival must succeed");
+    let recovery_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let row = Row {
+        scenario: "revival",
+        requests: 0,
+        req_per_s: 0.0,
+        resubmits: 0,
+        recovery_ms,
+    };
+    fleet.shutdown();
+    row
+}
+
+fn main() {
+    let requests: usize =
+        std::env::args().nth(1).and_then(|v| v.parse().ok()).unwrap_or(384);
+    let dir = synthetic_artifacts();
+    let artifact_dir = dir.to_string_lossy().into_owned();
+    println!("resilience: {requests} mixed retrying requests over 2 software shards\n");
+
+    let rows = vec![
+        run_burst(&artifact_dir, requests, false),
+        run_burst(&artifact_dir, requests, true),
+        run_revival(&artifact_dir),
+    ];
+
+    let mut t = Table::new(vec!["scenario", "requests", "req/s", "resubmits", "recovery ms"]);
+    for r in &rows {
+        t.row(vec![
+            r.scenario.to_string(),
+            r.requests.to_string(),
+            fmt_sig(r.req_per_s, 3),
+            r.resubmits.to_string(),
+            format!("{:.2}", r.recovery_ms),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // ---- JSON trajectory record ---------------------------------------------
+    let out_path = std::env::var("RESILIENCE_BENCH_OUT")
+        .unwrap_or_else(|_| "BENCH_resilience.json".to_string());
+    let json_rows: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "    {{\"scenario\": \"{}\", \"requests\": {}, \"req_per_s\": {:.1}, \
+                 \"resubmits\": {}, \"recovery_ms\": {:.3}}}",
+                r.scenario, r.requests, r.req_per_s, r.resubmits, r.recovery_ms
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"resilience\",\n  \"requests\": {requests},\n  \
+         \"workload\": \"mixed GEMM/MLP/CNN retrying slots; shard 0 killed mid-window; revival timed\",\n  \
+         \"status\": \"measured\",\n  \"results\": [\n{}\n  ]\n}}\n",
+        json_rows.join(",\n")
+    );
+    match std::fs::write(&out_path, &json) {
+        Ok(()) => println!("wrote {out_path}"),
+        Err(e) => eprintln!("could not write {out_path}: {e}"),
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}

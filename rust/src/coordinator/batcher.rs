@@ -78,6 +78,19 @@ impl MicroBatch {
         buf
     }
 
+    /// Per-output-row noise nonces for the stacked execute: row `i` carries
+    /// member `i`'s request nonce, padding rows the content-keyed `0`.
+    /// [`RowNonce::Content`](crate::runtime::RowNonce) when no member opted
+    /// into the counter mode, so default-off serving takes the historical
+    /// path untouched.
+    pub fn row_nonces(&self) -> crate::runtime::RowNonce {
+        if self.jobs.iter().all(|j| j.nonce == 0) {
+            crate::runtime::RowNonce::Content
+        } else {
+            crate::runtime::RowNonce::PerRow(self.jobs.iter().map(|j| j.nonce).collect())
+        }
+    }
+
     /// Split a flat output into per-job rows (dropping padding rows) and
     /// deliver them. Members share the micro-batch's projected cost (the
     /// batch executed as one artifact invocation), but when the backend
@@ -127,6 +140,18 @@ pub struct CnnMicroBatch {
 }
 
 impl CnnMicroBatch {
+    /// Member frames' request nonces in job order (all zero unless the
+    /// coordinator opted into the time-indexed counter mode) — handed to
+    /// [`run_cnn_batch_keyed`](crate::runtime::cnnrun::run_cnn_batch_keyed)
+    /// so every stacked layer GEMM keys frame `f`'s rows by `nonces[f]`.
+    pub fn frame_nonces(&self) -> Vec<u64> {
+        if self.jobs.iter().all(|j| j.nonce == 0) {
+            Vec::new()
+        } else {
+            self.jobs.iter().map(|j| j.nonce).collect()
+        }
+    }
+
     /// Deliver per-frame runs to their owners. `runs` comes from
     /// [`run_cnn_batch`](crate::runtime::cnnrun::run_cnn_batch) over the
     /// members' inputs in job order, so `runs[i]` belongs to `jobs[i]`.
@@ -171,7 +196,7 @@ mod tests {
 
     fn job(v: i32) -> (MlpJob, crate::coordinator::request::Response) {
         let (tx, rx) = response_slot();
-        (MlpJob { row: vec![v; 4], reply: tx, enqueued: Instant::now() }, rx)
+        (MlpJob { row: vec![v; 4], reply: tx, enqueued: Instant::now(), nonce: 0 }, rx)
     }
 
     #[test]
@@ -259,6 +284,23 @@ mod tests {
     }
 
     #[test]
+    fn row_nonces_follow_member_order_and_default_to_content() {
+        let (j1, _r1) = job(1);
+        let (j2, _r2) = job(2);
+        let mb = MicroBatch { artifact: "mlp_b8".into(), batch: 8, jobs: vec![j1, j2] };
+        assert_eq!(mb.row_nonces(), crate::runtime::RowNonce::Content);
+        let (mut j3, _r3) = job(3);
+        let (mut j4, _r4) = job(4);
+        j3.nonce = 7;
+        j4.nonce = 9;
+        let nb = MicroBatch { artifact: "mlp_b8".into(), batch: 8, jobs: vec![j3, j4] };
+        match nb.row_nonces() {
+            crate::runtime::RowNonce::PerRow(v) => assert_eq!(v, vec![7, 9]),
+            other => panic!("expected per-row nonces, got {other:?}"),
+        }
+    }
+
+    #[test]
     fn failure_propagates_to_all_members() {
         let (j1, r1) = job(1);
         let (j2, r2) = job(2);
@@ -276,6 +318,7 @@ mod tests {
                 input: vec![fill; 6 * 6 * 3],
                 reply: tx,
                 enqueued: Instant::now(),
+                nonce: 0,
             },
             rx,
         )

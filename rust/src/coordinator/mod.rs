@@ -22,6 +22,31 @@
 //!   path is the 1-shard fleet ([`Fleet::single`]), so there is one serving
 //!   path.
 //!
+//! ## Resilience: what happens to an in-flight request
+//!
+//! Requests never vanish; each ends in exactly one of three states (the
+//! retry/revival state machine, detailed in [`router`]'s module docs):
+//!
+//! * **request-level failed** — shape/artifact/execute errors and dropped
+//!   reply slots (worker crash mid-request) resolve the slot with an error
+//!   and are never retried (a poisonous payload must not cascade across
+//!   shards);
+//! * **resubmitted** — a shard that accepted a request and then died fails
+//!   the slot with [`crate::Error::ShardDown`]; a [`RetryingSlot`] (what
+//!   [`FleetHandle::submit_gemm_retrying`] returns and every blocking
+//!   helper uses) owns a retained copy of the payload and resubmits on a
+//!   survivor, resolving bit-identically to an undisturbed run. Submit-time
+//!   refusals fail over *without cloning*: the payload-recovering
+//!   [`CoordinatorHandle::try_submit_gemm`]-family takes it back from the
+//!   channel's `SendError`;
+//! * **shard-retired** — the observing handle marks the shard dead; it
+//!   stays out of the rotation until a revival probe
+//!   ([`FleetHandle::revive_shard`]: leader respawns the pool, then a
+//!   [`CoordinatorHandle::ping`] must pong) brings it back. Under
+//!   queue-depth pressure an autoscaling fleet ([`FleetAutoscale`]) spawns
+//!   fresh shards instead of just waiting, and every lifecycle transition
+//!   counts into [`FleetLifecycle`] / [`crate::metrics::FleetTelemetry`].
+//!
 //! Backends are per-shard: [`CoordinatorConfig::backend`] selects the
 //! software interpreter (default) or the photonic-in-the-loop simulator;
 //! with the latter, every [`Reply`] carries an
@@ -49,7 +74,10 @@ pub mod stats;
 pub mod worker;
 
 pub use batcher::{BatchPolicy, CnnMicroBatch, MicroBatch};
-pub use request::{CnnJob, GemmJob, Job, MlpJob, Reply, Response};
-pub use router::{Fleet, FleetConfig, FleetHandle, NoiseSweepGrid, RoutePolicy};
-pub use service::{Coordinator, CoordinatorConfig, CoordinatorHandle};
+pub use request::{CnnJob, GemmJob, Job, MlpJob, PingJob, Reply, Response};
+pub use router::{
+    Fleet, FleetAutoscale, FleetConfig, FleetHandle, FleetLifecycle, NoiseSweepGrid,
+    RetryPayload, RetryingSlot, RoutePolicy,
+};
+pub use service::{Coordinator, CoordinatorConfig, CoordinatorHandle, Rejected};
 pub use stats::CoordinatorStats;

@@ -55,6 +55,10 @@ pub struct GemmJob {
     pub(crate) reply: ResponseTx,
     /// Enqueue timestamp (latency accounting).
     pub(crate) enqueued: Instant,
+    /// Per-request noise nonce (0 = content-keyed default; nonzero only
+    /// when [`CoordinatorConfig::noise_nonce`](super::CoordinatorConfig)
+    /// opts into the time-indexed counter mode).
+    pub(crate) nonce: u64,
 }
 
 /// A single-row MLP inference request (the batchable kind).
@@ -66,6 +70,8 @@ pub struct MlpJob {
     pub(crate) reply: ResponseTx,
     /// Enqueue timestamp.
     pub(crate) enqueued: Instant,
+    /// Per-request noise nonce (0 = content-keyed default).
+    pub(crate) nonce: u64,
 }
 
 /// A whole-CNN inference request: the model runs im2col layer-by-layer
@@ -80,6 +86,19 @@ pub struct CnnJob {
     pub(crate) reply: ResponseTx,
     /// Enqueue timestamp.
     pub(crate) enqueued: Instant,
+    /// Per-request noise nonce (0 = content-keyed default).
+    pub(crate) nonce: u64,
+}
+
+/// A health probe: the leader routes it to a worker like any other item and
+/// the worker answers with an empty [`Reply`] — proving the whole
+/// leader→dispatch→worker path is alive without touching artifacts. Pings
+/// deliberately stay out of the request/completed counters so probing a
+/// shard never skews its routing or serving stats.
+#[derive(Debug)]
+pub struct PingJob {
+    /// Where to deliver the pong.
+    pub(crate) reply: ResponseTx,
 }
 
 /// Anything the leader thread can route.
@@ -96,18 +115,27 @@ pub enum Job {
     /// injection): workers finish their queued items and exit; later jobs
     /// fail with a "no live workers" error so a fleet router fails over.
     RetireWorkers,
+    /// Respawn workers until the pool holds `target` again (revival after
+    /// [`Job::RetireWorkers`] or worker deaths — the leader survives both,
+    /// so the shard can re-enter a fleet's rotation without restarting).
+    ReviveWorkers {
+        /// Desired worker-pool size after revival.
+        target: usize,
+    },
+    /// Health probe routed through the worker pool (see [`PingJob`]).
+    Ping(PingJob),
     /// Drain and stop (sent by [`super::Coordinator::shutdown`]).
     Shutdown,
 }
 
 impl Job {
-    /// Age of the job since enqueue, seconds (Shutdown has no age).
+    /// Age of the job since enqueue, seconds (control jobs have no age).
     pub fn age_s(&self, now: Instant) -> f64 {
         match self {
             Job::Gemm(g) => now.duration_since(g.enqueued).as_secs_f64(),
             Job::Mlp(m) => now.duration_since(m.enqueued).as_secs_f64(),
             Job::Cnn(c) => now.duration_since(c.enqueued).as_secs_f64(),
-            Job::RetireWorkers | Job::Shutdown => 0.0,
+            Job::RetireWorkers | Job::ReviveWorkers { .. } | Job::Ping(_) | Job::Shutdown => 0.0,
         }
     }
 }
@@ -128,12 +156,15 @@ mod tests {
     #[test]
     fn job_age_increases() {
         let (tx, _rx) = response_slot();
-        let j = Job::Mlp(MlpJob { row: vec![0; 4], reply: tx, enqueued: Instant::now() });
+        let j = Job::Mlp(MlpJob { row: vec![0; 4], reply: tx, enqueued: Instant::now(), nonce: 0 });
         let a1 = j.age_s(Instant::now());
         std::thread::sleep(std::time::Duration::from_millis(2));
         let a2 = j.age_s(Instant::now());
         assert!(a2 > a1);
         assert_eq!(Job::Shutdown.age_s(Instant::now()), 0.0);
+        assert_eq!(Job::ReviveWorkers { target: 2 }.age_s(Instant::now()), 0.0);
+        let (ptx, _prx) = response_slot();
+        assert_eq!(Job::Ping(PingJob { reply: ptx }).age_s(Instant::now()), 0.0);
     }
 
     #[test]
@@ -144,6 +175,7 @@ mod tests {
             input: vec![],
             reply: tx,
             enqueued: Instant::now(),
+            nonce: 0,
         });
         assert!(j.age_s(Instant::now()) >= 0.0);
     }

@@ -19,27 +19,70 @@
 //!   `software:photonic = 1:3` for a photonic-design experiment); over any
 //!   `sum(weights)` consecutive picks the split is exact.
 //!
-//! ## Failover
+//! ## Failover and the request state machine
 //!
 //! A shard whose worker pool died answers every job with a "no live
 //! workers" error (and a stopped shard rejects submission). The handle
-//! recognizes those as *shard-down* signals, marks the shard dead, and
-//! retries the request on the next live shard — requests only fail once no
-//! shards remain. Reply slots always resolve either way: the shard's
-//! leader fails its queued jobs explicitly, never silently.
+//! recognizes those as *shard-down* signals ([`Error::ShardDown`] — the
+//! only failover trigger), marks the shard dead, and retries the request on
+//! the next live shard. Per request, exactly one of three things happens:
+//!
+//! * **Request-level failure** — shape/artifact/execute errors, and a
+//!   *dropped* reply slot (a worker crashed mid-request; retrying a
+//!   possibly poisonous payload across shards would cascade-retire the
+//!   fleet). These return immediately and never burn a failover.
+//! * **Submit-time failover** — the picked shard refused the submission.
+//!   The payload is recovered from the channel's `SendError`
+//!   ([`CoordinatorHandle::try_submit_gemm`] and friends), so the retry
+//!   moves it to the next shard *without ever cloning*.
+//! * **Reply-time resubmission** — the shard accepted, then died before
+//!   resolving (its leader fails the queued slot with
+//!   [`Error::ShardDown`]). Only a retained payload can survive this:
+//!   [`RetryingSlot`] (from [`FleetHandle::submit_gemm_retrying`] etc.)
+//!   owns a copy, marks the serving shard dead, resubmits on a survivor
+//!   and resolves with outputs bit-identical to an undisturbed run (the
+//!   backends are deterministic; content-keyed noise is shard-independent
+//!   at equal seeds). The blocking helpers are retrying slots under the
+//!   hood, so slot-based clients now get exactly the blocking helpers'
+//!   semantics. Requests are idempotent by construction (stateless
+//!   deterministic execution), and each carries a fleet-unique
+//!   [`RetryingSlot::request_id`] naming the logical request across
+//!   attempts.
+//!
+//! ## Revival and autoscaling
+//!
+//! A retired shard's *leader* survives ([`CoordinatorHandle::retire_workers`]
+//! keeps it draining), so the fleet can heal instead of shrinking forever:
+//! [`FleetHandle::revive_shard`] asks the leader to respawn its worker pool
+//! ([`CoordinatorHandle::revive_workers`]), health-probes it end to end
+//! ([`CoordinatorHandle::ping`]), and clears the dead flag only on a
+//! successful pong — the shard then re-enters the routing rotation. Under
+//! sustained queue-depth pressure (or with every shard down),
+//! [`FleetHandle::maybe_scale_up`] spawns a fresh shard from the template
+//! config, up to [`FleetAutoscale::max_shards`]. With
+//! [`FleetConfig::autoscale`] set, a janitor thread runs both on a cadence;
+//! every transition counts into [`FleetLifecycle`] and surfaces through
+//! [`FleetHandle::telemetry`].
 //!
 //! ## Telemetry
 //!
 //! [`FleetHandle::telemetry`] snapshots every shard's
 //! [`CoordinatorStats`] into a [`FleetTelemetry`] rollup — fleet-wide
-//! sim-FPS / FPS-per-watt / noise events, each request counted exactly once
-//! on the shard that served it.
+//! sim-FPS / FPS-per-watt / noise events — plus the fleet lifecycle
+//! counters (resubmissions, revivals, spawns, failed probes). Counting is
+//! per *submission attempt* on the shard that took it: a mid-flight
+//! resubmission therefore appears as one `failed` on the dead shard and
+//! one fresh `requests`/`completed` pair on the survivor, with
+//! `FleetTelemetry::resubmits` recording exactly how many logical requests
+//! are double-counted that way (requests − resubmits = logical requests).
 
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use crate::coordinator::request::{Reply, Response};
-use crate::coordinator::service::{Coordinator, CoordinatorConfig, CoordinatorHandle};
+use crate::coordinator::service::{Coordinator, CoordinatorConfig, CoordinatorHandle, Rejected};
 use crate::coordinator::stats::CoordinatorStats;
 use crate::dnn::models::CnnModel;
 use crate::fidelity::NoiseParams;
@@ -62,6 +105,50 @@ pub enum RoutePolicy {
     Weighted(Vec<u32>),
 }
 
+/// Shard revival + dynamic-spawn policy for a fleet (see the module docs'
+/// revival section). Carried on [`FleetConfig::autoscale`]; when set, the
+/// fleet runs a janitor thread applying it on a cadence, and the on-demand
+/// entry points ([`FleetHandle::revive_dead_shards`],
+/// [`FleetHandle::maybe_scale_up`]) use its thresholds.
+#[derive(Debug, Clone)]
+pub struct FleetAutoscale {
+    /// Probe dead shards and respawn their worker pools (the leader
+    /// survives retirement, so revival is in-place).
+    pub revive: bool,
+    /// Hard cap on total shards (initial + dynamically spawned). Values at
+    /// or below the initial shard count disable spawning.
+    pub max_shards: usize,
+    /// Mean queue depth per live shard at which a new shard spawns.
+    pub pressure_per_shard: u64,
+    /// How long a revival health probe waits for its pong, seconds.
+    pub probe_timeout_s: f64,
+    /// Janitor cadence, seconds.
+    pub interval_s: f64,
+}
+
+impl Default for FleetAutoscale {
+    fn default() -> Self {
+        FleetAutoscale {
+            revive: true,
+            max_shards: 0,
+            pressure_per_shard: 16,
+            probe_timeout_s: FleetAutoscale::DEFAULT_PROBE_TIMEOUT_S,
+            interval_s: 0.05,
+        }
+    }
+}
+
+impl FleetAutoscale {
+    /// Default health-probe wait, seconds (also used by on-demand revival
+    /// on fleets configured without autoscale).
+    pub const DEFAULT_PROBE_TIMEOUT_S: f64 = 5.0;
+
+    /// Revival only (no dynamic spawning).
+    pub fn revive_only() -> Self {
+        FleetAutoscale { revive: true, max_shards: 0, ..Default::default() }
+    }
+}
+
 /// Fleet configuration: one [`CoordinatorConfig`] per shard plus the
 /// routing policy.
 #[derive(Debug, Clone)]
@@ -74,13 +161,21 @@ pub struct FleetConfig {
     /// Optional display labels, one per shard; missing entries fall back to
     /// `shard<i>:<backend label>`.
     pub labels: Vec<String>,
+    /// Revival/autoscaling policy; `None` (the default everywhere) keeps
+    /// the historical fixed-fleet behavior with no janitor thread.
+    pub autoscale: Option<FleetAutoscale>,
 }
 
 impl FleetConfig {
     /// A single-shard fleet — the compatibility spelling of the historical
     /// one-coordinator serving path.
     pub fn single(shard: CoordinatorConfig) -> Self {
-        FleetConfig { shards: vec![shard], policy: RoutePolicy::RoundRobin, labels: Vec::new() }
+        FleetConfig {
+            shards: vec![shard],
+            policy: RoutePolicy::RoundRobin,
+            labels: Vec::new(),
+            autoscale: None,
+        }
     }
 
     /// `n` identical shards behind round-robin (horizontal scaling).
@@ -89,6 +184,7 @@ impl FleetConfig {
             shards: vec![shard; n.max(1)],
             policy: RoutePolicy::RoundRobin,
             labels: Vec::new(),
+            autoscale: None,
         }
     }
 
@@ -100,7 +196,14 @@ impl FleetConfig {
             shards: vec![a, b],
             policy: RoutePolicy::Weighted(vec![wa, wb]),
             labels: Vec::new(),
+            autoscale: None,
         }
+    }
+
+    /// Attach a revival/autoscaling policy.
+    pub fn with_autoscale(mut self, autoscale: FleetAutoscale) -> Self {
+        self.autoscale = Some(autoscale);
+        self
     }
 
     /// Noise-aware serving sweep: one photonic shard per link margin, each
@@ -126,7 +229,7 @@ impl FleetConfig {
             shards.push(cfg);
             labels.push(format!("margin+{margin:.0}dB"));
         }
-        FleetConfig { shards, policy: RoutePolicy::RoundRobin, labels }
+        FleetConfig { shards, policy: RoutePolicy::RoundRobin, labels, autoscale: None }
     }
 
     /// Noise-aware serving *grid*: one noise-injecting photonic shard per
@@ -159,7 +262,7 @@ impl FleetConfig {
             shards.push(cfg);
             labels.push(format!("K{k}/adc{bits}"));
         }
-        FleetConfig { shards, policy: RoutePolicy::RoundRobin, labels }
+        FleetConfig { shards, policy: RoutePolicy::RoundRobin, labels, autoscale: None }
     }
 }
 
@@ -381,13 +484,51 @@ struct ShardSlot {
     label: String,
     handle: CoordinatorHandle,
     dead: AtomicBool,
+    /// The running coordinator, parked here so dynamically spawned shards
+    /// have an owner; `Fleet::shutdown` (or the last drop) takes it.
+    coordinator: Mutex<Option<Coordinator>>,
+}
+
+impl ShardSlot {
+    fn new(label: String, coordinator: Coordinator) -> Arc<Self> {
+        Arc::new(ShardSlot {
+            label,
+            handle: coordinator.handle(),
+            dead: AtomicBool::new(false),
+            coordinator: Mutex::new(Some(coordinator)),
+        })
+    }
+}
+
+/// Fleet lifecycle counters — the resilience layer's telemetry, rolled into
+/// [`FleetTelemetry`] by [`FleetHandle::telemetry`].
+#[derive(Debug, Default)]
+pub struct FleetLifecycle {
+    /// Accepted-then-orphaned requests resubmitted on a survivor by a
+    /// [`RetryingSlot`].
+    pub resubmits: AtomicU64,
+    /// Dead shards successfully probed back into the rotation.
+    pub shards_revived: AtomicU64,
+    /// Shards dynamically spawned under pressure.
+    pub shards_spawned: AtomicU64,
+    /// Revival probes that failed (pool did not come back / pong timed out).
+    pub failed_probes: AtomicU64,
 }
 
 struct FleetInner {
-    slots: Vec<ShardSlot>,
+    /// Interior-mutable so autoscaling can append shards while handles
+    /// route; indices are stable (slots are only ever appended).
+    slots: RwLock<Vec<Arc<ShardSlot>>>,
     policy: RoutePolicy,
     /// Routing cursor: round-robin rotation / weighted tick counter.
     cursor: AtomicUsize,
+    /// Fleet-unique logical request ids for retrying submissions.
+    next_request_id: AtomicU64,
+    lifecycle: FleetLifecycle,
+    autoscale: Option<FleetAutoscale>,
+    /// Config cloned for dynamically spawned shards (the first configured
+    /// shard's — replicate what the operator scaled first).
+    spawn_template: CoordinatorConfig,
 }
 
 /// Cloneable client handle over the whole fleet: routes each request to a
@@ -410,26 +551,42 @@ fn is_shard_down(e: &Error) -> bool {
 }
 
 impl FleetHandle {
-    /// Shards still worth routing to: not marked dead AND with a live
-    /// worker pool. The second check matters for slot-based traffic — a
-    /// shard whose leader fast-fails every job keeps a near-zero queue
-    /// depth and would otherwise *attract* least-queue-depth routing
-    /// without ever tripping the dead flag.
-    fn live(&self) -> Vec<usize> {
-        self.inner
-            .slots
+    /// Snapshot the slot table (cheap `Arc` clones; indices are stable).
+    fn slots(&self) -> Vec<Arc<ShardSlot>> {
+        self.inner.slots.read().expect("slot lock").clone()
+    }
+
+    /// Slot `i` (panics on out-of-range, like the historical indexing).
+    fn slot(&self, i: usize) -> Arc<ShardSlot> {
+        self.inner.slots.read().expect("slot lock")[i].clone()
+    }
+
+    /// Shards still worth routing to within one slot-table snapshot: not
+    /// marked dead AND with a live worker pool. The second check matters
+    /// for slot-based traffic — a shard whose leader fast-fails every job
+    /// keeps a near-zero queue depth and would otherwise *attract*
+    /// least-queue-depth routing without ever tripping the dead flag.
+    fn live_in(slots: &[Arc<ShardSlot>]) -> Vec<usize> {
+        slots
             .iter()
             .enumerate()
-            .filter(|(_, s)| {
-                !s.dead.load(Ordering::Relaxed)
-                    && s.handle.stats().live_workers.load(Ordering::Relaxed) > 0
-            })
+            .filter(|(_, s)| !Self::is_down(s))
             .map(|(i, _)| i)
             .collect()
     }
 
+    fn live(&self) -> Vec<usize> {
+        Self::live_in(&self.slots())
+    }
+
     /// Pick one of the `live` shard indices (non-empty) per the policy.
     fn pick(&self, live: &[usize]) -> usize {
+        self.pick_in(&self.slots(), live)
+    }
+
+    /// [`FleetHandle::pick`] over an existing slot snapshot — the hot
+    /// routing path takes one snapshot per attempt and reuses it here.
+    fn pick_in(&self, slots: &[Arc<ShardSlot>], live: &[usize]) -> usize {
         match &self.inner.policy {
             RoutePolicy::RoundRobin => {
                 live[self.inner.cursor.fetch_add(1, Ordering::Relaxed) % live.len()]
@@ -440,7 +597,7 @@ impl FleetHandle {
                 // instead of pinning shard 0.
                 let depths: Vec<(usize, u64)> = live
                     .iter()
-                    .map(|&i| (i, self.inner.slots[i].handle.stats().queue_depth()))
+                    .map(|&i| (i, slots[i].handle.stats().queue_depth()))
                     .collect();
                 let min = depths.iter().map(|&(_, d)| d).min().expect("non-empty live set");
                 let ties: Vec<usize> =
@@ -448,8 +605,12 @@ impl FleetHandle {
                 ties[self.inner.cursor.fetch_add(1, Ordering::Relaxed) % ties.len()]
             }
             RoutePolicy::Weighted(weights) => {
-                let total: u64 =
-                    live.iter().map(|&i| u64::from(*weights.get(i).unwrap_or(&0))).sum();
+                // Shards beyond the configured weights (dynamically
+                // spawned) default to weight 1 so autoscaled capacity
+                // actually takes traffic.
+                let weight_of =
+                    |i: usize| u64::from(weights.get(i).copied().unwrap_or(1));
+                let total: u64 = live.iter().map(|&i| weight_of(i)).sum();
                 if total == 0 {
                     // All live weights zero: degrade to round-robin rather
                     // than starve the fleet.
@@ -458,7 +619,7 @@ impl FleetHandle {
                 let mut tick =
                     (self.inner.cursor.fetch_add(1, Ordering::Relaxed) as u64) % total;
                 for &i in live {
-                    let w = u64::from(*weights.get(i).unwrap_or(&0));
+                    let w = weight_of(i);
                     if tick < w {
                         return i;
                     }
@@ -469,71 +630,132 @@ impl FleetHandle {
         }
     }
 
-    /// Run `op` against policy-picked shards, failing over (and marking the
-    /// shard dead) on shard-down errors until a live shard answers or none
-    /// remain. Request-level errors (bad shape, unknown artifact, execute
-    /// failure) return immediately.
-    ///
-    /// The payload moves into the attempt once no other shard could take a
-    /// retry and is cloned otherwise — a clone per attempt is the price of
-    /// reply-time failover, because a payload consumed by a shard that then
-    /// dies is unrecoverable (its leader fails the reply slot; nothing
-    /// hands the buffers back).
-    fn with_failover<T, P: Clone>(
+    /// Submit-time failover: run the payload-recovering `op` against
+    /// policy-picked shards, marking refusers dead and *moving* the
+    /// recovered payload to the next attempt — no clone, ever. Returns the
+    /// accepted value plus the index of the shard that took it.
+    /// Request-level rejections (bad shape, unknown artifact) return
+    /// immediately.
+    fn with_submit_failover<T, P>(
         &self,
         payload: P,
-        mut op: impl FnMut(&CoordinatorHandle, P) -> Result<T>,
-    ) -> Result<T> {
+        mut op: impl FnMut(&CoordinatorHandle, P) -> std::result::Result<T, Rejected<P>>,
+    ) -> Result<(T, usize)> {
         let mut payload = Some(payload);
         let mut last_err: Option<Error> = None;
-        for _ in 0..self.inner.slots.len() {
-            let live = self.live();
+        // Each shard-down attempt retires a shard, so the loop terminates;
+        // the cap only guards against a pathological revive/fail cycle.
+        let attempt_cap = 2 * self.shard_count() + 2;
+        for _ in 0..attempt_cap {
+            // One slot-table snapshot per attempt covers live-set, pick and
+            // the handle — the hot path pays one lock, not four.
+            let slots = self.slots();
+            let live = Self::live_in(&slots);
             if live.is_empty() {
                 break;
             }
-            let idx = self.pick(&live);
-            let p = (if live.len() == 1 { payload.take() } else { payload.clone() })
-                .expect("payload present while attempts remain");
-            match op(&self.inner.slots[idx].handle, p) {
-                Ok(v) => return Ok(v),
-                Err(e) if is_shard_down(&e) => {
-                    self.inner.slots[idx].dead.store(true, Ordering::Relaxed);
-                    last_err = Some(e);
-                    if payload.is_none() {
-                        break;
-                    }
+            let idx = self.pick_in(&slots, &live);
+            let h = slots[idx].handle.clone();
+            match op(&h, payload.take().expect("payload present while attempts remain")) {
+                Ok(v) => return Ok((v, idx)),
+                Err(Rejected { error, payload: recovered }) if is_shard_down(&error) => {
+                    slots[idx].dead.store(true, Ordering::Relaxed);
+                    last_err = Some(error);
+                    payload = Some(recovered);
                 }
-                Err(e) => return Err(e),
+                Err(Rejected { error, .. }) => return Err(error),
             }
         }
         Err(last_err.unwrap_or_else(|| Error::ShardDown("fleet has no live shards".into())))
     }
 
-    /// Submit a GEMM to a policy-picked shard; returns the response slot.
-    /// Failover covers submission; a shard dying *after* accepting resolves
-    /// the slot with an error instead (use [`FleetHandle::gemm_reply`] for
-    /// full retry semantics).
-    pub fn submit_gemm(&self, artifact: &str, a: Vec<i32>, b: Vec<i32>) -> Result<Response> {
-        self.with_failover((a, b), |h, (a, b)| h.submit_gemm(artifact, a, b))
+    /// Route one retained payload to a shard (the [`RetryingSlot`] submit /
+    /// resubmit primitive).
+    fn submit_payload(&self, payload: RetryPayload) -> Result<(Response, usize)> {
+        match payload {
+            RetryPayload::Gemm { artifact, a, b } => self
+                .with_submit_failover((a, b), |h, (a, b)| h.try_submit_gemm(&artifact, a, b)),
+            RetryPayload::Mlp { row } => {
+                self.with_submit_failover(row, |h, row| h.try_submit_mlp(row))
+            }
+            RetryPayload::Cnn { model, input } => self
+                .with_submit_failover((model, input), |h, (model, input)| {
+                    h.try_submit_cnn(model, input)
+                }),
+        }
     }
 
-    /// Submit one MLP row to a policy-picked shard; returns the response
-    /// slot.
+    /// Submit a GEMM to a policy-picked shard; returns the raw response
+    /// slot. Failover covers submission (clone-free); a shard dying *after*
+    /// accepting resolves the slot with an error — use
+    /// [`FleetHandle::submit_gemm_retrying`] for full mid-flight retry
+    /// semantics.
+    pub fn submit_gemm(&self, artifact: &str, a: Vec<i32>, b: Vec<i32>) -> Result<Response> {
+        Ok(self
+            .with_submit_failover((a, b), |h, (a, b)| h.try_submit_gemm(artifact, a, b))?
+            .0)
+    }
+
+    /// Submit one MLP row to a policy-picked shard; returns the raw
+    /// response slot (submit-time failover only, clone-free).
     pub fn submit_mlp(&self, row: Vec<i32>) -> Result<Response> {
-        self.with_failover(row, |h, row| h.submit_mlp(row))
+        Ok(self.with_submit_failover(row, |h, row| h.try_submit_mlp(row))?.0)
     }
 
     /// Submit a whole-CNN inference to a policy-picked shard; returns the
-    /// response slot. Same-model frames co-pending on that shard stack into
-    /// one t-dimension batch.
+    /// raw response slot (submit-time failover only, clone-free).
+    /// Same-model frames co-pending on that shard stack into one
+    /// t-dimension batch.
     pub fn submit_cnn(&self, model: CnnModel, input: Vec<i32>) -> Result<Response> {
-        self.with_failover((model, input), |h, (model, input)| h.submit_cnn(model, input))
+        Ok(self
+            .with_submit_failover((model, input), |h, (model, input)| {
+                h.try_submit_cnn(model, input)
+            })?
+            .0)
     }
 
-    /// Blocking GEMM returning the full [`Reply`]; retries on another shard
-    /// if the serving shard turns out to be dead.
+    fn submit_retrying(&self, payload: RetryPayload) -> Result<RetryingSlot> {
+        let request_id = self.inner.next_request_id.fetch_add(1, Ordering::Relaxed) + 1;
+        // Always retain: even a 1-shard fleet with no autoscale policy can
+        // gain a survivor at any time (public [`FleetHandle::spawn_shard`],
+        // an on-demand revival), so a submit-time "no other shard exists"
+        // check would bake in an invariant those APIs break. One payload
+        // clone per retrying submit is the price of never losing an
+        // accepted request that something could still serve.
+        let (rx, shard) = self.submit_payload(payload.clone())?;
+        let resubmits_left = 2 * self.shard_count() + 2;
+        Ok(RetryingSlot { handle: self.clone(), rx, shard, request_id, payload, resubmits_left })
+    }
+
+    /// Submit a GEMM with *mid-flight* retry semantics: the returned
+    /// [`RetryingSlot`] owns a copy of the payload, and if the serving
+    /// shard dies after accepting, resubmits on a survivor and resolves
+    /// with outputs bit-identical to an undisturbed run.
+    pub fn submit_gemm_retrying(
+        &self,
+        artifact: &str,
+        a: Vec<i32>,
+        b: Vec<i32>,
+    ) -> Result<RetryingSlot> {
+        self.submit_retrying(RetryPayload::Gemm { artifact: artifact.to_string(), a, b })
+    }
+
+    /// Submit one MLP row with mid-flight retry semantics (see
+    /// [`FleetHandle::submit_gemm_retrying`]).
+    pub fn submit_mlp_retrying(&self, row: Vec<i32>) -> Result<RetryingSlot> {
+        self.submit_retrying(RetryPayload::Mlp { row })
+    }
+
+    /// Submit a whole-CNN inference with mid-flight retry semantics (see
+    /// [`FleetHandle::submit_gemm_retrying`]).
+    pub fn submit_cnn_retrying(&self, model: CnnModel, input: Vec<i32>) -> Result<RetryingSlot> {
+        self.submit_retrying(RetryPayload::Cnn { model, input })
+    }
+
+    /// Blocking GEMM returning the full [`Reply`]; a retrying slot under
+    /// the hood, so it survives shard death before *and* after acceptance.
     pub fn gemm_reply(&self, artifact: &str, a: Vec<i32>, b: Vec<i32>) -> Result<Reply> {
-        self.with_failover((a, b), |h, (a, b)| h.gemm_reply(artifact, a, b))
+        self.submit_gemm_retrying(artifact, a, b)?.recv()
     }
 
     /// Blocking GEMM convenience.
@@ -541,19 +763,19 @@ impl FleetHandle {
         Ok(self.gemm_reply(artifact, a, b)?.outputs)
     }
 
-    /// Blocking MLP inference with shard failover.
+    /// Blocking MLP inference with full shard failover.
     pub fn infer_mlp(&self, row: Vec<i32>) -> Result<Vec<i32>> {
-        self.with_failover(row, |h, row| h.infer_mlp(row))
+        Ok(self.submit_mlp_retrying(row)?.recv()?.outputs)
     }
 
-    /// Blocking CNN inference (full [`Reply`]) with shard failover.
+    /// Blocking CNN inference (full [`Reply`]) with full shard failover.
     pub fn infer_cnn(&self, model: CnnModel, input: Vec<i32>) -> Result<Reply> {
-        self.with_failover((model, input), |h, (model, input)| h.infer_cnn(model, input))
+        self.submit_cnn_retrying(model, input)?.recv()
     }
 
     /// Number of shards (live and dead).
     pub fn shard_count(&self) -> usize {
-        self.inner.slots.len()
+        self.inner.slots.read().expect("slot lock").len()
     }
 
     /// Number of shards still in the rotation.
@@ -563,46 +785,295 @@ impl FleetHandle {
 
     /// Per-shard display labels, shard order.
     pub fn shard_labels(&self) -> Vec<String> {
-        self.inner.slots.iter().map(|s| s.label.clone()).collect()
+        self.slots().iter().map(|s| s.label.clone()).collect()
     }
 
     /// Direct handle to shard `i` — for per-shard drains
     /// ([`CoordinatorHandle::retire_workers`]) and sweep harnesses that
     /// must drive identical traffic at every shard, bypassing routing.
-    pub fn shard(&self, i: usize) -> &CoordinatorHandle {
-        &self.inner.slots[i].handle
+    pub fn shard(&self, i: usize) -> CoordinatorHandle {
+        self.slot(i).handle.clone()
     }
 
     /// Shard `i`'s live stats.
-    pub fn shard_stats(&self, i: usize) -> &CoordinatorStats {
-        self.inner.slots[i].handle.stats()
+    pub fn shard_stats(&self, i: usize) -> Arc<CoordinatorStats> {
+        self.slot(i).handle.stats_arc()
     }
 
     /// Take shard `i` out of the rotation (ops drain; also flipped
-    /// automatically when a request observes the shard down).
+    /// automatically when a request observes the shard down). Revival
+    /// ([`FleetHandle::revive_shard`]) is the only way back in.
     pub fn mark_dead(&self, i: usize) {
-        self.inner.slots[i].dead.store(true, Ordering::Relaxed);
+        self.slot(i).dead.store(true, Ordering::Relaxed);
     }
 
-    /// Snapshot every shard's stats into the fleet rollup. Each shard's
-    /// counters are read once per snapshot, so totals equal the sum of the
-    /// per-shard stats with nothing double-counted.
+    /// Fleet lifecycle counters (live, not a snapshot).
+    pub fn lifecycle(&self) -> &FleetLifecycle {
+        &self.inner.lifecycle
+    }
+
+    /// Try to bring shard `i` back into the rotation: ask its (surviving)
+    /// leader to respawn the worker pool, health-probe the revived pool end
+    /// to end, and clear the dead flag only on a successful pong. Returns
+    /// `true` when the shard is serving afterwards (including "was never
+    /// down"); a failed probe counts into
+    /// [`FleetLifecycle::failed_probes`] and leaves the shard out.
+    pub fn revive_shard(&self, i: usize) -> bool {
+        let slot = self.slot(i);
+        if !Self::is_down(&slot) {
+            return true;
+        }
+        // Keep the shard flagged out of the rotation for the whole revival:
+        // the leader's respawn raises the live_workers gauge *before* the
+        // fresh engines finish initializing, and routed traffic buffered
+        // into a worker whose init then fails would drop its reply slots
+        // terminally (the poison-payload rule keeps dropped slots
+        // non-retried). Only a successful end-to-end pong re-admits it.
+        slot.dead.store(true, Ordering::Relaxed);
+        let timeout = self
+            .inner
+            .autoscale
+            .as_ref()
+            .map(|a| a.probe_timeout_s)
+            .unwrap_or(FleetAutoscale::DEFAULT_PROBE_TIMEOUT_S);
+        let ok = slot.handle.revive_workers(slot.handle.configured_workers()).is_ok()
+            && slot.handle.ping(Duration::from_secs_f64(timeout)).is_ok();
+        if ok {
+            slot.dead.store(false, Ordering::Relaxed);
+            self.inner.lifecycle.shards_revived.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.inner.lifecycle.failed_probes.fetch_add(1, Ordering::Relaxed);
+        }
+        ok
+    }
+
+    /// Out of the rotation: flagged dead, or its worker pool is gone.
+    fn is_down(slot: &ShardSlot) -> bool {
+        slot.dead.load(Ordering::Relaxed)
+            || slot.handle.stats().live_workers.load(Ordering::Relaxed) == 0
+    }
+
+    /// Probe every out-of-rotation shard ([`FleetHandle::revive_shard`]);
+    /// returns how many came back. The janitor calls this on a cadence when
+    /// [`FleetAutoscale::revive`] is set; ops can call it on demand on any
+    /// fleet.
+    pub fn revive_dead_shards(&self) -> usize {
+        (0..self.shard_count())
+            .filter(|&i| Self::is_down(&self.slot(i)) && self.revive_shard(i))
+            .count()
+    }
+
+    /// Spawn a fresh shard from the template config (the first configured
+    /// shard's). `cap` bounds the post-spawn shard count, re-checked under
+    /// the slot write lock so concurrent spawners (janitor tick + on-demand
+    /// ops call) cannot overshoot it; the losing coordinator shuts straight
+    /// back down. Returns the new index, or `None` when the cap held.
+    fn spawn_shard_under(&self, cap: usize) -> Result<Option<usize>> {
+        let cfg = self.inner.spawn_template.clone();
+        let label_backend = cfg.backend.label();
+        // Start before taking the write lock: warmup can be slow and
+        // routing must not stall behind it.
+        let c = Coordinator::start(cfg)?;
+        let overshoot = {
+            let mut slots = self.inner.slots.write().expect("slot lock");
+            if slots.len() >= cap {
+                Some(c)
+            } else {
+                let idx = slots.len();
+                slots.push(ShardSlot::new(format!("shard{idx}:{label_backend}:auto"), c));
+                self.inner.lifecycle.shards_spawned.fetch_add(1, Ordering::Relaxed);
+                return Ok(Some(idx));
+            }
+        };
+        if let Some(c) = overshoot {
+            c.shutdown();
+        }
+        Ok(None)
+    }
+
+    /// Spawn a fresh shard from the template config unconditionally (an
+    /// explicit ops action — the autoscale cap applies only to
+    /// [`FleetHandle::maybe_scale_up`]), append it to the rotation, and
+    /// return its index.
+    pub fn spawn_shard(&self) -> Result<usize> {
+        Ok(self.spawn_shard_under(usize::MAX)?.expect("uncapped spawn never overshoots"))
+    }
+
+    /// Scale up if the autoscale policy says so: under
+    /// [`FleetAutoscale::max_shards`], spawn a shard when mean queue depth
+    /// per live shard reaches the pressure threshold — or when no live
+    /// shard remains at all (spawning is then the only path back to
+    /// serving). Returns whether a shard was spawned.
+    pub fn maybe_scale_up(&self) -> Result<bool> {
+        let Some(a) = &self.inner.autoscale else {
+            return Ok(false);
+        };
+        if self.shard_count() >= a.max_shards {
+            return Ok(false);
+        }
+        let live = self.live();
+        let spawn = if live.is_empty() {
+            true
+        } else {
+            let depth: u64 =
+                live.iter().map(|&i| self.slot(i).handle.stats().queue_depth()).sum();
+            depth / live.len() as u64 >= a.pressure_per_shard
+        };
+        if !spawn {
+            return Ok(false);
+        }
+        Ok(self.spawn_shard_under(a.max_shards)?.is_some())
+    }
+
+    /// Snapshot every shard's stats into the fleet rollup (plus the fleet
+    /// lifecycle counters). Each shard's counters are read once per
+    /// snapshot, so totals equal the sum of the per-shard stats. Counting
+    /// is per submission attempt: a mid-flight resubmission contributes a
+    /// `failed` on the dead shard *and* a `requests`/`completed` pair on
+    /// the survivor — `resubmits` says how many logical requests did so
+    /// (see the module docs' telemetry section).
     pub fn telemetry(&self) -> FleetTelemetry {
-        FleetTelemetry::new(
-            self.inner
-                .slots
+        let mut t = FleetTelemetry::new(
+            self.slots()
                 .iter()
                 .map(|s| ShardTelemetry::capture(&s.label, s.handle.stats()))
                 .collect(),
-        )
+        );
+        t.resubmits = self.inner.lifecycle.resubmits.load(Ordering::Relaxed);
+        t.shards_revived = self.inner.lifecycle.shards_revived.load(Ordering::Relaxed);
+        t.shards_spawned = self.inner.lifecycle.shards_spawned.load(Ordering::Relaxed);
+        t.failed_probes = self.inner.lifecycle.failed_probes.load(Ordering::Relaxed);
+        t
     }
 }
 
-/// The running fleet: N coordinators behind one [`FleetHandle`]. Dropping
-/// it shuts every shard down.
-pub struct Fleet {
-    shards: Vec<Coordinator>,
+/// A retained payload for mid-flight retry — what a [`RetryingSlot`] owns
+/// so an accepted-then-orphaned request can be resubmitted verbatim.
+#[derive(Debug, Clone)]
+pub enum RetryPayload {
+    /// A GEMM against a named artifact.
+    Gemm {
+        /// Artifact name.
+        artifact: String,
+        /// Flat row-major A operand.
+        a: Vec<i32>,
+        /// Flat row-major B operand.
+        b: Vec<i32>,
+    },
+    /// One MLP activation row.
+    Mlp {
+        /// The activation row.
+        row: Vec<i32>,
+    },
+    /// A whole-CNN inference.
+    Cnn {
+        /// The network to run.
+        model: CnnModel,
+        /// First-layer activation tensor.
+        input: Vec<i32>,
+    },
+}
+
+/// A response slot that survives mid-flight shard death: owns a retained
+/// copy of the request payload plus a fleet-unique request id, and on a
+/// reply-time [`Error::ShardDown`] marks the serving shard dead, resubmits
+/// on a survivor (policy-picked, submit-failover included) and keeps
+/// waiting — so the caller's one `recv` resolves with outputs bit-identical
+/// to an undisturbed run. Request-level errors and dropped reply slots
+/// (worker crash mid-request — a possibly poisonous payload) resolve
+/// immediately without retry, exactly like the raw [`Response`].
+pub struct RetryingSlot {
     handle: FleetHandle,
+    rx: Response,
+    /// Index of the shard currently holding the request.
+    shard: usize,
+    request_id: u64,
+    /// Retained payload for resubmission across shard deaths.
+    payload: RetryPayload,
+    resubmits_left: usize,
+}
+
+impl RetryingSlot {
+    /// Fleet-unique id of this logical request, stable across
+    /// resubmissions.
+    pub fn request_id(&self) -> u64 {
+        self.request_id
+    }
+
+    /// Index of the shard currently holding the request.
+    pub fn shard(&self) -> usize {
+        self.shard
+    }
+
+    /// Block until the request resolves, resubmitting across shard deaths.
+    pub fn recv(self) -> Result<Reply> {
+        self.wait(None)
+    }
+
+    /// [`RetryingSlot::recv`] with an overall deadline spanning the reply
+    /// waits of every attempt. Caveat: the deadline bounds *waiting on
+    /// reply slots* — a resubmission itself goes through the survivor's
+    /// bounded ingress queue and, like any submit, blocks under
+    /// backpressure while that queue is full, which is not interruptible
+    /// by the deadline.
+    pub fn recv_timeout(self, timeout: Duration) -> Result<Reply> {
+        self.wait(Some(Instant::now() + timeout))
+    }
+
+    fn wait(mut self, deadline: Option<Instant>) -> Result<Reply> {
+        loop {
+            let received = match deadline {
+                None => self.rx.recv().map_err(|_| None),
+                Some(d) => {
+                    let left = d.saturating_duration_since(Instant::now());
+                    self.rx.recv_timeout(left).map_err(|e| match e {
+                        std::sync::mpsc::RecvTimeoutError::Timeout => Some(()),
+                        std::sync::mpsc::RecvTimeoutError::Disconnected => None,
+                    })
+                }
+            };
+            match received {
+                Ok(Ok(reply)) => return Ok(reply),
+                Ok(Err(e)) if is_shard_down(&e) => {
+                    // The shard accepted and then died under the request.
+                    self.handle.mark_dead(self.shard);
+                    if self.resubmits_left == 0 {
+                        return Err(e);
+                    }
+                    self.resubmits_left -= 1;
+                    let (rx, shard) = self.handle.submit_payload(self.payload.clone())?;
+                    self.handle
+                        .inner
+                        .lifecycle
+                        .resubmits
+                        .fetch_add(1, Ordering::Relaxed);
+                    self.rx = rx;
+                    self.shard = shard;
+                }
+                Ok(Err(e)) => return Err(e),
+                Err(Some(())) => {
+                    return Err(Error::Coordinator(format!(
+                        "request {} timed out awaiting its reply",
+                        self.request_id
+                    )))
+                }
+                Err(None) => {
+                    return Err(Error::Coordinator(
+                        "response dropped (worker crashed mid-request?)".into(),
+                    ))
+                }
+            }
+        }
+    }
+}
+
+/// The running fleet: N coordinators behind one [`FleetHandle`], plus (when
+/// [`FleetConfig::autoscale`] is set) a janitor thread that revives dead
+/// shards and scales under pressure. Dropping it shuts every shard down.
+pub struct Fleet {
+    handle: FleetHandle,
+    janitor: Option<JoinHandle<()>>,
+    stop: Arc<AtomicBool>,
 }
 
 impl Fleet {
@@ -625,7 +1096,6 @@ impl Fleet {
                 return Err(Error::Config("weighted policy needs a nonzero weight".into()));
             }
         }
-        let mut shards = Vec::with_capacity(cfg.shards.len());
         let mut slots = Vec::with_capacity(cfg.shards.len());
         for (i, shard_cfg) in cfg.shards.iter().enumerate() {
             let label = cfg
@@ -633,18 +1103,38 @@ impl Fleet {
                 .get(i)
                 .cloned()
                 .unwrap_or_else(|| format!("shard{}:{}", i, shard_cfg.backend.label()));
-            let c = Coordinator::start(shard_cfg.clone())?;
-            slots.push(ShardSlot { label, handle: c.handle(), dead: AtomicBool::new(false) });
-            shards.push(c);
+            slots.push(ShardSlot::new(label, Coordinator::start(shard_cfg.clone())?));
         }
+        let initial = cfg.shards.len();
+        let spawn_template = cfg.shards[0].clone();
         let handle = FleetHandle {
             inner: Arc::new(FleetInner {
-                slots,
+                slots: RwLock::new(slots),
                 policy: cfg.policy,
                 cursor: AtomicUsize::new(0),
+                next_request_id: AtomicU64::new(0),
+                lifecycle: FleetLifecycle::default(),
+                autoscale: cfg.autoscale.clone(),
+                spawn_template,
             }),
         };
-        Ok(Fleet { shards, handle })
+
+        let stop = Arc::new(AtomicBool::new(false));
+        let janitor = match &cfg.autoscale {
+            Some(a) if a.revive || a.max_shards > initial => {
+                let h = handle.clone();
+                let stop = stop.clone();
+                let a = a.clone();
+                Some(
+                    std::thread::Builder::new()
+                        .name("spoga-fleet-janitor".into())
+                        .spawn(move || run_janitor(h, a, stop))
+                        .map_err(|e| Error::Coordinator(format!("spawn janitor: {e}")))?,
+                )
+            }
+            _ => None,
+        };
+        Ok(Fleet { handle, janitor, stop })
     }
 
     /// Convenience: the historical single-coordinator serving path as a
@@ -658,26 +1148,62 @@ impl Fleet {
         self.handle.clone()
     }
 
-    /// Number of shards.
+    /// Number of shards (initial + dynamically spawned).
     pub fn shard_count(&self) -> usize {
-        self.shards.len()
+        self.handle.shard_count()
     }
 
-    /// Graceful shutdown: drain and join every shard.
-    pub fn shutdown(self) {
-        for c in self.shards {
-            c.shutdown();
+    fn halt(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(j) = self.janitor.take() {
+            let _ = j.join();
         }
+        for slot in self.handle.slots() {
+            if let Some(c) = slot.coordinator.lock().expect("coordinator lock").take() {
+                c.shutdown();
+            }
+        }
+    }
+
+    /// Graceful shutdown: stop the janitor, then drain and join every
+    /// shard (including shards spawned by autoscaling).
+    pub fn shutdown(mut self) {
+        self.halt();
+    }
+}
+
+impl Drop for Fleet {
+    fn drop(&mut self) {
+        self.halt();
+    }
+}
+
+/// Janitor loop: on each cadence tick, revive dead shards (when the policy
+/// says so) and apply the pressure-based scale-up check. Sleeps in slices
+/// no longer than 50 ms (or the interval itself, if shorter) so
+/// `Fleet::shutdown` joins promptly without the thread busy-waking at long
+/// cadences.
+fn run_janitor(handle: FleetHandle, policy: FleetAutoscale, stop: Arc<AtomicBool>) {
+    let interval = Duration::from_secs_f64(policy.interval_s.max(0.001));
+    let slice = interval.min(Duration::from_millis(50));
+    let mut since_tick = Duration::ZERO;
+    while !stop.load(Ordering::Relaxed) {
+        std::thread::sleep(slice);
+        since_tick += slice;
+        if since_tick < interval {
+            continue;
+        }
+        since_tick = Duration::ZERO;
+        if policy.revive {
+            let _ = handle.revive_dead_shards();
+        }
+        let _ = handle.maybe_scale_up();
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    fn slot(label: &str, handle: CoordinatorHandle) -> ShardSlot {
-        ShardSlot { label: label.into(), handle, dead: AtomicBool::new(false) }
-    }
 
     fn synthetic_dir(tag: &str) -> std::path::PathBuf {
         let dir = std::env::temp_dir()
@@ -687,7 +1213,7 @@ mod tests {
         dir
     }
 
-    fn two_shard_handle(tag: &str, policy: RoutePolicy) -> (FleetHandle, Vec<Coordinator>) {
+    fn two_shard_handle(tag: &str, policy: RoutePolicy) -> (FleetHandle, Fleet) {
         let dir = synthetic_dir(tag);
         let cfg = CoordinatorConfig {
             artifact_dir: dir.to_string_lossy().into_owned(),
@@ -695,49 +1221,43 @@ mod tests {
             max_batch_wait_s: 0.0,
             ..Default::default()
         };
-        let a = Coordinator::start(cfg.clone()).unwrap();
-        let b = Coordinator::start(cfg).unwrap();
-        let handle = FleetHandle {
-            inner: Arc::new(FleetInner {
-                slots: vec![slot("a", a.handle()), slot("b", b.handle())],
-                policy,
-                cursor: AtomicUsize::new(0),
-            }),
-        };
-        (handle, vec![a, b])
+        let fleet = Fleet::start(FleetConfig {
+            shards: vec![cfg.clone(), cfg],
+            policy,
+            labels: vec!["a".into(), "b".into()],
+            autoscale: None,
+        })
+        .unwrap();
+        (fleet.handle(), fleet)
     }
 
     #[test]
     fn weighted_policy_splits_exactly_over_a_period() {
-        let (h, shards) = two_shard_handle("weighted", RoutePolicy::Weighted(vec![1, 3]));
+        let (h, fleet) = two_shard_handle("weighted", RoutePolicy::Weighted(vec![1, 3]));
         let live = h.live();
         let mut counts = [0usize; 2];
         for _ in 0..8 {
             counts[h.pick(&live)] += 1;
         }
         assert_eq!(counts, [2, 6], "1:3 split over two periods");
-        for c in shards {
-            c.shutdown();
-        }
+        fleet.shutdown();
     }
 
     #[test]
     fn least_queue_depth_prefers_the_idle_shard() {
-        let (h, shards) = two_shard_handle("lqd", RoutePolicy::LeastQueueDepth);
+        let (h, fleet) = two_shard_handle("lqd", RoutePolicy::LeastQueueDepth);
         // Fake a backlog on shard 0 (requests accepted, never resolved).
         h.shard_stats(0).requests.fetch_add(50, Ordering::Relaxed);
         let live = h.live();
         for _ in 0..4 {
             assert_eq!(h.pick(&live), 1);
         }
-        for c in shards {
-            c.shutdown();
-        }
+        fleet.shutdown();
     }
 
     #[test]
     fn dead_shards_leave_the_rotation() {
-        let (h, shards) = two_shard_handle("dead", RoutePolicy::RoundRobin);
+        let (h, fleet) = two_shard_handle("dead", RoutePolicy::RoundRobin);
         assert_eq!(h.live_shard_count(), 2);
         h.mark_dead(0);
         assert_eq!(h.live_shard_count(), 1);
@@ -745,9 +1265,7 @@ mod tests {
         for _ in 0..4 {
             assert_eq!(h.pick(&live), 1);
         }
-        for c in shards {
-            c.shutdown();
-        }
+        fleet.shutdown();
     }
 
     #[test]
@@ -771,6 +1289,7 @@ mod tests {
             shards: Vec::new(),
             policy: RoutePolicy::RoundRobin,
             labels: Vec::new(),
+            autoscale: None,
         })
         .is_err());
         let shard = CoordinatorConfig::default();
@@ -778,12 +1297,14 @@ mod tests {
             shards: vec![shard.clone(), shard.clone()],
             policy: RoutePolicy::Weighted(vec![1]),
             labels: Vec::new(),
+            autoscale: None,
         })
         .is_err());
         assert!(Fleet::start(FleetConfig {
             shards: vec![shard.clone(), shard],
             policy: RoutePolicy::Weighted(vec![0, 0]),
             labels: Vec::new(),
+            autoscale: None,
         })
         .is_err());
     }
@@ -837,12 +1358,10 @@ mod tests {
 
     #[test]
     fn noise_grid_drive_rejects_mismatched_fleets() {
-        let (h, shards) = two_shard_handle("gridmismatch", RoutePolicy::RoundRobin);
+        let (h, fleet) = two_shard_handle("gridmismatch", RoutePolicy::RoundRobin);
         let grid = NoiseSweepGrid::paper_range(); // 9 cells vs 2 shards
         assert!(grid.drive(&h, 1).is_err());
-        for c in shards {
-            c.shutdown();
-        }
+        fleet.shutdown();
     }
 
     #[test]

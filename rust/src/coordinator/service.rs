@@ -1,13 +1,15 @@
 //! The coordinator service: leader thread, routing, lifecycle.
 
-use std::sync::atomic::Ordering;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SendError, SyncSender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::batcher::{BatchPolicy, CnnMicroBatch, MicroBatch};
-use crate::coordinator::request::{response_slot, CnnJob, GemmJob, Job, MlpJob, Reply, Response};
+use crate::coordinator::request::{
+    response_slot, CnnJob, GemmJob, Job, MlpJob, PingJob, Reply, Response,
+};
 use crate::coordinator::stats::CoordinatorStats;
 use crate::coordinator::worker::{run_worker, WorkItem};
 use crate::dnn::models::CnnModel;
@@ -44,6 +46,17 @@ pub struct CoordinatorConfig {
     /// Compile all artifacts at worker start (first-request latency vs
     /// startup time trade).
     pub warmup: bool,
+    /// Time-indexed counter mode for analog noise: when `true`, every
+    /// request is stamped with a per-coordinator counter nonce that noise-
+    /// injecting backends fold into each output row's sub-stream key
+    /// ([`crate::runtime::RowNonce`]) — byte-identical rows served under
+    /// different nonces then observe *decorrelated* noise, while each
+    /// `(seed, content, nonce)` draw stays deterministic. Default `false`:
+    /// the pure content-keyed streams, bit-identical to historical serving
+    /// (and required for bit-identical cross-shard resubmission of noisy
+    /// traffic, since a resubmitted request draws a fresh nonce on the
+    /// survivor).
+    pub noise_nonce: bool,
 }
 
 impl Default for CoordinatorConfig {
@@ -56,8 +69,23 @@ impl Default for CoordinatorConfig {
             max_cnn_batch: 8,
             queue_depth: 1024,
             warmup: true,
+            noise_nonce: false,
         }
     }
+}
+
+/// A submission the coordinator could not accept, with the moved payload
+/// recovered from the channel's `SendError` — so callers that fail over
+/// (the fleet router) can resubmit elsewhere *without cloning the payload
+/// up front*. Submit-time failures never consume the payload; only a shard
+/// dying after acceptance does (which is what the retained-payload
+/// [`RetryingSlot`](crate::coordinator::RetryingSlot) exists for).
+#[derive(Debug)]
+pub struct Rejected<P> {
+    /// Why the submission was refused.
+    pub error: Error,
+    /// The payload, returned intact.
+    pub payload: P,
 }
 
 /// Cloneable client handle for submitting requests.
@@ -66,52 +94,133 @@ pub struct CoordinatorHandle {
     tx: SyncSender<Job>,
     stats: Arc<CoordinatorStats>,
     mlp_row_len: usize,
+    /// Configured worker-pool size — the target `revive_workers` restores.
+    workers: usize,
+    /// Time-indexed noise-nonce counter (0 is never handed out; it means
+    /// "content-keyed"). `None` when [`CoordinatorConfig::noise_nonce`] is
+    /// off, so default serving stamps every job with nonce 0.
+    nonce_counter: Option<Arc<AtomicU64>>,
 }
 
 impl CoordinatorHandle {
+    /// Next per-request noise nonce (0 when the counter mode is off).
+    fn next_nonce(&self) -> u64 {
+        match &self.nonce_counter {
+            None => 0,
+            Some(c) => c.fetch_add(1, Ordering::Relaxed) + 1,
+        }
+    }
+
+    /// Enqueue a job, recovering it from the channel on failure. The
+    /// accepted-request counter only sticks for accepted jobs, so a
+    /// rejected submission never leaks `queue_depth()`.
+    fn send_job(&self, job: Job) -> std::result::Result<(), Job> {
+        self.stats.requests.fetch_add(1, Ordering::Relaxed);
+        match self.tx.send(job) {
+            Ok(()) => Ok(()),
+            Err(SendError(returned)) => {
+                self.stats.requests.fetch_sub(1, Ordering::Relaxed);
+                Err(returned)
+            }
+        }
+    }
+
     /// Submit a GEMM against a named artifact; returns the response slot.
     pub fn submit_gemm(&self, artifact: &str, a: Vec<i32>, b: Vec<i32>) -> Result<Response> {
+        self.try_submit_gemm(artifact, a, b).map_err(|r| r.error)
+    }
+
+    /// Payload-recovering GEMM submission: a refused submit (the
+    /// coordinator stopped) hands `(a, b)` back inside the [`Rejected`] so
+    /// a failover layer can resubmit elsewhere without having cloned.
+    pub fn try_submit_gemm(
+        &self,
+        artifact: &str,
+        a: Vec<i32>,
+        b: Vec<i32>,
+    ) -> std::result::Result<Response, Rejected<(Vec<i32>, Vec<i32>)>> {
         let (reply, rx) = response_slot();
-        self.stats.requests.fetch_add(1, Ordering::Relaxed);
-        self.tx
-            .send(Job::Gemm(GemmJob {
-                artifact: artifact.to_string(),
-                a,
-                b,
-                reply,
-                enqueued: Instant::now(),
-            }))
-            .map_err(|_| Error::ShardDown("coordinator stopped".into()))?;
-        Ok(rx)
+        let job = Job::Gemm(GemmJob {
+            artifact: artifact.to_string(),
+            a,
+            b,
+            reply,
+            enqueued: Instant::now(),
+            nonce: self.next_nonce(),
+        });
+        match self.send_job(job) {
+            Ok(()) => Ok(rx),
+            Err(Job::Gemm(g)) => Err(Rejected {
+                error: Error::ShardDown("coordinator stopped".into()),
+                payload: (g.a, g.b),
+            }),
+            Err(_) => unreachable!("send returns the job it was given"),
+        }
     }
 
     /// Submit one MLP row; returns the response slot.
     pub fn submit_mlp(&self, row: Vec<i32>) -> Result<Response> {
+        self.try_submit_mlp(row).map_err(|r| r.error)
+    }
+
+    /// Payload-recovering MLP submission (see [`CoordinatorHandle::try_submit_gemm`]).
+    /// Shape rejections return the row too — nothing consumed it.
+    pub fn try_submit_mlp(
+        &self,
+        row: Vec<i32>,
+    ) -> std::result::Result<Response, Rejected<Vec<i32>>> {
         if row.len() != self.mlp_row_len {
-            return Err(Error::Shape(format!(
+            let error = Error::Shape(format!(
                 "mlp row has {} elements, expected {}",
                 row.len(),
                 self.mlp_row_len
-            )));
+            ));
+            return Err(Rejected { error, payload: row });
         }
         let (reply, rx) = response_slot();
-        self.stats.requests.fetch_add(1, Ordering::Relaxed);
-        self.tx
-            .send(Job::Mlp(MlpJob { row, reply, enqueued: Instant::now() }))
-            .map_err(|_| Error::ShardDown("coordinator stopped".into()))?;
-        Ok(rx)
+        let job =
+            Job::Mlp(MlpJob { row, reply, enqueued: Instant::now(), nonce: self.next_nonce() });
+        match self.send_job(job) {
+            Ok(()) => Ok(rx),
+            Err(Job::Mlp(m)) => Err(Rejected {
+                error: Error::ShardDown("coordinator stopped".into()),
+                payload: m.row,
+            }),
+            Err(_) => unreachable!("send returns the job it was given"),
+        }
     }
 
     /// Submit a whole-CNN inference; validates the layer chain against the
     /// input length up front. Returns the response slot.
     pub fn submit_cnn(&self, model: CnnModel, input: Vec<i32>) -> Result<Response> {
-        crate::runtime::cnnrun::validate_cnn_input(&model, input.len())?;
+        self.try_submit_cnn(model, input).map_err(|r| r.error)
+    }
+
+    /// Payload-recovering CNN submission (see [`CoordinatorHandle::try_submit_gemm`]).
+    pub fn try_submit_cnn(
+        &self,
+        model: CnnModel,
+        input: Vec<i32>,
+    ) -> std::result::Result<Response, Rejected<(CnnModel, Vec<i32>)>> {
+        if let Err(error) = crate::runtime::cnnrun::validate_cnn_input(&model, input.len()) {
+            return Err(Rejected { error, payload: (model, input) });
+        }
         let (reply, rx) = response_slot();
-        self.stats.requests.fetch_add(1, Ordering::Relaxed);
-        self.tx
-            .send(Job::Cnn(CnnJob { model, input, reply, enqueued: Instant::now() }))
-            .map_err(|_| Error::ShardDown("coordinator stopped".into()))?;
-        Ok(rx)
+        let job = Job::Cnn(CnnJob {
+            model,
+            input,
+            reply,
+            enqueued: Instant::now(),
+            nonce: self.next_nonce(),
+        });
+        match self.send_job(job) {
+            Ok(()) => Ok(rx),
+            Err(Job::Cnn(c)) => Err(Rejected {
+                error: Error::ShardDown("coordinator stopped".into()),
+                payload: (c.model, c.input),
+            }),
+            Err(_) => unreachable!("send returns the job it was given"),
+        }
     }
 
     /// Submit a CNN described as trace text (see [`crate::dnn::trace`]).
@@ -164,9 +273,84 @@ impl CoordinatorHandle {
             .map_err(|_| Error::ShardDown("coordinator stopped".into()))
     }
 
+    /// Respawn workers until the pool holds `target` again (the leader
+    /// survives [`CoordinatorHandle::retire_workers`] and worker deaths, so
+    /// a shard can rebuild its pool in place). Fire-and-forget: follow with
+    /// [`CoordinatorHandle::ping`] to confirm the revived pool serves.
+    pub fn revive_workers(&self, target: usize) -> Result<()> {
+        self.tx
+            .send(Job::ReviveWorkers { target: target.max(1) })
+            .map_err(|_| Error::ShardDown("coordinator stopped".into()))
+    }
+
+    /// Configured worker-pool size (the default revival target).
+    pub fn configured_workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Health probe: routes a ping through leader dispatch to a worker and
+    /// waits up to `timeout` for the pong. `Ok` proves the shard serves end
+    /// to end; errors mean the coordinator is stopped, the pool is dead, or
+    /// the probe timed out. Pings never touch request/completed stats, so
+    /// probing cannot skew routing.
+    pub fn ping(&self, timeout: Duration) -> Result<()> {
+        let (reply, rx) = response_slot();
+        self.tx
+            .send(Job::Ping(PingJob { reply }))
+            .map_err(|_| Error::ShardDown("coordinator stopped".into()))?;
+        match rx.recv_timeout(timeout) {
+            Ok(Ok(_)) => Ok(()),
+            Ok(Err(e)) => Err(e),
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                Err(Error::ShardDown("health probe timed out".into()))
+            }
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                Err(Error::ShardDown("health probe slot dropped".into()))
+            }
+        }
+    }
+
     /// Shared metrics.
     pub fn stats(&self) -> &CoordinatorStats {
         &self.stats
+    }
+
+    /// The shared stats behind their `Arc` (fleet rollups hold these across
+    /// the router's interior-mutable slot table).
+    pub fn stats_arc(&self) -> Arc<CoordinatorStats> {
+        self.stats.clone()
+    }
+}
+
+/// The worker-spawn recipe, shared by [`Coordinator::start`] and the
+/// leader's revival path ([`Job::ReviveWorkers`]): everything a fresh
+/// worker thread needs to build its engine and join the pool.
+struct WorkerSpawner {
+    artifact_dir: String,
+    backend: BackendKind,
+    warmup: bool,
+    queue_depth: usize,
+    stats: Arc<CoordinatorStats>,
+}
+
+impl WorkerSpawner {
+    /// Spawn worker `id`; `ready` is `Some` only at coordinator start
+    /// (revived workers must not block the serving leader on engine init).
+    fn spawn(
+        &self,
+        id: usize,
+        ready: Option<SyncSender<()>>,
+    ) -> Result<(SyncSender<WorkItem>, JoinHandle<()>)> {
+        let (wtx, wrx) = sync_channel::<WorkItem>(self.queue_depth);
+        let dir = self.artifact_dir.clone();
+        let backend = self.backend.clone();
+        let st = self.stats.clone();
+        let warm = self.warmup;
+        let join = std::thread::Builder::new()
+            .name(format!("spoga-worker-{id}"))
+            .spawn(move || run_worker(id, dir, backend, warm, ready, wrx, st))
+            .map_err(|e| Error::Coordinator(format!("spawn worker: {e}")))?;
+        Ok((wtx, join))
     }
 }
 
@@ -194,31 +378,32 @@ impl Coordinator {
         // every MLP member its own row's events and the CNN runtime slices
         // stacked frames exactly. No noise→batch=1 clamp is needed.
         let cnn_batch_cap = cfg.max_cnn_batch.max(1);
+        let workers = cfg.workers.max(1);
 
         let stats = Arc::new(CoordinatorStats::default());
-        stats.live_workers.store(cfg.workers.max(1) as u64, Ordering::Relaxed);
+        stats.live_workers.store(workers as u64, Ordering::Relaxed);
         let (tx, rx) = sync_channel::<Job>(cfg.queue_depth);
 
+        let spawner = WorkerSpawner {
+            artifact_dir: cfg.artifact_dir.clone(),
+            backend: cfg.backend.clone(),
+            warmup: cfg.warmup,
+            queue_depth: cfg.queue_depth,
+            stats: stats.clone(),
+        };
+
         // Workers.
-        let mut worker_txs = Vec::with_capacity(cfg.workers.max(1));
+        let mut worker_txs = Vec::with_capacity(workers);
         let mut joins = Vec::new();
-        let (ready_tx, ready_rx) = sync_channel::<()>(cfg.workers.max(1));
-        for id in 0..cfg.workers.max(1) {
-            let (wtx, wrx) = sync_channel::<WorkItem>(cfg.queue_depth);
-            let dir = cfg.artifact_dir.clone();
-            let backend = cfg.backend.clone();
-            let st = stats.clone();
-            let warm = cfg.warmup;
-            let rtx = ready_tx.clone();
-            joins.push(std::thread::Builder::new()
-                .name(format!("spoga-worker-{id}"))
-                .spawn(move || run_worker(id, dir, backend, warm, rtx, wrx, st))
-                .map_err(|e| Error::Coordinator(format!("spawn worker: {e}")))?);
+        let (ready_tx, ready_rx) = sync_channel::<()>(workers);
+        for id in 0..workers {
+            let (wtx, join) = spawner.spawn(id, Some(ready_tx.clone()))?;
             worker_txs.push(wtx);
+            joins.push(join);
         }
         drop(ready_tx);
         // Block until every worker finished (possibly warm) engine init.
-        for _ in 0..cfg.workers.max(1) {
+        for _ in 0..workers {
             let _ = ready_rx.recv();
         }
 
@@ -228,12 +413,14 @@ impl Coordinator {
             std::thread::Builder::new()
                 .name("spoga-leader".into())
                 .spawn(move || {
-                    run_leader(rx, worker_txs, policy, cnn_batch_cap, leader_stats, joins)
+                    run_leader(rx, worker_txs, policy, cnn_batch_cap, leader_stats, joins, spawner)
                 })
                 .map_err(|e| Error::Coordinator(format!("spawn leader: {e}")))?
         };
 
-        let handle = CoordinatorHandle { tx: tx.clone(), stats, mlp_row_len };
+        let nonce_counter = cfg.noise_nonce.then(|| Arc::new(AtomicU64::new(0)));
+        let handle =
+            CoordinatorHandle { tx: tx.clone(), stats, mlp_row_len, workers, nonce_counter };
         Ok(Coordinator { handle, leader: Some(leader), tx })
     }
 
@@ -305,6 +492,65 @@ fn retire_all_workers(worker_txs: &mut Vec<SyncSender<WorkItem>>, stats: &Coordi
     stats.live_workers.store(0, Ordering::Relaxed);
 }
 
+/// Revive the pool to `target` workers: spawn the shortfall through the
+/// leader's [`WorkerSpawner`] (fresh engines, no readiness handshake — the
+/// leader keeps serving while revived engines warm; their channels buffer
+/// dispatched work meanwhile). A worker whose engine init fails exits
+/// immediately and is retired by the next dispatch, exactly like at start.
+///
+/// Stale senders of workers that already died (crashed, or exited on a
+/// failed engine init) are pruned *first* — counting them toward `target`
+/// would under-provision the revived pool and inflate the `live_workers`
+/// gauge until the next dispatch happened to hit them.
+fn revive_workers_to(
+    target: usize,
+    worker_txs: &mut Vec<SyncSender<WorkItem>>,
+    worker_joins: &mut Vec<JoinHandle<()>>,
+    next_worker_id: &mut usize,
+    spawner: &WorkerSpawner,
+    stats: &CoordinatorStats,
+) {
+    worker_txs.retain(|tx| {
+        let (reply, pong) = response_slot();
+        match tx.try_send(WorkItem::Ping(PingJob { reply })) {
+            // Accepted: the worker will pong into the dropped slot — cheap
+            // and harmless. A full queue also proves the receiver is alive
+            // (a dropped receiver reports Disconnected even when full).
+            Ok(()) => {
+                drop(pong);
+                true
+            }
+            Err(std::sync::mpsc::TrySendError::Full(_)) => true,
+            Err(std::sync::mpsc::TrySendError::Disconnected(_)) => false,
+        }
+    });
+    // Drop join handles of threads that already exited, so repeated revive
+    // cycles (e.g. a janitor retrying a persistently failing artifact dir)
+    // do not accumulate handles without bound. Finished threads need no
+    // join for correctness — only still-running workers are joined at
+    // leader exit.
+    worker_joins.retain(|j| !j.is_finished());
+    let mut spawned = false;
+    while worker_txs.len() < target {
+        match spawner.spawn(*next_worker_id, None) {
+            Ok((wtx, join)) => {
+                worker_txs.push(wtx);
+                worker_joins.push(join);
+                *next_worker_id += 1;
+                spawned = true;
+            }
+            Err(e) => {
+                eprintln!("revive: could not spawn worker {next_worker_id}: {e}");
+                break;
+            }
+        }
+    }
+    stats.live_workers.store(worker_txs.len() as u64, Ordering::Relaxed);
+    if spawned {
+        stats.revivals.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
 /// Extract up to `cap` pending frames of `model`, in arrival order.
 fn extract_cnn_group(pending: &mut Vec<CnnJob>, model: &CnnModel, cap: usize) -> Vec<CnnJob> {
     let mut jobs = Vec::new();
@@ -366,9 +612,11 @@ fn run_leader(
     policy: BatchPolicy,
     cnn_batch_cap: usize,
     stats: Arc<CoordinatorStats>,
-    worker_joins: Vec<JoinHandle<()>>,
+    mut worker_joins: Vec<JoinHandle<()>>,
+    spawner: WorkerSpawner,
 ) {
     let mut next_worker = 0usize;
+    let mut next_worker_id = worker_txs.len();
     let window = Duration::from_secs_f64(policy.max_wait_s);
     let mut pending: Vec<MlpJob> = Vec::new();
     let mut pending_cnn: Vec<CnnJob> = Vec::new();
@@ -381,6 +629,21 @@ fn run_leader(
             Ok(Job::Shutdown) => break,
             Ok(Job::RetireWorkers) => {
                 retire_all_workers(&mut worker_txs, &stats);
+                continue;
+            }
+            Ok(Job::ReviveWorkers { target }) => {
+                revive_workers_to(
+                    target,
+                    &mut worker_txs,
+                    &mut worker_joins,
+                    &mut next_worker_id,
+                    &spawner,
+                    &stats,
+                );
+                continue;
+            }
+            Ok(Job::Ping(p)) => {
+                dispatch(WorkItem::Ping(p), &mut worker_txs, &mut next_worker, &stats);
                 continue;
             }
             Ok(Job::Gemm(g)) => {
@@ -436,6 +699,17 @@ fn run_leader(
                     );
                 }
                 Ok(Job::RetireWorkers) => retire_all_workers(&mut worker_txs, &stats),
+                Ok(Job::ReviveWorkers { target }) => revive_workers_to(
+                    target,
+                    &mut worker_txs,
+                    &mut worker_joins,
+                    &mut next_worker_id,
+                    &spawner,
+                    &stats,
+                ),
+                Ok(Job::Ping(p)) => {
+                    dispatch(WorkItem::Ping(p), &mut worker_txs, &mut next_worker, &stats)
+                }
                 Ok(Job::Shutdown) => {
                     shutdown = true;
                     break;
@@ -489,7 +763,11 @@ fn run_leader(
             Job::Gemm(g) => fail_one(&stats, &g.reply),
             Job::Mlp(m) => fail_one(&stats, &m.reply),
             Job::Cnn(c) => fail_one(&stats, &c.reply),
-            Job::RetireWorkers | Job::Shutdown => {}
+            // Pings are not counted as requests, so only the slot resolves.
+            Job::Ping(p) => {
+                let _ = p.reply.send(Err(Error::ShardDown("shutdown".into())));
+            }
+            Job::RetireWorkers | Job::ReviveWorkers { .. } | Job::Shutdown => {}
         }
     }
     for tx in &worker_txs {
@@ -514,6 +792,7 @@ mod tests {
             b: vec![tag],
             reply,
             enqueued: Instant::now(),
+            nonce: 0,
         };
         (WorkItem::Gemm(job), rx)
     }

@@ -28,11 +28,17 @@ pub struct CoordinatorStats {
     /// Stacked same-model CNN micro-batches executed (t-dimension batching).
     pub cnn_batches: AtomicU64,
     /// Workers still in the leader's rotation (gauge, maintained by the
-    /// leader: set at start, dropped as workers die or retire). A fleet
-    /// router treats `0` as shard-down even when the shard's leader is
-    /// still alive fast-failing jobs — otherwise a dead pool's near-zero
-    /// queue depth would *attract* least-queue-depth traffic.
+    /// leader: set at start, dropped as workers die or retire, restored by
+    /// revival). A fleet router treats `0` as shard-down even when the
+    /// shard's leader is still alive fast-failing jobs — otherwise a dead
+    /// pool's near-zero queue depth would *attract* least-queue-depth
+    /// traffic.
     pub live_workers: AtomicU64,
+    /// Worker-pool revivals executed by the leader
+    /// ([`Job::ReviveWorkers`](crate::coordinator::Job) calls that spawned
+    /// at least one worker) — the shard-lifecycle counterpart of the fleet's
+    /// revived/spawned counters.
+    pub revivals: AtomicU64,
     /// Latency histogram (µs, log2 buckets).
     lat_hist: [AtomicU64; BUCKETS],
     /// Total latency in µs.

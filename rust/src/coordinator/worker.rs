@@ -11,10 +11,10 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::coordinator::batcher::{CnnMicroBatch, MicroBatch};
-use crate::coordinator::request::{CnnJob, GemmJob, Reply};
+use crate::coordinator::request::{CnnJob, GemmJob, PingJob, Reply};
 use crate::coordinator::stats::CoordinatorStats;
-use crate::runtime::backend::BackendKind;
-use crate::runtime::cnnrun::{run_cnn, run_cnn_batch};
+use crate::runtime::backend::{BackendKind, RowNonce};
+use crate::runtime::cnnrun::run_cnn_batch_keyed;
 use crate::runtime::Engine;
 
 /// Work items dispatched by the leader to a worker.
@@ -28,6 +28,9 @@ pub enum WorkItem {
     Cnn(CnnJob),
     /// A stack of same-model CNN frames (t-dimension batching).
     CnnBatch(CnnMicroBatch),
+    /// A health probe: answered with an empty reply, never counted into
+    /// request stats (see [`PingJob`]).
+    Ping(PingJob),
     /// Stop the worker.
     Shutdown,
 }
@@ -49,6 +52,9 @@ impl WorkItem {
                 let _ = c.reply.send(Err(err()));
             }
             WorkItem::CnnBatch(b) => b.fail_with(&err),
+            WorkItem::Ping(p) => {
+                let _ = p.reply.send(Err(err()));
+            }
             WorkItem::Shutdown => {}
         }
     }
@@ -56,12 +62,14 @@ impl WorkItem {
     /// Reply slots this item owns — what `fail` will resolve, and what the
     /// failure paths outside a worker must add to `stats.failed` so
     /// `queue_depth()` (requests − completed − failed) stays truthful.
+    /// Pings resolve a slot too but were never counted as requests, so they
+    /// contribute zero here.
     pub(crate) fn reply_slots(&self) -> u64 {
         match self {
             WorkItem::Batch(b) => b.jobs.len() as u64,
             WorkItem::Gemm(_) | WorkItem::Cnn(_) => 1,
             WorkItem::CnnBatch(b) => b.jobs.len() as u64,
-            WorkItem::Shutdown => 0,
+            WorkItem::Ping(_) | WorkItem::Shutdown => 0,
         }
     }
 }
@@ -75,7 +83,7 @@ pub fn run_worker(
     artifact_dir: String,
     backend: BackendKind,
     warmup: bool,
-    ready: std::sync::mpsc::SyncSender<()>,
+    ready: Option<std::sync::mpsc::SyncSender<()>>,
     rx: Receiver<WorkItem>,
     stats: Arc<CoordinatorStats>,
 ) {
@@ -88,8 +96,12 @@ pub fn run_worker(
         Ok(e)
     });
     // Signal readiness (successful or not) so Coordinator::start can block
-    // until the fleet is warm.
-    let _ = ready.send(());
+    // until the fleet is warm. Revived workers spawn without the handshake
+    // (the leader must not block mid-serving; their queue buffers work
+    // until init completes).
+    if let Some(ready) = ready {
+        let _ = ready.send(());
+    }
     let mut engine = match engine_init {
         Ok(e) => e,
         Err(e) => {
@@ -108,10 +120,19 @@ pub fn run_worker(
     for item in rx {
         match item {
             WorkItem::Shutdown => break,
+            WorkItem::Ping(p) => {
+                // A pong proves leader→dispatch→worker liveness; it carries
+                // no outputs and touches no stats.
+                let _ = p.reply.send(Ok(Reply::bare(Vec::new())));
+            }
             WorkItem::Gemm(job) => {
                 let started = Instant::now();
                 let res = engine
-                    .execute_reported(&job.artifact, &[&job.a, &job.b])
+                    .execute_reported_keyed(
+                        &job.artifact,
+                        &[&job.a, &job.b],
+                        &RowNonce::Request(job.nonce),
+                    )
                     .map_err(|e| crate::Error::Coordinator(e.to_string()));
                 stats.record_service(started.elapsed().as_secs_f64());
                 match res {
@@ -131,7 +152,9 @@ pub fn run_worker(
             }
             WorkItem::Cnn(job) => {
                 let started = Instant::now();
-                let res = run_cnn(&mut engine, &job.model, &job.input)
+                let nonces = if job.nonce == 0 { vec![] } else { vec![job.nonce] };
+                let res = run_cnn_batch_keyed(&mut engine, &job.model, &[&job.input], &nonces)
+                    .map(|mut runs| runs.pop().expect("batch of one yields one run"))
                     .map_err(|e| crate::Error::Coordinator(e.to_string()));
                 stats.record_service(started.elapsed().as_secs_f64());
                 match res {
@@ -158,8 +181,9 @@ pub fn run_worker(
                 let frames = batch.jobs.len() as u64;
                 let inputs: Vec<&[i32]> =
                     batch.jobs.iter().map(|j| j.input.as_slice()).collect();
+                let nonces = batch.frame_nonces();
                 let started = Instant::now();
-                let res = run_cnn_batch(&mut engine, &batch.model, &inputs)
+                let res = run_cnn_batch_keyed(&mut engine, &batch.model, &inputs, &nonces)
                     .map_err(|e| crate::Error::Coordinator(e.to_string()));
                 stats.record_service(started.elapsed().as_secs_f64());
                 match res {
@@ -192,10 +216,11 @@ pub fn run_worker(
                 let padding = (batch.batch - batch.jobs.len()) as u64;
                 let row_len = batch.jobs.first().map(|j| j.row.len()).unwrap_or(0);
                 let input = batch.build_input(row_len);
+                let nonces = batch.row_nonces();
                 // Per-batch service time: the execute duration alone, as
                 // opposed to the members' enqueue-to-done latencies below.
                 let started = Instant::now();
-                let res = engine.execute_reported(&batch.artifact, &[&input]);
+                let res = engine.execute_reported_keyed(&batch.artifact, &[&input], &nonces);
                 stats.record_service(started.elapsed().as_secs_f64());
                 match res {
                     Ok((out, report)) => {

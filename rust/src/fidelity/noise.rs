@@ -121,8 +121,28 @@ impl AnalogChannel {
     /// the same seed. `&self` — the sequential stream is not advanced.
     /// (The flip side: byte-identical rows co-served in one batch correlate
     /// perfectly; that determinism is the price of order-independent
-    /// attribution, and distinct traffic decorrelates.)
+    /// attribution, and distinct traffic decorrelates. To decorrelate
+    /// duplicates too, key the row with a nonzero per-request nonce via
+    /// [`AnalogChannel::transduce_row_keyed`].)
     pub fn transduce_row(&self, hi: &[i32], mid: &[i32], lo: &[i32], k: usize) -> Vec<f64> {
+        self.transduce_row_keyed(hi, mid, lo, k, 0)
+    }
+
+    /// [`AnalogChannel::transduce_row`] with an additional caller-supplied
+    /// `nonce` folded into the sub-stream key — the ROADMAP's time-indexed
+    /// counter mode. A nonzero nonce (e.g. a per-request counter carried
+    /// through the batcher) decorrelates byte-identical rows served under
+    /// different nonces while keeping each `(seed, content, nonce)` triple
+    /// fully deterministic; `nonce == 0` is bit-identical to the plain
+    /// content-keyed path, so default-off serving never changes outputs.
+    pub fn transduce_row_keyed(
+        &self,
+        hi: &[i32],
+        mid: &[i32],
+        lo: &[i32],
+        k: usize,
+        nonce: u64,
+    ) -> Vec<f64> {
         debug_assert!(hi.len() == mid.len() && mid.len() == lo.len());
         // FNV-1a over the row signature; collisions merely correlate two
         // rows' noise, which the Monte-Carlo statistics shrug off.
@@ -135,6 +155,11 @@ impl AnalogChannel {
             for &v in lane {
                 h = fold(h, v as u32 as u64);
             }
+        }
+        if nonce != 0 {
+            // Folded only when set, so the nonce-off stream stays exactly
+            // the historical content-keyed stream (seeded tests pin this).
+            h = fold(h, nonce);
         }
         let mut sub = AnalogChannel::new(self.params, self.seed ^ h);
         (0..hi.len())
@@ -259,6 +284,33 @@ mod tests {
         }
         // Empty rows are a no-op.
         assert!(ch.transduce_row(&[], &[], &[], 4).is_empty());
+    }
+
+    #[test]
+    fn nonce_zero_is_bit_identical_and_nonzero_decorrelates() {
+        let p = NoiseParams { snr_db: 24.1, adc_bits: None };
+        let ch = AnalogChannel::new(p, 77);
+        let (hi, mid, lo) = (vec![40i32, -12, 7], vec![3i32, 0, -9], vec![11i32, 2, 5]);
+
+        // nonce 0 ≡ the plain content-keyed path, bit for bit.
+        assert_eq!(
+            ch.transduce_row_keyed(&hi, &mid, &lo, 8, 0),
+            ch.transduce_row(&hi, &mid, &lo, 8)
+        );
+
+        // Distinct nonces decorrelate the same row content; equal nonces
+        // stay deterministic (same draws every time, any channel instance
+        // with the same construction seed).
+        let n1 = ch.transduce_row_keyed(&hi, &mid, &lo, 8, 1);
+        let n2 = ch.transduce_row_keyed(&hi, &mid, &lo, 8, 2);
+        assert_ne!(n1, n2, "different nonces must draw different noise");
+        assert_ne!(n1, ch.transduce_row(&hi, &mid, &lo, 8));
+        assert_eq!(n1, ch.transduce_row_keyed(&hi, &mid, &lo, 8, 1));
+        assert_eq!(
+            n1,
+            AnalogChannel::new(p, 77).transduce_row_keyed(&hi, &mid, &lo, 8, 1),
+            "keyed draws depend only on (seed, content, nonce)"
+        );
     }
 
     #[test]

@@ -27,7 +27,7 @@
 //! | [`sim`] | transaction-level simulator (mapper, scheduler, accounting) |
 //! | [`metrics`] | FPS / FPS/W / FPS/W/mm² aggregation, gmean, live serving telemetry, fleet-wide stats rollup (`FleetTelemetry`) |
 //! | [`runtime`] | pluggable execution backends (`ExecBackend`): software interpreter + photonic-in-the-loop simulator; artifact manifest, engine, whole-CNN serving (single + t-stacked batch) |
-//! | [`coordinator`] | sharded serving fleet: shard router (`Fleet`/`FleetHandle`, pluggable routing + failover) over per-backend coordinators with dynamic MLP batching, t-stacked CNN batching, and photonic telemetry |
+//! | [`coordinator`] | sharded serving fleet: shard router (`Fleet`/`FleetHandle`, pluggable routing + failover, retained-payload mid-flight retry, shard revival/autoscaling) over per-backend coordinators with dynamic MLP batching, t-stacked CNN batching, and photonic telemetry |
 //! | [`testing`] | deterministic mini property-testing harness |
 //! | [`benchkit`] | timing helpers for the harness-free benches |
 //! | [`report`] | plain-text table rendering shared by benches/examples |

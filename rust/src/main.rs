@@ -9,6 +9,7 @@
 //! spoga gemm [--artifact NAME]            run an AOT GEMM vs golden model
 //! spoga serve [--requests N] [--workers W] [--backend B]
 //!             [--shards N] [--split a:b=w1:w2] [--policy P]
+//!             [--revive] [--max-shards M]
 //!             [--noise-grid K=..,adc=..]
 //!                                         self-driven serving demo over a
 //!                                         shard fleet; B in {software,
@@ -19,6 +20,14 @@
 //!                                         heterogeneous weighted fleet,
 //!                                         e.g. software:photonic=1:1;
 //!                                         --policy in {rr, least}.
+//!                                         --revive arms the resilience
+//!                                         janitor (dead shards are health-
+//!                                         probed and revived; on fleets
+//!                                         with >1 shard the demo kills one
+//!                                         shard's workers mid-burst to
+//!                                         prove it); --max-shards M lets
+//!                                         the fleet spawn shards under
+//!                                         queue pressure up to M total.
 //!                                         --noise-grid runs the noise-
 //!                                         aware serving study instead:
 //!                                         one noisy photonic shard per
@@ -43,9 +52,18 @@ fn parse_flags(args: &[String]) -> HashMap<String, String> {
     let mut i = 0;
     while i < args.len() {
         if let Some(key) = args[i].strip_prefix("--") {
-            let val = args.get(i + 1).cloned().unwrap_or_default();
-            m.insert(key.to_string(), val);
-            i += 2;
+            // A flag followed by another flag (or nothing) is boolean-style:
+            // present with an empty value (e.g. `--revive`).
+            match args.get(i + 1) {
+                Some(next) if !next.starts_with("--") => {
+                    m.insert(key.to_string(), next.clone());
+                    i += 2;
+                }
+                _ => {
+                    m.insert(key.to_string(), String::new());
+                    i += 1;
+                }
+            }
         } else {
             i += 1;
         }
@@ -241,7 +259,7 @@ fn cmd_serve(flags: &HashMap<String, String>) {
         // The grid study builds its own self-contained fleet; fleet-shape
         // flags would be silently discarded, so reject them like every
         // other conflicting/unknown flag combination in this command.
-        for conflicting in ["backend", "split", "policy", "shards"] {
+        for conflicting in ["backend", "split", "policy", "shards", "revive", "max-shards"] {
             if flags.contains_key(conflicting) {
                 eprintln!(
                     "--noise-grid conflicts with --{conflicting}: the grid study builds \
@@ -318,11 +336,30 @@ fn cmd_serve(flags: &HashMap<String, String>) {
             std::process::exit(2);
         }
     };
+    // Resilience flags: --revive arms dead-shard revival, --max-shards M
+    // allows pressure-driven spawning up to M total shards. Either one
+    // attaches the autoscale policy (and its janitor thread).
+    let revive = flags.contains_key("revive");
+    let max_shards: usize = flags
+        .get("max-shards")
+        .map(|v| {
+            v.parse().unwrap_or_else(|_| {
+                eprintln!("bad --max-shards {v:?}: expected an integer");
+                std::process::exit(2);
+            })
+        })
+        .unwrap_or(0);
+    let autoscale = (revive || max_shards > shards).then(|| spoga::coordinator::FleetAutoscale {
+        revive,
+        max_shards,
+        ..Default::default()
+    });
     for (i, c) in shard_cfgs.iter().enumerate() {
         println!("shard {i}: backend {}", c.backend.label());
     }
-    let fleet = Fleet::start(FleetConfig { shards: shard_cfgs, policy, labels: Vec::new() })
-        .expect("fleet");
+    let fleet =
+        Fleet::start(FleetConfig { shards: shard_cfgs, policy, labels: Vec::new(), autoscale })
+            .expect("fleet");
     let h = fleet.handle();
     let t0 = std::time::Instant::now();
     let clients = 4usize;
@@ -338,8 +375,21 @@ fn cmd_serve(flags: &HashMap<String, String>) {
             })
         })
         .collect();
+    // With revival armed and a redundant fleet, prove the resilience layer
+    // live: kill shard 0's workers mid-burst. Blocking clients fail over
+    // (retained-payload retry), and the janitor probes the shard back.
+    if revive && h.shard_count() > 1 {
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        println!("chaos: retiring shard 0's workers mid-burst (janitor will revive)");
+        let _ = h.shard(0).retire_workers();
+    }
     for j in joins {
         j.join().unwrap();
+    }
+    if revive && h.shard_count() > 1 {
+        // Deterministic revival before the readout (the janitor may
+        // already have beaten us to it — revive_dead_shards is idempotent).
+        h.revive_dead_shards();
     }
     let dt = t0.elapsed().as_secs_f64();
     println!(

@@ -211,6 +211,11 @@ pub struct ShardTelemetry {
     pub lanes: u64,
     /// Noise-perturbed outputs.
     pub noise_events: u64,
+    /// Workers still in the shard leader's rotation (gauge — recovers when
+    /// a revival respawns the pool).
+    pub live_workers: u64,
+    /// Worker-pool revivals the shard's leader has executed.
+    pub revivals: u64,
 }
 
 impl ShardTelemetry {
@@ -233,6 +238,8 @@ impl ShardTelemetry {
             energy_j: stats.sim_energy_total_j(),
             lanes: stats.lanes.load(Relaxed),
             noise_events: stats.noise_events.load(Relaxed),
+            live_workers: stats.live_workers.load(Relaxed),
+            revivals: stats.revivals.load(Relaxed),
         }
     }
 
@@ -263,19 +270,32 @@ impl ShardTelemetry {
 
 /// Fleet-wide serving telemetry: per-shard
 /// [`CoordinatorStats`](crate::coordinator::CoordinatorStats) snapshots
-/// summed into one rollup. Because every request is served by exactly one
-/// shard and each shard's counters are snapshotted once, the totals equal
-/// the sum of the per-shard stats with nothing double-counted.
+/// summed into one rollup. Each shard's counters are snapshotted once, so
+/// totals equal the sum of the per-shard stats. Counting is per submission
+/// attempt: a mid-flight resubmission shows up as a `failed` on the dead
+/// shard plus a fresh `requests`/`completed` pair on the survivor, and
+/// [`FleetTelemetry::resubmits`] records how many logical requests did so
+/// (`requests() − resubmits` = logical requests accepted).
 #[derive(Debug, Clone, Default)]
 pub struct FleetTelemetry {
     /// Per-shard snapshots, shard order.
     pub shards: Vec<ShardTelemetry>,
+    /// Mid-flight requests resubmitted on a survivor after their shard died
+    /// (the fleet's retained-payload retry layer).
+    pub resubmits: u64,
+    /// Dead shards probed back into the rotation.
+    pub shards_revived: u64,
+    /// Shards dynamically spawned under queue-depth pressure.
+    pub shards_spawned: u64,
+    /// Revival probes that failed.
+    pub failed_probes: u64,
 }
 
 impl FleetTelemetry {
-    /// Rollup over per-shard snapshots.
+    /// Rollup over per-shard snapshots (lifecycle counters start at zero;
+    /// [`crate::coordinator::FleetHandle::telemetry`] fills them).
     pub fn new(shards: Vec<ShardTelemetry>) -> Self {
-        FleetTelemetry { shards }
+        FleetTelemetry { shards, ..Default::default() }
     }
 
     /// Total requests accepted across the fleet.
@@ -371,6 +391,12 @@ impl FleetTelemetry {
                 self.sim_fps_per_w(),
                 self.noise_events(),
                 self.served_exact_fraction()
+            ));
+        }
+        if self.resubmits + self.shards_revived + self.shards_spawned + self.failed_probes > 0 {
+            s.push_str(&format!(
+                "\n  lifecycle: resubmits={} revived={} spawned={} failed_probes={}",
+                self.resubmits, self.shards_revived, self.shards_spawned, self.failed_probes
             ));
         }
         s
@@ -480,6 +506,26 @@ mod tests {
         assert_eq!(fleet.sim_fps(), 0.0);
         assert_eq!(fleet.sim_fps_per_w(), 0.0);
         assert_eq!(fleet.served_exact_fraction(), 1.0);
+        // No lifecycle noise in a quiet fleet's summary.
+        assert!(!fleet.summary().contains("lifecycle:"));
+    }
+
+    #[test]
+    fn lifecycle_counters_surface_in_capture_and_summary() {
+        use crate::coordinator::CoordinatorStats;
+        use std::sync::atomic::Ordering::Relaxed;
+        let s = CoordinatorStats::default();
+        s.live_workers.store(3, Relaxed);
+        s.revivals.fetch_add(2, Relaxed);
+        let shard = ShardTelemetry::capture("s", &s);
+        assert_eq!((shard.live_workers, shard.revivals), (3, 2));
+
+        let mut fleet = FleetTelemetry::new(vec![shard]);
+        fleet.resubmits = 4;
+        fleet.shards_revived = 1;
+        fleet.shards_spawned = 2;
+        let sum = fleet.summary();
+        assert!(sum.contains("lifecycle: resubmits=4 revived=1 spawned=2"), "{sum}");
     }
 
     #[test]

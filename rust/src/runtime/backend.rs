@@ -139,6 +139,42 @@ impl ExecReport {
     }
 }
 
+/// Per-output-row noise nonces for one execution — the serving side of the
+/// time-indexed counter mode ([`crate::fidelity::AnalogChannel::transduce_row_keyed`]).
+///
+/// The default [`RowNonce::Content`] keys every row's noise by content
+/// alone (byte-identical rows correlate perfectly, which is what makes
+/// attribution order-independent); a nonzero nonce additionally folds a
+/// per-request counter into the key, decorrelating duplicate rows while
+/// keeping each `(seed, content, nonce)` draw deterministic. Rows without
+/// an assigned nonce (padding, out-of-range) fall back to nonce `0`, i.e.
+/// the content-keyed stream — so default-off serving is bit-identical to
+/// the historical path.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub enum RowNonce {
+    /// Pure content keying (nonce 0 for every row) — the default.
+    #[default]
+    Content,
+    /// One request owns every output row (unbatched GEMM jobs).
+    Request(u64),
+    /// Row `r` carries `nonces[r]` (micro-batches mixing requests); rows
+    /// beyond the vector fall back to 0 (padding rows).
+    PerRow(Vec<u64>),
+}
+
+impl RowNonce {
+    /// The nonce for output row `r`. Nonce 0 keys the row by content
+    /// alone, at identical cost to a nonzero key — so backends need no
+    /// separate unkeyed fast path.
+    pub fn for_row(&self, r: usize) -> u64 {
+        match self {
+            RowNonce::Content => 0,
+            RowNonce::Request(n) => *n,
+            RowNonce::PerRow(v) => v.get(r).copied().unwrap_or(0),
+        }
+    }
+}
+
 /// Result of one backend execution: the output buffer plus telemetry (if
 /// the backend models the photonic datapath).
 #[derive(Debug, Clone)]
@@ -165,6 +201,21 @@ pub trait ExecBackend: Send {
     /// Element counts are validated by the engine against the manifest
     /// before this is called.
     fn execute_i32(&mut self, name: &str, inputs: &[&[i32]]) -> Result<BackendExec>;
+
+    /// [`ExecBackend::execute_i32`] with per-output-row noise nonces
+    /// ([`RowNonce`]) for backends that inject analog noise. Digital
+    /// backends (and noise-off photonic backends) ignore the nonces — the
+    /// default implementation simply executes — so only noise-injecting
+    /// backends need to override.
+    fn execute_i32_keyed(
+        &mut self,
+        name: &str,
+        inputs: &[&[i32]],
+        nonce: &RowNonce,
+    ) -> Result<BackendExec> {
+        let _ = nonce;
+        self.execute_i32(name, inputs)
+    }
 
     /// Telemetry for a GEMM shape *without* executing it — used by the CNN
     /// serving path to report per-layer projections that include conv
@@ -327,6 +378,18 @@ mod tests {
         // Noise off: unchanged (padding cannot diverge).
         let exact = ExecReport { lanes: 16, ..Default::default() };
         assert_eq!(exact.served_rows(2, 4), exact);
+    }
+
+    #[test]
+    fn row_nonce_resolution() {
+        assert_eq!(RowNonce::Content.for_row(3), 0);
+        assert_eq!(RowNonce::default().for_row(0), 0);
+        assert_eq!(RowNonce::Request(7).for_row(0), 7);
+        assert_eq!(RowNonce::Request(7).for_row(9), 7);
+        let per = RowNonce::PerRow(vec![5, 0, 9]);
+        assert_eq!((per.for_row(0), per.for_row(1), per.for_row(2)), (5, 0, 9));
+        // Rows beyond the vector (padding) fall back to the content key.
+        assert_eq!(per.for_row(3), 0);
     }
 
     #[test]

@@ -23,7 +23,7 @@
 use crate::dnn::im2col::{im2col_group, requantize};
 use crate::dnn::layer::Layer;
 use crate::dnn::models::CnnModel;
-use crate::runtime::backend::ExecReport;
+use crate::runtime::backend::{ExecReport, RowNonce};
 use crate::runtime::engine::Engine;
 use crate::testing::SplitMix64;
 use crate::{Error, Result};
@@ -144,9 +144,28 @@ pub fn run_cnn_batch(
     model: &CnnModel,
     inputs: &[&[i32]],
 ) -> Result<Vec<CnnRun>> {
+    run_cnn_batch_keyed(engine, model, inputs, &[])
+}
+
+/// [`run_cnn_batch`] with one noise nonce per member frame (the
+/// time-indexed counter mode): frame `f`'s rows of every stacked layer GEMM
+/// are keyed by `frame_nonces[f]`, so byte-identical frames served under
+/// different nonces observe decorrelated noise while each
+/// `(seed, content, nonce)` run stays deterministic. An empty slice (or
+/// all-zero nonces) is bit-identical to [`run_cnn_batch`] — the
+/// content-keyed default.
+pub fn run_cnn_batch_keyed(
+    engine: &mut Engine,
+    model: &CnnModel,
+    inputs: &[&[i32]],
+    frame_nonces: &[u64],
+) -> Result<Vec<CnnRun>> {
     if inputs.is_empty() {
         return Ok(Vec::new());
     }
+    debug_assert!(frame_nonces.is_empty() || frame_nonces.len() == inputs.len());
+    let nonce_of = |f: usize| frame_nonces.get(f).copied().unwrap_or(0);
+    let keyed = frame_nonces.iter().any(|&n| n != 0);
     for input in inputs {
         validate_cnn_input(model, input.len())?;
     }
@@ -186,7 +205,15 @@ pub fn run_cnn_batch(
                         .iter()
                         .map(|&v| v as i32)
                         .collect();
-                    let (out, rep) = engine.execute_gemm_shape(b * t, k, c, &a_wire, &w_wire)?;
+                    let rn = if keyed {
+                        RowNonce::PerRow(
+                            (0..b * t).map(|row| nonce_of(row / t)).collect(),
+                        )
+                    } else {
+                        RowNonce::Content
+                    };
+                    let (out, rep) =
+                        engine.execute_gemm_shape_keyed(b * t, k, c, &a_wire, &w_wire, &rn)?;
                     if let Some(r) = &rep {
                         if !r.row_noise.is_empty() {
                             if frame_rows.is_empty() {
@@ -224,8 +251,19 @@ pub fn run_cnn_batch(
                         .iter()
                         .map(|&v| v as i32)
                         .collect();
-                let (out, rep) =
-                    engine.execute_gemm_shape(b, *in_features, *out_features, &a_wire, &w_wire)?;
+                let rn = if keyed {
+                    RowNonce::PerRow((0..b).map(|f| nonce_of(f)).collect())
+                } else {
+                    RowNonce::Content
+                };
+                let (out, rep) = engine.execute_gemm_shape_keyed(
+                    b,
+                    *in_features,
+                    *out_features,
+                    &a_wire,
+                    &w_wire,
+                    &rn,
+                )?;
                 if let Some(r) = &rep {
                     if !r.row_noise.is_empty() {
                         frame_rows = vec![vec![0u64; 1]; b];

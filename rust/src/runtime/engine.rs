@@ -11,7 +11,7 @@ use std::collections::HashMap;
 
 use crate::dnn::layer::GemmShape;
 use crate::runtime::artifact::{ArtifactMeta, DType, Manifest, TensorSpec};
-use crate::runtime::backend::{BackendKind, ExecBackend, ExecReport};
+use crate::runtime::backend::{BackendKind, ExecBackend, ExecReport, RowNonce};
 use crate::{Error, Result};
 
 /// Engine owning the manifest, validation specs, and the backend.
@@ -122,9 +122,23 @@ impl Engine {
         name: &str,
         inputs: &[&[i32]],
     ) -> Result<(Vec<i32>, Option<ExecReport>)> {
+        self.execute_reported_keyed(name, inputs, &RowNonce::Content)
+    }
+
+    /// [`Engine::execute_reported`] with per-output-row noise nonces — the
+    /// coordinator's time-indexed counter mode. Digital backends and
+    /// noise-off photonic backends ignore the nonces (the default trait
+    /// implementation), so passing [`RowNonce::Content`] here is always
+    /// bit-identical to the plain call.
+    pub fn execute_reported_keyed(
+        &mut self,
+        name: &str,
+        inputs: &[&[i32]],
+        nonce: &RowNonce,
+    ) -> Result<(Vec<i32>, Option<ExecReport>)> {
         self.ensure_compiled(name)?;
         self.validate(name, inputs)?;
-        let ex = self.backend.execute_i32(name, inputs)?;
+        let ex = self.backend.execute_i32_keyed(name, inputs, nonce)?;
         Ok((ex.output, ex.report))
     }
 
@@ -151,6 +165,21 @@ impl Engine {
         a: &[i32],
         b: &[i32],
     ) -> Result<(Vec<i32>, Option<ExecReport>)> {
+        self.execute_gemm_shape_keyed(m, k, n, a, b, &RowNonce::Content)
+    }
+
+    /// [`Engine::execute_gemm_shape`] with per-output-row noise nonces (see
+    /// [`Engine::execute_reported_keyed`]) — the CNN batching path uses this
+    /// to key each stacked frame's rows by its request nonce.
+    pub fn execute_gemm_shape_keyed(
+        &mut self,
+        m: usize,
+        k: usize,
+        n: usize,
+        a: &[i32],
+        b: &[i32],
+        nonce: &RowNonce,
+    ) -> Result<(Vec<i32>, Option<ExecReport>)> {
         if m == 0 || k == 0 || n == 0 {
             return Err(Error::Shape(format!("degenerate GEMM {m}x{k}x{n}")));
         }
@@ -167,7 +196,7 @@ impl Engine {
             self.planned.insert(name.clone(), meta.inputs);
         }
         self.validate(&name, &[a, b])?;
-        let ex = self.backend.execute_i32(&name, &[a, b])?;
+        let ex = self.backend.execute_i32_keyed(&name, &[a, b], nonce)?;
         Ok((ex.output, ex.report))
     }
 

@@ -48,8 +48,10 @@ pub mod photonic;
 pub mod software;
 
 pub use artifact::{ArtifactMeta, Manifest, TensorSpec};
-pub use backend::{BackendExec, BackendKind, ExecBackend, ExecReport};
-pub use cnnrun::{run_cnn, run_cnn_batch, validate_cnn_input, CnnRun, LayerReport};
+pub use backend::{BackendExec, BackendKind, ExecBackend, ExecReport, RowNonce};
+pub use cnnrun::{
+    run_cnn, run_cnn_batch, run_cnn_batch_keyed, validate_cnn_input, CnnRun, LayerReport,
+};
 pub use engine::Engine;
 pub use photonic::{PhotonicBackend, PhotonicConfig};
 pub use software::SoftwareBackend;

@@ -29,7 +29,7 @@ use crate::dnn::layer::GemmShape;
 use crate::fidelity::{AnalogChannel, NoiseParams};
 use crate::optics::link_budget::ArchClass;
 use crate::runtime::artifact::ArtifactMeta;
-use crate::runtime::backend::{BackendExec, ExecBackend, ExecReport};
+use crate::runtime::backend::{BackendExec, ExecBackend, ExecReport, RowNonce};
 use crate::runtime::software::{wire_to_i8, Plan};
 use crate::sim::engine::SimEngine;
 use crate::units::DataRate;
@@ -175,7 +175,18 @@ impl PhotonicBackend {
     /// inside a stacked batch and the same row served alone observe
     /// bit-identical noise, which is the backend half of the per-row
     /// attribution contract in [`crate::runtime::backend`].
-    fn execute_noisy(&mut self, plan: &Plan, inputs: &[&[i32]]) -> Result<(Vec<i32>, Vec<u64>)> {
+    ///
+    /// `nonce` optionally folds a per-request counter into each row's key
+    /// ([`RowNonce`], the time-indexed counter mode): byte-identical rows
+    /// under different nonces decorrelate, while nonce 0 (the default every
+    /// caller that never opts in gets) leaves the stream bit-identical to
+    /// the plain content-keyed path.
+    fn execute_noisy(
+        &mut self,
+        plan: &Plan,
+        inputs: &[&[i32]],
+        nonce: &RowNonce,
+    ) -> Result<(Vec<i32>, Vec<u64>)> {
         let (lanes, k, rows) = match plan {
             Plan::Gemm { m, k, n } => {
                 let a8 = wire_to_i8(inputs[0]);
@@ -198,11 +209,12 @@ impl PhotonicBackend {
         let mut row_noise = vec![0u64; rows];
         for r in 0..rows {
             let span = r * cols..(r + 1) * cols;
-            let observed = ch.transduce_row(
+            let observed = ch.transduce_row_keyed(
                 &lanes.hi[span.clone()],
                 &lanes.mid[span.clone()],
                 &lanes.lo[span],
                 k,
+                nonce.for_row(r),
             );
             for (j, o) in observed.into_iter().enumerate() {
                 let v = o.round() as i32;
@@ -248,6 +260,15 @@ impl ExecBackend for PhotonicBackend {
     }
 
     fn execute_i32(&mut self, name: &str, inputs: &[&[i32]]) -> Result<BackendExec> {
+        self.execute_i32_keyed(name, inputs, &RowNonce::Content)
+    }
+
+    fn execute_i32_keyed(
+        &mut self,
+        name: &str,
+        inputs: &[&[i32]],
+        nonce: &RowNonce,
+    ) -> Result<BackendExec> {
         let (plan, shape) = {
             let p = self
                 .plans
@@ -257,7 +278,7 @@ impl ExecBackend for PhotonicBackend {
         };
         let mut report = self.simulate_shape(&shape);
         let output = if self.channel.is_some() {
-            let (out, row_noise) = self.execute_noisy(&plan, inputs)?;
+            let (out, row_noise) = self.execute_noisy(&plan, inputs, nonce)?;
             report.noise_events = row_noise.iter().sum();
             report.row_noise = row_noise;
             out
@@ -381,6 +402,56 @@ mod tests {
         let re_rep = re.report.unwrap();
         assert_eq!(re_rep.noise_events, 0);
         assert!(re_rep.row_noise.is_empty(), "noise off reports no row attribution");
+    }
+
+    #[test]
+    fn nonced_executes_decorrelate_duplicate_rows_deterministically() {
+        // Two byte-identical rows in one GEMM: the content-keyed default
+        // observes identical noise (perfect correlation), while distinct
+        // per-row nonces decorrelate them — each still fully deterministic.
+        let gemm = meta("gemm_2x8x8 g i32:2x8,i32:8x8 i32:2x8");
+        let cfg = PhotonicConfig::spoga().with_noise(NoiseParams::from_link_margin(0.0), 31);
+        let mut noisy = PhotonicBackend::new(cfg).unwrap();
+        noisy.plan(&gemm).unwrap();
+        let mut rng = SplitMix64::new(9);
+        let row: Vec<i32> = wire(&mut rng, 8);
+        let mut a = row.clone();
+        a.extend_from_slice(&row); // rows 0 and 1 byte-identical
+        let b = wire(&mut rng, 64);
+
+        let plain = noisy.execute_i32("gemm_2x8x8", &[&a, &b]).unwrap();
+        assert_eq!(
+            plain.output[..8],
+            plain.output[8..],
+            "content keying must correlate byte-identical rows"
+        );
+        // Keyed with nonce 0 per row == the plain path, bit for bit.
+        let zeroed = noisy
+            .execute_i32_keyed("gemm_2x8x8", &[&a, &b], &RowNonce::PerRow(vec![0, 0]))
+            .unwrap();
+        assert_eq!(zeroed.output, plain.output);
+
+        let nonced = noisy
+            .execute_i32_keyed("gemm_2x8x8", &[&a, &b], &RowNonce::PerRow(vec![1, 2]))
+            .unwrap();
+        assert_ne!(
+            nonced.output[..8],
+            nonced.output[8..],
+            "distinct nonces must decorrelate duplicate rows"
+        );
+        // Same nonces → same draws, and equal nonces re-correlate.
+        let again = noisy
+            .execute_i32_keyed("gemm_2x8x8", &[&a, &b], &RowNonce::PerRow(vec![1, 2]))
+            .unwrap();
+        assert_eq!(nonced.output, again.output);
+        let same = noisy
+            .execute_i32_keyed("gemm_2x8x8", &[&a, &b], &RowNonce::PerRow(vec![5, 5]))
+            .unwrap();
+        assert_eq!(same.output[..8], same.output[8..]);
+        // The per-row attribution contract survives the keyed path.
+        let rep = nonced.report.unwrap();
+        assert_eq!(rep.row_noise.len(), 2);
+        assert_eq!(rep.row_noise.iter().sum::<u64>(), rep.noise_events);
     }
 
     #[test]

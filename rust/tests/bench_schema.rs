@@ -126,6 +126,27 @@ fn fleet_snapshot_keeps_schema() {
 }
 
 #[test]
+fn resilience_snapshot_keeps_schema() {
+    use Kind::*;
+    let rows = check_schema(
+        "BENCH_resilience.json",
+        "resilience",
+        &[
+            ("scenario", Label),
+            ("requests", Number),
+            ("req_per_s", Metric),
+            ("resubmits", Metric),
+            ("recovery_ms", Metric),
+        ],
+    );
+    // The three scenarios the bench emits, in order: healthy baseline,
+    // mid-flight failover, revival timing.
+    let scenarios: Vec<&str> =
+        rows.iter().map(|r| r.get("scenario").unwrap().as_str().unwrap()).collect();
+    assert_eq!(scenarios, vec!["baseline", "mid_flight_failover", "revival"]);
+}
+
+#[test]
 fn noise_snapshot_keeps_schema_and_grid() {
     use Kind::*;
     let rows = check_schema(

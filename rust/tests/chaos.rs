@@ -1,0 +1,345 @@
+//! Chaos suite: mid-flight shard death, retained-payload retry, revival
+//! and autoscaling.
+//!
+//! Pins the PR's acceptance contract, all against synthetic manifests so
+//! nothing ever skips:
+//!
+//! * an async `submit_*_retrying` whose shard is killed **after** accepting
+//!   resolves its original slot on a survivor with outputs bit-identical
+//!   to an undisturbed single-shard run — for the software backend AND a
+//!   noise-injecting photonic backend (content-keyed noise is shard-
+//!   independent at equal seeds);
+//! * a retired shard revives: the leader respawns its worker pool, the
+//!   health probe pongs, the `live_workers` gauge recovers, and the shard
+//!   serves routed traffic again (on-demand and janitor-driven);
+//! * under queue-depth pressure an autoscaling fleet spawns shards up to
+//!   its cap, and the spawned shard takes traffic;
+//! * submit-time rejection hands the payload back (`try_submit_*`) instead
+//!   of consuming it.
+
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+use std::time::Duration;
+
+use spoga::coordinator::{
+    Coordinator, CoordinatorConfig, Fleet, FleetAutoscale, FleetConfig, FleetHandle,
+    RetryingSlot, RoutePolicy,
+};
+use spoga::dnn::models::CnnModel;
+use spoga::dnn::Layer;
+use spoga::fidelity::NoiseParams;
+use spoga::runtime::{BackendKind, PhotonicConfig};
+use spoga::testing::SplitMix64;
+
+const MANIFEST: &str = "\
+gemm_8x8x8 g.hlo.txt i32:8x8,i32:8x8 i32:8x8
+mlp_b1 m1.hlo.txt i32:1x16 i32:1x4
+mlp_b4 m4.hlo.txt i32:4x16 i32:4x4
+";
+
+fn synthetic_dir(tag: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("spoga-chaos-test-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.txt"), MANIFEST).unwrap();
+    dir
+}
+
+fn shard_cfg(dir: &PathBuf, backend: BackendKind, window_s: f64) -> CoordinatorConfig {
+    CoordinatorConfig {
+        artifact_dir: dir.to_string_lossy().into_owned(),
+        workers: 2,
+        backend,
+        max_batch_wait_s: window_s,
+        ..Default::default()
+    }
+}
+
+fn tiny_cnn() -> CnnModel {
+    CnnModel {
+        name: "tiny_chaos",
+        layers: vec![
+            Layer::conv("stem", 6, 6, 3, 4, 3, 1, 1),
+            Layer::fc("head", 6 * 6 * 4, 5),
+        ],
+    }
+}
+
+/// Deterministic mixed burst of *retrying* slots, in a fixed submission
+/// order: 4 GEMMs (dispatched immediately), 4 MLP rows and 3 CNN frames
+/// (both gather in the batching window). Returns the slots in order.
+fn submit_burst(h: &FleetHandle) -> Vec<RetryingSlot> {
+    let mut rng = SplitMix64::new(0xC4A05);
+    let model = tiny_cnn();
+    let mut slots = Vec::new();
+    for _ in 0..4 {
+        let a: Vec<i32> = (0..64).map(|_| rng.i8() as i32).collect();
+        let b: Vec<i32> = (0..64).map(|_| rng.i8() as i32).collect();
+        slots.push(h.submit_gemm_retrying("gemm_8x8x8", a, b).unwrap());
+    }
+    for t in 0..4 {
+        let row: Vec<i32> = (0..16).map(|v| (v * 13 + t * 7) % 100).collect();
+        slots.push(h.submit_mlp_retrying(row).unwrap());
+    }
+    for f in 0..3 {
+        let input: Vec<i32> =
+            (0..6 * 6 * 3).map(|v| ((v * 17 + f * 71) % 251) - 125).collect();
+        slots.push(h.submit_cnn_retrying(model.clone(), input).unwrap());
+    }
+    slots
+}
+
+fn recv_all(slots: Vec<RetryingSlot>) -> Vec<Vec<i32>> {
+    slots
+        .into_iter()
+        .map(|s| {
+            s.recv_timeout(Duration::from_secs(30))
+                .expect("retrying slot must resolve OK across shard death")
+                .outputs
+        })
+        .collect()
+}
+
+/// The headline acceptance test: a shard dies *after* accepting async
+/// submits (its leader stays up, so the slots fail with `ShardDown`), and
+/// every retrying slot resolves on the survivor with outputs bit-identical
+/// to an undisturbed single-shard run — for an exact backend and a noisy
+/// one (same noise seed on both shards: content-keyed noise is shard-
+/// independent).
+#[test]
+fn retrying_slots_survive_worker_death_after_accept_bit_identically() {
+    let noisy = BackendKind::Photonic(
+        PhotonicConfig::spoga().with_noise(NoiseParams::from_link_margin(0.0), 0xDEAD5EED),
+    );
+    for (tag, backend) in [("sw", BackendKind::Software), ("noisy", noisy)] {
+        let dir = synthetic_dir(&format!("midflight-{tag}"));
+        // Reference: undisturbed single-shard run over the same burst.
+        let single = Fleet::single(shard_cfg(&dir, backend.clone(), 0.0)).unwrap();
+        let reference = recv_all(submit_burst(&single.handle()));
+        single.shutdown();
+
+        // A long batching window keeps the MLP rows and CNN frames pending
+        // in the leaders while we retire shard 0's pool: those jobs were
+        // ACCEPTED (requests counted, slots live) and flush into a dead
+        // pool at the window deadline — exactly the mid-flight loss case.
+        let cfg = shard_cfg(&dir, backend.clone(), 0.5);
+        let fleet = Fleet::start(FleetConfig {
+            shards: vec![cfg.clone(), cfg],
+            policy: RoutePolicy::RoundRobin,
+            labels: Vec::new(),
+            autoscale: None,
+        })
+        .unwrap();
+        let h = fleet.handle();
+        let slots = submit_burst(&h);
+        // FIFO ordering guarantees the GEMMs already dispatched and the
+        // pending MLP/CNN jobs were gathered before this lands.
+        h.shard(0).retire_workers().unwrap();
+
+        let served = recv_all(slots);
+        assert_eq!(
+            served, reference,
+            "{tag}: retried serving diverged from the undisturbed run"
+        );
+        // The mid-flight path actually fired: shard 0's pending jobs were
+        // resubmitted (not just submit-time failovers) and it left the
+        // rotation.
+        let t = h.telemetry();
+        assert!(
+            t.resubmits > 0,
+            "{tag}: no mid-flight resubmission happened — the chaos case was not exercised"
+        );
+        assert_eq!(h.live_shard_count(), 1, "{tag}: dead shard must leave the rotation");
+        assert_eq!(
+            t.failed(),
+            t.resubmits,
+            "{tag}: every dead-shard failure must be exactly one resubmission"
+        );
+        fleet.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn revived_shard_reenters_rotation_and_serves() {
+    let dir = synthetic_dir("revive");
+    let cfg = shard_cfg(&dir, BackendKind::Software, 0.0);
+    let fleet = Fleet::start(FleetConfig {
+        shards: vec![cfg.clone(), cfg],
+        policy: RoutePolicy::RoundRobin,
+        labels: Vec::new(),
+        autoscale: None,
+    })
+    .unwrap();
+    let h = fleet.handle();
+
+    // Health probe on a live shard pongs and never pollutes request stats.
+    let before = h.shard_stats(0).requests.load(Ordering::Relaxed);
+    h.shard(0).ping(Duration::from_secs(5)).expect("live shard must pong");
+    assert_eq!(h.shard_stats(0).requests.load(Ordering::Relaxed), before);
+
+    // Retire shard 0: gauge drops, rotation shrinks, probes fail.
+    h.shard(0).retire_workers().unwrap();
+    assert!(h.shard(0).ping(Duration::from_secs(5)).is_err(), "dead pool must not pong");
+    assert_eq!(h.shard_stats(0).live_workers.load(Ordering::Relaxed), 0);
+    assert_eq!(h.live_shard_count(), 1);
+    h.mark_dead(0); // ops can also flag explicitly; revival must clear it
+
+    // Revive: pool respawns, probe pongs, gauge recovers, flag clears.
+    assert!(h.revive_shard(0), "revival must succeed while the leader is alive");
+    assert_eq!(
+        h.shard_stats(0).live_workers.load(Ordering::Relaxed),
+        2,
+        "live_workers gauge must recover to the configured pool size"
+    );
+    assert_eq!(h.live_shard_count(), 2, "revived shard must re-enter the rotation");
+    assert_eq!(h.shard_stats(0).revivals.load(Ordering::Relaxed), 1);
+
+    // ... and it actually serves routed traffic again.
+    let served_before = h.shard_stats(0).completed.load(Ordering::Relaxed);
+    for t in 0..4 {
+        let row: Vec<i32> = (0..16).map(|v| (v + t) % 50).collect();
+        h.infer_mlp(row).unwrap();
+    }
+    assert!(
+        h.shard_stats(0).completed.load(Ordering::Relaxed) > served_before,
+        "revived shard took no traffic"
+    );
+    let t = h.telemetry();
+    assert_eq!(t.shards_revived, 1);
+    assert_eq!(t.shards[0].live_workers, 2);
+    assert!(t.shards[0].revivals >= 1);
+    // Idempotence: reviving a healthy fleet is a no-op that reports success.
+    assert_eq!(h.revive_dead_shards(), 0);
+
+    fleet.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn janitor_revives_retired_shard_automatically() {
+    let dir = synthetic_dir("janitor");
+    let cfg = shard_cfg(&dir, BackendKind::Software, 0.0);
+    let fleet = Fleet::start(
+        FleetConfig {
+            shards: vec![cfg.clone(), cfg],
+            policy: RoutePolicy::RoundRobin,
+            labels: Vec::new(),
+            autoscale: None,
+        }
+        .with_autoscale(FleetAutoscale {
+            revive: true,
+            max_shards: 0,
+            interval_s: 0.02,
+            ..Default::default()
+        }),
+    )
+    .unwrap();
+    let h = fleet.handle();
+    h.shard(0).retire_workers().unwrap();
+
+    // The janitor probes the dead shard back without any on-demand call.
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    while h.live_shard_count() < 2 {
+        assert!(std::time::Instant::now() < deadline, "janitor never revived the shard");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert!(h.telemetry().shards_revived >= 1);
+    let out = h.infer_mlp(vec![1; 16]).unwrap();
+    assert_eq!(out.len(), 4);
+    fleet.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn fleet_scales_up_under_queue_pressure_and_respects_the_cap() {
+    let dir = synthetic_dir("autoscale");
+    let fleet = Fleet::start(
+        FleetConfig::single(shard_cfg(&dir, BackendKind::Software, 0.0)).with_autoscale(
+            FleetAutoscale {
+                revive: true,
+                max_shards: 2,
+                pressure_per_shard: 8,
+                interval_s: 60.0, // janitor effectively idle; drive on demand
+                ..Default::default()
+            },
+        ),
+    )
+    .unwrap();
+    let h = fleet.handle();
+
+    // No pressure → no spawn.
+    assert!(!h.maybe_scale_up().unwrap());
+    assert_eq!(h.shard_count(), 1);
+
+    // Fake a backlog (accepted, never resolved) → mean depth over the
+    // threshold → exactly one spawn, then the cap holds.
+    h.shard_stats(0).requests.fetch_add(100, Ordering::Relaxed);
+    assert!(h.maybe_scale_up().unwrap(), "pressure must trigger a spawn");
+    assert_eq!(h.shard_count(), 2);
+    assert!(!h.maybe_scale_up().unwrap(), "max_shards cap must hold");
+    assert!(h.shard_labels()[1].contains(":auto"), "spawned shards are labelled");
+
+    // The spawned shard participates in routing and serves.
+    for t in 0..4 {
+        let row: Vec<i32> = (0..16).map(|v| (v + t) % 50).collect();
+        h.infer_mlp(row).unwrap();
+    }
+    assert!(
+        h.shard_stats(1).completed.load(Ordering::Relaxed) > 0,
+        "autoscaled shard took no traffic"
+    );
+    let t = h.telemetry();
+    assert_eq!(t.shards_spawned, 1);
+    assert_eq!(t.shards.len(), 2);
+
+    fleet.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn try_submit_recovers_the_payload_from_a_stopped_coordinator() {
+    let dir = synthetic_dir("recover");
+    let c = Coordinator::start(shard_cfg(&dir, BackendKind::Software, 0.0)).unwrap();
+    let h = c.handle();
+    c.shutdown();
+
+    let a: Vec<i32> = (0..64).collect();
+    let b: Vec<i32> = (64..128).collect();
+    let rejected = h.try_submit_gemm("gemm_8x8x8", a.clone(), b.clone()).unwrap_err();
+    assert!(matches!(rejected.error, spoga::Error::ShardDown(_)));
+    assert_eq!(rejected.payload, (a, b), "payload must come back intact");
+
+    let row = vec![7i32; 16];
+    let rejected = h.try_submit_mlp(row.clone()).unwrap_err();
+    assert_eq!(rejected.payload, row);
+    // A rejected submission never leaks queue depth.
+    assert_eq!(h.stats().queue_depth(), 0);
+
+    // Shape rejection also hands the row back, as a request-level error.
+    let short = vec![1i32; 3];
+    let rejected = h.try_submit_mlp(short.clone()).unwrap_err();
+    assert!(matches!(rejected.error, spoga::Error::Shape(_)));
+    assert_eq!(rejected.payload, short);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn single_fleet_with_no_survivor_reports_terminal_errors() {
+    // A 1-shard fleet whose only shard dies: the retrying slot attempts a
+    // resubmission, finds no live shard to take it, and resolves with a
+    // terminal shard-down error rather than looping or hanging.
+    let dir = synthetic_dir("single");
+    let fleet = Fleet::single(shard_cfg(&dir, BackendKind::Software, 0.5)).unwrap();
+    let h = fleet.handle();
+
+    let slot = h.submit_mlp_retrying(vec![3i32; 16]).unwrap();
+    h.shard(0).retire_workers().unwrap();
+    let err = slot.recv_timeout(Duration::from_secs(30)).unwrap_err();
+    assert!(matches!(err, spoga::Error::ShardDown(_)), "{err}");
+
+    // With every shard down, new retrying submits fail fast.
+    assert!(h.submit_mlp_retrying(vec![3i32; 16]).is_err());
+    fleet.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}

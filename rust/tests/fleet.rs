@@ -107,6 +107,7 @@ fn two_shard_mixed_fleet_is_bit_identical_to_single_shard() {
         ],
         policy: RoutePolicy::RoundRobin,
         labels: Vec::new(),
+        autoscale: None,
     })
     .unwrap();
     let h = dual.handle();
@@ -139,6 +140,7 @@ fn fleet_telemetry_totals_equal_sum_of_per_shard_stats() {
         ],
         policy: RoutePolicy::RoundRobin,
         labels: Vec::new(),
+        autoscale: None,
     })
     .unwrap();
     let h = fleet.handle();
@@ -248,6 +250,7 @@ fn noisy_mixed_fleet_keeps_rollup_identity_with_batching_on() {
         ],
         policy: RoutePolicy::RoundRobin,
         labels: vec!["exact".into(), "noisy".into()],
+        autoscale: None,
     })
     .unwrap();
     let h = fleet.handle();
@@ -317,6 +320,7 @@ fn weighted_split_routes_deterministic_proportions() {
         ],
         policy: RoutePolicy::Weighted(vec![1, 3]),
         labels: vec!["w1".into(), "w3".into()],
+        autoscale: None,
     })
     .unwrap();
     let h = fleet.handle();
@@ -345,6 +349,7 @@ fn least_queue_depth_routes_to_idle_shard_under_serving() {
         ],
         policy: RoutePolicy::LeastQueueDepth,
         labels: Vec::new(),
+        autoscale: None,
     })
     .unwrap();
     let h = fleet.handle();

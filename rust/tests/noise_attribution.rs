@@ -280,3 +280,101 @@ fn coordinator_keeps_batching_on_under_noise_with_exact_replies() {
     c.shutdown();
     let _ = std::fs::remove_dir_all(&dir);
 }
+
+#[test]
+fn nonce_mode_decorrelates_duplicate_requests_and_stays_deterministic() {
+    // The time-indexed counter mode (`CoordinatorConfig::noise_nonce`):
+    // byte-identical requests served under different per-request nonces
+    // observe *different* noise — fixing the perfect correlation the pure
+    // content-keyed path accepts as the price of order independence —
+    // while a fresh coordinator replaying the same submission order
+    // reproduces every output bit for bit.
+    let dir = synthetic_dir("nonce");
+    let kind = noisy_kind(0.0, 0xD0_C0_FFEE);
+    let cfg = CoordinatorConfig {
+        artifact_dir: dir.to_string_lossy().into_owned(),
+        workers: 1,
+        backend: kind.clone(),
+        max_batch_wait_s: 0.01,
+        noise_nonce: true,
+        ..Default::default()
+    };
+    let row: Vec<i32> = (0..16).map(|v| (v * 11) % 90).collect();
+
+    let serve_pair = |cfg: CoordinatorConfig| {
+        let c = Coordinator::start(cfg).unwrap();
+        let h = c.handle();
+        // Slot-based back-to-back submissions so the pair co-batches —
+        // decorrelation must hold *inside* one stacked execute.
+        let slots: Vec<Response> =
+            (0..2).map(|_| h.submit_mlp(row.clone()).unwrap()).collect();
+        let outs: Vec<Vec<i32>> = slots
+            .into_iter()
+            .map(|rx| rx.recv().unwrap().expect("nonced mlp served").outputs)
+            .collect();
+        c.shutdown();
+        outs
+    };
+
+    let first = serve_pair(cfg.clone());
+    assert_ne!(
+        first[0], first[1],
+        "duplicate rows under distinct nonces must observe decorrelated noise"
+    );
+    // Per-request determinism: a fresh coordinator at the same seed serving
+    // the same submission order reproduces both outputs exactly.
+    let again = serve_pair(cfg.clone());
+    assert_eq!(first, again, "counter-mode noise must replay deterministically");
+
+    // Default-off control: the same traffic with the nonce mode disabled
+    // keeps the historical perfectly-correlated content-keyed behavior.
+    let plain = serve_pair(CoordinatorConfig { noise_nonce: false, ..cfg });
+    assert_eq!(plain[0], plain[1], "content keying must correlate identical rows");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn nonced_cnn_stacks_decorrelate_duplicate_frames_per_frame() {
+    // Engine-level: run_cnn_batch_keyed with per-frame nonces — duplicate
+    // frames in one stack decorrelate, equal nonces reproduce, empty
+    // nonces stay bit-identical to the unkeyed path.
+    use spoga::runtime::run_cnn_batch_keyed;
+    let dir = synthetic_dir("noncecnn");
+    let kind = noisy_kind(0.0, 0x0FF_BEEF);
+    let model = tiny_cnn();
+    let frame = frames(1).pop().unwrap();
+    let refs: Vec<&[i32]> = vec![&frame, &frame];
+
+    let mut eng = Engine::with_backend(&dir, kind.clone()).unwrap();
+    let plain = run_cnn_batch(&mut eng, &model, &refs).unwrap();
+    assert_eq!(
+        plain[0].logits, plain[1].logits,
+        "content keying must correlate duplicate frames"
+    );
+    let keyed_empty = run_cnn_batch_keyed(&mut eng, &model, &refs, &[]).unwrap();
+    assert_eq!(keyed_empty[0].logits, plain[0].logits, "empty nonces == unkeyed path");
+
+    let nonced = run_cnn_batch_keyed(&mut eng, &model, &refs, &[1, 2]).unwrap();
+    assert_ne!(
+        nonced[0].logits, nonced[1].logits,
+        "distinct frame nonces must decorrelate duplicate frames"
+    );
+    // Determinism and the per-frame attribution contract survive keying.
+    let again = run_cnn_batch_keyed(&mut eng, &model, &refs, &[1, 2]).unwrap();
+    for f in 0..2 {
+        assert_eq!(nonced[f].logits, again[f].logits, "frame {f} replay");
+        let rep = nonced[f].report.as_ref().expect("noisy telemetry");
+        assert_eq!(
+            rep.row_noise.iter().sum::<u64>(),
+            rep.noise_events,
+            "frame {f} sum(row_noise) == noise_events under nonces"
+        );
+    }
+    // A frame keyed by the same nonce alone reproduces its stacked self:
+    // nonces key content, not batch position.
+    let alone = run_cnn_batch_keyed(&mut eng, &model, &[&frame], &[2]).unwrap();
+    assert_eq!(alone[0].logits, nonced[1].logits, "nonce keying is position-independent");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
