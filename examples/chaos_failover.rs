@@ -116,7 +116,7 @@ fn main() {
         shards: vec![cfg.clone(), cfg],
         policy: RoutePolicy::RoundRobin,
         labels: Vec::new(),
-        autoscale: None,
+        ..Default::default()
     })
     .expect("2-shard fleet");
     let h = fleet.handle();

@@ -121,7 +121,7 @@ fn main() {
         ],
         policy: RoutePolicy::Weighted(vec![1, 1]),
         labels: Vec::new(),
-        autoscale: None,
+        ..Default::default()
     })
     .expect("2-shard fleet");
     let h = fleet.handle();

@@ -1,0 +1,183 @@
+//! Cross-host fleet walkthrough: a shard server fronting a local fleet
+//! over TCP, a client fleet mixing local and remote shards, and graceful
+//! degradation when the remote side goes away.
+//!
+//! Part 1 — serve over the wire: a 2-shard "backend" fleet is exposed on a
+//! loopback socket by a `ShardServer` (spoga wire protocol: checksummed,
+//! length-prefixed frames over std TCP — no tokio, no serde). A client
+//! fleet with one *local* shard and one *remote* slot pointing at that
+//! socket serves a mixed GEMM/MLP/CNN burst bit-identically to an all-local
+//! reference: the transport is invisible to served integers (the
+//! local-vs-remote equivalence contract in `coordinator::router`).
+//!
+//! Part 2 — degradation: the server is shut down, so the remote slot's
+//! next submit fails with a retirable `Error::Remote` kind. The router
+//! marks the slot dead, reroutes the retained payload to the surviving
+//! local shard (`submit_reroutes` counts it), and the burst still resolves
+//! bit-identically. No request is lost; the fleet just got smaller.
+//!
+//! Self-contained: synthesizes its artifact manifest in a temp directory
+//! and binds port 0 (the OS picks a free port).
+//!
+//! Run: `cargo run --release --example remote_fleet [requests]`
+
+use std::time::Duration;
+
+use spoga::coordinator::{
+    CoordinatorConfig, Fleet, FleetConfig, FleetHandle, RemoteShardConfig, RoutePolicy,
+};
+use spoga::dnn::models::CnnModel;
+use spoga::dnn::Layer;
+use spoga::net::{NetConfig, ServeTarget, ShardServer};
+use spoga::runtime::BackendKind;
+use spoga::testing::SplitMix64;
+
+fn synthetic_artifacts() -> std::path::PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("spoga-remote-example-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("temp artifact dir");
+    std::fs::write(
+        dir.join("manifest.txt"),
+        "gemm_8x8x8 g.hlo.txt i32:8x8,i32:8x8 i32:8x8\n\
+         mlp_b1 m1.hlo.txt i32:1x16 i32:1x4\n\
+         mlp_b8 m8.hlo.txt i32:8x16 i32:8x4\n",
+    )
+    .expect("write manifest");
+    dir
+}
+
+fn tiny_cnn() -> CnnModel {
+    CnnModel {
+        name: "edge_probe",
+        layers: vec![
+            Layer::conv("stem", 6, 6, 3, 4, 3, 1, 1),
+            Layer::fc("head", 6 * 6 * 4, 5),
+        ],
+    }
+}
+
+fn shard_cfg(artifact_dir: &str) -> CoordinatorConfig {
+    CoordinatorConfig {
+        artifact_dir: artifact_dir.to_string(),
+        workers: 2,
+        backend: BackendKind::Software,
+        max_batch_wait_s: 0.0,
+        ..Default::default()
+    }
+}
+
+/// Deterministic mixed burst through retrying slots (the failover-capable
+/// submit path), resolved in submission order.
+fn mixed_burst(h: &FleetHandle, requests: usize, seed: u64) -> Vec<Vec<i32>> {
+    let mut rng = SplitMix64::new(seed);
+    let model = tiny_cnn();
+    let mut slots = Vec::new();
+    for i in 0..requests {
+        match i % 3 {
+            0 => {
+                let a: Vec<i32> = (0..64).map(|_| rng.i8() as i32).collect();
+                let b: Vec<i32> = (0..64).map(|_| rng.i8() as i32).collect();
+                slots.push(h.submit_gemm_retrying("gemm_8x8x8", a, b).expect("gemm"));
+            }
+            1 => {
+                let row: Vec<i32> = (0..16).map(|v| ((v + i) % 100) as i32).collect();
+                slots.push(h.submit_mlp_retrying(row).expect("mlp"));
+            }
+            _ => {
+                let input: Vec<i32> = (0..6 * 6 * 3)
+                    .map(|v| ((v * 17 + (i as i32) * 7) % 251) - 125)
+                    .collect();
+                slots.push(h.submit_cnn_retrying(model.clone(), input).expect("cnn"));
+            }
+        }
+    }
+    slots
+        .into_iter()
+        .map(|s| s.recv_timeout(Duration::from_secs(30)).expect("slot resolves").outputs)
+        .collect()
+}
+
+fn main() {
+    let requests: usize =
+        std::env::args().nth(1).and_then(|v| v.parse().ok()).unwrap_or(24).max(6);
+    let dir = synthetic_artifacts();
+    let artifact_dir = dir.to_string_lossy().into_owned();
+
+    // Reference: an all-local 2-shard fleet over the same artifacts.
+    let reference_fleet = Fleet::start(FleetConfig {
+        shards: vec![shard_cfg(&artifact_dir), shard_cfg(&artifact_dir)],
+        ..Default::default()
+    })
+    .expect("reference fleet");
+    let reference = mixed_burst(&reference_fleet.handle(), requests, 0xBEE5);
+    reference_fleet.shutdown();
+
+    // ---- part 1: one fleet behind a socket, one mixed fleet in front ------
+    let backend = Fleet::start(FleetConfig {
+        shards: vec![shard_cfg(&artifact_dir), shard_cfg(&artifact_dir)],
+        ..Default::default()
+    })
+    .expect("backend fleet");
+    let server =
+        ShardServer::start("127.0.0.1:0", ServeTarget::Fleet(backend.handle()), NetConfig::default())
+            .expect("shard server");
+    let addr = server.local_addr().to_string();
+    println!("== shard server listening on {addr} ==\n");
+
+    let mixed = Fleet::start(FleetConfig {
+        shards: vec![shard_cfg(&artifact_dir)],
+        remotes: vec![RemoteShardConfig::new(addr.clone())],
+        policy: RoutePolicy::RoundRobin,
+        ..Default::default()
+    })
+    .expect("mixed local+remote fleet");
+    let h = mixed.handle();
+    println!("client fleet shards: {:?}", h.shard_labels());
+    h.ping(Duration::from_secs(5)).expect("fleet pongs (local or remote)");
+
+    let served = mixed_burst(&h, requests, 0xBEE5);
+    assert_eq!(
+        served, reference,
+        "remote transport changed served integers — equivalence contract broken"
+    );
+    println!(
+        "{} mixed requests served bit-identically across 1 local + 1 remote shard ✓",
+        served.len()
+    );
+    let t = h.telemetry();
+    for s in &t.shards {
+        println!("  {}: {} completed", s.label, s.completed);
+    }
+
+    // ---- part 2: the remote side goes away ---------------------------------
+    println!("\n== shutting the server down; traffic must drain to the local shard ==");
+    server.shutdown();
+    backend.shutdown();
+
+    let served = mixed_burst(&h, requests, 0xD1ED);
+    let reference_fleet = Fleet::single(shard_cfg(&artifact_dir)).expect("reference");
+    let reference = mixed_burst(&reference_fleet.handle(), requests, 0xD1ED);
+    reference_fleet.shutdown();
+    assert_eq!(served, reference, "degraded serving changed served integers");
+
+    let t = h.telemetry();
+    assert_eq!(h.live_shard_count(), 1, "dead remote slot must leave the rotation");
+    assert!(
+        t.submit_reroutes + t.resubmits > 0,
+        "degradation path not exercised — no payload moved shards"
+    );
+    println!(
+        "served {} requests with the remote shard dead ✓ (reroutes={} resubmits={}, \
+         {} of {} shards live)",
+        served.len(),
+        t.submit_reroutes,
+        t.resubmits,
+        h.live_shard_count(),
+        t.shards.len()
+    );
+    println!("\nfleet rollup:\n{}", t.summary());
+
+    mixed.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+    println!("\nremote_fleet complete.");
+}

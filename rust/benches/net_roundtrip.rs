@@ -1,0 +1,151 @@
+//! Bench: wire-protocol round-trip overhead vs in-process submission.
+//!
+//! Row `in_process`: a blocking MLP burst against a 1-shard local fleet —
+//! the submit/batch/execute/reply path with zero transport. Row
+//! `loopback_tcp`: the same burst through a `ShardServer` + `RemoteShard`
+//! pair over 127.0.0.1 — every request crosses the socket twice (frame
+//! encode, FNV checksum, kernel loopback, decode) plus the client's
+//! pending-map bookkeeping. `overhead_us` is the per-request mean-latency
+//! gap between the two rows: the price of crossing a process boundary.
+//!
+//! Self-contained (synthetic manifest in a temp dir, port 0). Results
+//! print as a table and are written as JSON (default `BENCH_net.json`,
+//! override with the `NET_BENCH_OUT` env var).
+//!
+//! Run: `cargo bench --bench net_roundtrip [requests]`
+
+use std::time::Instant;
+
+use spoga::coordinator::{CoordinatorConfig, Fleet, FleetConfig, FleetHandle, RemoteShardConfig};
+use spoga::net::{NetConfig, ServeTarget, ShardServer};
+use spoga::report::{fmt_sig, Table};
+use spoga::runtime::BackendKind;
+
+struct Row {
+    path: &'static str,
+    requests: usize,
+    req_per_s: f64,
+    mean_us: f64,
+    overhead_us: f64,
+}
+
+fn synthetic_artifacts() -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("spoga-net-bench-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("temp artifact dir");
+    std::fs::write(
+        dir.join("manifest.txt"),
+        "mlp_b1 m1.hlo.txt i32:1x16 i32:1x4\n\
+         mlp_b8 m8.hlo.txt i32:8x16 i32:8x4\n",
+    )
+    .expect("write manifest");
+    dir
+}
+
+fn shard_cfg(artifact_dir: &str) -> CoordinatorConfig {
+    CoordinatorConfig {
+        artifact_dir: artifact_dir.to_string(),
+        workers: 2,
+        backend: BackendKind::Software,
+        max_batch_wait_s: 0.0,
+        ..Default::default()
+    }
+}
+
+/// Sequential blocking MLP burst: per-request latency is what the row
+/// measures, so no client concurrency to hide the transport behind.
+fn drive(h: &FleetHandle, requests: usize) -> (f64, f64) {
+    h.infer_mlp(vec![0; 16]).expect("warm");
+    let t0 = Instant::now();
+    for i in 0..requests {
+        let row: Vec<i32> = (0..16).map(|v| ((v + i) % 100) as i32).collect();
+        h.infer_mlp(row).expect("infer");
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    (requests as f64 / wall.max(1e-12), wall / requests as f64 * 1e6)
+}
+
+fn main() {
+    let requests: usize =
+        std::env::args().nth(1).and_then(|v| v.parse().ok()).unwrap_or(512);
+    let dir = synthetic_artifacts();
+    let artifact_dir = dir.to_string_lossy().into_owned();
+    println!("net_roundtrip: {requests} sequential MLP requests per path\n");
+
+    // In-process baseline.
+    let local = Fleet::single(shard_cfg(&artifact_dir)).expect("local fleet");
+    let (local_rps, local_us) = drive(&local.handle(), requests);
+    local.shutdown();
+
+    // Loopback TCP: same shard shape behind a ShardServer, pure-remote
+    // client fleet in front.
+    let backend = Fleet::single(shard_cfg(&artifact_dir)).expect("backend fleet");
+    let server = ShardServer::start(
+        "127.0.0.1:0",
+        ServeTarget::Fleet(backend.handle()),
+        NetConfig::default(),
+    )
+    .expect("shard server");
+    let remote = Fleet::start(FleetConfig {
+        remotes: vec![RemoteShardConfig::new(server.local_addr().to_string())],
+        ..Default::default()
+    })
+    .expect("remote fleet");
+    let (remote_rps, remote_us) = drive(&remote.handle(), requests);
+    remote.shutdown();
+    server.shutdown();
+    backend.shutdown();
+
+    let rows = vec![
+        Row {
+            path: "in_process",
+            requests,
+            req_per_s: local_rps,
+            mean_us: local_us,
+            overhead_us: 0.0,
+        },
+        Row {
+            path: "loopback_tcp",
+            requests,
+            req_per_s: remote_rps,
+            mean_us: remote_us,
+            overhead_us: remote_us - local_us,
+        },
+    ];
+
+    let mut t = Table::new(vec!["path", "requests", "req/s", "mean us", "overhead us"]);
+    for r in &rows {
+        t.row(vec![
+            r.path.to_string(),
+            r.requests.to_string(),
+            fmt_sig(r.req_per_s, 3),
+            format!("{:.1}", r.mean_us),
+            format!("{:.1}", r.overhead_us),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // ---- JSON trajectory record ---------------------------------------------
+    let out_path =
+        std::env::var("NET_BENCH_OUT").unwrap_or_else(|_| "BENCH_net.json".to_string());
+    let json_rows: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "    {{\"path\": \"{}\", \"requests\": {}, \"req_per_s\": {:.1}, \
+                 \"mean_us\": {:.2}, \"overhead_us\": {:.2}}}",
+                r.path, r.requests, r.req_per_s, r.mean_us, r.overhead_us
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"net_roundtrip\",\n  \"requests\": {requests},\n  \
+         \"workload\": \"sequential blocking MLP burst, in-process vs loopback-TCP shard server\",\n  \
+         \"status\": \"measured\",\n  \"results\": [\n{}\n  ]\n}}\n",
+        json_rows.join(",\n")
+    );
+    match std::fs::write(&out_path, &json) {
+        Ok(()) => println!("wrote {out_path}"),
+        Err(e) => eprintln!("could not write {out_path}: {e}"),
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}

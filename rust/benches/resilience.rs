@@ -70,7 +70,7 @@ fn two_shards(dir: &str, window_s: f64) -> FleetConfig {
         shards: vec![cfg.clone(), cfg],
         policy: RoutePolicy::RoundRobin,
         labels: Vec::new(),
-        autoscale: None,
+        ..Default::default()
     }
 }
 

@@ -20,7 +20,9 @@
 //!   (round-robin, least-queue-depth, weighted A/B split) and automatic
 //!   failover when a shard's workers die. The historical single-coordinator
 //!   path is the 1-shard fleet ([`Fleet::single`]), so there is one serving
-//!   path.
+//!   path. Slots may also front coordinators in *other processes* over TCP
+//!   ([`RemoteShardConfig`] → [`crate::net::RemoteShard`]); see
+//!   [`router`]'s local-vs-remote equivalence contract.
 //!
 //! ## Resilience: what happens to an in-flight request
 //!
@@ -77,7 +79,7 @@ pub use batcher::{BatchPolicy, CnnMicroBatch, MicroBatch};
 pub use request::{CnnJob, GemmJob, Job, MlpJob, PingJob, Reply, Response};
 pub use router::{
     Fleet, FleetAutoscale, FleetConfig, FleetHandle, FleetLifecycle, NoiseSweepGrid,
-    RetryPayload, RetryingSlot, RoutePolicy,
+    RemoteShardConfig, RetryPayload, RetryingSlot, RoutePolicy,
 };
 pub use service::{Coordinator, CoordinatorConfig, CoordinatorHandle, Rejected};
 pub use stats::CoordinatorStats;

@@ -75,6 +75,39 @@
 //! one fresh `requests`/`completed` pair on the survivor, with
 //! `FleetTelemetry::resubmits` recording exactly how many logical requests
 //! are double-counted that way (requests − resubmits = logical requests).
+//!
+//! ## Remote shards and the local-vs-remote equivalence contract
+//!
+//! A slot may front a coordinator in *another process* through a
+//! [`RemoteShard`](crate::net::RemoteShard) client (see [`crate::net`]).
+//! The contract: a remote slot is indistinguishable from a local one at the
+//! router layer. Concretely —
+//!
+//! * **Same submit surface.** `try_submit_gemm/mlp/cnn` return the same
+//!   payload-recovering `Result<Response, Rejected<P>>`, and the reply
+//!   arrives through the same [`Response`] slot (the remote client's reader
+//!   thread fulfils it), so [`RetryingSlot`] resubmission, the blocking
+//!   helpers, and every [`RoutePolicy`] work unchanged over the wire.
+//! * **Same health surface.** `ping` probes end to end (socket → server →
+//!   worker pool pong), `stats` feeds queue-depth routing from a
+//!   client-side mirror, and [`FleetHandle::revive_shard`] heals a dead
+//!   remote slot by *reconnecting* (bounded backoff) instead of respawning
+//!   a worker pool — the janitor needs no special case.
+//! * **Error mapping.** [`Error::Remote`] carries a typed
+//!   [`RemoteErrorKind`](crate::error::RemoteErrorKind); only kinds with
+//!   `retires_shard()` — `ConnRefused`, `PeerGone` — act as failover
+//!   signals alongside [`Error::ShardDown`]. A corrupt frame, a version
+//!   skew, or one slow reply (`FrameCorrupt` / `VersionMismatch` /
+//!   `Timeout`) stays request-level: the peer process is demonstrably
+//!   alive, so one bad exchange never retires a healthy shard (the same
+//!   poison-payload discipline that keeps dropped reply slots non-retried).
+//!   A server-side `ShardDown` crossing the wire stays `ShardDown`, which
+//!   is exactly right: the remote fleet exhausted its own failover, so the
+//!   client fleet should fail over elsewhere.
+//! * **Graceful degradation.** When every remote shard is down, routing
+//!   drains to surviving local shards (they are just slots in the same
+//!   table); [`FleetLifecycle::submit_reroutes`] and
+//!   [`FleetLifecycle::resubmits`] count the traffic that moved.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
@@ -87,6 +120,7 @@ use crate::coordinator::stats::CoordinatorStats;
 use crate::dnn::models::CnnModel;
 use crate::fidelity::NoiseParams;
 use crate::metrics::{FleetTelemetry, ShardTelemetry};
+use crate::net::{NetConfig, RemoteShard};
 use crate::runtime::backend::BackendKind;
 use crate::runtime::photonic::PhotonicConfig;
 use crate::{Error, Result};
@@ -149,9 +183,29 @@ impl FleetAutoscale {
     }
 }
 
-/// Fleet configuration: one [`CoordinatorConfig`] per shard plus the
-/// routing policy.
+/// One remote shard to join the fleet: where to dial and how patient to be
+/// (see [`crate::net::NetConfig`]). Remote slots are appended to the table
+/// *after* every local shard, in declaration order.
 #[derive(Debug, Clone)]
+pub struct RemoteShardConfig {
+    /// Server address, `host:port`.
+    pub addr: String,
+    /// Optional display label; defaults to `remote<i>@<addr>`.
+    pub label: Option<String>,
+    /// Timeouts, backoff and frame limits for every call to this peer.
+    pub net: NetConfig,
+}
+
+impl RemoteShardConfig {
+    /// A remote shard at `addr` with default [`NetConfig`] deadlines.
+    pub fn new(addr: impl Into<String>) -> Self {
+        RemoteShardConfig { addr: addr.into(), label: None, net: NetConfig::default() }
+    }
+}
+
+/// Fleet configuration: one [`CoordinatorConfig`] per local shard (plus any
+/// [`RemoteShardConfig`] peers) and the routing policy.
+#[derive(Debug, Clone, Default)]
 pub struct FleetConfig {
     /// Per-shard coordinator configurations (possibly heterogeneous
     /// backends — that is the point).
@@ -164,28 +218,22 @@ pub struct FleetConfig {
     /// Revival/autoscaling policy; `None` (the default everywhere) keeps
     /// the historical fixed-fleet behavior with no janitor thread.
     pub autoscale: Option<FleetAutoscale>,
+    /// Remote shard servers to dial at start ([`crate::net::ShardServer`]
+    /// peers); their slots follow the local ones. A weighted policy's
+    /// weight list covers local shards first, then remotes in this order.
+    pub remotes: Vec<RemoteShardConfig>,
 }
 
 impl FleetConfig {
     /// A single-shard fleet — the compatibility spelling of the historical
     /// one-coordinator serving path.
     pub fn single(shard: CoordinatorConfig) -> Self {
-        FleetConfig {
-            shards: vec![shard],
-            policy: RoutePolicy::RoundRobin,
-            labels: Vec::new(),
-            autoscale: None,
-        }
+        FleetConfig { shards: vec![shard], ..Default::default() }
     }
 
     /// `n` identical shards behind round-robin (horizontal scaling).
     pub fn replicated(shard: CoordinatorConfig, n: usize) -> Self {
-        FleetConfig {
-            shards: vec![shard; n.max(1)],
-            policy: RoutePolicy::RoundRobin,
-            labels: Vec::new(),
-            autoscale: None,
-        }
+        FleetConfig { shards: vec![shard; n.max(1)], ..Default::default() }
     }
 
     /// Weighted two-shard A/B split — the photonic-design-experiment
@@ -195,14 +243,19 @@ impl FleetConfig {
         FleetConfig {
             shards: vec![a, b],
             policy: RoutePolicy::Weighted(vec![wa, wb]),
-            labels: Vec::new(),
-            autoscale: None,
+            ..Default::default()
         }
     }
 
     /// Attach a revival/autoscaling policy.
     pub fn with_autoscale(mut self, autoscale: FleetAutoscale) -> Self {
         self.autoscale = Some(autoscale);
+        self
+    }
+
+    /// Add a remote shard server to dial at start.
+    pub fn with_remote(mut self, remote: RemoteShardConfig) -> Self {
+        self.remotes.push(remote);
         self
     }
 
@@ -229,7 +282,7 @@ impl FleetConfig {
             shards.push(cfg);
             labels.push(format!("margin+{margin:.0}dB"));
         }
-        FleetConfig { shards, policy: RoutePolicy::RoundRobin, labels, autoscale: None }
+        FleetConfig { shards, labels, ..Default::default() }
     }
 
     /// Noise-aware serving *grid*: one noise-injecting photonic shard per
@@ -262,7 +315,7 @@ impl FleetConfig {
             shards.push(cfg);
             labels.push(format!("K{k}/adc{bits}"));
         }
-        FleetConfig { shards, policy: RoutePolicy::RoundRobin, labels, autoscale: None }
+        FleetConfig { shards, labels, ..Default::default() }
     }
 }
 
@@ -480,23 +533,125 @@ impl NoiseSweepGrid {
     }
 }
 
+/// What a slot routes to: an in-process coordinator or a cross-host peer.
+/// The two arms expose the same submit/ping/stats/revive surface (the
+/// module docs' equivalence contract), so everything above this enum —
+/// policies, failover, retrying slots, telemetry — is transport-blind.
+enum ShardLink {
+    Local {
+        handle: CoordinatorHandle,
+        /// The running coordinator, parked here so dynamically spawned
+        /// shards have an owner; `Fleet::shutdown` (or the last drop)
+        /// takes it.
+        coordinator: Mutex<Option<Coordinator>>,
+    },
+    Remote(RemoteShard),
+}
+
 struct ShardSlot {
     label: String,
-    handle: CoordinatorHandle,
+    link: ShardLink,
     dead: AtomicBool,
-    /// The running coordinator, parked here so dynamically spawned shards
-    /// have an owner; `Fleet::shutdown` (or the last drop) takes it.
-    coordinator: Mutex<Option<Coordinator>>,
 }
 
 impl ShardSlot {
     fn new(label: String, coordinator: Coordinator) -> Arc<Self> {
         Arc::new(ShardSlot {
             label,
-            handle: coordinator.handle(),
+            link: ShardLink::Local {
+                handle: coordinator.handle(),
+                coordinator: Mutex::new(Some(coordinator)),
+            },
             dead: AtomicBool::new(false),
-            coordinator: Mutex::new(Some(coordinator)),
         })
+    }
+
+    fn remote(label: String, shard: RemoteShard) -> Arc<Self> {
+        Arc::new(ShardSlot { label, link: ShardLink::Remote(shard), dead: AtomicBool::new(false) })
+    }
+
+    /// Live stats: the coordinator's own counters for a local slot, the
+    /// client-side mirror (kept by the remote reader thread) for a remote
+    /// one — so queue-depth routing and telemetry never block on a socket.
+    fn stats(&self) -> &CoordinatorStats {
+        match &self.link {
+            ShardLink::Local { handle, .. } => handle.stats(),
+            ShardLink::Remote(r) => r.stats(),
+        }
+    }
+
+    fn stats_arc(&self) -> Arc<CoordinatorStats> {
+        match &self.link {
+            ShardLink::Local { handle, .. } => handle.stats_arc(),
+            ShardLink::Remote(r) => r.stats_arc(),
+        }
+    }
+
+    fn try_submit_gemm(
+        &self,
+        artifact: &str,
+        a: Vec<i32>,
+        b: Vec<i32>,
+    ) -> std::result::Result<Response, Rejected<(Vec<i32>, Vec<i32>)>> {
+        match &self.link {
+            ShardLink::Local { handle, .. } => handle.try_submit_gemm(artifact, a, b),
+            ShardLink::Remote(r) => r.try_submit_gemm(artifact, a, b),
+        }
+    }
+
+    fn try_submit_mlp(
+        &self,
+        row: Vec<i32>,
+    ) -> std::result::Result<Response, Rejected<Vec<i32>>> {
+        match &self.link {
+            ShardLink::Local { handle, .. } => handle.try_submit_mlp(row),
+            ShardLink::Remote(r) => r.try_submit_mlp(row),
+        }
+    }
+
+    fn try_submit_cnn(
+        &self,
+        model: CnnModel,
+        input: Vec<i32>,
+    ) -> std::result::Result<Response, Rejected<(CnnModel, Vec<i32>)>> {
+        match &self.link {
+            ShardLink::Local { handle, .. } => handle.try_submit_cnn(model, input),
+            ShardLink::Remote(r) => r.try_submit_cnn(model, input),
+        }
+    }
+
+    fn ping(&self, timeout: Duration) -> Result<()> {
+        match &self.link {
+            ShardLink::Local { handle, .. } => handle.ping(timeout),
+            ShardLink::Remote(r) => r.ping(timeout),
+        }
+    }
+
+    /// Try to bring the shard's serving capacity back: respawn the worker
+    /// pool for a local slot, reconnect (bounded, jittered backoff) for a
+    /// remote one. Health is then proven the same way for both — an
+    /// end-to-end pong.
+    fn try_restore(&self) -> bool {
+        match &self.link {
+            ShardLink::Local { handle, .. } => {
+                handle.revive_workers(handle.configured_workers()).is_ok()
+            }
+            ShardLink::Remote(r) => r.reconnect().is_ok(),
+        }
+    }
+
+    /// Shut the link down: drain a local coordinator, disconnect (and join
+    /// the reader/heartbeat threads of) a remote client.
+    fn shutdown_link(&self) {
+        match &self.link {
+            ShardLink::Local { coordinator, .. } => {
+                let taken = coordinator.lock().unwrap_or_else(|p| p.into_inner()).take();
+                if let Some(c) = taken {
+                    c.shutdown();
+                }
+            }
+            ShardLink::Remote(r) => r.disconnect(),
+        }
     }
 }
 
@@ -513,6 +668,14 @@ pub struct FleetLifecycle {
     pub shards_spawned: AtomicU64,
     /// Revival probes that failed (pool did not come back / pong timed out).
     pub failed_probes: AtomicU64,
+    /// Submit-time reroutes: submissions a refusing (down) shard pushed to
+    /// the next live shard. When every remote shard is unreachable this is
+    /// where the drain-to-local traffic shows up.
+    pub submit_reroutes: AtomicU64,
+    /// Retrying submissions that exhausted the fleet — terminal
+    /// [`Error::ShardDown`] dispositions, counted exactly once per logical
+    /// request (never once per resubmit attempt).
+    pub terminal_failures: AtomicU64,
 }
 
 struct FleetInner {
@@ -527,8 +690,9 @@ struct FleetInner {
     lifecycle: FleetLifecycle,
     autoscale: Option<FleetAutoscale>,
     /// Config cloned for dynamically spawned shards (the first configured
-    /// shard's — replicate what the operator scaled first).
-    spawn_template: CoordinatorConfig,
+    /// *local* shard's — replicate what the operator scaled first). `None`
+    /// on a pure-remote fleet, which therefore cannot autoscale-spawn.
+    spawn_template: Option<CoordinatorConfig>,
 }
 
 /// Cloneable client handle over the whole fleet: routes each request to a
@@ -539,26 +703,60 @@ pub struct FleetHandle {
     inner: Arc<FleetInner>,
 }
 
-/// Does this error mean the shard (not the request) is broken? Only the
-/// typed [`Error::ShardDown`] variant counts — worker-pool death, a stopped
-/// coordinator and shutdown drains construct it. Request-level errors
-/// (shape, artifact, execute failures — and a dropped reply slot, which
-/// means a worker crashed *on this request* and must not send a possibly
-/// poisonous payload marching across every shard) carry other variants and
-/// never burn a failover.
+/// Does this error mean the shard (not the request) is broken? The typed
+/// [`Error::ShardDown`] variant counts — worker-pool death, a stopped
+/// coordinator and shutdown drains construct it — plus the [`Error::Remote`]
+/// kinds whose peer is truly unreachable
+/// ([`RemoteErrorKind::retires_shard`](crate::error::RemoteErrorKind::retires_shard):
+/// `ConnRefused`, `PeerGone`). Request-level errors — shape, artifact,
+/// execute failures, a dropped reply slot (a worker crashed *on this
+/// request* and must not send a possibly poisonous payload marching across
+/// every shard), and the remaining remote kinds (one corrupt frame, a
+/// version skew, one slow reply: the peer is demonstrably alive) — never
+/// burn a failover.
 fn is_shard_down(e: &Error) -> bool {
-    matches!(e, Error::ShardDown(_))
+    match e {
+        Error::ShardDown(_) => true,
+        Error::Remote { kind, .. } => kind.retires_shard(),
+        _ => false,
+    }
+}
+
+/// The typed error serving threads see when the slot-table lock is poisoned
+/// (a shard spawner panicked mid-append). A panic there must surface as an
+/// error on each request, not cascade panics into every serving thread.
+fn poisoned_slots() -> Error {
+    Error::Coordinator(
+        "fleet slot table lock poisoned (a shard spawner panicked); \
+         serving is halted until the fleet restarts"
+            .into(),
+    )
 }
 
 impl FleetHandle {
     /// Snapshot the slot table (cheap `Arc` clones; indices are stable).
+    /// Infallible: ops/telemetry reads recover a poisoned lock — the table
+    /// itself is always valid (slots are append-only `Arc`s) and dashboards
+    /// must keep working while serving reports [`poisoned_slots`] errors.
     fn slots(&self) -> Vec<Arc<ShardSlot>> {
-        self.inner.slots.read().expect("slot lock").clone()
+        match self.inner.slots.read() {
+            Ok(g) => g.clone(),
+            Err(p) => p.into_inner().clone(),
+        }
+    }
+
+    /// [`FleetHandle::slots`] for serving paths: a poisoned lock becomes a
+    /// typed [`Error::Coordinator`] instead of a panic.
+    fn try_slots(&self) -> Result<Vec<Arc<ShardSlot>>> {
+        match self.inner.slots.read() {
+            Ok(g) => Ok(g.clone()),
+            Err(_) => Err(poisoned_slots()),
+        }
     }
 
     /// Slot `i` (panics on out-of-range, like the historical indexing).
     fn slot(&self, i: usize) -> Arc<ShardSlot> {
-        self.inner.slots.read().expect("slot lock")[i].clone()
+        self.slots()[i].clone()
     }
 
     /// Shards still worth routing to within one slot-table snapshot: not
@@ -597,7 +795,7 @@ impl FleetHandle {
                 // instead of pinning shard 0.
                 let depths: Vec<(usize, u64)> = live
                     .iter()
-                    .map(|&i| (i, slots[i].handle.stats().queue_depth()))
+                    .map(|&i| (i, slots[i].stats().queue_depth()))
                     .collect();
                 let min = depths.iter().map(|&(_, d)| d).min().expect("non-empty live set");
                 let ties: Vec<usize> =
@@ -631,35 +829,42 @@ impl FleetHandle {
     }
 
     /// Submit-time failover: run the payload-recovering `op` against
-    /// policy-picked shards, marking refusers dead and *moving* the
-    /// recovered payload to the next attempt — no clone, ever. Returns the
-    /// accepted value plus the index of the shard that took it.
-    /// Request-level rejections (bad shape, unknown artifact) return
-    /// immediately.
+    /// policy-picked shards (local or remote — the op dispatches through
+    /// [`ShardSlot`]), marking refusers dead and *moving* the recovered
+    /// payload to the next attempt — no clone, ever. Returns the accepted
+    /// value plus the index of the shard that took it. Request-level
+    /// rejections (bad shape, unknown artifact) return immediately.
     fn with_submit_failover<T, P>(
         &self,
         payload: P,
-        mut op: impl FnMut(&CoordinatorHandle, P) -> std::result::Result<T, Rejected<P>>,
+        mut op: impl FnMut(&ShardSlot, P) -> std::result::Result<T, Rejected<P>>,
     ) -> Result<(T, usize)> {
         let mut payload = Some(payload);
         let mut last_err: Option<Error> = None;
+        let mut rerouted = false;
         // Each shard-down attempt retires a shard, so the loop terminates;
         // the cap only guards against a pathological revive/fail cycle.
         let attempt_cap = 2 * self.shard_count() + 2;
         for _ in 0..attempt_cap {
             // One slot-table snapshot per attempt covers live-set, pick and
-            // the handle — the hot path pays one lock, not four.
-            let slots = self.slots();
+            // the slot — the hot path pays one lock, not four.
+            let slots = self.try_slots()?;
             let live = Self::live_in(&slots);
             if live.is_empty() {
                 break;
             }
             let idx = self.pick_in(&slots, &live);
-            let h = slots[idx].handle.clone();
-            match op(&h, payload.take().expect("payload present while attempts remain")) {
+            match op(&slots[idx], payload.take().expect("payload present while attempts remain"))
+            {
                 Ok(v) => return Ok((v, idx)),
                 Err(Rejected { error, payload: recovered }) if is_shard_down(&error) => {
                     slots[idx].dead.store(true, Ordering::Relaxed);
+                    if !rerouted {
+                        // Count the logical submission that moved, not
+                        // every shard it bounced off along the way.
+                        rerouted = true;
+                        self.inner.lifecycle.submit_reroutes.fetch_add(1, Ordering::Relaxed);
+                    }
                     last_err = Some(error);
                     payload = Some(recovered);
                 }
@@ -674,13 +879,13 @@ impl FleetHandle {
     fn submit_payload(&self, payload: RetryPayload) -> Result<(Response, usize)> {
         match payload {
             RetryPayload::Gemm { artifact, a, b } => self
-                .with_submit_failover((a, b), |h, (a, b)| h.try_submit_gemm(&artifact, a, b)),
+                .with_submit_failover((a, b), |s, (a, b)| s.try_submit_gemm(&artifact, a, b)),
             RetryPayload::Mlp { row } => {
-                self.with_submit_failover(row, |h, row| h.try_submit_mlp(row))
+                self.with_submit_failover(row, |s, row| s.try_submit_mlp(row))
             }
             RetryPayload::Cnn { model, input } => self
-                .with_submit_failover((model, input), |h, (model, input)| {
-                    h.try_submit_cnn(model, input)
+                .with_submit_failover((model, input), |s, (model, input)| {
+                    s.try_submit_cnn(model, input)
                 }),
         }
     }
@@ -692,14 +897,14 @@ impl FleetHandle {
     /// semantics.
     pub fn submit_gemm(&self, artifact: &str, a: Vec<i32>, b: Vec<i32>) -> Result<Response> {
         Ok(self
-            .with_submit_failover((a, b), |h, (a, b)| h.try_submit_gemm(artifact, a, b))?
+            .with_submit_failover((a, b), |s, (a, b)| s.try_submit_gemm(artifact, a, b))?
             .0)
     }
 
     /// Submit one MLP row to a policy-picked shard; returns the raw
     /// response slot (submit-time failover only, clone-free).
     pub fn submit_mlp(&self, row: Vec<i32>) -> Result<Response> {
-        Ok(self.with_submit_failover(row, |h, row| h.try_submit_mlp(row))?.0)
+        Ok(self.with_submit_failover(row, |s, row| s.try_submit_mlp(row))?.0)
     }
 
     /// Submit a whole-CNN inference to a policy-picked shard; returns the
@@ -708,8 +913,8 @@ impl FleetHandle {
     /// t-dimension batch.
     pub fn submit_cnn(&self, model: CnnModel, input: Vec<i32>) -> Result<Response> {
         Ok(self
-            .with_submit_failover((model, input), |h, (model, input)| {
-                h.try_submit_cnn(model, input)
+            .with_submit_failover((model, input), |s, (model, input)| {
+                s.try_submit_cnn(model, input)
             })?
             .0)
     }
@@ -773,9 +978,12 @@ impl FleetHandle {
         self.submit_cnn_retrying(model, input)?.recv()
     }
 
-    /// Number of shards (live and dead).
+    /// Number of shards (live and dead, local and remote).
     pub fn shard_count(&self) -> usize {
-        self.inner.slots.read().expect("slot lock").len()
+        match self.inner.slots.read() {
+            Ok(g) => g.len(),
+            Err(p) => p.into_inner().len(),
+        }
     }
 
     /// Number of shards still in the rotation.
@@ -788,16 +996,65 @@ impl FleetHandle {
         self.slots().iter().map(|s| s.label.clone()).collect()
     }
 
-    /// Direct handle to shard `i` — for per-shard drains
+    /// Direct handle to *local* shard `i` — for per-shard drains
     /// ([`CoordinatorHandle::retire_workers`]) and sweep harnesses that
     /// must drive identical traffic at every shard, bypassing routing.
+    ///
+    /// # Panics
+    ///
+    /// On a remote slot: a cross-host shard has no in-process coordinator
+    /// handle. Check [`FleetHandle::is_remote_shard`] first when the fleet
+    /// may mix transports (sweep harnesses are local-only by construction).
     pub fn shard(&self, i: usize) -> CoordinatorHandle {
-        self.slot(i).handle.clone()
+        match &self.slot(i).link {
+            ShardLink::Local { handle, .. } => handle.clone(),
+            ShardLink::Remote(r) => panic!(
+                "shard {i} is remote ({}); FleetHandle::shard only exposes local coordinators",
+                r.addr()
+            ),
+        }
     }
 
-    /// Shard `i`'s live stats.
+    /// Whether slot `i` fronts a cross-host peer.
+    pub fn is_remote_shard(&self, i: usize) -> bool {
+        matches!(self.slot(i).link, ShardLink::Remote(_))
+    }
+
+    /// Shard `i`'s live stats (the client-side mirror for remote slots).
     pub fn shard_stats(&self, i: usize) -> Arc<CoordinatorStats> {
-        self.slot(i).handle.stats_arc()
+        self.slot(i).stats_arc()
+    }
+
+    /// End-to-end health probe through routing: pings policy-visible live
+    /// shards in table order and succeeds on the first pong. Errs with
+    /// [`Error::ShardDown`] when nothing answers — the fleet cannot serve.
+    pub fn ping(&self, timeout: Duration) -> Result<()> {
+        let slots = self.try_slots()?;
+        let live = Self::live_in(&slots);
+        let mut last: Option<Error> = None;
+        for &i in &live {
+            match slots[i].ping(timeout) {
+                Ok(()) => return Ok(()),
+                Err(e) => last = Some(e),
+            }
+        }
+        Err(last.unwrap_or_else(|| Error::ShardDown("fleet has no live shards".into())))
+    }
+
+    /// Dial a new remote shard and append it to the rotation; returns its
+    /// index. The connection must establish within the config's deadlines —
+    /// a dead address fails here rather than poisoning the table.
+    pub fn add_remote_shard(&self, remote: RemoteShardConfig) -> Result<usize> {
+        let idx_hint = self.shard_count();
+        let label = remote
+            .label
+            .clone()
+            .unwrap_or_else(|| format!("remote{idx_hint}@{}", remote.addr));
+        let shard = RemoteShard::connect(&remote.addr, &label, remote.net.clone())?;
+        let mut slots = self.inner.slots.write().map_err(|_| poisoned_slots())?;
+        let idx = slots.len();
+        slots.push(ShardSlot::remote(label, shard));
+        Ok(idx)
     }
 
     /// Take shard `i` out of the rotation (ops drain; also flipped
@@ -812,11 +1069,11 @@ impl FleetHandle {
         &self.inner.lifecycle
     }
 
-    /// Try to bring shard `i` back into the rotation: ask its (surviving)
-    /// leader to respawn the worker pool, health-probe the revived pool end
-    /// to end, and clear the dead flag only on a successful pong. Returns
-    /// `true` when the shard is serving afterwards (including "was never
-    /// down"); a failed probe counts into
+    /// Try to bring shard `i` back into the rotation: respawn its worker
+    /// pool (local) or reconnect with bounded backoff (remote), health-probe
+    /// it end to end, and clear the dead flag only on a successful pong.
+    /// Returns `true` when the shard is serving afterwards (including "was
+    /// never down"); a failed probe counts into
     /// [`FleetLifecycle::failed_probes`] and leaves the shard out.
     pub fn revive_shard(&self, i: usize) -> bool {
         let slot = self.slot(i);
@@ -824,11 +1081,12 @@ impl FleetHandle {
             return true;
         }
         // Keep the shard flagged out of the rotation for the whole revival:
-        // the leader's respawn raises the live_workers gauge *before* the
-        // fresh engines finish initializing, and routed traffic buffered
-        // into a worker whose init then fails would drop its reply slots
-        // terminally (the poison-payload rule keeps dropped slots
-        // non-retried). Only a successful end-to-end pong re-admits it.
+        // a local leader's respawn raises the live_workers gauge *before*
+        // the fresh engines finish initializing (and a remote reconnect
+        // flips reachability before the far pool proves healthy); routed
+        // traffic buffered into a worker whose init then fails would drop
+        // its reply slots terminally (the poison-payload rule keeps dropped
+        // slots non-retried). Only a successful end-to-end pong re-admits.
         slot.dead.store(true, Ordering::Relaxed);
         let timeout = self
             .inner
@@ -836,8 +1094,8 @@ impl FleetHandle {
             .as_ref()
             .map(|a| a.probe_timeout_s)
             .unwrap_or(FleetAutoscale::DEFAULT_PROBE_TIMEOUT_S);
-        let ok = slot.handle.revive_workers(slot.handle.configured_workers()).is_ok()
-            && slot.handle.ping(Duration::from_secs_f64(timeout)).is_ok();
+        let ok =
+            slot.try_restore() && slot.ping(Duration::from_secs_f64(timeout)).is_ok();
         if ok {
             slot.dead.store(false, Ordering::Relaxed);
             self.inner.lifecycle.shards_revived.fetch_add(1, Ordering::Relaxed);
@@ -847,10 +1105,11 @@ impl FleetHandle {
         ok
     }
 
-    /// Out of the rotation: flagged dead, or its worker pool is gone.
+    /// Out of the rotation: flagged dead, or its worker pool is gone (for a
+    /// remote slot `live_workers` is the client's reachability gauge).
     fn is_down(slot: &ShardSlot) -> bool {
         slot.dead.load(Ordering::Relaxed)
-            || slot.handle.stats().live_workers.load(Ordering::Relaxed) == 0
+            || slot.stats().live_workers.load(Ordering::Relaxed) == 0
     }
 
     /// Probe every out-of-rotation shard ([`FleetHandle::revive_shard`]);
@@ -869,13 +1128,20 @@ impl FleetHandle {
     /// ops call) cannot overshoot it; the losing coordinator shuts straight
     /// back down. Returns the new index, or `None` when the cap held.
     fn spawn_shard_under(&self, cap: usize) -> Result<Option<usize>> {
-        let cfg = self.inner.spawn_template.clone();
+        let Some(cfg) = self.inner.spawn_template.clone() else {
+            return Err(Error::Config(
+                "pure-remote fleet has no local shard template to spawn from".into(),
+            ));
+        };
         let label_backend = cfg.backend.label();
         // Start before taking the write lock: warmup can be slow and
         // routing must not stall behind it.
         let c = Coordinator::start(cfg)?;
         let overshoot = {
-            let mut slots = self.inner.slots.write().expect("slot lock");
+            let mut slots = self.inner.slots.write().map_err(|_| {
+                // Shut the freshly started coordinator down via drop.
+                poisoned_slots()
+            })?;
             if slots.len() >= cap {
                 Some(c)
             } else {
@@ -916,7 +1182,7 @@ impl FleetHandle {
             true
         } else {
             let depth: u64 =
-                live.iter().map(|&i| self.slot(i).handle.stats().queue_depth()).sum();
+                live.iter().map(|&i| self.slot(i).stats().queue_depth()).sum();
             depth / live.len() as u64 >= a.pressure_per_shard
         };
         if !spawn {
@@ -936,13 +1202,15 @@ impl FleetHandle {
         let mut t = FleetTelemetry::new(
             self.slots()
                 .iter()
-                .map(|s| ShardTelemetry::capture(&s.label, s.handle.stats()))
+                .map(|s| ShardTelemetry::capture(&s.label, s.stats()))
                 .collect(),
         );
         t.resubmits = self.inner.lifecycle.resubmits.load(Ordering::Relaxed);
         t.shards_revived = self.inner.lifecycle.shards_revived.load(Ordering::Relaxed);
         t.shards_spawned = self.inner.lifecycle.shards_spawned.load(Ordering::Relaxed);
         t.failed_probes = self.inner.lifecycle.failed_probes.load(Ordering::Relaxed);
+        t.submit_reroutes = self.inner.lifecycle.submit_reroutes.load(Ordering::Relaxed);
+        t.terminal_failures = self.inner.lifecycle.terminal_failures.load(Ordering::Relaxed);
         t
     }
 }
@@ -1038,10 +1306,16 @@ impl RetryingSlot {
                     // The shard accepted and then died under the request.
                     self.handle.mark_dead(self.shard);
                     if self.resubmits_left == 0 {
-                        return Err(e);
+                        return Err(self.terminal(e));
                     }
                     self.resubmits_left -= 1;
-                    let (rx, shard) = self.handle.submit_payload(self.payload.clone())?;
+                    let (rx, shard) = match self.handle.submit_payload(self.payload.clone()) {
+                        Ok(v) => v,
+                        // Resubmission found no live shard at all — the
+                        // other terminal disposition of a retained payload.
+                        Err(e) if is_shard_down(&e) => return Err(self.terminal(e)),
+                        Err(e) => return Err(e),
+                    };
                     self.handle
                         .inner
                         .lifecycle
@@ -1065,6 +1339,14 @@ impl RetryingSlot {
             }
         }
     }
+
+    /// Record this logical request's terminal shard-down disposition —
+    /// called exactly once per [`RetryingSlot`], on the single `return`
+    /// that ends it, so resubmit-then-fail cannot double-count.
+    fn terminal(&self, e: Error) -> Error {
+        self.handle.inner.lifecycle.terminal_failures.fetch_add(1, Ordering::Relaxed);
+        e
+    }
 }
 
 /// The running fleet: N coordinators behind one [`FleetHandle`], plus (when
@@ -1081,22 +1363,25 @@ impl Fleet {
     /// and wire the router. Fails fast if any shard fails to start —
     /// already-started shards shut down via drop.
     pub fn start(cfg: FleetConfig) -> Result<Self> {
-        if cfg.shards.is_empty() {
+        if cfg.shards.is_empty() && cfg.remotes.is_empty() {
             return Err(Error::Config("fleet needs at least one shard".into()));
         }
+        let total = cfg.shards.len() + cfg.remotes.len();
         if let RoutePolicy::Weighted(w) = &cfg.policy {
-            if w.len() != cfg.shards.len() {
+            if w.len() != total {
                 return Err(Error::Config(format!(
-                    "weighted policy has {} weights for {} shards",
+                    "weighted policy has {} weights for {} shards ({} local + {} remote)",
                     w.len(),
-                    cfg.shards.len()
+                    total,
+                    cfg.shards.len(),
+                    cfg.remotes.len()
                 )));
             }
             if w.iter().all(|&x| x == 0) {
                 return Err(Error::Config("weighted policy needs a nonzero weight".into()));
             }
         }
-        let mut slots = Vec::with_capacity(cfg.shards.len());
+        let mut slots = Vec::with_capacity(total);
         for (i, shard_cfg) in cfg.shards.iter().enumerate() {
             let label = cfg
                 .labels
@@ -1105,8 +1390,20 @@ impl Fleet {
                 .unwrap_or_else(|| format!("shard{}:{}", i, shard_cfg.backend.label()));
             slots.push(ShardSlot::new(label, Coordinator::start(shard_cfg.clone())?));
         }
-        let initial = cfg.shards.len();
-        let spawn_template = cfg.shards[0].clone();
+        // Remote slots follow the local ones; a refused dial fails the whole
+        // start (already-started local shards shut down via drop).
+        for (j, remote) in cfg.remotes.iter().enumerate() {
+            let i = cfg.shards.len() + j;
+            let label = remote
+                .label
+                .clone()
+                .or_else(|| cfg.labels.get(i).cloned())
+                .unwrap_or_else(|| format!("remote{j}@{}", remote.addr));
+            let shard = RemoteShard::connect(&remote.addr, &label, remote.net.clone())?;
+            slots.push(ShardSlot::remote(label, shard));
+        }
+        let initial = total;
+        let spawn_template = cfg.shards.first().cloned();
         let handle = FleetHandle {
             inner: Arc::new(FleetInner {
                 slots: RwLock::new(slots),
@@ -1159,9 +1456,7 @@ impl Fleet {
             let _ = j.join();
         }
         for slot in self.handle.slots() {
-            if let Some(c) = slot.coordinator.lock().expect("coordinator lock").take() {
-                c.shutdown();
-            }
+            slot.shutdown_link();
         }
     }
 
@@ -1225,7 +1520,7 @@ mod tests {
             shards: vec![cfg.clone(), cfg],
             policy,
             labels: vec!["a".into(), "b".into()],
-            autoscale: None,
+            ..Default::default()
         })
         .unwrap();
         (fleet.handle(), fleet)
@@ -1281,30 +1576,61 @@ mod tests {
         )));
         assert!(!is_shard_down(&Error::Shape("mlp row has 3 elements".into())));
         assert!(!is_shard_down(&Error::Artifact("unknown artifact".into())));
+        // Remote kinds follow retires_shard(): truly-unreachable peers
+        // fail over, one bad exchange with a live peer does not.
+        use crate::error::RemoteErrorKind as K;
+        let remote = |kind| Error::Remote { kind, detail: "peer".into() };
+        assert!(is_shard_down(&remote(K::ConnRefused)));
+        assert!(is_shard_down(&remote(K::PeerGone)));
+        assert!(!is_shard_down(&remote(K::Timeout)));
+        assert!(!is_shard_down(&remote(K::FrameCorrupt)));
+        assert!(!is_shard_down(&remote(K::VersionMismatch)));
+    }
+
+    #[test]
+    fn poisoned_slot_lock_yields_typed_errors_not_panics() {
+        let (h, fleet) = two_shard_handle("poison", RoutePolicy::RoundRobin);
+        // Poison the slot-table lock the way a panicking spawner would.
+        let inner = h.inner.clone();
+        let _ = std::thread::spawn(move || {
+            let _guard = inner.slots.write().unwrap();
+            panic!("spawner panicked mid-append");
+        })
+        .join();
+        // Serving paths surface a typed Coordinator error...
+        match h.submit_mlp(vec![0; 16]) {
+            Err(Error::Coordinator(msg)) => assert!(msg.contains("poisoned"), "{msg}"),
+            other => panic!("expected poisoned-lock Coordinator error, got {other:?}"),
+        }
+        // ...while ops/telemetry reads recover and keep working.
+        assert_eq!(h.shard_count(), 2);
+        assert_eq!(h.telemetry().shards.len(), 2);
+        fleet.shutdown();
     }
 
     #[test]
     fn fleet_config_validation() {
-        assert!(Fleet::start(FleetConfig {
-            shards: Vec::new(),
-            policy: RoutePolicy::RoundRobin,
-            labels: Vec::new(),
-            autoscale: None,
-        })
-        .is_err());
+        assert!(Fleet::start(FleetConfig::default()).is_err(), "no shards at all");
         let shard = CoordinatorConfig::default();
         assert!(Fleet::start(FleetConfig {
             shards: vec![shard.clone(), shard.clone()],
             policy: RoutePolicy::Weighted(vec![1]),
-            labels: Vec::new(),
-            autoscale: None,
+            ..Default::default()
         })
         .is_err());
         assert!(Fleet::start(FleetConfig {
-            shards: vec![shard.clone(), shard],
+            shards: vec![shard.clone(), shard.clone()],
             policy: RoutePolicy::Weighted(vec![0, 0]),
-            labels: Vec::new(),
-            autoscale: None,
+            ..Default::default()
+        })
+        .is_err());
+        // A weighted fleet mixing transports needs one weight per slot,
+        // local + remote.
+        assert!(Fleet::start(FleetConfig {
+            shards: vec![shard],
+            policy: RoutePolicy::Weighted(vec![1]),
+            remotes: vec![RemoteShardConfig::new("127.0.0.1:1")],
+            ..Default::default()
         })
         .is_err());
     }

@@ -31,8 +31,61 @@ pub enum Error {
     /// signal; request-level errors must never retire a shard.
     ShardDown(String),
 
+    /// A cross-host remote-shard call failed. The kind decides failover:
+    /// [`RemoteErrorKind::retires_shard`] is `true` only when the peer is
+    /// truly unreachable (connection refused, peer gone) — a corrupt frame,
+    /// a version skew, or one slow reply stays request-level so a healthy
+    /// shard is never retired by a single bad exchange.
+    Remote {
+        /// Failure taxonomy (drives the `ShardDown` mapping in the router).
+        kind: RemoteErrorKind,
+        /// Human-readable context (peer address, what was in flight).
+        detail: String,
+    },
+
     /// Underlying I/O failure.
     Io(std::io::Error),
+}
+
+/// Failure taxonomy for [`Error::Remote`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RemoteErrorKind {
+    /// A connect/read/write deadline (`NetConfig`) expired.
+    Timeout,
+    /// The peer actively refused the connection.
+    ConnRefused,
+    /// A frame failed its magic/length/FNV-checksum validation.
+    FrameCorrupt,
+    /// The peer speaks a different wire-protocol version.
+    VersionMismatch,
+    /// The connection died mid-stream (EOF, reset, killed process).
+    PeerGone,
+}
+
+impl RemoteErrorKind {
+    /// Whether this failure means the shard is truly unreachable and the
+    /// fleet router should treat it like [`Error::ShardDown`] (retire the
+    /// shard and fail requests over to a survivor). `Timeout` on a single
+    /// reply, a corrupt frame, or a version skew are request-level: the
+    /// peer process is demonstrably alive, so the shard stays in rotation
+    /// (heartbeat missed-pong accounting, not one slow exchange, is what
+    /// retires an unresponsive shard).
+    pub fn retires_shard(&self) -> bool {
+        matches!(self, RemoteErrorKind::ConnRefused | RemoteErrorKind::PeerGone)
+    }
+}
+
+impl std::fmt::Display for RemoteErrorKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            RemoteErrorKind::Timeout => "timeout",
+            RemoteErrorKind::ConnRefused => "connection refused",
+            RemoteErrorKind::FrameCorrupt => "frame corrupt",
+            RemoteErrorKind::VersionMismatch => "version mismatch",
+            RemoteErrorKind::PeerGone => "peer gone",
+        };
+        f.write_str(s)
+    }
 }
 
 impl std::fmt::Display for Error {
@@ -45,6 +98,7 @@ impl std::fmt::Display for Error {
             Error::Runtime(msg) => write!(f, "runtime error: {msg}"),
             Error::Coordinator(msg) => write!(f, "coordinator error: {msg}"),
             Error::ShardDown(msg) => write!(f, "shard down: {msg}"),
+            Error::Remote { kind, detail } => write!(f, "remote shard error ({kind}): {detail}"),
             Error::Io(e) => write!(f, "io error: {e}"),
         }
     }
@@ -78,6 +132,19 @@ mod tests {
         assert_eq!(Error::Artifact("x".into()).to_string(), "artifact error: x");
         assert_eq!(Error::Coordinator("y".into()).to_string(), "coordinator error: y");
         assert_eq!(Error::ShardDown("z".into()).to_string(), "shard down: z");
+        let e = Error::Remote { kind: RemoteErrorKind::Timeout, detail: "p".into() };
+        assert_eq!(e.to_string(), "remote shard error (timeout): p");
+    }
+
+    #[test]
+    fn only_unreachable_kinds_retire_shards() {
+        use RemoteErrorKind::*;
+        assert!(ConnRefused.retires_shard());
+        assert!(PeerGone.retires_shard());
+        // Request-level kinds: one bad exchange must not retire a shard.
+        assert!(!Timeout.retires_shard());
+        assert!(!FrameCorrupt.retires_shard());
+        assert!(!VersionMismatch.retires_shard());
     }
 
     #[test]

@@ -28,6 +28,7 @@
 //! | [`metrics`] | FPS / FPS/W / FPS/W/mm² aggregation, gmean, live serving telemetry, fleet-wide stats rollup (`FleetTelemetry`) |
 //! | [`runtime`] | pluggable execution backends (`ExecBackend`): software interpreter + photonic-in-the-loop simulator; artifact manifest, engine, whole-CNN serving (single + t-stacked batch) |
 //! | [`coordinator`] | sharded serving fleet: shard router (`Fleet`/`FleetHandle`, pluggable routing + failover, retained-payload mid-flight retry, shard revival/autoscaling) over per-backend coordinators with dynamic MLP batching, t-stacked CNN batching, and photonic telemetry |
+//! | [`net`] | cross-host serving: zero-dependency checksummed wire protocol, `ShardServer` (TCP front for a coordinator/fleet), `RemoteShard` client with deadlines, jittered-backoff reconnect, and typed `Error::Remote` failure taxonomy |
 //! | [`testing`] | deterministic mini property-testing harness |
 //! | [`benchkit`] | timing helpers for the harness-free benches |
 //! | [`report`] | plain-text table rendering shared by benches/examples |
@@ -41,6 +42,7 @@ pub mod dnn;
 pub mod error;
 pub mod fidelity;
 pub mod metrics;
+pub mod net;
 pub mod optics;
 pub mod report;
 pub mod runtime;

@@ -9,8 +9,10 @@
 //! spoga gemm [--artifact NAME]            run an AOT GEMM vs golden model
 //! spoga serve [--requests N] [--workers W] [--backend B]
 //!             [--shards N] [--split a:b=w1:w2] [--policy P]
-//!             [--revive] [--max-shards M]
+//!             [--revive] [--max-shards M] [--window S]
 //!             [--noise-grid K=..,adc=..]
+//!             [--noise-margin DB] [--noise-seed N]
+//!             [--listen ADDR] [--connect HOST:PORT[,HOST:PORT..]]
 //!                                         self-driven serving demo over a
 //!                                         shard fleet; B in {software,
 //!                                         photonic, holylight, deapcnn}
@@ -28,6 +30,13 @@
 //!                                         prove it); --max-shards M lets
 //!                                         the fleet spawn shards under
 //!                                         queue pressure up to M total.
+//!                                         --noise-margin arms analog noise
+//!                                         injection on every photonic
+//!                                         shard (content-keyed, seeded by
+//!                                         --noise-seed, so two processes
+//!                                         with equal seeds serve identical
+//!                                         integers — the cross-process
+//!                                         bit-identity contract).
 //!                                         --noise-grid runs the noise-
 //!                                         aware serving study instead:
 //!                                         one noisy photonic shard per
@@ -36,7 +45,17 @@
 //!                                         emitting the served-accuracy vs
 //!                                         sim-FPS/W frontier table; spec
 //!                                         e.g. K=74,160,adc=6,8 (empty =
-//!                                         the paper-range default grid)
+//!                                         the paper-range default grid).
+//!                                         --listen exposes the fleet to
+//!                                         other processes on a TCP socket
+//!                                         (spoga wire protocol; first
+//!                                         stdout line is
+//!                                         `listening on IP:PORT` so
+//!                                         callers can bind port 0);
+//!                                         --connect drives the burst
+//!                                         against remote shard servers
+//!                                         instead of local coordinators
+//!                                         (a pure-remote fleet).
 //! spoga info                              artifact + platform diagnostics
 //! ```
 
@@ -253,13 +272,102 @@ fn cmd_noise_grid(spec: &str, flags: &HashMap<String, String>) {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+/// `serve --listen ADDR`: expose the configured fleet to other processes
+/// on a TCP socket speaking the spoga wire protocol. The first stdout line
+/// is machine-parseable — `listening on IP:PORT` — so callers (CI, the
+/// cross-process chaos suite) can bind `--listen 127.0.0.1:0` and read the
+/// OS-assigned port back. Runs until a peer sends the Shutdown opcode.
+fn serve_listen(addr: &str, fleet: spoga::coordinator::Fleet) {
+    use spoga::net::{NetConfig, ServeTarget, ShardServer};
+    let h = fleet.handle();
+    let server = ShardServer::start(addr, ServeTarget::Fleet(h), NetConfig::default())
+        .unwrap_or_else(|e| {
+            eprintln!("serve --listen {addr}: {e}");
+            std::process::exit(2);
+        });
+    println!("listening on {}", server.local_addr());
+    while !server.stop_requested() {
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+    println!("shutdown requested; draining connections");
+    server.shutdown();
+    fleet.shutdown();
+}
+
+/// `serve --connect HOST:PORT[,..]`: drive the client burst against remote
+/// shard servers instead of local coordinators. Builds a *pure-remote*
+/// fleet — every slot is a `RemoteShard` speaking the wire protocol — so
+/// routing policy, retained-payload failover and the telemetry rollup are
+/// exactly the local code paths (the local-vs-remote equivalence contract
+/// in `coordinator::router`).
+fn cmd_connect(spec: &str, flags: &HashMap<String, String>) {
+    use spoga::coordinator::{Fleet, FleetConfig, RemoteShardConfig, RoutePolicy};
+    let requests: usize = flags.get("requests").and_then(|v| v.parse().ok()).unwrap_or(256);
+    // MLP row width must match whatever artifacts the *servers* loaded;
+    // --cols overrides the local default for synthetic-manifest servers.
+    let cols: usize = flags.get("cols").and_then(|v| v.parse().ok()).unwrap_or(784);
+    let policy = match flags.get("policy").map(String::as_str) {
+        None | Some("rr") => RoutePolicy::RoundRobin,
+        Some("least") => RoutePolicy::LeastQueueDepth,
+        Some(other) => {
+            eprintln!("unknown policy {other:?}: expected rr|least");
+            std::process::exit(2);
+        }
+    };
+    let remotes: Vec<RemoteShardConfig> =
+        spec.split(',').filter(|a| !a.is_empty()).map(RemoteShardConfig::new).collect();
+    if remotes.is_empty() {
+        eprintln!("--connect needs at least one HOST:PORT");
+        std::process::exit(2);
+    }
+    for r in &remotes {
+        println!("remote shard: {}", r.addr);
+    }
+    let fleet = Fleet::start(FleetConfig { remotes, policy, ..Default::default() })
+        .unwrap_or_else(|e| {
+            eprintln!("connect: {e}");
+            std::process::exit(2);
+        });
+    let h = fleet.handle();
+    h.ping(std::time::Duration::from_secs(5)).expect("no shard server pongs");
+    let t0 = std::time::Instant::now();
+    let clients = 4usize;
+    let per = requests / clients;
+    let joins: Vec<_> = (0..clients)
+        .map(|t| {
+            let h = h.clone();
+            std::thread::spawn(move || {
+                for i in 0..per {
+                    let row = vec![((t * per + i) % 100) as i32; cols];
+                    h.infer_mlp(row).expect("remote infer");
+                }
+            })
+        })
+        .collect();
+    for j in joins {
+        j.join().unwrap();
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "{} remote requests in {dt:.3}s = {:.0} req/s over {} shard server(s)",
+        per * clients,
+        per as f64 * clients as f64 / dt,
+        h.shard_count(),
+    );
+    println!("fleet rollup:\n{}", h.telemetry().summary());
+    fleet.shutdown();
+}
+
 fn cmd_serve(flags: &HashMap<String, String>) {
     use spoga::coordinator::{CoordinatorConfig, Fleet, FleetConfig, RoutePolicy};
     if let Some(spec) = flags.get("noise-grid") {
         // The grid study builds its own self-contained fleet; fleet-shape
         // flags would be silently discarded, so reject them like every
         // other conflicting/unknown flag combination in this command.
-        for conflicting in ["backend", "split", "policy", "shards", "revive", "max-shards"] {
+        for conflicting in [
+            "backend", "split", "policy", "shards", "revive", "max-shards", "listen",
+            "connect", "noise-margin", "noise-seed",
+        ] {
             if flags.contains_key(conflicting) {
                 eprintln!(
                     "--noise-grid conflicts with --{conflicting}: the grid study builds \
@@ -271,6 +379,30 @@ fn cmd_serve(flags: &HashMap<String, String>) {
         cmd_noise_grid(spec, flags);
         return;
     }
+    if let Some(spec) = flags.get("connect") {
+        // A pure-remote fleet has no local shard shape; shape flags would
+        // be silently discarded, so reject them like every other conflict.
+        for conflicting in
+            ["backend", "split", "shards", "revive", "max-shards", "listen", "artifacts"]
+        {
+            if flags.contains_key(conflicting) {
+                eprintln!(
+                    "--connect conflicts with --{conflicting}: the shard servers own \
+                     their fleet shape; only --requests/--policy/--cols apply here"
+                );
+                std::process::exit(2);
+            }
+        }
+        cmd_connect(spec, flags);
+        return;
+    }
+    if flags.contains_key("listen") && flags.contains_key("requests") {
+        eprintln!(
+            "--listen conflicts with --requests: a shard server serves remote clients; \
+             it does not drive its own burst"
+        );
+        std::process::exit(2);
+    }
     let requests: usize = flags.get("requests").and_then(|v| v.parse().ok()).unwrap_or(256);
     let workers: usize = flags.get("workers").and_then(|v| v.parse().ok()).unwrap_or(2);
 
@@ -278,13 +410,31 @@ fn cmd_serve(flags: &HashMap<String, String>) {
     // weights); --shards sets the shard count (default: one per split
     // backend, or 1). The single-coordinator path is just the 1-shard
     // fleet — there is one serving path.
-    let (kinds, weights) = match flags.get("split") {
+    let (mut kinds, weights) = match flags.get("split") {
         Some(spec) => parse_split(spec),
         None => (
             vec![parse_backend(flags.get("backend").map(String::as_str).unwrap_or("software"))],
             None,
         ),
     };
+    // --noise-margin DB arms content-keyed analog noise on every photonic
+    // shard. The seed (--noise-seed, default fixed) keys the noise, so two
+    // processes serving the same payloads at the same margin+seed produce
+    // identical integers — what the cross-process chaos suite pins.
+    if let Some(margin) = flags.get("noise-margin") {
+        let margin_db: f64 = margin.parse().unwrap_or_else(|_| {
+            eprintln!("bad --noise-margin {margin:?}: expected a dB value (e.g. 0 or 20)");
+            std::process::exit(2);
+        });
+        let seed: u64 =
+            flags.get("noise-seed").and_then(|v| v.parse().ok()).unwrap_or(0xDEAD_5EED);
+        let noise = spoga::fidelity::NoiseParams::from_link_margin(margin_db);
+        for k in &mut kinds {
+            if let spoga::runtime::BackendKind::Photonic(cfg) = k {
+                *k = spoga::runtime::BackendKind::Photonic(cfg.clone().with_noise(noise, seed));
+            }
+        }
+    }
     let shards: usize = flags
         .get("shards")
         .and_then(|v| v.parse().ok())
@@ -310,7 +460,7 @@ fn cmd_serve(flags: &HashMap<String, String>) {
         );
         std::process::exit(2);
     }
-    let base = CoordinatorConfig {
+    let mut base = CoordinatorConfig {
         artifact_dir: flags
             .get("artifacts")
             .cloned()
@@ -318,6 +468,14 @@ fn cmd_serve(flags: &HashMap<String, String>) {
         workers,
         ..Default::default()
     };
+    // --window S overrides the dynamic-batching window (the chaos suite
+    // uses a long window on child servers to hold accepted jobs mid-kill).
+    if let Some(w) = flags.get("window") {
+        base.max_batch_wait_s = w.parse().unwrap_or_else(|_| {
+            eprintln!("bad --window {w:?}: expected seconds (e.g. 0.5)");
+            std::process::exit(2);
+        });
+    }
     let shard_cfgs: Vec<CoordinatorConfig> = (0..shards)
         .map(|i| CoordinatorConfig { backend: kinds[i % kinds.len()].clone(), ..base.clone() })
         .collect();
@@ -358,9 +516,13 @@ fn cmd_serve(flags: &HashMap<String, String>) {
         println!("shard {i}: backend {}", c.backend.label());
     }
     let fleet =
-        Fleet::start(FleetConfig { shards: shard_cfgs, policy, labels: Vec::new(), autoscale })
+        Fleet::start(FleetConfig { shards: shard_cfgs, policy, autoscale, ..Default::default() })
             .expect("fleet");
     let h = fleet.handle();
+    if let Some(addr) = flags.get("listen") {
+        serve_listen(addr, fleet);
+        return;
+    }
     let t0 = std::time::Instant::now();
     let clients = 4usize;
     let per = requests / clients;

@@ -289,6 +289,12 @@ pub struct FleetTelemetry {
     pub shards_spawned: u64,
     /// Revival probes that failed.
     pub failed_probes: u64,
+    /// Submissions rerouted at submit time after a (possibly remote) shard
+    /// refused — the drain-to-survivors counter.
+    pub submit_reroutes: u64,
+    /// Retrying submissions that exhausted the fleet (terminal shard-down
+    /// dispositions, one per logical request).
+    pub terminal_failures: u64,
 }
 
 impl FleetTelemetry {
@@ -393,10 +399,22 @@ impl FleetTelemetry {
                 self.served_exact_fraction()
             ));
         }
-        if self.resubmits + self.shards_revived + self.shards_spawned + self.failed_probes > 0 {
+        let lifecycle_total = self.resubmits
+            + self.shards_revived
+            + self.shards_spawned
+            + self.failed_probes
+            + self.submit_reroutes
+            + self.terminal_failures;
+        if lifecycle_total > 0 {
             s.push_str(&format!(
-                "\n  lifecycle: resubmits={} revived={} spawned={} failed_probes={}",
-                self.resubmits, self.shards_revived, self.shards_spawned, self.failed_probes
+                "\n  lifecycle: resubmits={} reroutes={} revived={} spawned={} \
+                 failed_probes={} terminal_failures={}",
+                self.resubmits,
+                self.submit_reroutes,
+                self.shards_revived,
+                self.shards_spawned,
+                self.failed_probes,
+                self.terminal_failures
             ));
         }
         s

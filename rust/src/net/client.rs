@@ -1,0 +1,601 @@
+//! `RemoteShard`: the client half of cross-host serving.
+//!
+//! A `RemoteShard` speaks the [`super::wire`] protocol to one
+//! [`super::ShardServer`] and presents the *same* surface as a local shard
+//! (`try_submit_*` returning payload-recovering [`Rejected`], `ping`,
+//! `stats`), so the fleet router can hold local and remote shards in one
+//! slot table. One connection carries any number of in-flight requests,
+//! correlated by `request_id`:
+//!
+//! * submits register a bounded(1) response slot plus a deadline in the
+//!   pending map, then write the frame;
+//! * a dedicated reader thread decodes replies and fulfils the slots;
+//!   between frames it expires overdue entries with `Remote { Timeout }` —
+//!   a stalled peer trips `io_timeout`, it never hangs a caller;
+//! * connection death (EOF / reset / killed process) fails every pending
+//!   entry with `Remote { PeerGone }`, which the router maps to shard-down
+//!   so retained-payload retry resubmits on a survivor;
+//! * a corrupt or version-skewed frame fails pending entries with its
+//!   *request-level* kind and reconnects in place — the shard is not
+//!   retired (same poison-payload discipline as local shards);
+//! * an optional heartbeat thread pings on a cadence; crossing the
+//!   missed-pong threshold retires the shard until a revival reconnects.
+//!
+//! Client-side [`CoordinatorStats`] mirror what *this client* routed to the
+//! peer (requests / completed / failed / latency), which keeps queue-depth
+//! routing and fleet telemetry local and cheap; `live_workers` doubles as a
+//! 0/1 reachability gauge. [`RemoteShard::fetch_stats`] does a synchronous
+//! Stats RPC when the server's own counters are wanted.
+
+use std::collections::HashMap;
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering::Relaxed};
+use std::sync::mpsc::{sync_channel, RecvTimeoutError, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::request::{response_slot, ResponseTx};
+use crate::coordinator::{CoordinatorStats, Rejected, Reply, Response};
+use crate::dnn::models::CnnModel;
+use crate::error::RemoteErrorKind;
+use crate::metrics::ShardTelemetry;
+use crate::net::wire::{self, classify_io, remote_err, Frame, Opcode};
+use crate::net::{configure_stream, sleep_sliced, NetConfig, PollRead};
+use crate::{Error, Result};
+
+/// One in-flight request awaiting its reply frame.
+struct Pending {
+    reply: ResponseTx,
+    deadline: Instant,
+    enqueued: Instant,
+    /// Pings/pongs stay out of the request/completed/failed counters,
+    /// mirroring the local shard contract (probing never skews routing).
+    counts: bool,
+}
+
+/// An established connection: the writer half plus its reader thread.
+struct Conn {
+    writer: TcpStream,
+    generation: u64,
+    reader: Option<JoinHandle<()>>,
+}
+
+struct RemoteInner {
+    addr: SocketAddr,
+    label: String,
+    cfg: NetConfig,
+    stats: Arc<CoordinatorStats>,
+    conn: Mutex<Option<Conn>>,
+    pending: Mutex<HashMap<u64, Pending>>,
+    pending_stats: Mutex<HashMap<u64, SyncSender<ShardTelemetry>>>,
+    next_id: AtomicU64,
+    generations: AtomicU64,
+    missed_pongs: AtomicU32,
+    stop: AtomicBool,
+    /// Reader threads of torn-down generations, joined at disconnect so no
+    /// polling thread outlives the shard (same join discipline as the
+    /// fleet's janitor).
+    retired_readers: Mutex<Vec<JoinHandle<()>>>,
+}
+
+/// Client handle to one remote shard server. Unique owner of its reader and
+/// heartbeat threads: dropping (or [`RemoteShard::disconnect`]) stops and
+/// joins them.
+pub struct RemoteShard {
+    inner: Arc<RemoteInner>,
+    heartbeat: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl std::fmt::Debug for RemoteShard {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("RemoteShard")
+            .field("addr", &self.inner.addr)
+            .field("label", &self.inner.label)
+            .field("reachable", &self.is_reachable())
+            .finish()
+    }
+}
+
+impl RemoteShard {
+    /// Connect to a shard server, respecting `cfg.connect_timeout`. The
+    /// label is used in telemetry rollups (e.g. `remote0@127.0.0.1:7401`).
+    pub fn connect(addr: &str, label: impl Into<String>, cfg: NetConfig) -> Result<RemoteShard> {
+        let sockaddr = addr
+            .to_socket_addrs()
+            .map_err(|e| Error::Config(format!("bad remote address {addr:?}: {e}")))?
+            .next()
+            .ok_or_else(|| Error::Config(format!("remote address {addr:?} resolves to nothing")))?;
+        let inner = Arc::new(RemoteInner {
+            addr: sockaddr,
+            label: label.into(),
+            cfg,
+            stats: Arc::new(CoordinatorStats::default()),
+            conn: Mutex::new(None),
+            pending: Mutex::new(HashMap::new()),
+            pending_stats: Mutex::new(HashMap::new()),
+            next_id: AtomicU64::new(1),
+            generations: AtomicU64::new(0),
+            missed_pongs: AtomicU32::new(0),
+            stop: AtomicBool::new(false),
+            retired_readers: Mutex::new(Vec::new()),
+        });
+        inner.establish()?;
+        let heartbeat = if inner.cfg.heartbeat_interval > Duration::ZERO {
+            let hb = inner.clone();
+            Some(
+                std::thread::Builder::new()
+                    .name(format!("remote-heartbeat-{}", inner.label))
+                    .spawn(move || hb.heartbeat_loop())
+                    .map_err(|e| Error::Runtime(format!("spawn heartbeat: {e}")))?,
+            )
+        } else {
+            None
+        };
+        Ok(RemoteShard { inner, heartbeat: Mutex::new(heartbeat) })
+    }
+
+    /// Telemetry label.
+    pub fn label(&self) -> &str {
+        &self.inner.label
+    }
+
+    /// Resolved peer address.
+    pub fn addr(&self) -> SocketAddr {
+        self.inner.addr
+    }
+
+    /// Client-side serving stats (what this client routed to the peer).
+    pub fn stats(&self) -> &CoordinatorStats {
+        &self.inner.stats
+    }
+
+    /// The client-side stats behind their `Arc`.
+    pub fn stats_arc(&self) -> Arc<CoordinatorStats> {
+        self.inner.stats.clone()
+    }
+
+    /// Whether a connection is currently established (the 0/1 gauge behind
+    /// `stats().live_workers`).
+    pub fn is_reachable(&self) -> bool {
+        self.inner.stats.live_workers.load(Relaxed) > 0
+    }
+
+    /// Payload-recovering GEMM submission over the wire (see the local
+    /// [`crate::coordinator::CoordinatorHandle::try_submit_gemm`] contract).
+    pub fn try_submit_gemm(
+        &self,
+        artifact: &str,
+        a: Vec<i32>,
+        b: Vec<i32>,
+    ) -> std::result::Result<Response, Rejected<(Vec<i32>, Vec<i32>)>> {
+        let payload = wire::encode_gemm(artifact, &a, &b);
+        match self.inner.send_submit(Opcode::SubmitGemm, payload) {
+            Ok(rx) => Ok(rx),
+            Err(error) => Err(Rejected { error, payload: (a, b) }),
+        }
+    }
+
+    /// Payload-recovering MLP submission over the wire.
+    pub fn try_submit_mlp(
+        &self,
+        row: Vec<i32>,
+    ) -> std::result::Result<Response, Rejected<Vec<i32>>> {
+        let payload = wire::encode_mlp(&row);
+        match self.inner.send_submit(Opcode::SubmitMlp, payload) {
+            Ok(rx) => Ok(rx),
+            Err(error) => Err(Rejected { error, payload: row }),
+        }
+    }
+
+    /// Payload-recovering CNN submission over the wire (the model ships as
+    /// trace text; see [`wire::encode_cnn`]).
+    pub fn try_submit_cnn(
+        &self,
+        model: CnnModel,
+        input: Vec<i32>,
+    ) -> std::result::Result<Response, Rejected<(CnnModel, Vec<i32>)>> {
+        let payload = wire::encode_cnn(&model, &input);
+        match self.inner.send_submit(Opcode::SubmitCnn, payload) {
+            Ok(rx) => Ok(rx),
+            Err(error) => Err(Rejected { error, payload: (model, input) }),
+        }
+    }
+
+    /// End-to-end health probe: a Ping frame the server routes through its
+    /// worker pool. `Ok` proves the peer serves; pings stay out of the
+    /// request counters on both sides.
+    pub fn ping(&self, timeout: Duration) -> Result<()> {
+        let (reply, rx) = response_slot();
+        let id = self.inner.register(reply, timeout, false);
+        self.inner.write_frame_or_fail(Frame::control(Opcode::Ping, id), false)?;
+        match rx.recv_timeout(timeout) {
+            Ok(Ok(_)) => Ok(()),
+            Ok(Err(e)) => Err(e),
+            Err(RecvTimeoutError::Timeout) => {
+                self.inner.pending.lock().unwrap().remove(&id);
+                Err(remote_err(
+                    RemoteErrorKind::Timeout,
+                    format!("{}: ping got no pong within {timeout:?}", self.inner.label),
+                ))
+            }
+            Err(RecvTimeoutError::Disconnected) => Err(remote_err(
+                RemoteErrorKind::PeerGone,
+                format!("{}: connection dropped during ping", self.inner.label),
+            )),
+        }
+    }
+
+    /// Synchronous Stats RPC: the server's own [`ShardTelemetry`] snapshot
+    /// (its counters, not this client's mirror).
+    pub fn fetch_stats(&self, timeout: Duration) -> Result<ShardTelemetry> {
+        let (tx, rx) = sync_channel(1);
+        let id = self.inner.next_id.fetch_add(1, Relaxed);
+        self.inner.pending_stats.lock().unwrap().insert(id, tx);
+        if let Err(e) = self.inner.write_frame_or_fail(Frame::control(Opcode::Stats, id), false) {
+            self.inner.pending_stats.lock().unwrap().remove(&id);
+            return Err(e);
+        }
+        rx.recv_timeout(timeout).map_err(|_| {
+            self.inner.pending_stats.lock().unwrap().remove(&id);
+            remote_err(
+                RemoteErrorKind::Timeout,
+                format!("{}: no stats reply within {timeout:?}", self.inner.label),
+            )
+        })
+    }
+
+    /// Ask the peer process to leave its serve loop (CI / orderly teardown).
+    /// Best-effort: a dead peer is already what shutdown wanted.
+    pub fn request_server_shutdown(&self) -> Result<()> {
+        self.inner.write_frame_or_fail(Frame::control(Opcode::Shutdown, 0), false)
+    }
+
+    /// Tear down and re-establish the connection with bounded, jittered
+    /// exponential backoff ([`NetConfig::backoff_delay`]). This is the
+    /// revival path: the fleet janitor calls it (via the router) when the
+    /// heartbeat or a peer-gone error retired this shard.
+    pub fn reconnect(&self) -> Result<()> {
+        self.inner.reconnect()
+    }
+
+    /// Stop the heartbeat, fail pending requests, close the connection, and
+    /// join every thread this shard spawned (the same join-on-shutdown
+    /// discipline as the fleet janitor — nothing is left polling).
+    pub fn disconnect(&self) {
+        self.inner.stop.store(true, Relaxed);
+        self.inner.teardown(None, RemoteErrorKind::PeerGone, "client disconnecting");
+        let hb = self.heartbeat.lock().unwrap().take();
+        if let Some(h) = hb {
+            let _ = h.join();
+        }
+        let retired: Vec<_> = self.inner.retired_readers.lock().unwrap().drain(..).collect();
+        for h in retired {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for RemoteShard {
+    fn drop(&mut self) {
+        self.disconnect();
+    }
+}
+
+impl RemoteInner {
+    /// Open a configured stream to the peer.
+    fn dial(&self) -> Result<TcpStream> {
+        let s = TcpStream::connect_timeout(&self.addr, self.cfg.connect_timeout)
+            .map_err(|e| classify_io(&e, &format!("connect {}", self.addr)))?;
+        configure_stream(&s, &self.cfg)
+            .map_err(|e| classify_io(&e, &format!("configure {}", self.addr)))?;
+        Ok(s)
+    }
+
+    /// Install a fresh connection (dial + spawn reader); marks reachable.
+    fn establish(self: &Arc<Self>) -> Result<()> {
+        let stream = self.dial()?;
+        let generation = self.generations.fetch_add(1, Relaxed) + 1;
+        let reader_stream = stream
+            .try_clone()
+            .map_err(|e| classify_io(&e, "clone stream for reader"))?;
+        let me = self.clone();
+        let reader = std::thread::Builder::new()
+            .name(format!("remote-reader-{}", self.label))
+            .spawn(move || me.reader_loop(reader_stream, generation))
+            .map_err(|e| Error::Runtime(format!("spawn reader: {e}")))?;
+        let mut conn = self.conn.lock().unwrap();
+        if let Some(old) = conn.take() {
+            let _ = old.writer.shutdown(std::net::Shutdown::Both);
+            if let Some(h) = old.reader {
+                self.retired_readers.lock().unwrap().push(h);
+            }
+        }
+        *conn = Some(Conn { writer: stream, generation, reader: Some(reader) });
+        drop(conn);
+        self.stats.live_workers.store(1, Relaxed);
+        self.missed_pongs.store(0, Relaxed);
+        Ok(())
+    }
+
+    /// Bounded backoff reconnect (see [`RemoteShard::reconnect`]).
+    fn reconnect(self: &Arc<Self>) -> Result<()> {
+        if self.stop.load(Relaxed) {
+            return Err(remote_err(RemoteErrorKind::PeerGone, "shard is shut down"));
+        }
+        let seed = wire::fnv1a(wire::FNV_OFFSET, self.label.as_bytes())
+            ^ wire::fnv1a(wire::FNV_OFFSET, format!("{}", self.addr).as_bytes());
+        let mut last = None;
+        for attempt in 0..self.cfg.reconnect_attempts.max(1) {
+            if attempt > 0 {
+                let delay = self.cfg.backoff_delay(attempt - 1, seed);
+                if !sleep_sliced(delay, || self.stop.load(Relaxed)) {
+                    return Err(remote_err(RemoteErrorKind::PeerGone, "shard is shut down"));
+                }
+            }
+            match self.establish() {
+                Ok(()) => return Ok(()),
+                Err(e) => last = Some(e),
+            }
+        }
+        Err(last.unwrap_or_else(|| {
+            remote_err(RemoteErrorKind::ConnRefused, format!("{}: reconnect failed", self.label))
+        }))
+    }
+
+    /// Register a pending entry; returns its request id.
+    fn register(&self, reply: ResponseTx, deadline: Duration, counts: bool) -> u64 {
+        let id = self.next_id.fetch_add(1, Relaxed);
+        let now = Instant::now();
+        self.pending.lock().unwrap().insert(
+            id,
+            Pending { reply, deadline: now + deadline, enqueued: now, counts },
+        );
+        id
+    }
+
+    /// Write a frame on the current connection. On failure the connection
+    /// is torn down (pending entries fail with the classified kind) and the
+    /// typed error is returned. `counted` says whether the caller already
+    /// bumped `stats.requests` for this frame (so the mirror stays exact —
+    /// same discipline as the local `send_job`).
+    fn write_frame_or_fail(&self, frame: Frame, counted: bool) -> Result<()> {
+        let mut conn = self.conn.lock().unwrap();
+        let state = match conn.as_mut() {
+            Some(s) => s,
+            None => {
+                if counted {
+                    self.stats.requests.fetch_sub(1, Relaxed);
+                }
+                return Err(remote_err(
+                    RemoteErrorKind::PeerGone,
+                    format!("{}: not connected (awaiting revival)", self.label),
+                ));
+            }
+        };
+        match wire::write_frame(&mut state.writer, &frame) {
+            Ok(()) => Ok(()),
+            Err(e) => {
+                if counted {
+                    self.stats.requests.fetch_sub(1, Relaxed);
+                }
+                let generation = state.generation;
+                drop(conn);
+                let kind = match &e {
+                    Error::Remote { kind, .. } => *kind,
+                    _ => RemoteErrorKind::PeerGone,
+                };
+                self.teardown(Some(generation), kind, "write failed");
+                Err(e)
+            }
+        }
+    }
+
+    /// Submit path shared by gemm/mlp/cnn: register slot, count, write.
+    fn send_submit(&self, opcode: Opcode, payload: Vec<u8>) -> Result<Response> {
+        let (reply, rx) = response_slot();
+        let id = self.register(reply, self.cfg.io_timeout, true);
+        self.stats.requests.fetch_add(1, Relaxed);
+        match self.write_frame_or_fail(Frame { opcode, request_id: id, payload }, true) {
+            Ok(()) => Ok(rx),
+            Err(e) => {
+                self.pending.lock().unwrap().remove(&id);
+                Err(e)
+            }
+        }
+    }
+
+    /// Fail every pending entry with a fresh `Remote { kind }` error and
+    /// drop the connection state of `generation` (or any, when `None`).
+    /// Reachability goes to 0 only for shard-retiring kinds, so a corrupt
+    /// frame resets the connection without retiring the shard.
+    fn teardown(&self, generation: Option<u64>, kind: RemoteErrorKind, why: &str) {
+        {
+            let mut conn = self.conn.lock().unwrap();
+            let matches_gen =
+                conn.as_ref().map(|c| generation.map_or(true, |g| g == c.generation));
+            if matches_gen == Some(true) {
+                if let Some(old) = conn.take() {
+                    let _ = old.writer.shutdown(std::net::Shutdown::Both);
+                    if let Some(h) = old.reader {
+                        self.retired_readers.lock().unwrap().push(h);
+                    }
+                }
+            }
+        }
+        if kind.retires_shard() {
+            self.stats.live_workers.store(0, Relaxed);
+        }
+        let drained: Vec<Pending> =
+            self.pending.lock().unwrap().drain().map(|(_, p)| p).collect();
+        for p in drained {
+            if p.counts {
+                self.stats.failed.fetch_add(1, Relaxed);
+            }
+            let _ = p.reply.send(Err(remote_err(
+                kind,
+                format!("{}: {why} with request in flight", self.label),
+            )));
+        }
+        self.pending_stats.lock().unwrap().clear();
+    }
+
+    /// Expire overdue pending entries with `Remote { Timeout }` — the
+    /// request-level deadline. Runs on the reader's idle slices, so a
+    /// stalled peer (accept-then-silence) trips `io_timeout` instead of
+    /// hanging callers, without retiring the shard.
+    fn expire_overdue(&self) {
+        let now = Instant::now();
+        let mut pending = self.pending.lock().unwrap();
+        let overdue: Vec<u64> = pending
+            .iter()
+            .filter(|(_, p)| now >= p.deadline)
+            .map(|(id, _)| *id)
+            .collect();
+        for id in overdue {
+            if let Some(p) = pending.remove(&id) {
+                if p.counts {
+                    self.stats.failed.fetch_add(1, Relaxed);
+                }
+                let _ = p.reply.send(Err(remote_err(
+                    RemoteErrorKind::Timeout,
+                    format!("{}: no reply within {:?}", self.label, self.cfg.io_timeout),
+                )));
+            }
+        }
+    }
+
+    /// Whether `generation` is still the installed connection.
+    fn is_current(&self, generation: u64) -> bool {
+        self.conn
+            .lock()
+            .unwrap()
+            .as_ref()
+            .map(|c| c.generation == generation)
+            .unwrap_or(false)
+    }
+
+    /// Per-connection reader: decode frames, fulfil pending slots, expire
+    /// deadlines between frames, classify connection death.
+    fn reader_loop(self: Arc<Self>, stream: TcpStream, generation: u64) {
+        loop {
+            let mut poll = PollRead {
+                stream: &stream,
+                keep_going: || {
+                    self.expire_overdue();
+                    !self.stop.load(Relaxed) && self.is_current(generation)
+                },
+            };
+            match wire::read_frame(&mut poll, self.cfg.max_frame_len) {
+                Ok(frame) => self.dispatch(frame),
+                Err(Error::Remote { kind: RemoteErrorKind::Timeout, .. }) => {
+                    // PollRead aborted: stopped or superseded. Exit quietly.
+                    return;
+                }
+                Err(Error::Remote { kind, .. })
+                    if matches!(
+                        kind,
+                        RemoteErrorKind::FrameCorrupt | RemoteErrorKind::VersionMismatch
+                    ) =>
+                {
+                    // Request-level kinds: fail what was in flight with the
+                    // typed error, then repair the stream in place. The
+                    // shard is only retired if the repair itself fails.
+                    self.teardown(Some(generation), kind, "stream desynchronized");
+                    if !self.stop.load(Relaxed) {
+                        if let Err(e) = self.reconnect() {
+                            let k = match &e {
+                                Error::Remote { kind, .. } => *kind,
+                                _ => RemoteErrorKind::PeerGone,
+                            };
+                            self.teardown(None, k, "reconnect after corrupt frame failed");
+                        }
+                    }
+                    return;
+                }
+                Err(_) => {
+                    // EOF / reset / killed peer: the shard is unreachable.
+                    self.teardown(Some(generation), RemoteErrorKind::PeerGone, "peer gone");
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Route one inbound frame to its pending slot.
+    fn dispatch(&self, frame: Frame) {
+        match frame.opcode {
+            Opcode::Reply => {
+                let entry = self.pending.lock().unwrap().remove(&frame.request_id);
+                let Some(p) = entry else { return }; // expired or stale
+                let outcome = match wire::decode_reply(&frame.payload) {
+                    Ok(o) => o,
+                    Err(e) => Err(e),
+                };
+                if p.counts {
+                    match &outcome {
+                        Ok(_) => {
+                            self.stats.completed.fetch_add(1, Relaxed);
+                            self.stats.record_latency(p.enqueued.elapsed().as_secs_f64());
+                        }
+                        Err(_) => {
+                            self.stats.failed.fetch_add(1, Relaxed);
+                        }
+                    }
+                }
+                let _ = p.reply.send(outcome);
+            }
+            Opcode::Pong => {
+                self.missed_pongs.store(0, Relaxed);
+                if let Some(p) = self.pending.lock().unwrap().remove(&frame.request_id) {
+                    let _ = p.reply.send(Ok(Reply::bare(Vec::new())));
+                }
+            }
+            Opcode::Stats => {
+                if let Some(tx) = self.pending_stats.lock().unwrap().remove(&frame.request_id)
+                {
+                    if let Ok(t) = wire::decode_stats(&frame.payload) {
+                        let _ = tx.send(t);
+                    }
+                }
+            }
+            // A server never sends submits/pings/shutdowns; ignore stale or
+            // confused frames rather than killing a healthy connection.
+            _ => {}
+        }
+    }
+
+    /// Heartbeat: ping on a cadence; crossing the missed-pong threshold
+    /// retires the shard (`PeerGone` → fleet failover) until a revival
+    /// reconnects. Reconnection is deliberately *not* attempted here — the
+    /// fleet janitor owns revival, so health marking and healing stay
+    /// separate (and a stopped fleet cannot be resurrected by a stray
+    /// heartbeat).
+    fn heartbeat_loop(self: Arc<Self>) {
+        loop {
+            if !sleep_sliced(self.cfg.heartbeat_interval, || self.stop.load(Relaxed)) {
+                return;
+            }
+            if self.conn.lock().unwrap().is_none() {
+                continue; // down; revival is the janitor's job
+            }
+            let (reply, rx) = response_slot();
+            let id = self.register(reply, self.cfg.io_timeout, false);
+            let sent = self.write_frame_or_fail(Frame::control(Opcode::Ping, id), false);
+            let ponged = sent.is_ok()
+                && matches!(rx.recv_timeout(self.cfg.io_timeout), Ok(Ok(_)));
+            if ponged {
+                continue;
+            }
+            self.pending.lock().unwrap().remove(&id);
+            let missed = self.missed_pongs.fetch_add(1, Relaxed) + 1;
+            if missed >= self.cfg.missed_pong_threshold {
+                self.teardown(
+                    None,
+                    RemoteErrorKind::PeerGone,
+                    &format!("missed {missed} heartbeat pongs"),
+                );
+            }
+        }
+    }
+}

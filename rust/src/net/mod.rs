@@ -1,0 +1,223 @@
+//! Cross-host serving: wire protocol, shard server, and remote-shard client.
+//!
+//! The fleet router ([`crate::coordinator::FleetHandle`]) scales past one
+//! process by mixing *remote* shards into its slot table: a [`ShardServer`]
+//! fronts a local [`crate::coordinator::Coordinator`] (or a whole fleet) on
+//! a TCP socket, and a [`RemoteShard`] client presents the same
+//! submit / try_submit / ping / stats surface as a local shard, so routing
+//! policies, retained-payload failover, and telemetry rollup apply
+//! unchanged. Everything runs on std `TcpListener`/`TcpStream` — the crate
+//! keeps its zero-dependency discipline.
+//!
+//! Robustness contract (the reason this module exists):
+//!
+//! * every connect/read/write carries an explicit deadline ([`NetConfig`]);
+//! * reconnects use bounded exponential backoff with deterministic jitter;
+//! * failures are typed ([`crate::error::RemoteErrorKind`]) and only the
+//!   *truly unreachable* kinds (`ConnRefused`, `PeerGone`) map onto the
+//!   fleet's [`crate::Error::ShardDown`] failover signal — one corrupt
+//!   frame or one slow reply never retires a healthy shard;
+//! * heartbeat pings (missed-pong threshold) retire an unresponsive shard,
+//!   and the fleet janitor revives it by reconnecting.
+
+pub mod client;
+pub mod server;
+pub mod wire;
+
+pub use client::RemoteShard;
+pub use server::{ServeTarget, ShardServer};
+pub use wire::{Frame, Opcode, VERSION};
+
+use std::io::Read;
+use std::net::TcpStream;
+use std::time::Duration;
+
+use crate::testing::SplitMix64;
+
+/// Deadlines and limits for every remote call. `Default` is tuned for
+/// LAN-scale serving; tests shrink the timeouts to keep chaos runs fast.
+#[derive(Debug, Clone)]
+pub struct NetConfig {
+    /// Deadline for establishing a TCP connection.
+    pub connect_timeout: Duration,
+    /// Deadline for one request/reply exchange (also the socket write
+    /// timeout). A reply slower than this resolves as request-level
+    /// `Remote { Timeout }` — it does not retire the shard.
+    pub io_timeout: Duration,
+    /// Upper bound on a peer-declared payload length; larger frames are
+    /// rejected as corrupt before any allocation.
+    pub max_frame_len: usize,
+    /// Reconnect attempts per [`RemoteShard::reconnect`] call.
+    pub reconnect_attempts: u32,
+    /// First reconnect backoff; doubles per attempt (with jitter).
+    pub backoff_base: Duration,
+    /// Backoff ceiling.
+    pub backoff_max: Duration,
+    /// Heartbeat ping cadence; `Duration::ZERO` disables the heartbeat
+    /// thread (health is then driven by per-request errors only).
+    pub heartbeat_interval: Duration,
+    /// Consecutive missed pongs that retire the shard (`PeerGone`).
+    pub missed_pong_threshold: u32,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            connect_timeout: Duration::from_secs(2),
+            io_timeout: Duration::from_secs(5),
+            max_frame_len: 64 << 20,
+            reconnect_attempts: 5,
+            backoff_base: Duration::from_millis(50),
+            backoff_max: Duration::from_secs(2),
+            heartbeat_interval: Duration::ZERO,
+            missed_pong_threshold: 3,
+        }
+    }
+}
+
+impl NetConfig {
+    /// Builder: request/reply deadline.
+    pub fn with_io_timeout(mut self, t: Duration) -> Self {
+        self.io_timeout = t;
+        self
+    }
+
+    /// Builder: connect deadline.
+    pub fn with_connect_timeout(mut self, t: Duration) -> Self {
+        self.connect_timeout = t;
+        self
+    }
+
+    /// Builder: enable the heartbeat at `interval` with the given
+    /// missed-pong threshold.
+    pub fn with_heartbeat(mut self, interval: Duration, missed_pong_threshold: u32) -> Self {
+        self.heartbeat_interval = interval;
+        self.missed_pong_threshold = missed_pong_threshold.max(1);
+        self
+    }
+
+    /// Builder: reconnect budget (attempts, first backoff, ceiling).
+    pub fn with_backoff(mut self, attempts: u32, base: Duration, max: Duration) -> Self {
+        self.reconnect_attempts = attempts.max(1);
+        self.backoff_base = base;
+        self.backoff_max = max;
+        self
+    }
+
+    /// Jittered exponential backoff delay before reconnect `attempt`
+    /// (0-based): `base · 2^attempt`, capped at `backoff_max`, scaled into
+    /// `[0.5, 1.0)` by a deterministic per-peer jitter stream so a fleet of
+    /// clients reconnecting to the same reborn server does not stampede in
+    /// lockstep.
+    pub fn backoff_delay(&self, attempt: u32, jitter_seed: u64) -> Duration {
+        let exp = self
+            .backoff_base
+            .saturating_mul(1u32 << attempt.min(16))
+            .min(self.backoff_max);
+        let mut rng = SplitMix64::new(jitter_seed ^ (attempt as u64).wrapping_mul(0x9E37));
+        let frac = (rng.next_u64() >> 11) as f64 / (1u64 << 53) as f64; // [0,1)
+        exp.mul_f64(0.5 + 0.5 * frac)
+    }
+}
+
+/// How often blocked socket reads wake up to run housekeeping (deadline
+/// expiry, stop-flag checks). This is the granularity of stall detection,
+/// not a request deadline.
+pub(crate) const POLL_SLICE: Duration = Duration::from_millis(25);
+
+/// Configure a freshly connected stream for framed serving: no Nagle
+/// batching on small frames, sliced read timeout (see [`POLL_SLICE`]), and
+/// the config's write deadline.
+pub(crate) fn configure_stream(s: &TcpStream, cfg: &NetConfig) -> std::io::Result<()> {
+    s.set_nodelay(true)?;
+    s.set_read_timeout(Some(POLL_SLICE))?;
+    s.set_write_timeout(Some(cfg.io_timeout))?;
+    Ok(())
+}
+
+/// `Read` adapter over a poll-timeout socket: transparently retries
+/// `WouldBlock`/`TimedOut` reads, invoking `keep_going` on each idle slice.
+/// Returning `false` from the callback aborts the read with `TimedOut`
+/// (surfaced by [`wire::read_frame`] as `Remote { Timeout }`). A single
+/// `read` consumes nothing when it times out, so retrying here keeps
+/// `read_exact` framing intact — the stream never desynchronizes across
+/// idle slices.
+pub(crate) struct PollRead<'a, F: FnMut() -> bool> {
+    pub stream: &'a TcpStream,
+    pub keep_going: F,
+}
+
+impl<F: FnMut() -> bool> Read for PollRead<'_, F> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        loop {
+            match self.stream.read(buf) {
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    if !(self.keep_going)() {
+                        return Err(std::io::Error::new(
+                            std::io::ErrorKind::TimedOut,
+                            "read abandoned (stop or deadline)",
+                        ));
+                    }
+                }
+                // Retry EINTR like WouldBlock: nothing was consumed.
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                r => return r,
+            }
+        }
+    }
+}
+
+/// Sleep `total` in [`POLL_SLICE`] slices, returning early (false) when
+/// `stop` reports true. Returns true when the full duration elapsed.
+pub(crate) fn sleep_sliced(total: Duration, mut stop: impl FnMut() -> bool) -> bool {
+    let mut left = total;
+    while left > Duration::ZERO {
+        if stop() {
+            return false;
+        }
+        let step = left.min(POLL_SLICE);
+        std::thread::sleep(step);
+        left = left.saturating_sub(step);
+    }
+    !stop()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_grows_and_caps() {
+        let cfg = NetConfig::default().with_backoff(
+            8,
+            Duration::from_millis(10),
+            Duration::from_millis(500),
+        );
+        let d0 = cfg.backoff_delay(0, 1);
+        let d3 = cfg.backoff_delay(3, 1);
+        let d12 = cfg.backoff_delay(12, 1);
+        assert!(d0 >= Duration::from_millis(5) && d0 < Duration::from_millis(10));
+        assert!(d3 > d0, "backoff must grow: {d0:?} vs {d3:?}");
+        assert!(d12 <= Duration::from_millis(500), "capped at backoff_max");
+    }
+
+    #[test]
+    fn backoff_jitter_is_deterministic_per_seed() {
+        let cfg = NetConfig::default();
+        assert_eq!(cfg.backoff_delay(2, 77), cfg.backoff_delay(2, 77));
+        assert_ne!(cfg.backoff_delay(2, 77), cfg.backoff_delay(2, 78));
+    }
+
+    #[test]
+    fn sliced_sleep_stops_early() {
+        let t0 = std::time::Instant::now();
+        let done = sleep_sliced(Duration::from_secs(30), || true);
+        assert!(!done);
+        assert!(t0.elapsed() < Duration::from_secs(1));
+    }
+}

@@ -1,0 +1,368 @@
+//! TCP shard server: fronts a local [`Coordinator`] (or a whole fleet) on a
+//! socket so remote [`super::RemoteShard`] clients can submit work.
+//!
+//! Threading model (all joined on [`ShardServer::shutdown`] — the same
+//! join-on-shutdown discipline the fleet janitor follows):
+//!
+//! * one *accept* thread polls the nonblocking listener against a stop flag;
+//! * one *reader* thread per connection decodes inbound frames;
+//! * one short-lived *waiter* thread per submitted request blocks on the
+//!   coordinator's response slot and writes the encoded reply back through a
+//!   shared, mutex-serialized writer (replies may complete out of order —
+//!   the `request_id` correlates them client-side).
+//!
+//! Failure policy: a corrupt or version-skewed inbound frame means the
+//! stream can no longer be trusted (framing may be desynchronized), so the
+//! server closes that connection — the client reconnects and resubmits.
+//! Request-level failures (unknown artifact, shape mismatch, shard down)
+//! travel back as typed error replies instead.
+
+use std::collections::HashMap;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering::Relaxed};
+use std::sync::{Arc, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::Duration;
+
+use crate::coordinator::{CoordinatorHandle, FleetHandle, Reply, Response, RetryingSlot};
+use crate::dnn::models::CnnModel;
+use crate::metrics::ShardTelemetry;
+use crate::{Error, Result};
+
+use super::wire::{self, Frame, Opcode};
+use super::{configure_stream, NetConfig, PollRead, POLL_SLICE};
+
+/// What a [`ShardServer`] serves: one coordinator, or a whole local fleet
+/// (in which case the server's *internal* failover runs before a failure
+/// ever crosses the wire — only a fleet-exhausted `ShardDown` reaches the
+/// client, which is exactly when the client should fail over elsewhere).
+pub enum ServeTarget {
+    /// Serve a single coordinator.
+    Coordinator(CoordinatorHandle),
+    /// Serve a fleet handle; submits use retained-payload retrying.
+    Fleet(FleetHandle),
+}
+
+/// In-flight server-side request: either a plain response slot or a
+/// fleet retrying slot (which resubmits internally on shard death).
+enum InFlight {
+    Slot(Response),
+    Retry(RetryingSlot),
+}
+
+impl InFlight {
+    fn wait(self) -> Result<Reply> {
+        match self {
+            InFlight::Slot(rx) => match rx.recv() {
+                Ok(outcome) => outcome,
+                Err(_) => Err(Error::Coordinator(
+                    "response dropped (worker crashed mid-request?)".into(),
+                )),
+            },
+            InFlight::Retry(slot) => slot.recv(),
+        }
+    }
+}
+
+impl ServeTarget {
+    fn submit_gemm(&self, artifact: &str, a: Vec<i32>, b: Vec<i32>) -> Result<InFlight> {
+        match self {
+            ServeTarget::Coordinator(h) => h.submit_gemm(artifact, a, b).map(InFlight::Slot),
+            ServeTarget::Fleet(f) => f.submit_gemm_retrying(artifact, a, b).map(InFlight::Retry),
+        }
+    }
+
+    fn submit_mlp(&self, row: Vec<i32>) -> Result<InFlight> {
+        match self {
+            ServeTarget::Coordinator(h) => h.submit_mlp(row).map(InFlight::Slot),
+            ServeTarget::Fleet(f) => f.submit_mlp_retrying(row).map(InFlight::Retry),
+        }
+    }
+
+    fn submit_cnn(&self, model: CnnModel, input: Vec<i32>) -> Result<InFlight> {
+        match self {
+            ServeTarget::Coordinator(h) => h.submit_cnn(model, input).map(InFlight::Slot),
+            ServeTarget::Fleet(f) => f.submit_cnn_retrying(model, input).map(InFlight::Retry),
+        }
+    }
+
+    fn ping(&self, timeout: Duration) -> Result<()> {
+        match self {
+            ServeTarget::Coordinator(h) => h.ping(timeout),
+            ServeTarget::Fleet(f) => f.ping(timeout),
+        }
+    }
+
+    /// One telemetry snapshot for the whole target. A fleet rolls its shards
+    /// up into a single pseudo-shard so the wire format stays uniform.
+    fn telemetry(&self) -> ShardTelemetry {
+        match self {
+            ServeTarget::Coordinator(h) => ShardTelemetry::capture("served", h.stats()),
+            ServeTarget::Fleet(f) => {
+                let t = f.telemetry();
+                let mut roll = ShardTelemetry {
+                    label: format!("fleet({} shards)", t.shards.len()),
+                    ..ShardTelemetry::default()
+                };
+                for s in &t.shards {
+                    roll.requests += s.requests;
+                    roll.completed += s.completed;
+                    roll.failed += s.failed;
+                    roll.batches += s.batches;
+                    roll.cnn_frames += s.cnn_frames;
+                    roll.cnn_batches += s.cnn_batches;
+                    roll.sim_reports += s.sim_reports;
+                    roll.sim_latency_s += s.sim_latency_s;
+                    roll.energy_j += s.energy_j;
+                    roll.lanes += s.lanes;
+                    roll.noise_events += s.noise_events;
+                    roll.live_workers += s.live_workers;
+                    roll.revivals += s.revivals;
+                }
+                roll
+            }
+        }
+    }
+}
+
+struct ServerInner {
+    target: ServeTarget,
+    cfg: NetConfig,
+    listener: TcpListener,
+    stop: AtomicBool,
+    /// Parsed-model cache keyed by trace text: `parse_trace` leaks one name
+    /// string per distinct model, which this cache amortizes to once.
+    models: Mutex<HashMap<String, CnnModel>>,
+}
+
+/// TCP front for a [`ServeTarget`]. Bind with [`ShardServer::start`]; stop
+/// with [`ShardServer::shutdown`] (joins every spawned thread).
+pub struct ShardServer {
+    inner: Arc<ServerInner>,
+    local_addr: SocketAddr,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl ShardServer {
+    /// Bind `listen` (e.g. `127.0.0.1:0` for an OS-assigned port) and start
+    /// accepting connections.
+    pub fn start(listen: &str, target: ServeTarget, cfg: NetConfig) -> Result<ShardServer> {
+        let listener = TcpListener::bind(listen)
+            .map_err(|e| Error::Config(format!("bind {listen}: {e}")))?;
+        listener.set_nonblocking(true)?;
+        let local_addr = listener.local_addr()?;
+        let inner = Arc::new(ServerInner {
+            target,
+            cfg,
+            listener,
+            stop: AtomicBool::new(false),
+            models: Mutex::new(HashMap::new()),
+        });
+        let accept = {
+            let inner = inner.clone();
+            thread::Builder::new()
+                .name(format!("spoga-accept@{local_addr}"))
+                .spawn(move || accept_loop(inner))
+                .map_err(|e| Error::Runtime(format!("spawn accept thread: {e}")))?
+        };
+        Ok(ShardServer { inner, local_addr, accept: Some(accept) })
+    }
+
+    /// The bound address (resolves port 0 to the OS-assigned port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Whether a peer requested shutdown (the [`Opcode::Shutdown`] frame) or
+    /// [`ShardServer::request_stop`] ran. The CLI serve loop polls this.
+    pub fn stop_requested(&self) -> bool {
+        self.inner.stop.load(Relaxed)
+    }
+
+    /// Ask the accept loop to wind down without joining yet.
+    pub fn request_stop(&self) {
+        self.inner.stop.store(true, Relaxed);
+    }
+
+    /// Stop accepting, close the listener, and join the accept thread (which
+    /// in turn joins every connection and waiter thread it spawned).
+    pub fn shutdown(mut self) {
+        self.halt();
+    }
+
+    fn halt(&mut self) {
+        self.inner.stop.store(true, Relaxed);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ShardServer {
+    fn drop(&mut self) {
+        self.halt();
+    }
+}
+
+fn accept_loop(inner: Arc<ServerInner>) {
+    let mut conns: Vec<JoinHandle<()>> = Vec::new();
+    while !inner.stop.load(Relaxed) {
+        match inner.listener.accept() {
+            Ok((stream, peer)) => {
+                if configure_stream(&stream, &inner.cfg).is_err() {
+                    continue; // peer vanished between accept and setup
+                }
+                let inner2 = inner.clone();
+                if let Ok(h) = thread::Builder::new()
+                    .name(format!("spoga-conn@{peer}"))
+                    .spawn(move || handle_conn(inner2, stream))
+                {
+                    conns.push(h);
+                }
+                conns.retain(|h| !h.is_finished());
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                thread::sleep(POLL_SLICE);
+            }
+            Err(_) => thread::sleep(POLL_SLICE), // transient accept failure
+        }
+    }
+    for h in conns {
+        let _ = h.join();
+    }
+}
+
+fn handle_conn(inner: Arc<ServerInner>, stream: TcpStream) {
+    let writer = match stream.try_clone() {
+        Ok(w) => Arc::new(Mutex::new(w)),
+        Err(_) => return,
+    };
+    let mut waiters: Vec<JoinHandle<()>> = Vec::new();
+    loop {
+        let mut poll =
+            PollRead { stream: &stream, keep_going: || !inner.stop.load(Relaxed) };
+        match wire::read_frame(&mut poll, inner.cfg.max_frame_len) {
+            Ok(frame) => {
+                if !dispatch(&inner, frame, &writer, &mut waiters) {
+                    break;
+                }
+                waiters.retain(|h| !h.is_finished());
+            }
+            // Timeout here only means the stop flag tripped mid-idle; any
+            // other failure (corrupt frame, version skew, EOF) means the
+            // stream cannot be trusted or the peer is gone — close it and
+            // let the client reconnect with clean framing.
+            Err(_) => break,
+        }
+    }
+    let _ = stream.shutdown(std::net::Shutdown::Both);
+    for h in waiters {
+        let _ = h.join();
+    }
+}
+
+/// Handle one inbound frame. Returns false when the connection (or the whole
+/// server, on [`Opcode::Shutdown`]) should wind down.
+fn dispatch(
+    inner: &Arc<ServerInner>,
+    frame: Frame,
+    writer: &Arc<Mutex<TcpStream>>,
+    waiters: &mut Vec<JoinHandle<()>>,
+) -> bool {
+    let id = frame.request_id;
+    match frame.opcode {
+        Opcode::SubmitGemm => {
+            let submitted = wire::decode_gemm(&frame.payload)
+                .and_then(|(artifact, a, b)| inner.target.submit_gemm(&artifact, a, b));
+            spawn_reply_waiter(submitted, id, writer, waiters);
+        }
+        Opcode::SubmitMlp => {
+            let submitted = wire::decode_mlp(&frame.payload)
+                .and_then(|row| inner.target.submit_mlp(row));
+            spawn_reply_waiter(submitted, id, writer, waiters);
+        }
+        Opcode::SubmitCnn => {
+            let submitted = wire::decode_cnn(&frame.payload).and_then(|(trace, input)| {
+                let model = cached_model(inner, &trace)?;
+                inner.target.submit_cnn(model, input)
+            });
+            spawn_reply_waiter(submitted, id, writer, waiters);
+        }
+        Opcode::Ping => {
+            let inner2 = inner.clone();
+            let writer2 = writer.clone();
+            spawn_waiter(waiters, "spoga-pong", move || {
+                match inner2.target.ping(inner2.cfg.io_timeout) {
+                    Ok(()) => write_back(&writer2, &Frame::control(Opcode::Pong, id)),
+                    Err(e) => write_reply(&writer2, id, &Err(e)),
+                }
+            });
+        }
+        Opcode::Stats => {
+            let snapshot = inner.target.telemetry();
+            write_back(
+                writer,
+                &Frame { opcode: Opcode::Stats, request_id: id, payload: wire::encode_stats(&snapshot) },
+            );
+        }
+        Opcode::Shutdown => {
+            inner.stop.store(true, Relaxed);
+            return false;
+        }
+        // Server-bound streams never carry these; ignore rather than kill
+        // the connection (they framed correctly, so framing is intact).
+        Opcode::Reply | Opcode::Pong => {}
+    }
+    true
+}
+
+/// Look up (or parse-and-cache) the model for a trace text. The cache bounds
+/// `parse_trace`'s per-distinct-model name leak to once per model.
+fn cached_model(inner: &ServerInner, trace: &str) -> Result<CnnModel> {
+    let mut cache = inner.models.lock().unwrap_or_else(|p| p.into_inner());
+    if let Some(m) = cache.get(trace) {
+        return Ok(m.clone());
+    }
+    let model = wire::cnn_from_trace(trace)?;
+    cache.insert(trace.to_string(), model.clone());
+    Ok(model)
+}
+
+/// Spawn a waiter that resolves `submitted` and writes the reply frame. A
+/// submit-time error still answers the client (typed error reply) — silence
+/// would make the client burn its full `io_timeout` for a known failure.
+fn spawn_reply_waiter(
+    submitted: Result<InFlight>,
+    id: u64,
+    writer: &Arc<Mutex<TcpStream>>,
+    waiters: &mut Vec<JoinHandle<()>>,
+) {
+    let writer = writer.clone();
+    match submitted {
+        Ok(inflight) => spawn_waiter(waiters, "spoga-reply", move || {
+            let outcome = inflight.wait();
+            write_reply(&writer, id, &outcome);
+        }),
+        Err(e) => write_reply(&writer, id, &Err(e)),
+    }
+}
+
+fn spawn_waiter(waiters: &mut Vec<JoinHandle<()>>, name: &str, f: impl FnOnce() + Send + 'static) {
+    if let Ok(h) = thread::Builder::new().name(name.to_string()).spawn(f) {
+        waiters.push(h);
+    }
+}
+
+fn write_reply(writer: &Arc<Mutex<TcpStream>>, id: u64, outcome: &Result<Reply>) {
+    write_back(
+        writer,
+        &Frame { opcode: Opcode::Reply, request_id: id, payload: wire::encode_reply(outcome) },
+    );
+}
+
+/// Write one frame through the shared writer. Errors are swallowed: a dead
+/// connection is detected (and torn down) by the reader side.
+fn write_back(writer: &Arc<Mutex<TcpStream>>, frame: &Frame) {
+    let mut w = writer.lock().unwrap_or_else(|p| p.into_inner());
+    let _ = wire::write_frame(&mut *w, frame);
+}

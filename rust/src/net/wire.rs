@@ -1,0 +1,697 @@
+//! Length-prefixed, checksummed binary framing for cross-host serving.
+//!
+//! Zero-dependency discipline: frames travel over std `TcpStream`s and are
+//! encoded by hand (no serde). Every frame is
+//!
+//! ```text
+//! magic      u32  "SPOG" (little-endian byte order throughout)
+//! version    u16  wire-protocol version (VERSION)
+//! opcode     u8   Opcode discriminant
+//! reserved   u8   0 (future flags; checksummed so it cannot drift silently)
+//! request_id u64  correlates replies with in-flight submits
+//! payload_len u32 bytes of payload that follow the header
+//! checksum   u64  FNV-1a over version..payload_len header bytes + payload
+//! payload    [u8; payload_len]
+//! ```
+//!
+//! [`read_frame`] maps every failure onto the typed
+//! [`crate::error::RemoteErrorKind`] taxonomy: garbage magic / bad checksum /
+//! oversized length → `FrameCorrupt`, foreign version → `VersionMismatch`,
+//! EOF or reset → `PeerGone`, an expired socket deadline → `Timeout`. The
+//! caller (not this module) decides which kinds retire a shard — see
+//! [`crate::error::RemoteErrorKind::retires_shard`].
+
+use std::io::{Read, Write};
+
+use crate::dnn::trace::{parse_trace, to_trace};
+use crate::dnn::models::CnnModel;
+use crate::error::RemoteErrorKind;
+use crate::metrics::ShardTelemetry;
+use crate::runtime::backend::ExecReport;
+use crate::runtime::cnnrun::LayerReport;
+use crate::coordinator::Reply;
+use crate::{Error, Result};
+
+/// Frame magic: `b"SPOG"` read as a little-endian u32.
+pub const MAGIC: u32 = u32::from_le_bytes(*b"SPOG");
+/// Wire-protocol version. Bump on any layout change.
+pub const VERSION: u16 = 1;
+/// Bytes in the fixed frame header.
+pub const HEADER_LEN: usize = 28;
+
+/// Frame opcodes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Opcode {
+    /// Client → server: raw GEMM against a named artifact.
+    SubmitGemm = 1,
+    /// Client → server: single-row MLP inference.
+    SubmitMlp = 2,
+    /// Client → server: whole-CNN inference (model ships as trace text).
+    SubmitCnn = 3,
+    /// Server → client: result for the identified request.
+    Reply = 4,
+    /// Client → server: end-to-end health probe (routed through the pool).
+    Ping = 5,
+    /// Server → client: answer to [`Opcode::Ping`].
+    Pong = 6,
+    /// Client → server: stats request; server answers with the same opcode
+    /// carrying a [`ShardTelemetry`] snapshot.
+    Stats = 7,
+    /// Client → server: stop accepting connections and exit the serve loop.
+    Shutdown = 8,
+}
+
+impl Opcode {
+    fn from_u8(v: u8) -> Option<Opcode> {
+        Some(match v {
+            1 => Opcode::SubmitGemm,
+            2 => Opcode::SubmitMlp,
+            3 => Opcode::SubmitCnn,
+            4 => Opcode::Reply,
+            5 => Opcode::Ping,
+            6 => Opcode::Pong,
+            7 => Opcode::Stats,
+            8 => Opcode::Shutdown,
+            _ => return None,
+        })
+    }
+}
+
+/// One decoded frame.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Frame {
+    /// What this frame carries.
+    pub opcode: Opcode,
+    /// Request correlation id (0 for control frames that need none).
+    pub request_id: u64,
+    /// Opcode-specific payload bytes (see the `encode_*`/`decode_*` pairs).
+    pub payload: Vec<u8>,
+}
+
+impl Frame {
+    /// A payload-free control frame.
+    pub fn control(opcode: Opcode, request_id: u64) -> Frame {
+        Frame { opcode, request_id, payload: Vec::new() }
+    }
+}
+
+/// FNV-1a over a byte slice, continuing from `h` (seed with [`FNV_OFFSET`]).
+pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01B3;
+
+/// Fold bytes into a running FNV-1a hash.
+pub fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+fn frame_checksum(version: u16, opcode: u8, reserved: u8, request_id: u64, payload: &[u8]) -> u64 {
+    let mut h = fnv1a(FNV_OFFSET, &version.to_le_bytes());
+    h = fnv1a(h, &[opcode, reserved]);
+    h = fnv1a(h, &request_id.to_le_bytes());
+    h = fnv1a(h, &(payload.len() as u32).to_le_bytes());
+    fnv1a(h, payload)
+}
+
+/// Remote-error constructor shorthand.
+pub(crate) fn remote_err(kind: RemoteErrorKind, detail: impl Into<String>) -> Error {
+    Error::Remote { kind, detail: detail.into() }
+}
+
+/// Classify an I/O failure during a frame read/write into the remote
+/// taxonomy: deadline expiry is `Timeout`; everything else means the
+/// connection is no longer usable (`PeerGone`).
+pub fn classify_io(e: &std::io::Error, what: &str) -> Error {
+    use std::io::ErrorKind::*;
+    let kind = match e.kind() {
+        WouldBlock | TimedOut => RemoteErrorKind::Timeout,
+        ConnectionRefused => RemoteErrorKind::ConnRefused,
+        _ => RemoteErrorKind::PeerGone,
+    };
+    remote_err(kind, format!("{what}: {e}"))
+}
+
+/// Serialize and write one frame.
+pub fn write_frame(w: &mut impl Write, frame: &Frame) -> Result<()> {
+    let opcode = frame.opcode as u8;
+    let checksum = frame_checksum(VERSION, opcode, 0, frame.request_id, &frame.payload);
+    let mut buf = Vec::with_capacity(HEADER_LEN + frame.payload.len());
+    buf.extend_from_slice(&MAGIC.to_le_bytes());
+    buf.extend_from_slice(&VERSION.to_le_bytes());
+    buf.push(opcode);
+    buf.push(0); // reserved
+    buf.extend_from_slice(&frame.request_id.to_le_bytes());
+    buf.extend_from_slice(&(frame.payload.len() as u32).to_le_bytes());
+    buf.extend_from_slice(&checksum.to_le_bytes());
+    buf.extend_from_slice(&frame.payload);
+    w.write_all(&buf).map_err(|e| classify_io(&e, "write frame"))?;
+    w.flush().map_err(|e| classify_io(&e, "flush frame"))?;
+    Ok(())
+}
+
+/// Read and validate one frame. `max_frame_len` bounds the payload a peer
+/// may make us allocate (a corrupt or hostile length field must not OOM the
+/// process).
+pub fn read_frame(r: &mut impl Read, max_frame_len: usize) -> Result<Frame> {
+    let mut header = [0u8; HEADER_LEN];
+    r.read_exact(&mut header).map_err(|e| classify_io(&e, "read frame header"))?;
+    let magic = u32::from_le_bytes(header[0..4].try_into().unwrap());
+    if magic != MAGIC {
+        return Err(remote_err(
+            RemoteErrorKind::FrameCorrupt,
+            format!("bad magic {magic:#010x} (stream desynchronized)"),
+        ));
+    }
+    let version = u16::from_le_bytes(header[4..6].try_into().unwrap());
+    if version != VERSION {
+        return Err(remote_err(
+            RemoteErrorKind::VersionMismatch,
+            format!("peer speaks wire v{version}, this build speaks v{VERSION}"),
+        ));
+    }
+    let opcode_raw = header[6];
+    let reserved = header[7];
+    let request_id = u64::from_le_bytes(header[8..16].try_into().unwrap());
+    let payload_len = u32::from_le_bytes(header[16..20].try_into().unwrap()) as usize;
+    let checksum = u64::from_le_bytes(header[20..28].try_into().unwrap());
+    if payload_len > max_frame_len {
+        return Err(remote_err(
+            RemoteErrorKind::FrameCorrupt,
+            format!("payload length {payload_len} exceeds max_frame_len {max_frame_len}"),
+        ));
+    }
+    let mut payload = vec![0u8; payload_len];
+    r.read_exact(&mut payload).map_err(|e| classify_io(&e, "read frame payload"))?;
+    let expect = frame_checksum(version, opcode_raw, reserved, request_id, &payload);
+    if checksum != expect {
+        return Err(remote_err(
+            RemoteErrorKind::FrameCorrupt,
+            format!("checksum mismatch (got {checksum:#018x}, want {expect:#018x})"),
+        ));
+    }
+    let opcode = Opcode::from_u8(opcode_raw).ok_or_else(|| {
+        remote_err(RemoteErrorKind::FrameCorrupt, format!("unknown opcode {opcode_raw}"))
+    })?;
+    Ok(Frame { opcode, request_id, payload })
+}
+
+// ---------------------------------------------------------------------------
+// Payload codecs — little-endian, length-prefixed, hand-rolled.
+// ---------------------------------------------------------------------------
+
+/// Growable payload encoder.
+#[derive(Default)]
+pub struct PayloadWriter {
+    buf: Vec<u8>,
+}
+
+impl PayloadWriter {
+    /// Fresh empty payload.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Finish and take the encoded bytes.
+    pub fn finish(self) -> Vec<u8> {
+        self.buf
+    }
+
+    fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn put_f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    fn put_str(&mut self, s: &str) {
+        self.put_u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+    fn put_vec_i32(&mut self, v: &[i32]) {
+        self.put_u32(v.len() as u32);
+        for x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    fn put_vec_u64(&mut self, v: &[u64]) {
+        self.put_u32(v.len() as u32);
+        for x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+}
+
+/// Cursor-based payload decoder; every `take_*` fails with `FrameCorrupt`
+/// on truncation (the frame checksum already passed, so truncation here
+/// means an encoder bug or a forged frame, never line noise).
+pub struct PayloadReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> PayloadReader<'a> {
+    /// Decode from payload bytes.
+    pub fn new(buf: &'a [u8]) -> Self {
+        PayloadReader { buf, pos: 0 }
+    }
+
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            return Err(remote_err(
+                RemoteErrorKind::FrameCorrupt,
+                format!("payload truncated at byte {} (need {n} more)", self.pos),
+            ));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn take_u8(&mut self) -> Result<u8> {
+        Ok(self.bytes(1)?[0])
+    }
+    fn take_u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+    fn take_u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+    }
+    fn take_f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.take_u64()?))
+    }
+    fn take_str(&mut self) -> Result<String> {
+        let n = self.take_u32()? as usize;
+        let s = self.bytes(n)?;
+        String::from_utf8(s.to_vec())
+            .map_err(|_| remote_err(RemoteErrorKind::FrameCorrupt, "non-utf8 string field"))
+    }
+    fn take_vec_i32(&mut self) -> Result<Vec<i32>> {
+        let n = self.take_u32()? as usize;
+        let raw = self.bytes(n.checked_mul(4).ok_or_else(|| {
+            remote_err(RemoteErrorKind::FrameCorrupt, "i32 vector length overflow")
+        })?)?;
+        Ok(raw.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+    fn take_vec_u64(&mut self) -> Result<Vec<u64>> {
+        let n = self.take_u32()? as usize;
+        let raw = self.bytes(n.checked_mul(8).ok_or_else(|| {
+            remote_err(RemoteErrorKind::FrameCorrupt, "u64 vector length overflow")
+        })?)?;
+        Ok(raw.chunks_exact(8).map(|c| u64::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+}
+
+/// Encode a GEMM submit: artifact name + both operands.
+pub fn encode_gemm(artifact: &str, a: &[i32], b: &[i32]) -> Vec<u8> {
+    let mut w = PayloadWriter::new();
+    w.put_str(artifact);
+    w.put_vec_i32(a);
+    w.put_vec_i32(b);
+    w.finish()
+}
+
+/// Decode a GEMM submit.
+pub fn decode_gemm(payload: &[u8]) -> Result<(String, Vec<i32>, Vec<i32>)> {
+    let mut r = PayloadReader::new(payload);
+    Ok((r.take_str()?, r.take_vec_i32()?, r.take_vec_i32()?))
+}
+
+/// Encode an MLP submit: one activation row.
+pub fn encode_mlp(row: &[i32]) -> Vec<u8> {
+    let mut w = PayloadWriter::new();
+    w.put_vec_i32(row);
+    w.finish()
+}
+
+/// Decode an MLP submit.
+pub fn decode_mlp(payload: &[u8]) -> Result<Vec<i32>> {
+    PayloadReader::new(payload).take_vec_i32()
+}
+
+/// Encode a CNN submit. The model crosses the wire as trace text
+/// ([`to_trace`]) — the one textual model format the repo already
+/// round-trips — so the server rebuilds an identical [`CnnModel`] with
+/// [`parse_trace`]. Servers should cache parsed models per trace text:
+/// `parse_trace` leaks one small name string per *distinct* model (the
+/// `&'static str` name convention), which a cache amortizes to once.
+pub fn encode_cnn(model: &CnnModel, input: &[i32]) -> Vec<u8> {
+    let mut w = PayloadWriter::new();
+    w.put_str(&to_trace(model));
+    w.put_vec_i32(input);
+    w.finish()
+}
+
+/// Decode a CNN submit into (trace text, input). The caller decides when to
+/// pay the `parse_trace` name leak (see [`encode_cnn`]).
+pub fn decode_cnn(payload: &[u8]) -> Result<(String, Vec<i32>)> {
+    let mut r = PayloadReader::new(payload);
+    Ok((r.take_str()?, r.take_vec_i32()?))
+}
+
+/// Parse the trace text from [`decode_cnn`] back into a model.
+pub fn cnn_from_trace(trace: &str) -> Result<CnnModel> {
+    parse_trace(trace)
+}
+
+fn encode_report(w: &mut PayloadWriter, r: &ExecReport) {
+    w.put_f64(r.sim_latency_s);
+    w.put_f64(r.energy_j);
+    w.put_u64(r.lanes);
+    w.put_u64(r.noise_events);
+    w.put_vec_u64(&r.row_noise);
+}
+
+fn decode_report(r: &mut PayloadReader<'_>) -> Result<ExecReport> {
+    Ok(ExecReport {
+        sim_latency_s: r.take_f64()?,
+        energy_j: r.take_f64()?,
+        lanes: r.take_u64()?,
+        noise_events: r.take_u64()?,
+        row_noise: r.take_vec_u64()?,
+    })
+}
+
+// Error wire tags. Io flattens to Runtime on decode (io::Error does not
+// round-trip); everything else rebuilds its own variant so failover
+// semantics survive the hop — a server-side ShardDown must arrive as
+// ShardDown for the client fleet to fail over.
+fn encode_error(w: &mut PayloadWriter, e: &Error) {
+    let (tag, kind, msg): (u8, u8, String) = match e {
+        Error::Infeasible(m) => (0, 0, m.clone()),
+        Error::Config(m) => (1, 0, m.clone()),
+        Error::Shape(m) => (2, 0, m.clone()),
+        Error::Artifact(m) => (3, 0, m.clone()),
+        Error::Runtime(m) => (4, 0, m.clone()),
+        Error::Coordinator(m) => (5, 0, m.clone()),
+        Error::ShardDown(m) => (6, 0, m.clone()),
+        Error::Remote { kind, detail } => {
+            let k = match kind {
+                RemoteErrorKind::Timeout => 0,
+                RemoteErrorKind::ConnRefused => 1,
+                RemoteErrorKind::FrameCorrupt => 2,
+                RemoteErrorKind::VersionMismatch => 3,
+                RemoteErrorKind::PeerGone => 4,
+            };
+            (7, k, detail.clone())
+        }
+        Error::Io(e) => (8, 0, e.to_string()),
+    };
+    w.put_u8(tag);
+    w.put_u8(kind);
+    w.put_str(&msg);
+}
+
+fn decode_error(r: &mut PayloadReader<'_>) -> Result<Error> {
+    let tag = r.take_u8()?;
+    let kind = r.take_u8()?;
+    let msg = r.take_str()?;
+    Ok(match tag {
+        0 => Error::Infeasible(msg),
+        1 => Error::Config(msg),
+        2 => Error::Shape(msg),
+        3 => Error::Artifact(msg),
+        4 | 8 => Error::Runtime(msg),
+        5 => Error::Coordinator(msg),
+        6 => Error::ShardDown(msg),
+        7 => {
+            let k = match kind {
+                0 => RemoteErrorKind::Timeout,
+                1 => RemoteErrorKind::ConnRefused,
+                2 => RemoteErrorKind::FrameCorrupt,
+                3 => RemoteErrorKind::VersionMismatch,
+                4 => RemoteErrorKind::PeerGone,
+                _ => {
+                    return Err(remote_err(
+                        RemoteErrorKind::FrameCorrupt,
+                        format!("unknown remote-error kind {kind}"),
+                    ))
+                }
+            };
+            Error::Remote { kind: k, detail: msg }
+        }
+        _ => {
+            return Err(remote_err(
+                RemoteErrorKind::FrameCorrupt,
+                format!("unknown error tag {tag}"),
+            ))
+        }
+    })
+}
+
+/// Encode a request outcome (the payload of an [`Opcode::Reply`] frame).
+pub fn encode_reply(outcome: &Result<Reply>) -> Vec<u8> {
+    let mut w = PayloadWriter::new();
+    match outcome {
+        Ok(reply) => {
+            w.put_u8(0);
+            w.put_vec_i32(&reply.outputs);
+            match &reply.report {
+                Some(r) => {
+                    w.put_u8(1);
+                    encode_report(&mut w, r);
+                }
+                None => w.put_u8(0),
+            }
+            w.put_u32(reply.layers.len() as u32);
+            for l in &reply.layers {
+                w.put_str(&l.layer);
+                encode_report(&mut w, &l.report);
+            }
+        }
+        Err(e) => {
+            w.put_u8(1);
+            encode_error(&mut w, e);
+        }
+    }
+    w.finish()
+}
+
+/// Decode a request outcome.
+pub fn decode_reply(payload: &[u8]) -> Result<Result<Reply>> {
+    let mut r = PayloadReader::new(payload);
+    match r.take_u8()? {
+        0 => {
+            let outputs = r.take_vec_i32()?;
+            let report = match r.take_u8()? {
+                0 => None,
+                _ => Some(decode_report(&mut r)?),
+            };
+            let n = r.take_u32()? as usize;
+            let mut layers = Vec::with_capacity(n.min(4096));
+            for _ in 0..n {
+                layers.push(LayerReport { layer: r.take_str()?, report: decode_report(&mut r)? });
+            }
+            Ok(Ok(Reply { outputs, report, layers }))
+        }
+        1 => Ok(Err(decode_error(&mut r)?)),
+        t => Err(remote_err(RemoteErrorKind::FrameCorrupt, format!("unknown reply tag {t}"))),
+    }
+}
+
+/// Encode a [`ShardTelemetry`] snapshot (the payload of a server-side
+/// [`Opcode::Stats`] reply).
+pub fn encode_stats(t: &ShardTelemetry) -> Vec<u8> {
+    let mut w = PayloadWriter::new();
+    w.put_str(&t.label);
+    w.put_u64(t.requests);
+    w.put_u64(t.completed);
+    w.put_u64(t.failed);
+    w.put_u64(t.batches);
+    w.put_u64(t.cnn_frames);
+    w.put_u64(t.cnn_batches);
+    w.put_u64(t.sim_reports);
+    w.put_f64(t.sim_latency_s);
+    w.put_f64(t.energy_j);
+    w.put_u64(t.lanes);
+    w.put_u64(t.noise_events);
+    w.put_u64(t.live_workers);
+    w.put_u64(t.revivals);
+    w.finish()
+}
+
+/// Decode a [`ShardTelemetry`] snapshot.
+pub fn decode_stats(payload: &[u8]) -> Result<ShardTelemetry> {
+    let mut r = PayloadReader::new(payload);
+    Ok(ShardTelemetry {
+        label: r.take_str()?,
+        requests: r.take_u64()?,
+        completed: r.take_u64()?,
+        failed: r.take_u64()?,
+        batches: r.take_u64()?,
+        cnn_frames: r.take_u64()?,
+        cnn_batches: r.take_u64()?,
+        sim_reports: r.take_u64()?,
+        sim_latency_s: r.take_f64()?,
+        energy_j: r.take_f64()?,
+        lanes: r.take_u64()?,
+        noise_events: r.take_u64()?,
+        live_workers: r.take_u64()?,
+        revivals: r.take_u64()?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::layer::Layer;
+
+    fn roundtrip(frame: &Frame) -> Frame {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, frame).unwrap();
+        read_frame(&mut buf.as_slice(), 1 << 20).unwrap()
+    }
+
+    #[test]
+    fn frame_roundtrips() {
+        let f = Frame { opcode: Opcode::SubmitMlp, request_id: 42, payload: vec![1, 2, 3] };
+        assert_eq!(roundtrip(&f), f);
+        let c = Frame::control(Opcode::Ping, 7);
+        assert_eq!(roundtrip(&c), c);
+    }
+
+    #[test]
+    fn corrupt_byte_fails_checksum() {
+        let f = Frame { opcode: Opcode::Reply, request_id: 9, payload: vec![5; 64] };
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &f).unwrap();
+        let last = buf.len() - 1;
+        buf[last] ^= 0xFF; // flip one payload byte
+        let err = read_frame(&mut buf.as_slice(), 1 << 20).unwrap_err();
+        assert!(
+            matches!(err, Error::Remote { kind: RemoteErrorKind::FrameCorrupt, .. }),
+            "got {err}"
+        );
+    }
+
+    #[test]
+    fn bad_magic_is_frame_corrupt() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Frame::control(Opcode::Pong, 0)).unwrap();
+        buf[0] = b'X';
+        let err = read_frame(&mut buf.as_slice(), 1 << 20).unwrap_err();
+        assert!(matches!(err, Error::Remote { kind: RemoteErrorKind::FrameCorrupt, .. }));
+    }
+
+    #[test]
+    fn foreign_version_is_version_mismatch() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Frame::control(Opcode::Pong, 0)).unwrap();
+        buf[4] = 0xFE; // version low byte
+        let err = read_frame(&mut buf.as_slice(), 1 << 20).unwrap_err();
+        assert!(matches!(err, Error::Remote { kind: RemoteErrorKind::VersionMismatch, .. }));
+    }
+
+    #[test]
+    fn truncated_stream_is_peer_gone() {
+        let mut buf = Vec::new();
+        write_frame(
+            &mut buf,
+            &Frame { opcode: Opcode::Reply, request_id: 1, payload: vec![0; 32] },
+        )
+        .unwrap();
+        buf.truncate(buf.len() - 10);
+        let err = read_frame(&mut buf.as_slice(), 1 << 20).unwrap_err();
+        assert!(matches!(err, Error::Remote { kind: RemoteErrorKind::PeerGone, .. }));
+    }
+
+    #[test]
+    fn oversized_length_is_bounded() {
+        let f = Frame { opcode: Opcode::Reply, request_id: 1, payload: vec![0; 128] };
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &f).unwrap();
+        let err = read_frame(&mut buf.as_slice(), 64).unwrap_err();
+        assert!(matches!(err, Error::Remote { kind: RemoteErrorKind::FrameCorrupt, .. }));
+    }
+
+    #[test]
+    fn submit_payloads_roundtrip() {
+        let (name, a, b) = decode_gemm(&encode_gemm("gemm_8x8x8", &[1, -2], &[3])).unwrap();
+        assert_eq!((name.as_str(), a, b), ("gemm_8x8x8", vec![1, -2], vec![3]));
+        assert_eq!(decode_mlp(&encode_mlp(&[9, 8, -7])).unwrap(), vec![9, 8, -7]);
+        let model = CnnModel {
+            name: "tiny",
+            layers: vec![Layer::conv("stem", 4, 4, 1, 2, 3, 1, 1), Layer::fc("head", 32, 4)],
+        };
+        let (trace, input) = decode_cnn(&encode_cnn(&model, &[7; 16])).unwrap();
+        let back = cnn_from_trace(&trace).unwrap();
+        assert_eq!(back.layers, model.layers);
+        assert_eq!(back.name, "tiny");
+        assert_eq!(input, vec![7; 16]);
+    }
+
+    #[test]
+    fn reply_roundtrips_with_report_and_layers() {
+        let reply = Reply {
+            outputs: vec![1, 2, 3],
+            report: Some(ExecReport {
+                sim_latency_s: 1.5e-6,
+                energy_j: 2.5e-9,
+                lanes: 10,
+                noise_events: 3,
+                row_noise: vec![1, 0, 2],
+            }),
+            layers: vec![LayerReport {
+                layer: "conv1".into(),
+                report: ExecReport { lanes: 4, ..Default::default() },
+            }],
+        };
+        let back = decode_reply(&encode_reply(&Ok(reply.clone()))).unwrap().unwrap();
+        assert_eq!(back.outputs, reply.outputs);
+        assert_eq!(back.report, reply.report);
+        assert_eq!(back.layers.len(), 1);
+        assert_eq!(back.layers[0].layer, "conv1");
+        assert_eq!(back.layers[0].report, reply.layers[0].report);
+    }
+
+    #[test]
+    fn error_variants_survive_the_hop() {
+        for e in [
+            Error::ShardDown("pool died".into()),
+            Error::Coordinator("bad request".into()),
+            Error::Shape("8x8 vs 4x4".into()),
+            Error::Remote { kind: RemoteErrorKind::PeerGone, detail: "downstream".into() },
+        ] {
+            let text = e.to_string();
+            let back = decode_reply(&encode_reply(&Err(e))).unwrap().unwrap_err();
+            assert_eq!(back.to_string(), text);
+        }
+        // Io flattens to Runtime (io::Error cannot round-trip).
+        let io = Error::Io(std::io::Error::new(std::io::ErrorKind::Other, "disk"));
+        let back = decode_reply(&encode_reply(&Err(io))).unwrap().unwrap_err();
+        assert!(matches!(back, Error::Runtime(_)));
+    }
+
+    #[test]
+    fn stats_snapshot_roundtrips() {
+        let t = ShardTelemetry {
+            label: "shard0:software".into(),
+            requests: 100,
+            completed: 95,
+            failed: 5,
+            batches: 12,
+            cnn_frames: 7,
+            cnn_batches: 3,
+            sim_reports: 50,
+            sim_latency_s: 0.25,
+            energy_j: 1e-3,
+            lanes: 4096,
+            noise_events: 17,
+            live_workers: 2,
+            revivals: 1,
+        };
+        let back = decode_stats(&encode_stats(&t)).unwrap();
+        assert_eq!(back.label, t.label);
+        assert_eq!(
+            (back.requests, back.completed, back.failed, back.live_workers, back.revivals),
+            (100, 95, 5, 2, 1)
+        );
+        assert_eq!(back.sim_latency_s, 0.25);
+    }
+}

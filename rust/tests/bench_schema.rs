@@ -147,6 +147,27 @@ fn resilience_snapshot_keeps_schema() {
 }
 
 #[test]
+fn net_snapshot_keeps_schema() {
+    use Kind::*;
+    let rows = check_schema(
+        "BENCH_net.json",
+        "net_roundtrip",
+        &[
+            ("path", Label),
+            ("requests", Number),
+            ("req_per_s", Metric),
+            ("mean_us", Metric),
+            ("overhead_us", Metric),
+        ],
+    );
+    // Two fixed rows, in emitter order: the transport-free baseline, then
+    // the loopback shard-server path whose overhead_us is the headline.
+    let paths: Vec<&str> =
+        rows.iter().map(|r| r.get("path").unwrap().as_str().unwrap()).collect();
+    assert_eq!(paths, vec!["in_process", "loopback_tcp"]);
+}
+
+#[test]
 fn noise_snapshot_keeps_schema_and_grid() {
     use Kind::*;
     let rows = check_schema(

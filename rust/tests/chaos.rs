@@ -127,7 +127,7 @@ fn retrying_slots_survive_worker_death_after_accept_bit_identically() {
             shards: vec![cfg.clone(), cfg],
             policy: RoutePolicy::RoundRobin,
             labels: Vec::new(),
-            autoscale: None,
+            ..Default::default()
         })
         .unwrap();
         let h = fleet.handle();
@@ -168,7 +168,7 @@ fn revived_shard_reenters_rotation_and_serves() {
         shards: vec![cfg.clone(), cfg],
         policy: RoutePolicy::RoundRobin,
         labels: Vec::new(),
-        autoscale: None,
+        ..Default::default()
     })
     .unwrap();
     let h = fleet.handle();
@@ -225,7 +225,7 @@ fn janitor_revives_retired_shard_automatically() {
             shards: vec![cfg.clone(), cfg],
             policy: RoutePolicy::RoundRobin,
             labels: Vec::new(),
-            autoscale: None,
+            ..Default::default()
         }
         .with_autoscale(FleetAutoscale {
             revive: true,

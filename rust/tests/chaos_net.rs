@@ -1,0 +1,480 @@
+//! Process-level chaos over the wire protocol.
+//!
+//! Pins the cross-host PR's acceptance contract:
+//!
+//! * a REAL child shard-server process (`spoga serve --listen 127.0.0.1:0`)
+//!   is SIGKILLed mid-burst, and every in-flight retrying slot resolves
+//!   bit-identically to an undisturbed local run through retained-payload
+//!   resubmission on the surviving local shard — for the software backend
+//!   AND a noise-injecting photonic backend (content-keyed noise at equal
+//!   seeds is process-independent);
+//! * protocol failure injection against fake in-test peers produces the
+//!   *typed* `Error::Remote` kind, within a bounded deadline, with the
+//!   correct retirement decision: corrupt frame → `FrameCorrupt` +
+//!   in-place reconnect (shard stays in rotation), version skew →
+//!   `VersionMismatch` (ditto), truncated write → `PeerGone` (retired),
+//!   stalled peer (accept-then-silence) → `Timeout` at `io_timeout`
+//!   (never a hang, never a retirement);
+//! * a mixed local+remote fleet whose every shard dies resolves retained
+//!   payloads with a terminal shard-down error, counted exactly once in
+//!   `FleetLifecycle::terminal_failures` (no double-count from the
+//!   submit-time and mid-flight paths).
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use spoga::coordinator::{
+    CoordinatorConfig, Fleet, FleetConfig, FleetHandle, RemoteShardConfig, RetryingSlot,
+    RoutePolicy,
+};
+use spoga::dnn::models::CnnModel;
+use spoga::dnn::Layer;
+use spoga::error::RemoteErrorKind;
+use spoga::fidelity::NoiseParams;
+use spoga::net::{NetConfig, RemoteShard, ServeTarget, ShardServer};
+use spoga::runtime::{BackendKind, PhotonicConfig};
+use spoga::testing::SplitMix64;
+use spoga::Error;
+
+const MANIFEST: &str = "\
+gemm_8x8x8 g.hlo.txt i32:8x8,i32:8x8 i32:8x8
+mlp_b1 m1.hlo.txt i32:1x16 i32:1x4
+mlp_b4 m4.hlo.txt i32:4x16 i32:4x4
+";
+
+/// The noise seed `spoga serve --noise-margin` defaults to; the local
+/// reference shards must key their noise identically for bit-identity.
+const NOISE_SEED: u64 = 0xDEAD_5EED;
+
+fn synthetic_dir(tag: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("spoga-chaos-net-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.txt"), MANIFEST).unwrap();
+    dir
+}
+
+fn shard_cfg(dir: &PathBuf, backend: BackendKind, window_s: f64) -> CoordinatorConfig {
+    CoordinatorConfig {
+        artifact_dir: dir.to_string_lossy().into_owned(),
+        workers: 2,
+        backend,
+        max_batch_wait_s: window_s,
+        ..Default::default()
+    }
+}
+
+fn tiny_cnn() -> CnnModel {
+    CnnModel {
+        name: "tiny_net_chaos",
+        layers: vec![
+            Layer::conv("stem", 6, 6, 3, 4, 3, 1, 1),
+            Layer::fc("head", 6 * 6 * 4, 5),
+        ],
+    }
+}
+
+/// Deterministic mixed burst of retrying slots, in a fixed submission
+/// order (GEMMs dispatch immediately; MLP rows and CNN frames gather in
+/// the batching window — the mid-flight exposure).
+fn submit_burst(h: &FleetHandle) -> Vec<RetryingSlot> {
+    let mut rng = SplitMix64::new(0x0C4A05);
+    let model = tiny_cnn();
+    let mut slots = Vec::new();
+    for _ in 0..4 {
+        let a: Vec<i32> = (0..64).map(|_| rng.i8() as i32).collect();
+        let b: Vec<i32> = (0..64).map(|_| rng.i8() as i32).collect();
+        slots.push(h.submit_gemm_retrying("gemm_8x8x8", a, b).unwrap());
+    }
+    for t in 0..6 {
+        let row: Vec<i32> = (0..16).map(|v| (v * 13 + t * 7) % 100).collect();
+        slots.push(h.submit_mlp_retrying(row).unwrap());
+    }
+    for f in 0..4 {
+        let input: Vec<i32> =
+            (0..6 * 6 * 3).map(|v| ((v * 17 + f * 71) % 251) - 125).collect();
+        slots.push(h.submit_cnn_retrying(model.clone(), input).unwrap());
+    }
+    slots
+}
+
+fn recv_all(slots: Vec<RetryingSlot>) -> Vec<Vec<i32>> {
+    slots
+        .into_iter()
+        .map(|s| {
+            s.recv_timeout(Duration::from_secs(60))
+                .expect("retrying slot must resolve OK across process death")
+                .outputs
+        })
+        .collect()
+}
+
+/// Spawn a real `spoga serve --listen 127.0.0.1:0` child over `dir`'s
+/// artifacts and parse the OS-assigned address from its stdout.
+fn spawn_server(dir: &PathBuf, extra: &[&str]) -> (Child, String) {
+    let mut cmd = Command::new(env!("CARGO_BIN_EXE_spoga"));
+    cmd.args(["serve", "--listen", "127.0.0.1:0", "--workers", "2", "--window", "0.5"])
+        .args(["--artifacts", &dir.to_string_lossy()])
+        .args(extra)
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null());
+    let mut child = cmd.spawn().expect("spawn spoga serve child");
+    let stdout = child.stdout.take().expect("child stdout piped");
+    let mut lines = BufReader::new(stdout).lines();
+    let addr = loop {
+        let line = lines
+            .next()
+            .expect("child exited before announcing its address")
+            .expect("read child stdout");
+        if let Some(a) = line.strip_prefix("listening on ") {
+            break a.to_string();
+        }
+    };
+    // Keep draining stdout so the child can never block on a full pipe.
+    std::thread::spawn(move || for _line in lines {});
+    (child, addr)
+}
+
+/// The headline acceptance test: SIGKILL a child server process while it
+/// holds accepted requests in its batching window. Every retrying slot
+/// must resolve on the surviving local shard, bit-identical to an
+/// undisturbed local run — exact and noisy backends alike.
+#[test]
+fn sigkill_mid_burst_resolves_bit_identically_on_the_survivor() {
+    let noisy = BackendKind::Photonic(
+        PhotonicConfig::spoga().with_noise(NoiseParams::from_link_margin(0.0), NOISE_SEED),
+    );
+    let cases: [(&str, &[&str], BackendKind); 2] = [
+        ("sw", &[], BackendKind::Software),
+        ("noisy", &["--backend", "photonic", "--noise-margin", "0"], noisy),
+    ];
+    for (tag, child_args, backend) in cases {
+        let dir = synthetic_dir(&format!("sigkill-{tag}"));
+
+        // Reference: undisturbed local single-shard run over the same burst.
+        let single = Fleet::single(shard_cfg(&dir, backend.clone(), 0.0)).unwrap();
+        let reference = recv_all(submit_burst(&single.handle()));
+        single.shutdown();
+
+        // Chaos run: one local shard + one REAL child server process. The
+        // child's 0.5 s batching window holds its accepted MLP/CNN jobs
+        // when the SIGKILL lands — the mid-flight loss case, across a
+        // process boundary.
+        let (mut child, addr) = spawn_server(&dir, child_args);
+        let fleet = Fleet::start(FleetConfig {
+            shards: vec![shard_cfg(&dir, backend.clone(), 0.1)],
+            remotes: vec![RemoteShardConfig::new(addr)],
+            policy: RoutePolicy::RoundRobin,
+            ..Default::default()
+        })
+        .unwrap();
+        let h = fleet.handle();
+        assert_eq!(h.shard_count(), 2, "{tag}: fleet must hold local + remote slots");
+
+        let slots = submit_burst(&h);
+        // All submits are on the wire or accepted; now the peer process
+        // dies without any goodbye.
+        child.kill().expect("SIGKILL child server");
+        child.wait().expect("reap child server");
+
+        let served = recv_all(slots);
+        assert_eq!(
+            served, reference,
+            "{tag}: cross-process retry changed served integers"
+        );
+        let t = h.telemetry();
+        assert!(
+            t.resubmits + t.submit_reroutes > 0,
+            "{tag}: no payload moved shards — the chaos case was not exercised"
+        );
+        assert_eq!(
+            t.terminal_failures, 0,
+            "{tag}: a surviving shard means no retained payload may end terminal"
+        );
+        assert_eq!(
+            h.live_shard_count(),
+            1,
+            "{tag}: the killed server's slot must leave the rotation"
+        );
+        fleet.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+/// Accept a connection on a nonblocking listener within `timeout`.
+fn accept_within(listener: &TcpListener, timeout: Duration) -> TcpStream {
+    listener.set_nonblocking(true).unwrap();
+    let deadline = Instant::now() + timeout;
+    loop {
+        match listener.accept() {
+            Ok((s, _)) => return s,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                assert!(Instant::now() < deadline, "peer never connected");
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => panic!("accept: {e}"),
+        }
+    }
+}
+
+fn remote_kind(e: &Error) -> RemoteErrorKind {
+    match e {
+        Error::Remote { kind, .. } => *kind,
+        other => panic!("expected a typed Error::Remote, got {other:?}"),
+    }
+}
+
+/// A peer that answers a submit with a garbage frame: the pending request
+/// fails with `FrameCorrupt` (request-level), and the client repairs the
+/// stream in place — the shard is NOT retired.
+#[test]
+fn corrupt_reply_frame_is_typed_and_does_not_retire_the_shard() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+
+    let shard = RemoteShard::connect(&addr, "corrupt-peer", NetConfig::default()).unwrap();
+    let mut conn = accept_within(&listener, Duration::from_secs(5));
+    conn.set_nonblocking(false).unwrap();
+
+    let rx = shard.try_submit_mlp(vec![1; 16]).expect("submit writes fine");
+    // Wait for the submit frame to land, then answer with 28 bytes of junk
+    // (bad magic): the client's framing cannot resynchronize a byte stream.
+    let mut first = [0u8; 1];
+    conn.read_exact(&mut first).unwrap();
+    let mut junk = [0u8; 28];
+    junk[..4].copy_from_slice(&0xDEAD_BEEFu32.to_le_bytes());
+    conn.write_all(&junk).unwrap();
+
+    let err = rx
+        .recv_timeout(Duration::from_secs(10))
+        .expect("pending request must fail, not hang")
+        .expect_err("junk can not be a valid reply");
+    assert_eq!(remote_kind(&err), RemoteErrorKind::FrameCorrupt, "{err}");
+
+    // The client reconnects in place (the listener sees a second dial) and
+    // the shard stays in rotation: FrameCorrupt never retires.
+    let _conn2 = accept_within(&listener, Duration::from_secs(10));
+    assert!(shard.is_reachable(), "a corrupt frame must not retire the shard");
+    shard.disconnect();
+}
+
+/// A peer speaking a different protocol version: `VersionMismatch`, again
+/// request-level (the build is wrong, not the network).
+#[test]
+fn version_skewed_peer_is_typed_version_mismatch() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+
+    let shard = RemoteShard::connect(&addr, "skewed-peer", NetConfig::default()).unwrap();
+    let mut conn = accept_within(&listener, Duration::from_secs(5));
+    conn.set_nonblocking(false).unwrap();
+
+    let rx = shard.try_submit_mlp(vec![2; 16]).expect("submit writes fine");
+    let mut first = [0u8; 1];
+    conn.read_exact(&mut first).unwrap();
+    // Valid magic, version 999, zero-length payload: rejected on the
+    // version field before any checksum math.
+    let mut header = Vec::new();
+    header.extend_from_slice(b"SPOG");
+    header.extend_from_slice(&999u16.to_le_bytes());
+    header.extend_from_slice(&[4, 0]); // opcode Reply, reserved
+    header.extend_from_slice(&7u64.to_le_bytes()); // request id (any)
+    header.extend_from_slice(&0u32.to_le_bytes()); // payload len
+    header.extend_from_slice(&0u64.to_le_bytes()); // checksum (unchecked)
+    conn.write_all(&header).unwrap();
+
+    let err = rx
+        .recv_timeout(Duration::from_secs(10))
+        .expect("pending request must fail, not hang")
+        .expect_err("version skew can not resolve a request");
+    assert_eq!(remote_kind(&err), RemoteErrorKind::VersionMismatch, "{err}");
+    shard.disconnect();
+}
+
+/// A peer that truncates mid-frame and closes: `PeerGone`, and this time
+/// the shard IS retired — the connection is genuinely dead.
+#[test]
+fn truncated_reply_then_close_is_peer_gone_and_retires() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+
+    let shard =
+        RemoteShard::connect(&addr, "truncating-peer", NetConfig::default()).unwrap();
+    let mut conn = accept_within(&listener, Duration::from_secs(5));
+    conn.set_nonblocking(false).unwrap();
+
+    let rx = shard.try_submit_mlp(vec![3; 16]).expect("submit writes fine");
+    let mut first = [0u8; 1];
+    conn.read_exact(&mut first).unwrap();
+    // Write a valid-looking frame prefix, then vanish (listener included —
+    // the process is "gone", not confused).
+    let mut partial = Vec::new();
+    partial.extend_from_slice(b"SPOG");
+    partial.extend_from_slice(&1u16.to_le_bytes());
+    conn.write_all(&partial).unwrap();
+    drop(conn);
+    drop(listener);
+
+    let t0 = Instant::now();
+    let err = rx
+        .recv_timeout(Duration::from_secs(10))
+        .expect("pending request must fail, not hang")
+        .expect_err("a truncated stream can not resolve a request");
+    assert_eq!(remote_kind(&err), RemoteErrorKind::PeerGone, "{err}");
+    assert!(
+        t0.elapsed() < Duration::from_secs(10),
+        "peer-gone classification must not burn the full io_timeout"
+    );
+
+    // Retirement: peer-gone is immediate (no in-place repair — revival is
+    // the fleet janitor's job), so the gauge drops to 0 and the router
+    // would fail this slot over.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while shard.is_reachable() {
+        assert!(Instant::now() < deadline, "dead peer never retired the shard");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    shard.disconnect();
+}
+
+/// A peer that accepts and then says nothing: every pending request trips
+/// the io_timeout deadline with `Timeout` — bounded, typed, and with the
+/// shard left in rotation (a slow peer is not a dead peer).
+#[test]
+fn stalled_peer_trips_io_timeout_not_a_hang() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    // The OS accepts into the backlog; never reading is the stall.
+    let cfg = NetConfig::default().with_io_timeout(Duration::from_millis(300));
+    let shard = RemoteShard::connect(&addr, "stalled-peer", cfg).unwrap();
+
+    let t0 = Instant::now();
+    let rx = shard.try_submit_mlp(vec![4; 16]).expect("submit writes into the void");
+    let err = rx
+        .recv_timeout(Duration::from_secs(10))
+        .expect("deadline must fire, not hang")
+        .expect_err("a silent peer can not resolve a request");
+    assert_eq!(remote_kind(&err), RemoteErrorKind::Timeout, "{err}");
+    let elapsed = t0.elapsed();
+    assert!(
+        elapsed >= Duration::from_millis(250),
+        "timeout fired before the configured io_timeout ({elapsed:?})"
+    );
+    assert!(
+        elapsed < Duration::from_secs(5),
+        "timeout must fire near io_timeout, not at some larger deadline ({elapsed:?})"
+    );
+    assert!(shard.is_reachable(), "a stalled request must not retire the shard");
+
+    // Pings run the same deadline machinery.
+    let err = shard.ping(Duration::from_millis(300)).unwrap_err();
+    assert_eq!(remote_kind(&err), RemoteErrorKind::Timeout, "{err}");
+    shard.disconnect();
+    drop(listener);
+}
+
+/// Satellite: a mixed local+remote fleet where EVERY shard dies. The
+/// retained payload's resubmission finds no live shard, resolves with a
+/// terminal shard-down error, and `terminal_failures` counts it exactly
+/// once — submit-time refusals afterwards do not inflate it.
+#[test]
+fn mixed_fleet_exhaustion_is_terminal_and_counted_once() {
+    let dir = synthetic_dir("exhaust");
+
+    // Remote side: an in-process server fronting its own 1-shard fleet.
+    let backend_fleet = Fleet::single(shard_cfg(&dir, BackendKind::Software, 0.0)).unwrap();
+    let server = ShardServer::start(
+        "127.0.0.1:0",
+        ServeTarget::Fleet(backend_fleet.handle()),
+        NetConfig::default(),
+    )
+    .unwrap();
+
+    // Client side: one local shard with a long window + the remote.
+    let fleet = Fleet::start(FleetConfig {
+        shards: vec![shard_cfg(&dir, BackendKind::Software, 0.5)],
+        remotes: vec![RemoteShardConfig::new(server.local_addr().to_string())],
+        policy: RoutePolicy::RoundRobin,
+        ..Default::default()
+    })
+    .unwrap();
+    let h = fleet.handle();
+
+    // One retrying MLP row lands in the local shard's batching window...
+    let slot = h.submit_mlp_retrying(vec![3i32; 16]).unwrap();
+    // ...then every shard dies: the local pool is retired and the remote
+    // server (plus its fleet) shuts down.
+    h.shard(0).retire_workers().unwrap();
+    server.shutdown();
+    backend_fleet.shutdown();
+
+    let err = slot.recv_timeout(Duration::from_secs(30)).unwrap_err();
+    assert!(
+        matches!(&err, Error::ShardDown(_))
+            || matches!(&err, Error::Remote { kind, .. } if kind.retires_shard()),
+        "terminal disposition must be shard-down classified, got {err:?}"
+    );
+    let t = h.telemetry();
+    assert_eq!(
+        t.terminal_failures, 1,
+        "one retained payload ended terminal — it must count exactly once"
+    );
+
+    // With the whole fleet down, new retrying submits fail fast — and that
+    // submit-time refusal is NOT a retained payload's terminal disposition.
+    assert!(h.submit_mlp_retrying(vec![5i32; 16]).is_err());
+    assert_eq!(
+        h.telemetry().terminal_failures,
+        1,
+        "submit-time refusals must not double-count terminal failures"
+    );
+    fleet.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// End-to-end CLI smoke over the wire: a child `serve --listen` process
+/// answers a `RemoteShard` burst, reports server-side stats over the Stats
+/// opcode, and exits on the Shutdown opcode — the orderly half of the
+/// process lifecycle (the SIGKILL test covers the disorderly half).
+#[test]
+fn child_server_serves_stats_and_shuts_down_cleanly() {
+    let dir = synthetic_dir("orderly");
+    let (mut child, addr) = spawn_server(&dir, &[]);
+
+    let shard = RemoteShard::connect(&addr, "orderly", NetConfig::default()).unwrap();
+    shard.ping(Duration::from_secs(10)).expect("child server must pong end-to-end");
+    for i in 0..8 {
+        let rx = shard.try_submit_mlp((0..16).map(|v| (v + i) % 50).collect()).unwrap();
+        let reply = rx
+            .recv_timeout(Duration::from_secs(30))
+            .expect("slot resolves")
+            .expect("remote serve succeeds");
+        assert_eq!(reply.outputs.len(), 4);
+    }
+    let stats = shard.fetch_stats(Duration::from_secs(10)).expect("stats RPC");
+    assert!(
+        stats.completed >= 8,
+        "server-side telemetry must count the burst, got {}",
+        stats.completed
+    );
+
+    shard.request_server_shutdown().expect("shutdown opcode writes");
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        match child.try_wait().expect("poll child") {
+            Some(status) => {
+                assert!(status.success(), "orderly shutdown must exit 0, got {status}");
+                break;
+            }
+            None => {
+                assert!(Instant::now() < deadline, "child never exited on Shutdown opcode");
+                std::thread::sleep(Duration::from_millis(20));
+            }
+        }
+    }
+    shard.disconnect();
+    let _ = std::fs::remove_dir_all(&dir);
+}

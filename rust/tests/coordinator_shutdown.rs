@@ -153,7 +153,7 @@ fn fleet_fails_over_when_one_shards_workers_die_mid_burst() {
         shards: vec![cfg.clone(), cfg],
         policy: RoutePolicy::RoundRobin,
         labels: Vec::new(),
-        autoscale: None,
+        ..Default::default()
     })
     .unwrap();
     let h = fleet.handle();

@@ -107,7 +107,7 @@ fn two_shard_mixed_fleet_is_bit_identical_to_single_shard() {
         ],
         policy: RoutePolicy::RoundRobin,
         labels: Vec::new(),
-        autoscale: None,
+        ..Default::default()
     })
     .unwrap();
     let h = dual.handle();
@@ -140,7 +140,7 @@ fn fleet_telemetry_totals_equal_sum_of_per_shard_stats() {
         ],
         policy: RoutePolicy::RoundRobin,
         labels: Vec::new(),
-        autoscale: None,
+        ..Default::default()
     })
     .unwrap();
     let h = fleet.handle();
@@ -250,7 +250,7 @@ fn noisy_mixed_fleet_keeps_rollup_identity_with_batching_on() {
         ],
         policy: RoutePolicy::RoundRobin,
         labels: vec!["exact".into(), "noisy".into()],
-        autoscale: None,
+        ..Default::default()
     })
     .unwrap();
     let h = fleet.handle();
@@ -320,7 +320,7 @@ fn weighted_split_routes_deterministic_proportions() {
         ],
         policy: RoutePolicy::Weighted(vec![1, 3]),
         labels: vec!["w1".into(), "w3".into()],
-        autoscale: None,
+        ..Default::default()
     })
     .unwrap();
     let h = fleet.handle();
@@ -349,7 +349,7 @@ fn least_queue_depth_routes_to_idle_shard_under_serving() {
         ],
         policy: RoutePolicy::LeastQueueDepth,
         labels: Vec::new(),
-        autoscale: None,
+        ..Default::default()
     })
     .unwrap();
     let h = fleet.handle();
