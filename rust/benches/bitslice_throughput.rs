@@ -1,19 +1,32 @@
 //! Bench: bit-sliced GEMM engine throughput — naive oracle vs packed
-//! single-thread vs packed+threads, across {64, 256, 1024}³ shapes.
+//! single-thread vs packed+threads vs prepacked serving rows, across
+//! {64, 256, 1024}³ shapes.
 //!
-//! This is the recorded artifact for the packed-plane engine PR: effective
-//! GOPS (2·m·k·n ops per GEMM) for the SPOGA three-lane dataflow, plus the
-//! packed-over-naive speedup. Results are printed as a table and written as
-//! JSON (default `BENCH_bitslice.json`, override with the
-//! `BITSLICE_BENCH_OUT` env var) so future perf PRs have a trajectory
-//! baseline.
+//! This is the recorded artifact for the packed-plane engine PR and the
+//! pack-once/stream-many PR: effective GOPS (2·m·k·n ops per GEMM) for the
+//! SPOGA three-lane dataflow, plus the packed-over-naive speedup. Two
+//! measurement families:
+//!
+//! * `packed` / `packed_mt` pin the **scalar** micro-kernel and repack B
+//!   every call — the historical rows, kept comparable across PRs;
+//! * `packed_planned` / `packed_planned_simd` time the **serving** path:
+//!   B is prepacked outside the timed loop (what a plan cache holds) and
+//!   only the activation side packs per iteration — scalar vs the SIMD
+//!   default micro-kernel.
+//!
+//! Results are printed as a table and written as JSON (default
+//! `BENCH_bitslice.json`, override with the `BITSLICE_BENCH_OUT` env var)
+//! so future perf PRs have a trajectory baseline.
 //!
 //! Run: `cargo bench --bench bitslice_throughput [max_dim]`
 //! (`max_dim` defaults to 1024; pass 256 for a quick pass.)
 
 use spoga::benchkit::bench;
-use spoga::bitslice::{gemm_lanes_naive, gemm_lanes_tiled, TileConfig};
 use spoga::bitslice::kernel::default_threads;
+use spoga::bitslice::{
+    gemm_lanes_naive, gemm_lanes_packed, gemm_lanes_tiled, pack_b, MicroKernel, NibblePlanes,
+    TileConfig,
+};
 use spoga::report::{fmt_ratio, fmt_sig, Table};
 use spoga::testing::SplitMix64;
 
@@ -22,6 +35,8 @@ struct ShapeResult {
     naive_gops: f64,
     packed_gops: f64,
     packed_mt_gops: f64,
+    packed_planned_gops: f64,
+    packed_planned_simd_gops: f64,
 }
 
 fn gops(dim: usize, seconds: f64) -> f64 {
@@ -36,16 +51,26 @@ fn main() {
     let threads = default_threads();
     println!("bitslice GEMM throughput (SPOGA three-lane dataflow), {threads} threads available\n");
 
-    // Smoke check before timing anything: the kernels must agree bit-exactly.
+    // Smoke check before timing anything: the kernels must agree bit-exactly
+    // across the repack path, the prepacked path, and both micro-kernels.
     {
         let mut rng = SplitMix64::new(4242);
         let a = rng.i8_vec(64 * 64);
         let b = rng.i8_vec(64 * 64);
         let oracle = gemm_lanes_naive(&a, &b, 64, 64, 64).unwrap();
-        let fast = gemm_lanes_tiled(&a, &b, 64, 64, 64, &TileConfig::auto()).unwrap();
-        assert_eq!(oracle.hi, fast.hi);
-        assert_eq!(oracle.mid, fast.mid);
-        assert_eq!(oracle.lo, fast.lo);
+        let pa = NibblePlanes::pack(&a, 64, 64).unwrap();
+        let pb = pack_b(&b, 64, 64).unwrap();
+        for micro in [MicroKernel::Scalar, MicroKernel::Simd] {
+            let cfg = TileConfig::auto().with_micro(micro);
+            let fast = gemm_lanes_tiled(&a, &b, 64, 64, 64, &cfg).unwrap();
+            let planned = gemm_lanes_packed(&pa, pb.planes(), &cfg).unwrap();
+            assert_eq!(oracle.hi, fast.hi);
+            assert_eq!(oracle.mid, fast.mid);
+            assert_eq!(oracle.lo, fast.lo);
+            assert_eq!(oracle.hi, planned.hi);
+            assert_eq!(oracle.mid, planned.mid);
+            assert_eq!(oracle.lo, planned.lo);
+        }
     }
 
     let mut results = Vec::new();
@@ -54,6 +79,8 @@ fn main() {
         "naive (GOPS)",
         "packed 1T (GOPS)",
         "packed MT (GOPS)",
+        "planned MT (GOPS)",
+        "planned SIMD (GOPS)",
         "MT vs naive",
     ]);
 
@@ -73,13 +100,30 @@ fn main() {
         let naive = bench(warmup, iters, || {
             gemm_lanes_naive(&a, &b, dim, dim, dim).unwrap()
         });
-        let single = TileConfig::single_thread();
+        // Historical rows: scalar micro-kernel, repack-per-call — directly
+        // comparable with snapshots recorded before the SIMD/prepacked PR.
+        let single = TileConfig::single_thread().with_micro(MicroKernel::Scalar);
         let packed = bench(warmup, iters, || {
             gemm_lanes_tiled(&a, &b, dim, dim, dim, &single).unwrap()
         });
-        let multi = TileConfig::auto();
+        let multi = TileConfig::auto().with_micro(MicroKernel::Scalar);
         let packed_mt = bench(warmup, iters, || {
             gemm_lanes_tiled(&a, &b, dim, dim, dim, &multi).unwrap()
+        });
+
+        // Serving rows: B prepacked once outside the timer (the plan-cache
+        // state), activation planes packed per iteration into a reused
+        // scratch — exactly the backend hot path's work per request.
+        let pb = pack_b(&b, dim, dim).unwrap();
+        let mut planes = NibblePlanes::default();
+        let simd = TileConfig::auto();
+        let planned = bench(warmup, iters, || {
+            planes.pack_into(&a, dim, dim).unwrap();
+            gemm_lanes_packed(&planes, pb.planes(), &multi).unwrap()
+        });
+        let planned_simd = bench(warmup, iters, || {
+            planes.pack_into(&a, dim, dim).unwrap();
+            gemm_lanes_packed(&planes, pb.planes(), &simd).unwrap()
         });
 
         let r = ShapeResult {
@@ -87,12 +131,16 @@ fn main() {
             naive_gops: gops(dim, naive.min_s),
             packed_gops: gops(dim, packed.min_s),
             packed_mt_gops: gops(dim, packed_mt.min_s),
+            packed_planned_gops: gops(dim, planned.min_s),
+            packed_planned_simd_gops: gops(dim, planned_simd.min_s),
         };
         t.row(vec![
             format!("{dim}x{dim}x{dim}"),
             fmt_sig(r.naive_gops, 3),
             fmt_sig(r.packed_gops, 3),
             fmt_sig(r.packed_mt_gops, 3),
+            fmt_sig(r.packed_planned_gops, 3),
+            fmt_sig(r.packed_planned_simd_gops, 3),
             fmt_ratio(r.packed_mt_gops / r.naive_gops),
         ]);
         results.push(r);
@@ -101,8 +149,10 @@ fn main() {
     println!("{}", t.render());
     if let Some(r) = results.iter().find(|r| r.dim == 256) {
         println!(
-            "acceptance gate (256^3, packed+threads vs naive): {:.2}x",
-            r.packed_mt_gops / r.naive_gops
+            "acceptance gates (256^3): packed+threads vs naive {:.2}x; \
+             planned SIMD vs planned scalar {:.2}x",
+            r.packed_mt_gops / r.naive_gops,
+            r.packed_planned_simd_gops / r.packed_planned_gops
         );
     }
 
@@ -114,11 +164,14 @@ fn main() {
         .map(|r| {
             format!(
                 "    {{\"dim\": {}, \"naive_gops\": {:.4}, \"packed_gops\": {:.4}, \
-                 \"packed_mt_gops\": {:.4}, \"speedup_mt_vs_naive\": {:.3}}}",
+                 \"packed_mt_gops\": {:.4}, \"packed_planned_gops\": {:.4}, \
+                 \"packed_planned_simd_gops\": {:.4}, \"speedup_mt_vs_naive\": {:.3}}}",
                 r.dim,
                 r.naive_gops,
                 r.packed_gops,
                 r.packed_mt_gops,
+                r.packed_planned_gops,
+                r.packed_planned_simd_gops,
                 r.packed_mt_gops / r.naive_gops
             )
         })
@@ -126,6 +179,7 @@ fn main() {
     let json = format!(
         "{{\n  \"bench\": \"bitslice_throughput\",\n  \"dataflow\": \"spoga_three_lane\",\n  \
          \"ops_definition\": \"2*m*k*n per GEMM, best-of-n timing\",\n  \
+         \"status\": \"measured\",\n  \
          \"threads_available\": {},\n  \"results\": [\n{}\n  ]\n}}\n",
         threads,
         shapes.join(",\n")

@@ -21,9 +21,20 @@
 //! directly when you need the oracle regardless of size, or
 //! `kernel::gemm_*_tiled` with an explicit [`kernel::TileConfig`]
 //! (re-exported from [`crate::bitslice`]) to control blocking and threads.
+//!
+//! ## Prepacked entry points (pack-once / stream-many)
+//!
+//! Weight-stationary callers should not pay packing per call: [`pack_b`]
+//! slices a B operand once into a [`PackedB`] (raw bytes + nibble planes),
+//! and [`gemm_i32_prepacked`] / [`gemm_lanes_prepacked`] /
+//! [`gemm_sliced_prepacked`] consume operands packed ahead of time. They
+//! sit under the same bit-exactness contract as the dispatchers above: the
+//! property suite pins prepacked == repack-per-call == `*_naive` for every
+//! shape class.
 
 use crate::bitslice::kernel;
 use crate::bitslice::nibble::slice_i8;
+use crate::bitslice::packed::{NibblePlanes, PackedB};
 use crate::{Error, Result};
 
 /// Row-major matrix dims helper: `C[m][n] = Σ_k A[m][k]·B[k][n]`.
@@ -46,6 +57,42 @@ pub fn gemm_i32(a: &[i8], b: &[i8], m: usize, k: usize, n: usize) -> Result<Vec<
         Some(cfg) => kernel::gemm_i32_tiled(a, b, m, k, n, &cfg),
         None => gemm_i32_naive(a, b, m, k, n),
     }
+}
+
+/// Pack a weight-side operand once for reuse across many
+/// [`gemm_i32_prepacked`] / [`gemm_lanes_prepacked`] calls.
+///
+/// Thin forwarder to [`PackedB::pack`], exported here so callers that think
+/// in terms of the GEMM API find it next to the entry points that consume it.
+pub fn pack_b(b: &[i8], k: usize, n: usize) -> Result<PackedB> {
+    PackedB::pack(b, k, n)
+}
+
+/// [`gemm_i32`] with B packed ahead of time (`K`/`N` come from the pack).
+///
+/// Runs the same size dispatch as [`gemm_i32`] — the direct kernel consumes
+/// B's raw bytes, so holding a [`PackedB`] costs nothing on the naive path —
+/// and is bit-exact with [`gemm_i32_naive`] always.
+pub fn gemm_i32_prepacked(a: &[i8], b: &PackedB, m: usize) -> Result<Vec<i32>> {
+    let (k, n) = (b.rows(), b.cols());
+    match kernel::dispatch_config(m, k, n) {
+        Some(cfg) => kernel::gemm_i32_tiled(a, b.raw(), m, k, n, &cfg),
+        None => gemm_i32_naive(a, b.raw(), m, k, n),
+    }
+}
+
+/// [`gemm_lanes`] over operands sliced ahead of time (A from a per-request
+/// scratch, B from a plan). Always runs the plane kernel — both operands are
+/// already planes, so there is nothing for the naive path to save — and is
+/// bit-exact with [`gemm_lanes_naive`] by the dispatch contract.
+pub fn gemm_lanes_prepacked(pa: &NibblePlanes, pb: &NibblePlanes) -> Result<LaneGemm> {
+    kernel::gemm_lanes_packed(pa, pb, &kernel::TileConfig::auto_for(pa.rows, pa.cols, pb.cols))
+}
+
+/// [`gemm_sliced`] over operands sliced ahead of time; see
+/// [`gemm_lanes_prepacked`].
+pub fn gemm_sliced_prepacked(pa: &NibblePlanes, pb: &NibblePlanes) -> Result<SlicedGemm> {
+    kernel::gemm_sliced_packed(pa, pb, &kernel::TileConfig::auto_for(pa.rows, pa.cols, pb.cols))
 }
 
 /// Naive oracle for [`gemm_i32`]: the transparent three-loop reference.
@@ -287,6 +334,37 @@ mod tests {
         let fs = gemm_sliced(&a, &b, m, k, n).unwrap();
         let ss = gemm_sliced_naive(&a, &b, m, k, n).unwrap();
         assert_eq!(fs.recombine(), ss.recombine());
+    }
+
+    #[test]
+    fn prepacked_entry_points_match_dispatchers() {
+        let (m, k, n) = (3usize, 5usize, 4usize);
+        let a = mat(&[1, -2, 3, 4, 5, 6, 7, 8, 9, -128, 127, 0, -1, 2, -3]);
+        let b: Vec<i8> = (0..k * n).map(|i| (i as i8).wrapping_mul(23).wrapping_sub(60)).collect();
+        let pb = pack_b(&b, k, n).unwrap();
+        assert_eq!(
+            gemm_i32_prepacked(&a, &pb, m).unwrap(),
+            gemm_i32(&a, &b, m, k, n).unwrap()
+        );
+        let pa = NibblePlanes::pack(&a, m, k).unwrap();
+        let lanes = gemm_lanes_prepacked(&pa, pb.planes()).unwrap();
+        let expect = gemm_lanes_naive(&a, &b, m, k, n).unwrap();
+        assert_eq!(lanes.hi, expect.hi);
+        assert_eq!(lanes.mid, expect.mid);
+        assert_eq!(lanes.lo, expect.lo);
+        let sliced = gemm_sliced_prepacked(&pa, pb.planes()).unwrap();
+        assert_eq!(sliced.recombine(), gemm_sliced_naive(&a, &b, m, k, n).unwrap().recombine());
+    }
+
+    #[test]
+    fn prepacked_shape_errors_reported() {
+        let pb = pack_b(&[1, 2, 3, 4, 5, 6], 2, 3).unwrap();
+        // A too short for m=2, k=2.
+        assert!(gemm_i32_prepacked(&[1, 2, 3], &pb, 2).is_err());
+        // K mismatch between packed planes.
+        let pa = NibblePlanes::pack(&[1, 2, 3], 1, 3).unwrap();
+        assert!(gemm_lanes_prepacked(&pa, pb.planes()).is_err());
+        assert!(gemm_sliced_prepacked(&pa, pb.planes()).is_err());
     }
 
     #[test]

@@ -18,7 +18,22 @@
 //! 3. **Row-band threading** — the M dimension splits into near-equal bands,
 //!    one `std::thread::scope` thread per band. Bands own disjoint slabs of
 //!    the output (`split_at_mut`), so there is no synchronization on the hot
-//!    path and no unsafe code.
+//!    path.
+//! 4. **Micro-kernel selection** ([`MicroKernel`]) — the innermost j-loop
+//!    runs either the historical scalar axpy (`Scalar`, kept as a second
+//!    oracle next to `*_naive`) or a register-blocked kernel (`Simd`, the
+//!    default): fixed-width `[i32; BLOCK_W]` accumulators held across a
+//!    k-panel over unit-stride `plane_row` slices — a shape LLVM's
+//!    autovectorizer turns into SIMD on every target — plus a hand-written
+//!    SSE2 block for the direct i32 kernel on `x86_64` (SSE2 is baseline
+//!    there, so no runtime feature detection). Integer addition is exactly
+//!    associative, so reassociating the k-panel sums into registers is
+//!    bit-exact by construction and pinned by the property suites.
+//!
+//! Packing is separable from compute: the `gemm_*_packed` entry points
+//! consume operands the caller packed ahead of time (see
+//! [`crate::bitslice::packed`]'s pack-once/stream-many contract), which is
+//! what the runtime plans use to stop re-slicing weights per request.
 //!
 //! [`TileConfig`] carries the knobs; [`dispatch_config`] is the policy the
 //! public `gemm_*` entry points use to decide naive vs packed and how many
@@ -29,7 +44,7 @@ use std::sync::OnceLock;
 use crate::bitslice::gemm::{check_dims, LaneGemm, SlicedGemm};
 use crate::bitslice::packed::{NibblePlanes, WidePlanes};
 use crate::bitslice::wide::{check_dims_i16, WideLanes};
-use crate::Result;
+use crate::{Error, Result};
 
 /// MAC-count threshold below which the naive kernels win (packing and
 /// thread setup dominate for tiny problems).
@@ -38,6 +53,27 @@ pub const PACKED_MIN_MACS: usize = 1 << 15;
 /// MACs of per-thread work a band should amortize before another thread is
 /// worth spawning (~0.1 ms of scalar work).
 const PAR_GRAIN_MACS: usize = 1 << 17;
+
+/// Fixed width of the register-blocked (`Simd`) micro-kernels: one block is
+/// `BLOCK_W` unit-stride outputs accumulated in `[i32; BLOCK_W]` registers
+/// across a k-panel (and exactly two SSE2 vectors on `x86_64`).
+pub const BLOCK_W: usize = 8;
+
+/// Inner micro-kernel the tiled kernels run in their j-loop.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum MicroKernel {
+    /// The historical scalar axpy loops — kept as a fast second oracle next
+    /// to `*_naive` (the property suites pin `Simd == Scalar == naive`).
+    Scalar,
+    /// Register-blocked `[i32; BLOCK_W]` accumulators over plane-row slices
+    /// (autovectorized everywhere; hand-written SSE2 for the direct i32
+    /// kernel on `x86_64`). Bit-exact with `Scalar`: integer addition is
+    /// exactly associative, so holding the k-panel sum in registers before
+    /// one memory update cannot change any output. The INT16 `wide` kernel
+    /// has no blocked variant yet and ignores this knob.
+    #[default]
+    Simd,
+}
 
 /// Tiling/threading knobs for the packed kernels.
 #[derive(Debug, Clone, Copy)]
@@ -49,17 +85,19 @@ pub struct TileConfig {
     /// Row bands to run in parallel (clamped to the row count; `1` = no
     /// threads spawned).
     pub threads: usize,
+    /// Inner micro-kernel ([`MicroKernel::Simd`] by default).
+    pub micro: MicroKernel,
 }
 
 impl TileConfig {
     /// Default blocking with a single band (no threads).
     pub fn single_thread() -> Self {
-        TileConfig { kc: 256, jc: 1024, threads: 1 }
+        TileConfig { kc: 256, jc: 1024, threads: 1, micro: MicroKernel::Simd }
     }
 
     /// Default blocking using every available core.
     pub fn auto() -> Self {
-        TileConfig { kc: 256, jc: 1024, threads: default_threads() }
+        TileConfig { kc: 256, jc: 1024, threads: default_threads(), micro: MicroKernel::Simd }
     }
 
     /// Blocking for a concrete problem: thread count scales with the MAC
@@ -67,7 +105,13 @@ impl TileConfig {
     pub fn auto_for(m: usize, k: usize, n: usize) -> Self {
         let work = m.saturating_mul(k).saturating_mul(n);
         let threads = (work / PAR_GRAIN_MACS).clamp(1, default_threads());
-        TileConfig { kc: 256, jc: 1024, threads }
+        TileConfig { kc: 256, jc: 1024, threads, micro: MicroKernel::Simd }
+    }
+
+    /// This config with a different micro-kernel (oracle cross-checks).
+    pub fn with_micro(mut self, micro: MicroKernel) -> Self {
+        self.micro = micro;
+        self
     }
 }
 
@@ -167,20 +211,94 @@ fn i32_band(
             let j1 = (j0 + jc).min(n);
             for i in r0..r1 {
                 let row = (i - r0) * n;
-                let crow = &mut c[row + j0..row + j1];
                 let arow = &a[i * k..(i + 1) * k];
-                for kk in k0..k1 {
-                    let av = arow[kk] as i32;
-                    if av == 0 {
-                        continue;
+                let mut jb = j0;
+                if cfg.micro == MicroKernel::Simd {
+                    while jb + BLOCK_W <= j1 {
+                        i32_accum_block(arow, b, n, k0, k1, jb, &mut c[row + jb..row + jb + BLOCK_W]);
+                        jb += BLOCK_W;
                     }
-                    let brow = &b[kk * n + j0..kk * n + j1];
-                    for (cv, &bv) in crow.iter_mut().zip(brow) {
-                        *cv += av * bv as i32;
+                }
+                // Scalar micro-kernel, and the < BLOCK_W tail of the Simd one.
+                if jb < j1 {
+                    let crow = &mut c[row + jb..row + j1];
+                    for kk in k0..k1 {
+                        let av = arow[kk] as i32;
+                        if av == 0 {
+                            continue;
+                        }
+                        let brow = &b[kk * n + jb..kk * n + j1];
+                        for (cv, &bv) in crow.iter_mut().zip(brow) {
+                            *cv += av * bv as i32;
+                        }
                     }
                 }
             }
         }
+    }
+}
+
+/// One `BLOCK_W`-wide j-block of the direct kernel:
+/// `cseg[t] += Σ_{kk∈[k0,k1)} a_row[kk] · B[kk][jb+t]`, accumulated in
+/// registers across the whole k-panel and flushed to memory once.
+///
+/// `x86_64` variant: SSE2 intrinsics (baseline on the target, no feature
+/// detection needed). Exact i32 products of i8×i8 via the widening
+/// mullo/mulhi pattern: sign-extend the eight B bytes to i16, multiply by
+/// the broadcast A value keeping low and high product halves, then
+/// interleave halves into four+four exact i32 lanes.
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn i32_accum_block(arow: &[i8], b: &[i8], n: usize, k0: usize, k1: usize, jb: usize, cseg: &mut [i32]) {
+    use std::arch::x86_64::*;
+    // Uphold the raw-pointer loads below: 8 B bytes at kk*n + jb for every
+    // kk < k1 (b.len() == k*n with k1 <= k), and an 8-lane C segment.
+    assert!(cseg.len() == BLOCK_W && jb + BLOCK_W <= n && k1.saturating_mul(n) <= b.len());
+    // SAFETY: the assert bounds every `add` offset; loadl/loadu/storeu are
+    // the unaligned-access intrinsics, so no alignment requirement exists.
+    unsafe {
+        let zero = _mm_setzero_si128();
+        let mut acc0 = zero;
+        let mut acc1 = zero;
+        for kk in k0..k1 {
+            let av = arow[kk];
+            if av == 0 {
+                continue;
+            }
+            let a16 = _mm_set1_epi16(av as i16);
+            let x = _mm_loadl_epi64(b.as_ptr().add(kk * n + jb) as *const __m128i);
+            let x16 = _mm_unpacklo_epi8(x, _mm_cmpgt_epi8(zero, x));
+            let lo = _mm_mullo_epi16(x16, a16);
+            let hi = _mm_mulhi_epi16(x16, a16);
+            acc0 = _mm_add_epi32(acc0, _mm_unpacklo_epi16(lo, hi));
+            acc1 = _mm_add_epi32(acc1, _mm_unpackhi_epi16(lo, hi));
+        }
+        let cp = cseg.as_mut_ptr() as *mut __m128i;
+        _mm_storeu_si128(cp, _mm_add_epi32(_mm_loadu_si128(cp), acc0));
+        let cp1 = cp.add(1);
+        _mm_storeu_si128(cp1, _mm_add_epi32(_mm_loadu_si128(cp1), acc1));
+    }
+}
+
+/// Portable variant of the block above: fixed-width `[i32; BLOCK_W]`
+/// accumulators over unit-stride slices, written so the autovectorizer can
+/// keep the block in vector registers.
+#[cfg(not(target_arch = "x86_64"))]
+#[inline]
+fn i32_accum_block(arow: &[i8], b: &[i8], n: usize, k0: usize, k1: usize, jb: usize, cseg: &mut [i32]) {
+    let mut acc = [0i32; BLOCK_W];
+    for kk in k0..k1 {
+        let av = arow[kk] as i32;
+        if av == 0 {
+            continue;
+        }
+        let brow = &b[kk * n + jb..kk * n + jb + BLOCK_W];
+        for t in 0..BLOCK_W {
+            acc[t] += av * brow[t] as i32;
+        }
+    }
+    for (cv, add) in cseg.iter_mut().zip(acc) {
+        *cv += add;
     }
 }
 
@@ -201,10 +319,19 @@ pub fn gemm_lanes_tiled(
     check_dims(a, b, m, k, n)?;
     let pa = NibblePlanes::pack(a, m, k)?;
     let pb = NibblePlanes::pack(b, k, n)?;
+    gemm_lanes_packed(&pa, &pb, cfg)
+}
+
+/// [`gemm_lanes_tiled`] over operands the caller packed ahead of time
+/// (pack-once/stream-many: B planes held in a plan, A planes packed into a
+/// per-request scratch). Dimensions come from the planes.
+pub fn gemm_lanes_packed(pa: &NibblePlanes, pb: &NibblePlanes, cfg: &TileConfig) -> Result<LaneGemm> {
+    check_planes(pa, pb)?;
+    let (m, n) = (pa.rows, pb.cols);
     let mut out = LaneGemm { hi: vec![0; m * n], mid: vec![0; m * n], lo: vec![0; m * n] };
     let band_list = bands(m, cfg.threads);
     if band_list.len() <= 1 {
-        lanes_band(&pa, &pb, 0, m, &mut out.hi, &mut out.mid, &mut out.lo, cfg);
+        lanes_band(pa, pb, 0, m, &mut out.hi, &mut out.mid, &mut out.lo, cfg);
     } else {
         std::thread::scope(|s| {
             let mut hi = out.hi.as_mut_slice();
@@ -218,12 +345,23 @@ pub fn gemm_lanes_tiled(
                 mid = mt;
                 let (l, lt) = std::mem::take(&mut lo).split_at_mut(take);
                 lo = lt;
-                let (pa, pb) = (&pa, &pb);
                 s.spawn(move || lanes_band(pa, pb, r0, r1, h, mi, l, cfg));
             }
         });
     }
     Ok(out)
+}
+
+/// Shape check for prepacked plane operands (the packed entry points'
+/// analogue of `check_dims`).
+fn check_planes(pa: &NibblePlanes, pb: &NibblePlanes) -> Result<()> {
+    if pa.cols != pb.rows {
+        return Err(Error::Shape(format!(
+            "packed planes disagree on K: A is {}x{}, B is {}x{}",
+            pa.rows, pa.cols, pb.rows, pb.cols
+        )));
+    }
+    Ok(())
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -249,23 +387,58 @@ fn lanes_band(
                 let row = (i - r0) * n;
                 let am_row = pa.msn_row(i);
                 let al_row = pa.lsn_row(i);
-                for kk in k0..k1 {
-                    let am = am_row[kk] as i32;
-                    let al = al_row[kk] as i32;
-                    if am == 0 && al == 0 {
-                        continue;
+                let mut jb = j0;
+                if cfg.micro == MicroKernel::Simd {
+                    // Register-blocked: three [i32; BLOCK_W] accumulators per
+                    // j-block held across the k-panel, flushed once.
+                    while jb + BLOCK_W <= j1 {
+                        let mut acc_h = [0i32; BLOCK_W];
+                        let mut acc_m = [0i32; BLOCK_W];
+                        let mut acc_l = [0i32; BLOCK_W];
+                        for kk in k0..k1 {
+                            let am = am_row[kk] as i32;
+                            let al = al_row[kk] as i32;
+                            if am == 0 && al == 0 {
+                                continue;
+                            }
+                            let bm = &pb.msn_row(kk)[jb..jb + BLOCK_W];
+                            let bl = &pb.lsn_row(kk)[jb..jb + BLOCK_W];
+                            for t in 0..BLOCK_W {
+                                let bmv = bm[t] as i32;
+                                let blv = bl[t] as i32;
+                                acc_h[t] += am * bmv;
+                                acc_m[t] += am * blv + al * bmv;
+                                acc_l[t] += al * blv;
+                            }
+                        }
+                        for t in 0..BLOCK_W {
+                            hi[row + jb + t] += acc_h[t];
+                            mid[row + jb + t] += acc_m[t];
+                            lo[row + jb + t] += acc_l[t];
+                        }
+                        jb += BLOCK_W;
                     }
-                    let bm = &pb.msn_row(kk)[j0..j1];
-                    let bl = &pb.lsn_row(kk)[j0..j1];
-                    let hrow = &mut hi[row + j0..row + j1];
-                    let mrow = &mut mid[row + j0..row + j1];
-                    let lrow = &mut lo[row + j0..row + j1];
-                    for jj in 0..j1 - j0 {
-                        let bmv = bm[jj] as i32;
-                        let blv = bl[jj] as i32;
-                        hrow[jj] += am * bmv;
-                        mrow[jj] += am * blv + al * bmv;
-                        lrow[jj] += al * blv;
+                }
+                // Scalar micro-kernel, and the < BLOCK_W tail of the Simd one.
+                if jb < j1 {
+                    for kk in k0..k1 {
+                        let am = am_row[kk] as i32;
+                        let al = al_row[kk] as i32;
+                        if am == 0 && al == 0 {
+                            continue;
+                        }
+                        let bm = &pb.msn_row(kk)[jb..j1];
+                        let bl = &pb.lsn_row(kk)[jb..j1];
+                        let hrow = &mut hi[row + jb..row + j1];
+                        let mrow = &mut mid[row + jb..row + j1];
+                        let lrow = &mut lo[row + jb..row + j1];
+                        for jj in 0..j1 - jb {
+                            let bmv = bm[jj] as i32;
+                            let blv = bl[jj] as i32;
+                            hrow[jj] += am * bmv;
+                            mrow[jj] += am * blv + al * bmv;
+                            lrow[jj] += al * blv;
+                        }
                     }
                 }
             }
@@ -290,6 +463,17 @@ pub fn gemm_sliced_tiled(
     check_dims(a, b, m, k, n)?;
     let pa = NibblePlanes::pack(a, m, k)?;
     let pb = NibblePlanes::pack(b, k, n)?;
+    gemm_sliced_packed(&pa, &pb, cfg)
+}
+
+/// [`gemm_sliced_tiled`] over operands the caller packed ahead of time.
+pub fn gemm_sliced_packed(
+    pa: &NibblePlanes,
+    pb: &NibblePlanes,
+    cfg: &TileConfig,
+) -> Result<SlicedGemm> {
+    check_planes(pa, pb)?;
+    let (m, n) = (pa.rows, pb.cols);
     let mut out = SlicedGemm {
         mm: vec![0; m * n],
         ml: vec![0; m * n],
@@ -298,7 +482,7 @@ pub fn gemm_sliced_tiled(
     };
     let band_list = bands(m, cfg.threads);
     if band_list.len() <= 1 {
-        sliced_band(&pa, &pb, 0, m, &mut out.mm, &mut out.ml, &mut out.lm, &mut out.ll, cfg);
+        sliced_band(pa, pb, 0, m, &mut out.mm, &mut out.ml, &mut out.lm, &mut out.ll, cfg);
     } else {
         std::thread::scope(|s| {
             let mut mm = out.mm.as_mut_slice();
@@ -315,7 +499,6 @@ pub fn gemm_sliced_tiled(
                 lm = t_lm;
                 let (s_ll, t_ll) = std::mem::take(&mut ll).split_at_mut(take);
                 ll = t_ll;
-                let (pa, pb) = (&pa, &pb);
                 s.spawn(move || sliced_band(pa, pb, r0, r1, s_mm, s_ml, s_lm, s_ll, cfg));
             }
         });
@@ -347,25 +530,60 @@ fn sliced_band(
                 let row = (i - r0) * n;
                 let am_row = pa.msn_row(i);
                 let al_row = pa.lsn_row(i);
-                for kk in k0..k1 {
-                    let am = am_row[kk] as i32;
-                    let al = al_row[kk] as i32;
-                    if am == 0 && al == 0 {
-                        continue;
+                let mut jb = j0;
+                if cfg.micro == MicroKernel::Simd {
+                    while jb + BLOCK_W <= j1 {
+                        let mut acc_mm = [0i32; BLOCK_W];
+                        let mut acc_ml = [0i32; BLOCK_W];
+                        let mut acc_lm = [0i32; BLOCK_W];
+                        let mut acc_ll = [0i32; BLOCK_W];
+                        for kk in k0..k1 {
+                            let am = am_row[kk] as i32;
+                            let al = al_row[kk] as i32;
+                            if am == 0 && al == 0 {
+                                continue;
+                            }
+                            let bm = &pb.msn_row(kk)[jb..jb + BLOCK_W];
+                            let bl = &pb.lsn_row(kk)[jb..jb + BLOCK_W];
+                            for t in 0..BLOCK_W {
+                                let bmv = bm[t] as i32;
+                                let blv = bl[t] as i32;
+                                acc_mm[t] += am * bmv;
+                                acc_ml[t] += am * blv;
+                                acc_lm[t] += al * bmv;
+                                acc_ll[t] += al * blv;
+                            }
+                        }
+                        for t in 0..BLOCK_W {
+                            mm[row + jb + t] += acc_mm[t];
+                            ml[row + jb + t] += acc_ml[t];
+                            lm[row + jb + t] += acc_lm[t];
+                            ll[row + jb + t] += acc_ll[t];
+                        }
+                        jb += BLOCK_W;
                     }
-                    let bm = &pb.msn_row(kk)[j0..j1];
-                    let bl = &pb.lsn_row(kk)[j0..j1];
-                    let mm_row = &mut mm[row + j0..row + j1];
-                    let ml_row = &mut ml[row + j0..row + j1];
-                    let lm_row = &mut lm[row + j0..row + j1];
-                    let ll_row = &mut ll[row + j0..row + j1];
-                    for jj in 0..j1 - j0 {
-                        let bmv = bm[jj] as i32;
-                        let blv = bl[jj] as i32;
-                        mm_row[jj] += am * bmv;
-                        ml_row[jj] += am * blv;
-                        lm_row[jj] += al * bmv;
-                        ll_row[jj] += al * blv;
+                }
+                if jb < j1 {
+                    for kk in k0..k1 {
+                        let am = am_row[kk] as i32;
+                        let al = al_row[kk] as i32;
+                        if am == 0 && al == 0 {
+                            continue;
+                        }
+                        let bm = &pb.msn_row(kk)[jb..j1];
+                        let bl = &pb.lsn_row(kk)[jb..j1];
+                        let mm_row = &mut mm[row + jb..row + j1];
+                        let ml_row = &mut ml[row + jb..row + j1];
+                        let lm_row = &mut lm[row + jb..row + j1];
+                        let ll_row = &mut ll[row + jb..row + j1];
+                        for jj in 0..j1 - jb {
+                            let bmv = bm[jj] as i32;
+                            let blv = bl[jj] as i32;
+                            mm_row[jj] += am * bmv;
+                            ml_row[jj] += am * blv;
+                            lm_row[jj] += al * bmv;
+                            ll_row[jj] += al * blv;
+                        }
                     }
                 }
             }
@@ -390,11 +608,29 @@ pub fn gemm_i16_lanes_tiled(
     check_dims_i16(a, b, m, k, n)?;
     let pa = WidePlanes::pack(a, m, k)?;
     let pb = WidePlanes::pack(b, k, n)?;
+    gemm_i16_lanes_packed(&pa, &pb, cfg)
+}
+
+/// [`gemm_i16_lanes_tiled`] over four-nibble planes the caller packed ahead
+/// of time. The wide kernel has no blocked micro-kernel yet, so
+/// [`TileConfig::micro`] is ignored here.
+pub fn gemm_i16_lanes_packed(
+    pa: &WidePlanes,
+    pb: &WidePlanes,
+    cfg: &TileConfig,
+) -> Result<WideLanes> {
+    if pa.cols != pb.rows {
+        return Err(Error::Shape(format!(
+            "packed wide planes disagree on K: A is {}x{}, B is {}x{}",
+            pa.rows, pa.cols, pb.rows, pb.cols
+        )));
+    }
+    let (m, n) = (pa.rows, pb.cols);
     let mut out = WideLanes { lanes: std::array::from_fn(|_| vec![0i64; m * n]) };
     let band_list = bands(m, cfg.threads);
     if band_list.len() <= 1 {
         let mut slabs: Vec<&mut [i64]> = out.lanes.iter_mut().map(|v| v.as_mut_slice()).collect();
-        wide_band(&pa, &pb, 0, m, &mut slabs, cfg);
+        wide_band(pa, pb, 0, m, &mut slabs, cfg);
     } else {
         std::thread::scope(|s| {
             let mut tails: Vec<&mut [i64]> =
@@ -407,7 +643,6 @@ pub fn gemm_i16_lanes_tiled(
                     *tail = rest;
                     slabs.push(head);
                 }
-                let (pa, pb) = (&pa, &pb);
                 s.spawn(move || wide_band(pa, pb, r0, r1, &mut slabs, cfg));
             }
         });
@@ -473,11 +708,12 @@ mod tests {
     /// tiny shapes.
     fn stress_cfgs() -> Vec<TileConfig> {
         vec![
-            TileConfig { kc: 1, jc: 1, threads: 1 },
-            TileConfig { kc: 3, jc: 2, threads: 2 },
-            TileConfig { kc: 2, jc: 5, threads: 3 },
-            TileConfig { kc: 7, jc: 3, threads: 8 },
-            TileConfig { kc: 1024, jc: 1024, threads: 4 },
+            TileConfig { kc: 1, jc: 1, threads: 1, micro: MicroKernel::Scalar },
+            TileConfig { kc: 3, jc: 2, threads: 2, micro: MicroKernel::Simd },
+            TileConfig { kc: 2, jc: 5, threads: 3, micro: MicroKernel::Scalar },
+            TileConfig { kc: 7, jc: 3, threads: 8, micro: MicroKernel::Simd },
+            TileConfig { kc: 1024, jc: 1024, threads: 4, micro: MicroKernel::Simd },
+            TileConfig { kc: 1024, jc: 1024, threads: 2, micro: MicroKernel::Scalar },
         ]
     }
 
@@ -558,7 +794,7 @@ mod tests {
         let (m, k, n) = (5usize, 33usize, 9usize);
         let a = vec![-128i8; m * k];
         let b = vec![127i8; k * n];
-        let cfg = TileConfig { kc: 4, jc: 4, threads: 3 };
+        let cfg = TileConfig { kc: 4, jc: 4, threads: 3, micro: MicroKernel::Simd };
         let naive = gemm_lanes_naive(&a, &b, m, k, n).unwrap();
         let fast = gemm_lanes_tiled(&a, &b, m, k, n, &cfg).unwrap();
         assert_eq!(naive.weight_and_add(), fast.weight_and_add());
@@ -600,7 +836,7 @@ mod tests {
         let mut rng = SplitMix64::new(5);
         let case = g.gen(&mut rng);
         for (a, b, m, k, n) in g.shrink(&case) {
-            let cfg = TileConfig { kc: 2, jc: 3, threads: 2 };
+            let cfg = TileConfig { kc: 2, jc: 3, threads: 2, micro: MicroKernel::Simd };
             let naive = gemm_lanes_naive(&a, &b, m, k, n).unwrap();
             let fast = gemm_lanes_tiled(&a, &b, m, k, n, &cfg).unwrap();
             assert_eq!(naive.mid, fast.mid);

@@ -49,6 +49,34 @@
 //! specific implementation (benches, oracle cross-checks) calls the
 //! `*_naive` functions or `kernel::gemm_*_tiled` with an explicit
 //! [`kernel::TileConfig`] directly.
+//!
+//! ## Prepacked API (pack-once / stream-many)
+//!
+//! Packing is separable from compute, and weight-stationary serving exploits
+//! it: pack the weight operand **once** ([`pack_b`] → [`packed::PackedB`],
+//! raw bytes + nibble planes; or [`packed::NibblePlanes::pack`] /
+//! [`packed::WidePlanes::pack`] directly) and stream activations against it
+//! with [`gemm_i32_prepacked`], [`gemm_lanes_prepacked`],
+//! [`gemm_sliced_prepacked`] and [`wide::gemm_i16_lanes_prepacked`]. The
+//! activation side can reuse a caller-owned scratch via
+//! [`packed::NibblePlanes::pack_into`], making the steady-state hot path
+//! allocation-free. Prepacked entry points sit under the same contract:
+//! bit-identical to the repack-per-call dispatchers and to the `*_naive`
+//! oracles (pinned by `tests/prepacked.rs` and the property suite).
+//!
+//! ## SIMD dispatch policy
+//!
+//! [`kernel::TileConfig::micro`] selects the innermost kernel:
+//! [`kernel::MicroKernel::Simd`] (the default everywhere) runs
+//! register-blocked `[i32; BLOCK_W]` accumulation over unit-stride plane
+//! rows — autovectorizer-friendly on every target, with a hand-written SSE2
+//! block for the direct i32 kernel on `x86_64` (SSE2 is baseline there; no
+//! runtime feature detection, no new dependencies). Integer addition is
+//! exactly associative, so the blocked kernels are bit-exact with
+//! [`kernel::MicroKernel::Scalar`] (the historical loops, kept as a second
+//! oracle) and with `*_naive` — the property suites run all three against
+//! each other. The INT16 `wide` kernel ignores the knob (no blocked variant
+//! yet).
 
 pub mod gemm;
 pub mod kernel;
@@ -57,14 +85,17 @@ pub mod packed;
 pub mod wide;
 
 pub use gemm::{
-    gemm_i32, gemm_i32_naive, gemm_lanes, gemm_lanes_naive, gemm_sliced, gemm_sliced_naive,
-    LaneGemm, SlicedGemm,
+    gemm_i32, gemm_i32_naive, gemm_i32_prepacked, gemm_lanes, gemm_lanes_naive,
+    gemm_lanes_prepacked, gemm_sliced, gemm_sliced_naive, gemm_sliced_prepacked, pack_b, LaneGemm,
+    SlicedGemm,
 };
 pub use kernel::{
-    gemm_i16_lanes_tiled, gemm_i32_tiled, gemm_lanes_tiled, gemm_sliced_tiled, TileConfig,
+    gemm_i16_lanes_packed, gemm_i16_lanes_tiled, gemm_i32_tiled, gemm_lanes_packed,
+    gemm_lanes_tiled, gemm_sliced_packed, gemm_sliced_tiled, MicroKernel, TileConfig, BLOCK_W,
 };
 pub use nibble::{combine, lsn, msn, slice_i8, NibblePair};
-pub use packed::{NibblePlanes, WidePlanes};
+pub use packed::{NibblePlanes, PackedB, WidePlanes};
 pub use wide::{
-    gemm_i16_direct, gemm_i16_lanes, gemm_i16_lanes_naive, scheme_cost, slice_i16, WideLanes,
+    gemm_i16_direct, gemm_i16_lanes, gemm_i16_lanes_naive, gemm_i16_lanes_prepacked, scheme_cost,
+    slice_i16, WideLanes,
 };

@@ -20,13 +20,30 @@
 //!
 //! [`WidePlanes`] is the four-plane INT16 analogue used by the 7-lane
 //! `wide` dataflow.
+//!
+//! ## Pack-once / stream-many
+//!
+//! Packing is separable per operand, so a caller that reuses one operand
+//! across many GEMMs (weight-stationary serving: B is programmed once,
+//! activations stream) should pack it **once** and hold the result:
+//!
+//! * [`PackedB`] — a weight-side operand packed for every kernel family
+//!   (raw row-major bytes for the direct i32 kernel, nibble planes for the
+//!   lane/sliced kernels), with content-checked cache refresh
+//!   ([`PackedB::refresh_wire`]) for ad-hoc B operands that usually repeat.
+//! * [`NibblePlanes::pack_into`] — re-slice into existing plane storage,
+//!   preserving allocations: the per-request activation side packs into a
+//!   reusable scratch instead of allocating.
+//!
+//! The prepacked entry points ([`crate::bitslice::gemm_i32_prepacked`],
+//! [`crate::bitslice::gemm_lanes_prepacked`], …) consume these directly.
 
 use crate::bitslice::nibble::{lsn, msn};
 use crate::bitslice::wide::slice_i16;
 use crate::{Error, Result};
 
 /// The two nibble planes of a row-major INT8 matrix.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct NibblePlanes {
     /// Matrix rows.
     pub rows: usize,
@@ -56,6 +73,30 @@ impl NibblePlanes {
         Ok(NibblePlanes { rows, cols, msn: m_plane, lsn: l_plane })
     }
 
+    /// Re-slice a matrix into `self`, reusing the existing plane storage
+    /// (allocation-free once the vectors have grown to the working size).
+    /// This is the activation-side scratch of the pack-once/stream-many
+    /// split: per-request packing refills the same buffers.
+    pub fn pack_into(&mut self, data: &[i8], rows: usize, cols: usize) -> Result<()> {
+        if data.len() != rows * cols {
+            return Err(Error::Shape(format!(
+                "pack_into: {} elements for a {rows}x{cols} matrix",
+                data.len()
+            )));
+        }
+        self.rows = rows;
+        self.cols = cols;
+        self.msn.clear();
+        self.lsn.clear();
+        self.msn.reserve(data.len());
+        self.lsn.reserve(data.len());
+        for &v in data {
+            self.msn.push(msn(v));
+            self.lsn.push(lsn(v) as i8);
+        }
+        Ok(())
+    }
+
     /// MSN plane row `r` (length `cols`).
     #[inline]
     pub fn msn_row(&self, r: usize) -> &[i8] {
@@ -66,6 +107,85 @@ impl NibblePlanes {
     #[inline]
     pub fn lsn_row(&self, r: usize) -> &[i8] {
         &self.lsn[r * self.cols..(r + 1) * self.cols]
+    }
+}
+
+/// A weight-side (B) operand packed once for pack-once/stream-many GEMM.
+///
+/// Holds **both** representations the kernel families stream so one cache
+/// entry serves every dataflow: the raw row-major bytes (the direct i32
+/// kernel reads B unsliced) and the nibble planes (the lane/sliced kernels
+/// read plane rows). Build one per artifact at plan time and stream
+/// activations against it via [`crate::bitslice::gemm_i32_prepacked`] /
+/// [`crate::bitslice::gemm_lanes_prepacked`].
+#[derive(Debug, Clone)]
+pub struct PackedB {
+    /// Raw row-major `rows × cols` values (direct-kernel view).
+    raw: Vec<i8>,
+    /// Nibble planes of the same matrix (lane/sliced-kernel view).
+    planes: NibblePlanes,
+}
+
+impl PackedB {
+    /// Pack a row-major `k × n` INT8 matrix.
+    pub fn pack(data: &[i8], k: usize, n: usize) -> Result<Self> {
+        let planes = NibblePlanes::pack(data, k, n)?;
+        Ok(PackedB { raw: data.to_vec(), planes })
+    }
+
+    /// Pack from wire-format i32 lanes (each carrying an int8, wrapping —
+    /// the same narrowing the AOT kernels' `convert` performs).
+    pub fn pack_wire(wire: &[i32], k: usize, n: usize) -> Result<Self> {
+        let raw: Vec<i8> = wire.iter().map(|&v| v as i8).collect();
+        let planes = NibblePlanes::pack(&raw, k, n)?;
+        Ok(PackedB { raw, planes })
+    }
+
+    /// Matrix rows (`k` of the GEMM it feeds).
+    pub fn rows(&self) -> usize {
+        self.planes.rows
+    }
+
+    /// Matrix columns (`n` of the GEMM it feeds).
+    pub fn cols(&self) -> usize {
+        self.planes.cols
+    }
+
+    /// The raw row-major values.
+    pub fn raw(&self) -> &[i8] {
+        &self.raw
+    }
+
+    /// The nibble planes.
+    pub fn planes(&self) -> &NibblePlanes {
+        &self.planes
+    }
+
+    /// Does this cache hold exactly these wire values? Full content
+    /// equality — O(k·n) reads, cheaper than a repack and collision-proof
+    /// where a hash key could silently serve a stale B.
+    pub fn matches_wire(&self, wire: &[i32]) -> bool {
+        self.raw.len() == wire.len()
+            && self.raw.iter().zip(wire).all(|(&r, &w)| r == w as i8)
+    }
+
+    /// Reuse-or-repack cache refresh: return a `PackedB` holding exactly
+    /// `wire`, reusing `prev` untouched on a content match and reusing its
+    /// allocations on a miss. This is the per-artifact B cache of ad-hoc
+    /// GEMM plans, where the weight operand arrives per request but almost
+    /// always repeats.
+    pub fn refresh_wire(prev: Option<PackedB>, wire: &[i32], k: usize, n: usize) -> Result<PackedB> {
+        if let Some(pb) = prev {
+            if pb.rows() == k && pb.cols() == n && pb.matches_wire(wire) {
+                return Ok(pb);
+            }
+            let PackedB { mut raw, mut planes } = pb;
+            raw.clear();
+            raw.extend(wire.iter().map(|&v| v as i8));
+            planes.pack_into(&raw, k, n)?;
+            return Ok(PackedB { raw, planes });
+        }
+        PackedB::pack_wire(wire, k, n)
     }
 }
 
@@ -148,6 +268,76 @@ mod tests {
     fn bad_shape_rejected() {
         assert!(NibblePlanes::pack(&[1, 2, 3], 2, 2).is_err());
         assert!(WidePlanes::pack(&[1i16, 2], 3, 1).is_err());
+        assert!(NibblePlanes::default().pack_into(&[1, 2, 3], 2, 2).is_err());
+        assert!(PackedB::pack(&[1, 2, 3], 2, 2).is_err());
+        assert!(PackedB::pack_wire(&[1, 2, 3], 2, 2).is_err());
+    }
+
+    #[test]
+    fn pack_into_matches_pack_and_reuses_storage() {
+        let mut rng = SplitMix64::new(19);
+        let mut scratch = NibblePlanes::default();
+        // Shrinking and growing refills: contents always equal a fresh pack.
+        for (rows, cols) in [(4usize, 6usize), (2, 3), (8, 8), (0, 5), (3, 0), (5, 5)] {
+            let data = rng.i8_vec(rows * cols);
+            scratch.pack_into(&data, rows, cols).unwrap();
+            let fresh = NibblePlanes::pack(&data, rows, cols).unwrap();
+            assert_eq!((scratch.rows, scratch.cols), (rows, cols));
+            assert_eq!(scratch.msn, fresh.msn);
+            assert_eq!(scratch.lsn, fresh.lsn);
+        }
+        // After the 8x8 fill the buffers never need to grow again.
+        let cap = scratch.msn.capacity();
+        let data = rng.i8_vec(49);
+        scratch.pack_into(&data, 7, 7).unwrap();
+        assert_eq!(scratch.msn.capacity(), cap, "refill must not reallocate");
+    }
+
+    #[test]
+    fn packed_b_holds_both_views_and_checks_content() {
+        let mut rng = SplitMix64::new(23);
+        let data = rng.i8_vec(12);
+        let wire: Vec<i32> = data.iter().map(|&v| v as i32).collect();
+        let pb = PackedB::pack(&data, 3, 4).unwrap();
+        assert_eq!((pb.rows(), pb.cols()), (3, 4));
+        assert_eq!(pb.raw(), &data[..]);
+        let fresh = NibblePlanes::pack(&data, 3, 4).unwrap();
+        assert_eq!(pb.planes().msn, fresh.msn);
+        assert_eq!(pb.planes().lsn, fresh.lsn);
+        assert!(pb.matches_wire(&wire));
+        let mut other = wire.clone();
+        other[5] ^= 1;
+        assert!(!pb.matches_wire(&other));
+        assert!(!pb.matches_wire(&wire[..11]));
+        // Wire packing wraps i32 lanes exactly like `wire_to_i8`.
+        let wrapped: Vec<i32> = wire.iter().map(|&v| v + 256).collect();
+        assert!(pb.matches_wire(&wrapped));
+        assert_eq!(PackedB::pack_wire(&wrapped, 3, 4).unwrap().raw(), &data[..]);
+    }
+
+    #[test]
+    fn refresh_wire_hits_misses_and_repacks() {
+        let mut rng = SplitMix64::new(29);
+        let w1: Vec<i32> = (0..12).map(|_| rng.i8() as i32).collect();
+        let w2: Vec<i32> = (0..12).map(|_| rng.i8() as i32).collect();
+        let first = PackedB::refresh_wire(None, &w1, 3, 4).unwrap();
+        assert!(first.matches_wire(&w1));
+        // Hit: same content returns the same packing untouched.
+        let hit = PackedB::refresh_wire(Some(first.clone()), &w1, 3, 4).unwrap();
+        assert_eq!(hit.raw(), first.raw());
+        assert_eq!(hit.planes().msn, first.planes().msn);
+        // Miss: new content replaces, matching a from-scratch pack exactly.
+        let miss = PackedB::refresh_wire(Some(first), &w2, 3, 4).unwrap();
+        let scratch_pack = PackedB::pack_wire(&w2, 3, 4).unwrap();
+        assert_eq!(miss.raw(), scratch_pack.raw());
+        assert_eq!(miss.planes().msn, scratch_pack.planes().msn);
+        assert_eq!(miss.planes().lsn, scratch_pack.planes().lsn);
+        // Shape change is a miss too (same byte length, different dims).
+        let reshaped = PackedB::refresh_wire(Some(miss), &w2, 4, 3).unwrap();
+        assert_eq!((reshaped.rows(), reshaped.cols()), (4, 3));
+        // Bad refresh shapes propagate errors.
+        assert!(PackedB::refresh_wire(None, &w1, 5, 5).is_err());
+        assert!(PackedB::refresh_wire(Some(reshaped), &w1, 5, 5).is_err());
     }
 
     #[test]

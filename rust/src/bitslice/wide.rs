@@ -92,6 +92,18 @@ pub fn gemm_i16_lanes(a: &[i16], b: &[i16], m: usize, k: usize, n: usize) -> Res
     }
 }
 
+/// [`gemm_i16_lanes`] over four-nibble planes the caller packed ahead of
+/// time (see [`crate::bitslice::packed::WidePlanes`]); the INT16 analogue of
+/// [`crate::bitslice::gemm::gemm_lanes_prepacked`]. Always runs the plane
+/// kernel; bit-exact with [`gemm_i16_lanes_naive`] by the dispatch contract.
+pub fn gemm_i16_lanes_prepacked(
+    pa: &crate::bitslice::packed::WidePlanes,
+    pb: &crate::bitslice::packed::WidePlanes,
+) -> Result<WideLanes> {
+    let cfg = crate::bitslice::kernel::TileConfig::auto_for(pa.rows, pa.cols, pb.cols);
+    crate::bitslice::kernel::gemm_i16_lanes_packed(pa, pb, &cfg)
+}
+
 /// Naive oracle for [`gemm_i16_lanes`]: four-nibble slicing of every operand
 /// element inside the loop nest, as the scheme description reads.
 pub fn gemm_i16_lanes_naive(

@@ -71,11 +71,21 @@ pub struct MicroBatch {
 impl MicroBatch {
     /// Pack jobs into the flat padded input buffer for the variant.
     pub fn build_input(&self, row_len: usize) -> Vec<i32> {
-        let mut buf = vec![0i32; self.batch * row_len];
+        let mut buf = Vec::new();
+        self.build_input_into(row_len, &mut buf);
+        buf
+    }
+
+    /// [`build_input`](Self::build_input) into a caller-owned scratch buffer
+    /// (the worker loop reuses one across batches, so the per-batch stacking
+    /// allocates nothing at the working size). Clear + re-zero first, so
+    /// padding rows never leak a previous batch's rows.
+    pub fn build_input_into(&self, row_len: usize, buf: &mut Vec<i32>) {
+        buf.clear();
+        buf.resize(self.batch * row_len, 0);
         for (i, j) in self.jobs.iter().enumerate() {
             buf[i * row_len..(i + 1) * row_len].copy_from_slice(&j.row);
         }
-        buf
     }
 
     /// Per-output-row noise nonces for the stacked execute: row `i` carries
@@ -243,6 +253,20 @@ mod tests {
         assert_eq!(&buf[0..4], &[7, 7, 7, 7]);
         assert_eq!(&buf[4..8], &[9, 9, 9, 9]);
         assert!(buf[8..].iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn input_packing_into_scratch_rezeros_padding() {
+        // A dirty, larger scratch from a previous batch must not leak into
+        // this batch's padding rows, and refilling must not reallocate.
+        let (j1, _r1) = job(7);
+        let mb = MicroBatch { artifact: "mlp_b8".into(), batch: 8, jobs: vec![j1] };
+        let mut scratch = vec![-1i32; 64];
+        mb.build_input_into(4, &mut scratch);
+        assert_eq!(scratch, mb.build_input(4));
+        let cap = scratch.capacity();
+        mb.build_input_into(4, &mut scratch);
+        assert_eq!(scratch.capacity(), cap, "refill must not reallocate");
     }
 
     #[test]

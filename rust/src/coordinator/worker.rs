@@ -117,6 +117,10 @@ pub fn run_worker(
         }
     };
 
+    // Stacked-input scratch for WorkItem::Batch: one buffer per worker,
+    // refilled per batch (build_input_into re-zeroes padding), so the batch
+    // hot path stops allocating a fresh Vec per micro-batch.
+    let mut batch_input: Vec<i32> = Vec::new();
     for item in rx {
         match item {
             WorkItem::Shutdown => break,
@@ -215,12 +219,13 @@ pub fn run_worker(
                 let members = batch.jobs.len() as u64;
                 let padding = (batch.batch - batch.jobs.len()) as u64;
                 let row_len = batch.jobs.first().map(|j| j.row.len()).unwrap_or(0);
-                let input = batch.build_input(row_len);
+                batch.build_input_into(row_len, &mut batch_input);
                 let nonces = batch.row_nonces();
                 // Per-batch service time: the execute duration alone, as
                 // opposed to the members' enqueue-to-done latencies below.
                 let started = Instant::now();
-                let res = engine.execute_reported_keyed(&batch.artifact, &[&input], &nonces);
+                let res =
+                    engine.execute_reported_keyed(&batch.artifact, &[&batch_input], &nonces);
                 stats.record_service(started.elapsed().as_secs_f64());
                 match res {
                     Ok((out, report)) => {

@@ -19,6 +19,30 @@
 //! `xla` crate compiling HLO text) can slot in behind a cargo feature
 //! without touching the serving stack.
 //!
+//! ## Plan-owns-packed-weights contract
+//!
+//! `plan` is compile-once and `execute_i32` is the per-request hot path, so
+//! backends split bit-slice packing accordingly (pack-once / stream-many,
+//! [`crate::bitslice`]'s prepacked API):
+//!
+//! * **Weight-stationary plans** (`Linear`) pack their weight operand into a
+//!   [`crate::bitslice::PackedB`] at `plan` time. Per-request work performs
+//!   **zero weight-side packing** — only the activation operand is narrowed
+//!   and (where a plane kernel runs) sliced, into a backend-owned scratch
+//!   reused across requests, so the steady-state hot path performs zero
+//!   heap allocation.
+//! * **Ad-hoc GEMM plans** receive B per request, but B almost always
+//!   repeats; backends keep a per-artifact `PackedB` cache in the plan map,
+//!   refreshed by full content equality
+//!   ([`crate::bitslice::PackedB::refresh_wire`]) — never a hash key, which
+//!   could collide and silently serve a stale B.
+//!
+//! Packing placement is invisible to results: prepacked execution is
+//! bit-identical to repack-per-call (property-tested in
+//! `tests/prepacked.rs`), and under noise injection the content-keyed
+//! per-row streams depend only on the exact lane charges, which prepacking
+//! preserves bit-for-bit.
+//!
 //! ## Per-row noise attribution contract
 //!
 //! When a backend injects analog noise, its [`ExecReport`] carries

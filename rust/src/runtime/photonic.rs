@@ -2,7 +2,10 @@
 //!
 //! The backend executes every artifact through the same packed bit-sliced
 //! plans as the software interpreter — results stay bit-identical to the
-//! golden model — but each execute *also* runs the artifact's GEMM shape
+//! golden model, and the weight side streams prepacked exactly as in
+//! [`crate::runtime::software`] (plan-owned [`PackedB`] for Linear,
+//! content-checked per-artifact cache for ad-hoc GEMMs, activation-side
+//! scratch reuse) — but each execute *also* runs the artifact's GEMM shape
 //! through the transaction-level simulator ([`crate::sim::SimEngine`]) and
 //! the conversion/energy accounting ([`crate::arch::cost`]) for a chosen
 //! accelerator design point. The resulting [`ExecReport`] rides back on the
@@ -21,19 +24,27 @@
 //! dynamic batching exact-attributable under noise). Leave it `None` (the
 //! default) for bit-exact serving.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::Arc;
 
 use crate::arch::accel::Accelerator;
+use crate::bitslice::{gemm_i32_prepacked, gemm_lanes_prepacked, PackedB};
 use crate::dnn::layer::GemmShape;
 use crate::fidelity::{AnalogChannel, NoiseParams};
 use crate::optics::link_budget::ArchClass;
 use crate::runtime::artifact::ArtifactMeta;
 use crate::runtime::backend::{BackendExec, ExecBackend, ExecReport, RowNonce};
-use crate::runtime::software::{wire_to_i8, Plan};
+use crate::runtime::software::{wire_to_i8_into, ExecScratch, Plan};
 use crate::sim::engine::SimEngine;
 use crate::units::DataRate;
 use crate::{Error, Result};
+
+/// Capacity cap of the memoized shape-pricing cache: ad-hoc
+/// `execute_gemm_shape` traffic can carry unbounded distinct shapes, so a
+/// long-lived serving shard must not let the memo grow without limit.
+/// Evicted FIFO — steady serving traffic re-uses a small working set of
+/// shapes, so oldest-first is effectively LRU there.
+const REPORT_CACHE_CAP: usize = 256;
 
 /// Design point the photonic backend simulates requests against.
 #[derive(Debug, Clone)]
@@ -98,11 +109,16 @@ impl PhotonicConfig {
     }
 }
 
-/// A planned artifact: the bit-exact execution plan plus the GEMM shape the
-/// simulator prices it at.
+/// A planned artifact: the bit-exact execution plan, the GEMM shape the
+/// simulator prices it at, and (for ad-hoc GEMM artifacts, whose B arrives
+/// per request) the content-checked packed-B cache.
 struct Planned {
     plan: Arc<Plan>,
     shape: GemmShape,
+    /// Per-artifact [`PackedB`] cache for [`Plan::Gemm`] (`None` for Linear
+    /// plans, which own their packed weights; see
+    /// [`crate::runtime::backend`]'s plan-owns-packed-weights contract).
+    gemm_b: Option<PackedB>,
 }
 
 /// The photonic-in-the-loop execution backend.
@@ -113,8 +129,12 @@ pub struct PhotonicBackend {
     /// Pricing is deterministic per shape; memoized so the serving hot path
     /// (every execute, plus one `report_for` per CNN layer per request)
     /// runs the transaction-level simulator once per distinct shape, not
-    /// once per request/group.
+    /// once per request/group. Bounded at [`REPORT_CACHE_CAP`] entries.
     report_cache: HashMap<(usize, usize, usize, usize), ExecReport>,
+    /// Insertion order of `report_cache` keys (FIFO eviction ring).
+    report_order: VecDeque<(usize, usize, usize, usize)>,
+    /// Reusable activation-side scratch (`wire_to_i8` bytes + planes).
+    scratch: ExecScratch,
     channel: Option<AnalogChannel>,
 }
 
@@ -131,9 +151,17 @@ impl PhotonicBackend {
             sim: SimEngine::new(accel),
             plans: HashMap::new(),
             report_cache: HashMap::new(),
+            report_order: VecDeque::new(),
+            scratch: ExecScratch::default(),
             channel,
             cfg,
         })
+    }
+
+    /// Number of memoized shape reports currently held (≤
+    /// [`REPORT_CACHE_CAP`]; exposed for capacity tests and telemetry).
+    pub fn report_cache_len(&self) -> usize {
+        self.report_cache.len()
     }
 
     /// The simulated accelerator.
@@ -158,8 +186,38 @@ impl PhotonicBackend {
             noise_events: 0,
             row_noise: Vec::new(),
         };
+        // Bounded memo: evict the oldest distinct shape once at capacity.
+        if self.report_cache.len() >= REPORT_CACHE_CAP {
+            if let Some(old) = self.report_order.pop_front() {
+                self.report_cache.remove(&old);
+            }
+        }
         self.report_cache.insert(key, r.clone());
+        self.report_order.push_back(key);
         r
+    }
+
+    /// Exact (noise-off) execution through the prepacked hot path: the
+    /// activation wire narrows into the backend scratch, the weight side
+    /// streams from the plan-owned / cached [`PackedB`]. Zero weight-side
+    /// packing, zero allocation at the working size.
+    fn execute_exact(
+        &mut self,
+        plan: &Plan,
+        packed_b: Option<&PackedB>,
+        inputs: &[&[i32]],
+    ) -> Result<Vec<i32>> {
+        let scratch = &mut self.scratch;
+        wire_to_i8_into(inputs[0], &mut scratch.a8);
+        match plan {
+            Plan::Gemm { m, .. } => {
+                let pb = packed_b.expect("gemm plans carry a packed B");
+                gemm_i32_prepacked(&scratch.a8, pb, *m)
+            }
+            Plan::Linear { batch, weights, .. } => {
+                gemm_i32_prepacked(&scratch.a8, weights, *batch)
+            }
+        }
     }
 
     /// Execute through the analog channel: exact three-lane accumulations
@@ -181,25 +239,31 @@ impl PhotonicBackend {
     /// under different nonces decorrelate, while nonce 0 (the default every
     /// caller that never opts in gets) leaves the stream bit-identical to
     /// the plain content-keyed path.
+    ///
+    /// The weight side streams prepacked (`packed_b` for ad-hoc GEMMs, the
+    /// plan-owned planes for Linear); only the activation side is sliced,
+    /// into the backend scratch. This cannot perturb the noise: the lane
+    /// charges are bit-identical to the repack-per-call path (the prepacked
+    /// bit-exactness contract), and each row's noise is a pure function of
+    /// the channel seed, those exact charges, `k` and the nonce.
     fn execute_noisy(
         &mut self,
         plan: &Plan,
+        packed_b: Option<&PackedB>,
         inputs: &[&[i32]],
         nonce: &RowNonce,
     ) -> Result<(Vec<i32>, Vec<u64>)> {
+        let scratch = &mut self.scratch;
+        wire_to_i8_into(inputs[0], &mut scratch.a8);
         let (lanes, k, rows) = match plan {
-            Plan::Gemm { m, k, n } => {
-                let a8 = wire_to_i8(inputs[0]);
-                let b8 = wire_to_i8(inputs[1]);
-                (crate::bitslice::gemm_lanes(&a8, &b8, *m, *k, *n)?, *k, *m)
+            Plan::Gemm { m, k, .. } => {
+                scratch.planes.pack_into(&scratch.a8, *m, *k)?;
+                let pb = packed_b.expect("gemm plans carry a packed B");
+                (gemm_lanes_prepacked(&scratch.planes, pb.planes())?, *k, *m)
             }
-            Plan::Linear { batch, features, outputs, weights } => {
-                let a8 = wire_to_i8(inputs[0]);
-                (
-                    crate::bitslice::gemm_lanes(&a8, weights, *batch, *features, *outputs)?,
-                    *features,
-                    *batch,
-                )
+            Plan::Linear { batch, features, weights, .. } => {
+                scratch.planes.pack_into(&scratch.a8, *batch, *features)?;
+                (gemm_lanes_prepacked(&scratch.planes, weights.planes())?, *features, *batch)
             }
         };
         let exact = lanes.weight_and_add();
@@ -255,7 +319,8 @@ impl ExecBackend for PhotonicBackend {
         }
         let plan = Plan::compile(meta)?;
         let shape = plan_shape(&plan);
-        self.plans.insert(meta.name.clone(), Planned { plan: Arc::new(plan), shape });
+        self.plans
+            .insert(meta.name.clone(), Planned { plan: Arc::new(plan), shape, gemm_b: None });
         Ok(())
     }
 
@@ -277,15 +342,29 @@ impl ExecBackend for PhotonicBackend {
             (p.plan.clone(), p.shape)
         };
         let mut report = self.simulate_shape(&shape);
-        let output = if self.channel.is_some() {
-            let (out, row_noise) = self.execute_noisy(&plan, inputs, nonce)?;
-            report.noise_events = row_noise.iter().sum();
-            report.row_noise = row_noise;
-            out
-        } else {
-            plan.execute(inputs)?
+        // Take the artifact's B cache out of the plan map, refresh it against
+        // this request's wire content (reuse on match, repack in place on
+        // miss), and put it back after the kernels ran against it.
+        let gemm_b = match &*plan {
+            Plan::Gemm { k, n, .. } => {
+                let prev = self.plans.get_mut(name).and_then(|p| p.gemm_b.take());
+                Some(PackedB::refresh_wire(prev, inputs[1], *k, *n)?)
+            }
+            Plan::Linear { .. } => None,
         };
-        Ok(BackendExec { output, report: Some(report) })
+        let result = if self.channel.is_some() {
+            self.execute_noisy(&plan, gemm_b.as_ref(), inputs, nonce).map(|(out, row_noise)| {
+                report.noise_events = row_noise.iter().sum();
+                report.row_noise = row_noise;
+                out
+            })
+        } else {
+            self.execute_exact(&plan, gemm_b.as_ref(), inputs)
+        };
+        if let (Some(pb), Some(entry)) = (gemm_b, self.plans.get_mut(name)) {
+            entry.gemm_b = Some(pb);
+        }
+        Ok(BackendExec { output: result?, report: Some(report) })
     }
 
     fn report_for(&mut self, shape: &GemmShape) -> Option<ExecReport> {
@@ -452,6 +531,47 @@ mod tests {
         let rep = nonced.report.unwrap();
         assert_eq!(rep.row_noise.len(), 2);
         assert_eq!(rep.row_noise.iter().sum::<u64>(), rep.noise_events);
+    }
+
+    #[test]
+    fn report_cache_is_bounded_with_fifo_eviction() {
+        let mut ph = PhotonicBackend::new(PhotonicConfig::spoga()).unwrap();
+        for t in 1..=REPORT_CACHE_CAP + 10 {
+            ph.report_for(&GemmShape { t, k: 4, c: 4, groups: 1 }).unwrap();
+            assert!(ph.report_cache_len() <= REPORT_CACHE_CAP);
+        }
+        assert_eq!(ph.report_cache_len(), REPORT_CACHE_CAP);
+        // A cached shape hits the memo without inserting.
+        ph.report_for(&GemmShape { t: REPORT_CACHE_CAP + 10, k: 4, c: 4, groups: 1 }).unwrap();
+        assert_eq!(ph.report_cache_len(), REPORT_CACHE_CAP);
+        // The oldest shape was evicted; re-pricing it re-inserts at the cap
+        // and stays bit-identical (pricing is deterministic per shape).
+        let again = ph.report_for(&GemmShape { t: 1, k: 4, c: 4, groups: 1 }).unwrap();
+        assert_eq!(ph.report_cache_len(), REPORT_CACHE_CAP);
+        let mut fresh = PhotonicBackend::new(PhotonicConfig::spoga()).unwrap();
+        let first = fresh.report_for(&GemmShape { t: 1, k: 4, c: 4, groups: 1 }).unwrap();
+        assert_eq!(again.sim_latency_s, first.sim_latency_s);
+        assert_eq!(again.energy_j, first.energy_j);
+    }
+
+    #[test]
+    fn adhoc_gemm_b_cache_survives_interleaved_artifacts() {
+        let gemm = meta("gemm_8x8x8 g i32:8x8,i32:8x8 i32:8x8");
+        let mut ph = PhotonicBackend::new(PhotonicConfig::spoga()).unwrap();
+        ph.plan(&gemm).unwrap();
+        let mut rng = SplitMix64::new(41);
+        let (a, b) = (wire(&mut rng, 64), wire(&mut rng, 64));
+        let first = ph.execute_i32("gemm_8x8x8", &[&a, &b]).unwrap();
+        assert!(ph.plans["gemm_8x8x8"].gemm_b.as_ref().unwrap().matches_wire(&b));
+        // Repeat B: cache hit, bit-identical output.
+        let hit = ph.execute_i32("gemm_8x8x8", &[&a, &b]).unwrap();
+        assert_eq!(first.output, hit.output);
+        // Different B: refresh, then the original B repacks bit-identically.
+        let b2 = wire(&mut rng, 64);
+        ph.execute_i32("gemm_8x8x8", &[&a, &b2]).unwrap();
+        assert!(ph.plans["gemm_8x8x8"].gemm_b.as_ref().unwrap().matches_wire(&b2));
+        let back = ph.execute_i32("gemm_8x8x8", &[&a, &b]).unwrap();
+        assert_eq!(first.output, back.output);
     }
 
     #[test]

@@ -3,11 +3,27 @@
 //!
 //! The vendored dependency set has no `xla` crate, so the default build
 //! executes every artifact in software — and does it **through the fast
-//! path**: all matrix math routes through [`crate::bitslice::gemm_i32`],
-//! which dispatches to the packed-plane tiled/threaded kernels
-//! ([`crate::bitslice::kernel`]) for non-trivial shapes. The coordinator
-//! worker pool therefore exercises exactly the same arithmetic the golden
-//! model defines, at engine speed.
+//! path**: all matrix math routes through [`crate::bitslice::gemm_i32`] /
+//! [`crate::bitslice::gemm_i32_prepacked`], which dispatch to the
+//! packed-plane tiled/threaded kernels ([`crate::bitslice::kernel`]) for
+//! non-trivial shapes. The coordinator worker pool therefore exercises
+//! exactly the same arithmetic the golden model defines, at engine speed.
+//!
+//! ## Pack-once / stream-many on the serving path
+//!
+//! `ExecBackend::plan` is compile-once, so the weight side of every plan is
+//! packed **once** and streamed against per request:
+//!
+//! * [`Plan::Linear`] owns its surrogate weights as a
+//!   [`PackedB`] built at compile time — steady-state requests
+//!   perform zero weight-side packing.
+//! * Ad-hoc [`Plan::Gemm`] artifacts receive B per request, but B almost
+//!   always repeats; the backend keeps a per-artifact [`PackedB`] cache in
+//!   its plan map, refreshed by full content equality
+//!   ([`PackedB::refresh_wire`] — collision-proof, unlike a hash key).
+//! * The activation side lands in a per-backend [`ExecScratch`]
+//!   (`wire_to_i8` bytes + nibble planes), so the hot path performs zero
+//!   heap allocation once the scratch has grown to the working size.
 //!
 //! Artifact families are interpreted by their manifest signature:
 //!
@@ -30,7 +46,7 @@
 
 use std::collections::HashMap;
 
-use crate::bitslice;
+use crate::bitslice::{self, NibblePlanes, PackedB};
 use crate::runtime::artifact::ArtifactMeta;
 use crate::runtime::backend::{BackendExec, ExecBackend};
 use crate::testing::SplitMix64;
@@ -56,8 +72,9 @@ pub enum Plan {
         features: usize,
         /// Output features per row.
         outputs: usize,
-        /// Surrogate weight matrix, row-major `features × outputs`.
-        weights: Vec<i8>,
+        /// Surrogate weight matrix, packed once at compile time
+        /// (`features × outputs`, raw bytes + nibble planes).
+        weights: PackedB,
     },
 }
 
@@ -97,7 +114,7 @@ impl Plan {
                     batch,
                     features,
                     outputs,
-                    weights: surrogate_weights(features, outputs),
+                    weights: PackedB::pack(&surrogate_weights(features, outputs), features, outputs)?,
                 })
             }
             other => Err(Error::Runtime(format!(
@@ -109,6 +126,10 @@ impl Plan {
 
     /// Execute the plan on validated inputs (element counts already checked
     /// by the engine against the manifest).
+    ///
+    /// Allocating convenience path (no scratch, no ad-hoc B cache) for
+    /// callers without a backend; [`SoftwareBackend::execute_i32`] is the
+    /// allocation-free serving path.
     pub fn execute(&self, inputs: &[&[i32]]) -> Result<Vec<i32>> {
         match self {
             Plan::Gemm { m, k, n } => {
@@ -116,12 +137,32 @@ impl Plan {
                 let b8 = wire_to_i8(inputs[1]);
                 bitslice::gemm_i32(&a8, &b8, *m, *k, *n)
             }
-            Plan::Linear { batch, features, outputs, weights } => {
+            Plan::Linear { batch, weights, .. } => {
                 let rows = wire_to_i8(inputs[0]);
-                bitslice::gemm_i32(&rows, weights, *batch, *features, *outputs)
+                bitslice::gemm_i32_prepacked(&rows, weights, *batch)
             }
         }
     }
+}
+
+/// Per-backend reusable activation-side scratch: the `wire_to_i8` byte
+/// buffer and (for plane-kernel backends) the activation nibble planes.
+/// Refilled per request, allocation-free at the working size.
+#[derive(Debug, Default)]
+pub(crate) struct ExecScratch {
+    /// Narrowed int8 view of the activation wire input.
+    pub a8: Vec<i8>,
+    /// Activation nibble planes (packed from `a8` where a plane kernel
+    /// consumes them, e.g. the photonic noisy path).
+    pub planes: NibblePlanes,
+}
+
+/// A compiled plan plus its per-artifact ad-hoc B cache (populated only for
+/// [`Plan::Gemm`], where B arrives per request).
+#[derive(Debug)]
+struct PlanEntry {
+    plan: Plan,
+    gemm_b: Option<PackedB>,
 }
 
 /// The software execution backend: a plan cache over [`Plan`], bit-exact to
@@ -131,7 +172,8 @@ impl Plan {
 /// for engines and coordinator workers.
 #[derive(Debug, Default)]
 pub struct SoftwareBackend {
-    plans: HashMap<String, Plan>,
+    plans: HashMap<String, PlanEntry>,
+    scratch: ExecScratch,
 }
 
 impl SoftwareBackend {
@@ -150,16 +192,31 @@ impl ExecBackend for SoftwareBackend {
         if self.plans.contains_key(&meta.name) {
             return Ok(());
         }
-        self.plans.insert(meta.name.clone(), Plan::compile(meta)?);
+        self.plans
+            .insert(meta.name.clone(), PlanEntry { plan: Plan::compile(meta)?, gemm_b: None });
         Ok(())
     }
 
     fn execute_i32(&mut self, name: &str, inputs: &[&[i32]]) -> Result<BackendExec> {
-        let plan = self
+        let entry = self
             .plans
-            .get(name)
+            .get_mut(name)
             .ok_or_else(|| Error::Runtime(format!("{name}: artifact not planned")))?;
-        Ok(BackendExec { output: plan.execute(inputs)?, report: None })
+        let scratch = &mut self.scratch;
+        let output = match &entry.plan {
+            Plan::Gemm { m, k, n } => {
+                wire_to_i8_into(inputs[0], &mut scratch.a8);
+                let pb = PackedB::refresh_wire(entry.gemm_b.take(), inputs[1], *k, *n)?;
+                let out = bitslice::gemm_i32_prepacked(&scratch.a8, &pb, *m);
+                entry.gemm_b = Some(pb);
+                out?
+            }
+            Plan::Linear { batch, weights, .. } => {
+                wire_to_i8_into(inputs[0], &mut scratch.a8);
+                bitslice::gemm_i32_prepacked(&scratch.a8, weights, *batch)?
+            }
+        };
+        Ok(BackendExec { output, report: None })
     }
 }
 
@@ -167,6 +224,13 @@ impl ExecBackend for SoftwareBackend {
 /// the AOT kernels' `convert` does).
 pub(crate) fn wire_to_i8(wire: &[i32]) -> Vec<i8> {
     wire.iter().map(|&v| v as i8).collect()
+}
+
+/// [`wire_to_i8`] into a reusable buffer (the scratch form of the serving
+/// hot path: clear + refill, no allocation at the working size).
+pub(crate) fn wire_to_i8_into(wire: &[i32], buf: &mut Vec<i8>) {
+    buf.clear();
+    buf.extend(wire.iter().map(|&v| v as i8));
 }
 
 /// Deterministic surrogate weight matrix for a `(features → outputs)` linear
@@ -224,10 +288,25 @@ mod tests {
     fn flat_linear_for_mismatched_batch_dims() {
         let plan = Plan::compile(&meta("cnn_raw c.hlo.txt i32:28x28 i32:1x10")).unwrap();
         match &plan {
-            Plan::Linear { batch, features, outputs, .. } => {
+            Plan::Linear { batch, features, outputs, weights } => {
                 assert_eq!((*batch, *features, *outputs), (1, 784, 10));
+                assert_eq!((weights.rows(), weights.cols()), (784, 10));
             }
             other => panic!("expected flat linear, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn linear_plan_weights_packed_once_at_compile_time() {
+        let plan = Plan::compile(&meta("mlp_b2 m.hlo.txt i32:2x8 i32:2x3")).unwrap();
+        match &plan {
+            Plan::Linear { weights, .. } => {
+                assert_eq!(weights.raw(), &surrogate_weights(8, 3)[..]);
+                let fresh = NibblePlanes::pack(&surrogate_weights(8, 3), 8, 3).unwrap();
+                assert_eq!(weights.planes().msn, fresh.msn);
+                assert_eq!(weights.planes().lsn, fresh.lsn);
+            }
+            other => panic!("expected linear, got {other:?}"),
         }
     }
 
@@ -255,5 +334,26 @@ mod tests {
         assert_eq!(ex.output, vec![7, 10, 15, 22]);
         assert!(ex.report.is_none());
         assert!(be.platform().contains("software"));
+    }
+
+    #[test]
+    fn adhoc_gemm_b_cache_reuses_and_refreshes() {
+        let mut be = SoftwareBackend::new();
+        be.plan(&meta("gemm_2x2x2 g.hlo.txt i32:2x2,i32:2x2 i32:2x2")).unwrap();
+        let a = vec![3i32, -1, 2, 5];
+        let b1 = vec![5i32, 6, 7, 8];
+        let b2 = vec![1i32, 0, 0, 1];
+        let expect = |b: &[i32]| {
+            bitslice::gemm_i32(&wire_to_i8(&a), &wire_to_i8(b), 2, 2, 2).unwrap()
+        };
+        // First request populates the cache.
+        assert_eq!(be.execute_i32("gemm_2x2x2", &[&a, &b1]).unwrap().output, expect(&b1));
+        let cached = be.plans["gemm_2x2x2"].gemm_b.as_ref().unwrap();
+        assert!(cached.matches_wire(&b1));
+        // Repeat B is a cache hit and stays bit-identical.
+        assert_eq!(be.execute_i32("gemm_2x2x2", &[&a, &b1]).unwrap().output, expect(&b1));
+        // Changed B refreshes the cache and serves the new content.
+        assert_eq!(be.execute_i32("gemm_2x2x2", &[&a, &b2]).unwrap().output, expect(&b2));
+        assert!(be.plans["gemm_2x2x2"].gemm_b.as_ref().unwrap().matches_wire(&b2));
     }
 }

@@ -82,6 +82,10 @@ fn bitslice_snapshot_keeps_schema() {
             ("naive_gops", Metric),
             ("packed_gops", Metric),
             ("packed_mt_gops", Metric),
+            // Prepacked-B serving rows (pack-once/stream-many): scalar
+            // micro-kernel vs the SIMD default, B packed outside the timer.
+            ("packed_planned_gops", Metric),
+            ("packed_planned_simd_gops", Metric),
             ("speedup_mt_vs_naive", Metric),
         ],
     );

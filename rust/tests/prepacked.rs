@@ -1,0 +1,349 @@
+//! Pack-once / stream-many acceptance suite.
+//!
+//! Pins the PR's bit-exactness contract (see `bitslice/mod.rs` "Prepacked
+//! API" and `runtime/backend.rs` "Plan-owns-packed-weights contract"):
+//!
+//! * every `gemm_*_prepacked` entry point is **bit-identical** to the
+//!   repack-per-call dispatcher and to the `*_naive` oracle across random
+//!   non-tile-multiple shapes, ±extreme operands, and zero-row/zero-col
+//!   artifacts — for both the Simd and Scalar micro-kernels;
+//! * streaming many activations against one packed B never corrupts the
+//!   packed operand (each call agrees with a fresh pack);
+//! * a plan-cached photonic shard **under noise** serves bit-identically
+//!   to a fresh engine at the same seed: content-keyed noise is a pure
+//!   function of the lane charges, which prepacking preserves, so the
+//!   packing-placement change must be invisible end to end — including
+//!   across B-cache hits, refreshes, and interleaved artifacts.
+
+use spoga::bitslice::{
+    gemm_i16_lanes, gemm_i16_lanes_naive, gemm_i16_lanes_prepacked, gemm_i32, gemm_i32_naive,
+    gemm_i32_prepacked, gemm_i32_tiled, gemm_lanes, gemm_lanes_naive, gemm_lanes_packed,
+    gemm_lanes_prepacked, gemm_sliced, gemm_sliced_naive, gemm_sliced_prepacked, pack_b,
+    MicroKernel, NibblePlanes, PackedB, TileConfig, WidePlanes,
+};
+use spoga::coordinator::{Coordinator, CoordinatorConfig};
+use spoga::fidelity::NoiseParams;
+use spoga::runtime::{BackendKind, Engine, PhotonicConfig};
+use spoga::testing::prop::GemmCase;
+use spoga::testing::forall;
+
+// ---------------------------------------------------------------------------
+// kernel-level bit-exactness
+// ---------------------------------------------------------------------------
+
+/// Prepacked entry points agree with the repack-per-call dispatchers and the
+/// naive oracles on random shapes. `max_dim: 14` keeps every case below the
+/// packed-dispatch threshold, so the dispatchers run *naive* while the
+/// prepacked lane/sliced paths always run the packed kernel — the strongest
+/// cross-check available (two independent implementations per case).
+#[test]
+fn prop_prepacked_bit_exact_vs_dispatch_and_naive() {
+    forall(0x9EED_0701, 60, GemmCase { max_dim: 14 }, |(a, b, m, k, n)| {
+        let pb = pack_b(b, *k, *n).unwrap();
+        let pa = NibblePlanes::pack(a, *m, *k).unwrap();
+
+        let direct = gemm_i32_prepacked(a, &pb, *m).unwrap();
+        if direct != gemm_i32(a, b, *m, *k, *n).unwrap()
+            || direct != gemm_i32_naive(a, b, *m, *k, *n).unwrap()
+        {
+            return false;
+        }
+
+        let lanes = gemm_lanes_prepacked(&pa, pb.planes()).unwrap();
+        let lanes_ref = gemm_lanes_naive(a, b, *m, *k, *n).unwrap();
+        if lanes.hi != lanes_ref.hi || lanes.mid != lanes_ref.mid || lanes.lo != lanes_ref.lo {
+            return false;
+        }
+        if lanes.weight_and_add() != gemm_lanes(a, b, *m, *k, *n).unwrap().weight_and_add() {
+            return false;
+        }
+
+        let sl = gemm_sliced_prepacked(&pa, pb.planes()).unwrap();
+        let sl_ref = gemm_sliced_naive(a, b, *m, *k, *n).unwrap();
+        sl.mm == sl_ref.mm
+            && sl.ml == sl_ref.ml
+            && sl.lm == sl_ref.lm
+            && sl.ll == sl_ref.ll
+            && sl.recombine() == gemm_sliced(a, b, *m, *k, *n).unwrap().recombine()
+    });
+}
+
+/// A shape above the packed-dispatch threshold: here the dispatcher runs
+/// the tiled kernel too, so this pins prepacked == tiled == naive at scale
+/// (40³ MACs clears both dispatch gates).
+#[test]
+fn prepacked_matches_tiled_dispatch_above_threshold() {
+    let (m, k, n) = (40, 40, 40);
+    let a: Vec<i8> = (0..m * k).map(|v| ((v * 37 + 11) % 256) as u8 as i8).collect();
+    let b: Vec<i8> = (0..k * n).map(|v| ((v * 73 + 5) % 256) as u8 as i8).collect();
+    let pb = pack_b(&b, k, n).unwrap();
+    let pa = NibblePlanes::pack(&a, m, k).unwrap();
+
+    let naive = gemm_i32_naive(&a, &b, m, k, n).unwrap();
+    assert_eq!(gemm_i32_prepacked(&a, &pb, m).unwrap(), naive);
+    assert_eq!(gemm_i32(&a, &b, m, k, n).unwrap(), naive);
+    assert_eq!(
+        gemm_lanes_prepacked(&pa, pb.planes()).unwrap().weight_and_add(),
+        naive
+    );
+    assert_eq!(gemm_sliced_prepacked(&pa, pb.planes()).unwrap().recombine(), naive);
+}
+
+/// ±extreme operands (full i8 corners incl. -128) through both micro-kernels
+/// at a width exercising two full SIMD blocks plus a 7-wide scalar tail.
+#[test]
+fn extreme_operands_bit_exact_across_micro_kernels() {
+    let (m, k, n) = (5, 19, 23);
+    let corners: [i8; 7] = [-128, 127, 0, -1, 1, 64, -64];
+    let a: Vec<i8> = (0..m * k).map(|v| corners[v % corners.len()]).collect();
+    let b: Vec<i8> = (0..k * n).map(|v| corners[(v * 3 + 1) % corners.len()]).collect();
+    let pb = pack_b(&b, k, n).unwrap();
+    let pa = NibblePlanes::pack(&a, m, k).unwrap();
+    let naive = gemm_i32_naive(&a, &b, m, k, n).unwrap();
+    let lanes_ref = gemm_lanes_naive(&a, &b, m, k, n).unwrap();
+
+    for micro in [MicroKernel::Simd, MicroKernel::Scalar] {
+        let cfg = TileConfig { kc: 7, jc: 9, threads: 2, micro };
+        assert_eq!(
+            gemm_i32_tiled(&a, pb.raw(), m, k, n, &cfg).unwrap(),
+            naive,
+            "direct kernel diverged under {micro:?}"
+        );
+        let lanes = gemm_lanes_packed(&pa, pb.planes(), &cfg).unwrap();
+        assert_eq!(
+            (lanes.hi, lanes.mid, lanes.lo),
+            (lanes_ref.hi.clone(), lanes_ref.mid.clone(), lanes_ref.lo.clone()),
+            "lane kernel diverged under {micro:?}"
+        );
+    }
+    // The auto-config prepacked entry points agree with the same oracles.
+    assert_eq!(gemm_i32_prepacked(&a, &pb, m).unwrap(), naive);
+    assert_eq!(gemm_lanes_prepacked(&pa, pb.planes()).unwrap().weight_and_add(), naive);
+}
+
+/// Zero-row and zero-col operands (the `gemm_0x8x4`-style artifacts) pass
+/// cleanly through every prepacked path: empty outputs, no panic. The lane
+/// path matters most — prepacked serving runs the packed kernel even for
+/// shapes the dispatcher would have routed to naive.
+#[test]
+fn zero_row_and_zero_col_prepacked() {
+    // m == 0: empty A against a real packed B.
+    let b: Vec<i8> = (0..8 * 4).map(|v| (v as i8).wrapping_mul(9)).collect();
+    let pb = pack_b(&b, 8, 4).unwrap();
+    let pa0 = NibblePlanes::pack(&[], 0, 8).unwrap();
+    assert!(gemm_i32_prepacked(&[], &pb, 0).unwrap().is_empty());
+    let lanes = gemm_lanes_prepacked(&pa0, pb.planes()).unwrap();
+    assert!(lanes.hi.is_empty() && lanes.mid.is_empty() && lanes.lo.is_empty());
+    assert!(gemm_sliced_prepacked(&pa0, pb.planes()).unwrap().mm.is_empty());
+
+    // n == 0: real A against an empty-column packed B.
+    let a: Vec<i8> = (0..2 * 8).map(|v| (v as i8).wrapping_sub(7)).collect();
+    let pb0 = pack_b(&[], 8, 0).unwrap();
+    let pa = NibblePlanes::pack(&a, 2, 8).unwrap();
+    assert!(gemm_i32_prepacked(&a, &pb0, 2).unwrap().is_empty());
+    assert!(gemm_lanes_prepacked(&pa, pb0.planes()).unwrap().hi.is_empty());
+}
+
+/// INT16 wide prepacked path agrees with the dispatcher and the naive
+/// oracle, including i16 corners.
+#[test]
+fn wide_prepacked_bit_exact() {
+    let (m, k, n) = (3, 11, 10);
+    let corners: [i16; 6] = [i16::MIN, i16::MAX, 0, -1, 256, -4096];
+    let a: Vec<i16> = (0..m * k).map(|v| corners[v % corners.len()]).collect();
+    let b: Vec<i16> = (0..k * n).map(|v| corners[(v * 5 + 2) % corners.len()]).collect();
+    let pa = WidePlanes::pack(&a, m, k).unwrap();
+    let pb = WidePlanes::pack(&b, k, n).unwrap();
+
+    let got = gemm_i16_lanes_prepacked(&pa, &pb).unwrap().weight_and_add();
+    assert_eq!(got, gemm_i16_lanes(&a, &b, m, k, n).unwrap().weight_and_add());
+    assert_eq!(got, gemm_i16_lanes_naive(&a, &b, m, k, n).unwrap().weight_and_add());
+}
+
+/// Stream-many: one packed B serves a stream of activations; every answer
+/// matches a fresh pack-per-call run, and the packed operand is bitwise
+/// unchanged afterwards.
+#[test]
+fn streaming_reuses_packed_b_without_corruption() {
+    let (m, k, n) = (4, 12, 9);
+    let b: Vec<i8> = (0..k * n).map(|v| ((v * 29 + 3) % 256) as u8 as i8).collect();
+    let pb = pack_b(&b, k, n).unwrap();
+    let raw_before = pb.raw().to_vec();
+
+    for step in 0..10 {
+        let a: Vec<i8> =
+            (0..m * k).map(|v| ((v * 13 + step * 41) % 256) as u8 as i8).collect();
+        let fresh = pack_b(&b, k, n).unwrap();
+        assert_eq!(
+            gemm_i32_prepacked(&a, &pb, m).unwrap(),
+            gemm_i32_prepacked(&a, &fresh, m).unwrap(),
+            "stream step {step} diverged from a fresh pack"
+        );
+        assert_eq!(
+            gemm_i32_prepacked(&a, &pb, m).unwrap(),
+            gemm_i32_naive(&a, &b, m, k, n).unwrap(),
+            "stream step {step} diverged from naive"
+        );
+    }
+    assert_eq!(pb.raw(), &raw_before[..], "streaming mutated the packed operand");
+    let wire: Vec<i32> = b.iter().map(|&v| v as i32).collect();
+    assert!(pb.matches_wire(&wire), "content identity lost after streaming");
+}
+
+/// `refresh_wire` reuse is content-exact: after a hit the packed B computes
+/// the same answers as a from-scratch pack; after a miss it computes the
+/// *new* B's answers (no stale plane data survives the in-place repack).
+#[test]
+fn refresh_wire_preserves_and_replaces_content_exactly() {
+    let (m, k, n) = (3, 10, 8);
+    let a: Vec<i8> = (0..m * k).map(|v| (v as i8).wrapping_mul(17)).collect();
+    let b1: Vec<i32> = (0..k * n).map(|v| ((v * 7) % 200) as i32 - 100).collect();
+    let b2: Vec<i32> = b1.iter().map(|v| -v).collect();
+    let b1_i8: Vec<i8> = b1.iter().map(|&v| v as i8).collect();
+    let b2_i8: Vec<i8> = b2.iter().map(|&v| v as i8).collect();
+
+    let first = PackedB::refresh_wire(None, &b1, k, n).unwrap();
+    let hit = PackedB::refresh_wire(Some(first), &b1, k, n).unwrap();
+    assert_eq!(
+        gemm_i32_prepacked(&a, &hit, m).unwrap(),
+        gemm_i32_naive(&a, &b1_i8, m, k, n).unwrap()
+    );
+    let miss = PackedB::refresh_wire(Some(hit), &b2, k, n).unwrap();
+    assert_eq!(
+        gemm_i32_prepacked(&a, &miss, m).unwrap(),
+        gemm_i32_naive(&a, &b2_i8, m, k, n).unwrap(),
+        "repacked-in-place B must compute the new operand's results"
+    );
+    let lanes = gemm_lanes_prepacked(
+        &NibblePlanes::pack(&a, m, k).unwrap(),
+        miss.planes(),
+    )
+    .unwrap();
+    assert_eq!(
+        lanes.weight_and_add(),
+        gemm_lanes_naive(&a, &b2_i8, m, k, n).unwrap().weight_and_add(),
+        "stale nibble planes survived the refresh"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// serving-level: plan-cached photonic shard under noise
+// ---------------------------------------------------------------------------
+
+const MANIFEST: &str = "\
+gemm_8x8x8 g.hlo.txt i32:8x8,i32:8x8 i32:8x8
+gemm_0x8x4 g0.hlo.txt i32:0x8,i32:8x4 i32:0x4
+mlp_b1 m1.hlo.txt i32:1x16 i32:1x4
+mlp_b4 m4.hlo.txt i32:4x16 i32:4x4
+";
+
+fn synthetic_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("spoga-prepacked-test-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.txt"), MANIFEST).unwrap();
+    dir
+}
+
+fn noisy_kind(seed: u64) -> BackendKind {
+    BackendKind::Photonic(
+        PhotonicConfig::spoga().with_noise(NoiseParams::from_link_margin(0.0), seed),
+    )
+}
+
+/// A plan-cached photonic shard under loud noise serves bit-identically to
+/// a fresh engine at the same seed — across B-cache hits (same B twice),
+/// refreshes (a different B in between), and an interleaved second artifact.
+/// Content-keyed noise draws from the exact lane charges, which prepacking
+/// preserves bit for bit, so the cache must be unobservable in the outputs.
+#[test]
+fn plan_cached_photonic_shard_under_noise_matches_fresh_engine() {
+    let dir = synthetic_dir("noisy-cache");
+    let seed = 0x7ACC_ED_B5;
+    let c = Coordinator::start(CoordinatorConfig {
+        artifact_dir: dir.to_string_lossy().into_owned(),
+        workers: 1,
+        backend: noisy_kind(seed),
+        max_batch_wait_s: 0.01,
+        ..Default::default()
+    })
+    .unwrap();
+    let h = c.handle();
+
+    let a: Vec<i32> = (0..64).map(|v| ((v * 31) % 251) - 125).collect();
+    let b1: Vec<i32> = (0..64).map(|v| ((v * 17) % 251) - 125).collect();
+    let b2: Vec<i32> = (0..64).map(|v| ((v * 53 + 7) % 251) - 125).collect();
+
+    // hit, refresh, refresh-back; plus the zero-row artifact in between so
+    // the per-artifact caches prove they do not cross-contaminate.
+    let traffic: Vec<(&str, &Vec<i32>, &Vec<i32>)> = vec![
+        ("gemm_8x8x8", &a, &b1),
+        ("gemm_8x8x8", &a, &b1),
+        ("gemm_8x8x8", &a, &b2),
+        ("gemm_8x8x8", &a, &b1),
+    ];
+    let mut served = Vec::new();
+    for (artifact, a, b) in &traffic {
+        served.push(h.gemm_reply(artifact, (*a).clone(), (*b).clone()).unwrap());
+    }
+    let zb: Vec<i32> = (0..32).map(|v| (v % 200) - 100).collect();
+    let zero = h.gemm_reply("gemm_0x8x4", Vec::new(), zb.clone()).unwrap();
+    assert!(zero.outputs.is_empty(), "zero-row artifact must serve empty under noise");
+    // After the interleaved artifact, the first cache still answers exactly.
+    served.push(h.gemm_reply("gemm_8x8x8", a.clone(), b1.clone()).unwrap());
+    c.shutdown();
+
+    // Oracle: a *fresh* engine per request at the same seed — no caches
+    // carry over, only the (seed, content) noise key.
+    let mut oracle = Vec::new();
+    for (artifact, a, b) in traffic.iter().chain([&("gemm_8x8x8", &a, &b1)]) {
+        let mut eng = Engine::with_backend(&dir, noisy_kind(seed)).unwrap();
+        oracle.push(eng.execute_reported(artifact, &[a, b]).unwrap());
+    }
+    let mut noise_total = 0u64;
+    for (i, (reply, (gold, gold_rep))) in served.iter().zip(&oracle).enumerate() {
+        assert_eq!(reply.outputs, *gold, "request {i}: plan-cached outputs diverged");
+        let (rep, gold_rep) = (reply.report.as_ref().unwrap(), gold_rep.as_ref().unwrap());
+        assert_eq!(
+            rep.noise_events, gold_rep.noise_events,
+            "request {i}: noise accounting diverged"
+        );
+        assert_eq!(rep.row_noise, gold_rep.row_noise, "request {i}: row attribution");
+        noise_total += rep.noise_events;
+    }
+    // Cache hits must return the *same* bits, and the property must bite:
+    // a 0 dB channel actually perturbs.
+    assert_eq!(served[0].outputs, served[1].outputs, "B-cache hit changed the answer");
+    assert_eq!(served[0].outputs, served[3].outputs, "refresh-back changed the answer");
+    assert_ne!(served[0].outputs, served[2].outputs, "different B must differ");
+    assert!(noise_total > 0, "loud channel produced no noise events");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The same invariant on the *software* backend (weight-side packing cached
+/// per plan): plan-cached GEMM replies equal a fresh engine's, exactly.
+#[test]
+fn plan_cached_software_shard_matches_fresh_engine() {
+    let dir = synthetic_dir("sw-cache");
+    let c = Coordinator::start(CoordinatorConfig {
+        artifact_dir: dir.to_string_lossy().into_owned(),
+        workers: 1,
+        backend: BackendKind::Software,
+        max_batch_wait_s: 0.01,
+        ..Default::default()
+    })
+    .unwrap();
+    let h = c.handle();
+    let a: Vec<i32> = (0..64).map(|v| ((v * 7) % 255) - 127).collect();
+    let b1: Vec<i32> = (0..64).map(|v| ((v * 11) % 255) - 127).collect();
+    let b2: Vec<i32> = (0..64).map(|v| -(((v * 11) % 255) - 127)).collect();
+
+    for b in [&b1, &b1, &b2, &b1] {
+        let reply = h.gemm_reply("gemm_8x8x8", a.clone(), b.clone()).unwrap();
+        let mut eng = Engine::with_backend(&dir, BackendKind::Software).unwrap();
+        let (gold, _) = eng.execute_reported("gemm_8x8x8", &[&a, b]).unwrap();
+        assert_eq!(reply.outputs, gold);
+    }
+    c.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}

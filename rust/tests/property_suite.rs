@@ -4,7 +4,7 @@
 use spoga::bitslice::{
     combine, gemm_i16_lanes_naive, gemm_i16_lanes_tiled, gemm_i32, gemm_i32_naive,
     gemm_i32_tiled, gemm_lanes, gemm_lanes_naive, gemm_lanes_tiled, gemm_sliced,
-    gemm_sliced_naive, gemm_sliced_tiled, slice_i8, TileConfig,
+    gemm_sliced_naive, gemm_sliced_tiled, slice_i8, MicroKernel, TileConfig,
 };
 use spoga::dnn::layer::GemmShape;
 use spoga::optics::link_budget::{ArchClass, LinkBudget};
@@ -71,12 +71,16 @@ fn prop_gemm_distributes_over_split_k() {
 
 /// Tile configs that force partial k/j blocks and multi-band threading even
 /// on the small shapes the generator produces (non-tile-multiple on purpose).
+/// Scalar and Simd micro-kernels are both represented so every property in
+/// this file cross-checks the register-blocked path against the scalar one.
 fn oracle_stress_cfgs() -> Vec<TileConfig> {
     vec![
-        TileConfig { kc: 1, jc: 1, threads: 1 },
-        TileConfig { kc: 3, jc: 2, threads: 2 },
-        TileConfig { kc: 5, jc: 7, threads: 4 },
-        TileConfig { kc: 4096, jc: 4096, threads: 3 },
+        TileConfig { kc: 1, jc: 1, threads: 1, micro: MicroKernel::Scalar },
+        TileConfig { kc: 3, jc: 2, threads: 2, micro: MicroKernel::Simd },
+        TileConfig { kc: 5, jc: 7, threads: 4, micro: MicroKernel::Scalar },
+        TileConfig { kc: 5, jc: 7, threads: 4, micro: MicroKernel::Simd },
+        TileConfig { kc: 4096, jc: 4096, threads: 3, micro: MicroKernel::Scalar },
+        TileConfig { kc: 4096, jc: 4096, threads: 3, micro: MicroKernel::Simd },
     ]
 }
 
