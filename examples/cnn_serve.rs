@@ -1,0 +1,118 @@
+//! Compile-once / stream-many CNN serving walkthrough.
+//!
+//! Compiles a `CnnPlan` per (model, backend) — surrogate weights packed
+//! into `PackedB` planes at compile time — then streams a request burst
+//! through the persistent scratch arena and the backends' direct-i8 entry.
+//! Demonstrates: plan-cache reuse, bit-equality with the retained legacy
+//! wire path, cross-backend logit agreement, and per-request photonic
+//! telemetry riding the compiled path unchanged.
+//!
+//! Run: `cargo run --release --example cnn_serve [stream_len]`
+//! (`stream_len` defaults to 64 frames.)
+
+use spoga::dnn::models::CnnModel;
+use spoga::dnn::Layer;
+use spoga::fidelity::NoiseParams;
+use spoga::report::{fmt_sig, Table};
+use spoga::runtime::{
+    run_cnn_batch_keyed, run_cnn_batch_keyed_reference, BackendKind, Engine, PhotonicConfig,
+};
+
+fn edge_model() -> CnnModel {
+    CnnModel {
+        name: "serve_edge",
+        layers: vec![
+            Layer::conv("stem", 12, 12, 3, 8, 3, 2, 1),
+            Layer::dwconv("dw1", 6, 6, 8, 3, 1, 1),
+            Layer::conv("pw1", 6, 6, 8, 16, 1, 1, 0),
+            Layer::fc("head", 6 * 6 * 16, 10),
+        ],
+    }
+}
+
+fn main() {
+    let stream_len: usize = std::env::args().nth(1).and_then(|v| v.parse().ok()).unwrap_or(64);
+    let dir = std::env::temp_dir().join(format!("spoga-cnn-serve-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.txt"), "mlp_b1 m i32:1x16 i32:1x4\n").unwrap();
+
+    let model = edge_model();
+    let input_len = 12 * 12 * 3;
+    let frames: Vec<Vec<i32>> = (0..stream_len)
+        .map(|f| (0..input_len).map(|v| (((v * 31) + f * 97) % 251) as i32 - 125).collect())
+        .collect();
+
+    let backends = [
+        ("software", BackendKind::Software),
+        ("photonic", BackendKind::Photonic(PhotonicConfig::spoga())),
+        (
+            "photonic+noise",
+            BackendKind::Photonic(
+                PhotonicConfig::spoga().with_noise(NoiseParams::from_link_margin(0.0), 0x5E2E),
+            ),
+        ),
+    ];
+
+    let mut t = Table::new(vec!["backend", "frames", "frames/s (plan)", "noise events"]);
+    let mut logits_by_backend: Vec<Vec<i32>> = Vec::new();
+    for (label, kind) in &backends {
+        let mut eng = Engine::with_backend(&dir, kind.clone()).unwrap();
+        // Compile once: the first request pays weight packing, the rest hit
+        // the cached plan (full-model-equality revalidated).
+        let plan = eng.cnn_plan(&model).unwrap();
+        println!(
+            "{label}: compiled plan for {} ({} layers, {} packed weight matrices)",
+            model.name,
+            model.layers.len(),
+            plan.packed_matrices()
+        );
+
+        // Stream the burst in mixed batch sizes, like a coordinator would.
+        let t0 = std::time::Instant::now();
+        let mut served = 0usize;
+        let mut noise_events = 0u64;
+        let mut last_logits = Vec::new();
+        for chunk in frames.chunks(5) {
+            let refs: Vec<&[i32]> = chunk.iter().map(|f| f.as_slice()).collect();
+            let runs = run_cnn_batch_keyed(&mut eng, &model, &refs, &[]).unwrap();
+            served += runs.len();
+            for r in &runs {
+                if let Some(rep) = &r.report {
+                    noise_events += rep.noise_events;
+                }
+            }
+            last_logits = runs.last().unwrap().logits.clone();
+        }
+        let secs = t0.elapsed().as_secs_f64();
+
+        // The retained legacy path must agree bit for bit on this stream's
+        // final frame (the oracle `tests/cnn_plan.rs` pins exhaustively).
+        let mut legacy_eng = Engine::with_backend(&dir, kind.clone()).unwrap();
+        let last = vec![frames.last().unwrap().as_slice()];
+        let legacy = run_cnn_batch_keyed_reference(&mut legacy_eng, &model, &last, &[]).unwrap();
+        assert_eq!(legacy[0].logits, last_logits, "{label}: plan diverged from legacy path");
+
+        t.row(vec![
+            label.to_string(),
+            served.to_string(),
+            fmt_sig(served as f64 / secs, 3),
+            noise_events.to_string(),
+        ]);
+        logits_by_backend.push(last_logits);
+    }
+    println!("{}", t.render());
+
+    // Exact backends agree bit for bit; the noisy backend serves the analog
+    // observation (decorrelated by design at 0 dB link margin).
+    assert_eq!(logits_by_backend[0], logits_by_backend[1], "software vs photonic logits");
+    println!(
+        "software == photonic logits (bit-exact); noisy backend diverged on {} of {} outputs",
+        logits_by_backend[0]
+            .iter()
+            .zip(&logits_by_backend[2])
+            .filter(|(a, b)| a != b)
+            .count(),
+        logits_by_backend[0].len()
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,161 @@
+//! Bench: whole-CNN serving hot path — the legacy wire-format lowering
+//! (`run_cnn_batch_keyed_reference`: per-request im2col allocation,
+//! i8→i32→i8 wire round-trips, per-plan weight revalidation) vs the
+//! compiled-plan path (`run_cnn_batch_keyed`: compile-time `PackedB`
+//! weights, persistent scratch arena, direct-i8 backend entry), across
+//! batch ∈ {1, 4, 16} and the scalar vs SIMD micro-kernels (plus AVX2 rows
+//! when the host detects it).
+//!
+//! Results are printed as a table and written as JSON (default
+//! `BENCH_cnn.json`, override with the `CNN_BENCH_OUT` env var) so future
+//! perf PRs have a trajectory baseline. The committed snapshot stays
+//! `pending-first-run` (schema guarded by `rust/tests/bench_schema.rs`)
+//! until a toolchain host runs this.
+//!
+//! Run: `cargo bench --bench cnn_hotpath [iter_scale]`
+//! (`iter_scale` defaults to 1; pass 0 for a single-iteration smoke pass.)
+
+use spoga::benchkit::bench;
+use spoga::bitslice::{avx2_available, set_micro_override, MicroKernel};
+use spoga::dnn::models::CnnModel;
+use spoga::dnn::Layer;
+use spoga::report::{fmt_ratio, fmt_sig, Table};
+use spoga::runtime::{run_cnn_batch_keyed, run_cnn_batch_keyed_reference, Engine};
+
+/// An edge-CNN-shaped model: strided stem, depthwise + pointwise pair, FC
+/// head — enough im2col/group/FC variety to exercise every serving arm.
+fn bench_model() -> CnnModel {
+    CnnModel {
+        name: "bench_edge",
+        layers: vec![
+            Layer::conv("stem", 16, 16, 3, 16, 3, 2, 1),
+            Layer::dwconv("dw1", 8, 8, 16, 3, 1, 1),
+            Layer::conv("pw1", 8, 8, 16, 32, 1, 1, 0),
+            Layer::fc("head", 8 * 8 * 32, 10),
+        ],
+    }
+}
+
+fn synthetic_dir() -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("spoga-cnn-bench-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.txt"), "mlp_b1 m i32:1x16 i32:1x4\n").unwrap();
+    dir
+}
+
+struct Row {
+    path: &'static str,
+    micro: &'static str,
+    batch: usize,
+    frames_per_s: f64,
+    speedup_vs_legacy: f64,
+}
+
+fn main() {
+    let iter_scale: usize = std::env::args().nth(1).and_then(|v| v.parse().ok()).unwrap_or(1);
+    let dir = synthetic_dir();
+    let model = bench_model();
+    let input_len = 16 * 16 * 3;
+    let frames: Vec<Vec<i32>> = (0..16)
+        .map(|f| (0..input_len).map(|v| (((v * 31) + f * 97) % 251) as i32 - 125).collect())
+        .collect();
+
+    // Smoke check before timing anything: the plan path must serve the
+    // legacy path's logits bit for bit under every micro-kernel.
+    for micro in [MicroKernel::Scalar, MicroKernel::Simd, MicroKernel::Avx2] {
+        set_micro_override(Some(micro));
+        let refs: Vec<&[i32]> = frames.iter().take(4).map(|f| f.as_slice()).collect();
+        let mut plan_eng = Engine::new(&dir).unwrap();
+        let mut ref_eng = Engine::new(&dir).unwrap();
+        let planned = run_cnn_batch_keyed(&mut plan_eng, &model, &refs, &[]).unwrap();
+        let legacy = run_cnn_batch_keyed_reference(&mut ref_eng, &model, &refs, &[]).unwrap();
+        for (p, l) in planned.iter().zip(&legacy) {
+            assert_eq!(p.logits, l.logits, "plan path diverged under {micro:?}");
+        }
+    }
+    set_micro_override(None);
+
+    let mut micros = vec![("scalar", MicroKernel::Scalar), ("simd", MicroKernel::Simd)];
+    if avx2_available() {
+        micros.push(("avx2", MicroKernel::Avx2));
+    }
+    println!(
+        "CNN serving hot path: legacy wire lowering vs compiled plan (avx2 {})\n",
+        if avx2_available() { "detected" } else { "absent" },
+    );
+
+    let mut rows: Vec<Row> = Vec::new();
+    let mut t = Table::new(vec![
+        "micro",
+        "batch",
+        "legacy (frames/s)",
+        "plan (frames/s)",
+        "plan vs legacy",
+    ]);
+    for &(micro_name, micro) in &micros {
+        set_micro_override(Some(micro));
+        for batch in [1usize, 4, 16] {
+            let refs: Vec<&[i32]> = frames.iter().take(batch).map(|f| f.as_slice()).collect();
+            // ~40 serving calls per timed cell at scale 1, floor of 1.
+            let iters = (40 * iter_scale / batch).max(1);
+            let warmup = 1;
+            let mut ref_eng = Engine::new(&dir).unwrap();
+            let legacy = bench(warmup, iters, || {
+                run_cnn_batch_keyed_reference(&mut ref_eng, &model, &refs, &[]).unwrap()
+            });
+            let mut plan_eng = Engine::new(&dir).unwrap();
+            let plan = bench(warmup, iters, || {
+                run_cnn_batch_keyed(&mut plan_eng, &model, &refs, &[]).unwrap()
+            });
+            let legacy_fps = batch as f64 / legacy.min_s;
+            let plan_fps = batch as f64 / plan.min_s;
+            rows.push(Row {
+                path: "legacy",
+                micro: micro_name,
+                batch,
+                frames_per_s: legacy_fps,
+                speedup_vs_legacy: 1.0,
+            });
+            rows.push(Row {
+                path: "plan",
+                micro: micro_name,
+                batch,
+                frames_per_s: plan_fps,
+                speedup_vs_legacy: plan_fps / legacy_fps,
+            });
+            t.row(vec![
+                micro_name.to_string(),
+                batch.to_string(),
+                fmt_sig(legacy_fps, 3),
+                fmt_sig(plan_fps, 3),
+                fmt_ratio(plan_fps / legacy_fps),
+            ]);
+        }
+    }
+    set_micro_override(None);
+    println!("{}", t.render());
+
+    // JSON snapshot for the perf trajectory.
+    let out_path = std::env::var("CNN_BENCH_OUT").unwrap_or_else(|_| "BENCH_cnn.json".to_string());
+    let cells: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "    {{\"path\": \"{}\", \"micro\": \"{}\", \"batch\": {}, \
+                 \"frames_per_s\": {:.3}, \"speedup_vs_legacy\": {:.3}}}",
+                r.path, r.micro, r.batch, r.frames_per_s, r.speedup_vs_legacy
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"cnn_hotpath\",\n  \
+         \"note\": \"acceptance: plan >= legacy frames/s at every (micro, batch) cell\",\n  \
+         \"status\": \"measured\",\n  \"results\": [\n{}\n  ]\n}}\n",
+        cells.join(",\n")
+    );
+    match std::fs::write(&out_path, &json) {
+        Ok(()) => println!("wrote {out_path}"),
+        Err(e) => eprintln!("could not write {out_path}: {e}"),
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -81,6 +81,18 @@ pub fn gemm_i32_prepacked(a: &[i8], b: &PackedB, m: usize) -> Result<Vec<i32>> {
     }
 }
 
+/// [`gemm_i32_prepacked`] writing into a caller-owned output vector (cleared
+/// and resized to `m·n`) — the zero-allocation serving form: B packed in a
+/// plan, A in a scratch arena, C in a reused buffer. Same size dispatch and
+/// bit-exactness contract as [`gemm_i32_prepacked`].
+pub fn gemm_i32_prepacked_into(a: &[i8], b: &PackedB, m: usize, c: &mut Vec<i32>) -> Result<()> {
+    let (k, n) = (b.rows(), b.cols());
+    match kernel::dispatch_config(m, k, n) {
+        Some(cfg) => kernel::gemm_i32_tiled_into(a, b.raw(), m, k, n, &cfg, c),
+        None => gemm_i32_naive_into(a, b.raw(), m, k, n, c),
+    }
+}
+
 /// [`gemm_lanes`] over operands sliced ahead of time (A from a per-request
 /// scratch, B from a plan). Always runs the plane kernel — both operands are
 /// already planes, so there is nothing for the naive path to save — and is
@@ -97,8 +109,24 @@ pub fn gemm_sliced_prepacked(pa: &NibblePlanes, pb: &NibblePlanes) -> Result<Sli
 
 /// Naive oracle for [`gemm_i32`]: the transparent three-loop reference.
 pub fn gemm_i32_naive(a: &[i8], b: &[i8], m: usize, k: usize, n: usize) -> Result<Vec<i32>> {
+    let mut c = Vec::new();
+    gemm_i32_naive_into(a, b, m, k, n, &mut c)?;
+    Ok(c)
+}
+
+/// [`gemm_i32_naive`] into a caller-owned buffer (cleared and resized);
+/// the small-problem arm of [`gemm_i32_prepacked_into`]'s dispatch.
+pub fn gemm_i32_naive_into(
+    a: &[i8],
+    b: &[i8],
+    m: usize,
+    k: usize,
+    n: usize,
+    c: &mut Vec<i32>,
+) -> Result<()> {
     check_dims(a, b, m, k, n)?;
-    let mut c = vec![0i32; m * n];
+    c.clear();
+    c.resize(m * n, 0);
     for i in 0..m {
         for kk in 0..k {
             let av = a[i * k + kk] as i32;
@@ -112,7 +140,7 @@ pub fn gemm_i32_naive(a: &[i8], b: &[i8], m: usize, k: usize, n: usize) -> Resul
             }
         }
     }
-    Ok(c)
+    Ok(())
 }
 
 /// The four intermediate matrices of the prior-work bit-sliced dataflow
@@ -354,6 +382,24 @@ mod tests {
         assert_eq!(lanes.lo, expect.lo);
         let sliced = gemm_sliced_prepacked(&pa, pb.planes()).unwrap();
         assert_eq!(sliced.recombine(), gemm_sliced_naive(&a, &b, m, k, n).unwrap().recombine());
+    }
+
+    #[test]
+    fn prepacked_into_matches_allocating_on_both_dispatch_arms() {
+        // One shape below the packed threshold (naive arm), one above
+        // (tiled arm); the reused buffer must match the allocating call on
+        // both, including after a dirty prior fill.
+        for (m, k, n) in [(3usize, 5usize, 4usize), (64, 16, 64)] {
+            let a: Vec<i8> = (0..m * k).map(|i| (i * 31 + 5) as i8).collect();
+            let b: Vec<i8> = (0..k * n).map(|i| (i * 17 + 3) as i8).collect();
+            let pb = pack_b(&b, k, n).unwrap();
+            let want = gemm_i32_prepacked(&a, &pb, m).unwrap();
+            let mut c = vec![-1i32; 7];
+            gemm_i32_prepacked_into(&a, &pb, m, &mut c).unwrap();
+            assert_eq!(c, want);
+            gemm_i32_prepacked_into(&a, &pb, m, &mut c).unwrap();
+            assert_eq!(c, want);
+        }
     }
 
     #[test]

@@ -20,15 +20,23 @@
 //!    the output (`split_at_mut`), so there is no synchronization on the hot
 //!    path.
 //! 4. **Micro-kernel selection** ([`MicroKernel`]) — the innermost j-loop
-//!    runs either the historical scalar axpy (`Scalar`, kept as a second
-//!    oracle next to `*_naive`) or a register-blocked kernel (`Simd`, the
-//!    default): fixed-width `[i32; BLOCK_W]` accumulators held across a
-//!    k-panel over unit-stride `plane_row` slices — a shape LLVM's
-//!    autovectorizer turns into SIMD on every target — plus a hand-written
-//!    SSE2 block for the direct i32 kernel on `x86_64` (SSE2 is baseline
-//!    there, so no runtime feature detection). Integer addition is exactly
-//!    associative, so reassociating the k-panel sums into registers is
-//!    bit-exact by construction and pinned by the property suites.
+//!    runs the historical scalar axpy (`Scalar`, kept as a second oracle
+//!    next to `*_naive`), a register-blocked kernel (`Simd`): fixed-width
+//!    `[i32; BLOCK_W]` accumulators held across a k-panel over unit-stride
+//!    `plane_row` slices — a shape LLVM's autovectorizer turns into SIMD on
+//!    every target — plus a hand-written SSE2 block for the direct i32
+//!    kernel on `x86_64` (SSE2 is baseline there, so no runtime feature
+//!    detection), or a twice-as-wide `Avx2` variant (`AVX2_BLOCK_W = 16`
+//!    outputs per block: a hand-written AVX2 block for the direct i32
+//!    kernel, `[i32; 16]` register blocks compiled with
+//!    `#[target_feature(enable = "avx2")]` for the plane kernels). `Avx2`
+//!    is gated at runtime by `is_x86_feature_detected!` — on hosts (or
+//!    targets) without AVX2 it silently resolves to `Simd`, so pinning it
+//!    in a config is always safe. [`MicroKernel::preferred`] picks the
+//!    widest available variant and is what the `TileConfig` constructors
+//!    use. Integer addition is exactly associative, so reassociating the
+//!    k-panel sums into registers — at either width — is bit-exact by
+//!    construction and pinned by the property suites.
 //!
 //! Packing is separable from compute: the `gemm_*_packed` entry points
 //! consume operands the caller packed ahead of time (see
@@ -59,11 +67,16 @@ const PAR_GRAIN_MACS: usize = 1 << 17;
 /// across a k-panel (and exactly two SSE2 vectors on `x86_64`).
 pub const BLOCK_W: usize = 8;
 
+/// Width of the `Avx2` micro-kernel blocks: 16 unit-stride outputs, exactly
+/// two 256-bit accumulators for the direct i32 kernel.
+pub const AVX2_BLOCK_W: usize = 16;
+
 /// Inner micro-kernel the tiled kernels run in their j-loop.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum MicroKernel {
     /// The historical scalar axpy loops — kept as a fast second oracle next
-    /// to `*_naive` (the property suites pin `Simd == Scalar == naive`).
+    /// to `*_naive` (the property suites pin `Avx2 == Simd == Scalar ==
+    /// naive`).
     Scalar,
     /// Register-blocked `[i32; BLOCK_W]` accumulators over plane-row slices
     /// (autovectorized everywhere; hand-written SSE2 for the direct i32
@@ -73,6 +86,79 @@ pub enum MicroKernel {
     /// has no blocked variant yet and ignores this knob.
     #[default]
     Simd,
+    /// Twice-as-wide register blocks (`AVX2_BLOCK_W = 16` outputs): a
+    /// hand-written AVX2 block for the direct i32 kernel plus `[i32; 16]`
+    /// blocks compiled under `#[target_feature(enable = "avx2")]` for the
+    /// plane kernels. Runtime-gated: resolves to [`MicroKernel::Simd`] via
+    /// [`MicroKernel::resolved`] when the host (or target) lacks AVX2, so
+    /// requesting it is always safe. Same exact-associativity argument as
+    /// `Simd`, so bit-exact with every other variant.
+    Avx2,
+}
+
+impl MicroKernel {
+    /// The variant that will actually run on this host: `Avx2` degrades to
+    /// `Simd` when AVX2 is unavailable (non-`x86_64` targets, or x86_64
+    /// hosts without the feature). Every band resolves its config through
+    /// this before entering the j-loop.
+    #[inline]
+    pub fn resolved(self) -> MicroKernel {
+        match self {
+            MicroKernel::Avx2 if !avx2_available() => MicroKernel::Simd,
+            other => other,
+        }
+    }
+
+    /// The widest micro-kernel available on this host — what the
+    /// [`TileConfig`] constructors install — unless a process-wide override
+    /// is set via [`set_micro_override`] (the bench/CI A/B knob).
+    #[inline]
+    pub fn preferred() -> MicroKernel {
+        match micro_override() {
+            Some(m) => m,
+            None if avx2_available() => MicroKernel::Avx2,
+            None => MicroKernel::Simd,
+        }
+    }
+}
+
+/// Cached runtime AVX2 detection (`false` off `x86_64`).
+pub fn avx2_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        static AVAIL: OnceLock<bool> = OnceLock::new();
+        *AVAIL.get_or_init(|| std::arch::is_x86_feature_detected!("avx2"))
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    false
+}
+
+/// Encoded [`set_micro_override`] state: 0 = none, then variant + 1.
+static MICRO_OVERRIDE: std::sync::atomic::AtomicU8 = std::sync::atomic::AtomicU8::new(0);
+
+/// Process-wide override of [`MicroKernel::preferred`], for benches and CI
+/// smoke that A/B the micro-kernel through serving paths whose `TileConfig`
+/// is chosen internally (the backend hot paths). `None` restores hardware
+/// detection. Takes effect on the next `TileConfig` construction; configs
+/// already built keep their pinned variant.
+pub fn set_micro_override(micro: Option<MicroKernel>) {
+    let code = match micro {
+        None => 0,
+        Some(MicroKernel::Scalar) => 1,
+        Some(MicroKernel::Simd) => 2,
+        Some(MicroKernel::Avx2) => 3,
+    };
+    MICRO_OVERRIDE.store(code, std::sync::atomic::Ordering::Relaxed);
+}
+
+/// The current [`set_micro_override`] setting, if any.
+pub fn micro_override() -> Option<MicroKernel> {
+    match MICRO_OVERRIDE.load(std::sync::atomic::Ordering::Relaxed) {
+        1 => Some(MicroKernel::Scalar),
+        2 => Some(MicroKernel::Simd),
+        3 => Some(MicroKernel::Avx2),
+        _ => None,
+    }
 }
 
 /// Tiling/threading knobs for the packed kernels.
@@ -92,12 +178,12 @@ pub struct TileConfig {
 impl TileConfig {
     /// Default blocking with a single band (no threads).
     pub fn single_thread() -> Self {
-        TileConfig { kc: 256, jc: 1024, threads: 1, micro: MicroKernel::Simd }
+        TileConfig { kc: 256, jc: 1024, threads: 1, micro: MicroKernel::preferred() }
     }
 
     /// Default blocking using every available core.
     pub fn auto() -> Self {
-        TileConfig { kc: 256, jc: 1024, threads: default_threads(), micro: MicroKernel::Simd }
+        TileConfig { kc: 256, jc: 1024, threads: default_threads(), micro: MicroKernel::preferred() }
     }
 
     /// Blocking for a concrete problem: thread count scales with the MAC
@@ -105,7 +191,7 @@ impl TileConfig {
     pub fn auto_for(m: usize, k: usize, n: usize) -> Self {
         let work = m.saturating_mul(k).saturating_mul(n);
         let threads = (work / PAR_GRAIN_MACS).clamp(1, default_threads());
-        TileConfig { kc: 256, jc: 1024, threads, micro: MicroKernel::Simd }
+        TileConfig { kc: 256, jc: 1024, threads, micro: MicroKernel::preferred() }
     }
 
     /// This config with a different micro-kernel (oracle cross-checks).
@@ -174,11 +260,31 @@ pub fn gemm_i32_tiled(
     n: usize,
     cfg: &TileConfig,
 ) -> Result<Vec<i32>> {
+    let mut c = Vec::new();
+    gemm_i32_tiled_into(a, b, m, k, n, cfg, &mut c)?;
+    Ok(c)
+}
+
+/// [`gemm_i32_tiled`] writing into a caller-owned output vector (cleared and
+/// resized to `m·n`) — allocation-free once the vector has grown to the
+/// working size. The CNN serving scratch arena streams every layer GEMM
+/// through this.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_i32_tiled_into(
+    a: &[i8],
+    b: &[i8],
+    m: usize,
+    k: usize,
+    n: usize,
+    cfg: &TileConfig,
+    c: &mut Vec<i32>,
+) -> Result<()> {
     check_dims(a, b, m, k, n)?;
-    let mut c = vec![0i32; m * n];
+    c.clear();
+    c.resize(m * n, 0);
     let band_list = bands(m, cfg.threads);
     if band_list.len() <= 1 {
-        i32_band(a, b, k, n, 0, m, &mut c, cfg);
+        i32_band(a, b, k, n, 0, m, c, cfg);
     } else {
         std::thread::scope(|s| {
             let mut rest = c.as_mut_slice();
@@ -189,7 +295,7 @@ pub fn gemm_i32_tiled(
             }
         });
     }
-    Ok(c)
+    Ok(())
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -205,6 +311,7 @@ fn i32_band(
 ) {
     let kc = cfg.kc.max(1);
     let jc = cfg.jc.max(1);
+    let micro = cfg.micro.resolved();
     for k0 in (0..k).step_by(kc) {
         let k1 = (k0 + kc).min(k);
         for j0 in (0..n).step_by(jc) {
@@ -213,13 +320,31 @@ fn i32_band(
                 let row = (i - r0) * n;
                 let arow = &a[i * k..(i + 1) * k];
                 let mut jb = j0;
-                if cfg.micro == MicroKernel::Simd {
+                #[cfg(target_arch = "x86_64")]
+                if micro == MicroKernel::Avx2 {
+                    // `resolved()` returned Avx2, so detection passed.
+                    while jb + AVX2_BLOCK_W <= j1 {
+                        unsafe {
+                            i32_accum_block_avx2(
+                                arow,
+                                b,
+                                n,
+                                k0,
+                                k1,
+                                jb,
+                                &mut c[row + jb..row + jb + AVX2_BLOCK_W],
+                            );
+                        }
+                        jb += AVX2_BLOCK_W;
+                    }
+                }
+                if micro != MicroKernel::Scalar {
                     while jb + BLOCK_W <= j1 {
                         i32_accum_block(arow, b, n, k0, k1, jb, &mut c[row + jb..row + jb + BLOCK_W]);
                         jb += BLOCK_W;
                     }
                 }
-                // Scalar micro-kernel, and the < BLOCK_W tail of the Simd one.
+                // Scalar micro-kernel, and the < BLOCK_W tail of the blocked ones.
                 if jb < j1 {
                     let crow = &mut c[row + jb..row + j1];
                     for kk in k0..k1 {
@@ -277,6 +402,58 @@ fn i32_accum_block(arow: &[i8], b: &[i8], n: usize, k0: usize, k1: usize, jb: us
         _mm_storeu_si128(cp, _mm_add_epi32(_mm_loadu_si128(cp), acc0));
         let cp1 = cp.add(1);
         _mm_storeu_si128(cp1, _mm_add_epi32(_mm_loadu_si128(cp1), acc1));
+    }
+}
+
+/// One `AVX2_BLOCK_W`-wide j-block of the direct kernel: same contract as
+/// [`i32_accum_block`] at twice the width, held in two 256-bit accumulators
+/// across the k-panel and flushed once.
+///
+/// Sixteen B bytes sign-extend to two 8-lane i32 vectors
+/// (`_mm256_cvtepi8_epi32` preserves memory order), multiply by the
+/// broadcast A value with `_mm256_mullo_epi32` — exact, since
+/// `|a·b| ≤ 128² < 2³¹` — and accumulate. Bit-exact with the scalar
+/// tail by integer-add associativity.
+///
+/// # Safety
+/// Caller must have verified AVX2 via [`avx2_available`] (the bands only
+/// take this path when `resolved()` returns `Avx2`).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn i32_accum_block_avx2(
+    arow: &[i8],
+    b: &[i8],
+    n: usize,
+    k0: usize,
+    k1: usize,
+    jb: usize,
+    cseg: &mut [i32],
+) {
+    use std::arch::x86_64::*;
+    // Uphold the raw-pointer loads below: 16 B bytes at kk*n + jb for every
+    // kk < k1 (b.len() == k*n with k1 <= k), and a 16-lane C segment.
+    assert!(cseg.len() == AVX2_BLOCK_W && jb + AVX2_BLOCK_W <= n && k1.saturating_mul(n) <= b.len());
+    // SAFETY: the assert bounds every `add` offset; loadu/storeu have no
+    // alignment requirement.
+    unsafe {
+        let mut acc0 = _mm256_setzero_si256();
+        let mut acc1 = _mm256_setzero_si256();
+        for kk in k0..k1 {
+            let av = arow[kk];
+            if av == 0 {
+                continue;
+            }
+            let a32 = _mm256_set1_epi32(av as i32);
+            let x = _mm_loadu_si128(b.as_ptr().add(kk * n + jb) as *const __m128i);
+            let x0 = _mm256_cvtepi8_epi32(x);
+            let x1 = _mm256_cvtepi8_epi32(_mm_srli_si128(x, 8));
+            acc0 = _mm256_add_epi32(acc0, _mm256_mullo_epi32(x0, a32));
+            acc1 = _mm256_add_epi32(acc1, _mm256_mullo_epi32(x1, a32));
+        }
+        let cp = cseg.as_mut_ptr() as *mut __m256i;
+        _mm256_storeu_si256(cp, _mm256_add_epi32(_mm256_loadu_si256(cp), acc0));
+        let cp1 = cp.add(1);
+        _mm256_storeu_si256(cp1, _mm256_add_epi32(_mm256_loadu_si256(cp1), acc1));
     }
 }
 
@@ -379,6 +556,7 @@ fn lanes_band(
     let n = pb.cols;
     let kc = cfg.kc.max(1);
     let jc = cfg.jc.max(1);
+    let micro = cfg.micro.resolved();
     for k0 in (0..k).step_by(kc) {
         let k1 = (k0 + kc).min(k);
         for j0 in (0..n).step_by(jc) {
@@ -388,38 +566,26 @@ fn lanes_band(
                 let am_row = pa.msn_row(i);
                 let al_row = pa.lsn_row(i);
                 let mut jb = j0;
-                if cfg.micro == MicroKernel::Simd {
+                #[cfg(target_arch = "x86_64")]
+                if micro == MicroKernel::Avx2 {
+                    // `resolved()` returned Avx2, so detection passed.
+                    while jb + AVX2_BLOCK_W <= j1 {
+                        unsafe {
+                            lanes_block_avx2(am_row, al_row, pb, k0, k1, jb, row, hi, mid, lo);
+                        }
+                        jb += AVX2_BLOCK_W;
+                    }
+                }
+                if micro != MicroKernel::Scalar {
                     // Register-blocked: three [i32; BLOCK_W] accumulators per
                     // j-block held across the k-panel, flushed once.
                     while jb + BLOCK_W <= j1 {
-                        let mut acc_h = [0i32; BLOCK_W];
-                        let mut acc_m = [0i32; BLOCK_W];
-                        let mut acc_l = [0i32; BLOCK_W];
-                        for kk in k0..k1 {
-                            let am = am_row[kk] as i32;
-                            let al = al_row[kk] as i32;
-                            if am == 0 && al == 0 {
-                                continue;
-                            }
-                            let bm = &pb.msn_row(kk)[jb..jb + BLOCK_W];
-                            let bl = &pb.lsn_row(kk)[jb..jb + BLOCK_W];
-                            for t in 0..BLOCK_W {
-                                let bmv = bm[t] as i32;
-                                let blv = bl[t] as i32;
-                                acc_h[t] += am * bmv;
-                                acc_m[t] += am * blv + al * bmv;
-                                acc_l[t] += al * blv;
-                            }
-                        }
-                        for t in 0..BLOCK_W {
-                            hi[row + jb + t] += acc_h[t];
-                            mid[row + jb + t] += acc_m[t];
-                            lo[row + jb + t] += acc_l[t];
-                        }
+                        lanes_block::<BLOCK_W>(am_row, al_row, pb, k0, k1, jb, row, hi, mid, lo);
                         jb += BLOCK_W;
                     }
                 }
-                // Scalar micro-kernel, and the < BLOCK_W tail of the Simd one.
+                // Scalar micro-kernel, and the < BLOCK_W tail of the blocked
+                // ones.
                 if jb < j1 {
                     for kk in k0..k1 {
                         let am = am_row[kk] as i32;
@@ -444,6 +610,74 @@ fn lanes_band(
             }
         }
     }
+}
+
+/// One `BW`-wide j-block of the lane kernel: three `[i32; BW]` accumulators
+/// held across the k-panel, flushed once. Monomorphized at `BLOCK_W` (the
+/// `Simd` width) and `AVX2_BLOCK_W` (via [`lanes_block_avx2`], which
+/// recompiles this body with AVX2 codegen enabled).
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+fn lanes_block<const BW: usize>(
+    am_row: &[i8],
+    al_row: &[i8],
+    pb: &NibblePlanes,
+    k0: usize,
+    k1: usize,
+    jb: usize,
+    row: usize,
+    hi: &mut [i32],
+    mid: &mut [i32],
+    lo: &mut [i32],
+) {
+    let mut acc_h = [0i32; BW];
+    let mut acc_m = [0i32; BW];
+    let mut acc_l = [0i32; BW];
+    for kk in k0..k1 {
+        let am = am_row[kk] as i32;
+        let al = al_row[kk] as i32;
+        if am == 0 && al == 0 {
+            continue;
+        }
+        let bm = &pb.msn_row(kk)[jb..jb + BW];
+        let bl = &pb.lsn_row(kk)[jb..jb + BW];
+        for t in 0..BW {
+            let bmv = bm[t] as i32;
+            let blv = bl[t] as i32;
+            acc_h[t] += am * bmv;
+            acc_m[t] += am * blv + al * bmv;
+            acc_l[t] += al * blv;
+        }
+    }
+    for t in 0..BW {
+        hi[row + jb + t] += acc_h[t];
+        mid[row + jb + t] += acc_m[t];
+        lo[row + jb + t] += acc_l[t];
+    }
+}
+
+/// [`lanes_block`] at `AVX2_BLOCK_W`, compiled with AVX2 enabled so LLVM
+/// vectorizes the `[i32; 16]` accumulators at full ymm width. Safe code
+/// inside; the attribute only changes codegen.
+///
+/// # Safety
+/// Caller must have verified AVX2 via [`avx2_available`].
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn lanes_block_avx2(
+    am_row: &[i8],
+    al_row: &[i8],
+    pb: &NibblePlanes,
+    k0: usize,
+    k1: usize,
+    jb: usize,
+    row: usize,
+    hi: &mut [i32],
+    mid: &mut [i32],
+    lo: &mut [i32],
+) {
+    lanes_block::<AVX2_BLOCK_W>(am_row, al_row, pb, k0, k1, jb, row, hi, mid, lo);
 }
 
 // ---------------------------------------------------------------------------
@@ -522,6 +756,7 @@ fn sliced_band(
     let n = pb.cols;
     let kc = cfg.kc.max(1);
     let jc = cfg.jc.max(1);
+    let micro = cfg.micro.resolved();
     for k0 in (0..k).step_by(kc) {
         let k1 = (k0 + kc).min(k);
         for j0 in (0..n).step_by(jc) {
@@ -531,35 +766,19 @@ fn sliced_band(
                 let am_row = pa.msn_row(i);
                 let al_row = pa.lsn_row(i);
                 let mut jb = j0;
-                if cfg.micro == MicroKernel::Simd {
+                #[cfg(target_arch = "x86_64")]
+                if micro == MicroKernel::Avx2 {
+                    // `resolved()` returned Avx2, so detection passed.
+                    while jb + AVX2_BLOCK_W <= j1 {
+                        unsafe {
+                            sliced_block_avx2(am_row, al_row, pb, k0, k1, jb, row, mm, ml, lm, ll);
+                        }
+                        jb += AVX2_BLOCK_W;
+                    }
+                }
+                if micro != MicroKernel::Scalar {
                     while jb + BLOCK_W <= j1 {
-                        let mut acc_mm = [0i32; BLOCK_W];
-                        let mut acc_ml = [0i32; BLOCK_W];
-                        let mut acc_lm = [0i32; BLOCK_W];
-                        let mut acc_ll = [0i32; BLOCK_W];
-                        for kk in k0..k1 {
-                            let am = am_row[kk] as i32;
-                            let al = al_row[kk] as i32;
-                            if am == 0 && al == 0 {
-                                continue;
-                            }
-                            let bm = &pb.msn_row(kk)[jb..jb + BLOCK_W];
-                            let bl = &pb.lsn_row(kk)[jb..jb + BLOCK_W];
-                            for t in 0..BLOCK_W {
-                                let bmv = bm[t] as i32;
-                                let blv = bl[t] as i32;
-                                acc_mm[t] += am * bmv;
-                                acc_ml[t] += am * blv;
-                                acc_lm[t] += al * bmv;
-                                acc_ll[t] += al * blv;
-                            }
-                        }
-                        for t in 0..BLOCK_W {
-                            mm[row + jb + t] += acc_mm[t];
-                            ml[row + jb + t] += acc_ml[t];
-                            lm[row + jb + t] += acc_lm[t];
-                            ll[row + jb + t] += acc_ll[t];
-                        }
+                        sliced_block::<BLOCK_W>(am_row, al_row, pb, k0, k1, jb, row, mm, ml, lm, ll);
                         jb += BLOCK_W;
                     }
                 }
@@ -589,6 +808,75 @@ fn sliced_band(
             }
         }
     }
+}
+
+/// One `BW`-wide j-block of the four-slice kernel; see [`lanes_block`].
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+fn sliced_block<const BW: usize>(
+    am_row: &[i8],
+    al_row: &[i8],
+    pb: &NibblePlanes,
+    k0: usize,
+    k1: usize,
+    jb: usize,
+    row: usize,
+    mm: &mut [i32],
+    ml: &mut [i32],
+    lm: &mut [i32],
+    ll: &mut [i32],
+) {
+    let mut acc_mm = [0i32; BW];
+    let mut acc_ml = [0i32; BW];
+    let mut acc_lm = [0i32; BW];
+    let mut acc_ll = [0i32; BW];
+    for kk in k0..k1 {
+        let am = am_row[kk] as i32;
+        let al = al_row[kk] as i32;
+        if am == 0 && al == 0 {
+            continue;
+        }
+        let bm = &pb.msn_row(kk)[jb..jb + BW];
+        let bl = &pb.lsn_row(kk)[jb..jb + BW];
+        for t in 0..BW {
+            let bmv = bm[t] as i32;
+            let blv = bl[t] as i32;
+            acc_mm[t] += am * bmv;
+            acc_ml[t] += am * blv;
+            acc_lm[t] += al * bmv;
+            acc_ll[t] += al * blv;
+        }
+    }
+    for t in 0..BW {
+        mm[row + jb + t] += acc_mm[t];
+        ml[row + jb + t] += acc_ml[t];
+        lm[row + jb + t] += acc_lm[t];
+        ll[row + jb + t] += acc_ll[t];
+    }
+}
+
+/// [`sliced_block`] at `AVX2_BLOCK_W` with AVX2 codegen; see
+/// [`lanes_block_avx2`].
+///
+/// # Safety
+/// Caller must have verified AVX2 via [`avx2_available`].
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn sliced_block_avx2(
+    am_row: &[i8],
+    al_row: &[i8],
+    pb: &NibblePlanes,
+    k0: usize,
+    k1: usize,
+    jb: usize,
+    row: usize,
+    mm: &mut [i32],
+    ml: &mut [i32],
+    lm: &mut [i32],
+    ll: &mut [i32],
+) {
+    sliced_block::<AVX2_BLOCK_W>(am_row, al_row, pb, k0, k1, jb, row, mm, ml, lm, ll);
 }
 
 // ---------------------------------------------------------------------------
@@ -712,6 +1000,11 @@ mod tests {
             TileConfig { kc: 3, jc: 2, threads: 2, micro: MicroKernel::Simd },
             TileConfig { kc: 2, jc: 5, threads: 3, micro: MicroKernel::Scalar },
             TileConfig { kc: 7, jc: 3, threads: 8, micro: MicroKernel::Simd },
+            // Avx2 resolves to Simd on hosts without the feature, so these
+            // rows are always valid and exercise 16-wide blocks where the
+            // hardware has them (kc/jc sized to force partial 16-blocks).
+            TileConfig { kc: 3, jc: 21, threads: 2, micro: MicroKernel::Avx2 },
+            TileConfig { kc: 1024, jc: 1024, threads: 4, micro: MicroKernel::Avx2 },
             TileConfig { kc: 1024, jc: 1024, threads: 4, micro: MicroKernel::Simd },
             TileConfig { kc: 1024, jc: 1024, threads: 2, micro: MicroKernel::Scalar },
         ]
@@ -786,6 +1079,76 @@ mod tests {
                 })
             },
         );
+    }
+
+    #[test]
+    fn avx2_blocks_bit_exact_on_wide_shapes() {
+        // max_dim in the property sweeps stays under AVX2_BLOCK_W, so the
+        // 16-wide blocks need shapes that actually reach them: n spanning
+        // full 16-blocks, an 8-block remainder, and a scalar tail.
+        let mut rng = SplitMix64::new(2024);
+        for (m, k, n) in [(3usize, 5usize, 16usize), (4, 33, 37), (7, 9, 61), (2, 129, 16 + 8 + 3)] {
+            let a = rng.i8_vec(m * k);
+            let b = rng.i8_vec(k * n);
+            let expect = gemm_i32_naive(&a, &b, m, k, n).unwrap();
+            let lanes_expect = gemm_lanes_naive(&a, &b, m, k, n).unwrap();
+            let sliced_expect = gemm_sliced_naive(&a, &b, m, k, n).unwrap();
+            for threads in [1usize, 3] {
+                let cfg = TileConfig { kc: 16, jc: 48, threads, micro: MicroKernel::Avx2 };
+                assert_eq!(gemm_i32_tiled(&a, &b, m, k, n, &cfg).unwrap(), expect);
+                let lanes = gemm_lanes_tiled(&a, &b, m, k, n, &cfg).unwrap();
+                assert_eq!(lanes.hi, lanes_expect.hi);
+                assert_eq!(lanes.mid, lanes_expect.mid);
+                assert_eq!(lanes.lo, lanes_expect.lo);
+                let sliced = gemm_sliced_tiled(&a, &b, m, k, n, &cfg).unwrap();
+                assert_eq!(sliced.mm, sliced_expect.mm);
+                assert_eq!(sliced.ml, sliced_expect.ml);
+                assert_eq!(sliced.lm, sliced_expect.lm);
+                assert_eq!(sliced.ll, sliced_expect.ll);
+            }
+        }
+    }
+
+    #[test]
+    fn avx2_resolution_is_host_consistent() {
+        // On an AVX2 host the variant stays itself; elsewhere it degrades to
+        // Simd. Scalar and Simd never change under resolution.
+        assert_eq!(MicroKernel::Scalar.resolved(), MicroKernel::Scalar);
+        assert_eq!(MicroKernel::Simd.resolved(), MicroKernel::Simd);
+        let want = if avx2_available() { MicroKernel::Avx2 } else { MicroKernel::Simd };
+        assert_eq!(MicroKernel::Avx2.resolved(), want);
+    }
+
+    #[test]
+    fn micro_override_steers_preferred() {
+        // Results stay bit-exact under any variant, so a concurrent test
+        // constructing an auto config mid-override cannot be corrupted by
+        // this — it would just run a different (equally exact) kernel.
+        set_micro_override(Some(MicroKernel::Scalar));
+        assert_eq!(MicroKernel::preferred(), MicroKernel::Scalar);
+        assert_eq!(TileConfig::auto().micro, MicroKernel::Scalar);
+        set_micro_override(Some(MicroKernel::Avx2));
+        assert_eq!(MicroKernel::preferred(), MicroKernel::Avx2);
+        set_micro_override(None);
+        assert_eq!(micro_override(), None);
+        assert_eq!(TileConfig::auto().micro.resolved(), TileConfig::auto().micro);
+    }
+
+    #[test]
+    fn into_variant_reuses_buffer_and_matches() {
+        let mut rng = SplitMix64::new(31);
+        let (m, k, n) = (5usize, 17usize, 23usize);
+        let a = rng.i8_vec(m * k);
+        let b = rng.i8_vec(k * n);
+        let want = gemm_i32_naive(&a, &b, m, k, n).unwrap();
+        let cfg = TileConfig { kc: 4, jc: 7, threads: 2, micro: MicroKernel::Simd };
+        // Dirty, differently-sized buffer: _into must clear and resize.
+        let mut c = vec![i32::MIN; 3];
+        gemm_i32_tiled_into(&a, &b, m, k, n, &cfg, &mut c).unwrap();
+        assert_eq!(c, want);
+        // Second call reuses capacity and stays exact.
+        gemm_i32_tiled_into(&a, &b, m, k, n, &cfg, &mut c).unwrap();
+        assert_eq!(c, want);
     }
 
     #[test]

@@ -67,16 +67,24 @@
 //! ## SIMD dispatch policy
 //!
 //! [`kernel::TileConfig::micro`] selects the innermost kernel:
-//! [`kernel::MicroKernel::Simd`] (the default everywhere) runs
-//! register-blocked `[i32; BLOCK_W]` accumulation over unit-stride plane
-//! rows — autovectorizer-friendly on every target, with a hand-written SSE2
-//! block for the direct i32 kernel on `x86_64` (SSE2 is baseline there; no
-//! runtime feature detection, no new dependencies). Integer addition is
-//! exactly associative, so the blocked kernels are bit-exact with
-//! [`kernel::MicroKernel::Scalar`] (the historical loops, kept as a second
-//! oracle) and with `*_naive` — the property suites run all three against
-//! each other. The INT16 `wide` kernel ignores the knob (no blocked variant
-//! yet).
+//! [`kernel::MicroKernel::Simd`] runs register-blocked `[i32; BLOCK_W]`
+//! accumulation over unit-stride plane rows — autovectorizer-friendly on
+//! every target, with a hand-written SSE2 block for the direct i32 kernel
+//! on `x86_64` (SSE2 is baseline there; no feature detection needed).
+//! [`kernel::MicroKernel::Avx2`] doubles the block width
+//! (`AVX2_BLOCK_W = 16`: a hand-written AVX2 block for the direct i32
+//! kernel, `[i32; 16]` blocks compiled under
+//! `#[target_feature(enable = "avx2")]` for the plane kernels) and is gated
+//! at **runtime** by `is_x86_feature_detected!` — on hosts without AVX2 it
+//! resolves to `Simd` ([`kernel::MicroKernel::resolved`]), so configs may
+//! pin it unconditionally. The `TileConfig` constructors install
+//! [`kernel::MicroKernel::preferred`] (the widest available variant;
+//! [`kernel::set_micro_override`] is the bench/CI knob that forces one
+//! process-wide). Integer addition is exactly associative, so every blocked
+//! kernel is bit-exact with [`kernel::MicroKernel::Scalar`] (the historical
+//! loops, kept as a second oracle) and with `*_naive` — the property suites
+//! run all of them against each other. The INT16 `wide` kernel ignores the
+//! knob (no blocked variant yet).
 
 pub mod gemm;
 pub mod kernel;
@@ -85,13 +93,15 @@ pub mod packed;
 pub mod wide;
 
 pub use gemm::{
-    gemm_i32, gemm_i32_naive, gemm_i32_prepacked, gemm_lanes, gemm_lanes_naive,
-    gemm_lanes_prepacked, gemm_sliced, gemm_sliced_naive, gemm_sliced_prepacked, pack_b, LaneGemm,
-    SlicedGemm,
+    gemm_i32, gemm_i32_naive, gemm_i32_naive_into, gemm_i32_prepacked, gemm_i32_prepacked_into,
+    gemm_lanes, gemm_lanes_naive, gemm_lanes_prepacked, gemm_sliced, gemm_sliced_naive,
+    gemm_sliced_prepacked, pack_b, LaneGemm, SlicedGemm,
 };
 pub use kernel::{
-    gemm_i16_lanes_packed, gemm_i16_lanes_tiled, gemm_i32_tiled, gemm_lanes_packed,
-    gemm_lanes_tiled, gemm_sliced_packed, gemm_sliced_tiled, MicroKernel, TileConfig, BLOCK_W,
+    avx2_available, gemm_i16_lanes_packed, gemm_i16_lanes_tiled, gemm_i32_tiled,
+    gemm_i32_tiled_into, gemm_lanes_packed, gemm_lanes_tiled, gemm_sliced_packed,
+    gemm_sliced_tiled, micro_override, set_micro_override, MicroKernel, TileConfig, AVX2_BLOCK_W,
+    BLOCK_W,
 };
 pub use nibble::{combine, lsn, msn, slice_i8, NibblePair};
 pub use packed::{NibblePlanes, PackedB, WidePlanes};

@@ -24,9 +24,13 @@ pub enum WorkItem {
     Batch(MicroBatch),
     /// An unbatched GEMM.
     Gemm(GemmJob),
-    /// A whole-CNN inference.
+    /// A whole-CNN inference. Served through the engine's compiled-plan
+    /// cache ([`crate::runtime::Engine::cnn_plan`]): the first request per
+    /// model pays weight packing once, the rest stream through the
+    /// persistent scratch arena.
     Cnn(CnnJob),
-    /// A stack of same-model CNN frames (t-dimension batching).
+    /// A stack of same-model CNN frames (t-dimension batching), served
+    /// through the same compiled-plan cache as [`WorkItem::Cnn`].
     CnnBatch(CnnMicroBatch),
     /// A health probe: answered with an empty reply, never counted into
     /// request stats (see [`PingJob`]).

@@ -40,6 +40,36 @@ pub fn im2col_group(
     let ow = conv_out_dim(in_w, kernel, stride, pad);
     let k = cpg * kernel * kernel;
     let mut out = vec![0i8; oh * ow * k];
+    im2col_group_into(input, in_h, in_w, in_ch, kernel, stride, pad, groups, group, &mut out);
+    out
+}
+
+/// [`im2col_group`] writing into a caller-owned `t×k` slice instead of
+/// allocating — the CNN plan's scratch-arena entry point. Frame `f` of a
+/// t-stacked batch lowers into `scratch[f*t*k..(f+1)*t*k]`, so a whole
+/// `(B·t)×k` activation operand builds with zero allocations.
+///
+/// `out.len()` must be exactly `oh·ow·(in_ch/groups)·kernel²`; the slice is
+/// zeroed first so padding taps contribute 0 regardless of prior contents.
+#[allow(clippy::too_many_arguments)]
+pub fn im2col_group_into(
+    input: &[i8],
+    in_h: usize,
+    in_w: usize,
+    in_ch: usize,
+    kernel: usize,
+    stride: usize,
+    pad: usize,
+    groups: usize,
+    group: usize,
+    out: &mut [i8],
+) {
+    let cpg = in_ch / groups;
+    let oh = conv_out_dim(in_h, kernel, stride, pad);
+    let ow = conv_out_dim(in_w, kernel, stride, pad);
+    let k = cpg * kernel * kernel;
+    assert_eq!(out.len(), oh * ow * k, "im2col_group_into: scratch slice sized t*k");
+    out.fill(0);
     for oy in 0..oh {
         for ox in 0..ow {
             let base = (oy * ow + ox) * k;
@@ -62,7 +92,6 @@ pub fn im2col_group(
             }
         }
     }
-    out
 }
 
 /// Requantize an int32 GEMM accumulator back to an int8 activation for the
@@ -170,6 +199,26 @@ mod tests {
         let corner = &m[0..9];
         assert_eq!(corner.iter().filter(|&&v| v == 0).count(), 5);
         assert_eq!(corner.iter().filter(|&&v| v == 1).count(), 4);
+    }
+
+    #[test]
+    fn into_variant_matches_allocating_variant_over_dirty_scratch() {
+        // The scratch arena reuses buffers across layers and frames; the
+        // into-variant must be insensitive to whatever the slice held.
+        let mut rng = SplitMix64::new(77);
+        for (in_h, in_w, in_ch, kernel, stride, pad, groups) in
+            [(7, 6, 4, 3, 2, 1, 1), (5, 5, 6, 3, 1, 1, 2), (4, 4, 3, 1, 1, 0, 3), (3, 3, 1, 3, 1, 1, 1)]
+        {
+            let input = rng.i8_vec(in_h * in_w * in_ch);
+            for group in 0..groups {
+                let want = im2col_group(&input, in_h, in_w, in_ch, kernel, stride, pad, groups, group);
+                let mut scratch = rng.i8_vec(want.len()); // deliberately dirty
+                im2col_group_into(
+                    &input, in_h, in_w, in_ch, kernel, stride, pad, groups, group, &mut scratch,
+                );
+                assert_eq!(scratch, want);
+            }
+        }
     }
 
     #[test]

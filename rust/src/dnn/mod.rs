@@ -13,7 +13,7 @@ pub mod models;
 pub mod trace;
 pub mod workload;
 
-pub use im2col::{im2col_group, requantize};
+pub use im2col::{im2col_group, im2col_group_into, requantize};
 pub use layer::{conv_out_dim, GemmShape, Layer};
 pub use models::{googlenet, mobilenet_v2, resnet50, shufflenet_v2, CnnModel};
 pub use trace::{load_trace, parse_trace, to_trace};

@@ -20,13 +20,13 @@
 //! | [`units`] | dB/dBm/watt/time conversions used by all photonic models |
 //! | [`devices`] | parametric component models (MRR, laser, BPCA, ADC/DAC, …) |
 //! | [`optics`] | optical link budget + scalability solver (paper Table I) |
-//! | [`bitslice`] | exact integer semantics of nibble-sliced arithmetic (+ INT16 extension); naive oracles + packed-plane tiled/threaded fast kernels with register-blocked/SSE2 micro-kernels and a prepacked (pack-once/stream-many) operand API |
+//! | [`bitslice`] | exact integer semantics of nibble-sliced arithmetic (+ INT16 extension); naive oracles + packed-plane tiled/threaded fast kernels with scalar/SSE2/runtime-detected AVX2 micro-kernels and a prepacked (pack-once/stream-many) operand API |
 //! | [`fidelity`] | analog-noise Monte-Carlo (the 4-bit-analog premise, quantified) |
 //! | [`arch`] | accelerator architectures: SPOGA (MWA), HOLYLIGHT (MAW), DEAPCNN (AMW) |
 //! | [`dnn`] | CNN workload library (4 networks) + im2col GEMM conversion |
 //! | [`sim`] | transaction-level simulator (mapper, scheduler, accounting) |
 //! | [`metrics`] | FPS / FPS/W / FPS/W/mm² aggregation, gmean, live serving telemetry, fleet-wide stats rollup (`FleetTelemetry`) |
-//! | [`runtime`] | pluggable execution backends (`ExecBackend`): software interpreter + photonic-in-the-loop simulator, both weight-stationary (plans own packed weights, scratch-reused activations); artifact manifest, engine, whole-CNN serving (single + t-stacked batch) |
+//! | [`runtime`] | pluggable execution backends (`ExecBackend`): software interpreter + photonic-in-the-loop simulator, both weight-stationary (plans own packed weights, scratch-reused activations); artifact manifest, engine, compile-once/stream-many whole-CNN serving (`CnnPlan` + scratch arena, single + t-stacked batch) |
 //! | [`coordinator`] | sharded serving fleet: shard router (`Fleet`/`FleetHandle`, pluggable routing + failover, retained-payload mid-flight retry, shard revival/autoscaling) over per-backend coordinators with dynamic MLP batching, t-stacked CNN batching, and photonic telemetry |
 //! | [`net`] | cross-host serving: zero-dependency checksummed wire protocol, `ShardServer` (TCP front for a coordinator/fleet), `RemoteShard` client with deadlines, jittered-backoff reconnect, and typed `Error::Remote` failure taxonomy |
 //! | [`testing`] | deterministic mini property-testing harness |

@@ -14,10 +14,11 @@
 //!   [`ExecReport`] (projected latency, energy, lane count), with optional
 //!   [`crate::fidelity`] noise injection for photonic-in-the-loop serving.
 //!
-//! The trait is deliberately narrow (`plan` / `execute_i32` / `platform` +
-//! the optional `report_for` telemetry hook) so a future PJRT backend (the
-//! `xla` crate compiling HLO text) can slot in behind a cargo feature
-//! without touching the serving stack.
+//! The trait is deliberately narrow (`plan` / `execute_i32` / `platform`,
+//! plus the defaulted `execute_i32_keyed` / `execute_prepacked_i8` hot-path
+//! entries and the optional `report_for` telemetry hook) so a future PJRT
+//! backend (the `xla` crate compiling HLO text) can slot in behind a cargo
+//! feature without touching the serving stack.
 //!
 //! ## Plan-owns-packed-weights contract
 //!
@@ -36,12 +37,31 @@
 //!   refreshed by full content equality
 //!   ([`crate::bitslice::PackedB::refresh_wire`]) — never a hash key, which
 //!   could collide and silently serve a stale B.
+//! * **CNN plans** ([`crate::runtime::cnnrun::CnnPlan`]) extend the same
+//!   split to whole models: `CnnPlan::compile` packs every layer's weight
+//!   matrix — one `PackedB` per conv group, one per FC layer — once per
+//!   (model, engine), and the engine caches the plan by model name,
+//!   revalidated by full model equality (`CnnModel: PartialEq`, the CNN
+//!   analogue of `refresh_wire`'s never-hash rule). Per-frame work then
+//!   runs [`ExecBackend::execute_prepacked_i8`]: activations lower via
+//!   `im2col_group_into` straight into a persistent
+//!   [`crate::runtime::cnnrun::CnnScratch`] arena (stacked `(B·t)×k` i8
+//!   planes, ping-ponged activation/raw buffers, reused output and
+//!   row-noise vectors), skipping the i32 wire round-trip, surrogate weight
+//!   regeneration, and per-plan content revalidation the artifact path
+//!   pays. Steady-state conv serving therefore performs **zero per-request
+//!   heap allocation and zero weight re-derivation**; only result
+//!   materialization (returned logits and per-layer reports) allocates.
+//!   Compile/execute/scratch lifecycle: plans are immutable after compile
+//!   and shared via `Arc`; the scratch arena lives on the engine and is
+//!   exclusive to one serving call at a time (`&mut`); dropping the engine
+//!   drops both.
 //!
 //! Packing placement is invisible to results: prepacked execution is
 //! bit-identical to repack-per-call (property-tested in
-//! `tests/prepacked.rs`), and under noise injection the content-keyed
-//! per-row streams depend only on the exact lane charges, which prepacking
-//! preserves bit-for-bit.
+//! `tests/prepacked.rs`, and `tests/cnn_plan.rs` for whole-model plans),
+//! and under noise injection the content-keyed per-row streams depend only
+//! on the exact lane charges, which prepacking preserves bit-for-bit.
 //!
 //! ## Per-row noise attribution contract
 //!
@@ -241,6 +261,32 @@ pub trait ExecBackend: Send {
         self.execute_i32(name, inputs)
     }
 
+    /// Direct prepacked-i8 execution — the CNN plan hot path. Computes
+    /// `out = a8 · weights` (`a8` row-major `m×k`, `k`/`n` from the pack)
+    /// into the caller's reused buffers, skipping the artifact machinery:
+    /// no plan lookup, no i32 wire narrowing, no weight revalidation.
+    ///
+    /// `out` is cleared and resized to `m·n`; `row_noise` is cleared and,
+    /// when the backend injects noise, filled with one entry per output row
+    /// under the module-level per-row attribution contract (nonces resolve
+    /// via [`RowNonce::for_row`], exactly as `execute_i32_keyed`). The
+    /// default implementation is the exact digital path (empty `row_noise`),
+    /// which is also what noise-off photonic serving runs — bit-identical
+    /// across backends by the bitslice dispatch contract.
+    fn execute_prepacked_i8(
+        &mut self,
+        a8: &[i8],
+        m: usize,
+        weights: &crate::bitslice::PackedB,
+        nonce: &RowNonce,
+        out: &mut Vec<i32>,
+        row_noise: &mut Vec<u64>,
+    ) -> Result<()> {
+        let _ = nonce;
+        row_noise.clear();
+        crate::bitslice::gemm_i32_prepacked_into(a8, weights, m, out)
+    }
+
     /// Telemetry for a GEMM shape *without* executing it — used by the CNN
     /// serving path to report per-layer projections that include conv
     /// groups. Digital backends return `None`.
@@ -420,6 +466,25 @@ mod tests {
     fn default_kind_is_software() {
         assert!(matches!(BackendKind::default(), BackendKind::Software));
         assert_eq!(BackendKind::default().label(), "software");
+    }
+
+    #[test]
+    fn default_prepacked_i8_entry_is_the_exact_path() {
+        use crate::bitslice::{gemm_i32, pack_b};
+        let (m, k, n) = (3usize, 4usize, 5usize);
+        let a: Vec<i8> = (0..m * k).map(|i| (i as i8).wrapping_mul(9).wrapping_sub(30)).collect();
+        let b: Vec<i8> = (0..k * n).map(|i| (i as i8).wrapping_mul(7).wrapping_add(3)).collect();
+        let pb = pack_b(&b, k, n).unwrap();
+        let want = gemm_i32(&a, &b, m, k, n).unwrap();
+        let mut sw = BackendKind::Software.build().unwrap();
+        let (mut out, mut rn) = (vec![99i32; 2], vec![7u64]);
+        sw.execute_prepacked_i8(&a, m, &pb, &RowNonce::Content, &mut out, &mut rn).unwrap();
+        assert_eq!(out, want);
+        assert!(rn.is_empty(), "exact path reports no row noise");
+        // Shape mismatch surfaces as a typed error.
+        assert!(sw
+            .execute_prepacked_i8(&a[..m * k - 1], m, &pb, &RowNonce::Content, &mut out, &mut rn)
+            .is_err());
     }
 
     #[test]

@@ -1,10 +1,26 @@
 //! Whole-CNN serving: drive a [`CnnModel`] layer by layer through a backend.
 //!
 //! Each conv layer is lowered numerically with [`crate::dnn::im2col`] (one
-//! GEMM per conv group) and executed through the engine's backend via
-//! synthetic ad-hoc GEMM plans; fully-connected layers run as `1×k·k×c`
-//! GEMMs. Between layers the int32 accumulators requantize to int8
-//! deterministically, so any two backends produce bit-identical logits.
+//! GEMM per conv group) and executed through the engine's backend;
+//! fully-connected layers run as `B×k·k×c` GEMMs. Between layers the int32
+//! accumulators requantize to int8 deterministically, so any two backends
+//! produce bit-identical logits.
+//!
+//! ## Compile once, stream many
+//!
+//! Serving is plan-driven: [`CnnPlan::compile`] lowers a model **once** into
+//! per-layer-per-group [`PackedB`] weights (the surrogate weights packed at
+//! compile time) and the engine caches the plan by model name, revalidated
+//! by full model equality — the CNN analogue of `refresh_wire`'s never-hash
+//! rule. Requests then stream through
+//! [`ExecBackend::execute_prepacked_i8`]: im2col writes straight into a
+//! persistent [`CnnScratch`] arena (stacked `(B·t)×k` i8 activation planes,
+//! reused output/row-noise/attribution buffers), so steady-state
+//! content-keyed serving does **zero per-request heap allocation and zero
+//! weight re-derivation** — only result materialization (logits, per-layer
+//! reports) allocates. The legacy wire-format path is retained as
+//! [`run_cnn_batch_keyed_reference`], the oracle `tests/cnn_plan.rs` pins
+//! the plan path against bit for bit.
 //!
 //! Telemetry: backends that model the photonic datapath contribute a
 //! per-layer [`ExecReport`] priced on the layer's *full grouped* GEMM shape
@@ -20,10 +36,11 @@
 //! CNN weights at the Rust layer, and every cross-backend consistency
 //! property only needs determinism.
 
-use crate::dnn::im2col::{im2col_group, requantize};
-use crate::dnn::layer::Layer;
+use crate::bitslice::PackedB;
+use crate::dnn::im2col::{im2col_group, im2col_group_into, requantize};
+use crate::dnn::layer::{GemmShape, Layer};
 use crate::dnn::models::CnnModel;
-use crate::runtime::backend::{ExecReport, RowNonce};
+use crate::runtime::backend::{ExecBackend, ExecReport, RowNonce};
 use crate::runtime::engine::Engine;
 use crate::testing::SplitMix64;
 use crate::{Error, Result};
@@ -107,6 +124,180 @@ pub(crate) fn surrogate_layer_weights(li: usize, g: usize, k: usize, c: usize) -
     SplitMix64::new(seed).i8_vec(k * c)
 }
 
+/// One layer of a compiled [`CnnPlan`]: resolved geometry plus the
+/// compile-time packed weights (one [`PackedB`] per conv group, one for an
+/// FC layer). Immutable after compile — shared via `Arc` across requests.
+pub(crate) enum PlannedLayer {
+    /// A conv layer lowered to `groups` stacked im2col GEMMs.
+    Conv {
+        name: String,
+        in_h: usize,
+        in_w: usize,
+        in_ch: usize,
+        out_ch: usize,
+        kernel: usize,
+        stride: usize,
+        pad: usize,
+        groups: usize,
+        /// Output pixels per frame (`oh·ow`): the per-frame GEMM row count.
+        t: usize,
+        /// im2col depth per group (`(in_ch/groups)·kernel²`).
+        k: usize,
+        /// Output channels per group.
+        c: usize,
+        /// The layer's full grouped shape (what telemetry prices).
+        shape: GemmShape,
+        /// Per-group surrogate weights, packed once at compile time.
+        weights: Vec<PackedB>,
+    },
+    /// A fully-connected layer: one `B×k · k×c` GEMM per batch.
+    Fc {
+        name: String,
+        in_features: usize,
+        out_features: usize,
+        shape: GemmShape,
+        weights: PackedB,
+    },
+}
+
+impl PlannedLayer {
+    fn name(&self) -> &str {
+        match self {
+            PlannedLayer::Conv { name, .. } => name,
+            PlannedLayer::Fc { name, .. } => name,
+        }
+    }
+
+    fn shape(&self) -> &GemmShape {
+        match self {
+            PlannedLayer::Conv { shape, .. } => shape,
+            PlannedLayer::Fc { shape, .. } => shape,
+        }
+    }
+}
+
+/// A whole-CNN execution plan: the model lowered once into per-layer packed
+/// weights. Compiled by [`CnnPlan::compile`], cached on the engine by model
+/// name ([`Engine::cnn_plan`]) and revalidated by full model equality, so a
+/// renamed-but-different model never serves a stale plan. Backend-agnostic:
+/// the packed planes feed both the digital prepacked kernel and the
+/// photonic lane pipeline ([`ExecBackend::execute_prepacked_i8`]).
+pub struct CnnPlan {
+    model: CnnModel,
+    input_len: usize,
+    layers: Vec<PlannedLayer>,
+}
+
+impl CnnPlan {
+    /// Lower `model` into a servable plan: validate the layer chain, derive
+    /// every layer's GEMM geometry, and pack each layer's surrogate weights
+    /// (per conv group) into [`PackedB`] planes. All weight derivation and
+    /// packing cost is paid here, never on the request path.
+    pub fn compile(model: &CnnModel) -> Result<CnnPlan> {
+        let input_len = match model.layers.first() {
+            Some(Layer::Conv { in_h, in_w, in_ch, .. }) => in_h * in_w * in_ch,
+            Some(Layer::Fc { in_features, .. }) => *in_features,
+            None => return Err(Error::Config(format!("{}: model has no layers", model.name))),
+        };
+        validate_cnn_input(model, input_len)?;
+        let mut layers = Vec::with_capacity(model.layers.len());
+        for (li, layer) in model.layers.iter().enumerate() {
+            let shape = layer.gemm();
+            match layer {
+                Layer::Conv { name, in_h, in_w, in_ch, out_ch, kernel, stride, pad, groups } => {
+                    let (oh, ow) = layer.out_hw();
+                    let (t, k, c) = (oh * ow, shape.k, shape.c);
+                    let weights = (0..*groups)
+                        .map(|g| PackedB::pack(&surrogate_layer_weights(li, g, k, c), k, c))
+                        .collect::<Result<Vec<_>>>()?;
+                    layers.push(PlannedLayer::Conv {
+                        name: name.clone(),
+                        in_h: *in_h,
+                        in_w: *in_w,
+                        in_ch: *in_ch,
+                        out_ch: *out_ch,
+                        kernel: *kernel,
+                        stride: *stride,
+                        pad: *pad,
+                        groups: *groups,
+                        t,
+                        k,
+                        c,
+                        shape,
+                        weights,
+                    });
+                }
+                Layer::Fc { name, in_features, out_features } => {
+                    let weights = PackedB::pack(
+                        &surrogate_layer_weights(li, 0, *in_features, *out_features),
+                        *in_features,
+                        *out_features,
+                    )?;
+                    layers.push(PlannedLayer::Fc {
+                        name: name.clone(),
+                        in_features: *in_features,
+                        out_features: *out_features,
+                        shape,
+                        weights,
+                    });
+                }
+            }
+        }
+        Ok(CnnPlan { model: model.clone(), input_len, layers })
+    }
+
+    /// The model this plan was compiled from (cache revalidation key).
+    pub fn model(&self) -> &CnnModel {
+        &self.model
+    }
+
+    /// Element count of the first layer's activation tensor.
+    pub fn input_len(&self) -> usize {
+        self.input_len
+    }
+
+    /// Total packed weight matrices held by the plan (telemetry/tests).
+    pub fn packed_matrices(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| match l {
+                PlannedLayer::Conv { weights, .. } => weights.len(),
+                PlannedLayer::Fc { .. } => 1,
+            })
+            .sum()
+    }
+
+    pub(crate) fn layers(&self) -> &[PlannedLayer] {
+        &self.layers
+    }
+}
+
+/// Persistent per-engine scratch arena for plan-driven CNN serving. Every
+/// buffer is `clear()`/`resize()`d to the working size and reused across
+/// requests, so after the first request at a given (model, batch) shape the
+/// exact content-keyed serving path performs no heap allocation.
+#[derive(Default)]
+pub struct CnnScratch {
+    /// Stacked `(B·t)×k` im2col activation bytes (conv layers write every
+    /// frame's block here via [`im2col_group_into`]).
+    a8: Vec<i8>,
+    /// Flat frame-major int8 activations between layers (`B` frames of the
+    /// current layer's input length).
+    acts: Vec<i8>,
+    /// Flat frame-major int32 accumulators of the current layer
+    /// (`B·t·out_ch` for convs, `B·out_features` for FC).
+    raw: Vec<i32>,
+    /// Backend output buffer for one stacked GEMM.
+    out: Vec<i32>,
+    /// Backend per-row noise attribution for one stacked GEMM.
+    row_noise: Vec<u64>,
+    /// Per-frame noise event totals for the current layer.
+    frame_noise: Vec<u64>,
+    /// Flat per-frame per-row noise attribution for the current layer
+    /// (`B · rows_per_frame`, accumulated across conv groups).
+    frame_rows: Vec<u64>,
+}
+
 /// Serve one CNN inference through `engine`'s backend.
 ///
 /// `input` is the first layer's activation tensor in wire format (int8
@@ -163,7 +354,205 @@ pub fn run_cnn_batch_keyed(
     if inputs.is_empty() {
         return Ok(Vec::new());
     }
-    debug_assert!(frame_nonces.is_empty() || frame_nonces.len() == inputs.len());
+    check_frame_nonces(frame_nonces, inputs.len())?;
+    for input in inputs {
+        validate_cnn_input(model, input.len())?;
+    }
+    let plan = engine.cnn_plan(model)?;
+    let (backend, scratch) = engine.cnn_exec_parts();
+    run_planned(&plan, backend, scratch, inputs, frame_nonces)
+}
+
+/// A non-empty nonce slice must carry exactly one nonce per frame: a short
+/// slice would silently serve the trailing frames content-keyed (losing the
+/// decorrelation the caller asked for), a long one indicates the caller
+/// paired nonces with the wrong batch.
+fn check_frame_nonces(frame_nonces: &[u64], frames: usize) -> Result<()> {
+    if !frame_nonces.is_empty() && frame_nonces.len() != frames {
+        return Err(Error::Shape(format!(
+            "cnn batch: {} frame nonces for {} frames (must be empty or one per frame)",
+            frame_nonces.len(),
+            frames
+        )));
+    }
+    Ok(())
+}
+
+/// Drive one batch through a compiled plan: the steady-state hot loop.
+/// Every buffer lives in `scratch`; the only allocations are the per-frame
+/// result materialization (logits / layer reports) and, in keyed mode, the
+/// per-layer nonce vectors.
+fn run_planned(
+    plan: &CnnPlan,
+    backend: &mut dyn ExecBackend,
+    scratch: &mut CnnScratch,
+    inputs: &[&[i32]],
+    frame_nonces: &[u64],
+) -> Result<Vec<CnnRun>> {
+    let b = inputs.len();
+    let nonce_of = |f: usize| frame_nonces.get(f).copied().unwrap_or(0);
+    let keyed = frame_nonces.iter().any(|&n| n != 0);
+    let CnnScratch { a8, acts, raw, out, row_noise, frame_noise, frame_rows } = scratch;
+
+    // Narrow every frame's wire input into the flat activation arena.
+    let mut cur = plan.input_len();
+    acts.clear();
+    acts.reserve(b * cur);
+    for input in inputs {
+        acts.extend(input.iter().map(|&v| v as i8));
+    }
+
+    let mut layer_reports: Vec<Vec<LayerReport>> = vec![Vec::new(); b];
+    let mut aggs: Vec<Option<ExecReport>> = vec![None; b];
+
+    for planned in plan.layers() {
+        // Per-frame noise attribution, sliced out of the stacked executes'
+        // per-row `row_noise`: frame f owns rows [f·t, (f+1)·t) of every
+        // conv group's stacked GEMM and row f of the FC stack. `frame_rows`
+        // stays untouched (and unread) until a backend carries attribution.
+        frame_noise.clear();
+        frame_noise.resize(b, 0);
+        let mut attributed = false;
+        // Rows each frame owns in this layer's stacked GEMMs (for slicing
+        // `frame_rows` into per-frame reports).
+        let mut rpf = 1usize;
+        match planned {
+            PlannedLayer::Conv {
+                in_h, in_w, in_ch, out_ch, kernel, stride, pad, groups, t, k, c, weights, ..
+            } => {
+                rpf = *t;
+                raw.clear();
+                raw.resize(b * t * out_ch, 0);
+                a8.resize(b * t * k, 0);
+                // One nonce per stacked row, identical across groups (every
+                // group's GEMM carries the same frame-major row order).
+                let rn = if keyed {
+                    RowNonce::PerRow((0..b * t).map(|row| nonce_of(row / t)).collect())
+                } else {
+                    RowNonce::Content
+                };
+                for (g, pb) in weights.iter().enumerate() {
+                    // Stack every frame's im2col block for this group,
+                    // written directly into the arena.
+                    for f in 0..b {
+                        im2col_group_into(
+                            &acts[f * cur..(f + 1) * cur],
+                            *in_h,
+                            *in_w,
+                            *in_ch,
+                            *kernel,
+                            *stride,
+                            *pad,
+                            *groups,
+                            g,
+                            &mut a8[f * t * k..(f + 1) * t * k],
+                        );
+                    }
+                    backend.execute_prepacked_i8(a8, b * t, pb, &rn, out, row_noise)?;
+                    if !row_noise.is_empty() {
+                        if !attributed {
+                            attributed = true;
+                            frame_rows.clear();
+                            frame_rows.resize(b * t, 0);
+                        }
+                        for (i, &e) in row_noise.iter().enumerate() {
+                            frame_rows[i] += e;
+                            frame_noise[i / t] += e;
+                        }
+                    }
+                    // Scatter each frame's t×c block into its HWC output.
+                    for f in 0..b {
+                        for row in 0..*t {
+                            let dst = (f * t + row) * out_ch + g * c;
+                            raw[dst..dst + c]
+                                .copy_from_slice(&out[(f * t + row) * c..(f * t + row + 1) * c]);
+                        }
+                    }
+                }
+                acts.clear();
+                acts.extend(raw.iter().map(|&v| requantize(v, *k)));
+                cur = t * out_ch;
+            }
+            PlannedLayer::Fc { in_features, out_features, weights, .. } => {
+                // `acts` already is the stacked B×k activation matrix.
+                let rn = if keyed {
+                    RowNonce::PerRow((0..b).map(nonce_of).collect())
+                } else {
+                    RowNonce::Content
+                };
+                backend.execute_prepacked_i8(acts, b, weights, &rn, out, row_noise)?;
+                if !row_noise.is_empty() {
+                    attributed = true;
+                    frame_rows.clear();
+                    frame_rows.resize(b, 0);
+                    for f in 0..b {
+                        frame_rows[f] += row_noise[f];
+                        frame_noise[f] += row_noise[f];
+                    }
+                }
+                raw.clear();
+                raw.extend_from_slice(&out[..]);
+                acts.clear();
+                acts.extend(out.iter().map(|&v| requantize(v, *in_features)));
+                cur = *out_features;
+            }
+        }
+        // Per-frame projection on the frame's full grouped shape — identical
+        // to the layer's record in `simulate_frame` for the same accelerator,
+        // whatever the batch size — plus the frame's own slice of the
+        // stacked noise attribution.
+        if let Some(r) = backend.report_for(planned.shape()) {
+            for f in 0..b {
+                let mut rf = r.clone();
+                rf.noise_events = frame_noise[f];
+                rf.row_noise = if attributed {
+                    frame_rows[f * rpf..(f + 1) * rpf].to_vec()
+                } else {
+                    Vec::new()
+                };
+                let merged = match aggs[f].take() {
+                    Some(mut a) => {
+                        a.merge(&rf);
+                        a
+                    }
+                    None => rf.clone(),
+                };
+                aggs[f] = Some(merged);
+                layer_reports[f]
+                    .push(LayerReport { layer: planned.name().to_string(), report: rf });
+            }
+        }
+    }
+
+    // Result materialization: the final layer's raw accumulators, sliced
+    // back into per-frame logits.
+    Ok((0..b)
+        .map(|f| CnnRun {
+            logits: raw[f * cur..(f + 1) * cur].to_vec(),
+            report: aggs[f].take(),
+            layers: std::mem::take(&mut layer_reports[f]),
+        })
+        .collect())
+}
+
+/// The pre-plan serving path, retained as the bit-exactness oracle for
+/// [`run_cnn_batch_keyed`]: lowers every layer through the engine's ad-hoc
+/// wire-format GEMM entry ([`Engine::execute_gemm_shape_keyed`]), paying
+/// per-request im2col allocation, i8→i32→i8 wire round-trips and per-plan
+/// weight revalidation. `tests/cnn_plan.rs` pins the plan path against this
+/// on both backends, exact and noisy. Semantically identical (same logits,
+/// same telemetry, same noise attribution) — only the work per request
+/// differs.
+pub fn run_cnn_batch_keyed_reference(
+    engine: &mut Engine,
+    model: &CnnModel,
+    inputs: &[&[i32]],
+    frame_nonces: &[u64],
+) -> Result<Vec<CnnRun>> {
+    if inputs.is_empty() {
+        return Ok(Vec::new());
+    }
+    check_frame_nonces(frame_nonces, inputs.len())?;
     let nonce_of = |f: usize| frame_nonces.get(f).copied().unwrap_or(0);
     let keyed = frame_nonces.iter().any(|&n| n != 0);
     for input in inputs {

@@ -8,10 +8,13 @@
 //! [`crate::runtime`] for the backend story.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use crate::dnn::layer::GemmShape;
+use crate::dnn::models::CnnModel;
 use crate::runtime::artifact::{ArtifactMeta, DType, Manifest, TensorSpec};
 use crate::runtime::backend::{BackendKind, ExecBackend, ExecReport, RowNonce};
+use crate::runtime::cnnrun::{CnnPlan, CnnScratch};
 use crate::{Error, Result};
 
 /// Engine owning the manifest, validation specs, and the backend.
@@ -26,6 +29,13 @@ pub struct Engine {
     /// Input specs of planned artifacts (manifest or synthetic), kept here
     /// so the warm execute path validates with one map lookup.
     planned: HashMap<String, Vec<TensorSpec>>,
+    /// Compiled whole-CNN plans, keyed by model name and revalidated by
+    /// full model equality (see [`Engine::cnn_plan`]). Plans are immutable
+    /// after compile and shared via `Arc`.
+    cnn_plans: HashMap<&'static str, Arc<CnnPlan>>,
+    /// Persistent scratch arena for plan-driven CNN serving (exclusive to
+    /// this engine; see [`crate::runtime::cnnrun::CnnScratch`]).
+    cnn_scratch: CnnScratch,
 }
 
 impl Engine {
@@ -42,7 +52,14 @@ impl Engine {
     ) -> Result<Self> {
         let manifest = Manifest::load(artifact_dir)?;
         let backend = kind.build()?;
-        Ok(Engine { manifest, kind, backend, planned: HashMap::new() })
+        Ok(Engine {
+            manifest,
+            kind,
+            backend,
+            planned: HashMap::new(),
+            cnn_plans: HashMap::new(),
+            cnn_scratch: CnnScratch::default(),
+        })
     }
 
     /// The manifest this engine serves.
@@ -205,6 +222,30 @@ impl Engine {
     /// layers exactly as [`crate::sim::engine::simulate_frame`] would.
     pub fn report_for(&mut self, shape: &GemmShape) -> Option<ExecReport> {
         self.backend.report_for(shape)
+    }
+
+    /// The compiled plan for `model`: cache hit by model name, revalidated
+    /// by **full model equality** (never a hash — the CNN analogue of the
+    /// `refresh_wire` content-equality rule in [`crate::runtime::backend`]),
+    /// recompiled in place when a different model reuses a name. Compiling
+    /// packs every layer's surrogate weights once; requests then stream
+    /// against the shared immutable plan.
+    pub fn cnn_plan(&mut self, model: &CnnModel) -> Result<Arc<CnnPlan>> {
+        if let Some(p) = self.cnn_plans.get(model.name) {
+            if p.model() == model {
+                return Ok(p.clone());
+            }
+        }
+        let plan = Arc::new(CnnPlan::compile(model)?);
+        self.cnn_plans.insert(model.name, plan.clone());
+        Ok(plan)
+    }
+
+    /// Split-borrow the backend and the CNN scratch arena for the plan
+    /// serving loop (the two are disjoint fields; the plan itself is shared
+    /// separately via [`Engine::cnn_plan`]'s `Arc`).
+    pub(crate) fn cnn_exec_parts(&mut self) -> (&mut dyn ExecBackend, &mut CnnScratch) {
+        (self.backend.as_mut(), &mut self.cnn_scratch)
     }
 }
 

@@ -30,7 +30,11 @@
 //! [`crate::dnn::CnnModel`] through im2col layer by layer over any backend;
 //! [`cnnrun::run_cnn_batch`] stacks same-model frames along the t-dimension
 //! so a batch costs one GEMM per layer group (the coordinator's CNN
-//! batching path).
+//! batching path). Serving is compile-once/stream-many: the engine caches a
+//! [`cnnrun::CnnPlan`] per model (weights packed at compile time) and
+//! streams requests through a persistent [`cnnrun::CnnScratch`] arena and
+//! the backends' direct-i8 entry ([`ExecBackend::execute_prepacked_i8`]) —
+//! see the CNN-plan contract in [`backend`].
 //!
 //! A PJRT backend (the `xla` crate compiling the HLO text on a CPU client)
 //! previously occupied the software slot and can return as a third
@@ -50,7 +54,8 @@ pub mod software;
 pub use artifact::{ArtifactMeta, Manifest, TensorSpec};
 pub use backend::{BackendExec, BackendKind, ExecBackend, ExecReport, RowNonce};
 pub use cnnrun::{
-    run_cnn, run_cnn_batch, run_cnn_batch_keyed, validate_cnn_input, CnnRun, LayerReport,
+    run_cnn, run_cnn_batch, run_cnn_batch_keyed, run_cnn_batch_keyed_reference,
+    validate_cnn_input, CnnPlan, CnnRun, CnnScratch, LayerReport,
 };
 pub use engine::Engine;
 pub use photonic::{PhotonicBackend, PhotonicConfig};

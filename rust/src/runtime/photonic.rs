@@ -370,6 +370,58 @@ impl ExecBackend for PhotonicBackend {
     fn report_for(&mut self, shape: &GemmShape) -> Option<ExecReport> {
         Some(self.simulate_shape(shape))
     }
+
+    /// Direct i8 entry for compiled CNN plans: noise off delegates to the
+    /// exact prepacked kernel (the trait default), noise on runs the same
+    /// lane/transduce flow as [`Self::execute_noisy`] — but the activation
+    /// bytes arrive already narrowed (no i32 wire round-trip) and the weight
+    /// side streams from the plan's compile-time [`PackedB`]. The lane
+    /// charges are bit-identical to the legacy path (same a8 bytes, same
+    /// packed planes), and each row's noise is a pure function of the
+    /// channel seed, those charges, `k` and the row nonce — so outputs,
+    /// `noise_events` and `row_noise` stay bit-for-bit what the wire path
+    /// served.
+    fn execute_prepacked_i8(
+        &mut self,
+        a8: &[i8],
+        m: usize,
+        weights: &PackedB,
+        nonce: &RowNonce,
+        out: &mut Vec<i32>,
+        row_noise: &mut Vec<u64>,
+    ) -> Result<()> {
+        let Some(ch) = self.channel.as_ref() else {
+            row_noise.clear();
+            return crate::bitslice::gemm_i32_prepacked_into(a8, weights, m, out);
+        };
+        let k = weights.rows();
+        self.scratch.planes.pack_into(a8, m, k)?;
+        let lanes = gemm_lanes_prepacked(&self.scratch.planes, weights.planes())?;
+        let exact = lanes.weight_and_add();
+        let cols = if m == 0 { 0 } else { exact.len() / m };
+        out.clear();
+        out.reserve(exact.len());
+        row_noise.clear();
+        row_noise.resize(m, 0);
+        for r in 0..m {
+            let span = r * cols..(r + 1) * cols;
+            let observed = ch.transduce_row_keyed(
+                &lanes.hi[span.clone()],
+                &lanes.mid[span.clone()],
+                &lanes.lo[span],
+                k,
+                nonce.for_row(r),
+            );
+            for (j, o) in observed.into_iter().enumerate() {
+                let v = o.round() as i32;
+                if v != exact[r * cols + j] {
+                    row_noise[r] += 1;
+                }
+                out.push(v);
+            }
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -572,6 +624,33 @@ mod tests {
         assert!(ph.plans["gemm_8x8x8"].gemm_b.as_ref().unwrap().matches_wire(&b2));
         let back = ph.execute_i32("gemm_8x8x8", &[&a, &b]).unwrap();
         assert_eq!(first.output, back.output);
+    }
+
+    #[test]
+    fn prepacked_i8_entry_matches_wire_path_under_noise() {
+        // The compiled-CNN entry skips the i32 wire round-trip; with the
+        // same activation bytes, packed weights and nonces it must observe
+        // bit-identical noise to the legacy keyed path (same lane charges,
+        // same content-keyed sub-streams).
+        let gemm = meta("gemm_4x8x8 g i32:4x8,i32:8x8 i32:4x8");
+        let cfg = PhotonicConfig::spoga().with_noise(NoiseParams::from_link_margin(0.0), 17);
+        let mut noisy = PhotonicBackend::new(cfg).unwrap();
+        noisy.plan(&gemm).unwrap();
+        let mut rng = SplitMix64::new(23);
+        let (a, b) = (wire(&mut rng, 32), wire(&mut rng, 64));
+        let nonce = RowNonce::PerRow(vec![7, 0, 9, 3]);
+        let wire_exec = noisy.execute_i32_keyed("gemm_4x8x8", &[&a, &b], &nonce).unwrap();
+        let a8: Vec<i8> = a.iter().map(|&v| v as i8).collect();
+        let b8: Vec<i8> = b.iter().map(|&v| v as i8).collect();
+        let pb = crate::bitslice::pack_b(&b8, 8, 8).unwrap();
+        // Dirty reusable buffers: the entry must fully overwrite them.
+        let mut out = vec![i32::MIN; 3];
+        let mut rn = vec![u64::MAX; 1];
+        noisy.execute_prepacked_i8(&a8, 4, &pb, &nonce, &mut out, &mut rn).unwrap();
+        assert_eq!(out, wire_exec.output);
+        let rep = wire_exec.report.unwrap();
+        assert_eq!(rn, rep.row_noise);
+        assert_eq!(rn.iter().sum::<u64>(), rep.noise_events);
     }
 
     #[test]

@@ -24,6 +24,11 @@
 //! * The activation side lands in a per-backend [`ExecScratch`]
 //!   (`wire_to_i8` bytes + nibble planes), so the hot path performs zero
 //!   heap allocation once the scratch has grown to the working size.
+//! * Compiled CNN plans ([`crate::runtime::cnnrun::CnnPlan`]) hand this
+//!   backend already-narrowed activation bytes and compile-time-packed
+//!   weights through the defaulted `ExecBackend::execute_prepacked_i8`
+//!   entry — the exact prepacked kernel with no i32 wire round-trip and no
+//!   per-request packing on either operand.
 //!
 //! Artifact families are interpreted by their manifest signature:
 //!

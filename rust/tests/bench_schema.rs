@@ -94,6 +94,38 @@ fn bitslice_snapshot_keeps_schema() {
 }
 
 #[test]
+fn cnn_snapshot_keeps_schema_and_grid() {
+    use Kind::*;
+    let rows = check_schema(
+        "BENCH_cnn.json",
+        "cnn_hotpath",
+        &[
+            ("path", Label),
+            ("micro", Label),
+            ("batch", Number),
+            ("frames_per_s", Metric),
+            ("speedup_vs_legacy", Metric),
+        ],
+    );
+    // The committed grid: both paths at scalar and simd across the batch
+    // sweep must be present. A measured snapshot may append avx2 rows when
+    // the recording host detects the feature; the schema check above
+    // already covered them.
+    for micro in ["scalar", "simd"] {
+        for path in ["legacy", "plan"] {
+            for batch in [1.0, 4.0, 16.0] {
+                assert!(
+                    rows.iter().any(|r| r.get("path").unwrap().as_str() == Some(path)
+                        && r.get("micro").unwrap().as_str() == Some(micro)
+                        && r.get("batch").unwrap().as_num() == Some(batch)),
+                    "BENCH_cnn.json missing ({path}, {micro}, batch {batch}) row"
+                );
+            }
+        }
+    }
+}
+
+#[test]
 fn backends_snapshot_keeps_schema() {
     use Kind::*;
     let rows = check_schema(

@@ -1,0 +1,228 @@
+//! Compiled CNN plans vs the legacy wire path, bit for bit.
+//!
+//! `run_cnn_batch_keyed` serves through a [`CnnPlan`] (weights packed at
+//! compile time, im2col into a persistent scratch arena, direct-i8 backend
+//! entry); `run_cnn_batch_keyed_reference` is the retained pre-plan path
+//! (ad-hoc wire-format GEMMs per layer group). The two must agree on
+//! everything observable — logits, per-layer telemetry, noise attribution,
+//! nonce decorrelation — on both backends, exact and noisy, batched and
+//! unbatched. Also pins the frame-nonce length contract (typed error, not a
+//! silent content-keyed fallback) and stream-many non-corruption when two
+//! models alternate through one engine's plan cache.
+
+use spoga::dnn::models::CnnModel;
+use spoga::dnn::Layer;
+use spoga::fidelity::NoiseParams;
+use spoga::runtime::{
+    run_cnn_batch_keyed, run_cnn_batch_keyed_reference, BackendKind, Engine, PhotonicConfig,
+};
+use spoga::Error;
+
+fn tiny_model() -> CnnModel {
+    CnnModel {
+        name: "plan_tiny",
+        layers: vec![
+            Layer::conv("stem", 6, 6, 3, 4, 3, 1, 1),
+            Layer::dwconv("dw", 6, 6, 4, 3, 2, 1),
+            Layer::fc("head", 3 * 3 * 4, 5),
+        ],
+    }
+}
+
+/// A second model with different geometry (grouped conv in the middle) to
+/// alternate against `tiny_model` through one engine.
+fn alt_model() -> CnnModel {
+    CnnModel {
+        name: "plan_alt",
+        layers: vec![
+            Layer::conv("c1", 5, 5, 2, 6, 3, 1, 0),
+            Layer::fc("out", 3 * 3 * 6, 7),
+        ],
+    }
+}
+
+fn synthetic_dir(tag: &str) -> std::path::PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("spoga-cnn-plan-test-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.txt"), "mlp_b1 m i32:1x16 i32:1x4\n").unwrap();
+    dir
+}
+
+fn frames(model: &CnnModel, n: usize, salt: usize) -> Vec<Vec<i32>> {
+    let len = match &model.layers[0] {
+        Layer::Conv { in_h, in_w, in_ch, .. } => in_h * in_w * in_ch,
+        Layer::Fc { in_features, .. } => *in_features,
+    };
+    (0..n)
+        .map(|f| (0..len).map(|v| (((v * 31) + (f + salt) * 97) % 251) as i32 - 125).collect())
+        .collect()
+}
+
+fn backends() -> Vec<BackendKind> {
+    vec![
+        BackendKind::Software,
+        BackendKind::Photonic(PhotonicConfig::spoga()),
+        BackendKind::Photonic(
+            PhotonicConfig::spoga().with_noise(NoiseParams::from_link_margin(0.0), 0xC4A7),
+        ),
+    ]
+}
+
+/// Run both paths on fresh engines of the same backend and demand complete
+/// observable equality.
+fn assert_paths_agree(kind: &BackendKind, model: &CnnModel, n: usize, nonces: &[u64]) {
+    let dir = synthetic_dir(&format!("agree-{}-{n}-{}", kind.label(), nonces.len()));
+    let inputs = frames(model, n, 0);
+    let refs: Vec<&[i32]> = inputs.iter().map(|f| f.as_slice()).collect();
+    let mut plan_eng = Engine::with_backend(&dir, kind.clone()).unwrap();
+    let mut ref_eng = Engine::with_backend(&dir, kind.clone()).unwrap();
+    let planned = run_cnn_batch_keyed(&mut plan_eng, model, &refs, nonces).unwrap();
+    let legacy = run_cnn_batch_keyed_reference(&mut ref_eng, model, &refs, nonces).unwrap();
+    assert_eq!(planned.len(), legacy.len());
+    for (f, (p, l)) in planned.iter().zip(&legacy).enumerate() {
+        assert_eq!(p.logits, l.logits, "{}: frame {f} logits diverged", kind.label());
+        assert_eq!(p.report, l.report, "{}: frame {f} aggregate report", kind.label());
+        assert_eq!(p.layers.len(), l.layers.len());
+        for (pl, ll) in p.layers.iter().zip(&l.layers) {
+            assert_eq!(pl.layer, ll.layer);
+            assert_eq!(
+                pl.report, ll.report,
+                "{}: frame {f} layer {} telemetry diverged",
+                kind.label(),
+                pl.layer
+            );
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn plan_path_matches_reference_exact_and_noisy() {
+    let model = tiny_model();
+    for kind in backends() {
+        // Unbatched and batched, content-keyed.
+        assert_paths_agree(&kind, &model, 1, &[]);
+        assert_paths_agree(&kind, &model, 3, &[]);
+    }
+}
+
+#[test]
+fn plan_path_matches_reference_under_frame_nonces() {
+    let model = tiny_model();
+    for kind in backends() {
+        assert_paths_agree(&kind, &model, 1, &[9]);
+        assert_paths_agree(&kind, &model, 3, &[7, 0, 0xDEAD_BEEF]);
+        // All-zero nonces are the content-keyed default, bit for bit.
+        assert_paths_agree(&kind, &model, 2, &[0, 0]);
+    }
+}
+
+#[test]
+fn nonced_frames_still_decorrelate_through_the_plan_path() {
+    // Two byte-identical frames under distinct nonces must observe
+    // different noise through the compiled path (the decorrelation the
+    // wire path already guarantees).
+    let dir = synthetic_dir("decorrelate");
+    let model = tiny_model();
+    let kind = BackendKind::Photonic(
+        PhotonicConfig::spoga().with_noise(NoiseParams::from_link_margin(0.0), 0xBEE5),
+    );
+    let mut eng = Engine::with_backend(&dir, kind).unwrap();
+    let frame = frames(&model, 1, 0).remove(0);
+    let twin: Vec<&[i32]> = vec![&frame, &frame];
+    let plain = run_cnn_batch_keyed(&mut eng, &model, &twin, &[]).unwrap();
+    assert_eq!(plain[0].logits, plain[1].logits, "content keying must correlate twins");
+    let nonced = run_cnn_batch_keyed(&mut eng, &model, &twin, &[3, 4]).unwrap();
+    assert_ne!(nonced[0].logits, nonced[1].logits, "distinct nonces must decorrelate twins");
+    // Determinism: the same nonces replay the same observations.
+    let again = run_cnn_batch_keyed(&mut eng, &model, &twin, &[3, 4]).unwrap();
+    assert_eq!(nonced[0].logits, again[0].logits);
+    assert_eq!(nonced[1].logits, again[1].logits);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn short_or_long_nonce_slices_are_typed_shape_errors() {
+    // The bug this pins: a short nonce slice used to pass a release-mode
+    // debug_assert and silently serve trailing frames content-keyed.
+    let dir = synthetic_dir("noncelen");
+    let model = tiny_model();
+    let inputs = frames(&model, 3, 0);
+    let refs: Vec<&[i32]> = inputs.iter().map(|f| f.as_slice()).collect();
+    let mut eng = Engine::new(&dir).unwrap();
+    for bad in [&[1u64][..], &[1, 2][..], &[1, 2, 3, 4][..]] {
+        for result in [
+            run_cnn_batch_keyed(&mut eng, &model, &refs, bad),
+            run_cnn_batch_keyed_reference(&mut eng, &model, &refs, bad),
+        ] {
+            match result {
+                Err(Error::Shape(msg)) => {
+                    assert!(msg.contains("frame nonces"), "unhelpful message: {msg}")
+                }
+                other => panic!("expected shape error for {} nonces, got {other:?}", bad.len()),
+            }
+        }
+    }
+    // Exactly one nonce per frame (or none) is accepted.
+    assert!(run_cnn_batch_keyed(&mut eng, &model, &refs, &[1, 2, 3]).is_ok());
+    assert!(run_cnn_batch_keyed(&mut eng, &model, &refs, &[]).is_ok());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn alternating_models_through_one_engine_stay_uncorrupted() {
+    // Stream-many: two models ping-pong through one engine's plan cache and
+    // shared scratch arena; every run must match a fresh-engine run of the
+    // same model (no cross-model scratch or plan contamination).
+    let dir = synthetic_dir("alternate");
+    let (ma, mb) = (tiny_model(), alt_model());
+    for kind in backends() {
+        let mut eng = Engine::with_backend(&dir, kind.clone()).unwrap();
+        for round in 0..3 {
+            for model in [&ma, &mb] {
+                let inputs = frames(model, 2, round);
+                let refs: Vec<&[i32]> = inputs.iter().map(|f| f.as_slice()).collect();
+                let shared = run_cnn_batch_keyed(&mut eng, model, &refs, &[]).unwrap();
+                let mut fresh = Engine::with_backend(&dir, kind.clone()).unwrap();
+                let alone = run_cnn_batch_keyed(&mut fresh, model, &refs, &[]).unwrap();
+                for (s, a) in shared.iter().zip(&alone) {
+                    assert_eq!(
+                        s.logits,
+                        a.logits,
+                        "{}: round {round} model {} corrupted by alternation",
+                        kind.label(),
+                        model.name
+                    );
+                    assert_eq!(s.report, a.report);
+                }
+            }
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn plan_cache_reuses_and_revalidates_by_model_equality() {
+    let dir = synthetic_dir("cache");
+    let mut eng = Engine::new(&dir).unwrap();
+    let model = tiny_model();
+    let p1 = eng.cnn_plan(&model).unwrap();
+    let p2 = eng.cnn_plan(&model).unwrap();
+    assert!(std::sync::Arc::ptr_eq(&p1, &p2), "equal model must reuse the compiled plan");
+    // 1 PackedB per conv group + 1 for the FC: stem(1) + dw(4 groups) + head.
+    assert_eq!(p1.packed_matrices(), 1 + 4 + 1);
+    assert_eq!(p1.input_len(), 6 * 6 * 3);
+
+    // A *different* model under the same name must recompile, not serve the
+    // stale plan (full-equality revalidation, never name-keyed trust).
+    let mut changed = tiny_model();
+    changed.layers[2] = Layer::fc("head", 3 * 3 * 4, 9);
+    let p3 = eng.cnn_plan(&changed).unwrap();
+    assert!(!std::sync::Arc::ptr_eq(&p1, &p3), "changed model must recompile");
+    let inputs = frames(&changed, 1, 0);
+    let refs: Vec<&[i32]> = inputs.iter().map(|f| f.as_slice()).collect();
+    let out = run_cnn_batch_keyed(&mut eng, &changed, &refs, &[]).unwrap();
+    assert_eq!(out[0].logits.len(), 9);
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -71,16 +71,21 @@ fn prop_gemm_distributes_over_split_k() {
 
 /// Tile configs that force partial k/j blocks and multi-band threading even
 /// on the small shapes the generator produces (non-tile-multiple on purpose).
-/// Scalar and Simd micro-kernels are both represented so every property in
-/// this file cross-checks the register-blocked path against the scalar one.
+/// Scalar, Simd and Avx2 micro-kernels are all represented so every property
+/// in this file cross-checks the register-blocked paths against the scalar
+/// one (Avx2 resolves to Simd on hosts without the feature, so those rows
+/// are valid everywhere; wide-shape 16-block coverage lives in the kernel
+/// unit tests since the generator's dims stay under AVX2_BLOCK_W).
 fn oracle_stress_cfgs() -> Vec<TileConfig> {
     vec![
         TileConfig { kc: 1, jc: 1, threads: 1, micro: MicroKernel::Scalar },
         TileConfig { kc: 3, jc: 2, threads: 2, micro: MicroKernel::Simd },
         TileConfig { kc: 5, jc: 7, threads: 4, micro: MicroKernel::Scalar },
         TileConfig { kc: 5, jc: 7, threads: 4, micro: MicroKernel::Simd },
+        TileConfig { kc: 5, jc: 7, threads: 4, micro: MicroKernel::Avx2 },
         TileConfig { kc: 4096, jc: 4096, threads: 3, micro: MicroKernel::Scalar },
         TileConfig { kc: 4096, jc: 4096, threads: 3, micro: MicroKernel::Simd },
+        TileConfig { kc: 4096, jc: 4096, threads: 3, micro: MicroKernel::Avx2 },
     ]
 }
 
