@@ -7,7 +7,12 @@
 //! holds accepted jobs — every slot must resolve on the survivor, and the
 //! gap between the two `req_per_s` figures is the failover tax. Scenario
 //! `revival` measures wall-clock from `revive_shard` to a serving pool
-//! (worker respawn + engine warmup + health probe).
+//! (worker respawn + engine warmup + health probe). Scenarios
+//! `overload_high` / `overload_best_effort` drive blocking per-request
+//! clients against a watermarked 1-shard fleet: High is never shed (its
+//! `p99_us` is the held latency), BestEffort absorbs typed admission
+//! sheds — the `shed` column counts them, and its `p99_us` covers the
+//! requests that were served.
 //!
 //! Self-contained (synthetic manifest in a temp dir). Results print as a
 //! table and are written as JSON (default `BENCH_resilience.json`,
@@ -19,7 +24,7 @@ use std::sync::atomic::Ordering;
 use std::time::{Duration, Instant};
 
 use spoga::coordinator::{
-    CoordinatorConfig, Fleet, FleetConfig, FleetHandle, RetryingSlot, RoutePolicy,
+    CoordinatorConfig, Fleet, FleetConfig, FleetHandle, Qos, RetryingSlot, RoutePolicy,
 };
 use spoga::dnn::models::CnnModel;
 use spoga::dnn::Layer;
@@ -33,6 +38,21 @@ struct Row {
     req_per_s: f64,
     resubmits: u64,
     recovery_ms: f64,
+    /// p99 of per-request blocking latency; 0 for scenarios that submit
+    /// their whole burst asynchronously up front (per-slot latency there
+    /// would measure queue position, not service).
+    p99_us: f64,
+    /// Typed admission sheds (`Error::Overloaded`) observed by the clients.
+    shed: u64,
+}
+
+/// p99 over a sorted-in-place latency sample; 0 for an empty one.
+fn p99_us(lat_us: &mut Vec<u64>) -> f64 {
+    if lat_us.is_empty() {
+        return 0.0;
+    }
+    lat_us.sort_unstable();
+    lat_us[(lat_us.len() - 1) * 99 / 100] as f64
 }
 
 fn synthetic_artifacts() -> std::path::PathBuf {
@@ -124,6 +144,8 @@ fn run_burst(dir: &str, requests: usize, kill_shard_0: bool) -> Row {
         req_per_s: requests as f64 / wall.max(1e-12),
         resubmits: t.resubmits,
         recovery_ms: 0.0,
+        p99_us: 0.0,
+        shed: t.shed(),
     };
     if kill_shard_0 {
         assert!(t.resubmits > 0, "failover bench never exercised a resubmission");
@@ -150,6 +172,82 @@ fn run_revival(dir: &str) -> Row {
         req_per_s: 0.0,
         resubmits: 0,
         recovery_ms,
+        p99_us: 0.0,
+        shed: 0,
+    };
+    fleet.shutdown();
+    row
+}
+
+/// Overload scenario: blocking per-request clients against a 1-shard fleet
+/// with a tight ingress bound and a best-effort admission watermark. High
+/// traffic is held (never shed — the bound cannot fill under blocking
+/// clients), BestEffort sheds typed whenever the outstanding depth sits at
+/// the watermark. `req_per_s` counts attempts over wall-clock; `p99_us`
+/// covers the served requests.
+fn run_overload(dir: &str, requests: usize, best_effort: bool) -> Row {
+    let cfg = CoordinatorConfig {
+        artifact_dir: dir.to_string(),
+        workers: 2,
+        max_batch_wait_s: 0.002,
+        queue_depth: 4,
+        best_effort_watermark: Some(2),
+        ..Default::default()
+    };
+    let fleet = Fleet::start(FleetConfig {
+        shards: vec![cfg],
+        policy: RoutePolicy::RoundRobin,
+        labels: Vec::new(),
+        ..Default::default()
+    })
+    .expect("fleet");
+    let h = fleet.handle();
+    h.infer_mlp(vec![0; 16]).expect("warm");
+    let clients = 4usize;
+    let per = (requests / clients).max(1);
+    let t0 = Instant::now();
+    let joins: Vec<_> = (0..clients)
+        .map(|t| {
+            let h = h.clone();
+            std::thread::spawn(move || {
+                let mut lat_us: Vec<u64> = Vec::new();
+                let mut shed = 0u64;
+                for i in 0..per {
+                    let row: Vec<i32> = (0..16).map(|v| ((v + i + t) % 100) as i32).collect();
+                    let qos = if best_effort { Qos::best_effort() } else { Qos::default() };
+                    let s0 = Instant::now();
+                    match h.submit_mlp_qos(row, qos) {
+                        Ok(rx) => {
+                            rx.recv_timeout(Duration::from_secs(60))
+                                .expect("slot resolves")
+                                .expect("accepted request serves");
+                            lat_us.push(s0.elapsed().as_micros() as u64);
+                        }
+                        Err(spoga::Error::Overloaded(_)) => shed += 1,
+                        Err(e) => panic!("unexpected refusal: {e}"),
+                    }
+                }
+                (lat_us, shed)
+            })
+        })
+        .collect();
+    let mut lat_us: Vec<u64> = Vec::new();
+    let mut shed = 0u64;
+    for j in joins {
+        let (l, s) = j.join().unwrap();
+        lat_us.extend(l);
+        shed += s;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let attempts = clients * per;
+    let row = Row {
+        scenario: if best_effort { "overload_best_effort" } else { "overload_high" },
+        requests: attempts,
+        req_per_s: attempts as f64 / wall.max(1e-12),
+        resubmits: 0,
+        recovery_ms: 0.0,
+        p99_us: p99_us(&mut lat_us),
+        shed,
     };
     fleet.shutdown();
     row
@@ -166,9 +264,13 @@ fn main() {
         run_burst(&artifact_dir, requests, false),
         run_burst(&artifact_dir, requests, true),
         run_revival(&artifact_dir),
+        run_overload(&artifact_dir, requests, false),
+        run_overload(&artifact_dir, requests, true),
     ];
 
-    let mut t = Table::new(vec!["scenario", "requests", "req/s", "resubmits", "recovery ms"]);
+    let mut t = Table::new(vec![
+        "scenario", "requests", "req/s", "resubmits", "recovery ms", "p99 us", "shed",
+    ]);
     for r in &rows {
         t.row(vec![
             r.scenario.to_string(),
@@ -176,6 +278,8 @@ fn main() {
             fmt_sig(r.req_per_s, 3),
             r.resubmits.to_string(),
             format!("{:.2}", r.recovery_ms),
+            format!("{:.0}", r.p99_us),
+            r.shed.to_string(),
         ]);
     }
     println!("{}", t.render());
@@ -188,14 +292,16 @@ fn main() {
         .map(|r| {
             format!(
                 "    {{\"scenario\": \"{}\", \"requests\": {}, \"req_per_s\": {:.1}, \
-                 \"resubmits\": {}, \"recovery_ms\": {:.3}}}",
-                r.scenario, r.requests, r.req_per_s, r.resubmits, r.recovery_ms
+                 \"resubmits\": {}, \"recovery_ms\": {:.3}, \"p99_us\": {:.1}, \
+                 \"shed\": {}}}",
+                r.scenario, r.requests, r.req_per_s, r.resubmits, r.recovery_ms, r.p99_us,
+                r.shed
             )
         })
         .collect();
     let json = format!(
         "{{\n  \"bench\": \"resilience\",\n  \"requests\": {requests},\n  \
-         \"workload\": \"mixed GEMM/MLP/CNN retrying slots; shard 0 killed mid-window; revival timed\",\n  \
+         \"workload\": \"mixed GEMM/MLP/CNN retrying slots; shard 0 killed mid-window; revival timed; QoS overload held-vs-shed\",\n  \
          \"status\": \"measured\",\n  \"results\": [\n{}\n  ]\n}}\n",
         json_rows.join(",\n")
     );

@@ -206,7 +206,8 @@ mod tests {
 
     fn job(v: i32) -> (MlpJob, crate::coordinator::request::Response) {
         let (tx, rx) = response_slot();
-        (MlpJob { row: vec![v; 4], reply: tx, enqueued: Instant::now(), nonce: 0 }, rx)
+        let qos = crate::coordinator::request::Qos::default();
+        (MlpJob { row: vec![v; 4], reply: tx, enqueued: Instant::now(), nonce: 0, qos }, rx)
     }
 
     #[test]
@@ -343,6 +344,7 @@ mod tests {
                 reply: tx,
                 enqueued: Instant::now(),
                 nonce: 0,
+                qos: crate::coordinator::request::Qos::default(),
             },
             rx,
         )

@@ -13,7 +13,17 @@
 //!   im2col GEMMs amortize across requests, and a pool of worker threads —
 //!   each owning its *own* [`Engine`](crate::runtime::Engine) over the
 //!   configured [`BackendKind`](crate::runtime::BackendKind) — executes
-//!   them. Backpressure comes from bounded queues end to end.
+//!   them. Backpressure comes from bounded queues end to end — and at the
+//!   ingress edge it is *typed shedding*, not blocking: a full ingress
+//!   queue (or a tripped [`CoordinatorConfig::best_effort_watermark`])
+//!   refuses the submission with [`crate::Error::Overloaded`] and hands
+//!   the payload back, so no submitting thread ever parks on a saturated
+//!   shard. Each request carries a [`Qos`] envelope ([`Priority`] class +
+//!   optional deadline); the leader drains high-priority jobs first within
+//!   a gathering window, flushes a window early when its oldest member
+//!   would miss its deadline, and fails already-expired jobs typed
+//!   ([`crate::Error::DeadlineExceeded`]) *before* burning a worker
+//!   execute.
 //! * **Fleet tier** ([`router`]) — a [`Fleet`] fronts N coordinators
 //!   (possibly heterogeneous backends / photonic design points) behind one
 //!   cloneable [`FleetHandle`] with pluggable [`RoutePolicy`]s
@@ -76,7 +86,7 @@ pub mod stats;
 pub mod worker;
 
 pub use batcher::{BatchPolicy, CnnMicroBatch, MicroBatch};
-pub use request::{CnnJob, GemmJob, Job, MlpJob, PingJob, Reply, Response};
+pub use request::{CnnJob, GemmJob, Job, MlpJob, PingJob, Priority, Qos, Reply, Response};
 pub use router::{
     Fleet, FleetAutoscale, FleetConfig, FleetHandle, FleetLifecycle, NoiseSweepGrid,
     RemoteShardConfig, RetryPayload, RetryingSlot, RoutePolicy,

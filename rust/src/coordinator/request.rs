@@ -1,7 +1,7 @@
 //! Request/response types flowing through the coordinator.
 
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::dnn::models::CnnModel;
 use crate::runtime::backend::ExecReport;
@@ -32,6 +32,49 @@ impl Reply {
     }
 }
 
+/// Per-request service class. The default is [`Priority::High`] so every
+/// pre-QoS caller keeps first-class semantics; [`Priority::BestEffort`] is
+/// the opt-in degraded class that sheds first under overload (see
+/// [`CoordinatorConfig::best_effort_watermark`](super::CoordinatorConfig))
+/// and drains after high-priority jobs within a gathering window.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Priority {
+    /// First-class traffic: drained first, shed last.
+    #[default]
+    High,
+    /// Degraded class: shed first at the admission watermark, drained
+    /// after every high-priority member of the same window.
+    BestEffort,
+}
+
+/// Per-request quality-of-service envelope: a service class plus an
+/// optional deadline measured from enqueue. `Qos::default()` is
+/// high-priority with no deadline — exactly the pre-QoS behaviour.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Qos {
+    /// Service class (drain order + shed order under overload).
+    pub priority: Priority,
+    /// Deadline measured from the enqueue timestamp. The leader fails a
+    /// job typed ([`crate::Error::DeadlineExceeded`]) once
+    /// `enqueued.elapsed() >= deadline`, *before* dispatch, and flushes a
+    /// gathering window early when its oldest member would otherwise miss
+    /// its deadline. `None` = wait indefinitely.
+    pub deadline: Option<Duration>,
+}
+
+impl Qos {
+    /// Best-effort class, no deadline.
+    pub fn best_effort() -> Self {
+        Qos { priority: Priority::BestEffort, deadline: None }
+    }
+
+    /// This QoS with a deadline attached.
+    pub fn with_deadline(mut self, deadline: Duration) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+}
+
 /// Response slot: a bounded(1) channel the worker fulfils exactly once.
 pub type Response = Receiver<Result<Reply>>;
 
@@ -59,6 +102,8 @@ pub struct GemmJob {
     /// when [`CoordinatorConfig::noise_nonce`](super::CoordinatorConfig)
     /// opts into the time-indexed counter mode).
     pub(crate) nonce: u64,
+    /// Priority + optional deadline (see [`Qos`]).
+    pub(crate) qos: Qos,
 }
 
 /// A single-row MLP inference request (the batchable kind).
@@ -72,6 +117,8 @@ pub struct MlpJob {
     pub(crate) enqueued: Instant,
     /// Per-request noise nonce (0 = content-keyed default).
     pub(crate) nonce: u64,
+    /// Priority + optional deadline (see [`Qos`]).
+    pub(crate) qos: Qos,
 }
 
 /// A whole-CNN inference request: the model runs im2col layer-by-layer
@@ -88,6 +135,8 @@ pub struct CnnJob {
     pub(crate) enqueued: Instant,
     /// Per-request noise nonce (0 = content-keyed default).
     pub(crate) nonce: u64,
+    /// Priority + optional deadline (see [`Qos`]).
+    pub(crate) qos: Qos,
 }
 
 /// A health probe: the leader routes it to a worker like any other item and
@@ -138,6 +187,24 @@ impl Job {
             Job::RetireWorkers | Job::ReviveWorkers { .. } | Job::Ping(_) | Job::Shutdown => 0.0,
         }
     }
+
+    /// Service class (control jobs are high-priority: they must never shed).
+    pub fn priority(&self) -> Priority {
+        match self {
+            Job::Gemm(g) => g.qos.priority,
+            Job::Mlp(m) => m.qos.priority,
+            Job::Cnn(c) => c.qos.priority,
+            Job::RetireWorkers | Job::ReviveWorkers { .. } | Job::Ping(_) | Job::Shutdown => {
+                Priority::High
+            }
+        }
+    }
+}
+
+/// The instant a job's deadline lands, `None` when it has none.
+/// Shared by request jobs; control jobs never expire.
+pub(crate) fn deadline_at(enqueued: Instant, qos: &Qos) -> Option<Instant> {
+    qos.deadline.map(|d| enqueued + d)
 }
 
 #[cfg(test)]
@@ -156,7 +223,13 @@ mod tests {
     #[test]
     fn job_age_increases() {
         let (tx, _rx) = response_slot();
-        let j = Job::Mlp(MlpJob { row: vec![0; 4], reply: tx, enqueued: Instant::now(), nonce: 0 });
+        let j = Job::Mlp(MlpJob {
+            row: vec![0; 4],
+            reply: tx,
+            enqueued: Instant::now(),
+            nonce: 0,
+            qos: Qos::default(),
+        });
         let a1 = j.age_s(Instant::now());
         std::thread::sleep(std::time::Duration::from_millis(2));
         let a2 = j.age_s(Instant::now());
@@ -176,7 +249,23 @@ mod tests {
             reply: tx,
             enqueued: Instant::now(),
             nonce: 0,
+            qos: Qos::default(),
         });
         assert!(j.age_s(Instant::now()) >= 0.0);
+    }
+
+    #[test]
+    fn qos_defaults_are_pre_qos_behaviour() {
+        let q = Qos::default();
+        assert_eq!(q.priority, Priority::High);
+        assert!(q.deadline.is_none());
+        let be = Qos::best_effort().with_deadline(Duration::from_millis(5));
+        assert_eq!(be.priority, Priority::BestEffort);
+        assert_eq!(be.deadline, Some(Duration::from_millis(5)));
+        // Control jobs are pinned high-priority so they never shed.
+        assert_eq!(Job::Shutdown.priority(), Priority::High);
+        let t0 = Instant::now();
+        assert_eq!(deadline_at(t0, &q), None);
+        assert_eq!(deadline_at(t0, &be), Some(t0 + Duration::from_millis(5)));
     }
 }

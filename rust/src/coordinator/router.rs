@@ -49,6 +49,22 @@
 //!   [`RetryingSlot::request_id`] naming the logical request across
 //!   attempts.
 //!
+//! ## Overload is busy, not dead
+//!
+//! [`Error::Overloaded`] — a shard's bounded ingress queue is full, or its
+//! best-effort watermark tripped — is explicitly *not* a failover signal:
+//! the shard is alive and draining, and retiring it would amplify a load
+//! spike into a capacity collapse. Submit-time overload routes around the
+//! busy shard (bounded by the live-set size) *without* marking it dead and
+//! without counting [`FleetLifecycle::submit_reroutes`]; when every live
+//! shard is shedding, the typed error surfaces to the caller, so a
+//! saturated fleet degrades with typed refusals instead of a retired-shard
+//! cascade. A *reply-time* `Overloaded` (a remote peer accepted the frame,
+//! then its own admission shed the request) grants a [`RetryingSlot`] at
+//! most one bounded resubmission on a survivor; a second shed is terminal.
+//! [`Error::DeadlineExceeded`] is likewise request-level — the deadline was
+//! the caller's budget expiring, not the shard failing — and never retries.
+//!
 //! ## Revival and autoscaling
 //!
 //! A retired shard's *leader* survives ([`CoordinatorHandle::retire_workers`]
@@ -114,7 +130,7 @@ use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::coordinator::request::{Reply, Response};
+use crate::coordinator::request::{Qos, Reply, Response};
 use crate::coordinator::service::{Coordinator, CoordinatorConfig, CoordinatorHandle, Rejected};
 use crate::coordinator::stats::CoordinatorStats;
 use crate::dnn::models::CnnModel;
@@ -587,25 +603,41 @@ impl ShardSlot {
         }
     }
 
+    /// Submit with an explicit QoS envelope plus an optional retained noise
+    /// nonce. `Ok` carries the nonce the accepting *local* coordinator
+    /// stamped (so retrying layers can replay it bit-identically across
+    /// failover); a remote peer draws its nonce server-side, so the remote
+    /// arm reports `None` and noisy replay determinism is a local-fleet
+    /// guarantee.
     fn try_submit_gemm(
         &self,
         artifact: &str,
         a: Vec<i32>,
         b: Vec<i32>,
-    ) -> std::result::Result<Response, Rejected<(Vec<i32>, Vec<i32>)>> {
+        qos: Qos,
+        nonce: Option<u64>,
+    ) -> std::result::Result<(Response, Option<u64>), Rejected<(Vec<i32>, Vec<i32>)>> {
         match &self.link {
-            ShardLink::Local { handle, .. } => handle.try_submit_gemm(artifact, a, b),
-            ShardLink::Remote(r) => r.try_submit_gemm(artifact, a, b),
+            ShardLink::Local { handle, .. } => handle
+                .try_submit_gemm_opts(artifact, a, b, qos, nonce)
+                .map(|(rx, n)| (rx, Some(n))),
+            ShardLink::Remote(r) => {
+                r.try_submit_gemm_qos(artifact, a, b, qos).map(|rx| (rx, None))
+            }
         }
     }
 
     fn try_submit_mlp(
         &self,
         row: Vec<i32>,
-    ) -> std::result::Result<Response, Rejected<Vec<i32>>> {
+        qos: Qos,
+        nonce: Option<u64>,
+    ) -> std::result::Result<(Response, Option<u64>), Rejected<Vec<i32>>> {
         match &self.link {
-            ShardLink::Local { handle, .. } => handle.try_submit_mlp(row),
-            ShardLink::Remote(r) => r.try_submit_mlp(row),
+            ShardLink::Local { handle, .. } => {
+                handle.try_submit_mlp_opts(row, qos, nonce).map(|(rx, n)| (rx, Some(n)))
+            }
+            ShardLink::Remote(r) => r.try_submit_mlp_qos(row, qos).map(|rx| (rx, None)),
         }
     }
 
@@ -613,10 +645,16 @@ impl ShardSlot {
         &self,
         model: CnnModel,
         input: Vec<i32>,
-    ) -> std::result::Result<Response, Rejected<(CnnModel, Vec<i32>)>> {
+        qos: Qos,
+        nonce: Option<u64>,
+    ) -> std::result::Result<(Response, Option<u64>), Rejected<(CnnModel, Vec<i32>)>> {
         match &self.link {
-            ShardLink::Local { handle, .. } => handle.try_submit_cnn(model, input),
-            ShardLink::Remote(r) => r.try_submit_cnn(model, input),
+            ShardLink::Local { handle, .. } => handle
+                .try_submit_cnn_opts(model, input, qos, nonce)
+                .map(|(rx, n)| (rx, Some(n))),
+            ShardLink::Remote(r) => {
+                r.try_submit_cnn_qos(model, input, qos).map(|rx| (rx, None))
+            }
         }
     }
 
@@ -833,7 +871,11 @@ impl FleetHandle {
     /// [`ShardSlot`]), marking refusers dead and *moving* the recovered
     /// payload to the next attempt — no clone, ever. Returns the accepted
     /// value plus the index of the shard that took it. Request-level
-    /// rejections (bad shape, unknown artifact) return immediately.
+    /// rejections (bad shape, unknown artifact) return immediately. An
+    /// [`Error::Overloaded`] refusal is busy-not-dead (module docs): the
+    /// payload routes around the shedding shard — which stays live and
+    /// counts no reroute — until every live shard has refused once, then
+    /// the typed overload surfaces.
     fn with_submit_failover<T, P>(
         &self,
         payload: P,
@@ -842,8 +884,10 @@ impl FleetHandle {
         let mut payload = Some(payload);
         let mut last_err: Option<Error> = None;
         let mut rerouted = false;
+        let mut overload_bounces = 0usize;
         // Each shard-down attempt retires a shard, so the loop terminates;
-        // the cap only guards against a pathological revive/fail cycle.
+        // the cap only guards against a pathological revive/fail cycle
+        // (overload bounces are separately bounded by the live-set size).
         let attempt_cap = 2 * self.shard_count() + 2;
         for _ in 0..attempt_cap {
             // One slot-table snapshot per attempt covers live-set, pick and
@@ -868,6 +912,17 @@ impl FleetHandle {
                     last_err = Some(error);
                     payload = Some(recovered);
                 }
+                Err(Rejected { error: error @ Error::Overloaded(_), payload: recovered }) => {
+                    // Shedding shard: alive and draining. Never retire it,
+                    // never count a reroute; try the rest of the live set
+                    // once each, then report the overload typed.
+                    overload_bounces += 1;
+                    if overload_bounces >= live.len() {
+                        return Err(error);
+                    }
+                    last_err = Some(error);
+                    payload = Some(recovered);
+                }
                 Err(Rejected { error, .. }) => return Err(error),
             }
         }
@@ -875,19 +930,31 @@ impl FleetHandle {
     }
 
     /// Route one retained payload to a shard (the [`RetryingSlot`] submit /
-    /// resubmit primitive).
-    fn submit_payload(&self, payload: RetryPayload) -> Result<(Response, usize)> {
-        match payload {
-            RetryPayload::Gemm { artifact, a, b } => self
-                .with_submit_failover((a, b), |s, (a, b)| s.try_submit_gemm(&artifact, a, b)),
+    /// resubmit primitive). `nonce` is the retained noise nonce from a
+    /// prior accept (replayed verbatim on a local survivor so noisy
+    /// failover stays bit-identical); the returned `Option<u64>` is the
+    /// nonce this accept stamped (`None` when a remote peer took it — the
+    /// server draws its own).
+    fn submit_payload(
+        &self,
+        payload: RetryPayload,
+        qos: Qos,
+        nonce: Option<u64>,
+    ) -> Result<(Response, usize, Option<u64>)> {
+        let ((rx, stamped), shard) = match payload {
+            RetryPayload::Gemm { artifact, a, b } => self.with_submit_failover(
+                (a, b),
+                |s, (a, b)| s.try_submit_gemm(&artifact, a, b, qos, nonce),
+            )?,
             RetryPayload::Mlp { row } => {
-                self.with_submit_failover(row, |s, row| s.try_submit_mlp(row))
+                self.with_submit_failover(row, |s, row| s.try_submit_mlp(row, qos, nonce))?
             }
-            RetryPayload::Cnn { model, input } => self
-                .with_submit_failover((model, input), |s, (model, input)| {
-                    s.try_submit_cnn(model, input)
-                }),
-        }
+            RetryPayload::Cnn { model, input } => self.with_submit_failover(
+                (model, input),
+                |s, (model, input)| s.try_submit_cnn(model, input, qos, nonce),
+            )?,
+        };
+        Ok((rx, shard, stamped))
     }
 
     /// Submit a GEMM to a policy-picked shard; returns the raw response
@@ -896,15 +963,38 @@ impl FleetHandle {
     /// [`FleetHandle::submit_gemm_retrying`] for full mid-flight retry
     /// semantics.
     pub fn submit_gemm(&self, artifact: &str, a: Vec<i32>, b: Vec<i32>) -> Result<Response> {
+        self.submit_gemm_qos(artifact, a, b, Qos::default())
+    }
+
+    /// [`FleetHandle::submit_gemm`] with an explicit QoS envelope
+    /// (priority class + optional deadline).
+    pub fn submit_gemm_qos(
+        &self,
+        artifact: &str,
+        a: Vec<i32>,
+        b: Vec<i32>,
+        qos: Qos,
+    ) -> Result<Response> {
         Ok(self
-            .with_submit_failover((a, b), |s, (a, b)| s.try_submit_gemm(artifact, a, b))?
-            .0)
+            .with_submit_failover((a, b), |s, (a, b)| {
+                s.try_submit_gemm(artifact, a, b, qos, None)
+            })?
+            .0
+             .0)
     }
 
     /// Submit one MLP row to a policy-picked shard; returns the raw
     /// response slot (submit-time failover only, clone-free).
     pub fn submit_mlp(&self, row: Vec<i32>) -> Result<Response> {
-        Ok(self.with_submit_failover(row, |s, row| s.try_submit_mlp(row))?.0)
+        self.submit_mlp_qos(row, Qos::default())
+    }
+
+    /// [`FleetHandle::submit_mlp`] with an explicit QoS envelope.
+    pub fn submit_mlp_qos(&self, row: Vec<i32>, qos: Qos) -> Result<Response> {
+        Ok(self
+            .with_submit_failover(row, |s, row| s.try_submit_mlp(row, qos, None))?
+            .0
+             .0)
     }
 
     /// Submit a whole-CNN inference to a policy-picked shard; returns the
@@ -912,14 +1002,20 @@ impl FleetHandle {
     /// Same-model frames co-pending on that shard stack into one
     /// t-dimension batch.
     pub fn submit_cnn(&self, model: CnnModel, input: Vec<i32>) -> Result<Response> {
-        Ok(self
-            .with_submit_failover((model, input), |s, (model, input)| {
-                s.try_submit_cnn(model, input)
-            })?
-            .0)
+        self.submit_cnn_qos(model, input, Qos::default())
     }
 
-    fn submit_retrying(&self, payload: RetryPayload) -> Result<RetryingSlot> {
+    /// [`FleetHandle::submit_cnn`] with an explicit QoS envelope.
+    pub fn submit_cnn_qos(&self, model: CnnModel, input: Vec<i32>, qos: Qos) -> Result<Response> {
+        Ok(self
+            .with_submit_failover((model, input), |s, (model, input)| {
+                s.try_submit_cnn(model, input, qos, None)
+            })?
+            .0
+             .0)
+    }
+
+    fn submit_retrying(&self, payload: RetryPayload, qos: Qos) -> Result<RetryingSlot> {
         let request_id = self.inner.next_request_id.fetch_add(1, Ordering::Relaxed) + 1;
         // Always retain: even a 1-shard fleet with no autoscale policy can
         // gain a survivor at any time (public [`FleetHandle::spawn_shard`],
@@ -927,34 +1023,72 @@ impl FleetHandle {
         // check would bake in an invariant those APIs break. One payload
         // clone per retrying submit is the price of never losing an
         // accepted request that something could still serve.
-        let (rx, shard) = self.submit_payload(payload.clone())?;
+        let (rx, shard, nonce) = self.submit_payload(payload.clone(), qos, None)?;
         let resubmits_left = 2 * self.shard_count() + 2;
-        Ok(RetryingSlot { handle: self.clone(), rx, shard, request_id, payload, resubmits_left })
+        Ok(RetryingSlot {
+            handle: self.clone(),
+            rx,
+            shard,
+            request_id,
+            payload,
+            qos,
+            nonce,
+            resubmits_left,
+            overload_retried: false,
+        })
     }
 
     /// Submit a GEMM with *mid-flight* retry semantics: the returned
     /// [`RetryingSlot`] owns a copy of the payload, and if the serving
     /// shard dies after accepting, resubmits on a survivor and resolves
-    /// with outputs bit-identical to an undisturbed run.
+    /// with outputs bit-identical to an undisturbed run (including under
+    /// counter-mode noise: the slot retains the originally-stamped nonce
+    /// and replays it).
     pub fn submit_gemm_retrying(
         &self,
         artifact: &str,
         a: Vec<i32>,
         b: Vec<i32>,
     ) -> Result<RetryingSlot> {
-        self.submit_retrying(RetryPayload::Gemm { artifact: artifact.to_string(), a, b })
+        self.submit_gemm_retrying_qos(artifact, a, b, Qos::default())
+    }
+
+    /// [`FleetHandle::submit_gemm_retrying`] with an explicit QoS envelope.
+    pub fn submit_gemm_retrying_qos(
+        &self,
+        artifact: &str,
+        a: Vec<i32>,
+        b: Vec<i32>,
+        qos: Qos,
+    ) -> Result<RetryingSlot> {
+        self.submit_retrying(RetryPayload::Gemm { artifact: artifact.to_string(), a, b }, qos)
     }
 
     /// Submit one MLP row with mid-flight retry semantics (see
     /// [`FleetHandle::submit_gemm_retrying`]).
     pub fn submit_mlp_retrying(&self, row: Vec<i32>) -> Result<RetryingSlot> {
-        self.submit_retrying(RetryPayload::Mlp { row })
+        self.submit_mlp_retrying_qos(row, Qos::default())
+    }
+
+    /// [`FleetHandle::submit_mlp_retrying`] with an explicit QoS envelope.
+    pub fn submit_mlp_retrying_qos(&self, row: Vec<i32>, qos: Qos) -> Result<RetryingSlot> {
+        self.submit_retrying(RetryPayload::Mlp { row }, qos)
     }
 
     /// Submit a whole-CNN inference with mid-flight retry semantics (see
     /// [`FleetHandle::submit_gemm_retrying`]).
     pub fn submit_cnn_retrying(&self, model: CnnModel, input: Vec<i32>) -> Result<RetryingSlot> {
-        self.submit_retrying(RetryPayload::Cnn { model, input })
+        self.submit_cnn_retrying_qos(model, input, Qos::default())
+    }
+
+    /// [`FleetHandle::submit_cnn_retrying`] with an explicit QoS envelope.
+    pub fn submit_cnn_retrying_qos(
+        &self,
+        model: CnnModel,
+        input: Vec<i32>,
+        qos: Qos,
+    ) -> Result<RetryingSlot> {
+        self.submit_retrying(RetryPayload::Cnn { model, input }, qos)
     }
 
     /// Blocking GEMM returning the full [`Reply`]; a retrying slot under
@@ -1258,7 +1392,18 @@ pub struct RetryingSlot {
     request_id: u64,
     /// Retained payload for resubmission across shard deaths.
     payload: RetryPayload,
+    /// QoS envelope replayed on every resubmission (the logical request's
+    /// class and deadline do not change because a shard died).
+    qos: Qos,
+    /// The noise nonce the first accepting *local* coordinator stamped;
+    /// resubmissions replay it so counter-mode noise draws identically
+    /// across failover (`None` until a local shard accepts).
+    nonce: Option<u64>,
     resubmits_left: usize,
+    /// A reply-time [`Error::Overloaded`] grants at most one bounded
+    /// resubmission (module docs: overload is busy-not-dead); this latches
+    /// after it is spent.
+    overload_retried: bool,
 }
 
 impl RetryingSlot {
@@ -1279,11 +1424,10 @@ impl RetryingSlot {
     }
 
     /// [`RetryingSlot::recv`] with an overall deadline spanning the reply
-    /// waits of every attempt. Caveat: the deadline bounds *waiting on
-    /// reply slots* — a resubmission itself goes through the survivor's
-    /// bounded ingress queue and, like any submit, blocks under
-    /// backpressure while that queue is full, which is not interruptible
-    /// by the deadline.
+    /// waits of every attempt. Resubmission itself never blocks: admission
+    /// is non-blocking `try_send` everywhere, so a survivor whose ingress
+    /// queue is full refuses typed ([`Error::Overloaded`]) instead of
+    /// stalling this deadline.
     pub fn recv_timeout(self, timeout: Duration) -> Result<Reply> {
         self.wait(Some(Instant::now() + timeout))
     }
@@ -1309,13 +1453,15 @@ impl RetryingSlot {
                         return Err(self.terminal(e));
                     }
                     self.resubmits_left -= 1;
-                    let (rx, shard) = match self.handle.submit_payload(self.payload.clone()) {
-                        Ok(v) => v,
-                        // Resubmission found no live shard at all — the
-                        // other terminal disposition of a retained payload.
-                        Err(e) if is_shard_down(&e) => return Err(self.terminal(e)),
-                        Err(e) => return Err(e),
-                    };
+                    let (rx, shard, nonce) =
+                        match self.handle.submit_payload(self.payload.clone(), self.qos, self.nonce)
+                        {
+                            Ok(v) => v,
+                            // Resubmission found no live shard at all — the
+                            // other terminal disposition of a retained payload.
+                            Err(e) if is_shard_down(&e) => return Err(self.terminal(e)),
+                            Err(e) => return Err(e),
+                        };
                     self.handle
                         .inner
                         .lifecycle
@@ -1323,6 +1469,30 @@ impl RetryingSlot {
                         .fetch_add(1, Ordering::Relaxed);
                     self.rx = rx;
                     self.shard = shard;
+                    if self.nonce.is_none() {
+                        self.nonce = nonce;
+                    }
+                }
+                Ok(Err(e @ Error::Overloaded(_))) if !self.overload_retried => {
+                    // A remote peer accepted the frame, then its own
+                    // admission shed the request. Busy, not dead: the shard
+                    // stays in rotation, and the retained payload earns
+                    // exactly one bounded retry (the fleet routes it around
+                    // shedding shards); a second shed is terminal.
+                    self.overload_retried = true;
+                    let (rx, shard, nonce) =
+                        match self.handle.submit_payload(self.payload.clone(), self.qos, self.nonce)
+                        {
+                            Ok(v) => v,
+                            // Retry found no capacity either — surface the
+                            // original typed overload, not the probe error.
+                            Err(_) => return Err(e),
+                        };
+                    self.rx = rx;
+                    self.shard = shard;
+                    if self.nonce.is_none() {
+                        self.nonce = nonce;
+                    }
                 }
                 Ok(Err(e)) => return Err(e),
                 Err(Some(())) => {
@@ -1576,6 +1746,12 @@ mod tests {
         )));
         assert!(!is_shard_down(&Error::Shape("mlp row has 3 elements".into())));
         assert!(!is_shard_down(&Error::Artifact("unknown artifact".into())));
+        // QoS refusals are busy-not-dead: a shedding shard is alive and
+        // draining, and an expired deadline was the caller's budget — a
+        // failover (worse: a failover storm of retained payloads) on
+        // either would amplify overload into capacity collapse.
+        assert!(!is_shard_down(&Error::Overloaded("ingress queue full (64 slots)".into())));
+        assert!(!is_shard_down(&Error::DeadlineExceeded("queued 12.0 ms".into())));
         // Remote kinds follow retires_shard(): truly-unreachable peers
         // fail over, one bad exchange with a live peer does not.
         use crate::error::RemoteErrorKind as K;
@@ -1585,6 +1761,54 @@ mod tests {
         assert!(!is_shard_down(&remote(K::Timeout)));
         assert!(!is_shard_down(&remote(K::FrameCorrupt)));
         assert!(!is_shard_down(&remote(K::VersionMismatch)));
+    }
+
+    #[test]
+    fn overloaded_shard_is_routed_around_not_retired() {
+        // Shard 0 sheds every best-effort submission (watermark 0); shard 1
+        // accepts. Overload must route around without retiring shard 0 and
+        // without counting a submit reroute (that counter means "a down
+        // shard pushed traffic away").
+        let dir = synthetic_dir("overload-route");
+        let mut shed_cfg = CoordinatorConfig {
+            artifact_dir: dir.to_string_lossy().into_owned(),
+            workers: 1,
+            max_batch_wait_s: 0.0,
+            ..Default::default()
+        };
+        let open_cfg = shed_cfg.clone();
+        shed_cfg.best_effort_watermark = Some(0);
+        let fleet = Fleet::start(FleetConfig {
+            shards: vec![shed_cfg.clone(), open_cfg],
+            policy: RoutePolicy::RoundRobin,
+            labels: vec!["shedder".into(), "open".into()],
+            ..Default::default()
+        })
+        .unwrap();
+        let h = fleet.handle();
+        // Round-robin from cursor 0: the first pick is the shedding shard.
+        let rx = h.submit_mlp_qos(vec![0; 16], Qos::best_effort()).unwrap();
+        assert!(rx.recv().unwrap().is_ok(), "rerouted submission must serve");
+        assert_eq!(h.live_shard_count(), 2, "shedding shard stays in rotation");
+        assert_eq!(h.lifecycle().submit_reroutes.load(Ordering::Relaxed), 0);
+        assert!(h.shard_stats(0).shed.load(Ordering::Relaxed) >= 1);
+
+        // With every shard shedding, the typed overload surfaces (and
+        // still retires nothing).
+        let all_full = FleetConfig {
+            shards: vec![shed_cfg.clone(), shed_cfg],
+            policy: RoutePolicy::RoundRobin,
+            ..Default::default()
+        };
+        let saturated = Fleet::start(all_full).unwrap();
+        let sh = saturated.handle();
+        match sh.submit_mlp_qos(vec![0; 16], Qos::best_effort()) {
+            Err(Error::Overloaded(msg)) => assert!(msg.contains("watermark"), "{msg}"),
+            other => panic!("expected typed Overloaded, got {other:?}"),
+        }
+        assert_eq!(sh.live_shard_count(), 2);
+        saturated.shutdown();
+        fleet.shutdown();
     }
 
     #[test]

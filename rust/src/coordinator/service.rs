@@ -1,14 +1,17 @@
 //! The coordinator service: leader thread, routing, lifecycle.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SendError, SyncSender};
+use std::sync::mpsc::{
+    sync_channel, Receiver, RecvTimeoutError, SendError, SyncSender, TrySendError,
+};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::batcher::{BatchPolicy, CnnMicroBatch, MicroBatch};
 use crate::coordinator::request::{
-    response_slot, CnnJob, GemmJob, Job, MlpJob, PingJob, Reply, Response,
+    deadline_at, response_slot, CnnJob, GemmJob, Job, MlpJob, PingJob, Priority, Qos, Reply,
+    Response, ResponseTx,
 };
 use crate::coordinator::stats::CoordinatorStats;
 use crate::coordinator::worker::{run_worker, WorkItem};
@@ -41,8 +44,21 @@ pub struct CoordinatorConfig {
     /// so every stacked frame's reply carries exactly the noise events an
     /// unbatched run would have observed.
     pub max_cnn_batch: usize,
-    /// Ingress queue depth (backpressure bound).
+    /// Ingress queue depth — the admission-control bound. A submit against
+    /// a full queue is *shed* (typed [`Error::Overloaded`], payload
+    /// recovered through [`Rejected`], counted in
+    /// [`CoordinatorStats::shed`]) instead of blocking the caller: queues
+    /// absorb jitter, shedding absorbs spikes, and autoscaling absorbs
+    /// sustained pressure.
     pub queue_depth: usize,
+    /// Early-shed watermark for best-effort traffic: when `Some(w)`, a
+    /// [`Priority::BestEffort`] submit is refused with [`Error::Overloaded`]
+    /// once the shard's outstanding depth ([`CoordinatorStats::queue_depth`])
+    /// reaches `w` — reserving the remaining queue slots for high-priority
+    /// traffic so its completion holds through a mixed burst. `None`
+    /// (default) sheds best-effort only when the queue is actually full,
+    /// exactly like high-priority.
+    pub best_effort_watermark: Option<usize>,
     /// Compile all artifacts at worker start (first-request latency vs
     /// startup time trade).
     pub warmup: bool,
@@ -52,10 +68,11 @@ pub struct CoordinatorConfig {
     /// ([`crate::runtime::RowNonce`]) — byte-identical rows served under
     /// different nonces then observe *decorrelated* noise, while each
     /// `(seed, content, nonce)` draw stays deterministic. Default `false`:
-    /// the pure content-keyed streams, bit-identical to historical serving
-    /// (and required for bit-identical cross-shard resubmission of noisy
-    /// traffic, since a resubmitted request draws a fresh nonce on the
-    /// survivor).
+    /// the pure content-keyed streams, bit-identical to historical serving.
+    /// Cross-shard resubmission stays bit-identical in *both* modes: the
+    /// fleet's [`RetryingSlot`](crate::coordinator::RetryingSlot) retains
+    /// the nonce assigned at first acceptance and replays it on the
+    /// survivor instead of drawing a fresh one.
     pub noise_nonce: bool,
 }
 
@@ -68,6 +85,7 @@ impl Default for CoordinatorConfig {
             max_batch_wait_s: 0.002,
             max_cnn_batch: 8,
             queue_depth: 1024,
+            best_effort_watermark: None,
             warmup: true,
             noise_nonce: false,
         }
@@ -96,6 +114,11 @@ pub struct CoordinatorHandle {
     mlp_row_len: usize,
     /// Configured worker-pool size — the target `revive_workers` restores.
     workers: usize,
+    /// Configured ingress bound (admission-refusal diagnostics).
+    queue_depth: usize,
+    /// Early-shed depth for best-effort traffic (see
+    /// [`CoordinatorConfig::best_effort_watermark`]).
+    best_effort_watermark: Option<usize>,
     /// Time-indexed noise-nonce counter (0 is never handed out; it means
     /// "content-keyed"). `None` when [`CoordinatorConfig::noise_nonce`] is
     /// off, so default serving stamps every job with nonce 0.
@@ -111,16 +134,53 @@ impl CoordinatorHandle {
         }
     }
 
-    /// Enqueue a job, recovering it from the channel on failure. The
-    /// accepted-request counter only sticks for accepted jobs, so a
-    /// rejected submission never leaks `queue_depth()`.
-    fn send_job(&self, job: Job) -> std::result::Result<(), Job> {
+    /// The nonce for a submission: the retained one when a failover layer
+    /// replays a request (bit-identical noisy resubmission), a fresh draw
+    /// otherwise.
+    fn pick_nonce(&self, retained: Option<u64>) -> u64 {
+        retained.unwrap_or_else(|| self.next_nonce())
+    }
+
+    /// Non-blocking admission: enqueue a job against the bounded ingress
+    /// queue, recovering it (with the refusal reason) on failure. A full
+    /// queue — or a tripped best-effort watermark — *sheds* the job with
+    /// typed [`Error::Overloaded`] instead of blocking the submitting
+    /// thread; a disconnected channel is [`Error::ShardDown`]. The
+    /// accepted-request counter only sticks for accepted jobs and sheds
+    /// never enter it, so a rejected submission never leaks
+    /// [`CoordinatorStats::queue_depth`].
+    fn send_job(&self, job: Job) -> std::result::Result<(), (Error, Job)> {
+        if let Some(w) = self.best_effort_watermark {
+            if job.priority() == Priority::BestEffort {
+                let depth = self.stats.queue_depth();
+                if depth >= w as u64 {
+                    self.stats.shed.fetch_add(1, Ordering::Relaxed);
+                    self.stats.shed_best_effort.fetch_add(1, Ordering::Relaxed);
+                    let error = Error::Overloaded(format!(
+                        "best-effort watermark: {depth} outstanding >= {w}"
+                    ));
+                    return Err((error, job));
+                }
+            }
+        }
         self.stats.requests.fetch_add(1, Ordering::Relaxed);
-        match self.tx.send(job) {
+        match self.tx.try_send(job) {
             Ok(()) => Ok(()),
-            Err(SendError(returned)) => {
+            Err(TrySendError::Full(returned)) => {
                 self.stats.requests.fetch_sub(1, Ordering::Relaxed);
-                Err(returned)
+                self.stats.shed.fetch_add(1, Ordering::Relaxed);
+                if returned.priority() == Priority::BestEffort {
+                    self.stats.shed_best_effort.fetch_add(1, Ordering::Relaxed);
+                }
+                let error = Error::Overloaded(format!(
+                    "ingress queue full ({} slots)",
+                    self.queue_depth
+                ));
+                Err((error, returned))
+            }
+            Err(TrySendError::Disconnected(returned)) => {
+                self.stats.requests.fetch_sub(1, Ordering::Relaxed);
+                Err((Error::ShardDown("coordinator stopped".into()), returned))
             }
         }
     }
@@ -130,30 +190,69 @@ impl CoordinatorHandle {
         self.try_submit_gemm(artifact, a, b).map_err(|r| r.error)
     }
 
-    /// Payload-recovering GEMM submission: a refused submit (the
-    /// coordinator stopped) hands `(a, b)` back inside the [`Rejected`] so
-    /// a failover layer can resubmit elsewhere without having cloned.
+    /// [`CoordinatorHandle::submit_gemm`] with an explicit QoS envelope.
+    pub fn submit_gemm_qos(
+        &self,
+        artifact: &str,
+        a: Vec<i32>,
+        b: Vec<i32>,
+        qos: Qos,
+    ) -> Result<Response> {
+        self.try_submit_gemm_opts(artifact, a, b, qos, None)
+            .map(|(rx, _)| rx)
+            .map_err(|r| r.error)
+    }
+
+    /// Payload-recovering GEMM submission: a refused submit (full queue →
+    /// [`Error::Overloaded`], stopped coordinator → [`Error::ShardDown`])
+    /// hands `(a, b)` back inside the [`Rejected`] so a failover layer can
+    /// resubmit elsewhere without having cloned.
     pub fn try_submit_gemm(
         &self,
         artifact: &str,
         a: Vec<i32>,
         b: Vec<i32>,
     ) -> std::result::Result<Response, Rejected<(Vec<i32>, Vec<i32>)>> {
+        self.try_submit_gemm_opts(artifact, a, b, Qos::default(), None).map(|(rx, _)| rx)
+    }
+
+    /// [`CoordinatorHandle::try_submit_gemm`] with an explicit QoS envelope
+    /// (payload-recovering, non-blocking).
+    pub fn try_submit_gemm_qos(
+        &self,
+        artifact: &str,
+        a: Vec<i32>,
+        b: Vec<i32>,
+        qos: Qos,
+    ) -> std::result::Result<Response, Rejected<(Vec<i32>, Vec<i32>)>> {
+        self.try_submit_gemm_opts(artifact, a, b, qos, None).map(|(rx, _)| rx)
+    }
+
+    /// Full-control GEMM submission: explicit [`Qos`] plus an optional
+    /// retained noise nonce (failover replay). `Ok` carries the nonce the
+    /// job was stamped with, so a retrying layer can retain it.
+    pub(crate) fn try_submit_gemm_opts(
+        &self,
+        artifact: &str,
+        a: Vec<i32>,
+        b: Vec<i32>,
+        qos: Qos,
+        retained_nonce: Option<u64>,
+    ) -> std::result::Result<(Response, u64), Rejected<(Vec<i32>, Vec<i32>)>> {
         let (reply, rx) = response_slot();
+        let nonce = self.pick_nonce(retained_nonce);
         let job = Job::Gemm(GemmJob {
             artifact: artifact.to_string(),
             a,
             b,
             reply,
             enqueued: Instant::now(),
-            nonce: self.next_nonce(),
+            nonce,
+            qos,
         });
         match self.send_job(job) {
-            Ok(()) => Ok(rx),
-            Err(Job::Gemm(g)) => Err(Rejected {
-                error: Error::ShardDown("coordinator stopped".into()),
-                payload: (g.a, g.b),
-            }),
+            Ok(()) => Ok((rx, nonce)),
+            Err((error, Job::Gemm(g))) => Err(Rejected { error, payload: (g.a, g.b) }),
             Err(_) => unreachable!("send returns the job it was given"),
         }
     }
@@ -163,12 +262,38 @@ impl CoordinatorHandle {
         self.try_submit_mlp(row).map_err(|r| r.error)
     }
 
+    /// [`CoordinatorHandle::submit_mlp`] with an explicit QoS envelope.
+    pub fn submit_mlp_qos(&self, row: Vec<i32>, qos: Qos) -> Result<Response> {
+        self.try_submit_mlp_opts(row, qos, None).map(|(rx, _)| rx).map_err(|r| r.error)
+    }
+
     /// Payload-recovering MLP submission (see [`CoordinatorHandle::try_submit_gemm`]).
     /// Shape rejections return the row too — nothing consumed it.
     pub fn try_submit_mlp(
         &self,
         row: Vec<i32>,
     ) -> std::result::Result<Response, Rejected<Vec<i32>>> {
+        self.try_submit_mlp_opts(row, Qos::default(), None).map(|(rx, _)| rx)
+    }
+
+    /// [`CoordinatorHandle::try_submit_mlp`] with an explicit QoS envelope
+    /// (payload-recovering, non-blocking).
+    pub fn try_submit_mlp_qos(
+        &self,
+        row: Vec<i32>,
+        qos: Qos,
+    ) -> std::result::Result<Response, Rejected<Vec<i32>>> {
+        self.try_submit_mlp_opts(row, qos, None).map(|(rx, _)| rx)
+    }
+
+    /// Full-control MLP submission (explicit [`Qos`] + retained nonce; see
+    /// [`CoordinatorHandle::try_submit_gemm_opts`]).
+    pub(crate) fn try_submit_mlp_opts(
+        &self,
+        row: Vec<i32>,
+        qos: Qos,
+        retained_nonce: Option<u64>,
+    ) -> std::result::Result<(Response, u64), Rejected<Vec<i32>>> {
         if row.len() != self.mlp_row_len {
             let error = Error::Shape(format!(
                 "mlp row has {} elements, expected {}",
@@ -178,14 +303,11 @@ impl CoordinatorHandle {
             return Err(Rejected { error, payload: row });
         }
         let (reply, rx) = response_slot();
-        let job =
-            Job::Mlp(MlpJob { row, reply, enqueued: Instant::now(), nonce: self.next_nonce() });
+        let nonce = self.pick_nonce(retained_nonce);
+        let job = Job::Mlp(MlpJob { row, reply, enqueued: Instant::now(), nonce, qos });
         match self.send_job(job) {
-            Ok(()) => Ok(rx),
-            Err(Job::Mlp(m)) => Err(Rejected {
-                error: Error::ShardDown("coordinator stopped".into()),
-                payload: m.row,
-            }),
+            Ok(()) => Ok((rx, nonce)),
+            Err((error, Job::Mlp(m))) => Err(Rejected { error, payload: m.row }),
             Err(_) => unreachable!("send returns the job it was given"),
         }
     }
@@ -196,29 +318,51 @@ impl CoordinatorHandle {
         self.try_submit_cnn(model, input).map_err(|r| r.error)
     }
 
+    /// [`CoordinatorHandle::submit_cnn`] with an explicit QoS envelope.
+    pub fn submit_cnn_qos(&self, model: CnnModel, input: Vec<i32>, qos: Qos) -> Result<Response> {
+        self.try_submit_cnn_opts(model, input, qos, None)
+            .map(|(rx, _)| rx)
+            .map_err(|r| r.error)
+    }
+
     /// Payload-recovering CNN submission (see [`CoordinatorHandle::try_submit_gemm`]).
     pub fn try_submit_cnn(
         &self,
         model: CnnModel,
         input: Vec<i32>,
     ) -> std::result::Result<Response, Rejected<(CnnModel, Vec<i32>)>> {
+        self.try_submit_cnn_opts(model, input, Qos::default(), None).map(|(rx, _)| rx)
+    }
+
+    /// [`CoordinatorHandle::try_submit_cnn`] with an explicit QoS envelope
+    /// (payload-recovering, non-blocking).
+    pub fn try_submit_cnn_qos(
+        &self,
+        model: CnnModel,
+        input: Vec<i32>,
+        qos: Qos,
+    ) -> std::result::Result<Response, Rejected<(CnnModel, Vec<i32>)>> {
+        self.try_submit_cnn_opts(model, input, qos, None).map(|(rx, _)| rx)
+    }
+
+    /// Full-control CNN submission (explicit [`Qos`] + retained nonce; see
+    /// [`CoordinatorHandle::try_submit_gemm_opts`]).
+    pub(crate) fn try_submit_cnn_opts(
+        &self,
+        model: CnnModel,
+        input: Vec<i32>,
+        qos: Qos,
+        retained_nonce: Option<u64>,
+    ) -> std::result::Result<(Response, u64), Rejected<(CnnModel, Vec<i32>)>> {
         if let Err(error) = crate::runtime::cnnrun::validate_cnn_input(&model, input.len()) {
             return Err(Rejected { error, payload: (model, input) });
         }
         let (reply, rx) = response_slot();
-        let job = Job::Cnn(CnnJob {
-            model,
-            input,
-            reply,
-            enqueued: Instant::now(),
-            nonce: self.next_nonce(),
-        });
+        let nonce = self.pick_nonce(retained_nonce);
+        let job = Job::Cnn(CnnJob { model, input, reply, enqueued: Instant::now(), nonce, qos });
         match self.send_job(job) {
-            Ok(()) => Ok(rx),
-            Err(Job::Cnn(c)) => Err(Rejected {
-                error: Error::ShardDown("coordinator stopped".into()),
-                payload: (c.model, c.input),
-            }),
+            Ok(()) => Ok((rx, nonce)),
+            Err((error, Job::Cnn(c))) => Err(Rejected { error, payload: (c.model, c.input) }),
             Err(_) => unreachable!("send returns the job it was given"),
         }
     }
@@ -295,9 +439,17 @@ impl CoordinatorHandle {
     /// probing cannot skew routing.
     pub fn ping(&self, timeout: Duration) -> Result<()> {
         let (reply, rx) = response_slot();
-        self.tx
-            .send(Job::Ping(PingJob { reply }))
-            .map_err(|_| Error::ShardDown("coordinator stopped".into()))?;
+        match self.tx.try_send(Job::Ping(PingJob { reply })) {
+            Ok(()) => {}
+            // A full ingress queue proves the leader is alive (a dropped
+            // receiver reports Disconnected even when full): the shard is
+            // busy-not-dead, and a probe must never block behind the very
+            // backlog it is checking on.
+            Err(TrySendError::Full(_)) => return Ok(()),
+            Err(TrySendError::Disconnected(_)) => {
+                return Err(Error::ShardDown("coordinator stopped".into()))
+            }
+        }
         match rx.recv_timeout(timeout) {
             Ok(Ok(_)) => Ok(()),
             Ok(Err(e)) => Err(e),
@@ -419,8 +571,15 @@ impl Coordinator {
         };
 
         let nonce_counter = cfg.noise_nonce.then(|| Arc::new(AtomicU64::new(0)));
-        let handle =
-            CoordinatorHandle { tx: tx.clone(), stats, mlp_row_len, workers, nonce_counter };
+        let handle = CoordinatorHandle {
+            tx: tx.clone(),
+            stats,
+            mlp_row_len,
+            workers,
+            queue_depth: cfg.queue_depth,
+            best_effort_watermark: cfg.best_effort_watermark,
+            nonce_counter,
+        };
         Ok(Coordinator { handle, leader: Some(leader), tx })
     }
 
@@ -429,21 +588,45 @@ impl Coordinator {
         self.handle.clone()
     }
 
-    /// Graceful shutdown: drain queues, stop workers, join threads.
-    pub fn shutdown(mut self) {
-        let _ = self.tx.send(Job::Shutdown);
-        if let Some(j) = self.leader.take() {
-            let _ = j.join();
+    /// Deliver `Job::Shutdown` without blocking on a full ingress queue,
+    /// then join the leader. A live leader drains the queue, so `Full`
+    /// clears within a bounded retry; `Disconnected` means the leader is
+    /// already gone (it exits on channel disconnect too). If the queue
+    /// stays full past the bound the leader is wedged — we skip the join
+    /// (leaking the thread) rather than hang teardown forever.
+    fn stop_leader(&mut self) {
+        let mut delivered = false;
+        for _ in 0..5000 {
+            match self.tx.try_send(Job::Shutdown) {
+                Ok(()) | Err(TrySendError::Disconnected(_)) => {
+                    delivered = true;
+                    break;
+                }
+                Err(TrySendError::Full(_)) => {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            }
         }
+        if delivered {
+            if let Some(j) = self.leader.take() {
+                let _ = j.join();
+            }
+        } else {
+            self.leader.take();
+        }
+    }
+
+    /// Graceful shutdown: drain queues, stop workers, join threads.
+    /// Always completes — even against an ingress queue kept full by a
+    /// burst of submitters (see [`Coordinator::stop_leader`]).
+    pub fn shutdown(mut self) {
+        self.stop_leader();
     }
 }
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
-        let _ = self.tx.send(Job::Shutdown);
-        if let Some(j) = self.leader.take() {
-            let _ = j.join();
-        }
+        self.stop_leader();
     }
 }
 
@@ -551,18 +734,118 @@ fn revive_workers_to(
     }
 }
 
-/// Extract up to `cap` pending frames of `model`, in arrival order.
+/// Extract up to `cap` pending frames of `model`, in arrival order, with a
+/// single order-preserving partition pass (`Vec::remove` in a loop is
+/// O(n²) per flush under large windows).
 fn extract_cnn_group(pending: &mut Vec<CnnJob>, model: &CnnModel, cap: usize) -> Vec<CnnJob> {
     let mut jobs = Vec::new();
-    let mut i = 0;
-    while i < pending.len() && jobs.len() < cap {
-        if pending[i].model == *model {
-            jobs.push(pending.remove(i));
+    let mut rest = Vec::with_capacity(pending.len());
+    for j in pending.drain(..) {
+        if jobs.len() < cap && j.model == *model {
+            jobs.push(j);
         } else {
-            i += 1;
+            rest.push(j);
         }
     }
+    *pending = rest;
     jobs
+}
+
+/// How close to a pending job's deadline the leader closes a gathering
+/// window early: flushing *at* the deadline would already have missed it.
+/// Sized well above `recv_timeout` wake-up jitter on a loaded host — an
+/// over-tight margin would let the timer overshoot expire the very job the
+/// early flush exists to save.
+const DEADLINE_FLUSH_MARGIN: Duration = Duration::from_millis(25);
+
+/// Whether a job's deadline has passed.
+fn job_expired(enqueued: Instant, qos: &Qos, now: Instant) -> bool {
+    matches!(qos.deadline, Some(d) if now.duration_since(enqueued) >= d)
+}
+
+/// Fail one job's reply slot with typed [`Error::DeadlineExceeded`] —
+/// before dispatch, so no worker execute is wasted on a reply nobody
+/// wants. Counted in `failed` (the stats invariant closes out) and
+/// attributed in `deadline_expired`.
+fn fail_deadline(stats: &CoordinatorStats, reply: &ResponseTx, enqueued: Instant, qos: &Qos) {
+    stats.failed.fetch_add(1, Ordering::Relaxed);
+    stats.deadline_expired.fetch_add(1, Ordering::Relaxed);
+    let _ = reply.send(Err(Error::DeadlineExceeded(format!(
+        "queued {:.1} ms, deadline {:.1} ms",
+        enqueued.elapsed().as_secs_f64() * 1e3,
+        qos.deadline.unwrap_or_default().as_secs_f64() * 1e3,
+    ))));
+}
+
+/// Drop every already-expired job from the gathering buffers, failing each
+/// typed. Runs before every flush so an expired job never reaches a worker.
+fn reap_expired(pending: &mut Vec<MlpJob>, pending_cnn: &mut Vec<CnnJob>, stats: &CoordinatorStats) {
+    let now = Instant::now();
+    pending.retain(|j| {
+        if job_expired(j.enqueued, &j.qos, now) {
+            fail_deadline(stats, &j.reply, j.enqueued, &j.qos);
+            false
+        } else {
+            true
+        }
+    });
+    pending_cnn.retain(|j| {
+        if job_expired(j.enqueued, &j.qos, now) {
+            fail_deadline(stats, &j.reply, j.enqueued, &j.qos);
+            false
+        } else {
+            true
+        }
+    });
+}
+
+/// The earliest deadline instant across both gathering buffers.
+fn earliest_deadline(pending: &[MlpJob], pending_cnn: &[CnnJob]) -> Option<Instant> {
+    let mlp = pending.iter().filter_map(|j| deadline_at(j.enqueued, &j.qos)).min();
+    let cnn = pending_cnn.iter().filter_map(|j| deadline_at(j.enqueued, &j.qos)).min();
+    match (mlp, cnn) {
+        (Some(a), Some(b)) => Some(a.min(b)),
+        (a, None) => a,
+        (None, b) => b,
+    }
+}
+
+/// Take up to `n` MLP jobs for the next micro-batch, high-priority first:
+/// every [`Priority::High`] job (in arrival order) is selected before any
+/// [`Priority::BestEffort`] one. Jobs left behind keep their arrival order,
+/// and the taken set is returned in arrival order too — priority decides
+/// *which* jobs board the earliest batch, not their position inside it.
+fn take_by_priority(pending: &mut Vec<MlpJob>, n: usize) -> Vec<MlpJob> {
+    if pending.len() <= n {
+        return std::mem::take(pending);
+    }
+    let mut take = vec![false; pending.len()];
+    let mut left = n;
+    for class in [Priority::High, Priority::BestEffort] {
+        for (i, j) in pending.iter().enumerate() {
+            if left == 0 {
+                break;
+            }
+            if j.qos.priority == class && !take[i] {
+                take[i] = true;
+                left -= 1;
+            }
+        }
+        if left == 0 {
+            break;
+        }
+    }
+    let mut taken = Vec::with_capacity(n);
+    let mut rest = Vec::with_capacity(pending.len() - n);
+    for (i, j) in pending.drain(..).enumerate() {
+        if take[i] {
+            taken.push(j);
+        } else {
+            rest.push(j);
+        }
+    }
+    *pending = rest;
+    taken
 }
 
 /// Flush every pending CNN frame as t-stacked micro-batches, in arrival
@@ -647,11 +930,19 @@ fn run_leader(
                 continue;
             }
             Ok(Job::Gemm(g)) => {
-                dispatch(WorkItem::Gemm(g), &mut worker_txs, &mut next_worker, &stats);
+                if job_expired(g.enqueued, &g.qos, Instant::now()) {
+                    fail_deadline(&stats, &g.reply, g.enqueued, &g.qos);
+                } else {
+                    dispatch(WorkItem::Gemm(g), &mut worker_txs, &mut next_worker, &stats);
+                }
                 continue;
             }
             Ok(Job::Cnn(c)) if cnn_batch_cap <= 1 => {
-                dispatch(WorkItem::Cnn(c), &mut worker_txs, &mut next_worker, &stats);
+                if job_expired(c.enqueued, &c.qos, Instant::now()) {
+                    fail_deadline(&stats, &c.reply, c.enqueued, &c.qos);
+                } else {
+                    dispatch(WorkItem::Cnn(c), &mut worker_txs, &mut next_worker, &stats);
+                }
                 continue;
             }
             Ok(Job::Cnn(c)) => pending_cnn.push(c),
@@ -663,12 +954,15 @@ fn run_leader(
         // waiting) while the window stays open, so heavy traffic in one
         // class never truncates the other's gathering; partial batches —
         // including minority models in mixed CNN traffic — wait for the
-        // deadline.
-        let deadline = Instant::now() + window;
+        // deadline. The window closes *early* when the tightest pending
+        // per-job deadline would otherwise be missed waiting for the full
+        // window, and already-expired members fail typed before any flush.
+        let window_end = Instant::now() + window;
         loop {
+            reap_expired(&mut pending, &mut pending_cnn, &stats);
             while pending.len() >= policy.max_batch() {
                 let (artifact, batch) = policy.pick_variant(policy.max_batch()).clone();
-                let jobs: Vec<MlpJob> = pending.drain(..batch).collect();
+                let jobs = take_by_priority(&mut pending, batch);
                 dispatch(
                     WorkItem::Batch(MicroBatch { artifact, batch, jobs }),
                     &mut worker_txs,
@@ -677,16 +971,28 @@ fn run_leader(
                 );
             }
             let now = Instant::now();
-            if now >= deadline {
+            let gather_until = match earliest_deadline(&pending, &pending_cnn) {
+                Some(d) => window_end.min(d.checked_sub(DEADLINE_FLUSH_MARGIN).unwrap_or(now)),
+                None => window_end,
+            };
+            if now >= gather_until {
                 break;
             }
-            match rx.recv_timeout(deadline - now) {
+            match rx.recv_timeout(gather_until - now) {
                 Ok(Job::Mlp(m)) => pending.push(m),
                 Ok(Job::Gemm(g)) => {
-                    dispatch(WorkItem::Gemm(g), &mut worker_txs, &mut next_worker, &stats)
+                    if job_expired(g.enqueued, &g.qos, Instant::now()) {
+                        fail_deadline(&stats, &g.reply, g.enqueued, &g.qos);
+                    } else {
+                        dispatch(WorkItem::Gemm(g), &mut worker_txs, &mut next_worker, &stats)
+                    }
                 }
                 Ok(Job::Cnn(c)) if cnn_batch_cap <= 1 => {
-                    dispatch(WorkItem::Cnn(c), &mut worker_txs, &mut next_worker, &stats)
+                    if job_expired(c.enqueued, &c.qos, Instant::now()) {
+                        fail_deadline(&stats, &c.reply, c.enqueued, &c.qos);
+                    } else {
+                        dispatch(WorkItem::Cnn(c), &mut worker_txs, &mut next_worker, &stats)
+                    }
                 }
                 Ok(Job::Cnn(c)) => {
                     pending_cnn.push(c);
@@ -723,11 +1029,14 @@ fn run_leader(
         }
 
         // Phase 3: the window closed — flush what gathered (possibly
-        // several batches if a burst exceeded the caps).
+        // several batches if a burst exceeded the caps), expired members
+        // failed typed first, high-priority jobs boarding ahead of
+        // best-effort.
+        reap_expired(&mut pending, &mut pending_cnn, &stats);
         while !pending.is_empty() {
             let take = pending.len().min(policy.max_batch());
             let (artifact, batch) = policy.pick_variant(take).clone();
-            let jobs: Vec<MlpJob> = pending.drain(..take.min(batch)).collect();
+            let jobs = take_by_priority(&mut pending, take.min(batch));
             dispatch(
                 WorkItem::Batch(MicroBatch { artifact, batch, jobs }),
                 &mut worker_txs,
@@ -735,6 +1044,10 @@ fn run_leader(
                 &stats,
             );
         }
+        // Stable partition: high-priority CNN frames flush ahead of
+        // best-effort; arrival order holds within each class (the default
+        // all-high case is untouched).
+        pending_cnn.sort_by_key(|j| matches!(j.qos.priority, Priority::BestEffort));
         flush_cnn_batches(
             &mut pending_cnn,
             cnn_batch_cap,
@@ -793,8 +1106,45 @@ mod tests {
             reply,
             enqueued: Instant::now(),
             nonce: 0,
+            qos: Qos::default(),
         };
         (WorkItem::Gemm(job), rx)
+    }
+
+    fn mlp_job(tag: i32, qos: Qos) -> (MlpJob, Response) {
+        let (reply, rx) = response_slot();
+        (MlpJob { row: vec![tag], reply, enqueued: Instant::now(), nonce: 0, qos }, rx)
+    }
+
+    fn cnn_job(name: &'static str, tag: i32) -> CnnJob {
+        let (reply, _rx) = response_slot();
+        CnnJob {
+            model: CnnModel { name, layers: vec![] },
+            input: vec![tag],
+            reply,
+            enqueued: Instant::now(),
+            nonce: 0,
+            qos: Qos::default(),
+        }
+    }
+
+    /// A handle over a bare bounded channel with no leader draining it —
+    /// the deterministic way to exercise admission control.
+    fn loose_handle(
+        depth: usize,
+        watermark: Option<usize>,
+    ) -> (CoordinatorHandle, Receiver<Job>) {
+        let (tx, rx) = sync_channel::<Job>(depth);
+        let handle = CoordinatorHandle {
+            tx,
+            stats: Arc::new(CoordinatorStats::default()),
+            mlp_row_len: 1,
+            workers: 1,
+            queue_depth: depth,
+            best_effort_watermark: watermark,
+            nonce_counter: None,
+        };
+        (handle, rx)
     }
 
     #[test]
@@ -848,5 +1198,127 @@ mod tests {
         }
         assert_eq!(rx_a.try_iter().count(), 2);
         assert_eq!(rx_b.try_iter().count(), 2);
+    }
+
+    #[test]
+    fn full_ingress_queue_sheds_typed_instead_of_blocking() {
+        let (h, _rx) = loose_handle(1, None);
+        let started = Instant::now();
+        // First submit fills the only slot (nothing drains it).
+        h.try_submit_mlp(vec![1]).expect("first submit fits the queue");
+        // Second must come back immediately: typed, payload recovered.
+        let rejected = h.try_submit_mlp(vec![2]).expect_err("queue is full");
+        assert!(matches!(rejected.error, Error::Overloaded(_)), "{}", rejected.error);
+        assert_eq!(rejected.payload, vec![2], "payload recovered intact");
+        assert!(
+            started.elapsed() < Duration::from_secs(1),
+            "admission must never block the submitter"
+        );
+        // Counters: the shed never entered `requests`, depth stays truthful.
+        assert_eq!(h.stats().shed.load(Ordering::Relaxed), 1);
+        assert_eq!(h.stats().shed_best_effort.load(Ordering::Relaxed), 0);
+        assert_eq!(h.stats().requests.load(Ordering::Relaxed), 1);
+        assert_eq!(h.stats().queue_depth(), 1);
+        // GEMM and CNN paths shed the same way, payloads intact.
+        let g = h.try_submit_gemm("g", vec![3], vec![4]).expect_err("full");
+        assert!(matches!(g.error, Error::Overloaded(_)));
+        assert_eq!(g.payload, (vec![3], vec![4]));
+        assert_eq!(h.stats().shed.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn best_effort_watermark_sheds_before_queue_full() {
+        let (h, _rx) = loose_handle(8, Some(1));
+        // One outstanding high-priority request reaches the watermark.
+        h.try_submit_mlp(vec![1]).expect("accepted");
+        // Best-effort sheds at the watermark even though the queue has room…
+        let r = h
+            .try_submit_mlp_opts(vec![2], Qos::best_effort(), None)
+            .expect_err("watermark trips");
+        assert!(matches!(r.error, Error::Overloaded(_)), "{}", r.error);
+        assert_eq!(r.payload, vec![2]);
+        assert_eq!(h.stats().shed.load(Ordering::Relaxed), 1);
+        assert_eq!(h.stats().shed_best_effort.load(Ordering::Relaxed), 1);
+        // …while high-priority traffic keeps boarding.
+        h.try_submit_mlp(vec![3]).expect("high priority unaffected by watermark");
+        assert_eq!(h.stats().requests.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn stopped_coordinator_still_rejects_shard_down() {
+        let (h, rx) = loose_handle(4, None);
+        drop(rx);
+        let r = h.try_submit_mlp(vec![9]).expect_err("disconnected");
+        assert!(matches!(r.error, Error::ShardDown(_)), "{}", r.error);
+        assert_eq!(r.payload, vec![9]);
+        // A disconnect is not a shed.
+        assert_eq!(h.stats().shed.load(Ordering::Relaxed), 0);
+        assert_eq!(h.stats().requests.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn retained_nonce_replays_instead_of_redrawing() {
+        let (mut h, _rx) = loose_handle(8, None);
+        h.nonce_counter = Some(Arc::new(AtomicU64::new(0)));
+        let (_slot, first) = h.try_submit_mlp_opts(vec![1], Qos::default(), None).unwrap();
+        assert_eq!(first, 1, "counter mode hands out 1-based nonces");
+        // A failover replay supplies the retained nonce: no fresh draw.
+        let (_slot, replayed) =
+            h.try_submit_mlp_opts(vec![1], Qos::default(), Some(first)).unwrap();
+        assert_eq!(replayed, first);
+        let (_slot, next) = h.try_submit_mlp_opts(vec![2], Qos::default(), None).unwrap();
+        assert_eq!(next, 2, "the counter advanced exactly once per logical request");
+    }
+
+    #[test]
+    fn extract_cnn_group_preserves_arrival_order() {
+        // Mixed-model queue: a0 b1 a2 b3 a4 (inputs tag arrival order).
+        let mut pending =
+            vec![cnn_job("a", 0), cnn_job("b", 1), cnn_job("a", 2), cnn_job("b", 3), cnn_job("a", 4)];
+        let model = pending[0].model.clone();
+        let group = extract_cnn_group(&mut pending, &model, 2);
+        let tags = |jobs: &[CnnJob]| jobs.iter().map(|j| j.input[0]).collect::<Vec<_>>();
+        assert_eq!(tags(&group), vec![0, 2], "cap-bounded, arrival order");
+        assert_eq!(tags(&pending), vec![1, 3, 4], "remainder keeps arrival order");
+        // Second extraction drains the leftover member of `a`.
+        let group = extract_cnn_group(&mut pending, &model, 2);
+        assert_eq!(tags(&group), vec![4]);
+        assert_eq!(tags(&pending), vec![1, 3]);
+    }
+
+    #[test]
+    fn take_by_priority_boards_high_first() {
+        let mk = |tag, qos| mlp_job(tag, qos).0;
+        let mut pending = vec![
+            mk(0, Qos::best_effort()),
+            mk(1, Qos::default()),
+            mk(2, Qos::best_effort()),
+            mk(3, Qos::default()),
+        ];
+        let taken = take_by_priority(&mut pending, 2);
+        let tags = |jobs: &[MlpJob]| jobs.iter().map(|j| j.row[0]).collect::<Vec<_>>();
+        assert_eq!(tags(&taken), vec![1, 3], "both high jobs board first");
+        assert_eq!(tags(&pending), vec![0, 2], "best-effort waits, order kept");
+        // With room to spare, best-effort backfills in arrival order.
+        let mut pending = vec![mk(0, Qos::best_effort()), mk(1, Qos::default()), mk(2, Qos::best_effort())];
+        let taken = take_by_priority(&mut pending, 2);
+        assert_eq!(tags(&taken), vec![0, 1], "high + earliest best-effort, arrival order");
+        assert_eq!(tags(&pending), vec![2]);
+    }
+
+    #[test]
+    fn reap_expired_fails_typed_before_dispatch() {
+        let stats = CoordinatorStats::default();
+        let (expired, expired_rx) = mlp_job(0, Qos::default().with_deadline(Duration::ZERO));
+        let (alive, _alive_rx) = mlp_job(1, Qos::default().with_deadline(Duration::from_secs(60)));
+        let mut pending = vec![expired, alive];
+        let mut pending_cnn: Vec<CnnJob> = Vec::new();
+        reap_expired(&mut pending, &mut pending_cnn, &stats);
+        assert_eq!(pending.len(), 1, "only the expired job was reaped");
+        assert_eq!(pending[0].row, vec![1]);
+        let err = expired_rx.recv().unwrap().unwrap_err();
+        assert!(matches!(err, Error::DeadlineExceeded(_)), "{err}");
+        assert_eq!(stats.failed.load(Ordering::Relaxed), 1);
+        assert_eq!(stats.deadline_expired.load(Ordering::Relaxed), 1);
     }
 }

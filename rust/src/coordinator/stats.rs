@@ -63,6 +63,17 @@ pub struct CoordinatorStats {
     pub lanes: AtomicU64,
     /// Outputs perturbed by analog noise injection.
     pub noise_events: AtomicU64,
+    /// Submissions refused by admission control (full ingress queue or
+    /// best-effort watermark). Sheds never enter `requests`, so
+    /// [`CoordinatorStats::queue_depth`] stays truthful under overload.
+    pub shed: AtomicU64,
+    /// The best-effort subset of `shed` (watermark + full-queue refusals of
+    /// [`Priority::BestEffort`](crate::coordinator::Priority) traffic).
+    pub shed_best_effort: AtomicU64,
+    /// Jobs the leader failed typed (`Error::DeadlineExceeded`) because
+    /// their deadline expired before dispatch. Counted in `failed` too —
+    /// this counter attributes the *cause*.
+    pub deadline_expired: AtomicU64,
 }
 
 /// Lock-free f64 accumulate over an `AtomicU64` holding f64 bits
@@ -235,6 +246,16 @@ impl CoordinatorStats {
                 self.noise_events.load(Ordering::Relaxed),
             ));
         }
+        let shed = self.shed.load(Ordering::Relaxed);
+        let expired = self.deadline_expired.load(Ordering::Relaxed);
+        if shed > 0 || expired > 0 {
+            s.push_str(&format!(
+                " qos(shed={} shed_be={} deadline_expired={})",
+                shed,
+                self.shed_best_effort.load(Ordering::Relaxed),
+                expired,
+            ));
+        }
         s
     }
 }
@@ -355,5 +376,16 @@ mod tests {
         let s = CoordinatorStats::default();
         s.requests.fetch_add(5, Ordering::Relaxed);
         assert!(s.summary().contains("requests=5"));
+    }
+
+    #[test]
+    fn qos_block_appears_only_when_shedding_or_expiring() {
+        let s = CoordinatorStats::default();
+        assert!(!s.summary().contains("qos("));
+        s.shed.fetch_add(3, Ordering::Relaxed);
+        s.shed_best_effort.fetch_add(2, Ordering::Relaxed);
+        assert!(s.summary().contains("qos(shed=3 shed_be=2 deadline_expired=0)"));
+        // Sheds never entered `requests`, so depth stays truthful.
+        assert_eq!(s.queue_depth(), 0);
     }
 }

@@ -31,6 +31,17 @@ pub enum Error {
     /// signal; request-level errors must never retire a shard.
     ShardDown(String),
 
+    /// Admission control shed this request: the shard's bounded ingress
+    /// queue is full (or a best-effort watermark tripped). Busy, not dead —
+    /// the shard is alive and draining, so this is *never* a failover
+    /// signal: routers must not retire the shard or resubmit retained
+    /// payloads in a storm (at most one bounded retry on an idle survivor).
+    Overloaded(String),
+
+    /// The request's deadline expired before dispatch: the leader failed it
+    /// typed instead of wasting a worker execute on a reply nobody wants.
+    DeadlineExceeded(String),
+
     /// A cross-host remote-shard call failed. The kind decides failover:
     /// [`RemoteErrorKind::retires_shard`] is `true` only when the peer is
     /// truly unreachable (connection refused, peer gone) — a corrupt frame,
@@ -98,6 +109,8 @@ impl std::fmt::Display for Error {
             Error::Runtime(msg) => write!(f, "runtime error: {msg}"),
             Error::Coordinator(msg) => write!(f, "coordinator error: {msg}"),
             Error::ShardDown(msg) => write!(f, "shard down: {msg}"),
+            Error::Overloaded(msg) => write!(f, "overloaded: {msg}"),
+            Error::DeadlineExceeded(msg) => write!(f, "deadline exceeded: {msg}"),
             Error::Remote { kind, detail } => write!(f, "remote shard error ({kind}): {detail}"),
             Error::Io(e) => write!(f, "io error: {e}"),
         }
@@ -132,6 +145,11 @@ mod tests {
         assert_eq!(Error::Artifact("x".into()).to_string(), "artifact error: x");
         assert_eq!(Error::Coordinator("y".into()).to_string(), "coordinator error: y");
         assert_eq!(Error::ShardDown("z".into()).to_string(), "shard down: z");
+        assert_eq!(Error::Overloaded("q full".into()).to_string(), "overloaded: q full");
+        assert_eq!(
+            Error::DeadlineExceeded("50ms".into()).to_string(),
+            "deadline exceeded: 50ms"
+        );
         let e = Error::Remote { kind: RemoteErrorKind::Timeout, detail: "p".into() };
         assert_eq!(e.to_string(), "remote shard error (timeout): p");
     }

@@ -27,8 +27,8 @@
 //! | [`sim`] | transaction-level simulator (mapper, scheduler, accounting) |
 //! | [`metrics`] | FPS / FPS/W / FPS/W/mm² aggregation, gmean, live serving telemetry, fleet-wide stats rollup (`FleetTelemetry`) |
 //! | [`runtime`] | pluggable execution backends (`ExecBackend`): software interpreter + photonic-in-the-loop simulator, both weight-stationary (plans own packed weights, scratch-reused activations); artifact manifest, engine, compile-once/stream-many whole-CNN serving (`CnnPlan` + scratch arena, single + t-stacked batch) |
-//! | [`coordinator`] | sharded serving fleet: shard router (`Fleet`/`FleetHandle`, pluggable routing + failover, retained-payload mid-flight retry, shard revival/autoscaling) over per-backend coordinators with dynamic MLP batching, t-stacked CNN batching, and photonic telemetry |
-//! | [`net`] | cross-host serving: zero-dependency checksummed wire protocol, `ShardServer` (TCP front for a coordinator/fleet), `RemoteShard` client with deadlines, jittered-backoff reconnect, and typed `Error::Remote` failure taxonomy |
+//! | [`coordinator`] | sharded serving fleet: shard router (`Fleet`/`FleetHandle`, pluggable routing + failover, retained-payload mid-flight retry, shard revival/autoscaling) over per-backend coordinators with dynamic MLP batching, t-stacked CNN batching, photonic telemetry, and typed overload shedding — non-blocking admission (`Error::Overloaded` + shed counters) with per-request QoS (`Priority` class, deadline-aware batching, `Error::DeadlineExceeded` pre-dispatch reaping) |
+//! | [`net`] | cross-host serving: zero-dependency checksummed wire protocol (v2: QoS envelope + shed counters on the wire), `ShardServer` (TCP front for a coordinator/fleet), `RemoteShard` client with deadlines, jittered-backoff reconnect, and typed `Error::Remote` failure taxonomy |
 //! | [`testing`] | deterministic mini property-testing harness |
 //! | [`benchkit`] | timing helpers for the harness-free benches |
 //! | [`report`] | plain-text table rendering shared by benches/examples |

@@ -216,6 +216,15 @@ pub struct ShardTelemetry {
     pub live_workers: u64,
     /// Worker-pool revivals the shard's leader has executed.
     pub revivals: u64,
+    /// Submissions shed by admission control (full ingress queue or
+    /// best-effort watermark). Sheds never enter `requests`, so
+    /// `requests − (completed + failed)` stays the true in-flight depth.
+    pub shed: u64,
+    /// The best-effort subset of `shed` (QoS class accounting).
+    pub shed_best_effort: u64,
+    /// Requests failed typed ([`crate::Error::DeadlineExceeded`]) because
+    /// their deadline expired before dispatch; a subset of `failed`.
+    pub deadline_expired: u64,
 }
 
 impl ShardTelemetry {
@@ -240,6 +249,9 @@ impl ShardTelemetry {
             noise_events: stats.noise_events.load(Relaxed),
             live_workers: stats.live_workers.load(Relaxed),
             revivals: stats.revivals.load(Relaxed),
+            shed: stats.shed.load(Relaxed),
+            shed_best_effort: stats.shed_best_effort.load(Relaxed),
+            deadline_expired: stats.deadline_expired.load(Relaxed),
         }
     }
 
@@ -349,6 +361,22 @@ impl FleetTelemetry {
         self.shards.iter().map(|s| s.noise_events).sum()
     }
 
+    /// Total submissions shed by admission control across the fleet.
+    pub fn shed(&self) -> u64 {
+        self.shards.iter().map(|s| s.shed).sum()
+    }
+
+    /// Best-effort subset of [`FleetTelemetry::shed`].
+    pub fn shed_best_effort(&self) -> u64 {
+        self.shards.iter().map(|s| s.shed_best_effort).sum()
+    }
+
+    /// Total requests failed typed because their deadline expired before
+    /// dispatch.
+    pub fn deadline_expired(&self) -> u64 {
+        self.shards.iter().map(|s| s.deadline_expired).sum()
+    }
+
     /// Fleet-wide projected sim-FPS (reported executions ÷ total projected
     /// latency) — the live-traffic analogue of the paper's FPS figures.
     pub fn sim_fps(&self) -> f64 {
@@ -397,6 +425,14 @@ impl FleetTelemetry {
                 self.sim_fps_per_w(),
                 self.noise_events(),
                 self.served_exact_fraction()
+            ));
+        }
+        if self.shed() > 0 || self.deadline_expired() > 0 {
+            s.push_str(&format!(
+                " qos(shed={} shed_be={} deadline_expired={})",
+                self.shed(),
+                self.shed_best_effort(),
+                self.deadline_expired()
             ));
         }
         let lifecycle_total = self.resubmits
@@ -491,6 +527,10 @@ mod tests {
         };
         b.record_report(&r);
         b.record_report(&r);
+        a.shed.fetch_add(3, Relaxed);
+        a.shed_best_effort.fetch_add(2, Relaxed);
+        b.shed.fetch_add(1, Relaxed);
+        b.deadline_expired.fetch_add(1, Relaxed);
 
         let fleet = FleetTelemetry::new(vec![
             ShardTelemetry::capture("a", &a),
@@ -512,9 +552,14 @@ mod tests {
         assert_eq!(fleet.shards[0].label, "a");
         assert_eq!(fleet.shards[1].sim_reports, 2);
         assert_eq!(fleet.shards[0].served_exact_fraction(), 1.0);
+        // QoS counters roll up shard-by-shard too.
+        assert_eq!(fleet.shed(), 4);
+        assert_eq!(fleet.shed_best_effort(), 2);
+        assert_eq!(fleet.deadline_expired(), 1);
         let s = fleet.summary();
         assert!(s.contains("fleet: requests=14"), "{s}");
         assert!(s.contains("exact=0.9000"), "{s}");
+        assert!(s.contains("qos(shed=4 shed_be=2 deadline_expired=1)"), "{s}");
     }
 
     #[test]
@@ -543,7 +588,9 @@ mod tests {
         fleet.shards_revived = 1;
         fleet.shards_spawned = 2;
         let sum = fleet.summary();
-        assert!(sum.contains("lifecycle: resubmits=4 revived=1 spawned=2"), "{sum}");
+        assert!(sum.contains("lifecycle: resubmits=4 reroutes=0 revived=1 spawned=2"), "{sum}");
+        // A fleet that never shed keeps its summary free of QoS noise.
+        assert!(!sum.contains("qos("), "{sum}");
     }
 
     #[test]

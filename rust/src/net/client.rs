@@ -36,7 +36,7 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::request::{response_slot, ResponseTx};
-use crate::coordinator::{CoordinatorStats, Rejected, Reply, Response};
+use crate::coordinator::{CoordinatorStats, Qos, Rejected, Reply, Response};
 use crate::dnn::models::CnnModel;
 use crate::error::RemoteErrorKind;
 use crate::metrics::ShardTelemetry;
@@ -169,7 +169,21 @@ impl RemoteShard {
         a: Vec<i32>,
         b: Vec<i32>,
     ) -> std::result::Result<Response, Rejected<(Vec<i32>, Vec<i32>)>> {
-        let payload = wire::encode_gemm(artifact, &a, &b);
+        self.try_submit_gemm_qos(artifact, a, b, Qos::default())
+    }
+
+    /// [`RemoteShard::try_submit_gemm`] with an explicit QoS envelope. The
+    /// envelope crosses the wire (v2 submit payloads) and the server
+    /// re-anchors the deadline at its own enqueue instant; a server-side
+    /// shed comes back typed [`Error::Overloaded`] through the reply slot.
+    pub fn try_submit_gemm_qos(
+        &self,
+        artifact: &str,
+        a: Vec<i32>,
+        b: Vec<i32>,
+        qos: Qos,
+    ) -> std::result::Result<Response, Rejected<(Vec<i32>, Vec<i32>)>> {
+        let payload = wire::encode_gemm(artifact, &a, &b, &qos);
         match self.inner.send_submit(Opcode::SubmitGemm, payload) {
             Ok(rx) => Ok(rx),
             Err(error) => Err(Rejected { error, payload: (a, b) }),
@@ -181,7 +195,17 @@ impl RemoteShard {
         &self,
         row: Vec<i32>,
     ) -> std::result::Result<Response, Rejected<Vec<i32>>> {
-        let payload = wire::encode_mlp(&row);
+        self.try_submit_mlp_qos(row, Qos::default())
+    }
+
+    /// [`RemoteShard::try_submit_mlp`] with an explicit QoS envelope (see
+    /// [`RemoteShard::try_submit_gemm_qos`]).
+    pub fn try_submit_mlp_qos(
+        &self,
+        row: Vec<i32>,
+        qos: Qos,
+    ) -> std::result::Result<Response, Rejected<Vec<i32>>> {
+        let payload = wire::encode_mlp(&row, &qos);
         match self.inner.send_submit(Opcode::SubmitMlp, payload) {
             Ok(rx) => Ok(rx),
             Err(error) => Err(Rejected { error, payload: row }),
@@ -195,7 +219,18 @@ impl RemoteShard {
         model: CnnModel,
         input: Vec<i32>,
     ) -> std::result::Result<Response, Rejected<(CnnModel, Vec<i32>)>> {
-        let payload = wire::encode_cnn(&model, &input);
+        self.try_submit_cnn_qos(model, input, Qos::default())
+    }
+
+    /// [`RemoteShard::try_submit_cnn`] with an explicit QoS envelope (see
+    /// [`RemoteShard::try_submit_gemm_qos`]).
+    pub fn try_submit_cnn_qos(
+        &self,
+        model: CnnModel,
+        input: Vec<i32>,
+        qos: Qos,
+    ) -> std::result::Result<Response, Rejected<(CnnModel, Vec<i32>)>> {
+        let payload = wire::encode_cnn(&model, &input, &qos);
         match self.inner.send_submit(Opcode::SubmitCnn, payload) {
             Ok(rx) => Ok(rx),
             Err(error) => Err(Rejected { error, payload: (model, input) }),

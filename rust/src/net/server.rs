@@ -24,7 +24,7 @@ use std::sync::{Arc, Mutex};
 use std::thread::{self, JoinHandle};
 use std::time::Duration;
 
-use crate::coordinator::{CoordinatorHandle, FleetHandle, Reply, Response, RetryingSlot};
+use crate::coordinator::{CoordinatorHandle, FleetHandle, Qos, Reply, Response, RetryingSlot};
 use crate::dnn::models::CnnModel;
 use crate::metrics::ShardTelemetry;
 use crate::{Error, Result};
@@ -65,24 +65,33 @@ impl InFlight {
 }
 
 impl ServeTarget {
-    fn submit_gemm(&self, artifact: &str, a: Vec<i32>, b: Vec<i32>) -> Result<InFlight> {
+    // The decoded deadline is *relative* (time remaining when the client
+    // encoded it); the coordinator re-anchors it at its own enqueue instant,
+    // so wire transit time is charged to the client's margin, not the job's.
+    fn submit_gemm(&self, artifact: &str, a: Vec<i32>, b: Vec<i32>, qos: Qos) -> Result<InFlight> {
         match self {
-            ServeTarget::Coordinator(h) => h.submit_gemm(artifact, a, b).map(InFlight::Slot),
-            ServeTarget::Fleet(f) => f.submit_gemm_retrying(artifact, a, b).map(InFlight::Retry),
+            ServeTarget::Coordinator(h) => {
+                h.submit_gemm_qos(artifact, a, b, qos).map(InFlight::Slot)
+            }
+            ServeTarget::Fleet(f) => {
+                f.submit_gemm_retrying_qos(artifact, a, b, qos).map(InFlight::Retry)
+            }
         }
     }
 
-    fn submit_mlp(&self, row: Vec<i32>) -> Result<InFlight> {
+    fn submit_mlp(&self, row: Vec<i32>, qos: Qos) -> Result<InFlight> {
         match self {
-            ServeTarget::Coordinator(h) => h.submit_mlp(row).map(InFlight::Slot),
-            ServeTarget::Fleet(f) => f.submit_mlp_retrying(row).map(InFlight::Retry),
+            ServeTarget::Coordinator(h) => h.submit_mlp_qos(row, qos).map(InFlight::Slot),
+            ServeTarget::Fleet(f) => f.submit_mlp_retrying_qos(row, qos).map(InFlight::Retry),
         }
     }
 
-    fn submit_cnn(&self, model: CnnModel, input: Vec<i32>) -> Result<InFlight> {
+    fn submit_cnn(&self, model: CnnModel, input: Vec<i32>, qos: Qos) -> Result<InFlight> {
         match self {
-            ServeTarget::Coordinator(h) => h.submit_cnn(model, input).map(InFlight::Slot),
-            ServeTarget::Fleet(f) => f.submit_cnn_retrying(model, input).map(InFlight::Retry),
+            ServeTarget::Coordinator(h) => h.submit_cnn_qos(model, input, qos).map(InFlight::Slot),
+            ServeTarget::Fleet(f) => {
+                f.submit_cnn_retrying_qos(model, input, qos).map(InFlight::Retry)
+            }
         }
     }
 
@@ -118,6 +127,9 @@ impl ServeTarget {
                     roll.noise_events += s.noise_events;
                     roll.live_workers += s.live_workers;
                     roll.revivals += s.revivals;
+                    roll.shed += s.shed;
+                    roll.shed_best_effort += s.shed_best_effort;
+                    roll.deadline_expired += s.deadline_expired;
                 }
                 roll
             }
@@ -273,18 +285,18 @@ fn dispatch(
     match frame.opcode {
         Opcode::SubmitGemm => {
             let submitted = wire::decode_gemm(&frame.payload)
-                .and_then(|(artifact, a, b)| inner.target.submit_gemm(&artifact, a, b));
+                .and_then(|(artifact, a, b, qos)| inner.target.submit_gemm(&artifact, a, b, qos));
             spawn_reply_waiter(submitted, id, writer, waiters);
         }
         Opcode::SubmitMlp => {
             let submitted = wire::decode_mlp(&frame.payload)
-                .and_then(|row| inner.target.submit_mlp(row));
+                .and_then(|(row, qos)| inner.target.submit_mlp(row, qos));
             spawn_reply_waiter(submitted, id, writer, waiters);
         }
         Opcode::SubmitCnn => {
-            let submitted = wire::decode_cnn(&frame.payload).and_then(|(trace, input)| {
+            let submitted = wire::decode_cnn(&frame.payload).and_then(|(trace, input, qos)| {
                 let model = cached_model(inner, &trace)?;
-                inner.target.submit_cnn(model, input)
+                inner.target.submit_cnn(model, input, qos)
             });
             spawn_reply_waiter(submitted, id, writer, waiters);
         }

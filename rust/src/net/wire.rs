@@ -23,19 +23,24 @@
 
 use std::io::{Read, Write};
 
+use std::time::Duration;
+
 use crate::dnn::trace::{parse_trace, to_trace};
 use crate::dnn::models::CnnModel;
 use crate::error::RemoteErrorKind;
 use crate::metrics::ShardTelemetry;
 use crate::runtime::backend::ExecReport;
 use crate::runtime::cnnrun::LayerReport;
-use crate::coordinator::Reply;
+use crate::coordinator::{Priority, Qos, Reply};
 use crate::{Error, Result};
 
 /// Frame magic: `b"SPOG"` read as a little-endian u32.
 pub const MAGIC: u32 = u32::from_le_bytes(*b"SPOG");
 /// Wire-protocol version. Bump on any layout change.
-pub const VERSION: u16 = 1;
+/// v2: submit payloads carry a QoS envelope (priority class + deadline),
+/// error codecs know `Overloaded`/`DeadlineExceeded`, stats snapshots carry
+/// the shed/deadline counters.
+pub const VERSION: u16 = 2;
 /// Bytes in the fixed frame header.
 pub const HEADER_LEN: usize = 28;
 
@@ -308,31 +313,70 @@ impl<'a> PayloadReader<'a> {
     }
 }
 
-/// Encode a GEMM submit: artifact name + both operands.
-pub fn encode_gemm(artifact: &str, a: &[i32], b: &[i32]) -> Vec<u8> {
+// QoS envelope codec (v2): one priority byte (0 = High, 1 = BestEffort)
+// plus the deadline in whole microseconds (0 = none; a sub-microsecond
+// deadline clamps up to 1 µs rather than silently becoming "no deadline").
+// The deadline crosses the wire *relative* — the server re-anchors it at
+// its own enqueue instant, so clock skew between peers never expires a
+// request spuriously (socket transit time is simply part of the budget the
+// caller chose).
+fn encode_qos(w: &mut PayloadWriter, qos: &Qos) {
+    w.put_u8(match qos.priority {
+        Priority::High => 0,
+        Priority::BestEffort => 1,
+    });
+    w.put_u64(match qos.deadline {
+        None => 0,
+        Some(d) => (d.as_micros() as u64).max(1),
+    });
+}
+
+fn decode_qos(r: &mut PayloadReader<'_>) -> Result<Qos> {
+    let priority = match r.take_u8()? {
+        0 => Priority::High,
+        1 => Priority::BestEffort,
+        p => {
+            return Err(remote_err(
+                RemoteErrorKind::FrameCorrupt,
+                format!("unknown priority byte {p}"),
+            ))
+        }
+    };
+    let deadline_us = r.take_u64()?;
+    Ok(Qos {
+        priority,
+        deadline: (deadline_us > 0).then(|| Duration::from_micros(deadline_us)),
+    })
+}
+
+/// Encode a GEMM submit: artifact name + both operands + QoS envelope.
+pub fn encode_gemm(artifact: &str, a: &[i32], b: &[i32], qos: &Qos) -> Vec<u8> {
     let mut w = PayloadWriter::new();
     w.put_str(artifact);
     w.put_vec_i32(a);
     w.put_vec_i32(b);
+    encode_qos(&mut w, qos);
     w.finish()
 }
 
 /// Decode a GEMM submit.
-pub fn decode_gemm(payload: &[u8]) -> Result<(String, Vec<i32>, Vec<i32>)> {
+pub fn decode_gemm(payload: &[u8]) -> Result<(String, Vec<i32>, Vec<i32>, Qos)> {
     let mut r = PayloadReader::new(payload);
-    Ok((r.take_str()?, r.take_vec_i32()?, r.take_vec_i32()?))
+    Ok((r.take_str()?, r.take_vec_i32()?, r.take_vec_i32()?, decode_qos(&mut r)?))
 }
 
-/// Encode an MLP submit: one activation row.
-pub fn encode_mlp(row: &[i32]) -> Vec<u8> {
+/// Encode an MLP submit: one activation row + QoS envelope.
+pub fn encode_mlp(row: &[i32], qos: &Qos) -> Vec<u8> {
     let mut w = PayloadWriter::new();
     w.put_vec_i32(row);
+    encode_qos(&mut w, qos);
     w.finish()
 }
 
 /// Decode an MLP submit.
-pub fn decode_mlp(payload: &[u8]) -> Result<Vec<i32>> {
-    PayloadReader::new(payload).take_vec_i32()
+pub fn decode_mlp(payload: &[u8]) -> Result<(Vec<i32>, Qos)> {
+    let mut r = PayloadReader::new(payload);
+    Ok((r.take_vec_i32()?, decode_qos(&mut r)?))
 }
 
 /// Encode a CNN submit. The model crosses the wire as trace text
@@ -341,18 +385,19 @@ pub fn decode_mlp(payload: &[u8]) -> Result<Vec<i32>> {
 /// [`parse_trace`]. Servers should cache parsed models per trace text:
 /// `parse_trace` leaks one small name string per *distinct* model (the
 /// `&'static str` name convention), which a cache amortizes to once.
-pub fn encode_cnn(model: &CnnModel, input: &[i32]) -> Vec<u8> {
+pub fn encode_cnn(model: &CnnModel, input: &[i32], qos: &Qos) -> Vec<u8> {
     let mut w = PayloadWriter::new();
     w.put_str(&to_trace(model));
     w.put_vec_i32(input);
+    encode_qos(&mut w, qos);
     w.finish()
 }
 
-/// Decode a CNN submit into (trace text, input). The caller decides when to
-/// pay the `parse_trace` name leak (see [`encode_cnn`]).
-pub fn decode_cnn(payload: &[u8]) -> Result<(String, Vec<i32>)> {
+/// Decode a CNN submit into (trace text, input, qos). The caller decides
+/// when to pay the `parse_trace` name leak (see [`encode_cnn`]).
+pub fn decode_cnn(payload: &[u8]) -> Result<(String, Vec<i32>, Qos)> {
     let mut r = PayloadReader::new(payload);
-    Ok((r.take_str()?, r.take_vec_i32()?))
+    Ok((r.take_str()?, r.take_vec_i32()?, decode_qos(&mut r)?))
 }
 
 /// Parse the trace text from [`decode_cnn`] back into a model.
@@ -402,6 +447,12 @@ fn encode_error(w: &mut PayloadWriter, e: &Error) {
             (7, k, detail.clone())
         }
         Error::Io(e) => (8, 0, e.to_string()),
+        // QoS refusals must survive the hop typed: a client-side router
+        // treats Overloaded as busy-not-dead and DeadlineExceeded as the
+        // caller's own budget — flattening either to a generic error would
+        // turn admission shedding into failover storms.
+        Error::Overloaded(m) => (9, 0, m.clone()),
+        Error::DeadlineExceeded(m) => (10, 0, m.clone()),
     };
     w.put_u8(tag);
     w.put_u8(kind);
@@ -420,6 +471,8 @@ fn decode_error(r: &mut PayloadReader<'_>) -> Result<Error> {
         4 | 8 => Error::Runtime(msg),
         5 => Error::Coordinator(msg),
         6 => Error::ShardDown(msg),
+        9 => Error::Overloaded(msg),
+        10 => Error::DeadlineExceeded(msg),
         7 => {
             let k = match kind {
                 0 => RemoteErrorKind::Timeout,
@@ -513,6 +566,9 @@ pub fn encode_stats(t: &ShardTelemetry) -> Vec<u8> {
     w.put_u64(t.noise_events);
     w.put_u64(t.live_workers);
     w.put_u64(t.revivals);
+    w.put_u64(t.shed);
+    w.put_u64(t.shed_best_effort);
+    w.put_u64(t.deadline_expired);
     w.finish()
 }
 
@@ -534,6 +590,9 @@ pub fn decode_stats(payload: &[u8]) -> Result<ShardTelemetry> {
         noise_events: r.take_u64()?,
         live_workers: r.take_u64()?,
         revivals: r.take_u64()?,
+        shed: r.take_u64()?,
+        shed_best_effort: r.take_u64()?,
+        deadline_expired: r.take_u64()?,
     })
 }
 
@@ -612,18 +671,51 @@ mod tests {
 
     #[test]
     fn submit_payloads_roundtrip() {
-        let (name, a, b) = decode_gemm(&encode_gemm("gemm_8x8x8", &[1, -2], &[3])).unwrap();
+        let q = Qos::default();
+        let (name, a, b, qos) =
+            decode_gemm(&encode_gemm("gemm_8x8x8", &[1, -2], &[3], &q)).unwrap();
         assert_eq!((name.as_str(), a, b), ("gemm_8x8x8", vec![1, -2], vec![3]));
-        assert_eq!(decode_mlp(&encode_mlp(&[9, 8, -7])).unwrap(), vec![9, 8, -7]);
+        assert_eq!(qos, Qos::default());
+        let (row, qos) = decode_mlp(&encode_mlp(&[9, 8, -7], &q)).unwrap();
+        assert_eq!(row, vec![9, 8, -7]);
+        assert_eq!(qos, Qos::default());
         let model = CnnModel {
             name: "tiny",
             layers: vec![Layer::conv("stem", 4, 4, 1, 2, 3, 1, 1), Layer::fc("head", 32, 4)],
         };
-        let (trace, input) = decode_cnn(&encode_cnn(&model, &[7; 16])).unwrap();
+        let (trace, input, _qos) = decode_cnn(&encode_cnn(&model, &[7; 16], &q)).unwrap();
         let back = cnn_from_trace(&trace).unwrap();
         assert_eq!(back.layers, model.layers);
         assert_eq!(back.name, "tiny");
         assert_eq!(input, vec![7; 16]);
+    }
+
+    #[test]
+    fn qos_envelope_roundtrips_bit_exactly() {
+        // Every (priority, deadline) shape survives the hop.
+        for qos in [
+            Qos::default(),
+            Qos::best_effort(),
+            Qos::default().with_deadline(Duration::from_micros(1)),
+            Qos::best_effort().with_deadline(Duration::from_millis(50)),
+            Qos::default().with_deadline(Duration::from_secs(3600)),
+        ] {
+            let (row, back) = decode_mlp(&encode_mlp(&[1, 2], &qos)).unwrap();
+            assert_eq!(row, vec![1, 2]);
+            assert_eq!(back, qos, "qos {qos:?} must round-trip");
+        }
+        // A sub-microsecond deadline clamps to 1 µs — it must not decode
+        // as "no deadline" and wait forever.
+        let tight = Qos::default().with_deadline(Duration::from_nanos(3));
+        let (_, back) = decode_mlp(&encode_mlp(&[0], &tight)).unwrap();
+        assert_eq!(back.deadline, Some(Duration::from_micros(1)));
+        // An unknown priority byte is a corrupt frame, not a silent default.
+        let mut w = PayloadWriter::new();
+        w.put_vec_i32(&[1]);
+        w.put_u8(7);
+        w.put_u64(0);
+        let err = decode_mlp(&w.finish()).unwrap_err();
+        assert!(matches!(err, Error::Remote { kind: RemoteErrorKind::FrameCorrupt, .. }));
     }
 
     #[test]
@@ -657,6 +749,10 @@ mod tests {
             Error::Coordinator("bad request".into()),
             Error::Shape("8x8 vs 4x4".into()),
             Error::Remote { kind: RemoteErrorKind::PeerGone, detail: "downstream".into() },
+            // QoS refusals keep their type across the wire (busy-not-dead
+            // routing depends on it).
+            Error::Overloaded("ingress queue full (8 slots)".into()),
+            Error::DeadlineExceeded("queued 12.3 ms, deadline 10.0 ms".into()),
         ] {
             let text = e.to_string();
             let back = decode_reply(&encode_reply(&Err(e))).unwrap().unwrap_err();
@@ -685,12 +781,20 @@ mod tests {
             noise_events: 17,
             live_workers: 2,
             revivals: 1,
+            shed: 23,
+            shed_best_effort: 19,
+            deadline_expired: 4,
         };
         let back = decode_stats(&encode_stats(&t)).unwrap();
         assert_eq!(back.label, t.label);
         assert_eq!(
             (back.requests, back.completed, back.failed, back.live_workers, back.revivals),
             (100, 95, 5, 2, 1)
+        );
+        assert_eq!(
+            (back.shed, back.shed_best_effort, back.deadline_expired),
+            (23, 19, 4),
+            "v2 QoS counters must round-trip"
         );
         assert_eq!(back.sim_latency_s, 0.25);
     }

@@ -173,13 +173,25 @@ fn resilience_snapshot_keeps_schema() {
             ("req_per_s", Metric),
             ("resubmits", Metric),
             ("recovery_ms", Metric),
+            ("p99_us", Metric),
+            ("shed", Metric),
         ],
     );
-    // The three scenarios the bench emits, in order: healthy baseline,
-    // mid-flight failover, revival timing.
+    // The scenarios the bench emits, in order: healthy baseline, mid-flight
+    // failover, revival timing, then the QoS overload pair (High held vs
+    // BestEffort shedding at the admission watermark).
     let scenarios: Vec<&str> =
         rows.iter().map(|r| r.get("scenario").unwrap().as_str().unwrap()).collect();
-    assert_eq!(scenarios, vec!["baseline", "mid_flight_failover", "revival"]);
+    assert_eq!(
+        scenarios,
+        vec![
+            "baseline",
+            "mid_flight_failover",
+            "revival",
+            "overload_high",
+            "overload_best_effort"
+        ]
+    );
 }
 
 #[test]

@@ -8,7 +8,9 @@
 //!   resolves its original slot on a survivor with outputs bit-identical
 //!   to an undisturbed single-shard run — for the software backend AND a
 //!   noise-injecting photonic backend (content-keyed noise is shard-
-//!   independent at equal seeds);
+//!   independent at equal seeds) — and in counter-mode (`noise_nonce`)
+//!   serving, where bit-identity additionally requires the retry to replay
+//!   the originally-stamped nonce;
 //! * a retired shard revives: the leader respawns its worker pool, the
 //!   health probe pongs, the `live_workers` gauge recovers, and the shard
 //!   serves routed traffic again (on-demand and janitor-driven);
@@ -158,6 +160,54 @@ fn retrying_slots_survive_worker_death_after_accept_bit_identically() {
         fleet.shutdown();
         let _ = std::fs::remove_dir_all(&dir);
     }
+}
+
+/// Counter-mode (`noise_nonce`) failover bit-identity: every request is
+/// stamped with a per-coordinator counter nonce that keys its noise, and a
+/// mid-flight resubmission must *replay* the originally-stamped nonce — a
+/// fresh draw on the survivor would decorrelate the noise and the retried
+/// outputs would diverge from an undisturbed run. The reference here is an
+/// undisturbed fleet of the *same shape* (per-shard counters + the
+/// deterministic round-robin policy stamp each request identically), so
+/// any divergence isolates the replay path itself.
+#[test]
+fn nonce_mode_failover_replays_the_stamped_nonce_bit_identically() {
+    let noisy = BackendKind::Photonic(
+        PhotonicConfig::spoga().with_noise(NoiseParams::from_link_margin(0.0), 0xDEAD5EED),
+    );
+    let dir = synthetic_dir("midflight-nonce");
+    let mk_cfg =
+        || CoordinatorConfig { noise_nonce: true, ..shard_cfg(&dir, noisy.clone(), 0.5) };
+    let mk_fleet = || {
+        Fleet::start(FleetConfig {
+            shards: vec![mk_cfg(), mk_cfg()],
+            policy: RoutePolicy::RoundRobin,
+            labels: Vec::new(),
+            ..Default::default()
+        })
+        .unwrap()
+    };
+
+    let undisturbed = mk_fleet();
+    let reference = recv_all(submit_burst(&undisturbed.handle()));
+    undisturbed.shutdown();
+
+    let fleet = mk_fleet();
+    let h = fleet.handle();
+    let slots = submit_burst(&h);
+    h.shard(0).retire_workers().unwrap();
+    let served = recv_all(slots);
+    assert_eq!(
+        served, reference,
+        "nonce-mode retry diverged: the survivor must replay the stamped nonce, \
+         not draw a fresh one"
+    );
+    assert!(
+        h.telemetry().resubmits > 0,
+        "no mid-flight resubmission happened — the nonce replay path was not exercised"
+    );
+    fleet.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]

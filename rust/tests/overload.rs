@@ -1,0 +1,363 @@
+//! Overload suite: typed shedding, admission QoS, and deadline-aware
+//! batching under real saturation.
+//!
+//! Pins this PR's acceptance contract (the full-queue ingress deadlock
+//! fix), all against synthetic manifests so nothing ever skips:
+//!
+//! * a saturated shard (1 worker, 1-slot ingress, heavy frames) *sheds*
+//!   excess submissions with typed `Error::Overloaded` — no submitting
+//!   thread ever blocks past a bound, every refused payload comes back
+//!   intact, the shed counters equal the refusals the clients observed,
+//!   and every *accepted* request still resolves;
+//! * shedding is busy-not-dead at the fleet tier: a shard refusing load is
+//!   never retired, and the fleet telemetry rollup sums shed counters
+//!   across shards;
+//! * a mixed-priority burst holds High (all served) while BestEffort
+//!   sheds at the admission watermark;
+//! * an already-expired job fails typed (`Error::DeadlineExceeded`)
+//!   before any worker execute; a job with a tight deadline inside a long
+//!   batching window is flushed *early* and served instead of waiting the
+//!   window out.
+
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+use std::time::{Duration, Instant};
+
+use spoga::coordinator::{
+    Coordinator, CoordinatorConfig, Fleet, FleetConfig, Qos, RoutePolicy,
+};
+use spoga::dnn::models::CnnModel;
+use spoga::dnn::Layer;
+use spoga::runtime::BackendKind;
+use spoga::Error;
+
+const MANIFEST: &str = "\
+mlp_b1 m1.hlo.txt i32:1x16 i32:1x4
+mlp_b4 m4.hlo.txt i32:4x16 i32:4x4
+";
+
+fn synthetic_dir(tag: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("spoga-overload-test-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.txt"), MANIFEST).unwrap();
+    dir
+}
+
+fn shard_cfg(dir: &PathBuf) -> CoordinatorConfig {
+    CoordinatorConfig {
+        artifact_dir: dir.to_string_lossy().into_owned(),
+        workers: 2,
+        backend: BackendKind::Software,
+        ..Default::default()
+    }
+}
+
+/// A CNN heavy enough (~5 MMACs of nibble-sliced conv per frame) that one
+/// worker takes real wall-clock per frame — the saturation tests rely on
+/// the drain rate being far below a tight submission loop's rate.
+fn heavy_cnn() -> CnnModel {
+    CnnModel {
+        name: "heavy_overload",
+        layers: vec![
+            Layer::conv("stem", 32, 32, 16, 32, 3, 1, 1),
+            Layer::fc("head", 32 * 32 * 32, 8),
+        ],
+    }
+}
+
+fn heavy_input(tag: i32) -> Vec<i32> {
+    (0..32 * 32 * 16).map(|v| ((v as i32 * 17 + tag * 71) % 251) - 125).collect()
+}
+
+/// The headline acceptance test: a saturated shard (1 worker, 1-slot
+/// ingress, `max_cnn_batch: 1` so every frame dispatches immediately into
+/// the bounded worker queue) refuses excess load typed instead of parking
+/// submitter threads. Asserts, end to end: no submit call blocks past a
+/// bound, each refusal is `Error::Overloaded` with the payload recovered
+/// intact, the shard's `shed` counter equals the refusals the submitters
+/// observed, sheds never enter `requests` (queue depth stays truthful),
+/// and every accepted frame still resolves.
+#[test]
+fn saturated_shard_sheds_typed_and_never_blocks_submitters() {
+    let dir = synthetic_dir("saturate");
+    let c = Coordinator::start(CoordinatorConfig {
+        workers: 1,
+        queue_depth: 1,
+        max_cnn_batch: 1,
+        ..shard_cfg(&dir)
+    })
+    .unwrap();
+    let h = c.handle();
+    let model = heavy_cnn();
+
+    let threads = 4usize;
+    let per_thread = 8usize;
+    let joins: Vec<_> = (0..threads)
+        .map(|t| {
+            let h = h.clone();
+            let model = model.clone();
+            std::thread::spawn(move || {
+                let mut slots = Vec::new();
+                let mut shed = 0u64;
+                for i in 0..per_thread {
+                    let tag = (t * per_thread + i) as i32;
+                    let input = heavy_input(tag);
+                    let before = Instant::now();
+                    match h.try_submit_cnn(model.clone(), input.clone()) {
+                        Ok(rx) => slots.push(rx),
+                        Err(rejected) => {
+                            assert!(
+                                matches!(rejected.error, Error::Overloaded(_)),
+                                "only typed overload may refuse a live shard: {}",
+                                rejected.error
+                            );
+                            let (m, recovered) = rejected.payload;
+                            assert_eq!(m.name, "heavy_overload");
+                            assert_eq!(recovered, input, "payload must come back intact");
+                            shed += 1;
+                        }
+                    }
+                    // Non-blocking admission: even under full saturation a
+                    // submit call is one `try_send`, never a park. The bound
+                    // is generous to be unflakeable — the pre-fix behaviour
+                    // blocked indefinitely.
+                    assert!(
+                        before.elapsed() < Duration::from_secs(5),
+                        "submitter blocked on a saturated ingress queue"
+                    );
+                }
+                // Accepted work resolves even though the shard was slammed.
+                for rx in slots {
+                    rx.recv_timeout(Duration::from_secs(120))
+                        .expect("response slot must resolve")
+                        .expect("accepted frame must serve");
+                }
+                shed
+            })
+        })
+        .collect();
+    let observed_sheds: u64 = joins.into_iter().map(|j| j.join().unwrap()).sum();
+
+    let stats = h.stats();
+    assert!(
+        observed_sheds > 0,
+        "the burst never saturated the 1-slot ingress — the overload path was not exercised"
+    );
+    assert_eq!(
+        stats.shed.load(Ordering::Relaxed),
+        observed_sheds,
+        "every shed is counted exactly once"
+    );
+    assert_eq!(stats.shed_best_effort.load(Ordering::Relaxed), 0, "burst was all High");
+    let accepted = (threads * per_thread) as u64 - observed_sheds;
+    assert_eq!(
+        stats.requests.load(Ordering::Relaxed),
+        accepted,
+        "sheds must never enter the accepted-request counter"
+    );
+    assert_eq!(stats.completed.load(Ordering::Relaxed), accepted);
+    assert_eq!(stats.queue_depth(), 0, "depth must drain to zero — no leaked slots");
+    c.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Busy-not-dead at the fleet tier: both shards of a fleet shed every
+/// best-effort submission (watermark 0), the fleet reports terminal
+/// `Overloaded` after bouncing across the live set, *neither shard is
+/// retired*, and the telemetry rollup sums shed counters across shards.
+/// High-priority traffic keeps serving throughout.
+#[test]
+fn overloaded_fleet_stays_live_and_rolls_up_shed_counters() {
+    let dir = synthetic_dir("busy-not-dead");
+    let cfg = CoordinatorConfig { best_effort_watermark: Some(0), ..shard_cfg(&dir) };
+    let fleet = Fleet::start(FleetConfig {
+        shards: vec![cfg.clone(), cfg],
+        policy: RoutePolicy::RoundRobin,
+        labels: Vec::new(),
+        ..Default::default()
+    })
+    .unwrap();
+    let h = fleet.handle();
+
+    let attempts = 6u64;
+    for i in 0..attempts {
+        let err = h
+            .submit_mlp_qos(vec![i as i32; 16], Qos::best_effort())
+            .expect_err("watermark 0 sheds every best-effort submission on every shard");
+        assert!(matches!(err, Error::Overloaded(_)), "{err}");
+    }
+    // Shedding is busy, not dead: nothing left the rotation, nothing was
+    // counted as a failover.
+    assert_eq!(h.live_shard_count(), 2, "an overloaded shard must never be retired");
+    let t = h.telemetry();
+    assert_eq!(t.submit_reroutes, 0, "overload bounces are not dead-shard reroutes");
+    // Each refused attempt bounced across both live shards: 2 sheds per
+    // attempt, summed by the rollup.
+    assert_eq!(t.shed(), 2 * attempts);
+    assert_eq!(t.shed_best_effort(), 2 * attempts);
+    assert_eq!(t.shards[0].shed + t.shards[1].shed, 2 * attempts);
+    assert!(t.summary().contains("qos(shed="), "rollup summary must surface QoS sheds");
+
+    // High priority is untouched by the watermark and still serves.
+    let out = h.infer_mlp(vec![3; 16]).expect("high-priority traffic must keep serving");
+    assert_eq!(out.len(), 4);
+    fleet.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Mixed-priority burst against one watermarked shard: every High request
+/// is served (the watermark never applies to it, and the deep default
+/// queue never fills), every BestEffort submission sheds typed, with the
+/// attribution counters split exactly.
+#[test]
+fn mixed_priority_burst_holds_high_while_best_effort_sheds() {
+    let dir = synthetic_dir("mixed");
+    let fleet = Fleet::single(CoordinatorConfig {
+        best_effort_watermark: Some(0),
+        ..shard_cfg(&dir)
+    })
+    .unwrap();
+    let h = fleet.handle();
+
+    let per_class = 8usize;
+    let joins: Vec<_> = (0..4usize)
+        .map(|t| {
+            let h = h.clone();
+            std::thread::spawn(move || {
+                let (mut high_ok, mut be_shed) = (0u64, 0u64);
+                for i in 0..per_class {
+                    let row = vec![((t * per_class + i) % 50) as i32; 16];
+                    if t % 2 == 0 {
+                        let out = h.infer_mlp(row).expect("High must be held");
+                        assert_eq!(out.len(), 4);
+                        high_ok += 1;
+                    } else {
+                        match h.submit_mlp_qos(row, Qos::best_effort()) {
+                            Err(Error::Overloaded(_)) => be_shed += 1,
+                            Err(e) => panic!("unexpected refusal: {e}"),
+                            Ok(_) => panic!("watermark 0 must shed every best-effort row"),
+                        }
+                    }
+                }
+                (high_ok, be_shed)
+            })
+        })
+        .collect();
+    let (mut high_ok, mut be_shed) = (0u64, 0u64);
+    for j in joins {
+        let (hi, be) = j.join().unwrap();
+        high_ok += hi;
+        be_shed += be;
+    }
+    assert_eq!(high_ok, 2 * per_class as u64);
+    assert_eq!(be_shed, 2 * per_class as u64);
+    let stats = h.shard_stats(0);
+    assert_eq!(stats.shed.load(Ordering::Relaxed), be_shed);
+    assert_eq!(stats.shed_best_effort.load(Ordering::Relaxed), be_shed);
+    assert_eq!(stats.completed.load(Ordering::Relaxed), high_ok);
+    fleet.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Deadline semantics, both halves:
+///
+/// * an already-expired job (deadline zero) fails typed with
+///   `Error::DeadlineExceeded` before any worker execute — `completed`
+///   stays zero, the expiry is attributed, and the stats invariant closes
+///   (`failed` absorbs it, depth drains);
+/// * a tight-deadline job gathered inside a *long* batching window is
+///   flushed early and served — it does not wait the window out (which
+///   would miss the deadline), and it resolves far sooner than the window.
+#[test]
+fn deadlines_fail_typed_before_execute_and_flush_windows_early() {
+    let dir = synthetic_dir("deadline");
+    // Long window so the only way a deadline job serves in time is the
+    // early flush; 1 worker keeps the execution order deterministic.
+    let c = Coordinator::start(CoordinatorConfig {
+        workers: 1,
+        max_batch_wait_s: 20.0,
+        ..shard_cfg(&dir)
+    })
+    .unwrap();
+    let h = c.handle();
+
+    // Half 1: born expired. The leader reaps it at the gather step; no
+    // worker ever sees it.
+    let rx = h
+        .submit_mlp_qos(vec![1; 16], Qos::default().with_deadline(Duration::ZERO))
+        .expect("admission accepts; expiry is judged at the leader");
+    let err = rx
+        .recv_timeout(Duration::from_secs(30))
+        .expect("expired job must still resolve its slot")
+        .expect_err("a born-expired job must not serve");
+    assert!(matches!(err, Error::DeadlineExceeded(_)), "{err}");
+    let stats = h.stats();
+    assert_eq!(stats.deadline_expired.load(Ordering::Relaxed), 1);
+    assert_eq!(stats.completed.load(Ordering::Relaxed), 0, "no worker execute was burned");
+    assert_eq!(stats.failed.load(Ordering::Relaxed), 1);
+    assert_eq!(stats.queue_depth(), 0);
+
+    // Half 2: tight deadline inside the 20 s window → early flush serves it.
+    let t0 = Instant::now();
+    let rx = h
+        .submit_mlp_qos(vec![2; 16], Qos::default().with_deadline(Duration::from_secs(2)))
+        .expect("accepted");
+    let reply = rx
+        .recv_timeout(Duration::from_secs(30))
+        .expect("slot resolves")
+        .expect("a meetable deadline must be met, not reaped");
+    assert_eq!(reply.outputs.len(), 4);
+    assert!(
+        t0.elapsed() < Duration::from_secs(10),
+        "served after {:?} — the window was waited out instead of flushing early",
+        t0.elapsed()
+    );
+    assert_eq!(stats.deadline_expired.load(Ordering::Relaxed), 1, "no new expiry");
+    c.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// QoS payload recovery composes with the watermark: a best-effort
+/// submission refused at admission hands its payload back through the
+/// public `try_submit_*_qos` surface, exactly like a full queue does.
+#[test]
+fn best_effort_shed_recovers_the_payload() {
+    let dir = synthetic_dir("recover-qos");
+    let c = Coordinator::start(CoordinatorConfig {
+        best_effort_watermark: Some(0),
+        ..shard_cfg(&dir)
+    })
+    .unwrap();
+    let h = c.handle();
+
+    let row = vec![9i32; 16];
+    let rejected = h
+        .try_submit_mlp_qos(row.clone(), Qos::best_effort())
+        .expect_err("watermark 0 sheds every best-effort row");
+    assert!(matches!(rejected.error, Error::Overloaded(_)), "{}", rejected.error);
+    assert_eq!(rejected.payload, row, "payload must come back intact");
+
+    let model = heavy_cnn();
+    let input = heavy_input(0);
+    let rejected = h
+        .try_submit_cnn_qos(model.clone(), input.clone(), Qos::best_effort())
+        .expect_err("watermark 0 sheds the CNN path too");
+    assert!(matches!(rejected.error, Error::Overloaded(_)));
+    assert_eq!(rejected.payload.0, model);
+    assert_eq!(rejected.payload.1, input);
+
+    let (a, b) = (vec![1i32; 4], vec![2i32; 4]);
+    let rejected = h
+        .try_submit_gemm_qos("g", a.clone(), b.clone(), Qos::best_effort())
+        .expect_err("watermark 0 sheds the GEMM path too");
+    assert!(matches!(rejected.error, Error::Overloaded(_)));
+    assert_eq!(rejected.payload, (a, b));
+
+    // Nothing was accepted, nothing leaked.
+    assert_eq!(h.stats().requests.load(Ordering::Relaxed), 0);
+    assert_eq!(h.stats().shed.load(Ordering::Relaxed), 3);
+    assert_eq!(h.stats().shed_best_effort.load(Ordering::Relaxed), 3);
+    c.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
