@@ -1,0 +1,468 @@
+//! Comment- and string-aware source preparation for [`crate::analysis`].
+//!
+//! The rule scanners in [`crate::analysis::rules`] are substring matchers;
+//! what makes them trustworthy is that they never see comment or literal
+//! text. [`scrub`] produces a same-shape copy of the source in which every
+//! comment and every string/char-literal body is blanked to spaces (line
+//! structure preserved, so byte offsets still map to line numbers),
+//! together with a per-line side table of the removed comment text — the
+//! channel the `// SAFETY:` and `// lint:allow(…)` checks read.
+//! [`condense`] then strips all whitespace while keeping a byte → line
+//! map, which lets scanners match multi-line call chains
+//! (`.lock()\n.unwrap()`) with a plain substring search. [`cfg_test_spans`]
+//! finds `#[cfg(test)]`-gated items by delimiter balance so rules can
+//! exempt test code.
+
+/// One comment's text, keyed by the 1-based line it occupies. Multi-line
+/// block comments contribute one entry per line so upward walks and
+/// allow-site lookups stay line-local.
+#[derive(Debug, Clone)]
+pub struct Comment {
+    pub line: u32,
+    pub text: String,
+}
+
+/// Scrubbed source: same line structure as the input, with comments gone
+/// and literal bodies blanked; plus the comment side table.
+#[derive(Debug)]
+pub struct Scrubbed {
+    pub code: String,
+    pub comments: Vec<Comment>,
+}
+
+/// Whitespace-free scrubbed code with a byte → 1-based-line map, so
+/// multi-line chains match with plain substring search.
+#[derive(Debug)]
+pub struct Condensed {
+    pub text: String,
+    /// `lines[b]` is the source line of `text.as_bytes()[b]`.
+    lines: Vec<u32>,
+}
+
+pub(crate) fn is_ident(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+pub(crate) fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Blank comments and literal bodies out of `src` (see module docs).
+pub fn scrub(src: &str) -> Scrubbed {
+    let chars: Vec<char> = src.chars().collect();
+    Scrubber {
+        chars: &chars,
+        i: 0,
+        line: 1,
+        code: String::with_capacity(src.len()),
+        comments: Vec::new(),
+    }
+    .run()
+}
+
+struct Scrubber<'a> {
+    chars: &'a [char],
+    i: usize,
+    line: u32,
+    code: String,
+    comments: Vec<Comment>,
+}
+
+impl Scrubber<'_> {
+    fn run(mut self) -> Scrubbed {
+        while self.i < self.chars.len() {
+            let c = self.chars[self.i];
+            let next = self.chars.get(self.i + 1).copied();
+            match c {
+                '/' if next == Some('/') => self.line_comment(),
+                '/' if next == Some('*') => self.block_comment(),
+                '"' => {
+                    self.emit('"');
+                    self.i += 1;
+                    self.string_body();
+                }
+                '\'' => self.char_or_lifetime(),
+                'r' | 'b' if !self.prev_is_ident() && self.try_raw_or_byte_string() => {}
+                _ => {
+                    self.emit(c);
+                    self.i += 1;
+                }
+            }
+        }
+        Scrubbed { code: self.code, comments: self.comments }
+    }
+
+    /// Emit a kept character (structure: newlines, quotes, code).
+    fn emit(&mut self, c: char) {
+        if c == '\n' {
+            self.line += 1;
+        }
+        self.code.push(c);
+    }
+
+    /// Emit the blanked form of a scrubbed character, preserving newlines.
+    fn blank(&mut self, c: char) {
+        if c == '\n' {
+            self.line += 1;
+            self.code.push('\n');
+        } else {
+            self.code.push(' ');
+        }
+    }
+
+    fn prev_is_ident(&self) -> bool {
+        self.i > 0 && is_ident(self.chars[self.i - 1])
+    }
+
+    /// `// …` to end of line (doc comments included): blank it, record it.
+    fn line_comment(&mut self) {
+        let start = self.line;
+        let mut text = String::new();
+        while self.i < self.chars.len() && self.chars[self.i] != '\n' {
+            text.push(self.chars[self.i]);
+            self.code.push(' ');
+            self.i += 1;
+        }
+        self.comments.push(Comment { line: start, text });
+    }
+
+    /// `/* … */` with Rust nesting; one `Comment` entry per line spanned.
+    fn block_comment(&mut self) {
+        let mut depth = 0usize;
+        let mut text = String::new();
+        while self.i < self.chars.len() {
+            let c = self.chars[self.i];
+            let next = self.chars.get(self.i + 1).copied();
+            if c == '/' && next == Some('*') {
+                depth += 1;
+                text.push_str("/*");
+                self.code.push_str("  ");
+                self.i += 2;
+            } else if c == '*' && next == Some('/') {
+                depth = depth.saturating_sub(1);
+                text.push_str("*/");
+                self.code.push_str("  ");
+                self.i += 2;
+                if depth == 0 {
+                    break;
+                }
+            } else if c == '\n' {
+                let done = std::mem::take(&mut text);
+                self.comments.push(Comment { line: self.line, text: done });
+                self.blank('\n');
+                self.i += 1;
+            } else {
+                text.push(c);
+                self.code.push(' ');
+                self.i += 1;
+            }
+        }
+        if !text.is_empty() {
+            self.comments.push(Comment { line: self.line, text });
+        }
+    }
+
+    /// Blank a string body; the opening quote is already emitted.
+    fn string_body(&mut self) {
+        while self.i < self.chars.len() {
+            let c = self.chars[self.i];
+            if c == '\\' {
+                self.blank(c);
+                self.i += 1;
+                if self.i < self.chars.len() {
+                    let escaped = self.chars[self.i];
+                    self.blank(escaped);
+                    self.i += 1;
+                }
+            } else if c == '"' {
+                self.emit('"');
+                self.i += 1;
+                return;
+            } else {
+                self.blank(c);
+                self.i += 1;
+            }
+        }
+    }
+
+    /// Distinguish `'x'` / `'\n'` char literals from `'a` lifetimes.
+    fn char_or_lifetime(&mut self) {
+        let one = self.chars.get(self.i + 1).copied();
+        let two = self.chars.get(self.i + 2).copied();
+        if one == Some('\\') {
+            // Escaped char literal: blank through the closing quote.
+            self.emit('\'');
+            self.i += 1;
+            while self.i < self.chars.len() {
+                let c = self.chars[self.i];
+                if c == '\\' {
+                    self.blank(c);
+                    self.i += 1;
+                    if self.i < self.chars.len() {
+                        let escaped = self.chars[self.i];
+                        self.blank(escaped);
+                        self.i += 1;
+                    }
+                } else if c == '\'' {
+                    self.emit('\'');
+                    self.i += 1;
+                    return;
+                } else {
+                    self.blank(c);
+                    self.i += 1;
+                }
+            }
+        } else if two == Some('\'') && one.is_some() {
+            // Plain one-char literal (covers '_' , '"' , '{').
+            self.emit('\'');
+            self.blank(one.unwrap());
+            self.emit('\'');
+            self.i += 3;
+        } else {
+            // Lifetime marker: keep as-is.
+            self.emit('\'');
+            self.i += 1;
+        }
+    }
+
+    /// Handle `r"…"`, `r#"…"#`, `b"…"`, `br#"…"#` starts. Returns false if
+    /// the position is an ordinary identifier (`row`, `b`, …), in which
+    /// case nothing was consumed.
+    fn try_raw_or_byte_string(&mut self) -> bool {
+        let mut j = self.i;
+        let byte_prefixed = self.chars[j] == 'b';
+        if byte_prefixed {
+            j += 1;
+        }
+        let raw = self.chars.get(j) == Some(&'r');
+        if raw {
+            j += 1;
+        }
+        let mut hashes = 0usize;
+        while raw && self.chars.get(j) == Some(&'#') {
+            hashes += 1;
+            j += 1;
+        }
+        if self.chars.get(j) != Some(&'"') {
+            return false;
+        }
+        if !raw {
+            if !byte_prefixed {
+                return false;
+            }
+            // b"…": an escaped string with a byte prefix.
+            self.emit('b');
+            self.emit('"');
+            self.i += 2;
+            self.string_body();
+            return true;
+        }
+        // Raw (possibly byte) string: keep the delimiters, blank the body
+        // up to `"` followed by `hashes` hash marks.
+        if byte_prefixed {
+            self.emit('b');
+        }
+        self.emit('r');
+        for _ in 0..hashes {
+            self.emit('#');
+        }
+        self.emit('"');
+        self.i = j + 1;
+        'scan: while self.i < self.chars.len() {
+            if self.chars[self.i] == '"' {
+                for h in 0..hashes {
+                    if self.chars.get(self.i + 1 + h) != Some(&'#') {
+                        self.blank('"');
+                        self.i += 1;
+                        continue 'scan;
+                    }
+                }
+                self.emit('"');
+                for _ in 0..hashes {
+                    self.emit('#');
+                }
+                self.i += 1 + hashes;
+                return true;
+            }
+            let c = self.chars[self.i];
+            self.blank(c);
+            self.i += 1;
+        }
+        true
+    }
+}
+
+/// Strip all whitespace from scrubbed code, keeping a per-byte line map.
+pub fn condense(code: &str) -> Condensed {
+    let mut text = String::new();
+    let mut lines = Vec::new();
+    let mut line: u32 = 1;
+    for c in code.chars() {
+        if c == '\n' {
+            line += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            continue;
+        }
+        text.push(c);
+        for _ in 0..c.len_utf8() {
+            lines.push(line);
+        }
+    }
+    Condensed { text, lines }
+}
+
+impl Condensed {
+    /// Source line of byte offset `b` (1-based; 0 for an empty stream).
+    pub fn line_at(&self, b: usize) -> u32 {
+        match self.lines.get(b) {
+            Some(&l) => l,
+            None => self.lines.last().copied().unwrap_or(0),
+        }
+    }
+
+    /// Byte offsets of every occurrence of `pat`.
+    pub fn find_all(&self, pat: &str) -> Vec<usize> {
+        self.text.match_indices(pat).map(|(b, _)| b).collect()
+    }
+}
+
+/// Byte offsets `(open, close)` of the first `{ … }` block at or after
+/// `from`, by depth counting. Exact on scrubbed/condensed text: no braces
+/// survive inside comments or literals.
+pub fn brace_block(text: &str, from: usize) -> Option<(usize, usize)> {
+    let bytes = text.as_bytes();
+    let open = bytes[from..].iter().position(|&b| b == b'{')? + from;
+    let mut depth = 0usize;
+    for (off, &b) in bytes[open..].iter().enumerate() {
+        match b {
+            b'{' => depth += 1,
+            b'}' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some((open, open + off));
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+/// Line spans (1-based, inclusive) of `#[cfg(test)]`-gated items. From each
+/// attribute, the item runs to its first block's matching `}` — or to a
+/// top-level `;` for block-less items (`#[cfg(test)] mod tests;`,
+/// `#[cfg(test)] use …;`).
+pub fn cfg_test_spans(cond: &Condensed) -> Vec<(u32, u32)> {
+    const ATTR: &str = "#[cfg(test)]";
+    let bytes = cond.text.as_bytes();
+    let mut spans = Vec::new();
+    for at in cond.find_all(ATTR) {
+        let start_line = cond.line_at(at);
+        let mut brace_depth = 0usize;
+        let mut paren_depth = 0usize;
+        let mut saw_block = false;
+        let mut end = None;
+        let mut j = at + ATTR.len();
+        while j < bytes.len() {
+            match bytes[j] {
+                b'(' | b'[' => paren_depth += 1,
+                b')' | b']' => paren_depth = paren_depth.saturating_sub(1),
+                b';' if brace_depth == 0 && paren_depth == 0 && !saw_block => {
+                    end = Some(cond.line_at(j));
+                    break;
+                }
+                b'{' => {
+                    brace_depth += 1;
+                    saw_block = true;
+                }
+                b'}' => {
+                    brace_depth = brace_depth.saturating_sub(1);
+                    if saw_block && brace_depth == 0 {
+                        end = Some(cond.line_at(j));
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            j += 1;
+        }
+        let fallback = cond.line_at(bytes.len().saturating_sub(1));
+        spans.push((start_line, end.unwrap_or(fallback)));
+    }
+    spans
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scrub_blanks_comments_and_records_them() {
+        let src = "let x = 1; // trailing note\n/* block\nspans lines */ fn f() {}\n";
+        let s = scrub(src);
+        assert!(!s.code.contains("trailing"));
+        assert!(!s.code.contains("spans"));
+        assert!(s.code.contains("let x = 1;"));
+        assert!(s.code.contains("fn f() {}"));
+        assert_eq!(s.code.lines().count(), src.lines().count());
+        assert!(s.comments.iter().any(|c| c.line == 1 && c.text.contains("trailing note")));
+        assert!(s.comments.iter().any(|c| c.line == 2 && c.text.contains("block")));
+        assert!(s.comments.iter().any(|c| c.line == 3 && c.text.contains("spans lines")));
+    }
+
+    #[test]
+    fn scrub_blanks_string_and_char_bodies_but_keeps_lifetimes() {
+        let src = "fn f<'a>(s: &'a str) { let t = \"unsafe { }\"; let c = '{'; let e = '\\n'; }\n";
+        let s = scrub(src);
+        assert!(!s.code.contains("unsafe"));
+        // Brace balance is preserved: literal braces were blanked.
+        let opens = s.code.matches('{').count();
+        let closes = s.code.matches('}').count();
+        assert_eq!(opens, closes);
+        assert!(s.code.contains("fn f<'a>(s: &'a str)"));
+    }
+
+    #[test]
+    fn scrub_handles_raw_strings() {
+        let src = "let p = r#\"contains \"quotes\" and unsafe words\"#; let q = r\"plain\"; let b = b\"bytes\";\n";
+        let s = scrub(src);
+        assert!(!s.code.contains("unsafe"));
+        assert!(!s.code.contains("plain"));
+        assert!(!s.code.contains("bytes"));
+        // Identifiers starting with r/b are untouched.
+        let src2 = "let row = rows + b;\n";
+        assert_eq!(scrub(src2).code, src2);
+    }
+
+    #[test]
+    fn condense_maps_bytes_back_to_lines() {
+        let src = "a.lock()\n    .unwrap()\n";
+        let c = condense(&scrub(src).code);
+        assert_eq!(c.text, "a.lock().unwrap()");
+        let at = c.find_all(".lock().unwrap()")[0];
+        assert_eq!(c.line_at(at), 1);
+        let unwrap_at = c.text.find(".unwrap").unwrap();
+        assert_eq!(c.line_at(unwrap_at + 1), 2);
+    }
+
+    #[test]
+    fn cfg_test_spans_cover_mods_fns_and_statements() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() {}\n}\nfn also_live() {}\n#[cfg(test)]\nuse std::fmt;\n";
+        let c = condense(&scrub(src).code);
+        let spans = cfg_test_spans(&c);
+        assert_eq!(spans.len(), 2);
+        assert_eq!(spans[0], (2, 5));
+        assert_eq!(spans[1], (7, 8));
+    }
+
+    #[test]
+    fn brace_block_matches_nested_blocks() {
+        let text = "fn f(){if x{y()}else{z()}}fn g(){}";
+        let (open, close) = brace_block(text, 0).unwrap();
+        assert_eq!(open, text.find('{').unwrap());
+        assert_eq!(&text[close..close + 1], "}");
+        assert_eq!(close, 25);
+    }
+}

@@ -1,0 +1,273 @@
+//! # `spoga-lint` — repo-specific static invariant analysis
+//!
+//! Zero-dependency static analysis over this crate's own sources. The
+//! serving stack promises bit-exact, panic-free, typed-error integer GEMM
+//! serving end to end; the invariants behind that promise were enforced
+//! only by convention until PRs 6, 8, and 9 each paid for one hand-found
+//! violation. This module turns those one-off fixes into machine-checked
+//! rules that run in tier-1 (`rust/tests/static_invariants.rs` walks
+//! `rust/src/**/*.rs` and fails `cargo test` on any violation) and as a
+//! standalone binary (`cargo run --bin spoga-lint [ROOT…]`).
+//!
+//! ## Rule catalogue
+//!
+//! | rule | invariant | provenance |
+//! |---|---|---|
+//! | `no-poison-panic` (R1) | no `.lock()/.read()/.write()` followed by `.unwrap()`/`.expect(` outside `#[cfg(test)]`; poison maps to the typed error taxonomy or recovers via `crate::sync::lock_recovered` | PR 6: a panicking worker poisoned the shard slot table and every later request panicked instead of getting `Error::Coordinator` |
+//! | `safety-comment` (R2) | every `unsafe` occurrence in non-test code sits directly under a `// SAFETY:` comment stating the invariant that makes *this site* sound (a doc `# Safety` section states the caller's obligation — it does not discharge it) | PR 8's AVX2 micro-kernels: 8 unsafe sites, only 2 justified |
+//! | `no-release-silent-guards` (R3) | no `debug_assert!` whose predicate mentions request/serving state (lengths, nonces, frames, rows, runs, planes, QoS, deadlines) outside `testing/` — served-exactness checks must hold in release builds | PR 8: `check_frame_nonces` was debug-only, so release builds silently skipped a bit-exactness guard |
+//! | `wire-codec-symmetry` (R4) | every `Opcode` variant survives `from_u8`; `encode_*`/`decode_*` functions pair up; payload (`Submit*`) opcodes have a codec pair; every error tag `encode_error` emits is matched by `decode_error` | PR 6/PR 9: wire v2 grew tags 9/10 — an asymmetric codec turns a typed error into `FrameCorrupt` at the peer |
+//! | `no-blocking-ingress` (R5) | no blocking `.send(Job::…)` on the bounded coordinator ingress outside `#[cfg(test)]`; admission is `try_send` + typed shedding or a bounded retry | PR 9: full-queue ingress deadlocked submitters forever instead of shedding `Error::Overloaded` |
+//!
+//! Rules scan *scrubbed* text (comments and string/char literal bodies
+//! blanked by [`lexer::scrub`], multi-line chains normalized by
+//! [`lexer::condense`]), so formatting or literal text cannot hide or
+//! fake a violation.
+//!
+//! ## The `lint:allow` contract
+//!
+//! A site-local escape hatch: a comment containing
+//! `lint:allow(<rule>) <justification>` on the violating line or the line
+//! above suppresses that rule there. Three properties keep exceptions
+//! honest — all three are themselves linted (rule `allow-justification`):
+//!
+//! 1. an allow **must carry a justification** (empty reason → violation,
+//!    and the underlying finding is *not* suppressed);
+//! 2. an allow **must suppress something** (a stale or misspelled allow is
+//!    a violation, so dead exceptions cannot accumulate);
+//! 3. every exception is **counted and printed** by [`LintReport::render`],
+//!    so intentional deviations are visible in tier-1 output instead of
+//!    invisible in review.
+//!
+//! Candidate future rules (see ROADMAP): error-taxonomy exhaustiveness
+//! (every `Error` variant constructed somewhere reachable and carried by
+//! the wire codec) and bounded-channel construction sites (every
+//! `sync_channel` capacity traced to a config knob, not a bare literal).
+
+pub mod lexer;
+pub mod rules;
+
+use lexer::{cfg_test_spans, condense, scrub, Condensed, Scrubbed};
+use std::path::{Path, PathBuf};
+
+/// One rule violation at a source location.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: u32,
+    pub message: String,
+}
+
+/// One justified, counted `lint:allow` exception.
+#[derive(Debug, Clone)]
+pub struct Suppression {
+    pub rule: String,
+    pub file: String,
+    pub line: u32,
+    pub justification: String,
+}
+
+/// Aggregate lint outcome over one or more files.
+#[derive(Debug, Default)]
+pub struct LintReport {
+    /// Files scanned.
+    pub files: usize,
+    /// Violations (including unjustified or stale `lint:allow` sites).
+    pub findings: Vec<Finding>,
+    /// Justified exceptions that suppressed a real finding.
+    pub suppressions: Vec<Suppression>,
+}
+
+impl LintReport {
+    pub fn is_clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// Human-readable report: one line per finding, then the exception
+    /// ledger, then a one-line summary.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        for f in &self.findings {
+            s.push_str(&format!("{}:{}: [{}] {}\n", f.file, f.line, f.rule, f.message));
+        }
+        for a in &self.suppressions {
+            s.push_str(&format!(
+                "{}:{}: allowed [{}]: {}\n",
+                a.file, a.line, a.rule, a.justification
+            ));
+        }
+        s.push_str(&format!(
+            "spoga-lint: {} file(s), {} violation(s), {} allowed exception(s)\n",
+            self.files,
+            self.findings.len(),
+            self.suppressions.len()
+        ));
+        s
+    }
+
+    fn sort(&mut self) {
+        self.findings.sort_by(|a, b| {
+            (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
+        });
+        self.suppressions.sort_by(|a, b| {
+            (a.file.as_str(), a.line).cmp(&(b.file.as_str(), b.line))
+        });
+    }
+}
+
+/// A parsed source file, shared by all rule scanners.
+pub struct SourceFile {
+    pub path: String,
+    pub scrubbed: Scrubbed,
+    pub cond: Condensed,
+    /// Scrubbed code split into lines (for line-local upward walks).
+    pub lines: Vec<String>,
+    test_spans: Vec<(u32, u32)>,
+}
+
+impl SourceFile {
+    pub fn parse(path: &str, src: &str) -> SourceFile {
+        let scrubbed = scrub(src);
+        let cond = condense(&scrubbed.code);
+        let test_spans = cfg_test_spans(&cond);
+        let lines = scrubbed.code.lines().map(str::to_string).collect();
+        SourceFile { path: path.to_string(), scrubbed, cond, lines, test_spans }
+    }
+
+    /// Is `line` inside a `#[cfg(test)]`-gated item?
+    pub fn in_test_code(&self, line: u32) -> bool {
+        self.test_spans.iter().any(|&(a, b)| a <= line && line <= b)
+    }
+
+    /// Does a comment on exactly `line` contain `SAFETY:`?
+    pub fn has_safety_comment_at(&self, line: u32) -> bool {
+        self.scrubbed.comments.iter().any(|c| c.line == line && c.text.contains("SAFETY:"))
+    }
+}
+
+/// A `lint:allow(<rule>) <justification>` comment site.
+struct AllowSite {
+    rule: String,
+    line: u32,
+    justification: String,
+}
+
+fn parse_allows(scrubbed: &Scrubbed) -> Vec<AllowSite> {
+    const MARKER: &str = "lint:allow(";
+    let mut sites = Vec::new();
+    for c in &scrubbed.comments {
+        // Directives live in plain comments only; doc comments merely
+        // *describe* the contract (as this module's own docs do).
+        let t = c.text.trim_start();
+        if t.starts_with("///") || t.starts_with("//!") || t.starts_with("/**") || t.starts_with("/*!") {
+            continue;
+        }
+        let Some(pos) = c.text.find(MARKER) else { continue };
+        let rest = &c.text[pos + MARKER.len()..];
+        let Some(close) = rest.find(')') else { continue };
+        let rule = rest[..close].trim().to_string();
+        let justification = rest[close + 1..]
+            .trim()
+            .trim_start_matches(['-', ':', '—'])
+            .trim()
+            .to_string();
+        sites.push(AllowSite { rule, line: c.line, justification });
+    }
+    sites
+}
+
+/// Lint one source text under the given display path. `path` matters to
+/// path-scoped rules (`testing/` is exempt from R3).
+pub fn lint_source(path: &str, src: &str) -> LintReport {
+    let file = SourceFile::parse(path, src);
+    let allows = parse_allows(&file.scrubbed);
+    let mut raw = rules::scan(&file);
+    raw.sort_by_key(|f| (f.line, f.rule));
+
+    let mut report = LintReport { files: 1, ..LintReport::default() };
+    let mut used = vec![false; allows.len()];
+    for f in raw {
+        let hit = allows
+            .iter()
+            .position(|a| a.rule == f.rule && (a.line == f.line || a.line + 1 == f.line));
+        match hit {
+            Some(i) if !allows[i].justification.is_empty() => {
+                used[i] = true;
+                report.suppressions.push(Suppression {
+                    rule: allows[i].rule.clone(),
+                    file: path.to_string(),
+                    line: f.line,
+                    justification: allows[i].justification.clone(),
+                });
+            }
+            Some(i) => {
+                // Unjustified allow: flag the allow AND keep the finding.
+                used[i] = true;
+                report.findings.push(Finding {
+                    rule: rules::ALLOW_JUSTIFICATION,
+                    file: path.to_string(),
+                    line: allows[i].line,
+                    message: format!(
+                        "lint:allow({}) has no justification — explain why this \
+                         exception is sound",
+                        allows[i].rule
+                    ),
+                });
+                report.findings.push(f);
+            }
+            None => report.findings.push(f),
+        }
+    }
+    for (i, a) in allows.iter().enumerate() {
+        if !used[i] {
+            report.findings.push(Finding {
+                rule: rules::ALLOW_JUSTIFICATION,
+                file: path.to_string(),
+                line: a.line,
+                message: format!(
+                    "lint:allow({}) suppresses nothing (stale, misspelled rule, or \
+                     wrong line) — remove it or move it to the violating line",
+                    a.rule
+                ),
+            });
+        }
+    }
+    report.sort();
+    report
+}
+
+/// Lint every `*.rs` file under `root` (recursive, sorted order).
+pub fn lint_dir(root: &Path) -> crate::Result<LintReport> {
+    let mut paths = Vec::new();
+    collect_rs(root, &mut paths)?;
+    paths.sort();
+    let mut report = LintReport::default();
+    for p in &paths {
+        let src = std::fs::read_to_string(p)?;
+        let rel = p
+            .strip_prefix(root)
+            .unwrap_or(p)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let one = lint_source(&rel, &src);
+        report.files += 1;
+        report.findings.extend(one.findings);
+        report.suppressions.extend(one.suppressions);
+    }
+    report.sort();
+    Ok(report)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> crate::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if entry.file_type()?.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().and_then(|e| e.to_str()) == Some("rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,374 @@
+//! The per-rule scanners behind [`crate::analysis`]. Each rule is derived
+//! from a bug class this repo has already paid for; the catalogue with
+//! provenance lives in the module docs of [`crate::analysis`].
+
+use super::lexer::{is_ident, is_ident_byte};
+use super::{Finding, SourceFile};
+use std::collections::BTreeSet;
+
+/// R1 — panicking lock acquisition outside `#[cfg(test)]`.
+pub const NO_POISON_PANIC: &str = "no-poison-panic";
+/// R2 — `unsafe` without an adjacent `// SAFETY:` comment.
+pub const SAFETY_COMMENT: &str = "safety-comment";
+/// R3 — `debug_assert!` guarding serving state outside `testing/`.
+pub const NO_RELEASE_SILENT_GUARDS: &str = "no-release-silent-guards";
+/// R4 — opcode/codec/error-tag symmetry in the wire protocol.
+pub const WIRE_CODEC_SYMMETRY: &str = "wire-codec-symmetry";
+/// R5 — blocking send on the bounded coordinator ingress.
+pub const NO_BLOCKING_INGRESS: &str = "no-blocking-ingress";
+/// Meta-rule: `lint:allow` sites must justify themselves and suppress
+/// something real.
+pub const ALLOW_JUSTIFICATION: &str = "allow-justification";
+
+/// Run every rule over one parsed file. Findings are unsorted and
+/// unsuppressed; [`crate::analysis::lint_source`] applies the
+/// `lint:allow` machinery.
+pub fn scan(file: &SourceFile) -> Vec<Finding> {
+    let mut out = Vec::new();
+    no_poison_panic(file, &mut out);
+    safety_comment(file, &mut out);
+    no_release_silent_guards(file, &mut out);
+    wire_codec_symmetry(file, &mut out);
+    no_blocking_ingress(file, &mut out);
+    out
+}
+
+/// The panicking acquisition chains R1 bans. Matched on the condensed
+/// stream, so formatting (multi-line builder chains) cannot hide them.
+const POISON_CHAINS: [&str; 6] = [
+    ".lock().unwrap()",
+    ".read().unwrap()",
+    ".write().unwrap()",
+    ".lock().expect(",
+    ".read().expect(",
+    ".write().expect(",
+];
+
+fn no_poison_panic(file: &SourceFile, out: &mut Vec<Finding>) {
+    for pat in POISON_CHAINS {
+        for at in file.cond.find_all(pat) {
+            let line = file.cond.line_at(at);
+            if file.in_test_code(line) {
+                continue;
+            }
+            out.push(Finding {
+                rule: NO_POISON_PANIC,
+                file: file.path.clone(),
+                line,
+                message: format!(
+                    "`{pat}…` panics on a poisoned lock; map poison to a typed error \
+                     (Error::Coordinator / Error::Remote) on fallible paths or recover \
+                     via crate::sync::lock_recovered on must-complete paths"
+                ),
+            });
+        }
+    }
+}
+
+fn safety_comment(file: &SourceFile, out: &mut Vec<Finding>) {
+    for (idx, text) in file.lines.iter().enumerate() {
+        let line = (idx + 1) as u32;
+        let bytes = text.as_bytes();
+        let mut from = 0usize;
+        while let Some(pos) = text[from..].find("unsafe") {
+            let at = from + pos;
+            from = at + "unsafe".len();
+            let start_ok = at == 0 || !is_ident_byte(bytes[at - 1]);
+            let end = at + "unsafe".len();
+            let end_ok = end >= bytes.len() || !is_ident_byte(bytes[end]);
+            if !start_ok || !end_ok {
+                continue;
+            }
+            if file.in_test_code(line) {
+                continue;
+            }
+            if file.has_safety_comment_at(line) || has_safety_comment_above(file, idx) {
+                continue;
+            }
+            out.push(Finding {
+                rule: SAFETY_COMMENT,
+                file: file.path.clone(),
+                line,
+                message: "`unsafe` without an adjacent `// SAFETY:` comment stating the \
+                          invariant that makes it sound (doc `# Safety` sections describe \
+                          the caller's obligation; the comment must state why *this* site \
+                          meets it)"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+/// Walk upward from the line above `idx` (0-based) through the item's
+/// prologue — blank lines, attribute lines, and comment lines — looking
+/// for a `SAFETY:` comment. A non-prologue code line ends the walk.
+fn has_safety_comment_above(file: &SourceFile, idx: usize) -> bool {
+    let mut k = idx;
+    while k > 0 {
+        k -= 1;
+        let line = (k + 1) as u32;
+        if file.has_safety_comment_at(line) {
+            return true;
+        }
+        let has_comment = file.scrubbed.comments.iter().any(|c| c.line == line);
+        if !has_comment && !is_prologue_line(&file.lines[k]) {
+            return false;
+        }
+    }
+    false
+}
+
+/// Lines that may sit between a SAFETY comment and its `unsafe` site:
+/// blanks (including comment-only lines, whose code is all spaces after
+/// scrubbing) and attributes (possibly multi-line, ending `)]`).
+fn is_prologue_line(scrubbed_line: &str) -> bool {
+    let t = scrubbed_line.trim();
+    t.is_empty() || t.starts_with('#') || t.ends_with(")]") || t.ends_with(']')
+}
+
+/// Identifiers that mark a predicate as guarding request/serving state
+/// (frame lengths, nonces, rows, runs, planes, QoS bookkeeping). Paper
+/// context: served GEMM must be bit-exact, so these checks must hold in
+/// release builds — a `debug_assert!` silently vanishes there.
+const SERVING_STATE_MARKERS: [&str; 9] =
+    ["len", "nonce", "frame", "row", "run", "job", "plane", "qos", "deadline"];
+
+fn no_release_silent_guards(file: &SourceFile, out: &mut Vec<Finding>) {
+    if file.path.contains("testing/") {
+        return;
+    }
+    let text = &file.cond.text;
+    let bytes = text.as_bytes();
+    for at in file.cond.find_all("debug_assert") {
+        if at > 0 && is_ident_byte(bytes[at - 1]) {
+            continue;
+        }
+        let line = file.cond.line_at(at);
+        if file.in_test_code(line) {
+            continue;
+        }
+        let Some(pred) = macro_args(text, at) else { continue };
+        if SERVING_STATE_MARKERS.iter().any(|m| pred.contains(m)) {
+            let shown: String = pred.chars().take(60).collect();
+            out.push(Finding {
+                rule: NO_RELEASE_SILENT_GUARDS,
+                file: file.path.clone(),
+                line,
+                message: format!(
+                    "release-silent `debug_assert` guards serving state (`{shown}`); \
+                     enforce it in release builds with a typed Error::Shape / \
+                     Error::Coordinator instead"
+                ),
+            });
+        }
+    }
+}
+
+/// Text between the macro's outermost parentheses, starting at `at`.
+fn macro_args(text: &str, at: usize) -> Option<&str> {
+    let bytes = text.as_bytes();
+    let open = bytes[at..].iter().position(|&b| b == b'(')? + at;
+    let mut depth = 0usize;
+    for (off, &b) in bytes[open..].iter().enumerate() {
+        match b {
+            b'(' => depth += 1,
+            b')' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(&text[open + 1..open + off]);
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+fn no_blocking_ingress(file: &SourceFile, out: &mut Vec<Finding>) {
+    for at in file.cond.find_all(".send(Job::") {
+        let line = file.cond.line_at(at);
+        if file.in_test_code(line) {
+            continue;
+        }
+        out.push(Finding {
+            rule: NO_BLOCKING_INGRESS,
+            file: file.path.clone(),
+            line,
+            message: "blocking `.send(Job::…)` on the bounded coordinator ingress can \
+                      deadlock submitters when the queue is full (PR 9's bug class); \
+                      admit via `try_send` and shed typed (Error::Overloaded) or bound \
+                      the retry"
+                .to_string(),
+        });
+    }
+}
+
+fn wire_codec_symmetry(file: &SourceFile, out: &mut Vec<Finding>) {
+    let text = &file.cond.text;
+    let Some(enum_at) = text.find("enumOpcode") else { return };
+    let enum_line = file.cond.line_at(enum_at);
+    let mut fail = |line: u32, message: String| {
+        out.push(Finding { rule: WIRE_CODEC_SYMMETRY, file: file.path.clone(), line, message });
+    };
+
+    let Some((open, close)) = super::lexer::brace_block(text, enum_at) else {
+        fail(enum_line, "could not parse the `enum Opcode` body".to_string());
+        return;
+    };
+    let variants: Vec<String> = text[open + 1..close]
+        .split(',')
+        .filter_map(|seg| {
+            let name: String = seg.chars().take_while(|c| is_ident(*c)).collect();
+            let upper = name.chars().next().is_some_and(|c| c.is_ascii_uppercase());
+            (upper).then_some(name)
+        })
+        .collect();
+    if variants.is_empty() {
+        fail(enum_line, "`enum Opcode` has no parsable variants".to_string());
+        return;
+    }
+
+    // Every variant must survive the wire round trip: present in `from_u8`.
+    match text.find("fnfrom_u8").and_then(|at| super::lexer::brace_block(text, at)) {
+        None => fail(enum_line, "no `fn from_u8` decode map found next to `enum Opcode`".into()),
+        Some((fo, fc)) => {
+            let body = &text[fo..=fc];
+            for v in &variants {
+                if !body.contains(&format!("Opcode::{v}")) {
+                    fail(
+                        enum_line,
+                        format!("`Opcode::{v}` is encodable but missing from `from_u8`"),
+                    );
+                }
+            }
+        }
+    }
+
+    // Codec symmetry: the set of `fn encode_*` names must pair with the
+    // set of `fn decode_*` names. Test-only helpers are exempt.
+    let encode = codec_suffixes(file, "fnencode_");
+    let decode = codec_suffixes(file, "fndecode_");
+    for s in &encode {
+        if !decode.contains(s) {
+            fail(enum_line, format!("`encode_{s}` has no matching `decode_{s}`"));
+        }
+    }
+    for s in &decode {
+        if !encode.contains(s) {
+            fail(enum_line, format!("`decode_{s}` has no matching `encode_{s}`"));
+        }
+    }
+    // Payload-carrying submit opcodes must have a codec pair at all;
+    // control opcodes (Ping/Pong/Shutdown: empty payloads) need none.
+    for v in &variants {
+        if let Some(rest) = v.strip_prefix("Submit") {
+            let suffix = rest.to_ascii_lowercase();
+            if !(encode.contains(&suffix) && decode.contains(&suffix)) {
+                fail(
+                    enum_line,
+                    format!("payload opcode `{v}` lacks an encode_{suffix}/decode_{suffix} pair"),
+                );
+            }
+        }
+    }
+
+    // Error-tag round trip: every tag emitted by `encode_error`'s
+    // tuple-literal arms (`=> (N, …`) must be matched by `decode_error`
+    // (`N =>` or `N | M =>` arms).
+    let enc_body = fn_body(file, text, "fnencode_error");
+    let dec_body = fn_body(file, text, "fndecode_error");
+    if let (Some(enc), Some(dec)) = (&enc_body, &dec_body) {
+        let enc_tags = tuple_arm_tags(enc);
+        let dec_tags = match_arm_tags(dec);
+        for t in &enc_tags {
+            if !dec_tags.contains(t) {
+                fail(
+                    enum_line,
+                    format!("error tag {t} is produced by encode_error but never matched by decode_error"),
+                );
+            }
+        }
+        if enc_tags.is_empty() {
+            fail(enum_line, "encode_error has no recognizable `=> (tag, …)` arms".into());
+        }
+    } else if enc_body.is_some() != dec_body.is_some() {
+        fail(enum_line, "encode_error/decode_error are not both present".into());
+    }
+}
+
+/// Suffixes of `fn {prefix}*` definitions outside test code. No
+/// leading-boundary check: condensing glues visibility onto the keyword
+/// (`pub fn encode_x` → `pubfnencode_x`), so the byte before `fn` is
+/// routinely an identifier character.
+fn codec_suffixes(file: &SourceFile, prefix: &str) -> BTreeSet<String> {
+    let text = &file.cond.text;
+    let mut set = BTreeSet::new();
+    for at in file.cond.find_all(prefix) {
+        if file.in_test_code(file.cond.line_at(at)) {
+            continue;
+        }
+        let suffix: String = text[at + prefix.len()..].chars().take_while(|c| is_ident(*c)).collect();
+        if !suffix.is_empty() {
+            set.insert(suffix);
+        }
+    }
+    set
+}
+
+/// Body text of the first non-test `fn` whose condensed header starts
+/// with `marker`.
+fn fn_body<'a>(file: &SourceFile, text: &'a str, marker: &str) -> Option<&'a str> {
+    for at in file.cond.find_all(marker) {
+        if file.in_test_code(file.cond.line_at(at)) {
+            continue;
+        }
+        let (open, close) = super::lexer::brace_block(text, at)?;
+        return Some(&text[open..=close]);
+    }
+    None
+}
+
+/// Tags appearing as `=> (N, …` tuple-literal match arms.
+fn tuple_arm_tags(body: &str) -> BTreeSet<u64> {
+    let bytes = body.as_bytes();
+    let mut tags = BTreeSet::new();
+    for (i, _) in body.match_indices("=>(") {
+        let mut j = i + 3;
+        let mut n: u64 = 0;
+        let mut any = false;
+        while j < bytes.len() && bytes[j].is_ascii_digit() {
+            n = n * 10 + u64::from(bytes[j] - b'0');
+            any = true;
+            j += 1;
+        }
+        if any {
+            tags.insert(n);
+        }
+    }
+    tags
+}
+
+/// Tags appearing as `N =>` or `N | M =>` match-arm patterns.
+fn match_arm_tags(body: &str) -> BTreeSet<u64> {
+    let bytes = body.as_bytes();
+    let mut tags = BTreeSet::new();
+    let mut j = 0usize;
+    while j < bytes.len() {
+        if bytes[j].is_ascii_digit() && (j == 0 || !is_ident_byte(bytes[j - 1])) {
+            let start = j;
+            while j < bytes.len() && bytes[j].is_ascii_digit() {
+                j += 1;
+            }
+            let arrow = bytes.get(j) == Some(&b'|')
+                || (bytes.get(j) == Some(&b'=') && bytes.get(j + 1) == Some(&b'>'));
+            if arrow {
+                if let Ok(n) = body[start..j].parse::<u64>() {
+                    tags.insert(n);
+                }
+            }
+        } else {
+            j += 1;
+        }
+    }
+    tags
+}

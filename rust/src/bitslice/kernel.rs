@@ -322,8 +322,13 @@ fn i32_band(
                 let mut jb = j0;
                 #[cfg(target_arch = "x86_64")]
                 if micro == MicroKernel::Avx2 {
-                    // `resolved()` returned Avx2, so detection passed.
                     while jb + AVX2_BLOCK_W <= j1 {
+                        // SAFETY: the target-feature contract holds —
+                        // `resolved()` returns `Avx2` only after runtime
+                        // detection (`avx2_available`) — and the loop bound
+                        // keeps `jb + AVX2_BLOCK_W <= j1 <= n`, the bounds
+                        // the callee's own assert re-establishes before any
+                        // raw-pointer access.
                         unsafe {
                             i32_accum_block_avx2(
                                 arow,
@@ -420,6 +425,10 @@ fn i32_accum_block(arow: &[i8], b: &[i8], n: usize, k0: usize, k1: usize, jb: us
 /// take this path when `resolved()` returns `Avx2`).
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
+// SAFETY: `unsafe` here is the target-feature contract (callers enter only
+// behind a `MicroKernel::Avx2` dispatch, which runtime detection gates);
+// the raw-pointer loads below are bounded by the assert at the top of the
+// body (`k1 * n <= b.len()`, a 16-lane C segment at `jb`).
 unsafe fn i32_accum_block_avx2(
     arow: &[i8],
     b: &[i8],
@@ -568,8 +577,11 @@ fn lanes_band(
                 let mut jb = j0;
                 #[cfg(target_arch = "x86_64")]
                 if micro == MicroKernel::Avx2 {
-                    // `resolved()` returned Avx2, so detection passed.
                     while jb + AVX2_BLOCK_W <= j1 {
+                        // SAFETY: only the AVX2 target-feature contract is
+                        // at stake — `resolved()` returns `Avx2` only after
+                        // runtime detection (`avx2_available`); the callee
+                        // body is safe slice code, bounds-checked as usual.
                         unsafe {
                             lanes_block_avx2(am_row, al_row, pb, k0, k1, jb, row, hi, mid, lo);
                         }
@@ -665,6 +677,10 @@ fn lanes_block<const BW: usize>(
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
 #[allow(clippy::too_many_arguments)]
+// SAFETY: `unsafe` here is only the target-feature contract — callers
+// enter behind a `MicroKernel::Avx2` dispatch, which runtime detection
+// gates. The body is ordinary safe slice code; the attribute changes
+// codegen, not semantics.
 unsafe fn lanes_block_avx2(
     am_row: &[i8],
     al_row: &[i8],
@@ -768,8 +784,11 @@ fn sliced_band(
                 let mut jb = j0;
                 #[cfg(target_arch = "x86_64")]
                 if micro == MicroKernel::Avx2 {
-                    // `resolved()` returned Avx2, so detection passed.
                     while jb + AVX2_BLOCK_W <= j1 {
+                        // SAFETY: only the AVX2 target-feature contract is
+                        // at stake — `resolved()` returns `Avx2` only after
+                        // runtime detection (`avx2_available`); the callee
+                        // body is safe slice code, bounds-checked as usual.
                         unsafe {
                             sliced_block_avx2(am_row, al_row, pb, k0, k1, jb, row, mm, ml, lm, ll);
                         }
@@ -863,6 +882,10 @@ fn sliced_block<const BW: usize>(
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
 #[allow(clippy::too_many_arguments)]
+// SAFETY: `unsafe` here is only the target-feature contract — callers
+// enter behind a `MicroKernel::Avx2` dispatch, which runtime detection
+// gates. The body is ordinary safe slice code; the attribute changes
+// codegen, not semantics.
 unsafe fn sliced_block_avx2(
     am_row: &[i8],
     al_row: &[i8],

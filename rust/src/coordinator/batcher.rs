@@ -165,8 +165,23 @@ impl CnnMicroBatch {
     /// Deliver per-frame runs to their owners. `runs` comes from
     /// [`run_cnn_batch`](crate::runtime::cnnrun::run_cnn_batch) over the
     /// members' inputs in job order, so `runs[i]` belongs to `jobs[i]`.
-    pub fn deliver(self, runs: Vec<CnnRun>) {
-        debug_assert_eq!(runs.len(), self.jobs.len());
+    ///
+    /// A run count that disagrees with the member count would silently
+    /// truncate the zip — frame `i`'s owner could receive frame `j`'s
+    /// logits or nothing at all — so it is a release-enforced typed error:
+    /// every member is failed with `Error::Coordinator` and the mismatch is
+    /// reported to the caller (PR 8's `check_frame_nonces` discipline; a
+    /// `debug_assert` here vanished in release builds).
+    pub fn deliver(self, runs: Vec<CnnRun>) -> crate::Result<()> {
+        if runs.len() != self.jobs.len() {
+            let msg = format!(
+                "stacked cnn batch produced {} runs for {} member frames",
+                runs.len(),
+                self.jobs.len()
+            );
+            self.fail_with(|| crate::Error::Coordinator(msg.clone()));
+            return Err(crate::Error::Coordinator(msg));
+        }
         for (j, run) in self.jobs.into_iter().zip(runs) {
             let _ = j.reply.send(Ok(crate::coordinator::request::Reply {
                 outputs: run.logits,
@@ -174,6 +189,7 @@ impl CnnMicroBatch {
                 layers: run.layers,
             }));
         }
+        Ok(())
     }
 
     /// Fail every member with a request-level error (worker error path).
@@ -367,9 +383,31 @@ mod tests {
             CnnRun { logits: vec![10, 11], report: None, layers: Vec::new() },
             CnnRun { logits: vec![20, 21], report: None, layers: Vec::new() },
         ];
-        batch.deliver(runs);
+        batch.deliver(runs).unwrap();
         assert_eq!(r1.recv().unwrap().unwrap().outputs, vec![10, 11]);
         assert_eq!(r2.recv().unwrap().unwrap().outputs, vec![20, 21]);
+    }
+
+    #[test]
+    fn cnn_batch_short_delivery_is_a_typed_error_not_a_silent_drop() {
+        let model = tiny_model();
+        let (j1, r1) = cnn_job(&model, 1);
+        let (j2, r2) = cnn_job(&model, 2);
+        let batch = CnnMicroBatch { model, jobs: vec![j1, j2] };
+        // One run for two member frames: the zip would silently starve the
+        // second owner. Must be a typed Coordinator error in release too.
+        let runs = vec![CnnRun { logits: vec![10, 11], report: None, layers: Vec::new() }];
+        let err = batch.deliver(runs).unwrap_err();
+        match &err {
+            crate::Error::Coordinator(m) => {
+                assert!(m.contains("1 runs for 2 member frames"), "message: {m}");
+            }
+            other => panic!("expected Coordinator error, got {other:?}"),
+        }
+        // And every member observed the failure — nobody hangs, nobody
+        // gets another frame's logits.
+        assert!(r1.recv().unwrap().is_err());
+        assert!(r2.recv().unwrap().is_err());
     }
 
     #[test]

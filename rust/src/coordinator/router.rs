@@ -683,7 +683,7 @@ impl ShardSlot {
     fn shutdown_link(&self) {
         match &self.link {
             ShardLink::Local { coordinator, .. } => {
-                let taken = coordinator.lock().unwrap_or_else(|p| p.into_inner()).take();
+                let taken = crate::sync::lock_recovered(coordinator).take();
                 if let Some(c) = taken {
                     c.shutdown();
                 }

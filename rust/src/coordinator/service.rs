@@ -412,9 +412,7 @@ impl CoordinatorHandle {
     /// fail the shard over. The leader stays alive so every reply slot
     /// still resolves.
     pub fn retire_workers(&self) -> Result<()> {
-        self.tx
-            .send(Job::RetireWorkers)
-            .map_err(|_| Error::ShardDown("coordinator stopped".into()))
+        self.send_maintenance(Job::RetireWorkers)
     }
 
     /// Respawn workers until the pool holds `target` again (the leader
@@ -422,9 +420,33 @@ impl CoordinatorHandle {
     /// a shard can rebuild its pool in place). Fire-and-forget: follow with
     /// [`CoordinatorHandle::ping`] to confirm the revived pool serves.
     pub fn revive_workers(&self, target: usize) -> Result<()> {
-        self.tx
-            .send(Job::ReviveWorkers { target: target.max(1) })
-            .map_err(|_| Error::ShardDown("coordinator stopped".into()))
+        self.send_maintenance(Job::ReviveWorkers { target: target.max(1) })
+    }
+
+    /// Enqueue a maintenance job without ever blocking on the bounded
+    /// ingress queue — a bare `send` here is exactly the full-queue
+    /// deadlock class the typed-shedding rework removed from submission
+    /// (`no-blocking-ingress`). Maintenance is rarer and smaller than
+    /// request traffic, so instead of refusing immediately it retries a
+    /// bounded window (the shorter cousin of `stop_leader`'s drain loop)
+    /// and then refuses typed: busy-not-dead [`Error::Overloaded`] when the
+    /// queue never drained, [`Error::ShardDown`] when the leader is gone.
+    fn send_maintenance(&self, mut job: Job) -> Result<()> {
+        for _ in 0..500 {
+            match self.tx.try_send(job) {
+                Ok(()) => return Ok(()),
+                Err(TrySendError::Full(returned)) => {
+                    job = returned;
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                Err(TrySendError::Disconnected(_)) => {
+                    return Err(Error::ShardDown("coordinator stopped".into()))
+                }
+            }
+        }
+        Err(Error::Overloaded(
+            "ingress queue full; maintenance job refused after bounded retry".into(),
+        ))
     }
 
     /// Configured worker-pool size (the default revival target).

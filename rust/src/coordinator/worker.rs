@@ -195,6 +195,14 @@ pub fn run_worker(
                     .map_err(|e| crate::Error::Coordinator(e.to_string()));
                 stats.record_service(started.elapsed().as_secs_f64());
                 match res {
+                    Ok(runs) if runs.len() != batch.jobs.len() => {
+                        // A short/long run set means the engine and batcher
+                        // disagree about membership — deliver() fails every
+                        // member with the typed mismatch error; count them
+                        // failed, not completed.
+                        stats.failed.fetch_add(frames, Ordering::Relaxed);
+                        let _ = batch.deliver(runs);
+                    }
                     Ok(runs) => {
                         stats.cnn_batches.fetch_add(1, Ordering::Relaxed);
                         stats.cnn_frames.fetch_add(frames, Ordering::Relaxed);
@@ -211,7 +219,7 @@ pub fn run_worker(
                                 stats.record_report(r);
                             }
                         }
-                        batch.deliver(runs);
+                        let _ = batch.deliver(runs);
                     }
                     Err(e) => {
                         stats.failed.fetch_add(frames, Ordering::Relaxed);

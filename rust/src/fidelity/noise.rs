@@ -124,7 +124,17 @@ impl AnalogChannel {
     /// attribution, and distinct traffic decorrelates. To decorrelate
     /// duplicates too, key the row with a nonzero per-request nonce via
     /// [`AnalogChannel::transduce_row_keyed`].)
-    pub fn transduce_row(&self, hi: &[i32], mid: &[i32], lo: &[i32], k: usize) -> Vec<f64> {
+    ///
+    /// Errors with [`Error::Shape`](crate::Error::Shape) when the three
+    /// lane planes disagree in length — a mis-sliced row would otherwise
+    /// key noise off truncated content and serve wrong-noise values.
+    pub fn transduce_row(
+        &self,
+        hi: &[i32],
+        mid: &[i32],
+        lo: &[i32],
+        k: usize,
+    ) -> crate::Result<Vec<f64>> {
         self.transduce_row_keyed(hi, mid, lo, k, 0)
     }
 
@@ -142,8 +152,19 @@ impl AnalogChannel {
         lo: &[i32],
         k: usize,
         nonce: u64,
-    ) -> Vec<f64> {
-        debug_assert!(hi.len() == mid.len() && mid.len() == lo.len());
+    ) -> crate::Result<Vec<f64>> {
+        // Release-enforced: the sub-stream key hashes all three planes, so
+        // disagreeing lengths would serve deterministic-but-wrong noise. A
+        // debug_assert here would vanish exactly where it matters (release
+        // serving) — the bug class PR 8's check_frame_nonces fix paid for.
+        if hi.len() != mid.len() || mid.len() != lo.len() {
+            return Err(crate::Error::Shape(format!(
+                "lane planes of one output row must agree: hi={}, mid={}, lo={}",
+                hi.len(),
+                mid.len(),
+                lo.len()
+            )));
+        }
         // FNV-1a over the row signature; collisions merely correlate two
         // rows' noise, which the Monte-Carlo statistics shrug off.
         const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
@@ -162,9 +183,9 @@ impl AnalogChannel {
             h = fold(h, nonce);
         }
         let mut sub = AnalogChannel::new(self.params, self.seed ^ h);
-        (0..hi.len())
+        Ok((0..hi.len())
             .map(|i| sub.transduce_lanes(hi[i] as i64, mid[i] as i64, lo[i] as i64, k))
-            .collect()
+            .collect())
     }
 
     /// Noisy SPOGA dot product of INT8 vectors: three lanes accumulated in
@@ -257,19 +278,19 @@ mod tests {
 
         // Same content, same seed → same observations, regardless of how
         // much of the channel's sequential stream was consumed first.
-        let fresh = AnalogChannel::new(p, 42).transduce_row(&hi, &mid, &lo, 8);
+        let fresh = AnalogChannel::new(p, 42).transduce_row(&hi, &mid, &lo, 8).unwrap();
         let mut advanced = AnalogChannel::new(p, 42);
         for _ in 0..17 {
             let _ = advanced.transduce(1.0, 64.0); // burn sequential draws
         }
-        assert_eq!(advanced.transduce_row(&hi, &mid, &lo, 8), fresh);
+        assert_eq!(advanced.transduce_row(&hi, &mid, &lo, 8).unwrap(), fresh);
 
         // Different seeds or different content → different observations.
-        let other_seed = AnalogChannel::new(p, 43).transduce_row(&hi, &mid, &lo, 8);
+        let other_seed = AnalogChannel::new(p, 43).transduce_row(&hi, &mid, &lo, 8).unwrap();
         assert_ne!(other_seed, fresh);
         let mut hi2 = hi.clone();
         hi2[1] += 1;
-        let other_row = AnalogChannel::new(p, 42).transduce_row(&hi2, &mid, &lo, 8);
+        let other_row = AnalogChannel::new(p, 42).transduce_row(&hi2, &mid, &lo, 8).unwrap();
         assert_ne!(other_row, fresh);
     }
 
@@ -277,13 +298,30 @@ mod tests {
     fn transduce_row_recovers_exact_weighted_sums_at_infinite_snr() {
         let ch = AnalogChannel::new(NoiseParams { snr_db: 400.0, adc_bits: None }, 5);
         let (hi, mid, lo) = (vec![9i32, -4], vec![1i32, 6], vec![-2i32, 3]);
-        let obs = ch.transduce_row(&hi, &mid, &lo, 4);
+        let obs = ch.transduce_row(&hi, &mid, &lo, 4).unwrap();
         for i in 0..2 {
             let exact = 256.0 * hi[i] as f64 + 16.0 * mid[i] as f64 + lo[i] as f64;
             assert!((obs[i] - exact).abs() < 1e-6, "{} vs {exact}", obs[i]);
         }
         // Empty rows are a no-op.
-        assert!(ch.transduce_row(&[], &[], &[], 4).is_empty());
+        assert!(ch.transduce_row(&[], &[], &[], 4).unwrap().is_empty());
+    }
+
+    #[test]
+    fn mismatched_lane_planes_are_a_shape_error() {
+        let ch = AnalogChannel::new(NoiseParams { snr_db: 24.1, adc_bits: None }, 7);
+        let (hi, mid, lo) = (vec![1i32, 2], vec![3i32], vec![4i32, 5]);
+        for err in [
+            ch.transduce_row(&hi, &mid, &lo, 8).unwrap_err(),
+            ch.transduce_row_keyed(&hi, &mid, &lo, 8, 9).unwrap_err(),
+        ] {
+            match err {
+                crate::Error::Shape(m) => {
+                    assert!(m.contains("hi=2, mid=1, lo=2"), "message: {m}");
+                }
+                other => panic!("expected Shape error, got {other:?}"),
+            }
+        }
     }
 
     #[test]
@@ -294,21 +332,21 @@ mod tests {
 
         // nonce 0 ≡ the plain content-keyed path, bit for bit.
         assert_eq!(
-            ch.transduce_row_keyed(&hi, &mid, &lo, 8, 0),
-            ch.transduce_row(&hi, &mid, &lo, 8)
+            ch.transduce_row_keyed(&hi, &mid, &lo, 8, 0).unwrap(),
+            ch.transduce_row(&hi, &mid, &lo, 8).unwrap()
         );
 
         // Distinct nonces decorrelate the same row content; equal nonces
         // stay deterministic (same draws every time, any channel instance
         // with the same construction seed).
-        let n1 = ch.transduce_row_keyed(&hi, &mid, &lo, 8, 1);
-        let n2 = ch.transduce_row_keyed(&hi, &mid, &lo, 8, 2);
+        let n1 = ch.transduce_row_keyed(&hi, &mid, &lo, 8, 1).unwrap();
+        let n2 = ch.transduce_row_keyed(&hi, &mid, &lo, 8, 2).unwrap();
         assert_ne!(n1, n2, "different nonces must draw different noise");
-        assert_ne!(n1, ch.transduce_row(&hi, &mid, &lo, 8));
-        assert_eq!(n1, ch.transduce_row_keyed(&hi, &mid, &lo, 8, 1));
+        assert_ne!(n1, ch.transduce_row(&hi, &mid, &lo, 8).unwrap());
+        assert_eq!(n1, ch.transduce_row_keyed(&hi, &mid, &lo, 8, 1).unwrap());
         assert_eq!(
             n1,
-            AnalogChannel::new(p, 77).transduce_row_keyed(&hi, &mid, &lo, 8, 1),
+            AnalogChannel::new(p, 77).transduce_row_keyed(&hi, &mid, &lo, 8, 1).unwrap(),
             "keyed draws depend only on (seed, content, nonce)"
         );
     }

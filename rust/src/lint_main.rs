@@ -1,0 +1,42 @@
+//! `spoga-lint`: run the crate's static invariant rules over source trees.
+//!
+//! Usage: `spoga-lint [ROOT…]` — each ROOT is a directory walked
+//! recursively for `*.rs` files (default: this crate's own `src/`, the
+//! tree tier-1 guards). Exit status: 0 clean, 1 when violations (or
+//! unexplained `lint:allow`s) were found, 2 on I/O errors.
+//!
+//! The same rules run inside `cargo test` via
+//! `rust/tests/static_invariants.rs`; this binary exists for CI jobs and
+//! pre-commit hooks that want the report without building the test suite.
+
+use std::path::Path;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let roots: Vec<String> = if args.is_empty() {
+        vec![concat!(env!("CARGO_MANIFEST_DIR"), "/src").to_string()]
+    } else {
+        args
+    };
+    let mut clean = true;
+    for root in &roots {
+        match spoga::analysis::lint_dir(Path::new(root)) {
+            Ok(report) => {
+                print!("{}", report.render());
+                if !report.is_clean() {
+                    clean = false;
+                }
+            }
+            Err(e) => {
+                eprintln!("spoga-lint: {root}: {e}");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    if clean {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::from(1)
+    }
+}

@@ -42,6 +42,7 @@ use crate::error::RemoteErrorKind;
 use crate::metrics::ShardTelemetry;
 use crate::net::wire::{self, classify_io, remote_err, Frame, Opcode};
 use crate::net::{configure_stream, sleep_sliced, NetConfig, PollRead};
+use crate::sync::lock_recovered;
 use crate::{Error, Result};
 
 /// One in-flight request awaiting its reply frame.
@@ -61,6 +62,17 @@ struct Conn {
     reader: Option<JoinHandle<()>>,
 }
 
+/// Lock policy (see [`crate::sync`]): the fallible serving paths that
+/// acquire `conn` (`establish`, `write_frame_or_fail`) map a poisoned lock
+/// to a typed `Error::Remote { kind: PeerGone }` via [`Self::conn_poisoned`]
+/// — connection state touched by a panicking thread is unknowable, and
+/// `PeerGone` routes the shard through the same teardown/revival machinery
+/// as a dead peer. Every other guarded structure (`pending`,
+/// `pending_stats`, `retired_readers`, the heartbeat handle) is a plain
+/// collection that is valid in every state and is touched by must-complete
+/// paths (dispatch, expiry, teardown), so those recover the guard with
+/// [`lock_recovered`] — a panicking reader thread can never cascade-panic
+/// the client.
 struct RemoteInner {
     addr: SocketAddr,
     label: String,
@@ -248,7 +260,7 @@ impl RemoteShard {
             Ok(Ok(_)) => Ok(()),
             Ok(Err(e)) => Err(e),
             Err(RecvTimeoutError::Timeout) => {
-                self.inner.pending.lock().unwrap().remove(&id);
+                lock_recovered(&self.inner.pending).remove(&id);
                 Err(remote_err(
                     RemoteErrorKind::Timeout,
                     format!("{}: ping got no pong within {timeout:?}", self.inner.label),
@@ -266,13 +278,13 @@ impl RemoteShard {
     pub fn fetch_stats(&self, timeout: Duration) -> Result<ShardTelemetry> {
         let (tx, rx) = sync_channel(1);
         let id = self.inner.next_id.fetch_add(1, Relaxed);
-        self.inner.pending_stats.lock().unwrap().insert(id, tx);
+        lock_recovered(&self.inner.pending_stats).insert(id, tx);
         if let Err(e) = self.inner.write_frame_or_fail(Frame::control(Opcode::Stats, id), false) {
-            self.inner.pending_stats.lock().unwrap().remove(&id);
+            lock_recovered(&self.inner.pending_stats).remove(&id);
             return Err(e);
         }
         rx.recv_timeout(timeout).map_err(|_| {
-            self.inner.pending_stats.lock().unwrap().remove(&id);
+            lock_recovered(&self.inner.pending_stats).remove(&id);
             remote_err(
                 RemoteErrorKind::Timeout,
                 format!("{}: no stats reply within {timeout:?}", self.inner.label),
@@ -300,11 +312,11 @@ impl RemoteShard {
     pub fn disconnect(&self) {
         self.inner.stop.store(true, Relaxed);
         self.inner.teardown(None, RemoteErrorKind::PeerGone, "client disconnecting");
-        let hb = self.heartbeat.lock().unwrap().take();
+        let hb = lock_recovered(&self.heartbeat).take();
         if let Some(h) = hb {
             let _ = h.join();
         }
-        let retired: Vec<_> = self.inner.retired_readers.lock().unwrap().drain(..).collect();
+        let retired: Vec<_> = lock_recovered(&self.inner.retired_readers).drain(..).collect();
         for h in retired {
             let _ = h.join();
         }
@@ -318,6 +330,15 @@ impl Drop for RemoteShard {
 }
 
 impl RemoteInner {
+    /// Typed error for a poisoned `conn` lock on a fallible serving path
+    /// (see the struct-level lock policy).
+    fn conn_poisoned(&self) -> Error {
+        remote_err(
+            RemoteErrorKind::PeerGone,
+            format!("{}: connection state poisoned by a panicked client thread", self.label),
+        )
+    }
+
     /// Open a configured stream to the peer.
     fn dial(&self) -> Result<TcpStream> {
         let s = TcpStream::connect_timeout(&self.addr, self.cfg.connect_timeout)
@@ -339,11 +360,11 @@ impl RemoteInner {
             .name(format!("remote-reader-{}", self.label))
             .spawn(move || me.reader_loop(reader_stream, generation))
             .map_err(|e| Error::Runtime(format!("spawn reader: {e}")))?;
-        let mut conn = self.conn.lock().unwrap();
+        let mut conn = self.conn.lock().map_err(|_| self.conn_poisoned())?;
         if let Some(old) = conn.take() {
             let _ = old.writer.shutdown(std::net::Shutdown::Both);
             if let Some(h) = old.reader {
-                self.retired_readers.lock().unwrap().push(h);
+                lock_recovered(&self.retired_readers).push(h);
             }
         }
         *conn = Some(Conn { writer: stream, generation, reader: Some(reader) });
@@ -382,7 +403,7 @@ impl RemoteInner {
     fn register(&self, reply: ResponseTx, deadline: Duration, counts: bool) -> u64 {
         let id = self.next_id.fetch_add(1, Relaxed);
         let now = Instant::now();
-        self.pending.lock().unwrap().insert(
+        lock_recovered(&self.pending).insert(
             id,
             Pending { reply, deadline: now + deadline, enqueued: now, counts },
         );
@@ -395,7 +416,15 @@ impl RemoteInner {
     /// bumped `stats.requests` for this frame (so the mirror stays exact —
     /// same discipline as the local `send_job`).
     fn write_frame_or_fail(&self, frame: Frame, counted: bool) -> Result<()> {
-        let mut conn = self.conn.lock().unwrap();
+        let mut conn = match self.conn.lock() {
+            Ok(guard) => guard,
+            Err(_) => {
+                if counted {
+                    self.stats.requests.fetch_sub(1, Relaxed);
+                }
+                return Err(self.conn_poisoned());
+            }
+        };
         let state = match conn.as_mut() {
             Some(s) => s,
             None => {
@@ -434,7 +463,7 @@ impl RemoteInner {
         match self.write_frame_or_fail(Frame { opcode, request_id: id, payload }, true) {
             Ok(()) => Ok(rx),
             Err(e) => {
-                self.pending.lock().unwrap().remove(&id);
+                lock_recovered(&self.pending).remove(&id);
                 Err(e)
             }
         }
@@ -446,14 +475,17 @@ impl RemoteInner {
     /// frame resets the connection without retiring the shard.
     fn teardown(&self, generation: Option<u64>, kind: RemoteErrorKind, why: &str) {
         {
-            let mut conn = self.conn.lock().unwrap();
+            // Teardown must complete even after a panic elsewhere — recover
+            // rather than error: this *is* the cleanup the typed-error
+            // callers rely on.
+            let mut conn = lock_recovered(&self.conn);
             let matches_gen =
                 conn.as_ref().map(|c| generation.map_or(true, |g| g == c.generation));
             if matches_gen == Some(true) {
                 if let Some(old) = conn.take() {
                     let _ = old.writer.shutdown(std::net::Shutdown::Both);
                     if let Some(h) = old.reader {
-                        self.retired_readers.lock().unwrap().push(h);
+                        lock_recovered(&self.retired_readers).push(h);
                     }
                 }
             }
@@ -462,7 +494,7 @@ impl RemoteInner {
             self.stats.live_workers.store(0, Relaxed);
         }
         let drained: Vec<Pending> =
-            self.pending.lock().unwrap().drain().map(|(_, p)| p).collect();
+            lock_recovered(&self.pending).drain().map(|(_, p)| p).collect();
         for p in drained {
             if p.counts {
                 self.stats.failed.fetch_add(1, Relaxed);
@@ -472,7 +504,7 @@ impl RemoteInner {
                 format!("{}: {why} with request in flight", self.label),
             )));
         }
-        self.pending_stats.lock().unwrap().clear();
+        lock_recovered(&self.pending_stats).clear();
     }
 
     /// Expire overdue pending entries with `Remote { Timeout }` — the
@@ -481,7 +513,7 @@ impl RemoteInner {
     /// hanging callers, without retiring the shard.
     fn expire_overdue(&self) {
         let now = Instant::now();
-        let mut pending = self.pending.lock().unwrap();
+        let mut pending = lock_recovered(&self.pending);
         let overdue: Vec<u64> = pending
             .iter()
             .filter(|(_, p)| now >= p.deadline)
@@ -502,9 +534,9 @@ impl RemoteInner {
 
     /// Whether `generation` is still the installed connection.
     fn is_current(&self, generation: u64) -> bool {
-        self.conn
-            .lock()
-            .unwrap()
+        // Reader-side liveness check: recover so readers of a poisoned
+        // client still observe supersession and exit their loops.
+        lock_recovered(&self.conn)
             .as_ref()
             .map(|c| c.generation == generation)
             .unwrap_or(false)
@@ -561,7 +593,7 @@ impl RemoteInner {
     fn dispatch(&self, frame: Frame) {
         match frame.opcode {
             Opcode::Reply => {
-                let entry = self.pending.lock().unwrap().remove(&frame.request_id);
+                let entry = lock_recovered(&self.pending).remove(&frame.request_id);
                 let Some(p) = entry else { return }; // expired or stale
                 let outcome = match wire::decode_reply(&frame.payload) {
                     Ok(o) => o,
@@ -582,13 +614,12 @@ impl RemoteInner {
             }
             Opcode::Pong => {
                 self.missed_pongs.store(0, Relaxed);
-                if let Some(p) = self.pending.lock().unwrap().remove(&frame.request_id) {
+                if let Some(p) = lock_recovered(&self.pending).remove(&frame.request_id) {
                     let _ = p.reply.send(Ok(Reply::bare(Vec::new())));
                 }
             }
             Opcode::Stats => {
-                if let Some(tx) = self.pending_stats.lock().unwrap().remove(&frame.request_id)
-                {
+                if let Some(tx) = lock_recovered(&self.pending_stats).remove(&frame.request_id) {
                     if let Ok(t) = wire::decode_stats(&frame.payload) {
                         let _ = tx.send(t);
                     }
@@ -611,7 +642,7 @@ impl RemoteInner {
             if !sleep_sliced(self.cfg.heartbeat_interval, || self.stop.load(Relaxed)) {
                 return;
             }
-            if self.conn.lock().unwrap().is_none() {
+            if lock_recovered(&self.conn).is_none() {
                 continue; // down; revival is the janitor's job
             }
             let (reply, rx) = response_slot();
@@ -622,7 +653,7 @@ impl RemoteInner {
             if ponged {
                 continue;
             }
-            self.pending.lock().unwrap().remove(&id);
+            lock_recovered(&self.pending).remove(&id);
             let missed = self.missed_pongs.fetch_add(1, Relaxed) + 1;
             if missed >= self.cfg.missed_pong_threshold {
                 self.teardown(

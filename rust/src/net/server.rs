@@ -27,6 +27,7 @@ use std::time::Duration;
 use crate::coordinator::{CoordinatorHandle, FleetHandle, Qos, Reply, Response, RetryingSlot};
 use crate::dnn::models::CnnModel;
 use crate::metrics::ShardTelemetry;
+use crate::sync::lock_recovered;
 use crate::{Error, Result};
 
 use super::wire::{self, Frame, Opcode};
@@ -331,7 +332,7 @@ fn dispatch(
 /// Look up (or parse-and-cache) the model for a trace text. The cache bounds
 /// `parse_trace`'s per-distinct-model name leak to once per model.
 fn cached_model(inner: &ServerInner, trace: &str) -> Result<CnnModel> {
-    let mut cache = inner.models.lock().unwrap_or_else(|p| p.into_inner());
+    let mut cache = lock_recovered(&inner.models);
     if let Some(m) = cache.get(trace) {
         return Ok(m.clone());
     }
@@ -375,6 +376,6 @@ fn write_reply(writer: &Arc<Mutex<TcpStream>>, id: u64, outcome: &Result<Reply>)
 /// Write one frame through the shared writer. Errors are swallowed: a dead
 /// connection is detected (and torn down) by the reader side.
 fn write_back(writer: &Arc<Mutex<TcpStream>>, frame: &Frame) {
-    let mut w = writer.lock().unwrap_or_else(|p| p.into_inner());
+    let mut w = lock_recovered(writer);
     let _ = wire::write_frame(&mut *w, frame);
 }

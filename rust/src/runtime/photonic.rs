@@ -279,7 +279,7 @@ impl PhotonicBackend {
                 &lanes.lo[span],
                 k,
                 nonce.for_row(r),
-            );
+            )?;
             for (j, o) in observed.into_iter().enumerate() {
                 let v = o.round() as i32;
                 if v != exact[r * cols + j] {
@@ -411,7 +411,7 @@ impl ExecBackend for PhotonicBackend {
                 &lanes.lo[span],
                 k,
                 nonce.for_row(r),
-            );
+            )?;
             for (j, o) in observed.into_iter().enumerate() {
                 let v = o.round() as i32;
                 if v != exact[r * cols + j] {

@@ -1,0 +1,56 @@
+//! Poison-aware lock acquisition shared by the serving stack.
+//!
+//! A poisoned `Mutex` means some thread panicked while holding the guard.
+//! The structures this crate guards with plain mutexes (pending-request
+//! maps, connection slots, join-handle lists, model caches) are valid in
+//! every observable state — the guarded operations are single insert /
+//! remove / take calls, not multi-step invariant edits — so a panic
+//! elsewhere never leaves them corrupt, and *cleanup paths must keep
+//! working* after such a panic: a teardown that itself panics cascades one
+//! thread's bug into a process-wide outage (the bug class PR 6's poisoned
+//! slot-table fix paid for; see the `no-poison-panic` rule in
+//! [`crate::analysis`]).
+//!
+//! Discipline, in order of preference:
+//!
+//! * serving entry points that can fail map poison to a **typed error** at
+//!   the call site (`.lock().map_err(|_| …)?` — e.g. the remote client's
+//!   connection lock surfaces `Error::Remote { kind: PeerGone }`);
+//! * infallible internal paths (teardown, dispatch, expiry, telemetry)
+//!   recover the guard with [`lock_recovered`] so cleanup always completes.
+//!
+//! Bare `.lock().unwrap()` outside `#[cfg(test)]` fails tier-1 via
+//! `rust/tests/static_invariants.rs`.
+
+use std::sync::{Mutex, MutexGuard};
+
+/// Lock `m`, recovering the guard if the mutex is poisoned.
+///
+/// Correct only under the module-doc contract: the guarded structure is
+/// valid in every observable state, and the caller is a path that must
+/// complete (cleanup, dispatch bookkeeping) rather than a fallible serving
+/// entry point — those should map poison to a typed error instead.
+pub(crate) fn lock_recovered<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn recovers_a_poisoned_guard_and_keeps_the_value() {
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _guard = m2.lock().unwrap();
+            panic!("poison the lock");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        assert_eq!(*lock_recovered(&m), 7);
+        *lock_recovered(&m) += 1;
+        assert_eq!(*lock_recovered(&m), 8);
+    }
+}

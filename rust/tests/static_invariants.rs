@@ -1,0 +1,383 @@
+//! Tier-1 static invariants: run `spoga-lint` over the crate's own sources
+//! and pin the linter's behavior with per-rule fixtures.
+//!
+//! The whole-tree test is the ratchet: a regression that reintroduces a
+//! poison panic, an unjustified `unsafe`, a release-silent guard, a wire
+//! codec asymmetry, or a blocking ingress send fails `cargo test -q`
+//! before it reaches review. The fixture tests are the linter's own
+//! contract: one firing and one non-firing case per rule, plus the
+//! `lint:allow` escape-hatch semantics, so rule changes are visible diffs
+//! here rather than silent behavior shifts.
+
+use spoga::analysis::{lint_source, rules};
+use std::path::Path;
+
+// ---------------------------------------------------------------------------
+// The ratchet: the entire crate lints clean, with zero standing exceptions.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn entire_crate_lints_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let report = spoga::analysis::lint_dir(&root).expect("walk rust/src");
+    // Guard against a silently-empty walk (wrong root, renamed tree): the
+    // crate has well over 40 source files and only ever grows.
+    assert!(
+        report.files >= 40,
+        "suspiciously few files scanned ({}): wrong root?",
+        report.files
+    );
+    assert!(report.is_clean(), "static invariant violations:\n{}", report.render());
+    // The tree currently carries zero lint:allow exceptions. If one becomes
+    // genuinely necessary, justify it at the site and bump this pin — the
+    // count is the visible ledger of intentional deviations.
+    assert_eq!(
+        report.suppressions.len(),
+        0,
+        "unexpected lint:allow exceptions:\n{}",
+        report.render()
+    );
+}
+
+// ---------------------------------------------------------------------------
+// R1 no-poison-panic
+// ---------------------------------------------------------------------------
+
+fn rules_of(report: &spoga::analysis::LintReport) -> Vec<&str> {
+    report.findings.iter().map(|f| f.rule).collect()
+}
+
+#[test]
+fn poison_panic_fires_on_lock_unwrap() {
+    let src = "fn f(m: &std::sync::Mutex<u8>) -> u8 {\n    *m.lock().unwrap()\n}\n";
+    let r = lint_source("fixture.rs", src);
+    assert_eq!(rules_of(&r), vec![rules::NO_POISON_PANIC]);
+    assert_eq!(r.findings[0].line, 2);
+}
+
+#[test]
+fn poison_panic_sees_through_formatting_and_counts_every_chain() {
+    // A multi-line builder chain and a RwLock read().expect() — two
+    // violations, neither hidden by line breaks.
+    let src = "fn f(m: &std::sync::Mutex<u8>, r: &std::sync::RwLock<u8>) -> u8 {\n\
+               \x20   let a = *m\n\
+               \x20       .lock()\n\
+               \x20       .unwrap();\n\
+               \x20   a + *r.read().expect(\"poisoned\")\n\
+               }\n";
+    let r = lint_source("fixture.rs", src);
+    assert_eq!(rules_of(&r), vec![rules::NO_POISON_PANIC, rules::NO_POISON_PANIC]);
+}
+
+#[test]
+fn poison_panic_ignores_recovery_idioms_and_test_code() {
+    let src = "\
+fn recovered(m: &std::sync::Mutex<u8>) -> u8 {
+    *m.lock().unwrap_or_else(|p| p.into_inner())
+}
+fn typed(m: &std::sync::Mutex<u8>) -> Result<u8, String> {
+    Ok(*m.lock().map_err(|_| \"poisoned\".to_string())?)
+}
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() {
+        let m = std::sync::Mutex::new(1u8);
+        assert_eq!(*m.lock().unwrap(), 1);
+    }
+}
+";
+    let r = lint_source("fixture.rs", src);
+    assert!(r.is_clean(), "{}", r.render());
+}
+
+// ---------------------------------------------------------------------------
+// R2 safety-comment
+// ---------------------------------------------------------------------------
+
+#[test]
+fn safety_comment_fires_on_bare_unsafe() {
+    let src = "fn f(p: *const u8) -> u8 {\n    unsafe { *p }\n}\n";
+    let r = lint_source("fixture.rs", src);
+    assert_eq!(rules_of(&r), vec![rules::SAFETY_COMMENT]);
+    assert_eq!(r.findings[0].line, 2);
+}
+
+#[test]
+fn safety_comment_accepts_adjacent_and_above_attribute_comments() {
+    // Directly above the block, and above an attribute prologue on an
+    // `unsafe fn` declaration — both placements discharge the rule.
+    let src = "\
+fn f(p: *const u8) -> u8 {
+    // SAFETY: caller passed a pointer derived from a live &u8.
+    unsafe { *p }
+}
+// SAFETY: the attribute changes codegen only; the body is safe slice code.
+#[target_feature(enable = \"avx2\")]
+#[allow(dead_code)]
+unsafe fn g(x: &[u8]) -> u8 {
+    x[0]
+}
+";
+    let r = lint_source("fixture.rs", src);
+    assert!(r.is_clean(), "{}", r.render());
+}
+
+#[test]
+fn safety_comment_rejects_doc_safety_sections_as_substitutes() {
+    // A doc `# Safety` section states the *caller's* obligation — it does
+    // not justify the site itself, so the rule still fires.
+    let src = "\
+/// # Safety
+/// `p` must be valid for reads.
+pub unsafe fn f(p: *const u8) -> u8 {
+    *p
+}
+";
+    let r = lint_source("fixture.rs", src);
+    assert_eq!(rules_of(&r), vec![rules::SAFETY_COMMENT]);
+}
+
+// ---------------------------------------------------------------------------
+// R3 no-release-silent-guards
+// ---------------------------------------------------------------------------
+
+const R3_FIRING: &str = "\
+struct B { runs: Vec<u8>, jobs: Vec<u8> }
+impl B {
+    fn deliver(&self) {
+        debug_assert_eq!(self.runs.len(), self.jobs.len());
+    }
+}
+";
+
+#[test]
+fn release_silent_guard_fires_on_serving_state_predicates() {
+    let r = lint_source("coordinator/fixture.rs", R3_FIRING);
+    assert_eq!(rules_of(&r), vec![rules::NO_RELEASE_SILENT_GUARDS]);
+    assert_eq!(r.findings[0].line, 4);
+}
+
+#[test]
+fn release_silent_guard_ignores_non_serving_predicates_and_testing_tree() {
+    let benign = "fn f(capacity: usize) {\n    debug_assert!(capacity.is_power_of_two());\n}\n";
+    let r = lint_source("coordinator/fixture.rs", benign);
+    assert!(r.is_clean(), "{}", r.render());
+    // The same serving-state predicate is fine under testing/ — harness
+    // internals are not the serving path.
+    let r = lint_source("testing/fixture.rs", R3_FIRING);
+    assert!(r.is_clean(), "{}", r.render());
+}
+
+// ---------------------------------------------------------------------------
+// R4 wire-codec-symmetry
+// ---------------------------------------------------------------------------
+
+/// A miniature wire module that satisfies every R4 clause: all variants in
+/// `from_u8`, paired codecs, a codec pair for the payload (`Submit*`)
+/// opcode, control opcodes bare, and error tags that round trip.
+const R4_CLEAN: &str = "\
+pub enum Opcode {
+    SubmitGemm = 1,
+    Reply = 2,
+    Ping = 3,
+}
+impl Opcode {
+    pub fn from_u8(v: u8) -> Option<Opcode> {
+        match v {
+            1 => Some(Opcode::SubmitGemm),
+            2 => Some(Opcode::Reply),
+            3 => Some(Opcode::Ping),
+            _ => None,
+        }
+    }
+}
+pub enum E { A(String), B(String) }
+pub fn encode_gemm(a: &[i32]) -> Vec<u8> { vec![a.len() as u8] }
+pub fn decode_gemm(b: &[u8]) -> usize { b.len() }
+pub fn encode_reply(n: usize) -> Vec<u8> { vec![n as u8] }
+pub fn decode_reply(b: &[u8]) -> usize { b.len() }
+pub fn encode_error(e: &E) -> (u8, String) {
+    match e {
+        E::A(m) => (0, m.clone()),
+        E::B(m) => (1, m.clone()),
+    }
+}
+pub fn decode_error(tag: u8, m: String) -> E {
+    match tag {
+        0 => E::A(m),
+        1 => E::B(m),
+        _ => E::A(m),
+    }
+}
+";
+
+#[test]
+fn wire_codec_symmetry_accepts_a_symmetric_module() {
+    let r = lint_source("net/fixture.rs", R4_CLEAN);
+    assert!(r.is_clean(), "{}", r.render());
+}
+
+#[test]
+fn wire_codec_symmetry_catches_a_variant_missing_from_from_u8() {
+    let src = R4_CLEAN.replace("            2 => Some(Opcode::Reply),\n", "");
+    let r = lint_source("net/fixture.rs", &src);
+    assert!(rules_of(&r).contains(&rules::WIRE_CODEC_SYMMETRY), "{}", r.render());
+    assert!(
+        r.findings.iter().any(|f| f.message.contains("Opcode::Reply")),
+        "{}",
+        r.render()
+    );
+}
+
+#[test]
+fn wire_codec_symmetry_catches_an_unpaired_codec() {
+    let src = R4_CLEAN.replace(
+        "pub fn decode_gemm(b: &[u8]) -> usize { b.len() }\n",
+        "",
+    );
+    let r = lint_source("net/fixture.rs", &src);
+    // Two findings: encode_gemm unpaired, and the SubmitGemm payload
+    // opcode left without a full codec pair.
+    assert!(
+        r.findings.iter().any(|f| f.message.contains("no matching `decode_gemm`")),
+        "{}",
+        r.render()
+    );
+    assert!(
+        r.findings.iter().any(|f| f.message.contains("payload opcode `SubmitGemm`")),
+        "{}",
+        r.render()
+    );
+}
+
+#[test]
+fn wire_codec_symmetry_catches_an_unmatched_error_tag() {
+    let src = R4_CLEAN.replace("E::B(m) => (1, m.clone()),", "E::B(m) => (2, m.clone()),");
+    let r = lint_source("net/fixture.rs", &src);
+    assert!(
+        r.findings.iter().any(|f| f.message.contains("error tag 2")),
+        "{}",
+        r.render()
+    );
+}
+
+// ---------------------------------------------------------------------------
+// R5 no-blocking-ingress
+// ---------------------------------------------------------------------------
+
+#[test]
+fn blocking_ingress_fires_on_bare_send() {
+    let src = "\
+fn retire(tx: &std::sync::mpsc::SyncSender<Job>) {
+    let _ = tx.send(Job::Retire);
+}
+enum Job { Retire }
+";
+    let r = lint_source("coordinator/fixture.rs", src);
+    assert_eq!(rules_of(&r), vec![rules::NO_BLOCKING_INGRESS]);
+    assert_eq!(r.findings[0].line, 2);
+}
+
+#[test]
+fn blocking_ingress_permits_try_send_and_test_code() {
+    let src = "\
+fn retire(tx: &std::sync::mpsc::SyncSender<Job>) {
+    let _ = tx.try_send(Job::Retire);
+}
+enum Job { Retire }
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() {
+        let (tx, _rx) = std::sync::mpsc::sync_channel(1);
+        tx.send(super::Job::Retire).unwrap();
+    }
+}
+";
+    let r = lint_source("coordinator/fixture.rs", src);
+    assert!(r.is_clean(), "{}", r.render());
+}
+
+// ---------------------------------------------------------------------------
+// lint:allow semantics
+// ---------------------------------------------------------------------------
+
+#[test]
+fn justified_allow_suppresses_and_is_counted() {
+    let src = "\
+fn f(m: &std::sync::Mutex<u8>) -> u8 {
+    // lint:allow(no-poison-panic) startup-only: no other thread exists yet
+    *m.lock().unwrap()
+}
+";
+    let r = lint_source("fixture.rs", src);
+    assert!(r.is_clean(), "{}", r.render());
+    assert_eq!(r.suppressions.len(), 1);
+    assert_eq!(r.suppressions[0].rule, rules::NO_POISON_PANIC);
+    assert!(r.suppressions[0].justification.contains("startup-only"));
+    // The exception ledger is printed, not just counted.
+    assert!(r.render().contains("allowed [no-poison-panic]"));
+}
+
+#[test]
+fn unjustified_allow_is_flagged_and_does_not_suppress() {
+    let src = "\
+fn f(m: &std::sync::Mutex<u8>) -> u8 {
+    // lint:allow(no-poison-panic)
+    *m.lock().unwrap()
+}
+";
+    let r = lint_source("fixture.rs", src);
+    let mut got = rules_of(&r);
+    got.sort_unstable();
+    assert_eq!(got, vec![rules::ALLOW_JUSTIFICATION, rules::NO_POISON_PANIC]);
+    assert!(r.suppressions.is_empty());
+}
+
+#[test]
+fn stale_allow_is_itself_a_violation() {
+    let src = "\
+fn f() -> u8 {
+    // lint:allow(no-poison-panic) nothing here violates the rule
+    7
+}
+";
+    let r = lint_source("fixture.rs", src);
+    assert_eq!(rules_of(&r), vec![rules::ALLOW_JUSTIFICATION]);
+    assert!(r.findings[0].message.contains("suppresses nothing"));
+}
+
+// ---------------------------------------------------------------------------
+// The standalone binary: nonzero exit on violations, zero when clean.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn lint_binary_exit_codes_track_violations() {
+    let dir = std::env::temp_dir().join(format!("spoga-lint-fixture-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("create fixture dir");
+    let file = dir.join("seeded.rs");
+
+    std::fs::write(
+        &file,
+        "fn f(m: &std::sync::Mutex<u8>) -> u8 {\n    *m.lock().unwrap()\n}\n",
+    )
+    .expect("write seeded violation");
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_spoga-lint"))
+        .arg(&dir)
+        .output()
+        .expect("run spoga-lint");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert_eq!(out.status.code(), Some(1), "stdout:\n{stdout}");
+    assert!(stdout.contains(rules::NO_POISON_PANIC), "stdout:\n{stdout}");
+    assert!(stdout.contains("1 violation(s)"), "stdout:\n{stdout}");
+
+    std::fs::write(&file, "fn f() -> u8 {\n    7\n}\n").expect("rewrite clean");
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_spoga-lint"))
+        .arg(&dir)
+        .output()
+        .expect("run spoga-lint");
+    assert!(out.status.success(), "expected clean exit, got {:?}", out.status.code());
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
